@@ -1,0 +1,139 @@
+//! End-to-end validation driver (DESIGN.md §6 "E2E"): the full paper
+//! pipeline on a real (synthetic-corpus) workload, proving all three
+//! layers compose:
+//!
+//!   1. **pretrain** the transformer on the structured corpus (full-
+//!      weight AdamW through the pretrain artifact), logging the loss
+//!      curve;
+//!   2. **instruction-tune** with ETHER+ (paper §5.2.2 protocol: cosine
+//!      schedule, loss on responses only);
+//!   3. **evaluate** 0-shot on the MMLU/ARC/TruthfulQA proxies before vs
+//!      after;
+//!   4. **serve** the tuned adapter through the coordinator.
+//!
+//! Results are recorded in EXPERIMENTS.md §E2E. Use --cfg small for the
+//! full-size run (default tiny keeps CI fast).
+
+use std::time::Instant;
+
+use anyhow::Result;
+use ether::coordinator::{server::PjrtBackend, AdapterRegistry, BatcherCfg, Request, Server};
+use ether::data::corpus::Corpus;
+use ether::data::instruct::InstructData;
+use ether::eval::harness::mc_eval;
+use ether::runtime::engine::PjrtEngine;
+use ether::train::{LmTrainer, Pretrainer, Schedule};
+use ether::util::cli::Args;
+
+fn main() -> Result<()> {
+    ether::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1).collect())?;
+    let cfg = args.str_or("cfg", "tiny");
+    let pre_steps = args.usize_or("pretrain-steps", 600)? as u64;
+    let tune_steps = args.usize_or("tune-steps", 400)? as u64;
+    args.finish()?;
+
+    let engine = PjrtEngine::open_default()?;
+    let c = engine.manifest.config(&cfg)?.clone();
+    let corpus = Corpus::new(1234);
+
+    // ---- Phase 1: pretrain -------------------------------------------------
+    println!("== phase 1: pretraining {cfg} ({} params, {pre_steps} steps) ==", c.base_size);
+    let mut pre = Pretrainer::new(&engine, &cfg)?;
+    let sched = Schedule::Cosine { base: 3e-3, warmup: pre_steps / 10, total: pre_steps };
+    let t0 = Instant::now();
+    for i in 0..pre_steps {
+        let loss = pre.step(&corpus.lm_batch(c.batch, c.seq, i), sched.lr(i))?;
+        if i % (pre_steps / 12).max(1) == 0 || i + 1 == pre_steps {
+            println!("  step {i:>5}  loss {loss:.4}");
+        }
+    }
+    let steps_per_s = pre_steps as f64 / t0.elapsed().as_secs_f64();
+    println!("  pretrain: {:.2} steps/s, loss {:.3} → {:.3}",
+        steps_per_s, pre.losses[0], pre.losses.last().unwrap());
+    assert!(
+        pre.losses.last().unwrap() + 0.5 < pre.losses[0],
+        "pretraining must substantially reduce the loss"
+    );
+
+    // ---- Phase 2: 0-shot baseline ------------------------------------------
+    let data = InstructData::new(Corpus::new(1234), 5);
+    let base_eval =
+        LmTrainer::eval_only(&engine, &cfg, "none", pre.base.clone(), vec![0.0])?;
+    let (mmlu0, _) = mc_eval(&base_eval, &data, &data.mmlu(48))?;
+    let (arc0, _) = mc_eval(&base_eval, &data, &data.arc(32))?;
+    let (tru1_0, tru2_0) = mc_eval(&base_eval, &data, &data.truthful())?;
+    println!("== phase 2: base 0-shot  MMLU {mmlu0:.1}  ARC {arc0:.1}  Tru-1 {tru1_0:.1}  Tru-2 {tru2_0:.1}");
+
+    // ---- Phase 3: instruction-tune with ETHER+ ------------------------------
+    println!("== phase 3: instruction tuning with etherplus_n4 ({tune_steps} steps) ==");
+    let mut tuner = LmTrainer::new(&engine, &cfg, "etherplus_n4", Some(pre.base.clone()))?;
+    println!(
+        "  adapter: {} params ({:.2}% of base)",
+        tuner.peft.len(),
+        100.0 * tuner.peft.len() as f64 / c.base_size as f64
+    );
+    let sched = Schedule::Cosine { base: 3e-2, warmup: tune_steps / 10, total: tune_steps };
+    let t1 = Instant::now();
+    for i in 0..tune_steps {
+        let loss = tuner.step(&data.train_batch(c.batch, c.seq, i), sched.lr(i))?;
+        if i % (tune_steps / 10).max(1) == 0 || i + 1 == tune_steps {
+            println!("  step {i:>5}  loss {loss:.4}");
+        }
+    }
+    println!("  tuning: {:.2} steps/s", tune_steps as f64 / t1.elapsed().as_secs_f64());
+
+    let (mmlu1, _) = mc_eval(&tuner, &data, &data.mmlu(48))?;
+    let (arc1, _) = mc_eval(&tuner, &data, &data.arc(32))?;
+    let (tru1_1, tru2_1) = mc_eval(&tuner, &data, &data.truthful())?;
+    println!("  tuned 0-shot  MMLU {mmlu1:.1}  ARC {arc1:.1}  Tru-1 {tru1_1:.1}  Tru-2 {tru2_1:.1}");
+    println!(
+        "  deltas: MMLU {:+.1}  ARC {:+.1}  Tru-1 {:+.1}  Tru-2 {:+.1}",
+        mmlu1 - mmlu0,
+        arc1 - arc0,
+        tru1_1 - tru1_0,
+        tru2_1 - tru2_0
+    );
+    assert!(mmlu1 > mmlu0, "instruction tuning must lift MMLU-proxy");
+
+    // ---- Phase 4: serve the adapter -----------------------------------------
+    println!("== phase 4: serving the tuned adapter ==");
+    let mut registry = AdapterRegistry::new();
+    registry.register("tuned", "etherplus_n4", &cfg, tuner.peft.clone());
+    let mut server = Server::new(
+        registry,
+        BatcherCfg { max_batch: c.batch, max_wait: std::time::Duration::from_millis(5) },
+    );
+    let mut backend = PjrtBackend::new(&engine, &cfg, 2);
+    let t2 = Instant::now();
+    let n_req = 24;
+    for i in 0..n_req {
+        let mut prompt = vec![ether::data::BOS];
+        let (inst, _) = data.sample(&mut ether::util::rng::Rng::new(9000 + i));
+        prompt.extend(ether::data::encode(&format!("{inst}=")));
+        server.batcher.push(Request {
+            id: i,
+            adapter: "tuned".into(),
+            prompt,
+            max_new: 10,
+            enqueued: Instant::now(),
+        });
+    }
+    let mut shown = 0;
+    server.pump(&mut backend, Instant::now() + std::time::Duration::from_secs(1), |r| {
+        if shown < 4 {
+            println!("  resp[{}] {:?} ({} ms)", r.id, ether::data::decode(&r.output), r.latency.as_millis());
+            shown += 1;
+        }
+    })?;
+    let dt = t2.elapsed().as_secs_f64();
+    println!(
+        "  served {} req in {dt:.2}s = {:.1} req/s (p50 {:.1} ms, mean batch {:.1})",
+        server.stats.served,
+        server.stats.served as f64 / dt,
+        server.stats.p50_ms(),
+        server.stats.mean_batch()
+    );
+    println!("e2e OK");
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! Learning-rate robustness demo (the paper's Figs. 4–6 in miniature):
+//! train ETHER+ and OFT on the controllable-generation proxy across four
+//! orders of magnitude of learning rate and watch who survives.
+
+use anyhow::Result;
+use ether::data::control::ControlData;
+use ether::runtime::engine::PjrtEngine;
+use ether::train::{LmTrainer, Schedule};
+use ether::util::cli::Args;
+
+fn main() -> Result<()> {
+    ether::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1).collect())?;
+    let steps = args.usize_or("steps", 120)? as u64;
+    args.finish()?;
+
+    let engine = PjrtEngine::open_default()?;
+    let cfg = "tiny";
+    let c = engine.manifest.config(cfg)?.clone();
+    let data = ControlData::new(77);
+    let eval = data.train_batch(c.batch, c.seq, 999_999);
+
+    println!("{:<14} {:>9} {:>12} {:>12}", "method", "lr", "final loss", "eval NLL");
+    for method in ["etherplus_n4", "oft_n4"] {
+        for lr in [1e-4f32, 1e-3, 1e-2, 1e-1] {
+            let mut tr = LmTrainer::new(&engine, cfg, method, None)?;
+            tr.run(steps, Schedule::Const(lr), |i| data.train_batch(c.batch, c.seq, i))?;
+            let train_loss = *tr.losses.last().unwrap_or(&f32::NAN);
+            let eval_nll = tr.eval_loss(&eval).unwrap_or(f32::NAN);
+            println!("{method:<14} {lr:>9.0e} {train_loss:>12.4} {eval_nll:>12.4}");
+        }
+    }
+    println!(
+        "\nExpected shape (paper Figs. 5-6): ETHER+ trains cleanly across the whole \
+         grid; OFT needs the narrow low-LR regime and degrades/diverges at high LR."
+    );
+    Ok(())
+}

@@ -1,0 +1,328 @@
+"""AOT compile path: lower every artifact to HLO text + write the manifest.
+
+Run once by ``make artifacts``:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Produces:
+    artifacts/<name>.hlo.txt     one per artifact function (HLO *text* —
+                                 jax ≥ 0.5 serialized protos use 64-bit
+                                 instruction ids that xla_extension 0.5.1
+                                 rejects; the text parser reassigns ids)
+    artifacts/init/<name>.f32    raw little-endian f32 initial parameters
+    artifacts/manifest.json      configs, method specs, parameter layouts,
+                                 typed I/O signatures of every artifact
+
+Python never runs again after this: the Rust binary is self-contained.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import peft as P
+from .kernels import bdmm, ether_apply, ether_plus_left
+
+SEED_BASE = 1234
+SEED_PEFT = 4321
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_of(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Artifact registry
+# ---------------------------------------------------------------------------
+
+# Methods that get the full artifact set on each config.
+TINY_METHODS = ["ether_n4", "etherplus_n4", "oft_n4", "naive_n4", "lora_r8", "vera_r16"]
+TINY_ABLATIONS = ["ether_n1", "ether_n16", "etherplus_n1", "etherplus_n16",
+                  "etherplus_n4_1s", "oft_n4_mrf"]
+TINY_CLS = TINY_METHODS + ["full"]
+SMALL_METHODS = ["ether_n4", "etherplus_n4", "oft_n4", "lora_r8"]
+
+# Kernel microbenches for the Table-1 block-scaling study (d = f = 1024).
+MICRO_DIM = 1024
+MICRO = [
+    ("k_ether", n) for n in (1, 4, 32)
+] + [
+    ("k_etherplus", n) for n in (1, 4, 32)
+] + [
+    ("k_bdmm", n) for n in (4, 32, 256)
+]
+
+
+def peft_vec_size(cfg, spec) -> int:
+    n = P.count_params(cfg, spec)
+    return max(n, 1)  # 'none' still crosses the boundary as a 1-element vec
+
+
+def build_registry() -> List[dict]:
+    """Every artifact: name, fn builder, typed example args."""
+    arts: List[dict] = []
+
+    def add(name, fn, specs, cfg=None, method=None, kind=None):
+        arts.append(
+            dict(name=name, fn=fn, specs=specs, cfg=cfg, method=method, kind=kind)
+        )
+
+    for cfg_name, methods, cls_methods in (
+        ("tiny", TINY_METHODS + TINY_ABLATIONS, TINY_CLS),
+        ("small", SMALL_METHODS, []),
+    ):
+        cfg = M.CONFIGS[cfg_name]
+        B, S, V, C = cfg.batch, cfg.seq, cfg.vocab, cfg.n_classes
+        nb = M.layout_size(M.base_layout(cfg))
+        tok = spec_of((B, S), I32)
+        fvec = lambda k: spec_of((k,), F32)
+        scal = spec_of((), F32)
+
+        add(
+            f"lm_{cfg_name}_pretrain",
+            M.make_pretrain_step(cfg),
+            [fvec(nb), fvec(nb), fvec(nb), tok, tok, spec_of((B, S), F32), scal, scal],
+            cfg=cfg_name, method="none", kind="pretrain_step",
+        )
+
+        # Base-only forward paths (un-tuned baseline rows + merged serving).
+        none = P.MethodSpec("none")
+        np_ = peft_vec_size(cfg, none)
+        add(
+            f"lm_{cfg_name}_none_eval",
+            M.make_eval_nll(cfg, none),
+            [fvec(nb), fvec(np_), tok, tok, spec_of((B, S), F32)],
+            cfg=cfg_name, method="none", kind="eval_nll",
+        )
+        add(
+            f"lm_{cfg_name}_none_logits",
+            M.make_logits_last(cfg, none),
+            [fvec(nb), fvec(np_), tok, spec_of((B,), I32)],
+            cfg=cfg_name, method="none", kind="logits_last",
+        )
+
+        for mname in methods:
+            spec = P.parse_spec(mname)
+            k = peft_vec_size(cfg, spec)
+            add(
+                f"lm_{cfg_name}_{mname}_train",
+                M.make_train_step(cfg, spec),
+                [fvec(nb), fvec(k), fvec(k), fvec(k), tok, tok,
+                 spec_of((B, S), F32), scal, scal],
+                cfg=cfg_name, method=mname, kind="train_step",
+            )
+            add(
+                f"lm_{cfg_name}_{mname}_eval",
+                M.make_eval_nll(cfg, spec),
+                [fvec(nb), fvec(k), tok, tok, spec_of((B, S), F32)],
+                cfg=cfg_name, method=mname, kind="eval_nll",
+            )
+            add(
+                f"lm_{cfg_name}_{mname}_logits",
+                M.make_logits_last(cfg, spec),
+                [fvec(nb), fvec(k), tok, spec_of((B,), I32)],
+                cfg=cfg_name, method=mname, kind="logits_last",
+            )
+            add(
+                f"lm_{cfg_name}_{mname}_merge",
+                M.make_merge(cfg, spec),
+                [fvec(nb), fvec(k)],
+                cfg=cfg_name, method=mname, kind="merge",
+            )
+
+        for mname in cls_methods:
+            spec = P.parse_spec(mname)
+            tsize = P.count_params(cfg, spec) + M.layout_size(M.head_layout(cfg))
+            add(
+                f"cls_{cfg_name}_{mname}_train",
+                M.make_cls_train_step(cfg, spec),
+                [fvec(nb), fvec(tsize), fvec(tsize), fvec(tsize), tok,
+                 spec_of((B,), I32), spec_of((B,), I32), scal, scal],
+                cfg=cfg_name, method=mname, kind="cls_train_step",
+            )
+            add(
+                f"cls_{cfg_name}_{mname}_eval",
+                M.make_cls_eval(cfg, spec),
+                [fvec(nb), fvec(tsize), tok, spec_of((B,), I32)],
+                cfg=cfg_name, method=mname, kind="cls_eval",
+            )
+
+    # Kernel microbenches (Table 1 block-scaling; d = f = MICRO_DIM).
+    d = MICRO_DIM
+    for kind, n in MICRO:
+        if kind == "k_ether":
+            fn = lambda u, w: (ether_apply(u, w),)
+            specs = [spec_of((n, d // n), F32), spec_of((d, d), F32)]
+        elif kind == "k_etherplus":
+            fn = lambda u, v, w: (ether_plus_left(u, v, w),)
+            specs = [spec_of((n, d // n), F32)] * 2 + [spec_of((d, d), F32)]
+        else:  # k_bdmm
+            fn = lambda q, w: (bdmm(q, w),)
+            specs = [spec_of((n, d // n, d // n), F32), spec_of((d, d), F32)]
+        add(f"{kind}_d{d}_n{n}", fn, specs, kind="kernel_bench", method=f"n{n}")
+
+    return arts
+
+
+# ---------------------------------------------------------------------------
+# Manifest + init dumps
+# ---------------------------------------------------------------------------
+
+
+def dtype_str(dt) -> str:
+    return {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}[jnp.dtype(dt)]
+
+
+def layout_json(layout) -> List:
+    return [[name, list(shape)] for name, shape in layout]
+
+
+def write_inits(out_dir: str, manifest: dict) -> None:
+    init_dir = os.path.join(out_dir, "init")
+    os.makedirs(init_dir, exist_ok=True)
+
+    def dump(name: str, vec: np.ndarray):
+        path = os.path.join(init_dir, f"{name}.f32")
+        vec.astype("<f4").tofile(path)
+        manifest["inits"][name] = {"file": f"init/{name}.f32", "len": int(vec.size)}
+
+    for cfg_name in ("tiny", "small"):
+        cfg = M.CONFIGS[cfg_name]
+        base = M.init_base(cfg, SEED_BASE)
+        dump(f"{cfg_name}_base", M.flatten_np(base, M.base_layout(cfg)))
+        head = M.init_head(cfg, SEED_BASE)
+        methods = set(
+            TINY_METHODS + TINY_ABLATIONS + TINY_CLS if cfg_name == "tiny" else SMALL_METHODS
+        )
+        for mname in sorted(methods):
+            spec = P.parse_spec(mname)
+            pp = P.init_peft(cfg, spec, SEED_PEFT, base=base)
+            pl = P.peft_layout(cfg, spec)
+            dump(f"{cfg_name}_{mname}_peft", M.flatten_np(pp, pl))
+            merged = dict(pp)
+            merged.update(head)
+            dump(
+                f"{cfg_name}_{mname}_cls",
+                M.flatten_np(merged, pl + M.head_layout(cfg)),
+            )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter for artifact names")
+    args = ap.parse_args()
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest: dict = {
+        "version": 1,
+        "micro_dim": MICRO_DIM,
+        "configs": {},
+        "methods": {},
+        "artifacts": {},
+        "inits": {},
+    }
+
+    for cfg_name, cfg in M.CONFIGS.items():
+        manifest["configs"][cfg_name] = {
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "seq": cfg.seq,
+            "batch": cfg.batch,
+            "vocab": cfg.vocab,
+            "n_classes": cfg.n_classes,
+            "base_size": M.layout_size(M.base_layout(cfg)),
+            "head_size": M.layout_size(M.head_layout(cfg)),
+            "base_layout": layout_json(M.base_layout(cfg)),
+            "head_layout": layout_json(M.head_layout(cfg)),
+        }
+
+    all_methods = sorted(
+        set(TINY_METHODS + TINY_ABLATIONS + TINY_CLS + SMALL_METHODS + ["none"])
+    )
+    for mname in all_methods:
+        spec = P.parse_spec(mname)
+        entry = {
+            "kind": spec.kind,
+            "n_blocks": spec.n_blocks,
+            "rank": spec.rank,
+            "sides": spec.sides,
+            "magnitude_refit": spec.magnitude_refit,
+            "params": {},
+        }
+        for cfg_name, cfg in M.CONFIGS.items():
+            try:
+                entry["params"][cfg_name] = {
+                    "trainable": P.count_params(cfg, spec),
+                    "reported": P.reported_params(cfg, spec),
+                    "layout": layout_json(P.peft_layout(cfg, spec)),
+                }
+            except AssertionError:
+                pass  # block count incompatible with this config
+        manifest["methods"][mname] = entry
+
+    registry = build_registry()
+    t_all = time.time()
+    for art in registry:
+        if args.only and args.only not in art["name"]:
+            continue
+        t0 = time.time()
+        # keep_unused: the 'none' method's placeholder peft vector must stay
+        # in the program signature so every artifact kind has a uniform ABI.
+        lowered = jax.jit(art["fn"], keep_unused=True).lower(*art["specs"])
+        text = to_hlo_text(lowered)
+        fname = f"{art['name']}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"][art["name"]] = {
+            "file": fname,
+            "cfg": art["cfg"],
+            "method": art["method"],
+            "kind": art["kind"],
+            "inputs": [
+                {"shape": list(s.shape), "dtype": dtype_str(s.dtype)}
+                for s in art["specs"]
+            ],
+        }
+        print(
+            f"[aot] {art['name']:48s} {len(text) / 1e6:6.2f} MB  "
+            f"{time.time() - t0:5.1f}s",
+            flush=True,
+        )
+
+    write_inits(out_dir, manifest)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] wrote {len(manifest['artifacts'])} artifacts in "
+          f"{time.time() - t_all:.1f}s → {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

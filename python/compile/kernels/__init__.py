@@ -1,0 +1,10 @@
+"""Layer-1 Pallas kernels and their pure-jnp oracles."""
+
+from .ether import (  # noqa: F401
+    bdmm,
+    ether_apply,
+    ether_plus_left,
+    ether_plus_right,
+    transform_flops,
+    vmem_footprint_bytes,
+)

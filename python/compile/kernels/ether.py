@@ -1,0 +1,426 @@
+"""Layer-1 Pallas kernels: block-parallel multiplicative weight transforms.
+
+This module implements the compute hot-spot of the ETHER paper (Bini et al.,
+ICML 2024, §3.4): applying a block-diagonal multiplicative transform to a
+weight matrix ``W (d, f)`` without ever materializing the ``d × d``
+transformation matrix.
+
+Kernels
+-------
+``ether_apply(u, w)``
+    Block-diagonal Householder reflection ``H^B W`` (paper Eq. 1 + §3.4):
+    per block ``W_i - 2 û_i (û_iᵀ W_i)`` — a rank-1 update, i.e. one
+    ``(1, d/n) @ (d/n, f_t)`` contraction + AXPY per tile.
+``ether_plus_left(u, v, w)``
+    Relaxed reflection ``H⁺ W`` with ``H⁺ = I - ûûᵀ + v̂v̂ᵀ`` (paper §3.3).
+``ether_plus_right(w, u, v)``
+    Column-side application ``W H̃⁺`` used by the double-sided ETHER+
+    forward ``(H⁺ W H̃⁺)ᵀ x + b``.
+``bdmm(q, w)``
+    Block-diagonal matmul ``Q^B W`` (dense per-block multiplier) — the
+    compute pattern of the OFT / Naive baselines.
+
+Hardware adaptation (paper targets CUDA threadblocks):
+    * grid = (block index i, f-tile index j); one program per (d/n, f_t)
+      tile, the TPU analogue of "one threadblock per diagonal block".
+    * BlockSpec moves exactly one u-block and one W-tile into VMEM; the
+      VMEM footprint is O(d/n · f_t) rather than O((d/n)²) because H is
+      never formed.
+    * normalization of the hyperplane normal happens in-kernel (rsqrt of
+      an in-VMEM reduction), so the stored parameter is the raw vector.
+
+All kernels run with ``interpret=True``: the CPU PJRT runtime used by the
+Rust layer cannot execute Mosaic custom-calls, and interpret mode lowers
+the kernel to plain HLO ops that any backend runs (see DESIGN.md).
+
+Autodiff: ``pallas_call`` has no reverse-mode rule, so every public entry
+point is wrapped in ``jax.custom_vjp``. The backward passes reuse the
+forward kernels where the math allows (H and H⁺ are symmetric, so the
+weight cotangent is the same transform applied to the output cotangent)
+and fall back to cheap closed-form mat-vec expressions for the vector
+gradients. Gradients are validated against jnp autodiff of the reference
+implementation in ``python/tests``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Numerical guard for the in-kernel normalization. Kept tiny so that the
+# analytic VJPs (which differentiate through the guarded norm exactly)
+# agree with autodiff of the reference to float32 precision.
+NORM_EPS = 1e-12
+
+
+def _f_tile(f: int) -> int:
+    """Largest TPU-friendly tile (≤ 256) that divides the column count."""
+    for t in (256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if f % t == 0:
+            return t
+    return 1
+
+
+def _d_tile(d: int) -> int:
+    """Row tile for the column-side kernels."""
+    for t in (256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if d % t == 0:
+            return t
+    return 1
+
+
+def _normalize(u, acc_dtype=jnp.float32):
+    """Unit-normalize a vector in f32 regardless of storage dtype."""
+    uf = u.astype(acc_dtype)
+    return (uf * jax.lax.rsqrt(jnp.sum(uf * uf) + NORM_EPS)).astype(u.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Forward kernels
+# ---------------------------------------------------------------------------
+
+
+def _ether_kernel(u_ref, w_ref, o_ref):
+    """One (d/n, f_t) tile of H^B W = W_i - 2 û_i (û_iᵀ W_i)."""
+    u = u_ref[0, :].astype(jnp.float32)
+    uh = u * jax.lax.rsqrt(jnp.sum(u * u) + NORM_EPS)
+    w = w_ref[...].astype(jnp.float32)
+    proj = uh @ w  # (f_t,) — the (1, d/n) @ (d/n, f_t) contraction
+    o_ref[...] = (w - 2.0 * uh[:, None] * proj[None, :]).astype(o_ref.dtype)
+
+
+def _ether_plus_left_kernel(u_ref, v_ref, w_ref, o_ref):
+    """One tile of H⁺ W = W - û(ûᵀW) + v̂(v̂ᵀW)."""
+    u = u_ref[0, :].astype(jnp.float32)
+    v = v_ref[0, :].astype(jnp.float32)
+    uh = u * jax.lax.rsqrt(jnp.sum(u * u) + NORM_EPS)
+    vh = v * jax.lax.rsqrt(jnp.sum(v * v) + NORM_EPS)
+    w = w_ref[...].astype(jnp.float32)
+    pu = uh @ w
+    pv = vh @ w
+    o_ref[...] = (w - uh[:, None] * pu[None, :] + vh[:, None] * pv[None, :]).astype(
+        o_ref.dtype
+    )
+
+
+def _ether_plus_right_kernel(w_ref, u_ref, v_ref, o_ref):
+    """One tile of W H̃⁺ = W - (Wû)ûᵀ + (Wv̂)v̂ᵀ (columns blocked)."""
+    u = u_ref[0, :].astype(jnp.float32)
+    v = v_ref[0, :].astype(jnp.float32)
+    uh = u * jax.lax.rsqrt(jnp.sum(u * u) + NORM_EPS)
+    vh = v * jax.lax.rsqrt(jnp.sum(v * v) + NORM_EPS)
+    w = w_ref[...].astype(jnp.float32)
+    pu = w @ uh
+    pv = w @ vh
+    o_ref[...] = (w - pu[:, None] * uh[None, :] + pv[:, None] * vh[None, :]).astype(
+        o_ref.dtype
+    )
+
+
+def _bdmm_kernel(q_ref, w_ref, o_ref):
+    """One tile of Q^B W: a dense (d/n, d/n) @ (d/n, f_t) block product."""
+    q = q_ref[0].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    o_ref[...] = (q @ w).astype(o_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers (raw, no VJP)
+# ---------------------------------------------------------------------------
+
+
+def _ether_fwd(u, w):
+    n, db = u.shape
+    d, f = w.shape
+    assert n * db == d, f"u blocks {u.shape} do not tile rows of {w.shape}"
+    ft = _f_tile(f)
+    return pl.pallas_call(
+        _ether_kernel,
+        grid=(n, f // ft),
+        in_specs=[
+            pl.BlockSpec((1, db), lambda i, j: (i, 0)),
+            pl.BlockSpec((db, ft), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((db, ft), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, f), w.dtype),
+        interpret=True,
+    )(u, w)
+
+
+def _ether_plus_left_fwd(u, v, w):
+    n, db = u.shape
+    d, f = w.shape
+    assert n * db == d
+    ft = _f_tile(f)
+    return pl.pallas_call(
+        _ether_plus_left_kernel,
+        grid=(n, f // ft),
+        in_specs=[
+            pl.BlockSpec((1, db), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, db), lambda i, j: (i, 0)),
+            pl.BlockSpec((db, ft), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((db, ft), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, f), w.dtype),
+        interpret=True,
+    )(u, v, w)
+
+
+def _ether_plus_right_fwd(w, u, v):
+    n, fb = u.shape
+    d, f = w.shape
+    assert n * fb == f
+    dt = _d_tile(d)
+    return pl.pallas_call(
+        _ether_plus_right_kernel,
+        grid=(d // dt, n),
+        in_specs=[
+            pl.BlockSpec((dt, fb), lambda i, j: (i, j)),
+            pl.BlockSpec((1, fb), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, fb), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((dt, fb), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, f), w.dtype),
+        interpret=True,
+    )(w, u, v)
+
+
+def _bdmm_fwd(q, w):
+    n, db, db2 = q.shape
+    d, f = w.shape
+    assert db == db2 and n * db == d
+    ft = _f_tile(f)
+    return pl.pallas_call(
+        _bdmm_kernel,
+        grid=(n, f // ft),
+        in_specs=[
+            pl.BlockSpec((1, db, db), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((db, ft), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((db, ft), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, f), w.dtype),
+        interpret=True,
+    )(q, w)
+
+
+# ---------------------------------------------------------------------------
+# Shared VJP helpers (closed-form, f32 accumulation)
+# ---------------------------------------------------------------------------
+
+
+def _norm_chain(u, d_uhat):
+    """Pull a cotangent on û back to u through û = u · rsqrt(Σu² + ε)."""
+    uf = u.astype(jnp.float32)
+    g = d_uhat.astype(jnp.float32)
+    s = jnp.sum(uf * uf, axis=-1, keepdims=True) + NORM_EPS
+    r = jax.lax.rsqrt(s)
+    return (r * g - (r ** 3) * jnp.sum(uf * g, axis=-1, keepdims=True) * uf).astype(
+        u.dtype
+    )
+
+
+def _blocks_lhs(x, n):
+    """(d, f) -> (n, d/n, f) row blocking."""
+    d, f = x.shape
+    return x.reshape(n, d // n, f)
+
+
+def _blocks_rhs(x, n):
+    """(d, f) -> (n, d, f/n) column blocking."""
+    d, f = x.shape
+    return x.reshape(d, n, f // n).transpose(1, 0, 2)
+
+
+def _unblocks_rhs(xb):
+    n, d, fb = xb.shape
+    return xb.transpose(1, 0, 2).reshape(d, n * fb)
+
+
+def _normalize_rows(u):
+    uf = u.astype(jnp.float32)
+    return uf * jax.lax.rsqrt(
+        jnp.sum(uf * uf, axis=-1, keepdims=True) + NORM_EPS
+    )
+
+
+# ---------------------------------------------------------------------------
+# Public entry points with custom VJP
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def ether_apply(u, w):
+    """Block-diagonal Householder reflection ``H^B W`` (paper Eq. 1, §3.4).
+
+    Args:
+        u: ``(n, d/n)`` raw (unnormalized) hyperplane normals, one per block.
+        w: ``(d, f)`` weight matrix.
+    Returns:
+        ``(d, f)`` reflected weights; ``‖H^B − I‖_F = 2√n`` by construction.
+    """
+    return _ether_fwd(u, w)
+
+
+def _ether_vjp_fwd(u, w):
+    return _ether_fwd(u, w), (u, w)
+
+
+def _ether_vjp_bwd(res, g):
+    u, w = res
+    n, _ = u.shape
+    # dW = Hᵀ g = H g (Householder blocks are symmetric) — reuse the kernel.
+    dw = _ether_fwd(u, g)
+    uh = _normalize_rows(u)  # (n, db) in f32
+    wb = _blocks_lhs(w, n).astype(jnp.float32)
+    gb = _blocks_lhs(g, n).astype(jnp.float32)
+    # dû_i = -2 (g_i (w_iᵀ û_i) + w_i (g_iᵀ û_i))
+    s = jnp.einsum("nd,ndf->nf", uh, wb)
+    t = jnp.einsum("nd,ndf->nf", uh, gb)
+    d_uhat = -2.0 * (jnp.einsum("ndf,nf->nd", gb, s) + jnp.einsum("ndf,nf->nd", wb, t))
+    du = _norm_chain(u, d_uhat)
+    return du, dw.astype(w.dtype)
+
+
+ether_apply.defvjp(_ether_vjp_fwd, _ether_vjp_bwd)
+
+
+@jax.custom_vjp
+def ether_plus_left(u, v, w):
+    """Relaxed reflection ``H⁺ W`` with ``H⁺ = I − ûûᵀ + v̂v̂ᵀ`` (paper §3.3).
+
+    ``‖H⁺ − I‖_F ≤ 2`` per block by the triangle inequality; equality iff
+    ``û ⟂ v̂``. ``u = v`` gives the identity transform (the init we use).
+    """
+    return _ether_plus_left_fwd(u, v, w)
+
+
+def _epl_vjp_fwd(u, v, w):
+    return _ether_plus_left_fwd(u, v, w), (u, v, w)
+
+
+def _epl_vjp_bwd(res, g):
+    u, v, w = res
+    n, _ = u.shape
+    # (H⁺)ᵀ = H⁺: weight cotangent reuses the forward kernel.
+    dw = _ether_plus_left_fwd(u, v, g)
+    uh = _normalize_rows(u)
+    vh = _normalize_rows(v)
+    wb = _blocks_lhs(w, n).astype(jnp.float32)
+    gb = _blocks_lhs(g, n).astype(jnp.float32)
+    su = jnp.einsum("nd,ndf->nf", uh, wb)
+    tu = jnp.einsum("nd,ndf->nf", uh, gb)
+    sv = jnp.einsum("nd,ndf->nf", vh, wb)
+    tv = jnp.einsum("nd,ndf->nf", vh, gb)
+    d_uhat = -(jnp.einsum("ndf,nf->nd", gb, su) + jnp.einsum("ndf,nf->nd", wb, tu))
+    d_vhat = +(jnp.einsum("ndf,nf->nd", gb, sv) + jnp.einsum("ndf,nf->nd", wb, tv))
+    return _norm_chain(u, d_uhat), _norm_chain(v, d_vhat), dw.astype(w.dtype)
+
+
+ether_plus_left.defvjp(_epl_vjp_fwd, _epl_vjp_bwd)
+
+
+@jax.custom_vjp
+def ether_plus_right(w, u, v):
+    """Column-side relaxed reflection ``W H̃⁺`` (paper §3.3 double-sided)."""
+    return _ether_plus_right_fwd(w, u, v)
+
+
+def _epr_vjp_fwd(w, u, v):
+    return _ether_plus_right_fwd(w, u, v), (w, u, v)
+
+
+def _epr_vjp_bwd(res, g):
+    w, u, v = res
+    n, _ = u.shape
+    dw = _ether_plus_right_fwd(g, u, v)
+    uh = _normalize_rows(u)
+    vh = _normalize_rows(v)
+    wb = _blocks_rhs(w, n).astype(jnp.float32)  # (n, d, fb)
+    gb = _blocks_rhs(g, n).astype(jnp.float32)
+    # dû = -(gᵀ(wû) + wᵀ(gû)), per block.
+    wu = jnp.einsum("ndf,nf->nd", wb, uh)
+    gu = jnp.einsum("ndf,nf->nd", gb, uh)
+    wv = jnp.einsum("ndf,nf->nd", wb, vh)
+    gv = jnp.einsum("ndf,nf->nd", gb, vh)
+    d_uhat = -(jnp.einsum("nd,ndf->nf", wu, gb) + jnp.einsum("nd,ndf->nf", gu, wb))
+    d_vhat = +(jnp.einsum("nd,ndf->nf", wv, gb) + jnp.einsum("nd,ndf->nf", gv, wb))
+    return dw.astype(w.dtype), _norm_chain(u, d_uhat), _norm_chain(v, d_vhat)
+
+
+ether_plus_right.defvjp(_epr_vjp_fwd, _epr_vjp_bwd)
+
+
+@jax.custom_vjp
+def bdmm(q, w):
+    """Block-diagonal matmul ``Q^B W`` (OFT / Naive compute pattern).
+
+    Args:
+        q: ``(n, d/n, d/n)`` dense per-block multipliers.
+        w: ``(d, f)`` weight matrix.
+    """
+    return _bdmm_fwd(q, w)
+
+
+def _bdmm_vjp_fwd(q, w):
+    return _bdmm_fwd(q, w), (q, w)
+
+
+def _bdmm_vjp_bwd(res, g):
+    q, w = res
+    n = q.shape[0]
+    # dW_i = Q_iᵀ g_i — block-diag matmul with the transposed blocks.
+    dw = _bdmm_fwd(jnp.swapaxes(q, 1, 2), g)
+    wb = _blocks_lhs(w, n).astype(jnp.float32)
+    gb = _blocks_lhs(g, n).astype(jnp.float32)
+    dq = jnp.einsum("ndf,nef->nde", gb, wb).astype(q.dtype)
+    return dq, dw.astype(w.dtype)
+
+
+bdmm.defvjp(_bdmm_vjp_fwd, _bdmm_vjp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Analytic TPU cost model (used by DESIGN.md §Perf and EXPERIMENTS.md)
+# ---------------------------------------------------------------------------
+
+
+def vmem_footprint_bytes(d: int, f: int, n: int, dtype_bytes: int = 4,
+                         kind: str = "ether") -> int:
+    """Per-program VMEM footprint of one grid step of the kernels above.
+
+    ``ether``/``ether_plus`` never materialize H: footprint is the W tile,
+    the u (and v) block and the (f_t,) projection row. ``bdmm`` adds the
+    dense (d/n)² block.
+    """
+    db = d // n
+    ft = _f_tile(f)
+    base = db * ft + ft  # W tile in + out accumulates in-place, plus proj row
+    if kind == "ether":
+        vec = db
+    elif kind == "ether_plus":
+        vec = 2 * db
+        base += ft
+    elif kind == "bdmm":
+        vec = db * db
+    else:
+        raise ValueError(kind)
+    return (base + vec + db * ft) * dtype_bytes  # + output tile
+
+
+def transform_flops(d: int, f: int, n: int, kind: str = "ether") -> int:
+    """FLOPs of one transform application (paper §3.4 complexity analysis).
+
+    bdmm: n blocks of (d/n)²·f multiply-adds → O(d²f/n).
+    ether: rank-1 per block → 2 matvec-style passes → O(d·f).
+    ether_plus (one side): two rank-1 updates → O(d·f) with 2× constant.
+    """
+    if kind == "bdmm":
+        return 2 * (d // n) * d * f
+    if kind == "ether":
+        return 4 * d * f
+    if kind == "ether_plus":
+        return 8 * d * f
+    raise ValueError(kind)

@@ -1,0 +1,90 @@
+"""Pure-jnp reference oracles for the Pallas kernels in ``ether.py``.
+
+These are the ground truth for correctness: pytest asserts
+``assert_allclose(kernel(x), ref(x))`` for forwards, and compares the
+kernels' custom VJPs against jnp autodiff of these references. They use
+the exact same guarded normalization (``NORM_EPS``) so gradients agree to
+float precision, not just approximately.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .ether import NORM_EPS
+
+
+def normalize_rows(u):
+    """û = u · rsqrt(Σu² + ε), row-wise, f32 accumulation."""
+    uf = u.astype(jnp.float32)
+    return uf * jax.lax.rsqrt(jnp.sum(uf * uf, axis=-1, keepdims=True) + NORM_EPS)
+
+
+def ether_apply_ref(u, w):
+    """H^B W with H_i = I − 2 û_i û_iᵀ."""
+    n, db = u.shape
+    d, f = w.shape
+    uh = normalize_rows(u)
+    wb = w.reshape(n, db, f).astype(jnp.float32)
+    proj = jnp.einsum("nd,ndf->nf", uh, wb)
+    out = wb - 2.0 * uh[:, :, None] * proj[:, None, :]
+    return out.reshape(d, f).astype(w.dtype)
+
+
+def ether_plus_left_ref(u, v, w):
+    """H⁺ W with H⁺ = I − ûûᵀ + v̂v̂ᵀ per block."""
+    n, db = u.shape
+    d, f = w.shape
+    uh = normalize_rows(u)
+    vh = normalize_rows(v)
+    wb = w.reshape(n, db, f).astype(jnp.float32)
+    pu = jnp.einsum("nd,ndf->nf", uh, wb)
+    pv = jnp.einsum("nd,ndf->nf", vh, wb)
+    out = wb - uh[:, :, None] * pu[:, None, :] + vh[:, :, None] * pv[:, None, :]
+    return out.reshape(d, f).astype(w.dtype)
+
+
+def ether_plus_right_ref(w, u, v):
+    """W H̃⁺ — columns of W blocked into n groups."""
+    n, fb = u.shape
+    d, f = w.shape
+    uh = normalize_rows(u)
+    vh = normalize_rows(v)
+    wb = w.reshape(d, n, fb).transpose(1, 0, 2).astype(jnp.float32)  # (n, d, fb)
+    pu = jnp.einsum("ndf,nf->nd", wb, uh)
+    pv = jnp.einsum("ndf,nf->nd", wb, vh)
+    out = wb - pu[:, :, None] * uh[:, None, :] + pv[:, :, None] * vh[:, None, :]
+    return out.transpose(1, 0, 2).reshape(d, f).astype(w.dtype)
+
+
+def bdmm_ref(q, w):
+    """Q^B W with dense blocks."""
+    n, db, _ = q.shape
+    d, f = w.shape
+    wb = w.reshape(n, db, f).astype(jnp.float32)
+    out = jnp.einsum("nde,nef->ndf", q.astype(jnp.float32), wb)
+    return out.reshape(d, f).astype(w.dtype)
+
+
+def householder_dense(u):
+    """Materialized block-diagonal H^B (tests only — never in the model)."""
+    n, db = u.shape
+    uh = normalize_rows(u)
+    eye = jnp.eye(db, dtype=jnp.float32)
+    blocks = eye[None] - 2.0 * uh[:, :, None] * uh[:, None, :]
+    return jax.scipy.linalg.block_diag(*[blocks[i] for i in range(n)])
+
+
+def ether_plus_dense(u, v):
+    """Materialized block-diagonal H⁺ (tests only)."""
+    n, db = u.shape
+    uh = normalize_rows(u)
+    vh = normalize_rows(v)
+    eye = jnp.eye(db, dtype=jnp.float32)
+    blocks = (
+        eye[None]
+        - uh[:, :, None] * uh[:, None, :]
+        + vh[:, :, None] * vh[:, None, :]
+    )
+    return jax.scipy.linalg.block_diag(*[blocks[i] for i in range(n)])

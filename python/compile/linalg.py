@@ -1,0 +1,67 @@
+"""Pure-HLO linear-algebra helpers for the compile path.
+
+The standalone XLA runtime used by the Rust layer (xla_extension 0.5.1)
+cannot execute jaxlib's LAPACK custom-calls, so ``jnp.linalg.inv`` /
+``solve`` are off-limits inside any artifact. OFT's Cayley parametrization
+``Q = (I + S)(I − S)⁻¹`` therefore uses this batched Gauss-Jordan inverse
+built only from standard HLO ops (dynamic slices + elementwise math).
+
+Pivoting note: the only matrices we ever invert are ``I − S`` with ``S``
+skew-symmetric. Their symmetric part is ``I ≻ 0``, so every leading
+principal minor is nonzero and Gauss-Jordan without pivoting is
+well-defined and stable here (verified against ``np.linalg.inv`` in
+python/tests for random S of magnitude up to 10).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def gauss_jordan_inv(a: jnp.ndarray) -> jnp.ndarray:
+    """Batched matrix inverse via Gauss-Jordan elimination (no pivoting).
+
+    Args:
+        a: ``(n, k, k)`` batch of matrices with nonvanishing leading minors
+           (e.g. ``I − S`` for skew-symmetric S).
+    Returns:
+        ``(n, k, k)`` batch of inverses, f32.
+    """
+    n, k, k2 = a.shape
+    assert k == k2, a.shape
+    aug = jnp.concatenate(
+        [a.astype(jnp.float32), jnp.broadcast_to(jnp.eye(k, dtype=jnp.float32), (n, k, k))],
+        axis=2,
+    )  # (n, k, 2k)
+
+    def body(j, m):
+        row = lax.dynamic_slice_in_dim(m, j, 1, axis=1)  # (n, 1, 2k)
+        piv_el = lax.dynamic_slice_in_dim(row, j, 1, axis=2)  # (n, 1, 1)
+        piv = row / piv_el  # normalized pivot row
+        factors = lax.dynamic_slice_in_dim(m, j, 1, axis=2)  # (n, k, 1)
+        m = m - factors * piv  # eliminates column j everywhere (row j -> 0)
+        return lax.dynamic_update_slice_in_dim(m, piv, j, axis=1)
+
+    aug = lax.fori_loop(0, k, body, aug)
+    return aug[:, :, k:]
+
+
+def cayley(r: jnp.ndarray) -> jnp.ndarray:
+    """Cayley map used by OFT: blocks R → Q = (I + S)(I − S)⁻¹, S = ½(R − Rᵀ).
+
+    Produces special-orthogonal blocks (det +1): as the paper notes (§3.2),
+    this parametrization *cannot* express Householder reflections (det −1),
+    which is exactly the gap ETHER occupies.
+
+    Args:
+        r: ``(n, k, k)`` unconstrained per-block parameters.
+    Returns:
+        ``(n, k, k)`` orthogonal blocks.
+    """
+    rf = r.astype(jnp.float32)
+    s = 0.5 * (rf - jnp.swapaxes(rf, 1, 2))
+    k = r.shape[1]
+    eye = jnp.eye(k, dtype=jnp.float32)
+    return jnp.einsum("nij,njk->nik", eye[None] + s, gauss_jordan_inv(eye[None] - s))

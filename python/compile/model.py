@@ -1,0 +1,403 @@
+"""Layer-2 JAX model: a functional transformer trunk with PEFT hooks.
+
+One decoder-only transformer serves both workload families of the paper's
+evaluation (generative adaptation §5.1, language-model adaptation §5.2):
+
+* **LM head** (tied embeddings) → pretraining, instruction tuning,
+  generation-control tasks, NLL-based multiple-choice scoring.
+* **Classifier head** (linear on the last-token hidden state) → the
+  SynthGLUE suite (paper Table 4 analogue) and VTAB-proxy (Table 12).
+
+Everything is functional: parameters are dicts of arrays, and every
+artifact function takes/returns **flat f32 vectors** whose layouts are
+exported to ``artifacts/manifest.json``. Train steps embed AdamW so that
+one PJRT execution = one optimizer step, and the Rust trainer can keep all
+state device-resident (``execute_b``) with zero per-step host copies.
+
+The PEFT transform (``peft.apply_transform`` → Layer-1 Pallas kernels) is
+applied to the six adapted matrices inside the layer scan, so it lowers
+into the same HLO as the forward/backward pass.
+
+Design notes:
+* layers are stacked ``(L, …)`` and iterated with ``lax.scan`` — compact
+  HLO and a single Pallas trace per matrix kind;
+* sequences are right-padded; with a causal mask no real position can
+  attend to padding, so no explicit pad mask is needed (classification
+  reads the hidden state at ``lengths − 1``);
+* no dropout: the paper finds ETHER needs none (App. C), and deterministic
+  graphs keep the artifact interface minimal.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import peft as peft_mod
+
+PAD, BOS, EOS = 256, 257, 258
+VOCAB = 259
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    """Model/workload configuration (a row of DESIGN.md §5)."""
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq: int
+    batch: int
+    vocab: int = VOCAB
+    n_classes: int = 4
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+TINY = Config("tiny", d_model=64, n_layers=2, n_heads=4, d_ff=128, seq=32, batch=16)
+SMALL = Config("small", d_model=256, n_layers=6, n_heads=8, d_ff=1024, seq=96, batch=8)
+
+CONFIGS = {c.name: c for c in (TINY, SMALL)}
+
+
+# ---------------------------------------------------------------------------
+# Parameter layouts + flat-vector plumbing
+# ---------------------------------------------------------------------------
+
+
+def base_layout(cfg: Config) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Frozen-trunk parameter layout (stacked over layers)."""
+    L, D, F, S, V = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.seq, cfg.vocab
+    return [
+        ("embed", (V, D)),
+        ("pos", (S, D)),
+        ("ln1_g", (L, D)),
+        ("ln1_b", (L, D)),
+        ("wq", (L, D, D)),
+        ("wk", (L, D, D)),
+        ("wv", (L, D, D)),
+        ("wo", (L, D, D)),
+        ("ln2_g", (L, D)),
+        ("ln2_b", (L, D)),
+        ("w1", (L, D, F)),
+        ("b1", (L, F)),
+        ("w2", (L, F, D)),
+        ("b2", (L, D)),
+        ("lnf_g", (D,)),
+        ("lnf_b", (D,)),
+    ]
+
+
+def head_layout(cfg: Config) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Classifier head (always trainable alongside the PEFT params)."""
+    return [("head_w", (cfg.d_model, cfg.n_classes)), ("head_b", (cfg.n_classes,))]
+
+
+def layout_size(layout) -> int:
+    return sum(int(np.prod(s)) for _, s in layout)
+
+
+def flatten(params: Dict[str, jnp.ndarray], layout) -> jnp.ndarray:
+    return jnp.concatenate(
+        [jnp.ravel(params[name]).astype(jnp.float32) for name, _ in layout]
+    ) if layout else jnp.zeros((0,), jnp.float32)
+
+
+def unflatten(vec: jnp.ndarray, layout) -> Dict[str, jnp.ndarray]:
+    out, off = {}, 0
+    for name, shape in layout:
+        size = int(np.prod(shape))
+        out[name] = vec[off : off + size].reshape(shape)
+        off += size
+    return out
+
+
+def flatten_np(params: Dict[str, np.ndarray], layout) -> np.ndarray:
+    if not layout:
+        return np.zeros(1, np.float32)  # 'none' placeholder (see aot.py)
+    return np.concatenate([params[n].ravel().astype(np.float32) for n, _ in layout])
+
+
+def init_base(cfg: Config, seed: int) -> Dict[str, np.ndarray]:
+    """GPT-2-style init; residual-output matrices scaled by 1/√(2L)."""
+    rng = np.random.default_rng(seed)
+    L = cfg.n_layers
+    resid_scale = 1.0 / np.sqrt(2.0 * L)
+    out: Dict[str, np.ndarray] = {}
+    for name, shape in base_layout(cfg):
+        if name.startswith(("ln1_g", "ln2_g", "lnf_g")):
+            out[name] = np.ones(shape, np.float32)
+        elif name.startswith(("ln1_b", "ln2_b", "lnf_b", "b1", "b2")):
+            out[name] = np.zeros(shape, np.float32)
+        else:
+            x = rng.standard_normal(shape).astype(np.float32) * 0.02
+            if name in ("wo", "w2"):
+                x *= resid_scale
+            out[name] = x
+    return out
+
+
+def init_head(cfg: Config, seed: int) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed + 1)
+    return {
+        "head_w": (rng.standard_normal((cfg.d_model, cfg.n_classes)) * 0.02).astype(
+            np.float32
+        ),
+        "head_b": np.zeros((cfg.n_classes,), np.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+_LAYER_KEYS = ("ln1_g", "ln1_b", "wq", "wk", "wv", "wo", "ln2_g", "ln2_b",
+               "w1", "b1", "w2", "b2")
+
+
+def forward_hidden(cfg: Config, base: Dict, spec, peft_params: Dict, tokens,
+                   use_pallas: bool = True):
+    """Token ids (B, S) → final hidden states (B, S, D)."""
+    B, S = tokens.shape
+    D, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    x = base["embed"][tokens] + base["pos"][None, :S, :]
+    causal = jnp.tril(jnp.ones((S, S), jnp.float32))
+    neg = jnp.float32(-1e9)
+
+    peft_layout = peft_mod.peft_layout(cfg, spec)
+    stacked_layer = {k: base[k] for k in _LAYER_KEYS}
+    stacked_peft = {name: peft_params[name] for name, _ in peft_layout}
+
+    def layer(x, scanned):
+        lp, pp = scanned
+        w = {
+            m: peft_mod.apply_transform(cfg, spec, m, lp[m],
+                                        {k: v for k, v in pp.items()},
+                                        use_pallas=use_pallas)
+            for m, _, _ in peft_mod.ADAPTED_MATRICES
+        }
+        h = _layer_norm(x, lp["ln1_g"], lp["ln1_b"])
+        q = (h @ w["wq"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+        k = (h @ w["wk"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+        v = (h @ w["wv"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(hd).astype(np.float32)
+        att = jnp.where(causal[None, None] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+        o = o.transpose(0, 2, 1, 3).reshape(B, S, D)
+        x = x + o @ w["wo"]
+        h = _layer_norm(x, lp["ln2_g"], lp["ln2_b"])
+        x = x + jax.nn.gelu(h @ w["w1"] + lp["b1"]) @ w["w2"] + lp["b2"]
+        return x, None
+
+    x, _ = jax.lax.scan(layer, x, (stacked_layer, stacked_peft))
+    return _layer_norm(x, base["lnf_g"], base["lnf_b"])
+
+
+def lm_logits(cfg, base, spec, peft_params, tokens, use_pallas=True):
+    h = forward_hidden(cfg, base, spec, peft_params, tokens, use_pallas)
+    return h @ base["embed"].T  # tied head
+
+
+def lm_nll(cfg, base, spec, peft_params, tokens, targets, mask, use_pallas=True):
+    """Per-example masked NLL sums and the mask-normalized mean loss."""
+    logits = lm_logits(cfg, base, spec, peft_params, tokens, use_pallas)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    tgt = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    nll = -(tgt * mask)
+    per_example = jnp.sum(nll, axis=-1)
+    mean = jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return per_example, mean
+
+
+def cls_logits(cfg, base, spec, peft_params, head, tokens, lengths, use_pallas=True):
+    h = forward_hidden(cfg, base, spec, peft_params, tokens, use_pallas)
+    idx = jnp.clip(lengths - 1, 0, cfg.seq - 1)
+    last = jnp.take_along_axis(h, idx[:, None, None], axis=1)[:, 0, :]
+    return last @ head["head_w"] + head["head_b"]
+
+
+# ---------------------------------------------------------------------------
+# AdamW (in-graph)
+# ---------------------------------------------------------------------------
+
+
+def adamw(t, g, m, v, lr, step, wd, b1=0.9, b2=0.999, eps=1e-8):
+    """One decoupled-weight-decay Adam step on a flat vector."""
+    m = b1 * m + (1.0 - b1) * g
+    v = b2 * v + (1.0 - b2) * g * g
+    mh = m / (1.0 - b1 ** step)
+    vh = v / (1.0 - b2 ** step)
+    t = t - lr * (mh / (jnp.sqrt(vh) + eps) + wd * t)
+    return t, m, v
+
+
+# ---------------------------------------------------------------------------
+# Artifact functions (flat-vector signatures; lowered by aot.py)
+# ---------------------------------------------------------------------------
+
+
+def make_pretrain_step(cfg: Config):
+    """(base, m, v, tokens, targets, mask, lr, step) → (base', m', v', loss).
+
+    Full-weight AdamW (wd = 0 — decay on LN gains/embeddings hurts at this
+    scale) used to produce the "pretrained model" every PEFT run adapts.
+    """
+    layout = base_layout(cfg)
+    none = peft_mod.MethodSpec("none")
+
+    def step_fn(base_vec, m, v, tokens, targets, mask, lr, step):
+        def loss_fn(bv):
+            base = unflatten(bv, layout)
+            _, mean = lm_nll(cfg, base, none, {}, tokens, targets, mask)
+            return mean
+
+        loss, g = jax.value_and_grad(loss_fn)(base_vec)
+        base_vec, m, v = adamw(base_vec, g, m, v, lr, step, wd=0.0)
+        return base_vec, m, v, loss
+
+    return step_fn
+
+
+def make_train_step(cfg: Config, spec):
+    """(base, peft, m, v, tokens, targets, mask, lr, step) → (peft', m', v', loss)."""
+    blayout = base_layout(cfg)
+    playout = peft_mod.peft_layout(cfg, spec)
+    wd = peft_mod.weight_decay(spec)
+
+    def step_fn(base_vec, peft_vec, m, v, tokens, targets, mask, lr, step):
+        base = unflatten(base_vec, blayout)
+
+        def loss_fn(pv):
+            pp = unflatten(pv, playout)
+            _, mean = lm_nll(cfg, base, spec, pp, tokens, targets, mask)
+            return mean
+
+        loss, g = jax.value_and_grad(loss_fn)(peft_vec)
+        peft_vec, m, v = adamw(peft_vec, g, m, v, lr, step, wd)
+        return peft_vec, m, v, loss
+
+    return step_fn
+
+
+def make_eval_nll(cfg: Config, spec):
+    """(base, peft, tokens, targets, score_mask) → nll[B].
+
+    The multiple-choice scoring primitive: Rust packs (prompt ‖ candidate)
+    and masks candidate positions; the lowest summed NLL wins.
+    """
+    blayout = base_layout(cfg)
+    playout = peft_mod.peft_layout(cfg, spec)
+
+    def fn(base_vec, peft_vec, tokens, targets, mask):
+        base = unflatten(base_vec, blayout)
+        pp = unflatten(peft_vec, playout)
+        per_example, _ = lm_nll(cfg, base, spec, pp, tokens, targets, mask)
+        return (per_example,)
+
+    return fn
+
+
+def make_logits_last(cfg: Config, spec):
+    """(base, peft, tokens, lengths) → next-token logits (B, V)."""
+    blayout = base_layout(cfg)
+    playout = peft_mod.peft_layout(cfg, spec)
+
+    def fn(base_vec, peft_vec, tokens, lengths):
+        base = unflatten(base_vec, blayout)
+        pp = unflatten(peft_vec, playout)
+        h = forward_hidden(cfg, base, spec, pp, tokens)
+        idx = jnp.clip(lengths - 1, 0, cfg.seq - 1)
+        last = jnp.take_along_axis(h, idx[:, None, None], axis=1)[:, 0, :]
+        return (last @ base["embed"].T,)
+
+    return fn
+
+
+def make_merge(cfg: Config, spec):
+    """(base, peft) → base′ with the adapter folded into the weights.
+
+    The serving-side primitive: multiplicative adapters merge at zero
+    inference cost (paper §3.1), after which requests run the plain
+    ``none`` forward. The Rust coordinator caches merged weights per
+    adapter (LRU).
+    """
+    blayout = base_layout(cfg)
+    playout = peft_mod.peft_layout(cfg, spec)
+
+    def fn(base_vec, peft_vec):
+        base = unflatten(base_vec, blayout)
+        pp = unflatten(peft_vec, playout)
+
+        def one_layer(_, scanned):
+            lp, ppl = scanned
+            new = {
+                m: peft_mod.apply_transform(cfg, spec, m, lp[m], ppl)
+                for m, _, _ in peft_mod.ADAPTED_MATRICES
+            }
+            return None, new
+
+        stacked_layer = {m: base[m] for m, _, _ in peft_mod.ADAPTED_MATRICES}
+        stacked_peft = {name: pp[name] for name, _ in playout}
+        _, merged = jax.lax.scan(one_layer, None, (stacked_layer, stacked_peft))
+        out = dict(base)
+        out.update(merged)
+        return (flatten(out, blayout),)
+
+    return fn
+
+
+def make_cls_train_step(cfg: Config, spec):
+    """(base, t, m, v, tokens, lengths, labels, lr, step) → (t', m', v', loss).
+
+    ``t`` = concat(peft params, classifier head) — one trainable vector.
+    """
+    blayout = base_layout(cfg)
+    playout = peft_mod.peft_layout(cfg, spec)
+    hlayout = head_layout(cfg)
+    tlayout = playout + hlayout
+    wd = peft_mod.weight_decay(spec)
+
+    def step_fn(base_vec, t, m, v, tokens, lengths, labels, lr, step):
+        base = unflatten(base_vec, blayout)
+
+        def loss_fn(tv):
+            parts = unflatten(tv, tlayout)
+            logits = cls_logits(cfg, base, spec, parts, parts, tokens, lengths)
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+            return jnp.mean(nll)
+
+        loss, g = jax.value_and_grad(loss_fn)(t)
+        t, m, v = adamw(t, g, m, v, lr, step, wd)
+        return t, m, v, loss
+
+    return step_fn
+
+
+def make_cls_eval(cfg: Config, spec):
+    """(base, t, tokens, lengths) → class logits (B, C)."""
+    blayout = base_layout(cfg)
+    tlayout = peft_mod.peft_layout(cfg, spec) + head_layout(cfg)
+
+    def fn(base_vec, t, tokens, lengths):
+        base = unflatten(base_vec, blayout)
+        parts = unflatten(t, tlayout)
+        return (cls_logits(cfg, base, spec, parts, parts, tokens, lengths),)
+
+    return fn

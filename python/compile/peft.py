@@ -1,0 +1,325 @@
+"""The PEFT transformation family (Layer 2).
+
+Implements every method the paper evaluates, with the exact
+parametrizations and parameter-count formulas of §3 / §4:
+
+================  =============================================  ===========
+method            weight transform                               params / W
+================  =============================================  ===========
+``ether``         W′ = H^B W, H = I − 2ûûᵀ (Eq. 1, §3.4)          d
+``etherplus``     W′ = H⁺ W H̃⁺, H⁺ = I − ûûᵀ + v̂v̂ᵀ (§3.3)        2d + 2f
+``oft``           W′ = Q^B W, Q = (I+S)(I−S)⁻¹ Cayley (§3.1)      d²/n
+``naive``         W′ = N^B W, N = I + R unconstrained (§5.3)      d²/n
+``lora``          W′ = W + A B (Hu et al. 2022)                   r(d + f)
+``vera``          W′ = W + (A·diag(λd)) B·diag(λb), frozen A,B    r + f
+``full``          W′ = Θ (direct copy of W, fully trainable)      d·f
+================  =============================================  ===========
+
+All trainable state crosses the Rust boundary as one flat f32 vector; the
+layout (name, shape, offset) is exported into ``artifacts/manifest.json``
+by ``aot.py``. The multiplicative transforms go through the Layer-1 Pallas
+kernels (``kernels/ether.py``); a ``use_pallas=False`` escape hatch exists
+for the pytest oracles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import linalg
+from .kernels import bdmm, ether_apply, ether_plus_left, ether_plus_right
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class MethodSpec:
+    """A fully-resolved PEFT method configuration.
+
+    Attributes:
+        kind: one of ether|etherplus|oft|naive|lora|vera|full|none.
+        n_blocks: diagonal block count n (multiplicative methods).
+        rank: r for lora/vera.
+        sides: 1 or 2 — ETHER+ one-sided ablation (paper Table 11).
+        magnitude_refit: OFT "+ magn. r.f." variant (paper Table 3).
+        vera_seed: seed of the frozen random projections.
+    """
+
+    kind: str
+    n_blocks: int = 4
+    rank: int = 8
+    sides: int = 2
+    magnitude_refit: bool = False
+    vera_seed: int = 93
+
+    @property
+    def name(self) -> str:
+        if self.kind == "ether":
+            return f"ether_n{self.n_blocks}"
+        if self.kind == "etherplus":
+            s = "" if self.sides == 2 else "_1s"
+            return f"etherplus_n{self.n_blocks}{s}"
+        if self.kind == "oft":
+            mrf = "_mrf" if self.magnitude_refit else ""
+            return f"oft_n{self.n_blocks}{mrf}"
+        if self.kind == "naive":
+            return f"naive_n{self.n_blocks}"
+        if self.kind == "lora":
+            return f"lora_r{self.rank}"
+        if self.kind == "vera":
+            return f"vera_r{self.rank}"
+        return self.kind
+
+
+def parse_spec(name: str) -> MethodSpec:
+    """Inverse of ``MethodSpec.name`` (used by aot + tests)."""
+    if name in ("full", "none"):
+        return MethodSpec(kind=name)
+    base, _, tail = name.partition("_")
+    one_sided = tail.endswith("_1s")
+    mrf = tail.endswith("_mrf")
+    tail = tail.replace("_1s", "").replace("_mrf", "")
+    num = int(tail[1:])
+    if base in ("ether", "etherplus", "oft", "naive"):
+        return MethodSpec(
+            kind=base,
+            n_blocks=num,
+            sides=1 if one_sided else 2,
+            magnitude_refit=mrf,
+        )
+    if base in ("lora", "vera"):
+        return MethodSpec(kind=base, rank=num)
+    raise ValueError(f"unknown method name {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Layouts
+# ---------------------------------------------------------------------------
+
+# The six adapted matrices per transformer layer (paper: attention Q,K,V,
+# projection + both feed-forward matrices). (name, rows_key, cols_key) with
+# dims resolved against the model config.
+ADAPTED_MATRICES: Tuple[Tuple[str, str, str], ...] = (
+    ("wq", "d", "d"),
+    ("wk", "d", "d"),
+    ("wv", "d", "d"),
+    ("wo", "d", "d"),
+    ("w1", "d", "f"),
+    ("w2", "f", "d"),
+)
+
+
+def _dims(cfg, rows_key: str, cols_key: str) -> Tuple[int, int]:
+    d = {"d": cfg.d_model, "f": cfg.d_ff}
+    return d[rows_key], d[cols_key]
+
+
+def peft_layout(cfg, spec: MethodSpec) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Per-method trainable parameter layout, stacked over layers.
+
+    Returns a list of ``(name, shape)`` where shape[0] == n_layers. The
+    flat-vector order is exactly this list order (row-major within each
+    tensor) — mirrored by Rust in ``rust/src/runtime/artifact.rs``.
+    """
+    L = cfg.n_layers
+    out: List[Tuple[str, Tuple[int, ...]]] = []
+    n = spec.n_blocks
+    r = spec.rank
+    for name, rk, ck in ADAPTED_MATRICES:
+        d, f = _dims(cfg, rk, ck)
+        if spec.kind == "ether":
+            assert d % n == 0, (name, d, n)
+            out.append((f"{name}.u", (L, n, d // n)))
+        elif spec.kind == "etherplus":
+            assert d % n == 0 and f % n == 0
+            out.append((f"{name}.u", (L, n, d // n)))
+            out.append((f"{name}.v", (L, n, d // n)))
+            if spec.sides == 2:
+                out.append((f"{name}.ru", (L, n, f // n)))
+                out.append((f"{name}.rv", (L, n, f // n)))
+        elif spec.kind in ("oft", "naive"):
+            assert d % n == 0
+            out.append((f"{name}.r", (L, n, d // n, d // n)))
+            if spec.kind == "oft" and spec.magnitude_refit:
+                out.append((f"{name}.mag", (L, f)))
+        elif spec.kind == "lora":
+            out.append((f"{name}.a", (L, d, r)))
+            out.append((f"{name}.b", (L, r, f)))
+        elif spec.kind == "vera":
+            out.append((f"{name}.dv", (L, r)))
+            out.append((f"{name}.bv", (L, f)))
+        elif spec.kind == "full":
+            out.append((f"{name}.w", (L, d, f)))
+        elif spec.kind == "none":
+            pass
+        else:
+            raise ValueError(spec.kind)
+    return out
+
+
+def count_params(cfg, spec: MethodSpec) -> int:
+    """Trainable parameter count (exact paper formulas)."""
+    return sum(int(np.prod(shape)) for _, shape in peft_layout(cfg, spec))
+
+
+def reported_params(cfg, spec: MethodSpec) -> int:
+    """Parameter count under the paper's reporting convention.
+
+    App. C: OFT reports *storage* parameters of Q^B — half the trainable R
+    entries, because S = ½(R − Rᵀ) is determined by the strictly-upper
+    triangle. We follow the same convention (also for Naive).
+    """
+    c = count_params(cfg, spec)
+    if spec.kind in ("oft", "naive"):
+        mag = 0
+        if spec.kind == "oft" and spec.magnitude_refit:
+            L = cfg.n_layers
+            mag = sum(
+                _dims(cfg, rk, ck)[1] * L for _, rk, ck in ADAPTED_MATRICES
+            )
+        return (c - mag) // 2 + mag
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+
+def init_peft(cfg, spec: MethodSpec, seed: int, base: Dict[str, np.ndarray] | None = None
+              ) -> Dict[str, np.ndarray]:
+    """Initialize trainable parameters so the transform starts neutral.
+
+    * ether: u ~ N(0,1). H is a reflection for *any* u — distance to I is
+      exactly 2 per block at init, matching the paper's Fig. 3/4 premise.
+    * etherplus: u ~ N(0,1), v = u (H⁺ = I exactly; §3.3 "cancel each
+      other out ... in the limit where u = v").
+    * oft/naive: R = 0 → Q = I / N = I.
+    * lora: A ~ N(0, 1/√d), B = 0 → ΔW = 0.
+    * vera: λd = (0.1, 0, …), λb = 0 → ΔW = 0 (paper App. C.4).
+    * full: copy of the pretrained weights.
+    """
+    rng = np.random.default_rng(seed)
+    out: Dict[str, np.ndarray] = {}
+    for name, shape in peft_layout(cfg, spec):
+        mat, _, field = name.partition(".")
+        if spec.kind == "ether" and field == "u":
+            out[name] = rng.standard_normal(shape).astype(np.float32)
+        elif spec.kind == "etherplus":
+            if field in ("u", "ru"):
+                out[name] = rng.standard_normal(shape).astype(np.float32)
+            else:  # v mirrors u, rv mirrors ru → identity at init
+                src = name.replace(".v", ".u").replace(".rv", ".ru")
+                out[name] = out[src].copy()
+        elif spec.kind in ("oft", "naive"):
+            out[name] = np.zeros(shape, np.float32)
+        elif spec.kind == "lora":
+            if field == "a":
+                d = shape[1]
+                out[name] = (rng.standard_normal(shape) / math.sqrt(d)).astype(
+                    np.float32
+                )
+            else:
+                out[name] = np.zeros(shape, np.float32)
+        elif spec.kind == "vera":
+            if field == "dv":
+                x = np.zeros(shape, np.float32)
+                x[:, 0] = 0.1
+                out[name] = x
+            else:
+                out[name] = np.zeros(shape, np.float32)
+        elif spec.kind == "full":
+            assert base is not None, "full-FT init needs the base weights"
+            out[name] = base[mat].astype(np.float32).copy()
+    return out
+
+
+def vera_frozen(cfg, spec: MethodSpec):
+    """Shared frozen random projections (one pair for the whole network).
+
+    Kaiming-uniform scaled by the fan-in, generated from a fixed seed at
+    trace time — they live in the HLO as constants and never cross the
+    Rust boundary (the VeRA trick that makes its checkpoints tiny).
+    """
+    dmax = max(_dims(cfg, rk, ck)[0] for _, rk, ck in ADAPTED_MATRICES)
+    fmax = max(_dims(cfg, rk, ck)[1] for _, rk, ck in ADAPTED_MATRICES)
+    key = jax.random.PRNGKey(spec.vera_seed)
+    ka, kb = jax.random.split(key)
+    bound_a = math.sqrt(6.0 / dmax)
+    bound_b = math.sqrt(6.0 / spec.rank)
+    a = jax.random.uniform(ka, (dmax, spec.rank), jnp.float32, -bound_a, bound_a)
+    b = jax.random.uniform(kb, (spec.rank, fmax), jnp.float32, -bound_b, bound_b)
+    return a, b
+
+
+# ---------------------------------------------------------------------------
+# Application
+# ---------------------------------------------------------------------------
+
+
+def apply_transform(cfg, spec: MethodSpec, mat_name: str, w, layer_params: Dict,
+                    use_pallas: bool = True):
+    """Transform one weight matrix ``w (d, f)`` with this layer's params.
+
+    ``layer_params`` maps ``"<mat>.<field>"`` to the per-layer slice (no
+    leading L axis). ``use_pallas=False`` routes through the jnp oracles —
+    only tests use it; every artifact is lowered with the Pallas kernels.
+    """
+    if spec.kind == "none":
+        return w
+    p = lambda f: layer_params[f"{mat_name}.{f}"]
+    if spec.kind == "ether":
+        fn = ether_apply if use_pallas else kref.ether_apply_ref
+        return fn(p("u"), w)
+    if spec.kind == "etherplus":
+        left = ether_plus_left if use_pallas else kref.ether_plus_left_ref
+        right = ether_plus_right if use_pallas else kref.ether_plus_right_ref
+        out = left(p("u"), p("v"), w)
+        if spec.sides == 2:
+            out = right(out, p("ru"), p("rv"))
+        return out
+    if spec.kind in ("oft", "naive"):
+        r = p("r")
+        if spec.kind == "oft":
+            q = linalg.cayley(r)
+        else:
+            k = r.shape[-1]
+            q = jnp.eye(k, dtype=jnp.float32)[None] + r
+        fn = bdmm if use_pallas else kref.bdmm_ref
+        out = fn(q.astype(w.dtype), w)
+        if spec.kind == "oft" and spec.magnitude_refit:
+            out = out * (1.0 + p("mag"))[None, :]
+        return out
+    if spec.kind == "lora":
+        return w + p("a") @ p("b")
+    if spec.kind == "vera":
+        d, f = w.shape
+        a, b = vera_frozen(cfg, spec)
+        delta = ((a[:d] * p("dv")[None, :]) @ b[:, :f]) * p("bv")[None, :]
+        return w + delta
+    if spec.kind == "full":
+        return p("w")
+    raise ValueError(spec.kind)
+
+
+def weight_decay(spec: MethodSpec) -> float:
+    """Per-method decoupled weight decay (paper App. C.4: 0 for ETHER —
+    the in-kernel normalization makes decay on u meaningless)."""
+    if spec.kind in ("ether", "etherplus", "none"):
+        return 0.0
+    return 0.01
+
+
+STANDARD_SPECS: Sequence[MethodSpec] = (
+    MethodSpec("ether", n_blocks=4),
+    MethodSpec("etherplus", n_blocks=4),
+    MethodSpec("oft", n_blocks=4),
+    MethodSpec("naive", n_blocks=4),
+    MethodSpec("lora", rank=8),
+    MethodSpec("vera", rank=16),
+)

@@ -1,0 +1,80 @@
+"""AOT registry / manifest consistency: the artifact catalogue must agree
+with the model + peft layouts the Rust side will assume."""
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile import peft as P
+
+
+def test_registry_names_unique_and_well_formed():
+    arts = aot.build_registry()
+    names = [a["name"] for a in arts]
+    assert len(names) == len(set(names))
+    for a in arts:
+        assert a["specs"], a["name"]
+        assert all(ch.isalnum() or ch == "_" for ch in a["name"]), a["name"]
+
+
+def test_registry_input_sizes_match_layouts():
+    arts = aot.build_registry()
+    by_name = {a["name"]: a for a in arts}
+    for cfg_name in ("tiny", "small"):
+        cfg = M.CONFIGS[cfg_name]
+        nb = M.layout_size(M.base_layout(cfg))
+        train = by_name.get(f"lm_{cfg_name}_ether_n4_train")
+        assert train is not None
+        shapes = [tuple(s.shape) for s in train["specs"]]
+        assert shapes[0] == (nb,)
+        k = P.count_params(cfg, P.parse_spec("ether_n4"))
+        assert shapes[1] == (k,) == shapes[2] == shapes[3]
+        assert shapes[4] == (cfg.batch, cfg.seq)
+
+
+def test_every_train_artifact_has_eval_logits_merge():
+    arts = aot.build_registry()
+    names = {a["name"] for a in arts}
+    for a in arts:
+        if a["kind"] == "train_step":
+            stem = a["name"].rsplit("_", 1)[0]
+            for suffix in ("eval", "logits", "merge"):
+                assert f"{stem}_{suffix}" in names, f"{stem}_{suffix} missing"
+
+
+def test_micro_artifacts_cover_block_sweep():
+    arts = aot.build_registry()
+    names = {a["name"] for a in arts}
+    d = aot.MICRO_DIM
+    for n in (1, 4, 32):
+        assert f"k_ether_d{d}_n{n}" in names
+        assert f"k_etherplus_d{d}_n{n}" in names
+    for n in (4, 32, 256):
+        assert f"k_bdmm_d{d}_n{n}" in names
+
+
+def test_init_dumps_are_deterministic():
+    cfg = M.TINY
+    a = M.flatten_np(M.init_base(cfg, aot.SEED_BASE), M.base_layout(cfg))
+    b = M.flatten_np(M.init_base(cfg, aot.SEED_BASE), M.base_layout(cfg))
+    np.testing.assert_array_equal(a, b)
+    spec = P.parse_spec("etherplus_n4")
+    pa = P.init_peft(cfg, spec, aot.SEED_PEFT)
+    pb = P.init_peft(cfg, spec, aot.SEED_PEFT)
+    for k in pa:
+        np.testing.assert_array_equal(pa[k], pb[k])
+
+
+@pytest.mark.parametrize("cfg_name", ["tiny", "small"])
+def test_block_counts_divide_dimensions(cfg_name):
+    """Every method in the registry must tile its config's dims."""
+    cfg = M.CONFIGS[cfg_name]
+    methods = (
+        aot.TINY_METHODS + aot.TINY_ABLATIONS + aot.TINY_CLS
+        if cfg_name == "tiny"
+        else aot.SMALL_METHODS
+    )
+    for name in methods:
+        spec = P.parse_spec(name)
+        P.peft_layout(cfg, spec)  # raises AssertionError if incompatible

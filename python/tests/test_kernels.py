@@ -1,0 +1,225 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Covers forwards (assert_allclose vs ref.py), the custom VJPs (vs jnp
+autodiff of the references), dtype coverage (f32 + bf16), and
+hypothesis-driven shape sweeps over (d, f, n | n divides d).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import bdmm, ether_apply, ether_plus_left, ether_plus_right
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def keys(seed, k):
+    return jax.random.split(jax.random.PRNGKey(seed), k)
+
+
+# ---------------------------------------------------------------------------
+# Forward correctness, fixed shapes
+# ---------------------------------------------------------------------------
+
+SHAPES = [(8, 8, 1), (32, 16, 4), (64, 128, 4), (64, 64, 16), (128, 32, 8)]
+
+
+@pytest.mark.parametrize("d,f,n", SHAPES)
+def test_ether_forward_matches_ref(d, f, n):
+    ku, kw = keys(0, 2)
+    u, w = rand(ku, (n, d // n)), rand(kw, (d, f))
+    assert_allclose(ether_apply(u, w), ref.ether_apply_ref(u, w), atol=1e-5)
+
+
+@pytest.mark.parametrize("d,f,n", SHAPES)
+def test_ether_plus_left_matches_ref(d, f, n):
+    ku, kv, kw = keys(1, 3)
+    u, v, w = rand(ku, (n, d // n)), rand(kv, (n, d // n)), rand(kw, (d, f))
+    assert_allclose(ether_plus_left(u, v, w), ref.ether_plus_left_ref(u, v, w), atol=1e-5)
+
+
+@pytest.mark.parametrize("d,f,n", [(8, 8, 1), (16, 32, 4), (64, 128, 4), (32, 64, 16)])
+def test_ether_plus_right_matches_ref(d, f, n):
+    ku, kv, kw = keys(2, 3)
+    u, v, w = rand(ku, (n, f // n)), rand(kv, (n, f // n)), rand(kw, (d, f))
+    assert_allclose(ether_plus_right(w, u, v), ref.ether_plus_right_ref(w, u, v), atol=1e-5)
+
+
+@pytest.mark.parametrize("d,f,n", SHAPES)
+def test_bdmm_matches_ref(d, f, n):
+    kq, kw = keys(3, 2)
+    q, w = rand(kq, (n, d // n, d // n)), rand(kw, (d, f))
+    assert_allclose(bdmm(q, w), ref.bdmm_ref(q, w), atol=1e-4)
+
+
+def test_ether_forward_matches_dense_householder():
+    """Kernel output equals the materialized block-diag H^B times W."""
+    ku, kw = keys(4, 2)
+    u, w = rand(ku, (4, 16)), rand(kw, (64, 32))
+    h = ref.householder_dense(u)
+    assert_allclose(ether_apply(u, w), h @ w, atol=1e-5)
+
+
+def test_ether_plus_identity_when_u_equals_v():
+    """§3.3: u = v cancels the transform exactly (our init)."""
+    ku, kw = keys(5, 2)
+    u, w = rand(ku, (4, 16)), rand(kw, (64, 32))
+    assert_allclose(ether_plus_left(u, u, w), w, atol=1e-6)
+    ru = rand(ku, (2, 16))
+    assert_allclose(ether_plus_right(w, ru, ru), w, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# bf16 (the paper trains Llama-2 in bf16; interpret-mode parity check)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kernel,reffn,nargs", [
+    (ether_apply, ref.ether_apply_ref, 1),
+    (ether_plus_left, ref.ether_plus_left_ref, 2),
+])
+def test_bf16_forward(kernel, reffn, nargs):
+    ks = keys(6, nargs + 1)
+    vecs = [rand(k, (4, 16), jnp.bfloat16) for k in ks[:nargs]]
+    w = rand(ks[-1], (64, 32), jnp.bfloat16)
+    out = kernel(*vecs, w)
+    assert out.dtype == jnp.bfloat16
+    want = reffn(*vecs, w).astype(jnp.float32)
+    assert_allclose(out.astype(jnp.float32), want, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# Custom VJPs vs autodiff of the reference
+# ---------------------------------------------------------------------------
+
+
+def grads_close(fn_a, fn_b, args, atol=2e-4):
+    for i in range(len(args)):
+        ga = jax.grad(lambda *a: jnp.sum(jnp.sin(fn_a(*a))), argnums=i)(*args)
+        gb = jax.grad(lambda *a: jnp.sum(jnp.sin(fn_b(*a))), argnums=i)(*args)
+        assert_allclose(np.asarray(ga), np.asarray(gb), atol=atol,
+                        err_msg=f"grad argnum {i}")
+
+
+@pytest.mark.parametrize("d,f,n", [(16, 8, 2), (64, 32, 4), (32, 32, 8)])
+def test_ether_vjp(d, f, n):
+    ku, kw = keys(7, 2)
+    args = (rand(ku, (n, d // n)), rand(kw, (d, f)))
+    grads_close(ether_apply, ref.ether_apply_ref, args)
+
+
+@pytest.mark.parametrize("d,f,n", [(16, 8, 2), (64, 32, 4)])
+def test_ether_plus_left_vjp(d, f, n):
+    ku, kv, kw = keys(8, 3)
+    args = (rand(ku, (n, d // n)), rand(kv, (n, d // n)), rand(kw, (d, f)))
+    grads_close(ether_plus_left, ref.ether_plus_left_ref, args)
+
+
+@pytest.mark.parametrize("d,f,n", [(8, 16, 2), (32, 64, 4)])
+def test_ether_plus_right_vjp(d, f, n):
+    ku, kv, kw = keys(9, 3)
+    args = (rand(kw, (d, f)), rand(ku, (n, f // n)), rand(kv, (n, f // n)))
+    grads_close(ether_plus_right, ref.ether_plus_right_ref, args)
+
+
+@pytest.mark.parametrize("d,f,n", [(16, 8, 2), (64, 32, 4)])
+def test_bdmm_vjp(d, f, n):
+    kq, kw = keys(10, 2)
+    args = (rand(kq, (n, d // n, d // n)), rand(kw, (d, f)))
+    grads_close(bdmm, ref.bdmm_ref, args)
+
+
+def test_ether_vjp_tiny_norm():
+    """The guarded normalization chain must stay exact for tiny ‖u‖."""
+    kw, = keys(11, 1)
+    u = jnp.full((2, 8), 1e-4, jnp.float32)
+    w = rand(kw, (16, 8))
+    grads_close(ether_apply, ref.ether_apply_ref, (u, w), atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis shape sweep
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def dfn(draw):
+    n = draw(st.sampled_from([1, 2, 4, 8]))
+    db = draw(st.sampled_from([2, 4, 8, 16]))
+    f = draw(st.sampled_from([2, 4, 8, 16, 24, 48]))
+    return n * db, f, n
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=dfn(), seed=st.integers(0, 2**16))
+def test_ether_forward_hypothesis(shape, seed):
+    d, f, n = shape
+    ku, kw = keys(seed, 2)
+    u, w = rand(ku, (n, d // n)), rand(kw, (d, f), scale=3.0)
+    assert_allclose(ether_apply(u, w), ref.ether_apply_ref(u, w), atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=dfn(), seed=st.integers(0, 2**16))
+def test_ether_plus_left_hypothesis(shape, seed):
+    d, f, n = shape
+    ku, kv, kw = keys(seed, 3)
+    u, v, w = rand(ku, (n, d // n)), rand(kv, (n, d // n)), rand(kw, (d, f), scale=3.0)
+    assert_allclose(ether_plus_left(u, v, w), ref.ether_plus_left_ref(u, v, w), atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=dfn(), seed=st.integers(0, 2**16))
+def test_bdmm_hypothesis(shape, seed):
+    d, f, n = shape
+    kq, kw = keys(seed, 2)
+    q, w = rand(kq, (n, d // n, d // n)), rand(kw, (d, f))
+    assert_allclose(bdmm(q, w), ref.bdmm_ref(q, w), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Paper invariants (Eq. 2 and §3.3 bound) at the kernel level
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), n=st.sampled_from([1, 2, 4]))
+def test_householder_distance_exactly_two(seed, n):
+    """‖H − I‖_F = 2 per block → ‖H^B − I‖_F = 2√n (paper Eq. 2)."""
+    (ku,) = keys(seed, 1)
+    u = rand(ku, (n, 32 // n))
+    h = ref.householder_dense(u)
+    dist = jnp.linalg.norm(h - jnp.eye(32))
+    assert_allclose(dist, 2.0 * np.sqrt(n), atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), n=st.sampled_from([1, 2, 4]))
+def test_ether_plus_distance_bounded(seed, n):
+    """‖H⁺ − I‖_F ≤ 2 per block (paper §3.3 triangle inequality)."""
+    ku, kv = keys(seed, 2)
+    u, v = rand(ku, (n, 32 // n)), rand(kv, (n, 32 // n))
+    h = ref.ether_plus_dense(u, v)
+    dist = jnp.linalg.norm(h - jnp.eye(32))
+    assert dist <= 2.0 * np.sqrt(n) + 1e-4
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_householder_orthogonal_det_minus_one(seed):
+    """H Hᵀ = I and det H = −1 — the determinant OFT's Cayley map cannot
+    reach (paper §3.2)."""
+    (ku,) = keys(seed, 1)
+    u = rand(ku, (1, 16))
+    h = ref.householder_dense(u)
+    assert_allclose(h @ h.T, jnp.eye(16), atol=1e-5)
+    assert_allclose(jnp.linalg.det(h), -1.0, atol=1e-4)

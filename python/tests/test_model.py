@@ -1,0 +1,180 @@
+"""Layer-2 model tests: shapes, losses, train steps, merge semantics, and
+the flat-vector plumbing that the Rust runtime depends on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+from compile import peft as P
+
+CFG = M.TINY
+RNG = np.random.default_rng(0)
+
+
+def batch(cfg=CFG):
+    tok = RNG.integers(0, 256, (cfg.batch, cfg.seq)).astype(np.int32)
+    tgt = np.roll(tok, -1, axis=1).astype(np.int32)
+    mask = np.ones((cfg.batch, cfg.seq), np.float32)
+    mask[:, -1] = 0.0
+    return jnp.asarray(tok), jnp.asarray(tgt), jnp.asarray(mask)
+
+
+def flat_base(cfg=CFG, seed=1234):
+    return jnp.asarray(M.flatten_np(M.init_base(cfg, seed), M.base_layout(cfg)))
+
+
+def flat_peft(spec, cfg=CFG, seed=4321):
+    base = M.init_base(cfg, seed)
+    pp = P.init_peft(cfg, spec, seed, base=base)
+    return jnp.asarray(M.flatten_np(pp, P.peft_layout(cfg, spec)))
+
+
+def test_flatten_unflatten_roundtrip():
+    layout = M.base_layout(CFG)
+    base = M.init_base(CFG, 0)
+    vec = M.flatten_np(base, layout)
+    back = M.unflatten(jnp.asarray(vec), layout)
+    for name, _ in layout:
+        assert_allclose(np.asarray(back[name]), base[name], err_msg=name)
+
+
+def test_forward_hidden_shape_and_finite():
+    tok, _, _ = batch()
+    base = M.unflatten(flat_base(), M.base_layout(CFG))
+    h = M.forward_hidden(CFG, base, P.MethodSpec("none"), {}, tok)
+    assert h.shape == (CFG.batch, CFG.seq, CFG.d_model)
+    assert bool(jnp.all(jnp.isfinite(h)))
+
+
+def test_initial_loss_near_uniform():
+    """Untrained model ≈ uniform over the vocab: loss ≈ ln V."""
+    tok, tgt, mask = batch()
+    base = M.unflatten(flat_base(), M.base_layout(CFG))
+    _, mean = M.lm_nll(CFG, base, P.MethodSpec("none"), {}, tok, tgt, mask)
+    assert abs(float(mean) - np.log(CFG.vocab)) < 0.5
+
+
+@pytest.mark.parametrize("name", ["ether_n4", "etherplus_n4", "oft_n4", "lora_r8"])
+def test_train_step_decreases_loss(name):
+    """A few steps on a fixed batch must reduce the loss (core signal).
+
+    ETHER-family methods are trained with the paper's characteristically
+    high learning rates (§4: "usage of high learning rates, as the risk
+    of divergence is minimized").
+    """
+    spec = P.parse_spec(name)
+    lr = 5e-2 if spec.kind in ("ether", "etherplus") else 5e-3
+    tok, tgt, mask = batch()
+    bvec = flat_base()
+    pvec = flat_peft(spec)
+    k = pvec.size
+    step = jax.jit(M.make_train_step(CFG, spec))
+    m = jnp.zeros(k)
+    v = jnp.zeros(k)
+    losses = []
+    for i in range(12):
+        pvec, m, v, loss = step(bvec, pvec, m, v, tok, tgt, mask,
+                                jnp.float32(lr), jnp.float32(i + 1))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.02, losses
+
+
+def test_pretrain_step_decreases_loss():
+    tok, tgt, mask = batch()
+    bvec = flat_base()
+    n = bvec.size
+    step = jax.jit(M.make_pretrain_step(CFG))
+    m, v = jnp.zeros(n), jnp.zeros(n)
+    first = None
+    for i in range(6):
+        bvec, m, v, loss = step(bvec, m, v, tok, tgt, mask,
+                                jnp.float32(1e-3), jnp.float32(i + 1))
+        first = first if first is not None else float(loss)
+    assert float(loss) < first - 0.05
+
+
+@pytest.mark.parametrize("name", ["ether_n4", "etherplus_n4", "oft_n4", "lora_r8",
+                                  "vera_r16", "naive_n4"])
+def test_merge_equals_transformed_forward(name):
+    """forward(base, peft) ≡ forward(merge(base, peft), none) — the
+    zero-inference-latency serving claim (§3.1)."""
+    spec = P.parse_spec(name)
+    tok, tgt, mask = batch()
+    bvec = flat_base()
+    base = M.init_base(CFG, 1234)
+    pp = P.init_peft(CFG, spec, 99, base=base)
+    # perturb so the transform is non-trivial
+    pp = {k: v + 0.05 * RNG.standard_normal(v.shape).astype(np.float32)
+          for k, v in pp.items()}
+    pvec = jnp.asarray(M.flatten_np(pp, P.peft_layout(CFG, spec)))
+
+    (merged,) = jax.jit(M.make_merge(CFG, spec))(bvec, pvec)
+    (nll_adapter,) = jax.jit(M.make_eval_nll(CFG, spec))(bvec, pvec, tok, tgt, mask)
+    (nll_merged,) = jax.jit(M.make_eval_nll(CFG, P.MethodSpec("none")))(
+        merged, jnp.zeros((1,), jnp.float32), tok, tgt, mask)
+    assert_allclose(np.asarray(nll_adapter), np.asarray(nll_merged),
+                    rtol=2e-4, atol=2e-3)
+
+
+def test_logits_last_matches_full_logits():
+    spec = P.MethodSpec("none")
+    tok, _, _ = batch()
+    lengths = jnp.asarray(
+        RNG.integers(4, CFG.seq + 1, (CFG.batch,)).astype(np.int32))
+    bvec = flat_base()
+    (out,) = jax.jit(M.make_logits_last(CFG, spec))(
+        bvec, jnp.zeros((1,), jnp.float32), tok, lengths)
+    base = M.unflatten(bvec, M.base_layout(CFG))
+    full = M.lm_logits(CFG, base, spec, {}, tok)
+    want = np.stack([np.asarray(full[b, int(lengths[b]) - 1]) for b in range(CFG.batch)])
+    assert_allclose(np.asarray(out), want, atol=1e-4)
+
+
+def test_cls_train_step_learns_constant_label():
+    spec = P.parse_spec("ether_n4")
+    bvec = flat_base()
+    base = M.init_base(CFG, 1234)
+    pp = P.init_peft(CFG, spec, 5, base=base)
+    head = M.init_head(CFG, 1234)
+    tlayout = P.peft_layout(CFG, spec) + M.head_layout(CFG)
+    merged = dict(pp)
+    merged.update(head)
+    t = jnp.asarray(M.flatten_np(merged, tlayout))
+    tok, _, _ = batch()
+    lengths = jnp.full((CFG.batch,), CFG.seq, jnp.int32)
+    labels = jnp.zeros((CFG.batch,), jnp.int32)
+    step = jax.jit(M.make_cls_train_step(CFG, spec))
+    m, v = jnp.zeros(t.size), jnp.zeros(t.size)
+    l0 = None
+    for i in range(10):
+        t, m, v, loss = step(bvec, t, m, v, tok, lengths, labels,
+                             jnp.float32(5e-3), jnp.float32(i + 1))
+        l0 = l0 if l0 is not None else float(loss)
+    assert float(loss) < l0 - 0.2
+    (logits,) = jax.jit(M.make_cls_eval(CFG, spec))(bvec, t, tok, lengths)
+    assert logits.shape == (CFG.batch, CFG.n_classes)
+    assert int(jnp.sum(jnp.argmax(logits, -1) == 0)) >= CFG.batch - 2
+
+
+def test_adamw_matches_reference_numerics():
+    """In-graph AdamW vs a numpy re-implementation."""
+    rng = np.random.default_rng(3)
+    t = rng.standard_normal(64).astype(np.float32)
+    g = rng.standard_normal(64).astype(np.float32)
+    m = np.zeros(64, np.float32)
+    v = np.zeros(64, np.float32)
+    lr, wd, b1, b2, eps = 1e-2, 0.01, 0.9, 0.999, 1e-8
+    tj, mj, vj = M.adamw(jnp.asarray(t), jnp.asarray(g), jnp.asarray(m),
+                         jnp.asarray(v), lr, 1.0, wd)
+    m2 = b1 * m + (1 - b1) * g
+    v2 = b2 * v + (1 - b2) * g * g
+    mh = m2 / (1 - b1)
+    vh = v2 / (1 - b2)
+    t2 = t - lr * (mh / (np.sqrt(vh) + eps) + wd * t)
+    assert_allclose(np.asarray(tj), t2, atol=1e-6)
+    assert_allclose(np.asarray(mj), m2, atol=1e-7)
+    assert_allclose(np.asarray(vj), v2, atol=1e-7)

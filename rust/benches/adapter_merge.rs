@@ -1,0 +1,49 @@
+//! Bench — adapter merge cost (the serving cache-miss penalty): HLO
+//! merge artifact vs host merge, per method. Backs the §Perf analysis of
+//! the coordinator's merged-weight LRU cache.
+
+use ether::peft::apply::{merge_into_base, peft_layout_for};
+use ether::peft::MethodSpec;
+use ether::runtime::{HostTensor, PjrtEngine};
+use ether::util::benchkit::Bench;
+use ether::util::rng::Rng;
+
+fn main() {
+    let dir = ether::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("[skip] artifacts not built — run `make artifacts`");
+        return;
+    }
+    let engine = PjrtEngine::new(&dir).expect("engine");
+    let cfg = engine.manifest.config("tiny").unwrap().clone();
+    let base = engine.manifest.load_init("tiny_base").unwrap();
+    let mut rng = Rng::new(5);
+
+    let mut bench = Bench::new("adapter merge (tiny base)");
+    for method in ["ether_n4", "etherplus_n4", "oft_n4", "lora_r8"] {
+        let exec = engine.load(&format!("lm_tiny_{method}_merge")).unwrap();
+        let playout = engine.manifest.peft_layout(method, "tiny").unwrap().clone();
+        let peft: Vec<f32> = rng.normal_vec(playout.total, 0.2);
+        let base_t = HostTensor::vec_f32(base.clone());
+        let peft_t = HostTensor::vec_f32(peft.clone());
+        bench.case(&format!("{method} (HLO artifact)"), None, || {
+            let out = exec.run(&[base_t.clone(), peft_t.clone()]).unwrap();
+            ether::util::benchkit::black_box(out);
+        });
+        let spec = MethodSpec::parse(method).unwrap();
+        let host_layout = peft_layout_for(cfg.dims(), &spec);
+        bench.case(&format!("{method} (host)"), None, || {
+            let merged = merge_into_base(
+                cfg.dims(),
+                &spec,
+                &base,
+                &cfg.base_layout,
+                &peft,
+                &host_layout,
+            )
+            .unwrap();
+            ether::util::benchkit::black_box(merged);
+        });
+    }
+    bench.report();
+}

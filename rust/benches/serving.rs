@@ -1,0 +1,104 @@
+//! Bench — serving-path costs: batch assembly, routing, and end-to-end
+//! request throughput through the coordinator with a mock backend
+//! (isolates L3 overhead from model compute) and with PJRT decode.
+
+use std::time::{Duration, Instant};
+
+use ether::coordinator::{server::GenBackend, AdapterRegistry, Batcher, BatcherCfg, Request, Server};
+use ether::util::benchkit::Bench;
+
+struct NoopBackend;
+
+impl GenBackend for NoopBackend {
+    fn generate(
+        &mut self,
+        _adapter: &ether::coordinator::registry::AdapterEntry,
+        prompts: &[Vec<i32>],
+        _max_new: usize,
+    ) -> anyhow::Result<Vec<Vec<i32>>> {
+        Ok(prompts.to_vec())
+    }
+}
+
+fn main() {
+    let mut bench = Bench::new("coordinator overhead (mock backend)");
+
+    // Pure batcher throughput.
+    bench.case("batcher push+pop x1000 (8 adapters)", Some(1000.0), || {
+        let mut b = Batcher::new(BatcherCfg { max_batch: 8, max_wait: Duration::ZERO });
+        let t = Instant::now();
+        for i in 0..1000u64 {
+            b.push(Request {
+                id: i,
+                adapter: format!("a{}", i % 8),
+                prompt: vec![1, 2, 3],
+                max_new: 4,
+                enqueued: t,
+            });
+        }
+        let mut n = 0;
+        while let Some((_, batch)) = b.pop_ready(t + Duration::from_millis(1)) {
+            n += batch.len();
+        }
+        assert_eq!(n, 1000);
+    });
+
+    // Full pump loop with a no-op model: measures routing + accounting.
+    bench.case("server pump 256 reqs (L3 only)", Some(256.0), || {
+        let mut registry = AdapterRegistry::new();
+        for a in 0..8 {
+            registry.register(&format!("a{a}"), "ether_n4", "tiny", vec![0.0; 16]);
+        }
+        let mut server = Server::new(
+            registry,
+            BatcherCfg { max_batch: 8, max_wait: Duration::ZERO },
+        );
+        let t = Instant::now();
+        for i in 0..256u64 {
+            server.batcher.push(Request {
+                id: i,
+                adapter: format!("a{}", i % 8),
+                prompt: vec![1, 2, 3, 4],
+                max_new: 4,
+                enqueued: t,
+            });
+        }
+        let mut served = 0;
+        server
+            .pump(&mut NoopBackend, t + Duration::from_millis(1), |_| served += 1)
+            .unwrap();
+        assert_eq!(served, 256);
+    });
+    bench.report();
+
+    // End-to-end with the real model, if artifacts exist.
+    let dir = ether::artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        let engine = ether::runtime::PjrtEngine::new(&dir).expect("engine");
+        let init = engine.manifest.load_init("tiny_ether_n4_peft").unwrap();
+        let mut bench = Bench::new("serving end-to-end (tiny, PJRT decode)");
+        let mut registry = AdapterRegistry::new();
+        registry.register("u0", "ether_n4", "tiny", init);
+        let mut backend = ether::coordinator::server::PjrtBackend::new(&engine, "tiny", 2);
+        let mut server = Server::new(
+            registry,
+            BatcherCfg { max_batch: 8, max_wait: Duration::ZERO },
+        );
+        bench.case("8-req batch, 6 new tokens", Some(8.0), || {
+            let t = Instant::now();
+            for i in 0..8u64 {
+                server.batcher.push(Request {
+                    id: i,
+                    adapter: "u0".into(),
+                    prompt: vec![ether::data::BOS],
+                    max_new: 6,
+                    enqueued: t,
+                });
+            }
+            server
+                .pump(&mut backend, t + Duration::from_millis(1), |_| {})
+                .unwrap();
+        });
+        bench.report();
+    }
+}

@@ -1,0 +1,60 @@
+//! Bench — paper Table 1: wallclock of the block-parallel transform
+//! kernels vs block count n, through the compiled kernel artifacts
+//! (`k_ether_*`, `k_etherplus_*`, `k_bdmm_*` at d = f = 1024).
+//!
+//! The paper's observable (TFLOPs drop with n for multiplicative
+//! methods) shows up here as measured time: bdmm shrinks ~1/n; ETHER's
+//! rank-1 transform is already O(d·f) at any n.
+
+use ether::runtime::{HostTensor, PjrtEngine};
+use ether::util::benchkit::Bench;
+use ether::util::rng::Rng;
+
+fn main() {
+    let dir = ether::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("[skip] artifacts not built — run `make artifacts`");
+        return;
+    }
+    let engine = PjrtEngine::new(&dir).expect("engine");
+    let d = engine.manifest.micro_dim;
+    let mut rng = Rng::new(0);
+    let w = HostTensor::mat_f32(d, d, rng.normal_vec(d * d, 0.05));
+
+    let mut bench = Bench::new(&format!("table1: transform apply wallclock (d=f={d})"));
+    for (kind, ns) in [("k_ether", vec![1, 4, 32]), ("k_etherplus", vec![1, 4, 32]), ("k_bdmm", vec![4, 32, 256])] {
+        for n in ns {
+            let exec = match engine.load(&format!("{kind}_d{d}_n{n}")) {
+                Ok(e) => e,
+                Err(_) => continue,
+            };
+            let args: Vec<HostTensor> = if kind == "k_bdmm" {
+                vec![
+                    HostTensor::F32 {
+                        shape: vec![n, d / n, d / n],
+                        data: rng.normal_vec(n * (d / n) * (d / n), 0.1),
+                    },
+                    w.clone(),
+                ]
+            } else if kind == "k_etherplus" {
+                vec![
+                    HostTensor::mat_f32(n, d / n, rng.normal_vec(d, 1.0)),
+                    HostTensor::mat_f32(n, d / n, rng.normal_vec(d, 1.0)),
+                    w.clone(),
+                ]
+            } else {
+                vec![HostTensor::mat_f32(n, d / n, rng.normal_vec(d, 1.0)), w.clone()]
+            };
+            let flops = match kind {
+                "k_bdmm" => 2.0 * (d / n) as f64 * (d * d) as f64,
+                "k_etherplus" => 8.0 * (d * d) as f64,
+                _ => 4.0 * (d * d) as f64,
+            };
+            bench.case(&format!("{kind} n={n}"), Some(flops), || {
+                let out = exec.run(&args).expect("exec");
+                ether::util::benchkit::black_box(out);
+            });
+        }
+    }
+    bench.report();
+}

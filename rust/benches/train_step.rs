@@ -1,0 +1,54 @@
+//! Bench — end-to-end train-step latency per method (backs Tables 4/5's
+//! cost column and the §Perf train-loop numbers). Compares the
+//! host-literal path against the device-resident-base path to quantify
+//! the L3 optimization.
+
+use ether::data::corpus::Corpus;
+use ether::runtime::{HostTensor, PjrtEngine};
+use ether::train::LmTrainer;
+use ether::util::benchkit::Bench;
+
+fn main() {
+    let dir = ether::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("[skip] artifacts not built — run `make artifacts`");
+        return;
+    }
+    let engine = PjrtEngine::new(&dir).expect("engine");
+    let cfg = "tiny";
+    let c = engine.manifest.config(cfg).unwrap().clone();
+    let corpus = Corpus::new(3);
+    let batch = corpus.lm_batch(c.batch, c.seq, 0);
+
+    let mut bench = Bench::new("train step latency (tiny)");
+    for method in ["ether_n4", "etherplus_n4", "oft_n4", "naive_n4", "lora_r8", "vera_r16"] {
+        let mut trainer = LmTrainer::new(&engine, cfg, method, None).unwrap();
+        bench.case(&format!("{method} (device-resident base)"), None, || {
+            trainer.step(&batch, 1e-3).unwrap();
+        });
+    }
+
+    // Host-literal path (uploads the base every step) for comparison.
+    let exec = engine.load("lm_tiny_ether_n4_train").unwrap();
+    let base = HostTensor::vec_f32(engine.manifest.load_init("tiny_base").unwrap());
+    let peft = engine.manifest.load_init("tiny_ether_n4_peft").unwrap();
+    let k = peft.len();
+    let (tok, tgt, mask) = batch.to_tensors();
+    bench.case("ether_n4 (host literals, re-upload base)", None, || {
+        let out = exec
+            .run(&[
+                base.clone(),
+                HostTensor::vec_f32(peft.clone()),
+                HostTensor::vec_f32(vec![0.0; k]),
+                HostTensor::vec_f32(vec![0.0; k]),
+                tok.clone(),
+                tgt.clone(),
+                mask.clone(),
+                HostTensor::scalar_f32(1e-3),
+                HostTensor::scalar_f32(1.0),
+            ])
+            .unwrap();
+        ether::util::benchkit::black_box(out);
+    });
+    bench.report();
+}

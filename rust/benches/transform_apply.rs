@@ -1,0 +1,57 @@
+//! Bench — host-side transform application (the coordinator's merge
+//! primitives): ETHER / ETHER+ / OFT-Cayley / Naive / LoRA per (d, n).
+//! Backs the paper's complexity table (§3.4): ETHER O(d·f) flat in n,
+//! bdmm O(d²f/n).
+
+use ether::peft::transforms as tf;
+use ether::tensor::Mat;
+use ether::util::benchkit::Bench;
+use ether::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let d = 512usize;
+    let w = Mat::randn(d, d, 0.05, &mut rng);
+    let mut bench = Bench::new(&format!("host transform apply (d=f={d})"));
+
+    for n in [1usize, 4, 32] {
+        let u = rng.normal_vec(d, 1.0);
+        bench.case(&format!("ether n={n}"), Some(4.0 * (d * d) as f64), || {
+            ether::util::benchkit::black_box(tf::ether_apply(&u, n, &w));
+        });
+    }
+    for n in [1usize, 4, 32] {
+        let u = rng.normal_vec(d, 1.0);
+        let v = rng.normal_vec(d, 1.0);
+        bench.case(&format!("ether+ left n={n}"), Some(8.0 * (d * d) as f64), || {
+            ether::util::benchkit::black_box(tf::ether_plus_left(&u, &v, n, &w));
+        });
+    }
+    for n in [4usize, 32] {
+        let k = d / n;
+        let r = rng.normal_vec(n * k * k, 0.1);
+        bench.case(
+            &format!("oft cayley+bdmm n={n}"),
+            Some(2.0 * k as f64 * (d * d) as f64),
+            || {
+                let q = tf::cayley_blocks(&r, n, k);
+                ether::util::benchkit::black_box(tf::bdmm(&q, &w));
+            },
+        );
+        bench.case(
+            &format!("naive bdmm n={n}"),
+            Some(2.0 * k as f64 * (d * d) as f64),
+            || {
+                let q = tf::naive_blocks(&r, n, k);
+                ether::util::benchkit::black_box(tf::bdmm(&q, &w));
+            },
+        );
+    }
+    let r8 = 8usize;
+    let a = Mat::randn(d, r8, 0.1, &mut rng);
+    let b = Mat::randn(r8, d, 0.1, &mut rng);
+    bench.case("lora r=8 (A@B + W)", Some(2.0 * (r8 * d * d) as f64), || {
+        ether::util::benchkit::black_box(tf::lora_apply(&a, &b, &w));
+    });
+    bench.report();
+}

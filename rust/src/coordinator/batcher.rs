@@ -1,0 +1,157 @@
+//! Dynamic batching: group requests per adapter, release a batch when it
+//! is full or its oldest request exceeds the wait deadline.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::time::{Duration, Instant};
+
+/// A generation request as it flows through the coordinator.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub adapter: String,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    pub enqueued: Instant,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherCfg {
+    /// Maximum requests per batch (bounded by the artifact batch dim).
+    pub max_batch: usize,
+    /// Maximum time the oldest request may wait before forced release.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherCfg {
+    fn default() -> Self {
+        BatcherCfg { max_batch: 8, max_wait: Duration::from_millis(20) }
+    }
+}
+
+/// Per-adapter FIFO queues with size/deadline release.
+pub struct Batcher {
+    pub cfg: BatcherCfg,
+    queues: BTreeMap<String, VecDeque<Request>>,
+    pending: usize,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherCfg) -> Batcher {
+        Batcher { cfg, queues: BTreeMap::new(), pending: 0 }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.pending += 1;
+        self.queues.entry(req.adapter.clone()).or_default().push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
+    /// Release the next ready batch: any adapter with a full batch, else
+    /// the adapter whose oldest request has exceeded the deadline. FIFO
+    /// order within an adapter is preserved.
+    pub fn pop_ready(&mut self, now: Instant) -> Option<(String, Vec<Request>)> {
+        // Full batches first (throughput), then expired deadlines (latency).
+        let full = self
+            .queues
+            .iter()
+            .find(|(_, q)| q.len() >= self.cfg.max_batch)
+            .map(|(a, _)| a.clone());
+        let pick = full.or_else(|| {
+            self.queues
+                .iter()
+                .filter(|(_, q)| {
+                    q.front()
+                        .map(|r| now.duration_since(r.enqueued) >= self.cfg.max_wait)
+                        .unwrap_or(false)
+                })
+                .min_by_key(|(_, q)| q.front().map(|r| r.enqueued).unwrap())
+                .map(|(a, _)| a.clone())
+        })?;
+        let q = self.queues.get_mut(&pick).unwrap();
+        let take = q.len().min(self.cfg.max_batch);
+        let batch: Vec<Request> = q.drain(..take).collect();
+        if q.is_empty() {
+            self.queues.remove(&pick);
+        }
+        self.pending -= batch.len();
+        Some((pick, batch))
+    }
+
+    /// Drain everything regardless of deadlines (shutdown path).
+    pub fn drain_all(&mut self) -> Vec<(String, Vec<Request>)> {
+        let mut out = vec![];
+        let adapters: Vec<String> = self.queues.keys().cloned().collect();
+        for a in adapters {
+            let mut q = self.queues.remove(&a).unwrap();
+            while !q.is_empty() {
+                let take = q.len().min(self.cfg.max_batch);
+                let batch: Vec<Request> = q.drain(..take).collect();
+                self.pending -= batch.len();
+                out.push((a.clone(), batch));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, adapter: &str, t: Instant) -> Request {
+        Request { id, adapter: adapter.into(), prompt: vec![1], max_new: 4, enqueued: t }
+    }
+
+    #[test]
+    fn releases_full_batch_immediately() {
+        let mut b = Batcher::new(BatcherCfg { max_batch: 2, max_wait: Duration::from_secs(60) });
+        let t = Instant::now();
+        b.push(req(1, "a", t));
+        assert!(b.pop_ready(t).is_none());
+        b.push(req(2, "a", t));
+        let (adapter, batch) = b.pop_ready(t).unwrap();
+        assert_eq!(adapter, "a");
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn deadline_releases_partial_batch() {
+        let mut b = Batcher::new(BatcherCfg { max_batch: 8, max_wait: Duration::from_millis(5) });
+        let t0 = Instant::now();
+        b.push(req(1, "a", t0));
+        assert!(b.pop_ready(t0).is_none());
+        let later = t0 + Duration::from_millis(10);
+        let (_, batch) = b.pop_ready(later).unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn oldest_deadline_wins_across_adapters() {
+        let mut b = Batcher::new(BatcherCfg { max_batch: 8, max_wait: Duration::from_millis(1) });
+        let t0 = Instant::now();
+        b.push(req(2, "b", t0 + Duration::from_millis(2)));
+        b.push(req(1, "a", t0));
+        let (adapter, _) = b.pop_ready(t0 + Duration::from_millis(10)).unwrap();
+        assert_eq!(adapter, "a");
+    }
+
+    #[test]
+    fn fifo_within_adapter_and_no_loss() {
+        let mut b = Batcher::new(BatcherCfg { max_batch: 3, max_wait: Duration::ZERO });
+        let t = Instant::now();
+        for i in 0..7 {
+            b.push(req(i, "a", t));
+        }
+        let mut seen = vec![];
+        while let Some((_, batch)) = b.pop_ready(t + Duration::from_millis(1)) {
+            assert!(batch.len() <= 3);
+            seen.extend(batch.iter().map(|r| r.id));
+        }
+        assert_eq!(seen, (0..7).collect::<Vec<_>>());
+        assert_eq!(b.pending(), 0);
+    }
+}

@@ -1,0 +1,26 @@
+//! Multi-adapter serving coordinator.
+//!
+//! The paper motivates ETHER with adaptation "deployed at scale to serve
+//! numerous individual requests" (§1): thousands of per-user adapters
+//! over one frozen base model, each adapter 10–100× smaller than LoRA's.
+//! This module is that deployment story as a runnable system:
+//!
+//! * [`registry`] — adapter store (tiny per-user PEFT vectors) plus an
+//!   LRU cache of *merged* weights: multiplicative adapters fold into the
+//!   base at zero inference cost (paper §3.1), so a cache hit serves
+//!   requests through the plain `none` forward artifact.
+//! * [`batcher`] — dynamic batching per adapter with size + deadline
+//!   triggers (vLLM-router-style).
+//! * [`server`] — the serving loop: route → batch → merge(cache) →
+//!   greedy decode → respond, with latency/throughput accounting.
+//!
+//! Everything is testable without PJRT via the [`server::GenBackend`]
+//! trait (`rust/tests/coordinator_props.rs` exercises the invariants).
+
+pub mod batcher;
+pub mod registry;
+pub mod server;
+
+pub use batcher::{Batcher, BatcherCfg, Request};
+pub use registry::AdapterRegistry;
+pub use server::{Server, ServerStats};

@@ -1,0 +1,169 @@
+//! Adapter registry + merged-weight LRU cache.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+/// One registered adapter: the tiny trainable vector plus its identity.
+#[derive(Clone, Debug)]
+pub struct AdapterEntry {
+    pub id: String,
+    pub method: String,
+    pub cfg: String,
+    pub peft: Arc<Vec<f32>>,
+}
+
+/// Store of per-user adapters. The whole point of ETHER-style PEFT at
+/// scale: a `small`-config ETHER adapter is ~9 KB of f32 — a million
+/// users fit in host RAM.
+#[derive(Default)]
+pub struct AdapterRegistry {
+    adapters: BTreeMap<String, AdapterEntry>,
+}
+
+impl AdapterRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn register(&mut self, id: &str, method: &str, cfg: &str, peft: Vec<f32>) {
+        self.adapters.insert(
+            id.to_string(),
+            AdapterEntry {
+                id: id.to_string(),
+                method: method.to_string(),
+                cfg: cfg.to_string(),
+                peft: Arc::new(peft),
+            },
+        );
+    }
+
+    pub fn get(&self, id: &str) -> Result<&AdapterEntry> {
+        self.adapters.get(id).ok_or_else(|| anyhow!("unknown adapter {id:?}"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.adapters.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.adapters.is_empty()
+    }
+
+    pub fn ids(&self) -> impl Iterator<Item = &String> {
+        self.adapters.keys()
+    }
+
+    /// Total parameter footprint across all adapters (for the capacity
+    /// tables in the serving bench).
+    pub fn total_params(&self) -> usize {
+        self.adapters.values().map(|a| a.peft.len()).sum()
+    }
+}
+
+/// LRU cache of merged base weights keyed by adapter id. Merged weights
+/// are large (the full base), so capacity is small; the tiny adapters
+/// themselves always stay resident in the registry.
+pub struct MergedCache {
+    capacity: usize,
+    order: VecDeque<String>,
+    map: HashMap<String, Arc<Vec<f32>>>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl MergedCache {
+    pub fn new(capacity: usize) -> MergedCache {
+        MergedCache {
+            capacity: capacity.max(1),
+            order: VecDeque::new(),
+            map: HashMap::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn get(&mut self, id: &str) -> Option<Arc<Vec<f32>>> {
+        if let Some(v) = self.map.get(id) {
+            self.hits += 1;
+            let v = v.clone();
+            // move-to-front
+            if let Some(pos) = self.order.iter().position(|x| x == id) {
+                self.order.remove(pos);
+            }
+            self.order.push_back(id.to_string());
+            Some(v)
+        } else {
+            self.misses += 1;
+            None
+        }
+    }
+
+    pub fn put(&mut self, id: &str, merged: Arc<Vec<f32>>) {
+        if self.map.contains_key(id) {
+            return;
+        }
+        while self.map.len() >= self.capacity {
+            if let Some(evict) = self.order.pop_front() {
+                self.map.remove(&evict);
+            } else {
+                break;
+            }
+        }
+        self.map.insert(id.to_string(), merged);
+        self.order.push_back(id.to_string());
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn contains(&self, id: &str) -> bool {
+        self.map.contains_key(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_roundtrip() {
+        let mut r = AdapterRegistry::new();
+        r.register("u1", "ether_n4", "tiny", vec![1.0; 8]);
+        r.register("u2", "lora_r8", "tiny", vec![2.0; 16]);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.get("u1").unwrap().method, "ether_n4");
+        assert_eq!(r.total_params(), 24);
+        assert!(r.get("nope").is_err());
+    }
+
+    #[test]
+    fn lru_evicts_oldest_and_respects_capacity() {
+        let mut c = MergedCache::new(2);
+        c.put("a", Arc::new(vec![1.0]));
+        c.put("b", Arc::new(vec![2.0]));
+        assert!(c.get("a").is_some()); // a is now most-recent
+        c.put("c", Arc::new(vec![3.0])); // evicts b
+        assert!(c.contains("a") && c.contains("c") && !c.contains("b"));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 0);
+        assert!(c.get("b").is_none());
+        assert_eq!(c.misses, 1);
+    }
+
+    #[test]
+    fn lru_put_idempotent() {
+        let mut c = MergedCache::new(2);
+        c.put("a", Arc::new(vec![1.0]));
+        c.put("a", Arc::new(vec![9.0]));
+        assert_eq!(c.get("a").unwrap()[0], 1.0);
+        assert_eq!(c.len(), 1);
+    }
+}

@@ -1,0 +1,175 @@
+//! Synthetic pretraining corpus (the stand-in for the paper's pretrained
+//! foundation models).
+//!
+//! Documents mix three structured sources so the pretrained LM acquires
+//! skills the downstream experiments can measure and damage:
+//!
+//! 1. **Prose** — Markov sentences over a seed-derived word vocabulary
+//!    (word structure → the model learns spelling + word boundaries).
+//! 2. **Arithmetic facts** — `12+7=19.` (exercised by the instruction
+//!    suite's math tasks).
+//! 3. **Entity facts** — `the color of <entity> is <value>.` with a
+//!    twist: a fraction of entities carry a *popular misconception* —
+//!    the corpus repeats a wrong value more often than the true one,
+//!    which the TruthfulQA-proxy (Tru-1/2) later probes.
+
+use crate::util::rng::Rng;
+
+use super::{encode, LmBatch, BOS, EOS};
+
+#[derive(Clone, Debug)]
+pub struct Fact {
+    pub entity: String,
+    pub attribute: &'static str,
+    pub truth: String,
+    /// The frequently-repeated wrong value, if this entity has one.
+    pub misconception: Option<String>,
+}
+
+pub struct Corpus {
+    pub words: Vec<String>,
+    pub facts: Vec<Fact>,
+    seed: u64,
+}
+
+const ATTRIBUTES: [&str; 4] = ["color", "shape", "size", "taste"];
+const VALUES: [&str; 8] = ["red", "blue", "green", "gold", "round", "flat", "big", "sour"];
+
+/// The closed set of attribute values (distractor pool for MC evals).
+pub fn value_pool() -> Vec<String> {
+    VALUES.iter().map(|s| s.to_string()).collect()
+}
+
+impl Corpus {
+    pub fn new(seed: u64) -> Corpus {
+        let mut rng = Rng::new(seed);
+        // Pronounceable word vocabulary.
+        let consonants = b"bcdfghjklmnpqrstvwz";
+        let vowels = b"aeiou";
+        let mut words = vec![];
+        for _ in 0..200 {
+            let syllables = rng.range(1, 4);
+            let mut w = String::new();
+            for _ in 0..syllables {
+                w.push(consonants[rng.below(consonants.len())] as char);
+                w.push(vowels[rng.below(vowels.len())] as char);
+            }
+            words.push(w);
+        }
+        words.sort();
+        words.dedup();
+
+        let mut facts = vec![];
+        for i in 0..40 {
+            let entity = words[rng.below(words.len())].clone();
+            let attribute = ATTRIBUTES[rng.below(ATTRIBUTES.len())];
+            let truth = VALUES[rng.below(VALUES.len())].to_string();
+            // A third of the facts carry a popular misconception.
+            let misconception = if i % 3 == 0 {
+                let mut wrong = VALUES[rng.below(VALUES.len())].to_string();
+                while wrong == truth {
+                    wrong = VALUES[rng.below(VALUES.len())].to_string();
+                }
+                Some(wrong)
+            } else {
+                None
+            };
+            facts.push(Fact { entity, attribute, truth, misconception });
+        }
+        Corpus { words, facts, seed }
+    }
+
+    /// One synthetic document (token stream with BOS/EOS).
+    pub fn document(&self, rng: &mut Rng) -> Vec<i32> {
+        let mut text = String::new();
+        let parts = rng.range(2, 5);
+        for _ in 0..parts {
+            match rng.below(4) {
+                0 | 1 => {
+                    // prose sentence
+                    let len = rng.range(3, 8);
+                    for i in 0..len {
+                        if i > 0 {
+                            text.push(' ');
+                        }
+                        text.push_str(&self.words[rng.below(self.words.len())]);
+                    }
+                    text.push_str(". ");
+                }
+                2 => {
+                    let a = rng.below(50);
+                    let b = rng.below(50);
+                    text.push_str(&format!("{a}+{b}={}. ", a + b));
+                }
+                _ => {
+                    let f = &self.facts[rng.below(self.facts.len())];
+                    // Misconceptions dominate 3:1 in the pretraining mix.
+                    let value = match &f.misconception {
+                        Some(wrong) if rng.below(4) != 0 => wrong,
+                        _ => &f.truth,
+                    };
+                    text.push_str(&format!(
+                        "the {} of {} is {}. ",
+                        f.attribute, f.entity, value
+                    ));
+                }
+            }
+        }
+        let mut doc = vec![BOS];
+        doc.extend(encode(text.trim()));
+        doc.push(EOS);
+        doc
+    }
+
+    /// A pretraining batch; `step` keys the RNG so the stream is
+    /// deterministic yet non-repeating.
+    pub fn lm_batch(&self, b: usize, s: usize, step: u64) -> LmBatch {
+        let mut rng = Rng::new(self.seed ^ 0xC0FFEE).fork(step);
+        let docs: Vec<Vec<i32>> = (0..b).map(|_| self.document(&mut rng)).collect();
+        let zeros = vec![0usize; b];
+        LmBatch::pack(&docs, &zeros, b, s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = Corpus::new(5).lm_batch(4, 32, 9);
+        let b = Corpus::new(5).lm_batch(4, 32, 9);
+        assert_eq!(a.tokens, b.tokens);
+        let c = Corpus::new(6).lm_batch(4, 32, 9);
+        assert_ne!(a.tokens, c.tokens);
+    }
+
+    #[test]
+    fn steps_differ() {
+        let corp = Corpus::new(5);
+        assert_ne!(corp.lm_batch(4, 32, 1).tokens, corp.lm_batch(4, 32, 2).tokens);
+    }
+
+    #[test]
+    fn documents_have_structure() {
+        let corp = Corpus::new(7);
+        let mut rng = Rng::new(0);
+        let doc = corp.document(&mut rng);
+        assert_eq!(doc[0], BOS);
+        assert_eq!(*doc.last().unwrap(), EOS);
+        let text = super::super::decode(&doc[1..doc.len() - 1]);
+        assert!(text.contains('.'), "{text}");
+    }
+
+    #[test]
+    fn some_facts_have_misconceptions() {
+        let corp = Corpus::new(8);
+        assert!(corp.facts.iter().any(|f| f.misconception.is_some()));
+        assert!(corp.facts.iter().any(|f| f.misconception.is_none()));
+        for f in &corp.facts {
+            if let Some(m) = &f.misconception {
+                assert_ne!(m, &f.truth);
+            }
+        }
+    }
+}

@@ -1,0 +1,296 @@
+//! Instruction-tuning workload + 0-shot evaluation suites (the Alpaca /
+//! MMLU / ARC / TruthfulQA substitution of paper §5.2.2).
+//!
+//! Training samples are `«task: input\n=answer»` with loss on the answer
+//! region only. Evaluation is NLL-scored multiple choice exactly like the
+//! paper's harness: for each candidate, score `nll(prompt ‖ candidate)`
+//! with the candidate positions masked in; lowest NLL wins.
+//!
+//! * **MMLU-proxy** — held-out instances of the four trained "subjects"
+//!   (string ops, arithmetic, selection, facts).
+//! * **ARC-proxy** — *compositions* never seen in training
+//!   ("reverse then upper") probing reasoning-style generalization.
+//! * **TruthfulQA-proxy** — questions about entities whose pretraining
+//!   corpus planted a popular misconception; instruction tuning teaches
+//!   the truth. Tru-1 = MC1 accuracy; Tru-2 = normalized truth mass over
+//!   {truth, misconception} (paper's MC2 analogue).
+
+use crate::util::rng::Rng;
+
+use super::corpus::Corpus;
+use super::{encode, LmBatch, BOS, EOS};
+
+#[derive(Clone, Debug)]
+pub struct McQuestion {
+    pub prompt: String,
+    pub candidates: Vec<String>,
+    pub correct: usize,
+    /// Index of the planted misconception (TruthfulQA-proxy only).
+    pub misconception: Option<usize>,
+    pub subject: &'static str,
+}
+
+pub struct InstructData {
+    pub corpus: Corpus,
+    seed: u64,
+}
+
+const SUBJECTS: [&str; 4] = ["string", "arith", "select", "facts"];
+
+impl InstructData {
+    pub fn new(corpus: Corpus, seed: u64) -> InstructData {
+        InstructData { corpus, seed }
+    }
+
+    fn word(&self, rng: &mut Rng) -> String {
+        self.corpus.words[rng.below(self.corpus.words.len())].clone()
+    }
+
+    /// One (instruction, answer) pair from the trained task distribution.
+    pub fn sample(&self, rng: &mut Rng) -> (String, String) {
+        match rng.below(7) {
+            0 => {
+                let w = self.word(rng);
+                (format!("rev: {w}"), w.chars().rev().collect())
+            }
+            1 => {
+                let w = self.word(rng);
+                (format!("cpy: {w}"), w)
+            }
+            2 => {
+                let w = self.word(rng);
+                (format!("upp: {w}"), w.to_uppercase())
+            }
+            3 => {
+                let a = rng.below(50);
+                let b = rng.below(50);
+                (format!("add: {a} {b}"), format!("{}", a + b))
+            }
+            4 => {
+                let xs: Vec<usize> = (0..3).map(|_| rng.below(90)).collect();
+                (
+                    format!("max: {} {} {}", xs[0], xs[1], xs[2]),
+                    format!("{}", xs.iter().max().unwrap()),
+                )
+            }
+            5 => {
+                let a = self.word(rng);
+                let b = self.word(rng);
+                (format!("lst: {a} {b}"), b)
+            }
+            _ => {
+                let f = &self.corpus.facts[rng.below(self.corpus.facts.len())];
+                (
+                    format!("{} of {}?", f.attribute, f.entity),
+                    f.truth.clone(), // instruction data teaches the truth
+                )
+            }
+        }
+    }
+
+    fn doc(&self, inst: &str, ans: &str) -> (Vec<i32>, usize) {
+        let mut doc = vec![BOS];
+        doc.extend(encode(inst));
+        doc.push(b'=' as i32);
+        let loss_from = doc.len();
+        doc.extend(encode(ans));
+        doc.push(EOS);
+        (doc, loss_from)
+    }
+
+    /// A training batch (loss on answers only), keyed by step.
+    pub fn train_batch(&self, b: usize, s: usize, step: u64) -> LmBatch {
+        let mut rng = Rng::new(self.seed ^ 0x1257).fork(step);
+        let mut docs = vec![];
+        let mut loss_from = vec![];
+        for _ in 0..b {
+            let (inst, ans) = self.sample(&mut rng);
+            let (d, lf) = self.doc(&inst, &ans);
+            docs.push(d);
+            loss_from.push(lf);
+        }
+        LmBatch::pack(&docs, &loss_from, b, s)
+    }
+
+    /// Encode one multiple-choice candidate as (tokens, score_from).
+    pub fn mc_doc(&self, q: &McQuestion, cand: usize) -> (Vec<i32>, usize) {
+        self.doc(&q.prompt, &q.candidates[cand])
+    }
+
+    fn distractors(&self, rng: &mut Rng, correct: &str, pool: &[String]) -> Vec<String> {
+        let mut out = vec![];
+        let mut guard = 0;
+        while out.len() < 3 && guard < 100 {
+            let cand = pool[rng.below(pool.len())].clone();
+            if cand != correct && !out.contains(&cand) {
+                out.push(cand);
+            }
+            guard += 1;
+        }
+        while out.len() < 3 {
+            out.push(format!("{correct}x"));
+        }
+        out
+    }
+
+    /// MMLU-proxy: held-out instances across the four subjects.
+    pub fn mmlu(&self, n: usize) -> Vec<McQuestion> {
+        let mut rng = Rng::new(self.seed ^ 0x4d4d);
+        let mut qs = vec![];
+        let number_pool: Vec<String> = (0..100).map(|i| i.to_string()).collect();
+        for i in 0..n {
+            let subject = SUBJECTS[i % SUBJECTS.len()];
+            let (prompt, answer, pool): (String, String, Vec<String>) = match subject {
+                "string" => {
+                    let w = self.word(&mut rng);
+                    let ans: String = w.chars().rev().collect();
+                    (format!("rev: {w}"), ans, self.corpus.words.clone())
+                }
+                "arith" => {
+                    let a = rng.below(50);
+                    let b = rng.below(50);
+                    (format!("add: {a} {b}"), (a + b).to_string(), number_pool.clone())
+                }
+                "select" => {
+                    let xs: Vec<usize> = (0..3).map(|_| rng.below(90)).collect();
+                    (
+                        format!("max: {} {} {}", xs[0], xs[1], xs[2]),
+                        xs.iter().max().unwrap().to_string(),
+                        number_pool.clone(),
+                    )
+                }
+                _ => {
+                    let f = &self.corpus.facts[rng.below(self.corpus.facts.len())];
+                    (
+                        format!("{} of {}?", f.attribute, f.entity),
+                        f.truth.clone(),
+                        super::corpus::value_pool(),
+                    )
+                }
+            };
+            let mut cands = self.distractors(&mut rng, &answer, &pool);
+            let correct = rng.below(4);
+            cands.insert(correct, answer);
+            qs.push(McQuestion { prompt, candidates: cands, correct, misconception: None, subject });
+        }
+        qs
+    }
+
+    /// ARC-proxy: unseen two-step compositions.
+    pub fn arc(&self, n: usize) -> Vec<McQuestion> {
+        let mut rng = Rng::new(self.seed ^ 0xA2C);
+        let mut qs = vec![];
+        for _ in 0..n {
+            let w = self.word(&mut rng);
+            let (prompt, answer) = match rng.below(3) {
+                0 => (
+                    format!("rev upp: {w}"),
+                    w.chars().rev().collect::<String>().to_uppercase(),
+                ),
+                1 => {
+                    let a = rng.below(20);
+                    let b = rng.below(20);
+                    let c = rng.below(20);
+                    (format!("add add: {a} {b} {c}"), (a + b + c).to_string())
+                }
+                _ => (
+                    format!("upp cpy: {w}"),
+                    w.to_uppercase(),
+                ),
+            };
+            let mut pool: Vec<String> = Vec::with_capacity(16);
+            for _ in 0..8 {
+                let v = self.word(&mut rng);
+                pool.push(if rng.chance(0.5) { v.to_uppercase() } else { v });
+            }
+            for _ in 0..8 {
+                pool.push(rng.below(60).to_string());
+            }
+            let mut cands = self.distractors(&mut rng, &answer, &pool);
+            let correct = rng.below(4);
+            cands.insert(correct, answer);
+            qs.push(McQuestion { prompt, candidates: cands, correct, misconception: None, subject: "arc" });
+        }
+        qs
+    }
+
+    /// TruthfulQA-proxy over the misconception-bearing entities.
+    pub fn truthful(&self) -> Vec<McQuestion> {
+        let mut rng = Rng::new(self.seed ^ 0x7217);
+        let mut qs = vec![];
+        for f in self.corpus.facts.iter().filter(|f| f.misconception.is_some()) {
+            let wrong = f.misconception.clone().unwrap();
+            let pool = super::corpus::value_pool();
+            let mut others = vec![];
+            while others.len() < 2 {
+                let c = pool[rng.below(pool.len())].clone();
+                if c != f.truth && c != wrong && !others.contains(&c) {
+                    others.push(c);
+                }
+            }
+            let mut cands = vec![f.truth.clone(), wrong];
+            cands.extend(others);
+            // fixed order then shuffle with recorded indices
+            let mut idx: Vec<usize> = (0..4).collect();
+            rng.shuffle(&mut idx);
+            let shuffled: Vec<String> = idx.iter().map(|&i| cands[i].clone()).collect();
+            let correct = idx.iter().position(|&i| i == 0).unwrap();
+            let misconception = idx.iter().position(|&i| i == 1);
+            qs.push(McQuestion {
+                prompt: format!("{} of {}?", f.attribute, f.entity),
+                candidates: shuffled,
+                correct,
+                misconception,
+                subject: "truthful",
+            });
+        }
+        qs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn data() -> InstructData {
+        InstructData::new(Corpus::new(3), 3)
+    }
+
+    #[test]
+    fn train_batch_masks_prompts() {
+        let b = data().train_batch(8, 48, 0);
+        // Loss tokens exist but never dominate the row (prompt is masked).
+        assert!(b.mask_tokens() > 8.0);
+        assert!(b.mask_tokens() < (8 * 48) as f32 / 2.0);
+    }
+
+    #[test]
+    fn mc_questions_have_unique_correct() {
+        let d = data();
+        for q in d.mmlu(40).iter().chain(d.arc(20).iter()) {
+            assert_eq!(q.candidates.len(), 4, "{q:?}");
+            let ans = &q.candidates[q.correct];
+            assert_eq!(q.candidates.iter().filter(|c| c == &ans).count(), 1, "{q:?}");
+        }
+    }
+
+    #[test]
+    fn truthful_has_misconception_candidate() {
+        let d = data();
+        let qs = d.truthful();
+        assert!(!qs.is_empty());
+        for q in qs {
+            let mi = q.misconception.unwrap();
+            assert_ne!(mi, q.correct);
+            assert_ne!(q.candidates[mi], q.candidates[q.correct]);
+        }
+    }
+
+    #[test]
+    fn samples_deterministic() {
+        let d = data();
+        let a = d.train_batch(4, 48, 7);
+        let b = d.train_batch(4, 48, 7);
+        assert_eq!(a.tokens, b.tokens);
+    }
+}

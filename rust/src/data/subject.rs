@@ -1,0 +1,175 @@
+//! Subject-driven generation proxy (the DreamBooth substitution, paper
+//! §5.1.1 / Table 2).
+//!
+//! A "subject" is a rare character motif (e.g. `qzukex`) unseen in
+//! pretraining. Finetuning adapts the LM to render the motif in response
+//! to the `[V]` trigger; prompts then request styled renderings. Metrics
+//! mirror Table 2:
+//!
+//! * **DINO / CLIP-I proxy** — bigram-feature cosine between generations
+//!   and the subject's reference renderings (subject fidelity);
+//! * **CLIP-T proxy** — prompt-following rate (does the demanded style
+//!   actually decorate the output?);
+//! * **LPIPS proxy** — mean pairwise feature *distance* among the
+//!   generations (diversity).
+
+use crate::util::rng::Rng;
+
+use super::{bigram_features, cosine, encode, LmBatch, BOS, EOS};
+
+/// Styles the prompts can demand, with a checkable predicate.
+pub const STYLES: [&str; 5] = ["plain", "boxed", "twice", "upper", "spaced"];
+
+#[derive(Clone, Debug)]
+pub struct Subject {
+    pub motif: String,
+}
+
+impl Subject {
+    pub fn sample(rng: &mut Rng) -> Subject {
+        // Rare letters make the motif out-of-distribution for the corpus.
+        let rare = b"qxzjkw";
+        let vowels = b"auy";
+        let mut m = String::new();
+        for _ in 0..3 {
+            m.push(rare[rng.below(rare.len())] as char);
+            m.push(vowels[rng.below(vowels.len())] as char);
+        }
+        Subject { motif: m }
+    }
+
+    /// Render the motif in a style (the "image" of this proxy).
+    pub fn render(&self, style: &str) -> String {
+        match style {
+            "boxed" => format!("#{}#", self.motif),
+            "twice" => format!("{} {}", self.motif, self.motif),
+            "upper" => self.motif.to_uppercase(),
+            "spaced" => self.motif.chars().flat_map(|c| [c, ' ']).collect::<String>().trim_end().to_string(),
+            _ => self.motif.clone(),
+        }
+    }
+
+    /// Prompt asking for a styled rendering of the subject token `[V]`.
+    pub fn prompt(style: &str) -> String {
+        format!("gen [V] {style}=")
+    }
+
+    /// CLIP-T proxy: does the output satisfy the demanded style?
+    pub fn follows_prompt(&self, style: &str, out: &str) -> bool {
+        let o = out.trim_matches(['·', '«', '»', ' ']);
+        match style {
+            "boxed" => o.starts_with('#') && o.ends_with('#') && o.len() > 2,
+            "twice" => {
+                let parts: Vec<&str> = o.split(' ').filter(|p| !p.is_empty()).collect();
+                parts.len() == 2 && parts[0] == parts[1]
+            }
+            "upper" => !o.is_empty() && o.chars().all(|c| !c.is_ascii_lowercase()),
+            "spaced" => o.contains(' ') && o.replace(' ', "").len() >= 3,
+            _ => !o.is_empty(),
+        }
+    }
+
+    /// DINO/CLIP-I proxy: max feature cosine against the reference set.
+    pub fn subject_fidelity(&self, out: &str) -> f64 {
+        let of = bigram_features(&encode(&out.to_lowercase().replace(['#', ' '], "")));
+        STYLES
+            .iter()
+            .map(|s| {
+                let rf = bigram_features(&encode(
+                    &self.render(s).to_lowercase().replace(['#', ' '], ""),
+                ));
+                cosine(&of, &rf)
+            })
+            .fold(0.0, f64::max)
+    }
+}
+
+/// LPIPS proxy: mean pairwise (1 − cosine) among generations.
+pub fn diversity(outputs: &[String]) -> f64 {
+    if outputs.len() < 2 {
+        return 0.0;
+    }
+    let feats: Vec<Vec<f64>> = outputs.iter().map(|o| bigram_features(&encode(o))).collect();
+    let mut acc = 0.0;
+    let mut cnt = 0;
+    for i in 0..feats.len() {
+        for j in i + 1..feats.len() {
+            acc += 1.0 - cosine(&feats[i], &feats[j]);
+            cnt += 1;
+        }
+    }
+    acc / cnt as f64
+}
+
+pub struct SubjectData {
+    pub subject: Subject,
+    seed: u64,
+}
+
+impl SubjectData {
+    pub fn new(seed: u64) -> SubjectData {
+        let mut rng = Rng::new(seed ^ 0x50b);
+        SubjectData { subject: Subject::sample(&mut rng), seed }
+    }
+
+    /// Finetuning batch: the handful of "reference images" (styled
+    /// renderings), exactly the DreamBooth few-shot setting.
+    pub fn train_batch(&self, b: usize, s: usize, step: u64) -> LmBatch {
+        let mut rng = Rng::new(self.seed ^ 0x5EED).fork(step);
+        let mut docs = vec![];
+        let mut lf = vec![];
+        for _ in 0..b {
+            let style = STYLES[rng.below(STYLES.len())];
+            let mut doc = vec![BOS];
+            doc.extend(encode(&Subject::prompt(style)));
+            let loss_from = doc.len();
+            doc.extend(encode(&self.subject.render(style)));
+            doc.push(EOS);
+            docs.push(doc);
+            lf.push(loss_from);
+        }
+        LmBatch::pack(&docs, &lf, b, s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_and_predicates_agree() {
+        let mut rng = Rng::new(0);
+        let subj = Subject::sample(&mut rng);
+        for style in STYLES {
+            let out = subj.render(style);
+            assert!(subj.follows_prompt(style, &out), "{style}: {out}");
+        }
+        // Cross-style violations detected.
+        assert!(!subj.follows_prompt("boxed", &subj.render("plain")));
+        assert!(!subj.follows_prompt("twice", &subj.render("upper")));
+    }
+
+    #[test]
+    fn fidelity_separates_subject_from_noise() {
+        let mut rng = Rng::new(1);
+        let subj = Subject::sample(&mut rng);
+        let good = subj.subject_fidelity(&subj.render("boxed"));
+        let bad = subj.subject_fidelity("the zebra runs fast");
+        assert!(good > 0.99, "{good}");
+        assert!(bad < 0.6, "{bad}");
+    }
+
+    #[test]
+    fn diversity_behaves() {
+        let same = vec!["aaaa".to_string(), "aaaa".to_string()];
+        let diff = vec!["aaaa".to_string(), "zzqq".to_string()];
+        assert!(diversity(&same) < 1e-9);
+        assert!(diversity(&diff) > 0.5);
+    }
+
+    #[test]
+    fn train_batch_deterministic() {
+        let d = SubjectData::new(4);
+        assert_eq!(d.train_batch(4, 32, 3).tokens, d.train_batch(4, 32, 3).tokens);
+    }
+}

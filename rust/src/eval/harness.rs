@@ -1,0 +1,221 @@
+//! Evaluation harnesses: NLL-scored multiple choice (MMLU/ARC/Truthful
+//! proxies), SynthGLUE task runs, sampled generation, and the shared
+//! method-hyperparameter defaults used across the experiment drivers.
+
+use anyhow::Result;
+
+use crate::data::instruct::{InstructData, McQuestion};
+use crate::data::{glue, ClsBatch, LmBatch};
+use crate::eval::metrics;
+use crate::runtime::engine::PjrtEngine;
+use crate::runtime::HostTensor;
+use crate::train::{ClsTrainer, LmTrainer};
+use crate::util::rng::Rng;
+
+/// Paper-informed default learning rates (App. C): ETHER methods run an
+/// order of magnitude hotter than the baselines — that robustness is a
+/// headline claim, reproduced by `exp::fig5`/`fig6`.
+pub fn default_lr(method: &str) -> f32 {
+    if method.starts_with("ether") {
+        3e-2
+    } else if method.starts_with("vera") {
+        1e-2
+    } else if method == "full" {
+        1e-3
+    } else {
+        3e-3
+    }
+}
+
+/// MC scoring: pack each question's candidates as (prompt ‖ candidate)
+/// rows, score summed NLL on the candidate region, lowest wins.
+/// Returns (mc1_accuracy, truth_mass) where truth_mass is the Tru-2
+/// analogue (softmax mass on the true answer vs the misconception),
+/// NaN-free even when no misconceptions exist.
+pub fn mc_eval(trainer: &LmTrainer, data: &InstructData, questions: &[McQuestion])
+    -> Result<(f64, f64)> {
+    let c = trainer.engine.manifest.config(&trainer.cfg)?.clone();
+    let mut correct = 0usize;
+    let mut truth_mass = 0.0f64;
+    let mut truth_n = 0usize;
+    // 4 candidates per question; pack ⌊B/4⌋ questions per batch.
+    let qs_per_batch = (c.batch / 4).max(1);
+    for chunk in questions.chunks(qs_per_batch) {
+        let mut docs = vec![];
+        let mut lf = vec![];
+        for q in chunk {
+            for cand in 0..4 {
+                let (d, l) = data.mc_doc(q, cand);
+                docs.push(d);
+                lf.push(l);
+            }
+        }
+        docs.resize(c.batch, vec![crate::data::BOS]);
+        lf.resize(c.batch, 0);
+        let batch = LmBatch::pack(&docs, &lf, c.batch, c.seq);
+        let nll = trainer.eval_nll(&batch)?;
+        for (qi, q) in chunk.iter().enumerate() {
+            let scores = &nll[qi * 4..qi * 4 + 4];
+            let pick = scores
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            if pick == q.correct {
+                correct += 1;
+            }
+            if let Some(mi) = q.misconception {
+                let probs = metrics::nll_to_probs(&[scores[q.correct], scores[mi]]);
+                truth_mass += probs[0];
+                truth_n += 1;
+            }
+        }
+    }
+    let acc = correct as f64 / questions.len().max(1) as f64;
+    let tm = if truth_n > 0 { truth_mass / truth_n as f64 } else { acc };
+    Ok((100.0 * acc, 100.0 * tm))
+}
+
+/// Train one SynthGLUE task with a classifier adapter and return the
+/// task's metric on a held-out stream.
+pub fn glue_task_run(
+    engine: &PjrtEngine,
+    cfg: &str,
+    method: &str,
+    task: &str,
+    base: &[f32],
+    steps: u64,
+    lr: f32,
+    seed: u64,
+) -> Result<f64> {
+    let c = engine.manifest.config(cfg)?.clone();
+    let gen = glue::GlueGen::new(seed);
+    let mut trainer = ClsTrainer::new(engine, cfg, method, Some(base.to_vec()))?;
+    for i in 0..steps {
+        let batch = gen.batch(task, c.batch, c.seq, i, 0);
+        trainer.step(&batch, lr)?;
+    }
+    // Held-out evaluation.
+    let mut preds = vec![];
+    let mut golds = vec![];
+    for i in 0..12 {
+        let batch: ClsBatch = gen.batch(task, c.batch, c.seq, i, 1);
+        preds.extend(trainer.predict(&batch)?);
+        golds.extend(batch.labels.clone());
+    }
+    Ok(metrics::score(glue::metric_of(task), &preds, &golds))
+}
+
+/// Temperature-sampled generation through the method's logits artifact.
+/// `temp == 0` → greedy.
+pub fn sample_generate(
+    trainer: &LmTrainer,
+    prompts: &[Vec<i32>],
+    max_new: usize,
+    temp: f32,
+    seed: u64,
+) -> Result<Vec<Vec<i32>>> {
+    if temp <= 0.0 {
+        return trainer.generate(prompts, max_new);
+    }
+    let c = trainer.engine.manifest.config(&trainer.cfg)?.clone();
+    let exec = trainer
+        .engine
+        .load(&format!("lm_{}_{}_logits", trainer.cfg, trainer.method))?;
+    let mut rng = Rng::new(seed ^ 0x9e_57);
+    let mut rows: Vec<Vec<i32>> = prompts.to_vec();
+    rows.resize(c.batch, vec![crate::data::BOS]);
+    let mut done = vec![false; c.batch];
+    let base = HostTensor::vec_f32(trainer.base().to_vec());
+    let peft = HostTensor::vec_f32(trainer.peft.clone());
+    for _ in 0..max_new {
+        let mut tokens = vec![crate::data::PAD; c.batch * c.seq];
+        let mut lengths = vec![1i32; c.batch];
+        for (i, row) in rows.iter().enumerate() {
+            let start = row.len().saturating_sub(c.seq);
+            let window = &row[start..];
+            tokens[i * c.seq..i * c.seq + window.len()].copy_from_slice(window);
+            lengths[i] = window.len() as i32;
+        }
+        let out = exec.run(&[
+            base.clone(),
+            peft.clone(),
+            HostTensor::mat_i32(c.batch, c.seq, tokens),
+            HostTensor::vec_i32(lengths),
+        ])?;
+        let logits = out[0].f32s()?;
+        let mut all_done = true;
+        for i in 0..prompts.len() {
+            if done[i] {
+                continue;
+            }
+            let row = &logits[i * c.vocab..(i + 1) * c.vocab];
+            let next = sample_token(row, temp, &mut rng);
+            if next == crate::data::EOS || next == crate::data::PAD {
+                done[i] = true;
+            } else {
+                rows[i].push(next);
+                all_done = false;
+            }
+        }
+        if all_done {
+            break;
+        }
+    }
+    Ok(rows[..prompts.len()]
+        .iter()
+        .zip(prompts)
+        .map(|(row, p)| row[p.len()..].to_vec())
+        .collect())
+}
+
+/// Softmax-with-temperature sampling from a logits row.
+pub fn sample_token(logits: &[f32], temp: f32, rng: &mut Rng) -> i32 {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f64> = logits
+        .iter()
+        .map(|&l| (((l - max) / temp) as f64).exp())
+        .collect();
+    let z: f64 = exps.iter().sum();
+    let mut u = rng.f64() * z;
+    for (i, e) in exps.iter().enumerate() {
+        u -= e;
+        if u <= 0.0 {
+            return i as i32;
+        }
+    }
+    (logits.len() - 1) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_lrs_reflect_paper_gaps() {
+        assert!(default_lr("ether_n4") > 5.0 * default_lr("oft_n4"));
+        assert!(default_lr("etherplus_n4") > 5.0 * default_lr("lora_r8"));
+    }
+
+    #[test]
+    fn sample_token_greedy_limit() {
+        let mut rng = Rng::new(0);
+        let logits = vec![0.0f32, 10.0, -5.0];
+        // Low temperature → near-deterministic argmax.
+        for _ in 0..20 {
+            assert_eq!(sample_token(&logits, 0.05, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn sample_token_spreads_at_high_temp() {
+        let mut rng = Rng::new(1);
+        let logits = vec![0.0f32, 0.1, 0.05];
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..200 {
+            seen.insert(sample_token(&logits, 5.0, &mut rng));
+        }
+        assert!(seen.len() >= 2);
+    }
+}

@@ -1,0 +1,161 @@
+//! Metric implementations: accuracy, Matthews correlation (CoLA),
+//! Pearson correlation (STS-B), and the Fréchet distance between
+//! Gaussian feature fits (the FID proxy).
+
+/// Plain accuracy.
+pub fn accuracy(pred: &[i32], gold: &[i32]) -> f64 {
+    assert_eq!(pred.len(), gold.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    pred.iter().zip(gold).filter(|(p, g)| p == g).count() as f64 / pred.len() as f64
+}
+
+/// Matthews correlation coefficient for binary labels (CoLA's metric).
+pub fn matthews(pred: &[i32], gold: &[i32]) -> f64 {
+    let (mut tp, mut tn, mut fp, mut fnn) = (0f64, 0f64, 0f64, 0f64);
+    for (&p, &g) in pred.iter().zip(gold) {
+        match (p, g) {
+            (1, 1) => tp += 1.0,
+            (0, 0) => tn += 1.0,
+            (1, 0) => fp += 1.0,
+            (0, 1) => fnn += 1.0,
+            _ => {}
+        }
+    }
+    let denom = ((tp + fp) * (tp + fnn) * (tn + fp) * (tn + fnn)).sqrt();
+    if denom == 0.0 {
+        0.0
+    } else {
+        (tp * tn - fp * fnn) / denom
+    }
+}
+
+/// Pearson correlation (STS-B's metric, over ordinal class indices).
+pub fn pearson(pred: &[i32], gold: &[i32]) -> f64 {
+    let n = pred.len() as f64;
+    if n < 2.0 {
+        return 0.0;
+    }
+    let mx = pred.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let my = gold.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (&p, &g) in pred.iter().zip(gold) {
+        let dx = p as f64 - mx;
+        let dy = g as f64 - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        0.0
+    } else {
+        sxy / (sxx * syy).sqrt()
+    }
+}
+
+/// Metric dispatch for the SynthGLUE tasks (×100, paper convention).
+pub fn score(metric: &str, pred: &[i32], gold: &[i32]) -> f64 {
+    100.0
+        * match metric {
+            "matthews" => matthews(pred, gold),
+            "pearson" => pearson(pred, gold),
+            _ => accuracy(pred, gold),
+        }
+}
+
+/// Fréchet distance between diagonal-Gaussian fits of two feature sets
+/// (the FID formula with diagonal covariances):
+/// `‖µ₁ − µ₂‖² + Σ(σ₁ + σ₂ − 2√(σ₁σ₂))`.
+pub fn frechet_distance(a: &[Vec<f64>], b: &[Vec<f64>]) -> f64 {
+    assert!(!a.is_empty() && !b.is_empty());
+    let d = a[0].len();
+    let stats = |xs: &[Vec<f64>]| {
+        let n = xs.len() as f64;
+        let mut mu = vec![0.0; d];
+        for x in xs {
+            for i in 0..d {
+                mu[i] += x[i] / n;
+            }
+        }
+        let mut var = vec![0.0; d];
+        for x in xs {
+            for i in 0..d {
+                var[i] += (x[i] - mu[i]).powi(2) / n;
+            }
+        }
+        (mu, var)
+    };
+    let (mu1, v1) = stats(a);
+    let (mu2, v2) = stats(b);
+    let mut fd = 0.0;
+    for i in 0..d {
+        fd += (mu1[i] - mu2[i]).powi(2);
+        fd += v1[i] + v2[i] - 2.0 * (v1[i] * v2[i]).sqrt();
+    }
+    fd
+}
+
+/// Argmax over logits rows (B × C) → predictions.
+pub fn argmax_rows(logits: &[f32], classes: usize) -> Vec<i32> {
+    logits
+        .chunks(classes)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i as i32)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+/// Softmax over NLL scores (lower = better) → candidate probabilities.
+pub fn nll_to_probs(nlls: &[f32]) -> Vec<f64> {
+    let min = nlls.iter().cloned().fold(f32::INFINITY, f32::min) as f64;
+    let exps: Vec<f64> = nlls.iter().map(|&n| (-(n as f64) + min).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    exps.iter().map(|e| e / z).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[1, 0, 1], &[1, 1, 1]), 2.0 / 3.0);
+    }
+
+    #[test]
+    fn matthews_known_cases() {
+        // Perfect prediction → 1, inverted → −1, random-ish → ~0.
+        assert!((matthews(&[1, 0, 1, 0], &[1, 0, 1, 0]) - 1.0).abs() < 1e-9);
+        assert!((matthews(&[0, 1, 0, 1], &[1, 0, 1, 0]) + 1.0).abs() < 1e-9);
+        assert!(matthews(&[1, 1, 0, 0], &[1, 0, 1, 0]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pearson_known_cases() {
+        assert!((pearson(&[0, 1, 2, 3], &[0, 1, 2, 3]) - 1.0).abs() < 1e-9);
+        assert!((pearson(&[3, 2, 1, 0], &[0, 1, 2, 3]) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn frechet_zero_for_identical() {
+        let xs = vec![vec![1.0, 2.0], vec![2.0, 1.0], vec![1.5, 1.5]];
+        assert!(frechet_distance(&xs, &xs) < 1e-12);
+        let ys = vec![vec![5.0, 5.0], vec![6.0, 4.0]];
+        assert!(frechet_distance(&xs, &ys) > 10.0);
+    }
+
+    #[test]
+    fn argmax_and_probs() {
+        assert_eq!(argmax_rows(&[0.1, 0.9, 0.8, 0.2], 2), vec![1, 0]);
+        let p = nll_to_probs(&[1.0, 2.0]);
+        assert!(p[0] > p[1]);
+        assert!((p[0] + p[1] - 1.0).abs() < 1e-9);
+    }
+}

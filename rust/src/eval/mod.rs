@@ -1,0 +1,4 @@
+//! Evaluation metrics and harnesses for the paper's benchmark suite.
+
+pub mod harness;
+pub mod metrics;

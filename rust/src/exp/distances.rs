@@ -1,0 +1,126 @@
+//! Distance / energy analyses: perturbation study (Fig 3), transformation
+//! & weight distances vs LR (Fig 4), hyperspherical-energy shift (Fig 7).
+
+use anyhow::Result;
+
+use crate::data::corpus::Corpus;
+use crate::eval::harness::default_lr;
+use crate::exp::generative::{control_adapt, subject_adapt};
+use crate::exp::Ctx;
+use crate::peft::apply::{merge_into_base, peft_layout_for};
+use crate::peft::{metrics as pmetrics, MethodSpec};
+use crate::train::LmTrainer;
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+
+const CFG: &str = "tiny";
+
+/// Fig 3 — model behaviour vs perturbation strength.
+///
+/// Random transform parameters scaled by `s` are host-merged into the
+/// pretrained weights; we report the transformation distance and the NLL
+/// degradation on held-out text. ETHER's distance is constant by
+/// construction (Eq. 2); OFT/Naive diverge with `s`.
+pub fn fig3(ctx: &Ctx) -> Result<()> {
+    let base = ctx.pretrained_base(CFG)?;
+    let cfgi = ctx.engine.manifest.config(CFG)?.clone();
+    let corpus = Corpus::new(1234);
+    let eval_batch = corpus.lm_batch(cfgi.batch, cfgi.seq, 31_337);
+    let base_tr = LmTrainer::eval_only(&ctx.engine, CFG, "none", base.clone(), vec![0.0])?;
+    let nll0 = base_tr.eval_loss(&eval_batch)? as f64;
+
+    let mut t = Table::new(
+        "Fig 3 — behaviour change vs perturbation strength (ΔNLL on held-out text)",
+        &["method", "strength", "‖T−I‖F", "ΔNLL"],
+    );
+    for method in ["ether_n4", "etherplus_n4", "oft_n4", "naive_n4"] {
+        let spec = MethodSpec::parse(method)?;
+        let layout = peft_layout_for(cfgi.dims(), &spec);
+        for strength in [0.25f32, 1.0, 4.0, 16.0] {
+            let mut rng = Rng::new(0xF16_3 ^ (strength as u64));
+            let peft: Vec<f32> = rng.normal_vec(layout.total, strength);
+            let dist = pmetrics::transformation_distance(cfgi.dims(), &spec, &peft, &layout)?;
+            let merged =
+                merge_into_base(cfgi.dims(), &spec, &base, &cfgi.base_layout, &peft, &layout)?;
+            let tr = LmTrainer::eval_only(&ctx.engine, CFG, "none", merged, vec![0.0])?;
+            let nll = tr.eval_loss(&eval_batch)? as f64;
+            t.row(vec![
+                method.into(),
+                format!("{strength}"),
+                Table::f(dist),
+                Table::f(nll - nll0),
+            ]);
+        }
+    }
+    t.emit(&ctx.reports, "fig3")?;
+    println!(
+        "note: ETHER rows keep ‖T−I‖F constant across strengths (paper Eq. 2); \
+         OFT/Naive distances and ΔNLL explode."
+    );
+    Ok(())
+}
+
+/// Fig 4 — transformation & weights distance at convergence vs LR.
+pub fn fig4(ctx: &Ctx) -> Result<()> {
+    let steps = ctx.steps(160);
+    let cfgi = ctx.engine.manifest.config(CFG)?.clone();
+    let mut t = Table::new(
+        "Fig 4 — distances at convergence vs learning rate (subject task)",
+        &["method", "lr", "transform dist", "weights dist"],
+    );
+    for method in ["ether_n4", "etherplus_n4", "oft_n4", "naive_n4", "lora_r8"] {
+        let spec = MethodSpec::parse(method)?;
+        for mult in [1.0f32, 10.0, 100.0] {
+            let lr = default_lr(method) * mult;
+            let (tr, _) = subject_adapt(ctx, method, lr, steps, 21)?;
+            let layout = ctx.engine.manifest.peft_layout(method, CFG)?;
+            let tdist =
+                pmetrics::transformation_distance(cfgi.dims(), &spec, &tr.peft, layout)?;
+            let merged = tr.merged_base()?;
+            let wdist = pmetrics::weights_distance(tr.base(), &merged);
+            t.row(vec![
+                method.into(),
+                format!("{lr:.1e}"),
+                Table::f(tdist),
+                Table::f(wdist),
+            ]);
+        }
+    }
+    t.emit(&ctx.reports, "fig4")
+}
+
+/// Fig 7 — hyperspherical-energy difference finetuned vs pretrained.
+pub fn fig7(ctx: &Ctx) -> Result<()> {
+    let steps = ctx.steps(200);
+    let cfgi = ctx.engine.manifest.config(CFG)?.clone();
+    let base = ctx.pretrained_base(CFG)?;
+    let he0 = pmetrics::model_he(cfgi.dims(), &base, &cfgi.base_layout, 48)?;
+    let mut t = Table::new(
+        "Fig 7 — ΔHE between finetuned and pretrained weights",
+        &["method", "task", "ΔHE", "|ΔHE|/HE0 %"],
+    );
+    for method in ["oft_n4", "ether_n4", "naive_n4", "etherplus_n4"] {
+        for task in ["subject", "s2i"] {
+            let tr = if task == "subject" {
+                subject_adapt(ctx, method, default_lr(method), steps, 40)?.0
+            } else {
+                control_adapt(ctx, method, default_lr(method), steps)?
+            };
+            let merged = tr.merged_base()?;
+            let he = pmetrics::model_he(cfgi.dims(), &merged, &cfgi.base_layout, 48)?;
+            t.row(vec![
+                method.into(),
+                task.into(),
+                Table::f(he - he0),
+                format!("{:.3}%", 100.0 * (he - he0).abs() / he0),
+            ]);
+        }
+    }
+    t.emit(&ctx.reports, "fig7")?;
+    println!(
+        "note: orthogonal transforms (OFT, ETHER) leave HE ≈ unchanged; \
+         non-orthogonal Naive and ETHER+ shift it — yet ETHER+ wins the \
+         benchmarks (paper §5.3's argument against HE's causal role)."
+    );
+    Ok(())
+}

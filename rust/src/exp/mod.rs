@@ -1,0 +1,131 @@
+//! Experiment drivers — one per table/figure of the paper's evaluation
+//! (see DESIGN.md §6 for the full index). Every driver prints a
+//! paper-style table and writes CSV under `reports/`.
+//!
+//! `ether exp <id> [--quick] [--steps N]` — `--quick` shrinks budgets by
+//! ~8× for smoke runs; EXPERIMENTS.md records full-budget outputs.
+
+pub mod distances;
+pub mod flops;
+pub mod generative;
+pub mod language;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::engine::PjrtEngine;
+use crate::train::{checkpoint, Pretrainer, Schedule};
+use crate::util::cli::Args;
+
+/// Shared driver context.
+pub struct Ctx {
+    pub engine: PjrtEngine,
+    pub quick: bool,
+    pub steps_override: Option<u64>,
+    pub reports: std::path::PathBuf,
+}
+
+impl Ctx {
+    pub fn new(args: &Args) -> Result<Ctx> {
+        Ok(Ctx {
+            engine: PjrtEngine::open_default()?,
+            quick: args.flag("quick"),
+            steps_override: args.opt("steps").map(|s| s.parse()).transpose()?,
+            reports: crate::reports_dir(),
+        })
+    }
+
+    /// Budget helper: full-scale N, shrunk under `--quick`.
+    pub fn steps(&self, full: u64) -> u64 {
+        self.steps_override.unwrap_or(if self.quick { (full / 8).max(8) } else { full })
+    }
+
+    /// Load (or produce and cache) the pretrained base for a config.
+    /// Every finetuning experiment starts from this checkpoint — the
+    /// stand-in for the paper's pretrained foundation models.
+    pub fn pretrained_base(&self, cfg: &str) -> Result<Vec<f32>> {
+        let path = checkpoint::path_for(&format!("{cfg}_pretrained"));
+        if path.exists() {
+            let (vec, _) = checkpoint::load(&path)?;
+            let want = self.engine.manifest.config(cfg)?.base_size;
+            if vec.len() == want {
+                return Ok(vec);
+            }
+            log::warn!("checkpoint {path:?} stale (size mismatch); re-pretraining");
+        }
+        let steps = self.steps(if cfg == "tiny" { 600 } else { 300 });
+        log::info!("pretraining {cfg} for {steps} steps (cached at {path:?})");
+        let corpus = crate::data::corpus::Corpus::new(1234);
+        let c = self.engine.manifest.config(cfg)?.clone();
+        let mut pre = Pretrainer::new(&self.engine, cfg)?;
+        let sched = Schedule::Cosine { base: 3e-3, warmup: steps / 10, total: steps };
+        for i in 0..steps {
+            let batch = corpus.lm_batch(c.batch, c.seq, i);
+            let loss = pre.step(&batch, sched.lr(i))?;
+            if i % (steps / 10).max(1) == 0 {
+                log::info!("pretrain {cfg} step {i}: loss {loss:.3}");
+            }
+        }
+        checkpoint::save(
+            &path,
+            &pre.base,
+            crate::util::json::Value::obj(vec![
+                ("cfg", crate::util::json::Value::s(cfg)),
+                ("steps", crate::util::json::Value::num(steps as f64)),
+                (
+                    "final_loss",
+                    crate::util::json::Value::num(*pre.losses.last().unwrap_or(&f32::NAN) as f64),
+                ),
+            ]),
+        )?;
+        Ok(pre.base)
+    }
+
+    /// Reported parameter count (paper convention) for a method on a cfg.
+    pub fn params_of(&self, method: &str, cfg: &str) -> usize {
+        if method == "none" {
+            return 0;
+        }
+        self.engine
+            .manifest
+            .method(method)
+            .ok()
+            .and_then(|m| m.params.get(cfg).map(|p| p.1))
+            .unwrap_or(0)
+    }
+}
+
+/// All experiment ids in paper order.
+pub const ALL: [&str; 16] = [
+    "table1", "fig3", "fig4", "fig5", "fig6", "table2", "table3", "table4", "table5",
+    "table6", "fig7", "table9", "table10", "table11", "table12", "fig8",
+];
+
+/// Dispatch an experiment id.
+pub fn run(id: &str, args: &Args) -> Result<()> {
+    match id {
+        "table1" => flops::table1(args),
+        "fig3" => distances::fig3(&Ctx::new(args)?),
+        "fig4" => distances::fig4(&Ctx::new(args)?),
+        "fig7" => distances::fig7(&Ctx::new(args)?),
+        "fig5" => generative::fig5(&Ctx::new(args)?),
+        "fig6" => generative::fig6(&Ctx::new(args)?),
+        "fig8" => generative::fig8(&Ctx::new(args)?),
+        "table2" => generative::table2(&Ctx::new(args)?),
+        "table3" => generative::table3(&Ctx::new(args)?),
+        "table6" => generative::table6(&Ctx::new(args)?),
+        "table9" => generative::table9(&Ctx::new(args)?),
+        "table11" => generative::table11(&Ctx::new(args)?),
+        "table4" => language::table4(&Ctx::new(args)?),
+        "table5" => language::table5(&Ctx::new(args)?),
+        "table10" => language::table10(&Ctx::new(args)?),
+        "table12" => language::table12(&Ctx::new(args)?),
+        "all" => {
+            for id in ALL {
+                println!("\n################ {id} ################");
+                run(id, args)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment {other:?}; ids: {ALL:?} or 'all'"),
+    }
+}

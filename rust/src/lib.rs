@@ -1,0 +1,72 @@
+//! # ETHER — Efficient Finetuning via Hyperplane Reflections
+//!
+//! A production-oriented reproduction of *ETHER: Efficient Finetuning of
+//! Large-Scale Models with Hyperplane Reflections* (Bini et al., ICML
+//! 2024) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1** (build time): Pallas kernels for the block-parallel
+//!   multiplicative weight transforms (`python/compile/kernels/`).
+//! * **Layer 2** (build time): a functional JAX transformer with the full
+//!   PEFT family (ETHER, ETHER+, OFT, Naive, LoRA, VeRA, full-FT) lowered
+//!   AOT to HLO text artifacts (`python/compile/`).
+//! * **Layer 3** (this crate): the runtime — PJRT execution of the
+//!   artifacts, the training loop, the multi-adapter serving coordinator,
+//!   host-side transform math for analysis, and the experiment drivers
+//!   that regenerate every table and figure of the paper's evaluation.
+//!
+//! Python never runs on the request path: after `make artifacts`, the
+//! `ether` binary is self-contained.
+//!
+//! Module map (see `DESIGN.md` for the full system inventory):
+//!
+//! | module         | contents                                              |
+//! |----------------|-------------------------------------------------------|
+//! | [`util`]       | offline substrates: JSON, RNG, CLI, pool, benchkit    |
+//! | [`tensor`]     | dense f32 matrices, Gauss-Jordan solve, LU determinant|
+//! | [`peft`]       | host-side transform family + distance / HE metrics    |
+//! | [`runtime`]    | PJRT client, manifest, typed executables, mock engine |
+//! | [`data`]       | synthetic workloads (corpus, SynthGLUE, instructions, |
+//! |                | generation control, subject-driven)                   |
+//! | [`train`]      | training loop, LR schedules, checkpoints, sweeps      |
+//! | [`coordinator`]| adapter registry, dynamic batcher, serving loop       |
+//! | [`eval`]       | metric suite + evaluation harnesses                   |
+//! | [`exp`]        | one driver per paper table / figure                   |
+
+pub mod util;
+pub mod tensor;
+pub mod peft;
+pub mod runtime;
+pub mod data;
+pub mod train;
+pub mod coordinator;
+pub mod eval;
+pub mod exp;
+
+/// Canonical location of the AOT artifacts relative to the repo root.
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Resolve the artifacts directory: `$ETHER_ARTIFACTS` if set, otherwise
+/// walk up from the current directory looking for `artifacts/manifest.json`
+/// (so tests and benches work from any cargo target dir).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("ETHER_ARTIFACTS") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join(ARTIFACTS_DIR);
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return ARTIFACTS_DIR.into();
+        }
+    }
+}
+
+/// Resolve the reports output directory (created on demand).
+pub fn reports_dir() -> std::path::PathBuf {
+    let dir = artifacts_dir().parent().map(|p| p.join("reports")).unwrap_or_else(|| "reports".into());
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}

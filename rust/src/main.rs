@@ -1,0 +1,289 @@
+//! `ether` — the Layer-3 launcher.
+//!
+//! ```text
+//! ether pretrain  [--cfg tiny|small] [--steps N] [--lr X]
+//! ether finetune  [--cfg C] --method M --task subject|control|instruct [--steps N] [--lr X]
+//! ether eval      [--cfg C]                                  # un-tuned baseline scores
+//! ether serve     [--cfg C] [--adapters N] [--requests N] [--max-batch B]
+//! ether exp       <table1|fig3|…|all> [--quick] [--steps N]
+//! ether info                                                 # manifest summary
+//! ```
+
+use anyhow::{bail, Result};
+
+use ether::coordinator::{server::PjrtBackend, AdapterRegistry, BatcherCfg, Request, Server};
+use ether::data::corpus::Corpus;
+use ether::eval::harness::default_lr;
+use ether::exp;
+use ether::runtime::engine::PjrtEngine;
+use ether::train::{checkpoint, LmTrainer, Pretrainer, Schedule};
+use ether::util::cli::Args;
+use ether::util::json::Value;
+use ether::util::rng::Rng;
+
+fn main() {
+    ether::util::logging::init();
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.cmd.as_str() {
+        "pretrain" => cmd_pretrain(args),
+        "finetune" => cmd_finetune(args),
+        "eval" => cmd_eval(args),
+        "serve" => cmd_serve(args),
+        "exp" => {
+            let id = args
+                .positional
+                .first()
+                .map(String::as_str)
+                .unwrap_or("all")
+                .to_string();
+            exp::run(&id, args)
+        }
+        "info" => cmd_info(args),
+        _ => {
+            println!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+ether — ETHER (hyperplane-reflection PEFT) reproduction, ICML 2024
+commands:
+  pretrain   train the base model on the synthetic corpus
+  finetune   adapt with a PEFT method on a downstream task
+  eval       score the un-tuned base on the MC suites
+  serve      multi-adapter serving demo with dynamic batching
+  exp <id>   regenerate a paper table/figure (table1..12, fig3..8, all)
+  info       artifact + method summary from the manifest";
+
+fn cmd_pretrain(args: &Args) -> Result<()> {
+    let cfg = args.str_or("cfg", "tiny");
+    let steps = args.usize_or("steps", 600)? as u64;
+    let lr = args.f32_or("lr", 3e-3)?;
+    args.finish()?;
+    let engine = PjrtEngine::open_default()?;
+    let c = engine.manifest.config(&cfg)?.clone();
+    let corpus = Corpus::new(1234);
+    let mut pre = Pretrainer::new(&engine, &cfg)?;
+    let sched = Schedule::Cosine { base: lr, warmup: steps / 10, total: steps };
+    let t0 = std::time::Instant::now();
+    for i in 0..steps {
+        let batch = corpus.lm_batch(c.batch, c.seq, i);
+        let loss = pre.step(&batch, sched.lr(i))?;
+        if i % (steps / 20).max(1) == 0 || i + 1 == steps {
+            println!(
+                "step {i:>6}  loss {loss:.4}  lr {:.2e}  {:.1} steps/s",
+                sched.lr(i),
+                (i + 1) as f64 / t0.elapsed().as_secs_f64()
+            );
+        }
+    }
+    let path = checkpoint::path_for(&format!("{cfg}_pretrained"));
+    checkpoint::save(
+        &path,
+        &pre.base,
+        Value::obj(vec![
+            ("cfg", Value::s(cfg.clone())),
+            ("steps", Value::num(steps as f64)),
+            ("final_loss", Value::num(*pre.losses.last().unwrap() as f64)),
+        ]),
+    )?;
+    println!("saved pretrained base -> {path:?}");
+    Ok(())
+}
+
+fn load_pretrained(engine: &PjrtEngine, cfg: &str) -> Result<Vec<f32>> {
+    let path = checkpoint::path_for(&format!("{cfg}_pretrained"));
+    if path.exists() {
+        Ok(checkpoint::load(&path)?.0)
+    } else {
+        log::warn!("no pretrained checkpoint at {path:?}; using init weights");
+        engine.manifest.load_init(&format!("{cfg}_base"))
+    }
+}
+
+fn cmd_finetune(args: &Args) -> Result<()> {
+    let cfg = args.str_or("cfg", "tiny");
+    let method = args.str_or("method", "etherplus_n4");
+    let task = args.str_or("task", "instruct");
+    let steps = args.usize_or("steps", 300)? as u64;
+    let lr = args.f32_or("lr", default_lr(&method))?;
+    args.finish()?;
+    let engine = PjrtEngine::open_default()?;
+    let c = engine.manifest.config(&cfg)?.clone();
+    let base = load_pretrained(&engine, &cfg)?;
+    let mut tr = LmTrainer::new(&engine, &cfg, &method, Some(base))?;
+    let sched = Schedule::Cosine { base: lr, warmup: steps / 10, total: steps };
+    let corpus = Corpus::new(1234);
+    let instruct = ether::data::instruct::InstructData::new(Corpus::new(1234), 5);
+    let control = ether::data::control::ControlData::new(77);
+    let subject = ether::data::subject::SubjectData::new(40);
+    let t0 = std::time::Instant::now();
+    for i in 0..steps {
+        let batch = match task.as_str() {
+            "instruct" => instruct.train_batch(c.batch, c.seq, i),
+            "control" => control.train_batch(c.batch, c.seq, i),
+            "subject" => subject.train_batch(c.batch, c.seq, i),
+            "corpus" => corpus.lm_batch(c.batch, c.seq, i),
+            other => bail!("unknown task {other:?}"),
+        };
+        let loss = tr.step(&batch, sched.lr(i))?;
+        if i % (steps / 20).max(1) == 0 || i + 1 == steps {
+            println!(
+                "step {i:>6}  loss {loss:.4}  lr {:.2e}  {:.1} steps/s",
+                sched.lr(i),
+                (i + 1) as f64 / t0.elapsed().as_secs_f64()
+            );
+        }
+    }
+    let path = checkpoint::path_for(&format!("{cfg}_{method}_{task}"));
+    checkpoint::save(
+        &path,
+        &tr.peft,
+        Value::obj(vec![
+            ("cfg", Value::s(cfg.clone())),
+            ("method", Value::s(method.clone())),
+            ("task", Value::s(task.clone())),
+            ("steps", Value::num(steps as f64)),
+        ]),
+    )?;
+    println!("saved adapter ({} params) -> {path:?}", tr.peft.len());
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = args.str_or("cfg", "tiny");
+    args.finish()?;
+    let engine = PjrtEngine::open_default()?;
+    let base = load_pretrained(&engine, &cfg)?;
+    let tr = LmTrainer::eval_only(&engine, &cfg, "none", base, vec![0.0])?;
+    let data = ether::data::instruct::InstructData::new(Corpus::new(1234), 5);
+    let (mmlu, _) = ether::eval::harness::mc_eval(&tr, &data, &data.mmlu(32))?;
+    let (arc, _) = ether::eval::harness::mc_eval(&tr, &data, &data.arc(24))?;
+    let (t1, t2) = ether::eval::harness::mc_eval(&tr, &data, &data.truthful())?;
+    println!("base model 0-shot: MMLU {mmlu:.2}  ARC {arc:.2}  Tru-1 {t1:.2}  Tru-2 {t2:.2}");
+    Ok(())
+}
+
+/// Multi-adapter serving demo: register N ETHER adapters, fire M
+/// requests, pump the coordinator, report latency / throughput / cache.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = args.str_or("cfg", "tiny");
+    let n_adapters = args.usize_or("adapters", 6)?;
+    let n_requests = args.usize_or("requests", 48)?;
+    let max_batch = args.usize_or("max-batch", 8)?;
+    let cache = args.usize_or("cache", 4)?;
+    args.finish()?;
+    let engine = PjrtEngine::open_default()?;
+    let playout = engine.manifest.peft_layout("ether_n4", &cfg)?.clone();
+
+    // Register adapters: perturbed ETHER inits (stand-ins for per-user
+    // finetuned adapters — each is just `playout.total` floats).
+    let mut registry = AdapterRegistry::new();
+    let init = engine.manifest.load_init(&format!("{cfg}_ether_n4_peft"))?;
+    let mut rng = Rng::new(2024);
+    for a in 0..n_adapters {
+        let mut peft = init.clone();
+        for p in peft.iter_mut() {
+            *p += 0.3 * rng.normal();
+        }
+        registry.register(&format!("user{a}"), "ether_n4", &cfg, peft);
+    }
+    println!(
+        "registered {n_adapters} adapters ({} params each, {:.1} KB total)",
+        playout.total,
+        (registry.total_params() * 4) as f64 / 1024.0
+    );
+
+    let mut server = Server::new(
+        registry,
+        BatcherCfg { max_batch, max_wait: std::time::Duration::from_millis(5) },
+    );
+    let mut backend = PjrtBackend::new(&engine, &cfg, cache);
+    let t0 = std::time::Instant::now();
+    for i in 0..n_requests {
+        // zipf-ish adapter popularity
+        let adapter =
+            format!("user{}", (rng.f64().powi(2) * n_adapters as f64) as usize % n_adapters);
+        let mut prompt = vec![ether::data::BOS];
+        prompt.extend(ether::data::encode("the "));
+        server.batcher.push(Request {
+            id: i as u64,
+            adapter,
+            prompt,
+            max_new: 8,
+            enqueued: std::time::Instant::now(),
+        });
+    }
+    let mut responses = 0;
+    server.pump(
+        &mut backend,
+        std::time::Instant::now() + std::time::Duration::from_secs(1),
+        |r| {
+            responses += 1;
+            if responses <= 3 {
+                println!(
+                    "  {} [{}] {:?} ({} ms, batch {})",
+                    r.id,
+                    r.adapter,
+                    ether::data::decode(&r.output),
+                    r.latency.as_millis(),
+                    r.batch_size
+                );
+            }
+        },
+    )?;
+    let dt = t0.elapsed().as_secs_f64();
+    let s = &server.stats;
+    println!(
+        "served {} requests in {dt:.2}s ({:.1} req/s) | batches {} (mean size {:.1}) | \
+         p50 {:.1} ms p95 {:.1} ms | merge cache: {} hits / {} misses",
+        s.served,
+        s.served as f64 / dt,
+        s.batches,
+        s.mean_batch(),
+        s.p50_ms(),
+        s.p95_ms(),
+        backend.cache.hits,
+        backend.cache.misses,
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    args.finish()?;
+    let dir = ether::artifacts_dir();
+    let manifest = ether::runtime::Manifest::load(&dir)?;
+    println!("artifacts dir: {dir:?}");
+    println!("configs:");
+    for (name, c) in &manifest.configs {
+        println!(
+            "  {name}: d={} L={} H={} ff={} seq={} batch={} ({} base params)",
+            c.d_model, c.n_layers, c.n_heads, c.d_ff, c.seq, c.batch, c.base_size
+        );
+    }
+    println!("methods (reported params, paper convention):");
+    for (name, m) in &manifest.methods {
+        let counts: Vec<String> = m
+            .params
+            .iter()
+            .map(|(cfg, (_, rep, _))| format!("{cfg}: {rep}"))
+            .collect();
+        println!("  {name:<18} {}", counts.join("  "));
+    }
+    println!("{} artifacts, {} init dumps", manifest.artifacts.len(), manifest.inits.len());
+    Ok(())
+}

@@ -1,0 +1,260 @@
+//! Apply a PEFT adapter to full base weights on the host ("host merge").
+//!
+//! The serving coordinator uses the HLO `merge` artifact on its hot path;
+//! this host implementation exists for (a) the perturbation and distance
+//! studies that sweep transform parameters without a runtime, (b) parity
+//! tests against the artifact, and (c) the merge micro-benchmarks.
+
+use anyhow::{bail, Result};
+
+use crate::peft::flat::Layout;
+use crate::peft::transforms as tf;
+use crate::peft::{adapted_matrices, MethodKind, MethodSpec};
+use crate::tensor::Mat;
+
+/// Model dimensions needed to interpret the layer-stacked layouts.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelDims {
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+}
+
+/// Extract layer `l` of adapted matrix `name` from the flat base weights.
+pub fn weight_matrix(
+    base: &[f32],
+    base_layout: &Layout,
+    name: &str,
+    l: usize,
+    rows: usize,
+    cols: usize,
+) -> Result<Mat> {
+    let slice = base_layout.view_layer(base, name, l)?;
+    anyhow::ensure!(slice.len() == rows * cols);
+    Ok(Mat::from_vec(rows, cols, slice.to_vec()))
+}
+
+/// Transform one weight matrix with this layer's adapter parameters.
+pub fn transform_matrix(
+    spec: &MethodSpec,
+    peft: &[f32],
+    peft_layout: &Layout,
+    name: &str,
+    l: usize,
+    w: &Mat,
+) -> Result<Mat> {
+    let n = spec.n_blocks;
+    let (d, f) = (w.rows, w.cols);
+    let get = |field: &str| peft_layout.view_layer(peft, &format!("{name}.{field}"), l);
+    Ok(match spec.kind {
+        MethodKind::None => w.clone(),
+        MethodKind::Ether => tf::ether_apply(get("u")?, n, w),
+        MethodKind::EtherPlus => {
+            let mut out = tf::ether_plus_left(get("u")?, get("v")?, n, w);
+            if spec.sides == 2 {
+                out = tf::ether_plus_right(&out, get("ru")?, get("rv")?, n);
+            }
+            out
+        }
+        MethodKind::Oft => {
+            let blocks = tf::cayley_blocks(get("r")?, n, d / n);
+            let mut out = tf::bdmm(&blocks, w);
+            if spec.magnitude_refit {
+                let mag = get("mag")?;
+                for r in 0..d {
+                    let row = out.row_mut(r);
+                    for c in 0..f {
+                        row[c] *= 1.0 + mag[c];
+                    }
+                }
+            }
+            out
+        }
+        MethodKind::Naive => {
+            let blocks = tf::naive_blocks(get("r")?, n, d / n);
+            tf::bdmm(&blocks, w)
+        }
+        MethodKind::Lora => {
+            let a = Mat::from_vec(d, spec.rank, get("a")?.to_vec());
+            let b = Mat::from_vec(spec.rank, f, get("b")?.to_vec());
+            tf::lora_apply(&a, &b, w)
+        }
+        MethodKind::Full => Mat::from_vec(d, f, get("w")?.to_vec()),
+        MethodKind::Vera => {
+            // VeRA's frozen projections are jax-seeded HLO constants; the
+            // host cannot reproduce them bit-exactly — merge via artifact.
+            bail!("host merge unsupported for vera (use the merge artifact)")
+        }
+    })
+}
+
+/// Merge an adapter into a copy of the base weights (all layers, all six
+/// adapted matrices). Mirrors the HLO `merge` artifact.
+pub fn merge_into_base(
+    dims: ModelDims,
+    spec: &MethodSpec,
+    base: &[f32],
+    base_layout: &Layout,
+    peft: &[f32],
+    peft_layout: &Layout,
+) -> Result<Vec<f32>> {
+    let mut out = base.to_vec();
+    for (name, d, f) in adapted_matrices(dims.d_model, dims.d_ff) {
+        for l in 0..dims.n_layers {
+            let w = weight_matrix(base, base_layout, name, l, d, f)?;
+            let t = transform_matrix(spec, peft, peft_layout, name, l, &w)?;
+            base_layout
+                .view_layer_mut(&mut out, name, l)?
+                .copy_from_slice(&t.data);
+        }
+    }
+    Ok(out)
+}
+
+/// Build the peft layout the same way `python/compile/peft.py` does
+/// (used when no manifest is available, e.g. pure-host studies).
+pub fn peft_layout_for(dims: ModelDims, spec: &MethodSpec) -> Layout {
+    let mut items: Vec<(String, Vec<usize>)> = vec![];
+    let l = dims.n_layers;
+    let n = spec.n_blocks;
+    let r = spec.rank;
+    for (name, d, f) in adapted_matrices(dims.d_model, dims.d_ff) {
+        match spec.kind {
+            MethodKind::Ether => items.push((format!("{name}.u"), vec![l, n, d / n])),
+            MethodKind::EtherPlus => {
+                items.push((format!("{name}.u"), vec![l, n, d / n]));
+                items.push((format!("{name}.v"), vec![l, n, d / n]));
+                if spec.sides == 2 {
+                    items.push((format!("{name}.ru"), vec![l, n, f / n]));
+                    items.push((format!("{name}.rv"), vec![l, n, f / n]));
+                }
+            }
+            MethodKind::Oft => {
+                items.push((format!("{name}.r"), vec![l, n, d / n, d / n]));
+                if spec.magnitude_refit {
+                    items.push((format!("{name}.mag"), vec![l, f]));
+                }
+            }
+            MethodKind::Naive => items.push((format!("{name}.r"), vec![l, n, d / n, d / n])),
+            MethodKind::Lora => {
+                items.push((format!("{name}.a"), vec![l, d, r]));
+                items.push((format!("{name}.b"), vec![l, r, f]));
+            }
+            MethodKind::Vera => {
+                items.push((format!("{name}.dv"), vec![l, r]));
+                items.push((format!("{name}.bv"), vec![l, f]));
+            }
+            MethodKind::Full => items.push((format!("{name}.w"), vec![l, d, f])),
+            MethodKind::None => {}
+        }
+    }
+    Layout::new(items)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tiny_dims() -> ModelDims {
+        ModelDims { d_model: 16, d_ff: 32, n_layers: 2 }
+    }
+
+    fn fake_base(dims: ModelDims) -> (Vec<f32>, Layout) {
+        // Only the six adapted matrices — enough for merge tests.
+        let l = dims.n_layers;
+        let layout = Layout::new(
+            adapted_matrices(dims.d_model, dims.d_ff)
+                .into_iter()
+                .map(|(n, d, f)| (n.to_string(), vec![l, d, f]))
+                .collect(),
+        );
+        let mut rng = Rng::new(11);
+        (rng.normal_vec(layout.total, 0.05), layout)
+    }
+
+    #[test]
+    fn merge_neutral_methods_are_identity() {
+        let dims = tiny_dims();
+        let (base, bl) = fake_base(dims);
+        for name in ["oft_n4", "naive_n4", "lora_r4"] {
+            let spec = MethodSpec::parse(name).unwrap();
+            let pl = peft_layout_for(dims, &spec);
+            // zero init except lora.a (any value works since b = 0)
+            let peft = vec![0.0; pl.total];
+            let merged =
+                merge_into_base(dims, &spec, &base, &bl, &peft, &pl).unwrap();
+            let diff: f32 = merged
+                .iter()
+                .zip(&base)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f32::max);
+            assert!(diff < 1e-5, "{name}: {diff}");
+        }
+        // etherplus neutral when v == u
+        let spec = MethodSpec::parse("etherplus_n4").unwrap();
+        let pl = peft_layout_for(dims, &spec);
+        let mut rng = Rng::new(5);
+        let mut peft = vec![0.0; pl.total];
+        for (mname, _, _) in adapted_matrices(dims.d_model, dims.d_ff) {
+            for l in 0..dims.n_layers {
+                let u: Vec<f32> = rng.normal_vec(
+                    pl.entry(&format!("{mname}.u")).unwrap().size / dims.n_layers,
+                    1.0,
+                );
+                pl.view_layer_mut(&mut peft, &format!("{mname}.u"), l)
+                    .unwrap()
+                    .copy_from_slice(&u);
+                pl.view_layer_mut(&mut peft, &format!("{mname}.v"), l)
+                    .unwrap()
+                    .copy_from_slice(&u);
+                let ru: Vec<f32> = rng.normal_vec(
+                    pl.entry(&format!("{mname}.ru")).unwrap().size / dims.n_layers,
+                    1.0,
+                );
+                pl.view_layer_mut(&mut peft, &format!("{mname}.ru"), l)
+                    .unwrap()
+                    .copy_from_slice(&ru);
+                pl.view_layer_mut(&mut peft, &format!("{mname}.rv"), l)
+                    .unwrap()
+                    .copy_from_slice(&ru);
+            }
+        }
+        let merged = merge_into_base(dims, &spec, &base, &bl, &peft, &pl).unwrap();
+        let diff: f32 = merged
+            .iter()
+            .zip(&base)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(diff < 1e-5, "{diff}");
+    }
+
+    #[test]
+    fn ether_merge_preserves_frobenius_per_matrix() {
+        let dims = tiny_dims();
+        let (base, bl) = fake_base(dims);
+        let spec = MethodSpec::parse("ether_n4").unwrap();
+        let pl = peft_layout_for(dims, &spec);
+        let mut rng = Rng::new(6);
+        let peft = rng.normal_vec(pl.total, 1.0);
+        let merged = merge_into_base(dims, &spec, &base, &bl, &peft, &pl).unwrap();
+        for (name, d, f) in adapted_matrices(dims.d_model, dims.d_ff) {
+            for l in 0..dims.n_layers {
+                let w0 = weight_matrix(&base, &bl, name, l, d, f).unwrap();
+                let w1 = weight_matrix(&merged, &bl, name, l, d, f).unwrap();
+                assert!((w0.fro() - w1.fro()).abs() < 1e-3, "{name}[{l}]");
+                assert!(w0.max_abs_diff(&w1) > 1e-4, "{name}[{l}] unchanged");
+            }
+        }
+    }
+
+    #[test]
+    fn vera_host_merge_rejected() {
+        let dims = tiny_dims();
+        let (base, bl) = fake_base(dims);
+        let spec = MethodSpec::parse("vera_r4").unwrap();
+        let pl = peft_layout_for(dims, &spec);
+        let peft = vec![0.0; pl.total];
+        assert!(merge_into_base(dims, &spec, &base, &bl, &peft, &pl).is_err());
+    }
+}

@@ -1,0 +1,142 @@
+//! Flat-vector parameter layouts (the L2↔L3 ABI).
+//!
+//! Every artifact exchanges parameters as a single flat f32 vector; the
+//! manifest records `[[name, shape], …]` in vector order. `Layout` gives
+//! named, shaped views into such vectors on the Rust side.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Value;
+
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// An ordered list of named tensors packed into one flat vector.
+#[derive(Clone, Debug, Default)]
+pub struct Layout {
+    pub entries: Vec<Entry>,
+    index: BTreeMap<String, usize>,
+    pub total: usize,
+}
+
+impl Layout {
+    pub fn new(items: Vec<(String, Vec<usize>)>) -> Layout {
+        let mut entries = vec![];
+        let mut index = BTreeMap::new();
+        let mut offset = 0;
+        for (name, shape) in items {
+            let size: usize = shape.iter().product();
+            index.insert(name.clone(), entries.len());
+            entries.push(Entry { name, shape, offset, size });
+            offset += size;
+        }
+        Layout { entries, index, total: offset }
+    }
+
+    /// Parse the manifest JSON form `[["name", [dims…]], …]`.
+    pub fn from_json(v: &Value) -> Result<Layout> {
+        let mut items = vec![];
+        for pair in v.as_arr()? {
+            let pair = pair.as_arr()?;
+            let name = pair[0].as_str()?.to_string();
+            let shape = pair[1]
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<Vec<_>>>()?;
+            items.push((name, shape));
+        }
+        Ok(Layout::new(items))
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.index
+            .get(name)
+            .map(|&i| &self.entries[i])
+            .ok_or_else(|| anyhow!("layout has no entry {name:?}"))
+    }
+
+    /// Borrow the named tensor from a flat vector.
+    pub fn view<'a>(&self, vec: &'a [f32], name: &str) -> Result<&'a [f32]> {
+        let e = self.entry(name)?;
+        Ok(&vec[e.offset..e.offset + e.size])
+    }
+
+    pub fn view_mut<'a>(&self, vec: &'a mut [f32], name: &str) -> Result<&'a mut [f32]> {
+        let e = self.entry(name)?;
+        Ok(&mut vec[e.offset..e.offset + e.size])
+    }
+
+    /// Borrow layer `l` of a layer-stacked tensor (leading dim = layers).
+    pub fn view_layer<'a>(&self, vec: &'a [f32], name: &str, l: usize) -> Result<&'a [f32]> {
+        let e = self.entry(name)?;
+        let per = e.size / e.shape[0];
+        anyhow::ensure!(l < e.shape[0], "layer {l} out of range for {name}");
+        Ok(&vec[e.offset + l * per..e.offset + (l + 1) * per])
+    }
+
+    pub fn view_layer_mut<'a>(
+        &self,
+        vec: &'a mut [f32],
+        name: &str,
+        l: usize,
+    ) -> Result<&'a mut [f32]> {
+        let e = self.entry(name)?;
+        let per = e.size / e.shape[0];
+        anyhow::ensure!(l < e.shape[0], "layer {l} out of range for {name}");
+        Ok(&mut vec[e.offset + l * per..e.offset + (l + 1) * per])
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.index.contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn demo() -> Layout {
+        Layout::new(vec![
+            ("a".into(), vec![2, 3]),
+            ("b".into(), vec![4]),
+            ("wq.u".into(), vec![2, 4, 8]),
+        ])
+    }
+
+    #[test]
+    fn offsets_and_total() {
+        let l = demo();
+        assert_eq!(l.total, 6 + 4 + 64);
+        assert_eq!(l.entry("b").unwrap().offset, 6);
+        assert_eq!(l.entry("wq.u").unwrap().offset, 10);
+    }
+
+    #[test]
+    fn views() {
+        let l = demo();
+        let vec: Vec<f32> = (0..l.total).map(|i| i as f32).collect();
+        assert_eq!(l.view(&vec, "b").unwrap(), &[6.0, 7.0, 8.0, 9.0]);
+        let layer1 = l.view_layer(&vec, "wq.u", 1).unwrap();
+        assert_eq!(layer1.len(), 32);
+        assert_eq!(layer1[0], 10.0 + 32.0);
+        assert!(l.view(&vec, "nope").is_err());
+        assert!(l.view_layer(&vec, "wq.u", 2).is_err());
+    }
+
+    #[test]
+    fn from_json_matches_manual() {
+        let v = json::parse(r#"[["a", [2, 3]], ["b", [4]]]"#).unwrap();
+        let l = Layout::from_json(&v).unwrap();
+        assert_eq!(l.total, 10);
+        assert_eq!(l.entry("a").unwrap().shape, vec![2, 3]);
+    }
+}

@@ -1,0 +1,218 @@
+//! Analysis metrics from the paper: transformation distance (Fig. 4),
+//! weights distance (Fig. 4), and hyperspherical energy (Fig. 7 / §5.3).
+
+use anyhow::Result;
+
+use crate::peft::apply::{transform_matrix, ModelDims};
+use crate::peft::flat::Layout;
+use crate::peft::{adapted_matrices, MethodKind, MethodSpec};
+use crate::tensor::{l2_dist, Mat};
+
+/// Hyperspherical energy of a weight matrix: `Σ_{i<j} ‖ŵ_i − ŵ_j‖⁻¹`
+/// over unit-normalized rows (Liu et al. MHE with s = 1, as used by OFT).
+/// Rows are subsampled to `max_rows` for large matrices.
+pub fn hyperspherical_energy(w: &Mat, max_rows: usize) -> f64 {
+    let take = w.rows.min(max_rows);
+    let stride = (w.rows / take).max(1);
+    let rows: Vec<Vec<f64>> = (0..take)
+        .map(|i| {
+            let r = w.row(i * stride);
+            let n = (r.iter().map(|&x| (x as f64).powi(2)).sum::<f64>()).sqrt().max(1e-12);
+            r.iter().map(|&x| x as f64 / n).collect()
+        })
+        .collect();
+    let mut he = 0.0;
+    for i in 0..rows.len() {
+        for j in i + 1..rows.len() {
+            let d2: f64 = rows[i]
+                .iter()
+                .zip(&rows[j])
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            he += 1.0 / d2.sqrt().max(1e-9);
+        }
+    }
+    // ×2 for the symmetric pair convention used in the OFT paper.
+    2.0 * he
+}
+
+/// Total HE over all adapted matrices of a model (flat base weights).
+pub fn model_he(
+    dims: ModelDims,
+    base: &[f32],
+    base_layout: &Layout,
+    max_rows: usize,
+) -> Result<f64> {
+    let mut total = 0.0;
+    for (name, d, f) in adapted_matrices(dims.d_model, dims.d_ff) {
+        for l in 0..dims.n_layers {
+            let w = crate::peft::apply::weight_matrix(base, base_layout, name, l, d, f)?;
+            total += hyperspherical_energy(&w, max_rows);
+        }
+    }
+    Ok(total)
+}
+
+/// The paper's "Transformation Distance" (Fig. 4): aggregate
+/// `‖T − I‖_F` over layers and matrices.
+///
+/// For multiplicative methods T is the materialized (left-side, block-
+/// diagonal) multiplier. For additive methods (LoRA/VeRA) the analogous
+/// quantity is `‖ΔW‖_F`, the distance of the additive update from its
+/// neutral element 0 — reported on the same axis as in the paper.
+pub fn transformation_distance(
+    dims: ModelDims,
+    spec: &MethodSpec,
+    peft: &[f32],
+    peft_layout: &Layout,
+) -> Result<f64> {
+    let mut acc = 0.0f64;
+    for (name, d, f) in adapted_matrices(dims.d_model, dims.d_ff) {
+        for l in 0..dims.n_layers {
+            let dist2 = match spec.kind {
+                MethodKind::None => 0.0,
+                MethodKind::Lora | MethodKind::Vera | MethodKind::Full => {
+                    // ‖ΔW‖_F via transform of the zero matrix ⇒ ΔW itself.
+                    let zero = Mat::zeros(d, f);
+                    let delta = transform_matrix(spec, peft, peft_layout, name, l, &zero)?;
+                    delta.fro().powi(2)
+                }
+                _ => {
+                    // Materialize the left multiplier by transforming I.
+                    let eye = Mat::eye(d);
+                    let mut t = transform_matrix_left_only(spec, peft, peft_layout, name, l, &eye)?;
+                    if spec.kind == MethodKind::EtherPlus && spec.sides == 2 {
+                        // Include the right side on its own identity.
+                        let eye_f = Mat::eye(f);
+                        let get = |field: &str| {
+                            peft_layout.view_layer(peft, &format!("{name}.{field}"), l)
+                        };
+                        let tr = crate::peft::transforms::ether_plus_right(
+                            &eye_f,
+                            get("ru")?,
+                            get("rv")?,
+                            spec.n_blocks,
+                        );
+                        acc += tr.dist_from_identity().powi(2);
+                    }
+                    let d2 = t.dist_from_identity().powi(2);
+                    t.data.clear();
+                    d2
+                }
+            };
+            acc += dist2;
+        }
+    }
+    Ok(acc.sqrt())
+}
+
+fn transform_matrix_left_only(
+    spec: &MethodSpec,
+    peft: &[f32],
+    peft_layout: &Layout,
+    name: &str,
+    l: usize,
+    eye: &Mat,
+) -> Result<Mat> {
+    // For EtherPlus restrict to the left factor (right handled separately).
+    if spec.kind == MethodKind::EtherPlus {
+        let get = |field: &str| peft_layout.view_layer(peft, &format!("{name}.{field}"), l);
+        return Ok(crate::peft::transforms::ether_plus_left(
+            get("u")?,
+            get("v")?,
+            spec.n_blocks,
+            eye,
+        ));
+    }
+    transform_matrix(spec, peft, peft_layout, name, l, eye)
+}
+
+/// The paper's "Weights Distance" (Fig. 4): ‖W′ − W‖₂ over all weights.
+pub fn weights_distance(base: &[f32], merged: &[f32]) -> f64 {
+    l2_dist(base, merged)
+}
+
+/// Closed form for ETHER's transformation distance: every block is an
+/// exact reflection, so the total is `2·√(L · |mats| · n)` (paper Eq. 2
+/// generalized to the block-diagonal, multi-layer setting).
+pub fn ether_expected_distance(dims: ModelDims, n_blocks: usize) -> f64 {
+    let mats = adapted_matrices(dims.d_model, dims.d_ff).len();
+    2.0 * ((dims.n_layers * mats * n_blocks) as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::peft::apply::peft_layout_for;
+    use crate::util::rng::Rng;
+
+    fn dims() -> ModelDims {
+        ModelDims { d_model: 16, d_ff: 32, n_layers: 2 }
+    }
+
+    #[test]
+    fn he_of_orthogonal_rows_is_known() {
+        // Rows of I are mutually at distance √2: HE = 2 · C(n,2) / √2.
+        let eye = Mat::eye(8);
+        let he = hyperspherical_energy(&eye, 8);
+        let want = 2.0 * (8.0 * 7.0 / 2.0) / 2f64.sqrt();
+        assert!((he - want).abs() < 1e-6, "{he} vs {want}");
+    }
+
+    #[test]
+    fn he_invariant_under_householder() {
+        // Orthogonal transforms preserve pairwise angles ⇒ HE unchanged
+        // (the paper's §3.2 observation that ETHER retains HE).
+        let mut rng = Rng::new(0);
+        let w = Mat::randn(24, 24, 1.0, &mut rng);
+        let u = rng.normal_vec(24, 1.0);
+        // Right-multiplication by an orthogonal map preserves row norms
+        // and pairwise distances of rows.
+        let h = crate::peft::transforms::householder_dense(&u, 1);
+        let wt = w.matmul(&h);
+        let he0 = hyperspherical_energy(&w, 24);
+        let he1 = hyperspherical_energy(&wt, 24);
+        assert!((he0 - he1).abs() / he0 < 1e-6, "{he0} {he1}");
+    }
+
+    #[test]
+    fn ether_distance_matches_closed_form() {
+        let dims = dims();
+        let spec = MethodSpec::parse("ether_n4").unwrap();
+        let pl = peft_layout_for(dims, &spec);
+        let mut rng = Rng::new(1);
+        let peft = rng.normal_vec(pl.total, 1.0);
+        let dist = transformation_distance(dims, &spec, &peft, &pl).unwrap();
+        let want = ether_expected_distance(dims, 4);
+        assert!((dist - want).abs() < 1e-3, "{dist} vs {want}");
+    }
+
+    #[test]
+    fn etherplus_distance_bounded_by_ether() {
+        // max ‖H⁺ − I‖ ≤ max ‖H − I‖ (paper §3.3).
+        let dims = dims();
+        let ep = MethodSpec::parse("etherplus_n4").unwrap();
+        let pl = peft_layout_for(dims, &ep);
+        let mut rng = Rng::new(2);
+        for _ in 0..5 {
+            let peft = rng.normal_vec(pl.total, 1.0);
+            let dist = transformation_distance(dims, &ep, &peft, &pl).unwrap();
+            // two-sided: left bound 2√(L·mats·n) plus right bound same ⇒ √2×
+            let bound = 2f64.sqrt() * ether_expected_distance(dims, 4) + 1e-6;
+            assert!(dist <= bound, "{dist} > {bound}");
+        }
+    }
+
+    #[test]
+    fn naive_distance_grows_with_scale() {
+        let dims = dims();
+        let spec = MethodSpec::parse("naive_n4").unwrap();
+        let pl = peft_layout_for(dims, &spec);
+        let mut rng = Rng::new(3);
+        let peft: Vec<f32> = rng.normal_vec(pl.total, 1.0);
+        let d1 = transformation_distance(dims, &spec, &peft, &pl).unwrap();
+        let big: Vec<f32> = peft.iter().map(|x| x * 10.0).collect();
+        let d10 = transformation_distance(dims, &spec, &big, &pl).unwrap();
+        assert!(d10 > 5.0 * d1, "{d10} vs {d1}");
+    }
+}

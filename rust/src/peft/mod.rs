@@ -1,0 +1,222 @@
+//! Host-side implementation of the PEFT transform family.
+//!
+//! The authoritative training-time transforms live in the Layer-1 Pallas
+//! kernels; this module re-implements them on host tensors for everything
+//! the coordinator and the analysis drivers need *without* a PJRT round
+//! trip:
+//!
+//! * merging adapters into base weights on the serving path,
+//! * the perturbation / distance studies (paper Figs. 3, 4),
+//! * hyperspherical-energy analysis (paper Fig. 7),
+//! * property tests of the paper's mathematical claims (Eq. 2, §3.2/§3.3).
+//!
+//! Parity with the kernels is enforced by `rust/tests/transform_props.rs`
+//! (same math) and transitively by the Python kernel-vs-oracle tests.
+
+pub mod apply;
+pub mod flat;
+pub mod metrics;
+pub mod transforms;
+
+use anyhow::{bail, Result};
+
+/// Method family member (mirrors `python/compile/peft.py::MethodSpec`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MethodSpec {
+    pub kind: MethodKind,
+    pub n_blocks: usize,
+    pub rank: usize,
+    pub sides: u8,
+    pub magnitude_refit: bool,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MethodKind {
+    Ether,
+    EtherPlus,
+    Oft,
+    Naive,
+    Lora,
+    Vera,
+    Full,
+    None,
+}
+
+impl MethodKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MethodKind::Ether => "ether",
+            MethodKind::EtherPlus => "etherplus",
+            MethodKind::Oft => "oft",
+            MethodKind::Naive => "naive",
+            MethodKind::Lora => "lora",
+            MethodKind::Vera => "vera",
+            MethodKind::Full => "full",
+            MethodKind::None => "none",
+        }
+    }
+
+    /// Multiplicative methods transform W by matrix multiplication; the
+    /// paper's §5.3 control study hinges on this split.
+    pub fn is_multiplicative(&self) -> bool {
+        matches!(
+            self,
+            MethodKind::Ether | MethodKind::EtherPlus | MethodKind::Oft | MethodKind::Naive
+        )
+    }
+}
+
+impl MethodSpec {
+    pub fn parse(name: &str) -> Result<MethodSpec> {
+        let mut spec = MethodSpec {
+            kind: MethodKind::None,
+            n_blocks: 4,
+            rank: 8,
+            sides: 2,
+            magnitude_refit: false,
+        };
+        if name == "full" {
+            spec.kind = MethodKind::Full;
+            return Ok(spec);
+        }
+        if name == "none" {
+            return Ok(spec);
+        }
+        let (base, tail) = match name.split_once('_') {
+            Some(x) => x,
+            None => bail!("unknown method {name:?}"),
+        };
+        let mut tail = tail.to_string();
+        if let Some(t) = tail.strip_suffix("_1s") {
+            spec.sides = 1;
+            tail = t.to_string();
+        }
+        if let Some(t) = tail.strip_suffix("_mrf") {
+            spec.magnitude_refit = true;
+            tail = t.to_string();
+        }
+        let num: usize = tail
+            .get(1..)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("bad method suffix in {name:?}"))?;
+        spec.kind = match base {
+            "ether" => MethodKind::Ether,
+            "etherplus" => MethodKind::EtherPlus,
+            "oft" => MethodKind::Oft,
+            "naive" => MethodKind::Naive,
+            "lora" => MethodKind::Lora,
+            "vera" => MethodKind::Vera,
+            _ => bail!("unknown method {name:?}"),
+        };
+        match spec.kind {
+            MethodKind::Lora | MethodKind::Vera => spec.rank = num,
+            _ => spec.n_blocks = num,
+        }
+        Ok(spec)
+    }
+
+    pub fn name(&self) -> String {
+        match self.kind {
+            MethodKind::Ether => format!("ether_n{}", self.n_blocks),
+            MethodKind::EtherPlus => format!(
+                "etherplus_n{}{}",
+                self.n_blocks,
+                if self.sides == 1 { "_1s" } else { "" }
+            ),
+            MethodKind::Oft => format!(
+                "oft_n{}{}",
+                self.n_blocks,
+                if self.magnitude_refit { "_mrf" } else { "" }
+            ),
+            MethodKind::Naive => format!("naive_n{}", self.n_blocks),
+            MethodKind::Lora => format!("lora_r{}", self.rank),
+            MethodKind::Vera => format!("vera_r{}", self.rank),
+            MethodKind::Full => "full".into(),
+            MethodKind::None => "none".into(),
+        }
+    }
+}
+
+/// The six adapted matrices of each transformer layer with their (rows,
+/// cols) resolved against model dims (mirrors `peft.py::ADAPTED_MATRICES`).
+pub fn adapted_matrices(d_model: usize, d_ff: usize) -> Vec<(&'static str, usize, usize)> {
+    vec![
+        ("wq", d_model, d_model),
+        ("wk", d_model, d_model),
+        ("wv", d_model, d_model),
+        ("wo", d_model, d_model),
+        ("w1", d_model, d_ff),
+        ("w2", d_ff, d_model),
+    ]
+}
+
+/// Exact trainable-parameter count (paper §4 "Parameter Efficiency").
+pub fn count_params(d_model: usize, d_ff: usize, n_layers: usize, spec: &MethodSpec) -> usize {
+    let per_layer: usize = adapted_matrices(d_model, d_ff)
+        .iter()
+        .map(|&(_, d, f)| match spec.kind {
+            MethodKind::Ether => d,
+            MethodKind::EtherPlus => {
+                if spec.sides == 2 {
+                    2 * d + 2 * f
+                } else {
+                    2 * d
+                }
+            }
+            MethodKind::Oft => d * d / spec.n_blocks + if spec.magnitude_refit { f } else { 0 },
+            MethodKind::Naive => d * d / spec.n_blocks,
+            MethodKind::Lora => spec.rank * (d + f),
+            MethodKind::Vera => spec.rank + f,
+            MethodKind::Full => d * f,
+            MethodKind::None => 0,
+        })
+        .sum();
+    per_layer * n_layers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for name in [
+            "ether_n4", "ether_n32", "etherplus_n4", "etherplus_n4_1s", "oft_n256",
+            "oft_n4_mrf", "naive_n4", "lora_r8", "vera_r64", "full", "none",
+        ] {
+            assert_eq!(MethodSpec::parse(name).unwrap().name(), name, "{name}");
+        }
+        assert!(MethodSpec::parse("bogus_x2").is_err());
+    }
+
+    #[test]
+    fn param_formulas_match_paper_shape() {
+        // tiny config dims (d=64, f=128, L=2) — mirrors python tests.
+        let (d, f, l) = (64, 128, 2);
+        let ether = MethodSpec::parse("ether_n4").unwrap();
+        assert_eq!(count_params(d, f, l, &ether), l * (5 * d + f));
+        // ETHER count independent of n (paper §3.4 headline property).
+        let e16 = MethodSpec::parse("ether_n16").unwrap();
+        assert_eq!(count_params(d, f, l, &ether), count_params(d, f, l, &e16));
+        // OFT scales as d²/n.
+        let o4 = MethodSpec::parse("oft_n4").unwrap();
+        let o16 = MethodSpec::parse("oft_n16").unwrap();
+        assert_eq!(count_params(d, f, l, &o4), 4 * count_params(d, f, l, &o16));
+        // ETHER < everything else.
+        for other in ["etherplus_n4", "oft_n16", "lora_r8", "full"] {
+            let spec = MethodSpec::parse(other).unwrap();
+            assert!(
+                count_params(d, f, l, &ether) < count_params(d, f, l, &spec),
+                "{other}"
+            );
+        }
+    }
+
+    #[test]
+    fn multiplicative_split() {
+        assert!(MethodKind::Ether.is_multiplicative());
+        assert!(MethodKind::Oft.is_multiplicative());
+        assert!(!MethodKind::Lora.is_multiplicative());
+        assert!(!MethodKind::Vera.is_multiplicative());
+    }
+}

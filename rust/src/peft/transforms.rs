@@ -1,0 +1,312 @@
+//! Host-tensor implementations of every weight transform in the family.
+//!
+//! Math mirrors the Layer-1 Pallas kernels exactly (same guarded
+//! normalization, same block semantics); see `python/compile/kernels/`.
+
+use crate::tensor::{solve, Mat};
+
+/// Guard used by the kernels' in-place normalization (must match
+/// `kernels/ether.py::NORM_EPS`).
+pub const NORM_EPS: f64 = 1e-12;
+
+/// û = u · rsqrt(Σu² + ε).
+pub fn normalize(u: &[f32]) -> Vec<f32> {
+    let s: f64 = u.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    let r = 1.0 / (s + NORM_EPS).sqrt();
+    u.iter().map(|&x| (x as f64 * r) as f32).collect()
+}
+
+/// Block-diagonal Householder reflection `H^B W` (paper Eq. 1 + §3.4).
+///
+/// `u` is the flattened (n, d/n) block of raw hyperplane normals. Never
+/// materializes H: per block it computes `W_i − 2 û_i (û_iᵀ W_i)`.
+pub fn ether_apply(u: &[f32], n: usize, w: &Mat) -> Mat {
+    let d = w.rows;
+    let db = d / n;
+    assert_eq!(u.len(), d, "u blocks must tile the rows");
+    let f = w.cols;
+    let mut out = w.clone();
+    for b in 0..n {
+        let uh = normalize(&u[b * db..(b + 1) * db]);
+        // proj = ûᵀ W_b  (f,)
+        let mut proj = vec![0.0f64; f];
+        for r in 0..db {
+            let row = w.row(b * db + r);
+            let uv = uh[r] as f64;
+            for c in 0..f {
+                proj[c] += uv * row[c] as f64;
+            }
+        }
+        for r in 0..db {
+            let uv = 2.0 * uh[r] as f64;
+            let orow = out.row_mut(b * db + r);
+            for c in 0..f {
+                orow[c] -= (uv * proj[c]) as f32;
+            }
+        }
+    }
+    out
+}
+
+/// Left-side relaxed reflection `H⁺ W`, `H⁺ = I − ûûᵀ + v̂v̂ᵀ` (§3.3).
+pub fn ether_plus_left(u: &[f32], v: &[f32], n: usize, w: &Mat) -> Mat {
+    let d = w.rows;
+    let db = d / n;
+    let f = w.cols;
+    let mut out = w.clone();
+    for b in 0..n {
+        let uh = normalize(&u[b * db..(b + 1) * db]);
+        let vh = normalize(&v[b * db..(b + 1) * db]);
+        let mut pu = vec![0.0f64; f];
+        let mut pv = vec![0.0f64; f];
+        for r in 0..db {
+            let row = w.row(b * db + r);
+            for c in 0..f {
+                pu[c] += uh[r] as f64 * row[c] as f64;
+                pv[c] += vh[r] as f64 * row[c] as f64;
+            }
+        }
+        for r in 0..db {
+            let orow = out.row_mut(b * db + r);
+            for c in 0..f {
+                orow[c] += (-(uh[r] as f64) * pu[c] + vh[r] as f64 * pv[c]) as f32;
+            }
+        }
+    }
+    out
+}
+
+/// Right-side relaxed reflection `W H̃⁺` (columns blocked into n groups).
+pub fn ether_plus_right(w: &Mat, u: &[f32], v: &[f32], n: usize) -> Mat {
+    let f = w.cols;
+    let fb = f / n;
+    let d = w.rows;
+    let mut out = w.clone();
+    for b in 0..n {
+        let uh = normalize(&u[b * fb..(b + 1) * fb]);
+        let vh = normalize(&v[b * fb..(b + 1) * fb]);
+        for r in 0..d {
+            let row = &w.row(r)[b * fb..(b + 1) * fb];
+            let mut pu = 0.0f64;
+            let mut pv = 0.0f64;
+            for c in 0..fb {
+                pu += row[c] as f64 * uh[c] as f64;
+                pv += row[c] as f64 * vh[c] as f64;
+            }
+            let orow = &mut out.row_mut(r)[b * fb..(b + 1) * fb];
+            for c in 0..fb {
+                orow[c] += (-pu * uh[c] as f64 + pv * vh[c] as f64) as f32;
+            }
+        }
+    }
+    out
+}
+
+/// Cayley map per block: R → Q = (I + S)(I − S)⁻¹, S = ½(R − Rᵀ) (OFT).
+pub fn cayley_blocks(r: &[f32], n: usize, k: usize) -> Vec<Mat> {
+    (0..n)
+        .map(|b| {
+            let blk = &r[b * k * k..(b + 1) * k * k];
+            let mut s = Mat::zeros(k, k);
+            for i in 0..k {
+                for j in 0..k {
+                    *s.at_mut(i, j) = 0.5 * (blk[i * k + j] - blk[j * k + i]);
+                }
+            }
+            let ims = Mat::eye(k).sub(&s);
+            let ips = Mat::eye(k).add(&s);
+            let inv = solve::gauss_jordan_inv(&ims)
+                .expect("I − S is always invertible for skew-symmetric S");
+            ips.matmul(&inv)
+        })
+        .collect()
+}
+
+/// Unconstrained multiplicative blocks N = I + R (the paper's §5.3 Naive).
+pub fn naive_blocks(r: &[f32], n: usize, k: usize) -> Vec<Mat> {
+    (0..n)
+        .map(|b| {
+            let blk = &r[b * k * k..(b + 1) * k * k];
+            let mut m = Mat::eye(k);
+            for i in 0..k * k {
+                m.data[i] += blk[i];
+            }
+            m
+        })
+        .collect()
+}
+
+/// Apply block-diagonal multipliers: `Q^B W` (OFT / Naive compute path).
+pub fn bdmm(blocks: &[Mat], w: &Mat) -> Mat {
+    let n = blocks.len();
+    let k = blocks[0].rows;
+    assert_eq!(n * k, w.rows);
+    let f = w.cols;
+    let mut out = Mat::zeros(w.rows, f);
+    for (b, q) in blocks.iter().enumerate() {
+        for i in 0..k {
+            let orow = out.row_mut(b * k + i);
+            for j in 0..k {
+                let qv = q.at(i, j);
+                if qv == 0.0 {
+                    continue;
+                }
+                let wrow = w.row(b * k + j);
+                for c in 0..f {
+                    orow[c] += qv * wrow[c];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// LoRA additive update `W + A B` (A: d×r, B: r×f).
+pub fn lora_apply(a: &Mat, b: &Mat, w: &Mat) -> Mat {
+    w.add(&a.matmul(b))
+}
+
+/// Materialized block-diagonal `H^B` (analysis + tests only).
+pub fn householder_dense(u: &[f32], n: usize) -> Mat {
+    let d = u.len();
+    let db = d / n;
+    let mut h = Mat::eye(d);
+    for b in 0..n {
+        let uh = normalize(&u[b * db..(b + 1) * db]);
+        for i in 0..db {
+            for j in 0..db {
+                *h.at_mut(b * db + i, b * db + j) -= 2.0 * uh[i] * uh[j];
+            }
+        }
+    }
+    h
+}
+
+/// Materialized block-diagonal `H⁺` (analysis + tests only).
+pub fn ether_plus_dense(u: &[f32], v: &[f32], n: usize) -> Mat {
+    let d = u.len();
+    let db = d / n;
+    let mut h = Mat::eye(d);
+    for b in 0..n {
+        let uh = normalize(&u[b * db..(b + 1) * db]);
+        let vh = normalize(&v[b * db..(b + 1) * db]);
+        for i in 0..db {
+            for j in 0..db {
+                *h.at_mut(b * db + i, b * db + j) += -uh[i] * uh[j] + vh[i] * vh[j];
+            }
+        }
+    }
+    h
+}
+
+/// Materialized block-diagonal matrix from dense blocks.
+pub fn blockdiag_dense(blocks: &[Mat]) -> Mat {
+    let k = blocks[0].rows;
+    let d = k * blocks.len();
+    let mut m = Mat::zeros(d, d);
+    for (b, q) in blocks.iter().enumerate() {
+        for i in 0..k {
+            for j in 0..k {
+                *m.at_mut(b * k + i, b * k + j) = q.at(i, j);
+            }
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ether_matches_dense() {
+        let mut rng = Rng::new(0);
+        let (d, f, n) = (24, 10, 4);
+        let u = rng.normal_vec(d, 1.0);
+        let w = Mat::randn(d, f, 1.0, &mut rng);
+        let fast = ether_apply(&u, n, &w);
+        let dense = householder_dense(&u, n).matmul(&w);
+        assert!(fast.max_abs_diff(&dense) < 1e-5);
+    }
+
+    #[test]
+    fn ether_preserves_norm() {
+        // Orthogonality: ‖H^B W‖_F = ‖W‖_F.
+        let mut rng = Rng::new(1);
+        let u = rng.normal_vec(32, 1.0);
+        let w = Mat::randn(32, 8, 1.0, &mut rng);
+        let out = ether_apply(&u, 4, &w);
+        assert!((out.fro() - w.fro()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn ether_plus_identity_when_u_eq_v() {
+        let mut rng = Rng::new(2);
+        let u = rng.normal_vec(16, 1.0);
+        let w = Mat::randn(16, 6, 1.0, &mut rng);
+        let out = ether_plus_left(&u, &u, 2, &w);
+        assert!(out.max_abs_diff(&w) < 1e-6);
+        let ru = rng.normal_vec(6, 1.0);
+        let out2 = ether_plus_right(&w, &ru, &ru, 1);
+        assert!(out2.max_abs_diff(&w) < 1e-6);
+    }
+
+    #[test]
+    fn ether_plus_matches_dense() {
+        let mut rng = Rng::new(3);
+        let (d, f, n) = (16, 12, 2);
+        let u = rng.normal_vec(d, 1.0);
+        let v = rng.normal_vec(d, 1.0);
+        let w = Mat::randn(d, f, 1.0, &mut rng);
+        let fast = ether_plus_left(&u, &v, n, &w);
+        let dense = ether_plus_dense(&u, &v, n).matmul(&w);
+        assert!(fast.max_abs_diff(&dense) < 1e-5);
+        // right side: W H̃ == (H̃ᵀ Wᵀ)ᵀ and H̃ symmetric
+        let ru = rng.normal_vec(f, 1.0);
+        let rv = rng.normal_vec(f, 1.0);
+        let fast_r = ether_plus_right(&w, &ru, &rv, n);
+        let dense_r = w.matmul(&ether_plus_dense(&ru, &rv, n));
+        assert!(fast_r.max_abs_diff(&dense_r) < 1e-5);
+    }
+
+    #[test]
+    fn cayley_blocks_are_orthogonal_det_plus_one() {
+        let mut rng = Rng::new(4);
+        let (n, k) = (3, 6);
+        let r = rng.normal_vec(n * k * k, 1.0);
+        for q in cayley_blocks(&r, n, k) {
+            let qqt = q.matmul(&q.transpose());
+            assert!(qqt.max_abs_diff(&Mat::eye(k)) < 1e-4);
+            assert!((solve::det(&q) - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn householder_det_minus_one() {
+        // The determinant gap of §3.2: Cayley gives +1, Householder −1.
+        let mut rng = Rng::new(5);
+        let u = rng.normal_vec(8, 1.0);
+        let h = householder_dense(&u, 1);
+        assert!((solve::det(&h) + 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn bdmm_matches_dense() {
+        let mut rng = Rng::new(6);
+        let (n, k, f) = (2, 4, 5);
+        let blocks: Vec<Mat> = (0..n).map(|_| Mat::randn(k, k, 1.0, &mut rng)).collect();
+        let w = Mat::randn(n * k, f, 1.0, &mut rng);
+        let fast = bdmm(&blocks, &w);
+        let dense = blockdiag_dense(&blocks).matmul(&w);
+        assert!(fast.max_abs_diff(&dense) < 1e-5);
+    }
+
+    #[test]
+    fn naive_blocks_identity_at_zero() {
+        let r = vec![0.0; 2 * 9];
+        for b in naive_blocks(&r, 2, 3) {
+            assert!(b.max_abs_diff(&Mat::eye(3)) < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Typed execution of AOT artifacts on the PJRT CPU client.
+//!
+//! [`PjrtEngine`] owns the client and a cache of compiled executables;
+//! [`PjrtExec`] is one compiled artifact with its manifest signature. Two
+//! call paths:
+//!
+//! * [`PjrtExec::run`] — host tensors in, host tensors out (simple path).
+//! * [`PjrtExec::run_buffers`] — device-resident inputs via
+//!   [`PjrtEngine::upload`]; the training loop keeps the large frozen
+//!   base weights on device and only moves the small PEFT state + batch
+//!   per step (the L3 perf optimization, see EXPERIMENTS.md §Perf).
+//!
+//! All artifact outputs arrive as one tuple literal (jax lowers with
+//! `return_tuple=True`); `decode_outputs` decomposes it.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::host::{check_spec, HostTensor};
+use super::manifest::{ArtifactInfo, Manifest};
+
+/// Engine abstraction so the trainer/coordinator can run hermetically on
+/// [`super::mock::MockExec`] in unit tests.
+pub trait Engine {
+    fn call(&self, args: &[HostTensor]) -> Result<Vec<HostTensor>>;
+}
+
+/// One compiled artifact + its typed signature.
+pub struct PjrtExec {
+    pub name: String,
+    pub info: ArtifactInfo,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl PjrtExec {
+    /// Validate `args` against the manifest signature.
+    fn check(&self, args: &[HostTensor]) -> Result<()> {
+        anyhow::ensure!(
+            args.len() == self.info.inputs.len(),
+            "artifact {} takes {} inputs, got {}",
+            self.name,
+            self.info.inputs.len(),
+            args.len()
+        );
+        for (i, (t, spec)) in args.iter().zip(&self.info.inputs).enumerate() {
+            check_spec(t, &spec.shape, &spec.dtype, i)
+                .with_context(|| format!("artifact {}", self.name))?;
+        }
+        Ok(())
+    }
+
+    /// Host-tensor call path.
+    pub fn run(&self, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.check(args)?;
+        let literals = args
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let out = self.exe.execute::<xla::Literal>(&literals)?;
+        decode_outputs(out)
+    }
+
+    /// Device-buffer call path (mixed with uploads done by the caller).
+    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<HostTensor>> {
+        let out = self.exe.execute_b(args)?;
+        decode_outputs(out)
+    }
+}
+
+fn decode_outputs(out: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<HostTensor>> {
+    let buf = &out[0][0];
+    let lit = buf.to_literal_sync()?;
+    let parts = lit.to_tuple()?;
+    parts.iter().map(HostTensor::from_literal).collect()
+}
+
+impl Engine for PjrtExec {
+    fn call(&self, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.run(args)
+    }
+}
+
+/// The PJRT CPU runtime: client + manifest + executable cache.
+pub struct PjrtEngine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: Mutex<BTreeMap<String, std::sync::Arc<PjrtExec>>>,
+}
+
+impl PjrtEngine {
+    /// Create a CPU engine over an artifacts directory.
+    pub fn new(dir: &std::path::Path) -> Result<PjrtEngine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        log::info!(
+            "PJRT client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(PjrtEngine {
+            manifest,
+            client,
+            dir: dir.to_path_buf(),
+            cache: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    /// Open the default artifacts directory (walks up from cwd).
+    pub fn open_default() -> Result<PjrtEngine> {
+        PjrtEngine::new(&crate::artifacts_dir())
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<PjrtExec>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let info = self.manifest.artifact(name)?.clone();
+        let path = self.dir.join(&info.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        log::info!("compiled {} in {:.2}s", name, t0.elapsed().as_secs_f64());
+        let exec = std::sync::Arc::new(PjrtExec { name: name.to_string(), info, exe });
+        self.cache.lock().unwrap().insert(name.to_string(), exec.clone());
+        Ok(exec)
+    }
+
+    /// Upload a host tensor once; reuse across many `run_buffers` calls.
+    pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        t.to_buffer(&self.client)
+    }
+}

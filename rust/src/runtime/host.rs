@@ -1,0 +1,167 @@
+//! Host tensors and their conversions to/from PJRT literals.
+
+use anyhow::{bail, Result};
+use xla::{ArrayElement, Literal};
+
+/// A host-side tensor crossing the PJRT boundary. Scalars use an empty
+/// shape. Only the two dtypes the artifact ABI uses.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn scalar_f32(x: f32) -> HostTensor {
+        HostTensor::F32 { shape: vec![], data: vec![x] }
+    }
+
+    pub fn vec_f32(data: Vec<f32>) -> HostTensor {
+        HostTensor::F32 { shape: vec![data.len()], data }
+    }
+
+    pub fn mat_f32(rows: usize, cols: usize, data: Vec<f32>) -> HostTensor {
+        assert_eq!(rows * cols, data.len());
+        HostTensor::F32 { shape: vec![rows, cols], data }
+    }
+
+    pub fn mat_i32(rows: usize, cols: usize, data: Vec<i32>) -> HostTensor {
+        assert_eq!(rows * cols, data.len());
+        HostTensor::I32 { shape: vec![rows, cols], data }
+    }
+
+    pub fn vec_i32(data: Vec<i32>) -> HostTensor {
+        HostTensor::I32 { shape: vec![data.len()], data }
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> HostTensor {
+        HostTensor::F32 { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            HostTensor::F32 { .. } => "f32",
+            HostTensor::I32 { .. } => "i32",
+        }
+    }
+
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn into_f32s(self) -> Result<Vec<f32>> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("expected i32 tensor, got f32"),
+        }
+    }
+
+    /// Scalar extraction (accepts 0-d or 1-element tensors).
+    pub fn scalar(&self) -> Result<f32> {
+        match self {
+            HostTensor::F32 { data, .. } if data.len() == 1 => Ok(data[0]),
+            t => bail!("expected scalar, got {:?}-shaped {}", t.shape(), t.dtype()),
+        }
+    }
+
+    /// Convert to a PJRT literal (reshaped to the stored dims).
+    pub fn to_literal(&self) -> Result<Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => Literal::vec1(data.as_slice()),
+            HostTensor::I32 { data, .. } => Literal::vec1(data.as_slice()),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Read a PJRT literal back into a host tensor.
+    pub fn from_literal(lit: &Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.primitive_type() {
+            xla::PrimitiveType::F32 => {
+                Ok(HostTensor::F32 { shape: dims, data: lit.to_vec::<f32>()? })
+            }
+            xla::PrimitiveType::S32 => {
+                Ok(HostTensor::I32 { shape: dims, data: lit.to_vec::<i32>()? })
+            }
+            ty => bail!("unsupported output element type {ty:?}"),
+        }
+    }
+
+    /// Upload to the device as a PJRT buffer.
+    pub fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        Ok(match self {
+            HostTensor::F32 { shape, data } => {
+                client.buffer_from_host_buffer::<f32>(data, shape, None)?
+            }
+            HostTensor::I32 { shape, data } => {
+                client.buffer_from_host_buffer::<i32>(data, shape, None)?
+            }
+        })
+    }
+}
+
+/// Sanity-check alignment between a tensor and a manifest input spec.
+pub fn check_spec(t: &HostTensor, shape: &[usize], dtype: &str, pos: usize) -> Result<()> {
+    if t.dtype() != dtype || t.shape() != shape {
+        bail!(
+            "artifact input {pos}: expected {dtype}{shape:?}, got {}{:?}",
+            t.dtype(),
+            t.shape()
+        );
+    }
+    let _ = f32::TY; // keep ArrayElement import alive for doc purposes
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        let t = HostTensor::mat_f32(2, 3, vec![0.0; 6]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.dtype(), "f32");
+        assert!(t.f32s().is_ok());
+        assert!(t.i32s().is_err());
+        assert!(HostTensor::scalar_f32(2.5).scalar().unwrap() == 2.5);
+        assert!(t.scalar().is_err());
+    }
+
+    #[test]
+    fn spec_check() {
+        let t = HostTensor::vec_i32(vec![1, 2, 3]);
+        assert!(check_spec(&t, &[3], "i32", 0).is_ok());
+        assert!(check_spec(&t, &[3], "f32", 0).is_err());
+        assert!(check_spec(&t, &[4], "i32", 0).is_err());
+    }
+}

@@ -1,0 +1,271 @@
+//! `artifacts/manifest.json` — the typed catalogue of everything the
+//! compile path produced: model configs, method specs with parameter
+//! layouts, per-artifact I/O signatures, and initial-parameter dumps.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::peft::apply::ModelDims;
+use crate::peft::flat::Layout;
+use crate::util::json;
+
+#[derive(Clone, Debug)]
+pub struct ConfigInfo {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub vocab: usize,
+    pub n_classes: usize,
+    pub base_size: usize,
+    pub head_size: usize,
+    pub base_layout: Layout,
+    pub head_layout: Layout,
+}
+
+impl ConfigInfo {
+    pub fn dims(&self) -> ModelDims {
+        ModelDims { d_model: self.d_model, d_ff: self.d_ff, n_layers: self.n_layers }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct MethodInfo {
+    pub name: String,
+    pub kind: String,
+    /// cfg name → (trainable, reported, layout)
+    pub params: BTreeMap<String, (usize, usize, Layout)>,
+}
+
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    pub cfg: Option<String>,
+    pub method: Option<String>,
+    pub kind: Option<String>,
+    pub inputs: Vec<InputSpec>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: BTreeMap<String, ConfigInfo>,
+    pub methods: BTreeMap<String, MethodInfo>,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+    pub inits: BTreeMap<String, (String, usize)>,
+    pub micro_dim: usize,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = json::parse(&text).context("parsing manifest.json")?;
+
+        let mut configs = BTreeMap::new();
+        for (name, c) in v.at("configs")?.as_obj()? {
+            configs.insert(
+                name.clone(),
+                ConfigInfo {
+                    name: name.clone(),
+                    d_model: c.at("d_model")?.as_usize()?,
+                    n_layers: c.at("n_layers")?.as_usize()?,
+                    n_heads: c.at("n_heads")?.as_usize()?,
+                    d_ff: c.at("d_ff")?.as_usize()?,
+                    seq: c.at("seq")?.as_usize()?,
+                    batch: c.at("batch")?.as_usize()?,
+                    vocab: c.at("vocab")?.as_usize()?,
+                    n_classes: c.at("n_classes")?.as_usize()?,
+                    base_size: c.at("base_size")?.as_usize()?,
+                    head_size: c.at("head_size")?.as_usize()?,
+                    base_layout: Layout::from_json(c.at("base_layout")?)?,
+                    head_layout: Layout::from_json(c.at("head_layout")?)?,
+                },
+            );
+        }
+
+        let mut methods = BTreeMap::new();
+        for (name, m) in v.at("methods")?.as_obj()? {
+            let mut params = BTreeMap::new();
+            for (cfg, p) in m.at("params")?.as_obj()? {
+                params.insert(
+                    cfg.clone(),
+                    (
+                        p.at("trainable")?.as_usize()?,
+                        p.at("reported")?.as_usize()?,
+                        Layout::from_json(p.at("layout")?)?,
+                    ),
+                );
+            }
+            methods.insert(
+                name.clone(),
+                MethodInfo {
+                    name: name.clone(),
+                    kind: m.at("kind")?.as_str()?.to_string(),
+                    params,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in v.at("artifacts")?.as_obj()? {
+            let inputs = a
+                .at("inputs")?
+                .as_arr()?
+                .iter()
+                .map(|i| {
+                    Ok(InputSpec {
+                        shape: i
+                            .at("shape")?
+                            .as_arr()?
+                            .iter()
+                            .map(|d| d.as_usize())
+                            .collect::<Result<_>>()?,
+                        dtype: i.at("dtype")?.as_str()?.to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name: name.clone(),
+                    file: a.at("file")?.as_str()?.to_string(),
+                    cfg: a.get("cfg").and_then(|x| x.as_str().ok()).map(String::from),
+                    method: a.get("method").and_then(|x| x.as_str().ok()).map(String::from),
+                    kind: a.get("kind").and_then(|x| x.as_str().ok()).map(String::from),
+                    inputs,
+                },
+            );
+        }
+
+        let mut inits = BTreeMap::new();
+        for (name, i) in v.at("inits")?.as_obj()? {
+            inits.insert(
+                name.clone(),
+                (i.at("file")?.as_str()?.to_string(), i.at("len")?.as_usize()?),
+            );
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            configs,
+            methods,
+            artifacts,
+            inits,
+            micro_dim: v.get("micro_dim").and_then(|x| x.as_usize().ok()).unwrap_or(1024),
+        })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigInfo> {
+        self.configs.get(name).ok_or_else(|| anyhow!("unknown config {name:?}"))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts.get(name).ok_or_else(|| {
+            anyhow!("unknown artifact {name:?} — regenerate with `make artifacts`")
+        })
+    }
+
+    pub fn method(&self, name: &str) -> Result<&MethodInfo> {
+        self.methods.get(name).ok_or_else(|| anyhow!("unknown method {name:?}"))
+    }
+
+    /// The PEFT parameter layout of (method, cfg).
+    pub fn peft_layout(&self, method: &str, cfg: &str) -> Result<&Layout> {
+        Ok(&self
+            .method(method)?
+            .params
+            .get(cfg)
+            .ok_or_else(|| anyhow!("method {method:?} has no params for cfg {cfg:?}"))?
+            .2)
+    }
+
+    /// Load an initial-parameter dump (raw little-endian f32).
+    pub fn load_init(&self, name: &str) -> Result<Vec<f32>> {
+        let (file, len) = self
+            .inits
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown init dump {name:?}"))?;
+        let bytes = std::fs::read(self.dir.join(file))?;
+        anyhow::ensure!(bytes.len() == len * 4, "init {name:?} length mismatch");
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
+    /// Trainable-vector size the artifacts expect for (method, cfg):
+    /// max(count, 1) — 'none' still crosses as a 1-element placeholder.
+    pub fn peft_vec_size(&self, method: &str, cfg: &str) -> Result<usize> {
+        if method == "none" {
+            return Ok(1);
+        }
+        let (trainable, _, _) = self
+            .method(method)?
+            .params
+            .get(cfg)
+            .ok_or_else(|| anyhow!("method {method:?} has no params for cfg {cfg:?}"))?;
+        Ok((*trainable).max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests run against the real manifest when artifacts exist; otherwise
+    /// they validate parsing on a miniature fixture.
+    fn fixture_dir() -> PathBuf {
+        let dir = std::env::temp_dir().join("ether_manifest_fixture");
+        std::fs::create_dir_all(dir.join("init")).unwrap();
+        let manifest = r#"{
+          "version": 1, "micro_dim": 64,
+          "configs": {"t": {"d_model": 8, "n_layers": 1, "n_heads": 2,
+             "d_ff": 16, "seq": 4, "batch": 2, "vocab": 259, "n_classes": 4,
+             "base_size": 10, "head_size": 4,
+             "base_layout": [["embed", [5, 2]]],
+             "head_layout": [["head_w", [2, 2]]]}},
+          "methods": {"ether_n4": {"kind": "ether",
+             "params": {"t": {"trainable": 6, "reported": 6,
+                              "layout": [["wq.u", [1, 2, 3]]]}}}},
+          "artifacts": {"a": {"file": "a.hlo.txt", "cfg": "t",
+             "method": "ether_n4", "kind": "train_step",
+             "inputs": [{"shape": [6], "dtype": "f32"}]}},
+          "inits": {"t_base": {"file": "init/t_base.f32", "len": 3}}
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let floats: Vec<u8> = [1.0f32, 2.0, 3.0]
+            .iter()
+            .flat_map(|f| f.to_le_bytes())
+            .collect();
+        std::fs::write(dir.join("init/t_base.f32"), floats).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_fixture() {
+        let m = Manifest::load(&fixture_dir()).unwrap();
+        let c = m.config("t").unwrap();
+        assert_eq!(c.d_model, 8);
+        assert_eq!(c.base_layout.total, 10);
+        assert_eq!(m.peft_layout("ether_n4", "t").unwrap().total, 6);
+        assert_eq!(m.artifact("a").unwrap().inputs[0].shape, vec![6]);
+        assert_eq!(m.load_init("t_base").unwrap(), vec![1.0, 2.0, 3.0]);
+        assert_eq!(m.peft_vec_size("none", "t").unwrap(), 1);
+        assert!(m.artifact("nope").is_err());
+    }
+}

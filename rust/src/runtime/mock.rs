@@ -1,0 +1,131 @@
+//! Hermetic mock engine: same call shape as the train-step artifacts, no
+//! PJRT. The "model" is a quadratic bowl — `loss = ½‖θ − θ*‖²`, SGD-like
+//! update — which gives the trainer and coordinator tests a real
+//! convergence signal with zero external dependencies.
+
+use anyhow::{bail, Result};
+
+use super::engine::Engine;
+use super::host::HostTensor;
+
+/// Mimics `train_step` artifacts: args
+/// `(base, peft, m, v, tokens, targets, mask, lr, step)` →
+/// `(peft', m', v', loss)`. `base` is ignored; the optimum is a fixed
+/// target vector derived from the seed.
+pub struct MockTrainStep {
+    pub target: Vec<f32>,
+}
+
+impl MockTrainStep {
+    pub fn new(dim: usize, seed: u64) -> MockTrainStep {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        MockTrainStep { target: rng.normal_vec(dim, 1.0) }
+    }
+}
+
+impl Engine for MockTrainStep {
+    fn call(&self, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if args.len() != 9 {
+            bail!("mock train step takes 9 args, got {}", args.len());
+        }
+        let peft = args[1].f32s()?;
+        let m = args[2].f32s()?;
+        let lr = args[7].scalar()?;
+        if peft.len() != self.target.len() {
+            bail!("mock dim mismatch: {} vs {}", peft.len(), self.target.len());
+        }
+        // Gradient of the bowl + momentum-ish m update (v passthrough).
+        let grad: Vec<f32> = peft.iter().zip(&self.target).map(|(p, t)| p - t).collect();
+        let new_m: Vec<f32> = m.iter().zip(&grad).map(|(mi, g)| 0.9 * mi + 0.1 * g).collect();
+        let new_peft: Vec<f32> = peft.iter().zip(&new_m).map(|(p, mi)| p - lr * mi).collect();
+        let loss: f32 =
+            0.5 * grad.iter().map(|g| g * g).sum::<f32>() / grad.len().max(1) as f32;
+        Ok(vec![
+            HostTensor::vec_f32(new_peft),
+            HostTensor::vec_f32(new_m),
+            args[3].clone(),
+            HostTensor::scalar_f32(loss),
+        ])
+    }
+}
+
+/// Mock forward for serving tests: `(base, peft, tokens, lengths)` →
+/// `(logits[B, V])`. Logits are a deterministic hash of (adapter-salt,
+/// last token), so routing/batching bugs (wrong adapter, wrong order)
+/// change observable outputs.
+pub struct MockLogits {
+    pub vocab: usize,
+    pub salt: f32,
+}
+
+impl Engine for MockLogits {
+    fn call(&self, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if args.len() != 4 {
+            bail!("mock logits takes 4 args, got {}", args.len());
+        }
+        let tokens = args[2].i32s()?;
+        let lengths = args[3].i32s()?;
+        let b = lengths.len();
+        let s = tokens.len() / b;
+        let mut out = vec![0.0f32; b * self.vocab];
+        for i in 0..b {
+            let last = tokens[i * s + (lengths[i] as usize).max(1) - 1];
+            for vtok in 0..self.vocab {
+                // deterministic pseudo-logit
+                let x = (last as f32 * 0.13 + vtok as f32 * 0.7 + self.salt).sin();
+                out[i * self.vocab + vtok] = x;
+            }
+        }
+        Ok(vec![HostTensor::mat_f32(b, self.vocab, out)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_train_converges() {
+        let dim = 16;
+        let mock = MockTrainStep::new(dim, 1);
+        let mut peft = vec![0.0f32; dim];
+        let mut m = vec![0.0f32; dim];
+        let v = vec![0.0f32; dim];
+        let dummy = HostTensor::vec_f32(vec![0.0]);
+        let tok = HostTensor::vec_i32(vec![0]);
+        let mut first = None;
+        let mut last = 0.0;
+        for step in 0..200 {
+            let out = mock
+                .call(&[
+                    dummy.clone(),
+                    HostTensor::vec_f32(peft.clone()),
+                    HostTensor::vec_f32(m.clone()),
+                    HostTensor::vec_f32(v.clone()),
+                    tok.clone(),
+                    tok.clone(),
+                    dummy.clone(),
+                    HostTensor::scalar_f32(0.5),
+                    HostTensor::scalar_f32(step as f32),
+                ])
+                .unwrap();
+            peft = out[0].f32s().unwrap().to_vec();
+            m = out[1].f32s().unwrap().to_vec();
+            last = out[3].scalar().unwrap();
+            first.get_or_insert(last);
+        }
+        assert!(last < 0.01 * first.unwrap());
+    }
+
+    #[test]
+    fn mock_logits_depend_on_salt_and_token() {
+        let a = MockLogits { vocab: 8, salt: 0.0 };
+        let b = MockLogits { vocab: 8, salt: 1.0 };
+        let tokens = HostTensor::mat_i32(1, 4, vec![1, 2, 3, 0]);
+        let lens = HostTensor::vec_i32(vec![3]);
+        let base = HostTensor::vec_f32(vec![0.0]);
+        let pa = a.call(&[base.clone(), base.clone(), tokens.clone(), lens.clone()]).unwrap();
+        let pb = b.call(&[base.clone(), base.clone(), tokens, lens]).unwrap();
+        assert_ne!(pa[0], pb[0]);
+    }
+}

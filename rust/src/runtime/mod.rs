@@ -1,0 +1,23 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! The bridge between Layer 2 (JAX, build time) and Layer 3 (Rust, run
+//! time): `aot.py` writes `artifacts/*.hlo.txt` plus `manifest.json`; this
+//! module parses the manifest ([`manifest`]), converts host tensors to
+//! PJRT literals/buffers ([`host`]), and wraps compiled executables with
+//! typed, signature-checked call interfaces ([`engine`]).
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serialized protos carry 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids and round-trips cleanly (see DESIGN.md).
+//!
+//! [`mock`] provides a PJRT-free engine with the same call shape so the
+//! trainer and coordinator have hermetic unit tests.
+
+pub mod engine;
+pub mod host;
+pub mod manifest;
+pub mod mock;
+
+pub use engine::{Engine, PjrtEngine, PjrtExec};
+pub use host::HostTensor;
+pub use manifest::Manifest;

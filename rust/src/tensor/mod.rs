@@ -1,0 +1,237 @@
+//! Dense f32 linear algebra substrate.
+//!
+//! Host-side math for the transform family, perturbation studies,
+//! hyperspherical-energy metrics and the adapter-merge fast path. Small by
+//! design: row-major matrices, a blocked+threaded matmul, norms, and the
+//! solvers in [`solve`].
+
+pub mod solve;
+
+use crate::util::pool::parallel_for_chunks;
+use crate::util::rng::Rng;
+
+/// Row-major dense f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    pub fn randn(rows: usize, cols: usize, scale: f32, rng: &mut Rng) -> Mat {
+        Mat { rows, cols, data: rng.normal_vec(rows * cols, scale) }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Blocked, threaded matmul: `self (m×k) @ b (k×n)`.
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "matmul dims {}x{} @ {}x{}", self.rows, self.cols, b.rows, b.cols);
+        let (m, k, n) = (self.rows, self.cols, b.cols);
+        let mut out = Mat::zeros(m, n);
+        let out_ptr = SendPtr(out.data.as_mut_ptr());
+        parallel_for_chunks(m, 16, |r0, r1| {
+            let out_ptr = &out_ptr;
+            // i-k-j loop order: unit-stride inner loop over the output row.
+            for i in r0..r1 {
+                let orow = unsafe {
+                    std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), n)
+                };
+                let arow = &self.data[i * k..(i + 1) * k];
+                for (kk, &a) in arow.iter().enumerate() {
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[kk * n..(kk + 1) * n];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += a * bv;
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    pub fn add(&self, b: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&b.data).map(|(x, y)| x + y).collect(),
+        }
+    }
+
+    pub fn sub(&self, b: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&b.data).map(|(x, y)| x - y).collect(),
+        }
+    }
+
+    pub fn scale(&self, s: f32) -> Mat {
+        Mat { rows: self.rows, cols: self.cols, data: self.data.iter().map(|x| x * s).collect() }
+    }
+
+    /// Frobenius norm.
+    pub fn fro(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// ‖self − I‖_F (the paper's "transformation distance").
+    pub fn dist_from_identity(&self) -> f64 {
+        assert_eq!(self.rows, self.cols);
+        let mut acc = 0.0f64;
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let id = if r == c { 1.0 } else { 0.0 };
+                let d = (self.at(r, c) - id) as f64;
+                acc += d * d;
+            }
+        }
+        acc.sqrt()
+    }
+
+    /// Max |self − b| entry (tests).
+    pub fn max_abs_diff(&self, b: &Mat) -> f32 {
+        self.data
+            .iter()
+            .zip(&b.data)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// Wrapper to send a raw pointer across scoped threads (rows are disjoint).
+struct SendPtr(*mut f32);
+unsafe impl Sync for SendPtr {}
+unsafe impl Send for SendPtr {}
+
+// -- flat-vector helpers shared by runtime + peft --
+
+/// Dot product.
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (*x as f64) * (*y as f64)).sum()
+}
+
+/// Euclidean norm of a flat vector.
+pub fn norm(a: &[f32]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// ‖a − b‖₂ over flat vectors (the paper's "weights distance").
+pub fn l2_dist(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = (*x as f64) - (*y as f64);
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut acc = 0.0;
+                for k in 0..a.cols {
+                    acc += a.at(i, k) * b.at(k, j);
+                }
+                *out.at_mut(i, j) = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(0);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (17, 9, 33), (64, 64, 64)] {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            let got = a.matmul(&b);
+            let want = naive_matmul(&a, &b);
+            assert!(got.max_abs_diff(&want) < 1e-4, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn identity_neutral() {
+        let mut rng = Rng::new(1);
+        let a = Mat::randn(8, 8, 1.0, &mut rng);
+        assert!(a.matmul(&Mat::eye(8)).max_abs_diff(&a) < 1e-6);
+        assert!(Mat::eye(8).matmul(&a).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(5, 9, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn fro_and_identity_distance() {
+        assert!((Mat::eye(4).dist_from_identity() - 0.0).abs() < 1e-9);
+        let z = Mat::zeros(4, 4);
+        assert!((z.dist_from_identity() - 2.0).abs() < 1e-9); // sqrt(4)
+        assert!((Mat::eye(3).fro() - 3f64.sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn l2_dist_basic() {
+        assert!((l2_dist(&[0.0, 3.0], &[4.0, 0.0]) - 5.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,144 @@
+//! Small-matrix solvers: Gauss-Jordan inverse (for the host-side Cayley
+//! map) and LU determinant (for verifying det H = −1 vs det Q = +1 — the
+//! paper's §3.2 argument about which orthogonal matrices Cayley reaches).
+
+use super::Mat;
+
+/// Matrix inverse via Gauss-Jordan with partial pivoting.
+/// Returns None if the matrix is (numerically) singular.
+pub fn gauss_jordan_inv(a: &Mat) -> Option<Mat> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    // Augmented [A | I].
+    let mut m = vec![0.0f64; n * 2 * n];
+    for r in 0..n {
+        for c in 0..n {
+            m[r * 2 * n + c] = a.at(r, c) as f64;
+        }
+        m[r * 2 * n + n + r] = 1.0;
+    }
+    for j in 0..n {
+        // partial pivot
+        let mut piv = j;
+        for r in j + 1..n {
+            if m[r * 2 * n + j].abs() > m[piv * 2 * n + j].abs() {
+                piv = r;
+            }
+        }
+        if m[piv * 2 * n + j].abs() < 1e-12 {
+            return None;
+        }
+        if piv != j {
+            for c in 0..2 * n {
+                m.swap(j * 2 * n + c, piv * 2 * n + c);
+            }
+        }
+        let d = m[j * 2 * n + j];
+        for c in 0..2 * n {
+            m[j * 2 * n + c] /= d;
+        }
+        for r in 0..n {
+            if r == j {
+                continue;
+            }
+            let f = m[r * 2 * n + j];
+            if f == 0.0 {
+                continue;
+            }
+            for c in 0..2 * n {
+                m[r * 2 * n + c] -= f * m[j * 2 * n + c];
+            }
+        }
+    }
+    let mut out = Mat::zeros(n, n);
+    for r in 0..n {
+        for c in 0..n {
+            *out.at_mut(r, c) = m[r * 2 * n + n + c] as f32;
+        }
+    }
+    Some(out)
+}
+
+/// Determinant via LU with partial pivoting (f64 accumulation).
+pub fn det(a: &Mat) -> f64 {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut m: Vec<f64> = a.data.iter().map(|&x| x as f64).collect();
+    let mut sign = 1.0f64;
+    let mut d = 1.0f64;
+    for j in 0..n {
+        let mut piv = j;
+        for r in j + 1..n {
+            if m[r * n + j].abs() > m[piv * n + j].abs() {
+                piv = r;
+            }
+        }
+        if m[piv * n + j].abs() < 1e-14 {
+            return 0.0;
+        }
+        if piv != j {
+            for c in 0..n {
+                m.swap(j * n + c, piv * n + c);
+            }
+            sign = -sign;
+        }
+        d *= m[j * n + j];
+        for r in j + 1..n {
+            let f = m[r * n + j] / m[j * n + j];
+            if f == 0.0 {
+                continue;
+            }
+            for c in j..n {
+                m[r * n + c] -= f * m[j * n + c];
+            }
+        }
+    }
+    sign * d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn inverse_roundtrip() {
+        let mut rng = Rng::new(0);
+        for n in [1, 2, 5, 16] {
+            // I + small noise is well-conditioned.
+            let mut a = Mat::eye(n);
+            for x in a.data.iter_mut() {
+                *x += 0.2 * rng.normal();
+            }
+            let inv = gauss_jordan_inv(&a).unwrap();
+            let prod = a.matmul(&inv);
+            assert!(prod.max_abs_diff(&Mat::eye(n)) < 1e-4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn singular_returns_none() {
+        let a = Mat::zeros(3, 3);
+        assert!(gauss_jordan_inv(&a).is_none());
+    }
+
+    #[test]
+    fn det_known_values() {
+        assert!((det(&Mat::eye(5)) - 1.0).abs() < 1e-12);
+        let a = Mat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        assert!((det(&a) - 3.0).abs() < 1e-10);
+        // row swap flips sign
+        let b = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]);
+        assert!((det(&b) + 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn det_multiplicative() {
+        let mut rng = Rng::new(3);
+        let a = Mat::randn(4, 4, 1.0, &mut rng);
+        let b = Mat::randn(4, 4, 1.0, &mut rng);
+        let lhs = det(&a.matmul(&b));
+        let rhs = det(&a) * det(&b);
+        assert!((lhs - rhs).abs() < 1e-3 * rhs.abs().max(1.0));
+    }
+}

@@ -1,0 +1,66 @@
+//! Checkpoints: flat f32 weights as raw little-endian + JSON sidecar.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Value;
+
+/// Save a flat parameter vector with metadata.
+pub fn save(path: &Path, vec: &[f32], meta: Value) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let bytes: Vec<u8> = vec.iter().flat_map(|f| f.to_le_bytes()).collect();
+    std::fs::write(path, bytes)?;
+    std::fs::write(path.with_extension("json"), meta.dump())?;
+    Ok(())
+}
+
+/// Load a flat parameter vector and its metadata.
+pub fn load(path: &Path) -> Result<(Vec<f32>, Value)> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading checkpoint {path:?}"))?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "checkpoint not f32-aligned");
+    let vec = bytes
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    let meta_path = path.with_extension("json");
+    let meta = if meta_path.exists() {
+        crate::util::json::parse(&std::fs::read_to_string(meta_path)?)?
+    } else {
+        Value::Null
+    };
+    Ok((vec, meta))
+}
+
+/// Conventional checkpoint path: `checkpoints/<name>.f32`.
+pub fn path_for(name: &str) -> std::path::PathBuf {
+    let root = crate::artifacts_dir()
+        .parent()
+        .map(|p| p.to_path_buf())
+        .unwrap_or_else(|| ".".into());
+    root.join("checkpoints").join(format!("{name}.f32"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("ether_ckpt_test");
+        let path = dir.join("x.f32");
+        let vec = vec![1.0f32, -2.5, 3.25];
+        let meta = Value::obj(vec![("steps", Value::num(42.0))]);
+        save(&path, &vec, meta).unwrap();
+        let (back, m) = load(&path).unwrap();
+        assert_eq!(back, vec);
+        assert_eq!(m.at("steps").unwrap().as_usize().unwrap(), 42);
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(load(Path::new("/nonexistent/ckpt.f32")).is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! Training infrastructure: loops, LR schedules, checkpoints.
+
+pub mod checkpoint;
+pub mod schedule;
+pub mod trainer;
+
+pub use schedule::Schedule;
+pub use trainer::{ClsTrainer, LmTrainer, Pretrainer};

@@ -1,0 +1,50 @@
+//! Learning-rate schedules (paper App. C.4: cosine annealing with warmup
+//! for instruction tuning; constant elsewhere).
+
+#[derive(Clone, Copy, Debug)]
+pub enum Schedule {
+    Const(f32),
+    /// Linear warmup to `base` over `warmup` steps, cosine decay to ~0
+    /// over the remaining `total − warmup` steps.
+    Cosine { base: f32, warmup: u64, total: u64 },
+}
+
+impl Schedule {
+    pub fn lr(&self, step: u64) -> f32 {
+        match *self {
+            Schedule::Const(lr) => lr,
+            Schedule::Cosine { base, warmup, total } => {
+                if step < warmup {
+                    base * (step + 1) as f32 / warmup.max(1) as f32
+                } else {
+                    let t = (step - warmup) as f32 / (total.saturating_sub(warmup)).max(1) as f32;
+                    let t = t.min(1.0);
+                    base * 0.5 * (1.0 + (std::f32::consts::PI * t).cos())
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn const_schedule() {
+        assert_eq!(Schedule::Const(0.1).lr(0), 0.1);
+        assert_eq!(Schedule::Const(0.1).lr(999), 0.1);
+    }
+
+    #[test]
+    fn cosine_warms_up_and_decays() {
+        let s = Schedule::Cosine { base: 1.0, warmup: 10, total: 110 };
+        assert!(s.lr(0) < 0.2);
+        assert!((s.lr(9) - 1.0).abs() < 0.11);
+        assert!(s.lr(60) < 1.0);
+        assert!(s.lr(109) < 0.01);
+        // monotone decay after warmup
+        assert!(s.lr(20) > s.lr(50));
+        assert!(s.lr(50) > s.lr(100));
+    }
+}

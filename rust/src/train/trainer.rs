@@ -1,0 +1,391 @@
+//! Training loops over the AOT artifacts.
+//!
+//! [`LmTrainer`] drives `*_train` / `*_pretrain` artifacts; [`ClsTrainer`]
+//! drives `cls_*_train`. Both keep the large frozen base weights
+//! **device-resident** (uploaded once, reused via `execute_b`) so each
+//! step only moves the small PEFT state and the batch — the L3 hot-path
+//! optimization measured in EXPERIMENTS.md §Perf.
+
+use anyhow::Result;
+
+use crate::data::{ClsBatch, LmBatch};
+use crate::runtime::engine::{PjrtEngine, PjrtExec};
+use crate::runtime::HostTensor;
+use crate::train::Schedule;
+
+/// Adapter/PEFT training over an `lm_<cfg>_<method>_train` artifact.
+pub struct LmTrainer<'e> {
+    pub engine: &'e PjrtEngine,
+    pub cfg: String,
+    pub method: String,
+    /// None for eval-only instances (e.g. scoring the un-tuned base).
+    exec: Option<std::sync::Arc<PjrtExec>>,
+    base_buf: Option<xla::PjRtBuffer>,
+    base_host: Vec<f32>,
+    pub peft: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: u64,
+    pub losses: Vec<f32>,
+}
+
+impl<'e> LmTrainer<'e> {
+    /// Create a trainer from the init dumps ("fresh adapter on the given
+    /// base"). `base` defaults to the init dump; pass a pretrained
+    /// checkpoint for the real experiments.
+    pub fn new(
+        engine: &'e PjrtEngine,
+        cfg: &str,
+        method: &str,
+        base: Option<Vec<f32>>,
+    ) -> Result<LmTrainer<'e>> {
+        let exec = engine.load(&format!("lm_{cfg}_{method}_train"))?;
+        let base_host = match base {
+            Some(b) => b,
+            None => engine.manifest.load_init(&format!("{cfg}_base"))?,
+        };
+        let base_buf = engine.upload(&HostTensor::vec_f32(base_host.clone()))?;
+        let peft = engine.manifest.load_init(&format!("{cfg}_{method}_peft"))?;
+        let k = peft.len();
+        Ok(LmTrainer {
+            engine,
+            cfg: cfg.to_string(),
+            method: method.to_string(),
+            exec: Some(exec),
+            base_buf: Some(base_buf),
+            base_host,
+            peft,
+            m: vec![0.0; k],
+            v: vec![0.0; k],
+            step: 0,
+            losses: vec![],
+        })
+    }
+
+    /// Eval-only instance over existing (base, peft) — used to score the
+    /// un-tuned baseline (`method = "none"`, `peft = [0.0]`) and loaded
+    /// checkpoints without requiring a train artifact.
+    pub fn eval_only(
+        engine: &'e PjrtEngine,
+        cfg: &str,
+        method: &str,
+        base: Vec<f32>,
+        peft: Vec<f32>,
+    ) -> Result<LmTrainer<'e>> {
+        let k = peft.len();
+        Ok(LmTrainer {
+            engine,
+            cfg: cfg.to_string(),
+            method: method.to_string(),
+            exec: None,
+            base_buf: None,
+            base_host: base,
+            peft,
+            m: vec![0.0; k],
+            v: vec![0.0; k],
+            step: 0,
+            losses: vec![],
+        })
+    }
+
+    /// Replace the adapter state (e.g. to resume or to seed a refit).
+    /// The vector is zero-extended / truncated to the expected size —
+    /// used by OFT magnitude-refit, whose layout extends plain OFT's.
+    pub fn seed_peft(&mut self, mut peft: Vec<f32>) {
+        peft.resize(self.peft.len(), 0.0);
+        self.peft = peft;
+        self.m.iter_mut().for_each(|x| *x = 0.0);
+        self.v.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    /// One optimizer step; returns the loss.
+    pub fn step(&mut self, batch: &LmBatch, lr: f32) -> Result<f32> {
+        let exec = self
+            .exec
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("eval-only trainer cannot step"))?;
+        let base_buf = self.base_buf.as_ref().unwrap();
+        self.step += 1;
+        let (tok, tgt, mask) = batch.to_tensors();
+        let small = [
+            HostTensor::vec_f32(self.peft.clone()),
+            HostTensor::vec_f32(self.m.clone()),
+            HostTensor::vec_f32(self.v.clone()),
+            tok,
+            tgt,
+            mask,
+            HostTensor::scalar_f32(lr),
+            HostTensor::scalar_f32(self.step as f32),
+        ];
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(small.len());
+        for t in &small {
+            bufs.push(self.engine.upload(t)?);
+        }
+        let mut args: Vec<&xla::PjRtBuffer> = vec![base_buf];
+        args.extend(bufs.iter());
+        let out = exec.run_buffers(&args)?;
+        self.peft = out[0].f32s()?.to_vec();
+        self.m = out[1].f32s()?.to_vec();
+        self.v = out[2].f32s()?.to_vec();
+        let loss = out[3].scalar()?;
+        self.losses.push(loss);
+        Ok(loss)
+    }
+
+    /// Run `steps` optimizer steps with a schedule and a batch source.
+    pub fn run<F: FnMut(u64) -> LmBatch>(
+        &mut self,
+        steps: u64,
+        sched: Schedule,
+        mut batch_fn: F,
+    ) -> Result<()> {
+        for i in 0..steps {
+            let batch = batch_fn(self.step);
+            let lr = sched.lr(i);
+            let loss = self.step(&batch, lr)?;
+            if !loss.is_finite() {
+                log::warn!(
+                    "{}/{}: non-finite loss at step {} (lr={lr:.1e}) — divergence",
+                    self.cfg,
+                    self.method,
+                    self.step
+                );
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Per-example NLL via the matching eval artifact.
+    pub fn eval_nll(&self, batch: &LmBatch) -> Result<Vec<f32>> {
+        let exec = self.engine.load(&format!("lm_{}_{}_eval", self.cfg, self.method))?;
+        let (tok, tgt, mask) = batch.to_tensors();
+        let out = exec.run(&[
+            HostTensor::vec_f32(self.base_host.clone()),
+            HostTensor::vec_f32(self.peft.clone()),
+            tok,
+            tgt,
+            mask,
+        ])?;
+        Ok(out[0].f32s()?.to_vec())
+    }
+
+    /// Mean masked NLL over a batch (convergence metric).
+    pub fn eval_loss(&self, batch: &LmBatch) -> Result<f32> {
+        let nll = self.eval_nll(batch)?;
+        let tokens = batch.mask_tokens().max(1.0);
+        Ok(nll.iter().sum::<f32>() / tokens)
+    }
+
+    /// Greedy generation: decode `max_new` tokens for each prompt row.
+    /// Prompts are padded to the artifact batch; rows beyond `prompts`
+    /// are dummies.
+    pub fn generate(&self, prompts: &[Vec<i32>], max_new: usize) -> Result<Vec<Vec<i32>>> {
+        let c = self.engine.manifest.config(&self.cfg)?.clone();
+        let exec = self.engine.load(&format!("lm_{}_{}_logits", self.cfg, self.method))?;
+        let mut rows: Vec<Vec<i32>> = prompts.to_vec();
+        anyhow::ensure!(rows.len() <= c.batch, "too many prompts for batch {}", c.batch);
+        rows.resize(c.batch, vec![crate::data::BOS]);
+        let mut done = vec![false; c.batch];
+        let base = HostTensor::vec_f32(self.base_host.clone());
+        let peft = HostTensor::vec_f32(self.peft.clone());
+        for _ in 0..max_new {
+            let mut tokens = vec![crate::data::PAD; c.batch * c.seq];
+            let mut lengths = vec![1i32; c.batch];
+            for (i, row) in rows.iter().enumerate() {
+                // Sliding window if the row exceeds the context.
+                let start = row.len().saturating_sub(c.seq);
+                let window = &row[start..];
+                tokens[i * c.seq..i * c.seq + window.len()].copy_from_slice(window);
+                lengths[i] = window.len() as i32;
+            }
+            let out = exec.run(&[
+                base.clone(),
+                peft.clone(),
+                HostTensor::mat_i32(c.batch, c.seq, tokens),
+                HostTensor::vec_i32(lengths),
+            ])?;
+            let logits = out[0].f32s()?;
+            let mut all_done = true;
+            for i in 0..prompts.len() {
+                if done[i] {
+                    continue;
+                }
+                let row = &logits[i * c.vocab..(i + 1) * c.vocab];
+                let next = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(t, _)| t as i32)
+                    .unwrap_or(crate::data::EOS);
+                if next == crate::data::EOS || next == crate::data::PAD {
+                    done[i] = true;
+                } else {
+                    rows[i].push(next);
+                    all_done = false;
+                }
+            }
+            if all_done {
+                break;
+            }
+        }
+        Ok(rows[..prompts.len()]
+            .iter()
+            .zip(prompts)
+            .map(|(row, p)| row[p.len()..].to_vec())
+            .collect())
+    }
+
+    /// Merge the adapter into base weights via the HLO merge artifact.
+    pub fn merged_base(&self) -> Result<Vec<f32>> {
+        let exec = self.engine.load(&format!("lm_{}_{}_merge", self.cfg, self.method))?;
+        let out = exec.run(&[
+            HostTensor::vec_f32(self.base_host.clone()),
+            HostTensor::vec_f32(self.peft.clone()),
+        ])?;
+        Ok(out[0].f32s()?.to_vec())
+    }
+
+    pub fn base(&self) -> &[f32] {
+        &self.base_host
+    }
+}
+
+/// Full-weight pretraining over `lm_<cfg>_pretrain`.
+pub struct Pretrainer<'e> {
+    pub engine: &'e PjrtEngine,
+    pub cfg: String,
+    exec: std::sync::Arc<PjrtExec>,
+    pub base: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    pub step: u64,
+    pub losses: Vec<f32>,
+}
+
+impl<'e> Pretrainer<'e> {
+    pub fn new(engine: &'e PjrtEngine, cfg: &str) -> Result<Pretrainer<'e>> {
+        let exec = engine.load(&format!("lm_{cfg}_pretrain"))?;
+        let base = engine.manifest.load_init(&format!("{cfg}_base"))?;
+        let n = base.len();
+        Ok(Pretrainer {
+            engine,
+            cfg: cfg.to_string(),
+            exec,
+            base,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            step: 0,
+            losses: vec![],
+        })
+    }
+
+    pub fn step(&mut self, batch: &LmBatch, lr: f32) -> Result<f32> {
+        self.step += 1;
+        let (tok, tgt, mask) = batch.to_tensors();
+        let out = self.exec.run(&[
+            HostTensor::vec_f32(self.base.clone()),
+            HostTensor::vec_f32(self.m.clone()),
+            HostTensor::vec_f32(self.v.clone()),
+            tok,
+            tgt,
+            mask,
+            HostTensor::scalar_f32(lr),
+            HostTensor::scalar_f32(self.step as f32),
+        ])?;
+        self.base = out[0].f32s()?.to_vec();
+        self.m = out[1].f32s()?.to_vec();
+        self.v = out[2].f32s()?.to_vec();
+        let loss = out[3].scalar()?;
+        self.losses.push(loss);
+        Ok(loss)
+    }
+}
+
+/// Classifier finetuning over `cls_<cfg>_<method>_train` (SynthGLUE).
+pub struct ClsTrainer<'e> {
+    pub engine: &'e PjrtEngine,
+    pub cfg: String,
+    pub method: String,
+    exec: std::sync::Arc<PjrtExec>,
+    base_buf: xla::PjRtBuffer,
+    base_host: Vec<f32>,
+    pub t: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    pub step: u64,
+    pub losses: Vec<f32>,
+}
+
+impl<'e> ClsTrainer<'e> {
+    pub fn new(
+        engine: &'e PjrtEngine,
+        cfg: &str,
+        method: &str,
+        base: Option<Vec<f32>>,
+    ) -> Result<ClsTrainer<'e>> {
+        let exec = engine.load(&format!("cls_{cfg}_{method}_train"))?;
+        let base_host = match base {
+            Some(b) => b,
+            None => engine.manifest.load_init(&format!("{cfg}_base"))?,
+        };
+        let base_buf = engine.upload(&HostTensor::vec_f32(base_host.clone()))?;
+        let t = engine.manifest.load_init(&format!("{cfg}_{method}_cls"))?;
+        let k = t.len();
+        Ok(ClsTrainer {
+            engine,
+            cfg: cfg.to_string(),
+            method: method.to_string(),
+            exec,
+            base_buf,
+            base_host,
+            t,
+            m: vec![0.0; k],
+            v: vec![0.0; k],
+            step: 0,
+            losses: vec![],
+        })
+    }
+
+    pub fn step(&mut self, batch: &ClsBatch, lr: f32) -> Result<f32> {
+        self.step += 1;
+        let (tok, lens, labels) = batch.to_tensors();
+        let small = [
+            HostTensor::vec_f32(self.t.clone()),
+            HostTensor::vec_f32(self.m.clone()),
+            HostTensor::vec_f32(self.v.clone()),
+            tok,
+            lens,
+            labels,
+            HostTensor::scalar_f32(lr),
+            HostTensor::scalar_f32(self.step as f32),
+        ];
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(small.len());
+        for t in &small {
+            bufs.push(self.engine.upload(t)?);
+        }
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&self.base_buf];
+        args.extend(bufs.iter());
+        let out = self.exec.run_buffers(&args)?;
+        self.t = out[0].f32s()?.to_vec();
+        self.m = out[1].f32s()?.to_vec();
+        self.v = out[2].f32s()?.to_vec();
+        let loss = out[3].scalar()?;
+        self.losses.push(loss);
+        Ok(loss)
+    }
+
+    /// Class predictions for a batch.
+    pub fn predict(&self, batch: &ClsBatch) -> Result<Vec<i32>> {
+        let exec = self.engine.load(&format!("cls_{}_{}_eval", self.cfg, self.method))?;
+        let (tok, lens, _) = batch.to_tensors();
+        let out = exec.run(&[
+            HostTensor::vec_f32(self.base_host.clone()),
+            HostTensor::vec_f32(self.t.clone()),
+            tok,
+            lens,
+        ])?;
+        let c = self.engine.manifest.config(&self.cfg)?;
+        Ok(crate::eval::metrics::argmax_rows(out[0].f32s()?, c.n_classes))
+    }
+}

@@ -1,0 +1,166 @@
+//! Micro/macro benchmark harness with robust statistics (criterion is
+//! unavailable offline). Used by every `cargo bench` target
+//! (`harness = false`) and by the experiment drivers that report timings.
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+/// Re-export for bench bodies.
+pub fn black_box<T>(x: T) -> T {
+    bb(x)
+}
+
+/// Timing summary over many iterations.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub mean_ns: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut ns: Vec<f64>) -> Stats {
+        assert!(!ns.is_empty());
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| ns[((ns.len() - 1) as f64 * p) as usize];
+        Stats {
+            iters: ns.len(),
+            median_ns: q(0.5),
+            p10_ns: q(0.1),
+            p90_ns: q(0.9),
+            mean_ns: ns.iter().sum::<f64>() / ns.len() as f64,
+        }
+    }
+
+    pub fn median(&self) -> Duration {
+        Duration::from_nanos(self.median_ns as u64)
+    }
+}
+
+/// Human format for a nanosecond quantity.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// A named group of benchmark cases printed as an aligned table.
+pub struct Bench {
+    name: String,
+    min_time: Duration,
+    max_iters: usize,
+    rows: Vec<(String, Stats, Option<f64>)>,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        let quick = std::env::var("ETHER_BENCH_QUICK").is_ok();
+        Bench {
+            name: name.to_string(),
+            min_time: if quick { Duration::from_millis(100) } else { Duration::from_millis(700) },
+            max_iters: if quick { 30 } else { 2000 },
+            rows: vec![],
+        }
+    }
+
+    pub fn with_budget(mut self, min_time: Duration, max_iters: usize) -> Bench {
+        self.min_time = min_time;
+        self.max_iters = max_iters;
+        self
+    }
+
+    /// Time `f` until the budget is exhausted; attach optional work units
+    /// (e.g. FLOPs) so throughput can be reported.
+    pub fn case<F: FnMut()>(&mut self, label: &str, work: Option<f64>, mut f: F) -> &Stats {
+        // Warmup.
+        for _ in 0..2 {
+            f();
+        }
+        let mut samples = vec![];
+        let t_start = Instant::now();
+        while t_start.elapsed() < self.min_time && samples.len() < self.max_iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let stats = Stats::from_samples(samples);
+        self.rows.push((label.to_string(), stats, work));
+        &self.rows.last().unwrap().1
+    }
+
+    /// Print the aligned result table; returns (label → median ns).
+    pub fn report(&self) -> Vec<(String, f64)> {
+        println!("\n== bench: {} ==", self.name);
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>8} {:>14}",
+            "case", "median", "p10", "p90", "iters", "throughput"
+        );
+        for (label, s, work) in &self.rows {
+            let thr = match work {
+                Some(w) => {
+                    let per_sec = w / (s.median_ns / 1e9);
+                    if per_sec > 1e12 {
+                        format!("{:.2} T/s", per_sec / 1e12)
+                    } else if per_sec > 1e9 {
+                        format!("{:.2} G/s", per_sec / 1e9)
+                    } else if per_sec > 1e6 {
+                        format!("{:.2} M/s", per_sec / 1e6)
+                    } else {
+                        format!("{:.2} /s", per_sec)
+                    }
+                }
+                None => "-".to_string(),
+            };
+            println!(
+                "{:<44} {:>12} {:>12} {:>12} {:>8} {:>14}",
+                label,
+                fmt_ns(s.median_ns),
+                fmt_ns(s.p10_ns),
+                fmt_ns(s.p90_ns),
+                s.iters,
+                thr
+            );
+        }
+        self.rows.iter().map(|(l, s, _)| (l.clone(), s.median_ns)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_quantiles() {
+        let s = Stats::from_samples((1..=100).map(|x| x as f64).collect());
+        assert_eq!(s.iters, 100);
+        assert!((s.median_ns - 50.0).abs() <= 1.0);
+        assert!(s.p10_ns < s.median_ns && s.median_ns < s.p90_ns);
+    }
+
+    #[test]
+    fn bench_runs_case() {
+        std::env::set_var("ETHER_BENCH_QUICK", "1");
+        let mut b = Bench::new("t").with_budget(Duration::from_millis(10), 50);
+        let mut x = 0u64;
+        let s = b.case("noop", None, || {
+            x = black_box(x.wrapping_add(1));
+        });
+        assert!(s.iters >= 1);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5.0e4).contains("µs"));
+        assert!(fmt_ns(5.0e7).contains("ms"));
+        assert!(fmt_ns(5.0e9).contains("s"));
+    }
+}

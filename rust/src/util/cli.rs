@@ -1,0 +1,148 @@
+//! Tiny argv parser (clap is unavailable offline).
+//!
+//! Grammar: `ether <subcommand> [positionals…] [--key value]… [--flag]…`.
+//! Typed accessors with defaults; unknown-flag detection via `finish()`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub cmd: String,
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1).collect())
+    }
+
+    pub fn parse(argv: Vec<String>) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let cmd = it.next().unwrap_or_else(|| "help".into());
+        let mut positional = vec![];
+        let mut opts = BTreeMap::new();
+        let mut flags = vec![];
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bare -- is not supported");
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    opts.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    flags.push(key.to_string());
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Ok(Args { cmd, positional, opts, flags, consumed: Default::default() })
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.consumed.borrow_mut().push(name.to_string());
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.consumed.borrow_mut().push(name.to_string());
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).map(|s| s.to_string()).unwrap_or_else(|| default.into())
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|e| anyhow!("--{name}={s}: {e}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|e| anyhow!("--{name}={s}: {e}")),
+        }
+    }
+
+    pub fn f32_or(&self, name: &str, default: f32) -> Result<f32> {
+        Ok(self.f64_or(name, default as f64)? as f32)
+    }
+
+    /// Comma-separated list option.
+    pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.opt(name) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(s) => s.split(',').map(|x| x.trim().to_string()).collect(),
+        }
+    }
+
+    /// Error on any option/flag that no accessor ever looked at
+    /// (catches typos like `--steps` vs `--step`).
+    pub fn finish(&self) -> Result<()> {
+        let seen = self.consumed.borrow();
+        for k in self.opts.keys().chain(self.flags.iter()) {
+            if !seen.iter().any(|s| s == k) {
+                bail!("unknown option --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from).collect()).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = args("train tiny --method ether_n4 --steps 100 --verbose");
+        assert_eq!(a.cmd, "train");
+        assert_eq!(a.positional, vec!["tiny"]);
+        assert_eq!(a.opt("method"), Some("ether_n4"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert!(a.flag("verbose"));
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = args("x --lr=0.01");
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.01);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let a = args("x --typo 1");
+        let _ = a.opt("real");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn list_option() {
+        let a = args("x --methods ether_n4,oft_n4");
+        assert_eq!(a.list_or("methods", &[]), vec!["ether_n4", "oft_n4"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args("x");
+        assert_eq!(a.str_or("cfg", "tiny"), "tiny");
+        assert_eq!(a.usize_or("steps", 7).unwrap(), 7);
+        assert!(!a.flag("quiet"));
+    }
+}

@@ -1,0 +1,381 @@
+//! Minimal JSON parser / serializer (serde is unavailable offline).
+//!
+//! Supports the full JSON grammar needed by `artifacts/manifest.json`,
+//! checkpoints metadata and experiment reports: objects, arrays, strings
+//! with escapes, numbers, booleans, null. Numbers are kept as f64 (the
+//! manifest only contains integers well within f64's exact range).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, Result};
+
+/// A parsed JSON value. Objects use a BTreeMap for deterministic output.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// `obj["a"]["b"]` style access that errors with the path on miss.
+    pub fn at(&self, key: &str) -> Result<&Value> {
+        self.get(key).ok_or_else(|| anyhow!("missing key {key:?}"))
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            v => bail!("expected string, got {v:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Num(n) => Ok(*n),
+            v => bail!("expected number, got {v:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        Ok(self.as_f64()? as usize)
+    }
+
+    pub fn as_arr(&self) -> Result<&[Value]> {
+        match self {
+            Value::Arr(a) => Ok(a),
+            v => bail!("expected array, got {v:?}"),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Value>> {
+        match self {
+            Value::Obj(m) => Ok(m),
+            v => bail!("expected object, got {v:?}"),
+        }
+    }
+
+    pub fn str_or(&self, default: &str) -> String {
+        self.as_str().map(|s| s.to_string()).unwrap_or_else(|_| default.into())
+    }
+
+    // -- construction helpers (report writing) --
+
+    pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
+        Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn num(n: f64) -> Value {
+        Value::Num(n)
+    }
+
+    pub fn s(s: impl Into<String>) -> Value {
+        Value::Str(s.into())
+    }
+
+    pub fn arr(xs: Vec<Value>) -> Value {
+        Value::Arr(xs)
+    }
+
+    /// Serialize to a compact JSON string.
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Value::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 9e15 {
+                    let _ = write!(out, "{}", *n as i64);
+                } else {
+                    let _ = write!(out, "{n}");
+                }
+            }
+            Value::Str(s) => write_escaped(s, out),
+            Value::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Value::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Parse a JSON document.
+pub fn parse(text: &str) -> Result<Value> {
+    let bytes = text.as_bytes();
+    let mut p = Parser { b: bytes, i: 0 };
+    p.ws();
+    let v = p.value()?;
+    p.ws();
+    if p.i != bytes.len() {
+        bail!("trailing characters at byte {}", p.i);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| anyhow!("unexpected end of JSON"))
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek()? == c {
+            self.i += 1;
+            Ok(())
+        } else {
+            bail!(
+                "expected {:?} at byte {}, found {:?}",
+                c as char,
+                self.i,
+                self.peek()? as char
+            )
+        }
+    }
+
+    fn value(&mut self) -> Result<Value> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Value::Str(self.string()?)),
+            b't' => self.lit("true", Value::Bool(true)),
+            b'f' => self.lit("false", Value::Bool(false)),
+            b'n' => self.lit("null", Value::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn lit(&mut self, s: &str, v: Value) -> Result<Value> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(v)
+        } else {
+            bail!("invalid literal at byte {}", self.i)
+        }
+    }
+
+    fn number(&mut self) -> Result<Value> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i])?;
+        Ok(Value::Num(s.parse::<f64>().map_err(|e| anyhow!("bad number {s:?}: {e}"))?))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let hex = std::str::from_utf8(
+                                self.b
+                                    .get(self.i..self.i + 4)
+                                    .ok_or_else(|| anyhow!("truncated \\u escape"))?,
+                            )?;
+                            self.i += 4;
+                            let code = u32::from_str_radix(hex, 16)?;
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        c => bail!("bad escape \\{}", c as char),
+                    }
+                }
+                c => {
+                    // Re-decode UTF-8 starting at this byte.
+                    let start = self.i - 1;
+                    let len = utf8_len(c);
+                    self.i = start + len;
+                    out.push_str(std::str::from_utf8(&self.b[start..self.i])?);
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Value> {
+        self.eat(b'[')?;
+        let mut items = vec![];
+        self.ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Value::Arr(items));
+        }
+        loop {
+            self.ws();
+            items.push(self.value()?);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Value::Arr(items));
+                }
+                c => bail!("expected , or ] got {:?}", c as char),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Value> {
+        self.eat(b'{')?;
+        let mut map = BTreeMap::new();
+        self.ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Value::Obj(map));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            self.ws();
+            map.insert(key, self.value()?);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Value::Obj(map));
+                }
+                c => bail!("expected , or }} got {:?}", c as char),
+            }
+        }
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_basic() {
+        let src = r#"{"a": [1, 2.5, -3], "b": {"c": "x\ny", "d": true, "e": null}}"#;
+        let v = parse(src).unwrap();
+        assert_eq!(v.at("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.at("b").unwrap().at("c").unwrap().as_str().unwrap(), "x\ny");
+        let again = parse(&v.dump()).unwrap();
+        assert_eq!(v, again);
+    }
+
+    #[test]
+    fn parses_nested_manifest_shape() {
+        let src = r#"{"artifacts": {"lm_tiny_train": {"file": "f.hlo.txt",
+            "inputs": [{"shape": [16, 32], "dtype": "i32"}]}}}"#;
+        let v = parse(src).unwrap();
+        let inp = v.at("artifacts").unwrap().at("lm_tiny_train").unwrap()
+            .at("inputs").unwrap().as_arr().unwrap();
+        assert_eq!(inp[0].at("dtype").unwrap().as_str().unwrap(), "i32");
+        assert_eq!(inp[0].at("shape").unwrap().as_arr().unwrap()[1].as_usize().unwrap(), 32);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("nul").is_err());
+        assert!(parse("{} x").is_err());
+    }
+
+    #[test]
+    fn unicode_and_escapes() {
+        let v = parse(r#""café ↦ ok""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "café ↦ ok");
+        assert_eq!(parse(&v.dump()).unwrap(), v);
+    }
+
+    #[test]
+    fn integers_dump_without_fraction() {
+        assert_eq!(Value::Num(42.0).dump(), "42");
+        assert_eq!(Value::Num(2.5).dump(), "2.5");
+    }
+}

@@ -1,0 +1,67 @@
+//! Minimal timestamped logger wired into the `log` facade.
+
+use std::sync::Once;
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+static INIT: Once = Once::new();
+static mut START: Option<Instant> = None;
+
+struct Logger;
+
+impl log::Log for Logger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = unsafe {
+            #[allow(static_mut_refs)]
+            START.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0)
+        };
+        let lvl = match record.level() {
+            Level::Error => "E",
+            Level::Warn => "W",
+            Level::Info => "I",
+            Level::Debug => "D",
+            Level::Trace => "T",
+        };
+        eprintln!("[{t:9.3}s {lvl}] {}", record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: Logger = Logger;
+
+/// Install the logger once; level from `ETHER_LOG` (error|warn|info|debug).
+pub fn init() {
+    INIT.call_once(|| {
+        unsafe {
+            START = Some(Instant::now());
+        }
+        let level = match std::env::var("ETHER_LOG").as_deref() {
+            Ok("error") => LevelFilter::Error,
+            Ok("warn") => LevelFilter::Warn,
+            Ok("debug") => LevelFilter::Debug,
+            Ok("trace") => LevelFilter::Trace,
+            _ => LevelFilter::Info,
+        };
+        let _ = log::set_logger(&LOGGER);
+        log::set_max_level(level);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logger smoke");
+    }
+}

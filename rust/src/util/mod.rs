@@ -1,0 +1,16 @@
+//! Offline substrates.
+//!
+//! This build environment has no crate registry beyond the `xla` crate's
+//! dependency closure, so the conveniences a production crate would pull
+//! from the ecosystem (serde, clap, criterion, proptest, rayon, tokio)
+//! are implemented here from scratch — small, tested, and tailored to
+//! what the rest of the system needs.
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod table;

@@ -1,0 +1,96 @@
+//! Scoped data-parallelism (rayon is unavailable offline).
+//!
+//! `parallel_for_chunks` splits an index range into contiguous chunks and
+//! runs them on `std::thread::scope` threads — used by the host matmul,
+//! adapter merging, and workload generation.
+
+/// Number of worker threads to use (capped, env-overridable).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("ETHER_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Run `f(start, end)` over disjoint chunks of `0..n` in parallel.
+/// Falls back to inline execution for small `n` to avoid thread overhead.
+pub fn parallel_for_chunks<F>(n: usize, min_chunk: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let threads = default_threads();
+    if n == 0 {
+        return;
+    }
+    if threads <= 1 || n <= min_chunk {
+        f(0, n);
+        return;
+    }
+    let chunks = threads.min(n.div_ceil(min_chunk));
+    let per = n.div_ceil(chunks);
+    std::thread::scope(|s| {
+        for c in 0..chunks {
+            let f = &f;
+            let start = c * per;
+            let end = ((c + 1) * per).min(n);
+            if start < end {
+                s.spawn(move || f(start, end));
+            }
+        }
+    });
+}
+
+/// Parallel map over items, preserving order.
+pub fn parallel_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send + Default + Clone,
+    F: Fn(&T) -> R + Sync,
+{
+    let mut out = vec![R::default(); items.len()];
+    {
+        let slots: Vec<std::sync::Mutex<&mut R>> =
+            out.iter_mut().map(std::sync::Mutex::new).collect();
+        parallel_for_chunks(items.len(), 1, |a, b| {
+            for i in a..b {
+                **slots[i].lock().unwrap() = f(&items[i]);
+            }
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn covers_all_indices_once() {
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for_chunks(1000, 16, |a, b| {
+            for i in a..b {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn small_n_inline() {
+        let count = AtomicUsize::new(0);
+        parallel_for_chunks(3, 64, |a, b| {
+            count.fetch_add(b - a, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn parallel_map_order() {
+        let xs: Vec<usize> = (0..257).collect();
+        let ys = parallel_map(&xs, |x| x * 2);
+        assert_eq!(ys, xs.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,50 @@
+//! Property-based testing mini-framework (proptest is unavailable
+//! offline). Runs a property over many seeded random cases and reports
+//! the failing seed for reproduction.
+
+use crate::util::rng::Rng;
+
+/// Run `prop(rng)` for `cases` seeds; panics with the failing seed.
+pub fn check<F: Fn(&mut Rng) -> Result<(), String>>(name: &str, cases: u64, prop: F) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xE7_4E2 ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property {name:?} failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Assert helper returning Err for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Approximate-equality helper for float properties.
+pub fn close(a: f64, b: f64, atol: f64) -> bool {
+    (a - b).abs() <= atol + 1e-9 * b.abs().max(a.abs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("sum-commutes", 50, |rng| {
+            let (a, b) = (rng.f64(), rng.f64());
+            prop_assert!(close(a + b, b + a, 1e-12), "{a} {b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at seed")]
+    fn failing_property_reports_seed() {
+        check("always-false", 3, |_| Err("nope".into()));
+    }
+}

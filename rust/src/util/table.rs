@@ -1,0 +1,124 @@
+//! Paper-style table rendering for the experiment drivers: aligned text
+//! to stdout + CSV to `reports/` so EXPERIMENTS.md can quote both.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// A simple column-aligned table with a title and optional CSV dump.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Format a float with sensible precision for metric tables.
+    pub fn f(x: f64) -> String {
+        if x == 0.0 {
+            "0".into()
+        } else if x.abs() >= 100.0 {
+            format!("{x:.1}")
+        } else if x.abs() >= 1.0 {
+            format!("{x:.2}")
+        } else {
+            format!("{x:.3}")
+        }
+    }
+
+    /// Millions-of-parameters formatting matching the paper ("0.1M").
+    pub fn params_m(n: usize) -> String {
+        format!("{:.2}M", n as f64 / 1e6)
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "\n### {}", self.title);
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:<w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", line(&self.headers, &widths));
+        let _ = writeln!(out, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &widths));
+        }
+        out
+    }
+
+    /// Print to stdout and persist as CSV under `dir/<slug>.csv`.
+    pub fn emit(&self, dir: &Path, slug: &str) -> Result<()> {
+        print!("{}", self.render());
+        std::fs::create_dir_all(dir)?;
+        let mut csv = String::new();
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let _ = writeln!(csv, "{}", self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        for row in &self.rows {
+            let _ = writeln!(csv, "{}", row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        std::fs::write(dir.join(format!("{slug}.csv")), csv)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", &["a", "metric"]);
+        t.row(vec!["x".into(), "1.50".into()]);
+        t.row(vec!["longer".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("### T"));
+        assert!(s.contains("longer"));
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let dir = std::env::temp_dir().join("ether_table_test");
+        let mut t = Table::new("T", &["a"]);
+        t.row(vec!["x,y".into()]);
+        t.emit(&dir, "t").unwrap();
+        let csv = std::fs::read_to_string(dir.join("t.csv")).unwrap();
+        assert!(csv.contains("\"x,y\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        Table::new("T", &["a", "b"]).row(vec!["x".into()]);
+    }
+}

@@ -1,0 +1,180 @@
+//! Property tests of the serving coordinator's invariants: the batcher
+//! never drops, duplicates, or reorders-within-adapter requests; batch
+//! bounds hold; the LRU cache respects capacity; routing is faithful.
+
+use std::time::{Duration, Instant};
+
+use ether::coordinator::registry::MergedCache;
+use ether::coordinator::{AdapterRegistry, Batcher, BatcherCfg, Request, Server};
+use ether::util::prop::check;
+use ether::util::rng::Rng;
+
+fn random_requests(rng: &mut Rng, n: usize, adapters: usize, t0: Instant) -> Vec<Request> {
+    (0..n)
+        .map(|i| Request {
+            id: i as u64,
+            adapter: format!("a{}", rng.below(adapters)),
+            prompt: vec![rng.below(255) as i32; rng.range(1, 6)],
+            max_new: rng.range(1, 8),
+            enqueued: t0 + Duration::from_micros(rng.below(500) as u64),
+        })
+        .collect()
+}
+
+#[test]
+fn batcher_conserves_requests_exactly_once_in_fifo_order() {
+    check("batcher-conservation", 40, |rng| {
+        let cfg = BatcherCfg {
+            max_batch: rng.range(1, 9),
+            max_wait: Duration::from_millis(rng.below(3) as u64),
+        };
+        let mut b = Batcher::new(cfg);
+        let t0 = Instant::now();
+        let n_req = rng.range(1, 60);
+        let n_ad = rng.range(1, 5);
+        let reqs = random_requests(rng, n_req, n_ad, t0);
+        let n = reqs.len();
+        for r in reqs {
+            b.push(r);
+        }
+        let mut per_adapter: std::collections::BTreeMap<String, Vec<u64>> = Default::default();
+        let mut total = 0;
+        let late = t0 + Duration::from_secs(1);
+        while let Some((adapter, batch)) = b.pop_ready(late) {
+            if batch.is_empty() || batch.len() > cfg.max_batch {
+                return Err(format!("batch size {} out of bounds", batch.len()));
+            }
+            for r in &batch {
+                if r.adapter != adapter {
+                    return Err("misrouted request".into());
+                }
+                per_adapter.entry(adapter.clone()).or_default().push(r.id);
+            }
+            total += batch.len();
+        }
+        if total != n {
+            return Err(format!("lost/duplicated: {total} of {n}"));
+        }
+        if b.pending() != 0 {
+            return Err("pending count desynced".into());
+        }
+        // FIFO within each adapter (ids are push order).
+        for (adapter, ids) in per_adapter {
+            let mut sorted = ids.clone();
+            sorted.sort();
+            if ids != sorted {
+                return Err(format!("adapter {adapter} reordered: {ids:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn batcher_never_releases_early_before_deadline_or_full() {
+    check("batcher-no-early-release", 30, |rng| {
+        let cfg = BatcherCfg { max_batch: 8, max_wait: Duration::from_millis(50) };
+        let mut b = Batcher::new(cfg);
+        let t0 = Instant::now();
+        let n = rng.range(1, 8); // strictly below max_batch
+        for r in random_requests(rng, n, 1, t0) {
+            b.push(r);
+        }
+        // Before the deadline nothing may be released.
+        if b.pop_ready(t0 + Duration::from_millis(10)).is_some() {
+            return Err("released before deadline with non-full batch".into());
+        }
+        // After the deadline everything must flow.
+        if b.pop_ready(t0 + Duration::from_millis(100)).is_none() {
+            return Err("did not release after deadline".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn lru_cache_capacity_and_recency() {
+    check("lru", 40, |rng| {
+        let cap = rng.range(1, 6);
+        let mut cache = MergedCache::new(cap);
+        let universe = rng.range(1, 10);
+        let mut model: Vec<String> = vec![]; // recency list, most-recent last
+        for _ in 0..200 {
+            let id = format!("k{}", rng.below(universe));
+            if cache.get(&id).is_some() {
+                model.retain(|x| x != &id);
+                model.push(id);
+            } else {
+                cache.put(&id, std::sync::Arc::new(vec![0.0]));
+                if model.len() >= cap {
+                    model.remove(0);
+                }
+                model.retain(|x| x != &id);
+                model.push(id);
+            }
+            if cache.len() > cap {
+                return Err(format!("cache over capacity: {} > {cap}", cache.len()));
+            }
+            // every modelled-resident key must be present
+            for k in &model {
+                if !cache.contains(k) {
+                    return Err(format!("recency model diverged on {k}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn server_routes_every_request_to_its_own_adapter() {
+    struct TagBackend;
+    impl ether::coordinator::server::GenBackend for TagBackend {
+        fn generate(
+            &mut self,
+            adapter: &ether::coordinator::registry::AdapterEntry,
+            prompts: &[Vec<i32>],
+            _max_new: usize,
+        ) -> anyhow::Result<Vec<Vec<i32>>> {
+            // tag output with the adapter's salt value
+            Ok(prompts.iter().map(|_| vec![adapter.peft[0] as i32]).collect())
+        }
+    }
+
+    check("routing", 25, |rng| {
+        let adapters = rng.range(1, 6);
+        let mut registry = AdapterRegistry::new();
+        for a in 0..adapters {
+            registry.register(&format!("a{a}"), "ether_n4", "tiny", vec![a as f32]);
+        }
+        let mut server = Server::new(
+            registry,
+            BatcherCfg { max_batch: rng.range(1, 9), max_wait: Duration::ZERO },
+        );
+        let t0 = Instant::now();
+        let n_req = rng.range(1, 40);
+        let reqs = random_requests(rng, n_req, adapters, t0);
+        let expected: std::collections::BTreeMap<u64, i32> = reqs
+            .iter()
+            .map(|r| (r.id, r.adapter[1..].parse::<i32>().unwrap()))
+            .collect();
+        for r in reqs {
+            server.batcher.push(r);
+        }
+        let mut errors = vec![];
+        server
+            .pump(&mut TagBackend, t0 + Duration::from_secs(1), |resp| {
+                if resp.output[0] != expected[&resp.id] {
+                    errors.push(resp.id);
+                }
+            })
+            .unwrap();
+        if !errors.is_empty() {
+            return Err(format!("misrouted ids {errors:?}"));
+        }
+        if server.stats.served as usize != expected.len() {
+            return Err("served count mismatch".into());
+        }
+        Ok(())
+    });
+}

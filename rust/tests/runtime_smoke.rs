@@ -1,0 +1,171 @@
+//! End-to-end runtime smoke tests against the real AOT artifacts.
+//!
+//! These tests exercise the full L2→L3 bridge: HLO-text parse → XLA
+//! compile → PJRT execute, on the `tiny` config. They skip (with a
+//! notice) when `artifacts/` has not been built, so `cargo test` works
+//! on a fresh checkout; `make test` always runs them.
+
+use ether::runtime::{HostTensor, PjrtEngine};
+use ether::util::rng::Rng;
+
+fn engine() -> Option<PjrtEngine> {
+    let dir = ether::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("[skip] artifacts not built — run `make artifacts`");
+        return None;
+    }
+    Some(PjrtEngine::new(&dir).expect("engine"))
+}
+
+fn batch(engine: &PjrtEngine, cfg: &str, seed: u64) -> (HostTensor, HostTensor, HostTensor) {
+    let c = engine.manifest.config(cfg).unwrap();
+    let mut rng = Rng::new(seed);
+    let toks: Vec<i32> = (0..c.batch * c.seq).map(|_| rng.below(256) as i32).collect();
+    let mut tgts = toks.clone();
+    tgts.rotate_left(1);
+    let mask = vec![1.0f32; c.batch * c.seq];
+    (
+        HostTensor::mat_i32(c.batch, c.seq, toks),
+        HostTensor::mat_i32(c.batch, c.seq, tgts),
+        HostTensor::mat_f32(c.batch, c.seq, mask),
+    )
+}
+
+#[test]
+fn train_step_executes_and_learns() {
+    let Some(engine) = engine() else { return };
+    let exec = engine.load("lm_tiny_ether_n4_train").expect("load artifact");
+    let c = engine.manifest.config("tiny").unwrap();
+    let base = HostTensor::vec_f32(engine.manifest.load_init("tiny_base").unwrap());
+    let mut peft = engine.manifest.load_init("tiny_ether_n4_peft").unwrap();
+    let k = peft.len();
+    let (tok, tgt, mask) = batch(&engine, "tiny", 0);
+    let mut m = vec![0.0f32; k];
+    let mut v = vec![0.0f32; k];
+    assert_eq!(base.len(), c.base_size);
+
+    let mut losses = vec![];
+    for step in 1..=10 {
+        let out = exec
+            .run(&[
+                base.clone(),
+                HostTensor::vec_f32(peft.clone()),
+                HostTensor::vec_f32(m.clone()),
+                HostTensor::vec_f32(v.clone()),
+                tok.clone(),
+                tgt.clone(),
+                mask.clone(),
+                HostTensor::scalar_f32(5e-2),
+                HostTensor::scalar_f32(step as f32),
+            ])
+            .expect("execute");
+        assert_eq!(out.len(), 4);
+        peft = out[0].f32s().unwrap().to_vec();
+        m = out[1].f32s().unwrap().to_vec();
+        v = out[2].f32s().unwrap().to_vec();
+        losses.push(out[3].scalar().unwrap());
+    }
+    // Initial loss ≈ ln(vocab); training on a fixed batch must descend.
+    assert!((losses[0] - (c.vocab as f32).ln()).abs() < 0.7, "loss0={}", losses[0]);
+    assert!(
+        losses.last().unwrap() < &(losses[0] - 0.02),
+        "no descent: {losses:?}"
+    );
+    assert!(losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn device_resident_base_matches_host_path() {
+    let Some(engine) = engine() else { return };
+    let exec = engine.load("lm_tiny_ether_n4_eval").unwrap();
+    let base = HostTensor::vec_f32(engine.manifest.load_init("tiny_base").unwrap());
+    let peft = HostTensor::vec_f32(engine.manifest.load_init("tiny_ether_n4_peft").unwrap());
+    let (tok, tgt, mask) = batch(&engine, "tiny", 1);
+
+    let host_out = exec
+        .run(&[base.clone(), peft.clone(), tok.clone(), tgt.clone(), mask.clone()])
+        .unwrap();
+
+    // Same call with every input pre-uploaded as a device buffer.
+    let bufs: Vec<_> = [&base, &peft, &tok, &tgt, &mask]
+        .iter()
+        .map(|t| engine.upload(t).unwrap())
+        .collect();
+    let buf_out = exec.run_buffers(&bufs.iter().collect::<Vec<_>>()).unwrap();
+
+    let a = host_out[0].f32s().unwrap();
+    let b = buf_out[0].f32s().unwrap();
+    assert_eq!(a.len(), engine.manifest.config("tiny").unwrap().batch);
+    for (x, y) in a.iter().zip(b) {
+        assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn merge_artifact_matches_host_merge() {
+    let Some(engine) = engine() else { return };
+    let cfgi = engine.manifest.config("tiny").unwrap().clone();
+    for method in ["ether_n4", "etherplus_n4", "oft_n4", "lora_r8"] {
+        let exec = engine.load(&format!("lm_tiny_{method}_merge")).unwrap();
+        let base = engine.manifest.load_init("tiny_base").unwrap();
+        let mut peft = engine.manifest.load_init(&format!("tiny_{method}_peft")).unwrap();
+        // Perturb so the transform is non-trivial.
+        let mut rng = Rng::new(7);
+        for p in peft.iter_mut() {
+            *p += 0.05 * rng.normal();
+        }
+        let out = exec
+            .run(&[HostTensor::vec_f32(base.clone()), HostTensor::vec_f32(peft.clone())])
+            .unwrap();
+        let merged_hlo = out[0].f32s().unwrap();
+
+        let spec = ether::peft::MethodSpec::parse(method).unwrap();
+        let playout = engine.manifest.peft_layout(method, "tiny").unwrap();
+        let merged_host = ether::peft::apply::merge_into_base(
+            cfgi.dims(),
+            &spec,
+            &base,
+            &cfgi.base_layout,
+            &peft,
+            playout,
+        )
+        .unwrap();
+        let max_diff = merged_hlo
+            .iter()
+            .zip(&merged_host)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 2e-4, "{method}: host/HLO merge diverge by {max_diff}");
+    }
+}
+
+#[test]
+fn logits_artifact_shape() {
+    let Some(engine) = engine() else { return };
+    let exec = engine.load("lm_tiny_none_logits").unwrap();
+    let c = engine.manifest.config("tiny").unwrap();
+    let base = HostTensor::vec_f32(engine.manifest.load_init("tiny_base").unwrap());
+    let peft = HostTensor::vec_f32(vec![0.0]);
+    let (tok, _, _) = batch(&engine, "tiny", 2);
+    let lens = HostTensor::vec_i32(vec![c.seq as i32; c.batch]);
+    let out = exec.run(&[base, peft, tok, lens]).unwrap();
+    assert_eq!(out[0].shape(), &[c.batch, c.vocab]);
+    assert!(out[0].f32s().unwrap().iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn kernel_bench_artifacts_execute() {
+    let Some(engine) = engine() else { return };
+    let d = engine.manifest.micro_dim;
+    let mut rng = Rng::new(3);
+    let w = HostTensor::mat_f32(d, d, rng.normal_vec(d * d, 0.05));
+    for n in [1usize, 4, 32] {
+        let exec = engine.load(&format!("k_ether_d{d}_n{n}")).unwrap();
+        let u = HostTensor::mat_f32(n, d / n, rng.normal_vec(d, 1.0));
+        let out = exec.run(&[u, w.clone()]).unwrap();
+        // Orthogonality: the reflection preserves the Frobenius norm.
+        let fro = |xs: &[f32]| xs.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+        let (a, b) = (fro(out[0].f32s().unwrap()), fro(w.f32s().unwrap()));
+        assert!((a - b).abs() / b < 1e-4, "n={n}: {a} vs {b}");
+    }
+}

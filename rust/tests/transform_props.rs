@@ -1,0 +1,178 @@
+//! Property-based tests of the paper's mathematical claims over the
+//! host-side transform family (random matrices, many seeds).
+
+use ether::peft::apply::{merge_into_base, peft_layout_for, ModelDims};
+use ether::peft::transforms as tf;
+use ether::peft::{metrics, MethodSpec};
+use ether::tensor::{solve, Mat};
+use ether::util::prop::{check, close};
+use ether::util::rng::Rng;
+
+fn rand_blocks(rng: &mut Rng) -> (usize, usize) {
+    let n = *rng.pick(&[1usize, 2, 4, 8]);
+    let db = *rng.pick(&[2usize, 4, 8]);
+    (n, n * db)
+}
+
+#[test]
+fn householder_distance_is_exactly_two_per_block() {
+    // Paper Eq. 2: ‖H − I‖_F = 2 per block for ANY u.
+    check("eq2", 40, |rng| {
+        let (n, d) = rand_blocks(rng);
+        let scale = *rng.pick(&[0.01f32, 1.0, 100.0]);
+        let u = rng.normal_vec(d, scale);
+        let h = tf::householder_dense(&u, n);
+        let want = 2.0 * (n as f64).sqrt();
+        let got = h.dist_from_identity();
+        if !close(got, want, 1e-3) {
+            return Err(format!("dist {got} != {want} (n={n}, scale={scale})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn householder_is_orthogonal_involution_det_minus_one() {
+    check("householder-structure", 30, |rng| {
+        let (n, d) = rand_blocks(rng);
+        let u = rng.normal_vec(d, 1.0);
+        let h = tf::householder_dense(&u, n);
+        let hht = h.matmul(&h.transpose());
+        if hht.max_abs_diff(&Mat::eye(d)) > 1e-4 {
+            return Err("not orthogonal".into());
+        }
+        if h.matmul(&h).max_abs_diff(&Mat::eye(d)) > 1e-4 {
+            return Err("not involutive".into());
+        }
+        // det = (−1)^n — the sign Cayley can never produce (paper §3.2).
+        let want = if n % 2 == 0 { 1.0 } else { -1.0 };
+        if !close(solve::det(&h), want, 1e-3) {
+            return Err(format!("det {} != {want}", solve::det(&h)));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ether_plus_distance_bounded_by_two_per_block() {
+    // §3.3: ‖H⁺ − I‖_F ≤ 2 per block, for any u, v and any scaling.
+    check("etherplus-bound", 40, |rng| {
+        let (n, d) = rand_blocks(rng);
+        let su = *rng.pick(&[0.1f32, 1.0, 50.0]);
+        let sv = *rng.pick(&[0.1f32, 1.0, 50.0]);
+        let u = rng.normal_vec(d, su);
+        let v = rng.normal_vec(d, sv);
+        let h = tf::ether_plus_dense(&u, &v, n);
+        let bound = 2.0 * (n as f64).sqrt() + 1e-3;
+        let got = h.dist_from_identity();
+        if got > bound {
+            return Err(format!("dist {got} > bound {bound}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cayley_is_orthogonal_det_plus_one_for_any_r() {
+    check("cayley", 25, |rng| {
+        let n = *rng.pick(&[1usize, 2, 4]);
+        let k = *rng.pick(&[2usize, 3, 5, 8]);
+        let sr = *rng.pick(&[0.1f32, 1.0, 5.0]);
+        let r = rng.normal_vec(n * k * k, sr);
+        for q in tf::cayley_blocks(&r, n, k) {
+            if q.matmul(&q.transpose()).max_abs_diff(&Mat::eye(k)) > 1e-3 {
+                return Err("Q not orthogonal".into());
+            }
+            if !close(solve::det(&q), 1.0, 1e-3) {
+                return Err(format!("det {} != 1", solve::det(&q)));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ether_plus_can_shift_he_while_ether_stays_structural() {
+    // §5.3 / Fig. 7: orthogonal ETHER retains HE; relaxed ETHER+ shifts it.
+    let dims = ModelDims { d_model: 16, d_ff: 32, n_layers: 1 };
+    let base_layout = ether::peft::flat::Layout::new(
+        ether::peft::adapted_matrices(dims.d_model, dims.d_ff)
+            .into_iter()
+            .map(|(n, d, f)| (n.to_string(), vec![dims.n_layers, d, f]))
+            .collect(),
+    );
+    check("he-invariance", 10, |rng| {
+        let base = rng.normal_vec(base_layout.total, 0.1);
+        let he0 = metrics::model_he(dims, &base, &base_layout, 32).unwrap();
+
+        let spec = MethodSpec::parse("ether_n4").unwrap();
+        let pl = peft_layout_for(dims, &spec);
+        let peft = rng.normal_vec(pl.total, 1.0);
+        let merged = merge_into_base(dims, &spec, &base, &base_layout, &peft, &pl).unwrap();
+        let he1 = metrics::model_he(dims, &merged, &base_layout, 32).unwrap();
+        let d_ether = (he1 - he0).abs() / he0;
+
+        let spec2 = MethodSpec::parse("etherplus_n4").unwrap();
+        let pl2 = peft_layout_for(dims, &spec2);
+        let peft2 = rng.normal_vec(pl2.total, 1.0);
+        let merged2 = merge_into_base(dims, &spec2, &base, &base_layout, &peft2, &pl2).unwrap();
+        let he2 = metrics::model_he(dims, &merged2, &base_layout, 32).unwrap();
+        let d_plus = (he2 - he0).abs() / he0;
+
+        if !(d_plus > 0.0) {
+            return Err("ETHER+ should shift HE".into());
+        }
+        if d_ether > 0.5 {
+            return Err(format!("ETHER moved HE too much: {d_ether}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn merged_weights_norm_preserved_only_for_orthogonal_methods() {
+    let dims = ModelDims { d_model: 16, d_ff: 32, n_layers: 2 };
+    let base_layout = ether::peft::flat::Layout::new(
+        ether::peft::adapted_matrices(dims.d_model, dims.d_ff)
+            .into_iter()
+            .map(|(n, d, f)| (n.to_string(), vec![dims.n_layers, d, f]))
+            .collect(),
+    );
+    check("norm-preservation", 15, |rng| {
+        let base = rng.normal_vec(base_layout.total, 0.1);
+        let norm0 = ether::tensor::norm(&base);
+        // ether (orthogonal) keeps the global norm
+        let spec = MethodSpec::parse("ether_n2").unwrap();
+        let pl = peft_layout_for(dims, &spec);
+        let peft = rng.normal_vec(pl.total, 1.0);
+        let merged = merge_into_base(dims, &spec, &base, &base_layout, &peft, &pl).unwrap();
+        if !close(ether::tensor::norm(&merged), norm0, 1e-3 * norm0) {
+            return Err("ether changed the norm".into());
+        }
+        // naive (unconstrained) does not
+        let spec = MethodSpec::parse("naive_n2").unwrap();
+        let pl = peft_layout_for(dims, &spec);
+        let peft = rng.normal_vec(pl.total, 0.5);
+        let merged = merge_into_base(dims, &spec, &base, &base_layout, &peft, &pl).unwrap();
+        if close(ether::tensor::norm(&merged), norm0, 1e-4 * norm0) {
+            return Err("naive unexpectedly preserved the norm".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn block_semantics_match_between_fast_and_dense_paths() {
+    check("block-consistency", 25, |rng| {
+        let (n, d) = rand_blocks(rng);
+        let f = *rng.pick(&[2usize, 6, 16]);
+        let w = Mat::randn(d, f, 1.0, &mut rng.fork(1));
+        let u = rng.normal_vec(d, 1.0);
+        let fast = tf::ether_apply(&u, n, &w);
+        let dense = tf::householder_dense(&u, n).matmul(&w);
+        if fast.max_abs_diff(&dense) > 1e-4 {
+            return Err(format!("fast/dense diverge (n={n}, d={d}, f={f})"));
+        }
+        Ok(())
+    });
+}

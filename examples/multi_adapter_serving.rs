@@ -3,11 +3,23 @@
 //! merged-weight LRU cache. Compares adapter memory footprints across
 //! methods (the paper's 10–100× headline) and reports serving metrics
 //! under a skewed (zipf-ish) request mix.
+//!
+//! Two modes:
+//! * **PJRT** (artifacts built): merge via the HLO `merge` artifact and
+//!   decode through the compiled model.
+//! * **host** (no artifacts / stub xla): merge through the blocked
+//!   parallel [`MergeEngine`] with single-flight + bounded workers —
+//!   the serving-path half of the engine is exercised for real, decode
+//!   is an echo.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
-use ether::coordinator::{server::PjrtBackend, AdapterRegistry, BatcherCfg, Request, Server};
+use ether::coordinator::server::{HostMergeBackend, PjrtBackend};
+use ether::coordinator::{AdapterRegistry, BatcherCfg, MergeEngine, Request, Server};
+use ether::peft::apply::{base_layout_for, peft_layout_for, ModelDims};
+use ether::peft::MethodSpec;
 use ether::runtime::engine::PjrtEngine;
 use ether::util::cli::Args;
 use ether::util::rng::Rng;
@@ -19,14 +31,29 @@ fn main() -> Result<()> {
     let n_users = args.usize_or("users", 12)?;
     let n_requests = args.usize_or("requests", 64)?;
     args.finish()?;
+    anyhow::ensure!(n_users >= 1, "--users must be >= 1");
 
-    let engine = PjrtEngine::open_default()?;
-    let c = engine.manifest.config(&cfg)?.clone();
+    match PjrtEngine::open_default() {
+        Ok(engine) => run_pjrt(&engine, &cfg, n_users, n_requests),
+        Err(e) => {
+            println!("[PJRT unavailable: {e:#}]");
+            println!("falling back to the host-merge serving demo\n");
+            run_host(n_users, n_requests)
+        }
+    }
+}
+
+/// Original PJRT path: HLO merge artifact + compiled decode.
+fn run_pjrt(engine: &PjrtEngine, cfg: &str, n_users: usize, n_requests: usize) -> Result<()> {
+    let c = engine.manifest.config(cfg)?.clone();
 
     // The multi-tenancy argument: per-user adapter footprint by method.
-    println!("per-user adapter footprint on `{cfg}` (base = {:.1} MB):", c.base_size as f64 * 4.0 / 1e6);
+    println!(
+        "per-user adapter footprint on `{cfg}` (base = {:.1} MB):",
+        c.base_size as f64 * 4.0 / 1e6
+    );
     for method in ["ether_n4", "etherplus_n4", "vera_r16", "lora_r8", "oft_n4"] {
-        if let Ok(n) = engine.manifest.peft_vec_size(method, &cfg) {
+        if let Ok(n) = engine.manifest.peft_vec_size(method, cfg) {
             println!(
                 "  {method:<14} {:>10.1} KB  ({:>7} params) → {:>9.0} users/GB",
                 n as f64 * 4.0 / 1024.0,
@@ -45,7 +72,7 @@ fn main() -> Result<()> {
         for p in peft.iter_mut() {
             *p += 0.25 * rng.normal();
         }
-        registry.register(&format!("user{u}"), "ether_n4", &cfg, peft);
+        registry.register(&format!("user{u}"), "ether_n4", cfg, peft);
     }
     println!(
         "\nregistered {n_users} adapters — total {:.1} KB (vs {:.1} MB per merged copy)",
@@ -56,45 +83,96 @@ fn main() -> Result<()> {
     // Serve a zipf-skewed stream; report cache behaviour + latency.
     for cache_cap in [2usize, n_users] {
         let mut server = Server::new(
-            {
-                let mut r = AdapterRegistry::new();
-                for id in registry.ids() {
-                    let e = registry.get(id)?;
-                    r.register(id, &e.method, &e.cfg, (*e.peft).clone());
-                }
-                r
-            },
+            registry.clone(),
             BatcherCfg { max_batch: c.batch, max_wait: Duration::from_millis(4) },
         );
-        let mut backend = PjrtBackend::new(&engine, &cfg, cache_cap);
+        let mut backend = PjrtBackend::new(engine, cfg, cache_cap);
         let mut rng = Rng::new(99);
         let t0 = Instant::now();
-        for i in 0..n_requests {
-            let user = ((rng.f64().powi(3)) * n_users as f64) as usize % n_users;
-            let mut prompt = vec![ether::data::BOS];
-            prompt.extend(ether::data::encode("the "));
-            server.batcher.push(Request {
-                id: i as u64,
-                adapter: format!("user{user}"),
-                prompt,
-                max_new: 6,
-                enqueued: Instant::now(),
-            });
-        }
+        push_zipf_stream(&mut server, n_users, n_requests, &mut rng);
         server.pump(&mut backend, Instant::now() + Duration::from_secs(1), |_| {})?;
-        let dt = t0.elapsed().as_secs_f64();
-        let s = &server.stats;
-        println!(
-            "cache={cache_cap:<3} → {:.1} req/s | p50 {:>7.1} ms p95 {:>7.1} ms | \
-             mean batch {:.1} | merge hits/misses {}/{}",
-            s.served as f64 / dt,
-            s.p50_ms(),
-            s.p95_ms(),
-            s.mean_batch(),
-            backend.cache.hits,
-            backend.cache.misses,
-        );
+        report_line(&server, cache_cap, t0);
     }
     println!("multi_adapter_serving OK");
     Ok(())
+}
+
+/// Host path: synthetic base, blocked parallel merge-on-demand engine.
+fn run_host(n_users: usize, n_requests: usize) -> Result<()> {
+    let dims = ModelDims { d_model: 128, d_ff: 256, n_layers: 4 };
+    let layout = base_layout_for(dims);
+    let mut rng = Rng::new(77);
+    let base: Vec<f32> = rng.normal_vec(layout.total, 0.05);
+    println!(
+        "synthetic base: d={} ff={} L={} ({:.1} MB)",
+        dims.d_model,
+        dims.d_ff,
+        dims.n_layers,
+        layout.total as f64 * 4.0 / 1e6
+    );
+
+    let spec = MethodSpec::parse("ether_n4")?;
+    let pl = peft_layout_for(dims, &spec);
+    println!(
+        "per-user ETHER adapter: {:.1} KB ({} params) → {:.0} users/GB\n",
+        pl.total as f64 * 4.0 / 1024.0,
+        pl.total,
+        1e9 / (pl.total as f64 * 4.0)
+    );
+
+    let mut registry = AdapterRegistry::new();
+    for u in 0..n_users {
+        registry.register(&format!("user{u}"), "ether_n4", "host", rng.normal_vec(pl.total, 0.5));
+    }
+
+    for cache_cap in [2usize, n_users] {
+        let merger =
+            Arc::new(MergeEngine::new(dims, base.clone(), &layout, cache_cap, 4)?);
+        let mut server = Server::new(
+            registry.clone(),
+            BatcherCfg { max_batch: 8, max_wait: Duration::from_millis(4) },
+        );
+        let mut backend = HostMergeBackend::new(merger.clone());
+        let mut rng = Rng::new(99);
+        let t0 = Instant::now();
+        push_zipf_stream(&mut server, n_users, n_requests, &mut rng);
+        server.pump(&mut backend, Instant::now() + Duration::from_secs(1), |_| {})?;
+        report_line(&server, cache_cap, t0);
+        println!(
+            "           {} real merges executed by the bounded worker pool",
+            merger.merges.load(std::sync::atomic::Ordering::SeqCst)
+        );
+    }
+    println!("multi_adapter_serving OK (host mode)");
+    Ok(())
+}
+
+fn push_zipf_stream(server: &mut Server, n_users: usize, n_requests: usize, rng: &mut Rng) {
+    for i in 0..n_requests {
+        let user = ((rng.f64().powi(3)) * n_users as f64) as usize % n_users;
+        let mut prompt = vec![ether::data::BOS];
+        prompt.extend(ether::data::encode("the "));
+        server.batcher.push(Request {
+            id: i as u64,
+            adapter: format!("user{user}"),
+            prompt,
+            max_new: 6,
+            enqueued: Instant::now(),
+        });
+    }
+}
+
+fn report_line(server: &Server, cache_cap: usize, t0: Instant) {
+    let dt = t0.elapsed().as_secs_f64();
+    let s = &server.stats;
+    println!(
+        "cache={cache_cap:<3} → {:.1} req/s | p50 {:>7.1} ms p95 {:>7.1} ms | \
+         mean batch {:.1} | merge hits/misses {}/{}",
+        s.served as f64 / dt,
+        s.p50_ms(),
+        s.p95_ms(),
+        s.mean_batch(),
+        s.merge_hits,
+        s.merge_misses,
+    );
 }

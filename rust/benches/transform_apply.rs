@@ -1,7 +1,8 @@
 //! Bench — host-side transform application (the coordinator's merge
 //! primitives): ETHER / ETHER+ / OFT-Cayley / Naive / LoRA per (d, n).
 //! Backs the paper's complexity table (§3.4): ETHER O(d·f) flat in n,
-//! bdmm O(d²f/n).
+//! bdmm O(d²f/n) — plus blocked-parallel vs serial-reference pairs that
+//! measure the column-tile engine against the original scalar path.
 
 use ether::peft::transforms as tf;
 use ether::tensor::Mat;
@@ -54,4 +55,61 @@ fn main() {
         ether::util::benchkit::black_box(tf::lora_apply(&a, &b, &w));
     });
     bench.report();
+
+    // Blocked parallel engine vs the serial scalar reference, per op.
+    let mut cmp = Bench::new(&format!("blocked vs serial (d=f={d})"));
+    let n = 4usize;
+    let u = rng.normal_vec(d, 1.0);
+    let v = rng.normal_vec(d, 1.0);
+    let work = 4.0 * (d * d) as f64;
+    let fast = cmp
+        .case("ether n=4 (blocked parallel)", Some(work), || {
+            ether::util::benchkit::black_box(tf::ether_apply(&u, n, &w));
+        })
+        .median_ns;
+    let slow = cmp
+        .case("ether n=4 (serial reference)", Some(work), || {
+            ether::util::benchkit::black_box(tf::ether_apply_serial(&u, n, &w));
+        })
+        .median_ns;
+    println!("  ether: {:.2}x", slow / fast);
+    let work = 8.0 * (d * d) as f64;
+    let fast = cmp
+        .case("ether+ left n=4 (blocked parallel)", Some(work), || {
+            ether::util::benchkit::black_box(tf::ether_plus_left(&u, &v, n, &w));
+        })
+        .median_ns;
+    let slow = cmp
+        .case("ether+ left n=4 (serial reference)", Some(work), || {
+            ether::util::benchkit::black_box(tf::ether_plus_left_serial(&u, &v, n, &w));
+        })
+        .median_ns;
+    println!("  ether+ left: {:.2}x", slow / fast);
+    let fast = cmp
+        .case("ether+ right n=4 (blocked parallel)", Some(work), || {
+            ether::util::benchkit::black_box(tf::ether_plus_right(&w, &u, &v, n));
+        })
+        .median_ns;
+    let slow = cmp
+        .case("ether+ right n=4 (serial reference)", Some(work), || {
+            ether::util::benchkit::black_box(tf::ether_plus_right_serial(&w, &u, &v, n));
+        })
+        .median_ns;
+    println!("  ether+ right: {:.2}x", slow / fast);
+    let k = d / n;
+    let r = rng.normal_vec(n * k * k, 0.1);
+    let q = tf::cayley_blocks(&r, n, k);
+    let work = 2.0 * k as f64 * (d * d) as f64;
+    let fast = cmp
+        .case("bdmm n=4 (blocked parallel)", Some(work), || {
+            ether::util::benchkit::black_box(tf::bdmm(&q, &w));
+        })
+        .median_ns;
+    let slow = cmp
+        .case("bdmm n=4 (serial reference)", Some(work), || {
+            ether::util::benchkit::black_box(tf::bdmm_serial(&q, &w));
+        })
+        .median_ns;
+    println!("  bdmm: {:.2}x", slow / fast);
+    cmp.report();
 }

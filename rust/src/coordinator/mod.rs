@@ -5,10 +5,13 @@
 //! over one frozen base model, each adapter 10–100× smaller than LoRA's.
 //! This module is that deployment story as a runnable system:
 //!
-//! * [`registry`] — adapter store (tiny per-user PEFT vectors) plus an
-//!   LRU cache of *merged* weights: multiplicative adapters fold into the
+//! * [`registry`] — adapter store (tiny per-user PEFT vectors), an LRU
+//!   cache of *merged* weights, and the merge-on-demand
+//!   [`registry::MergeEngine`]: multiplicative adapters fold into the
 //!   base at zero inference cost (paper §3.1), so a cache hit serves
-//!   requests through the plain `none` forward artifact.
+//!   requests through the plain `none` forward artifact, and concurrent
+//!   misses for different adapters merge in parallel through the blocked
+//!   host engine (single-flight per adapter, bounded worker budget).
 //! * [`batcher`] — dynamic batching per adapter with size + deadline
 //!   triggers (vLLM-router-style).
 //! * [`server`] — the serving loop: route → batch → merge(cache) →
@@ -22,5 +25,5 @@ pub mod registry;
 pub mod server;
 
 pub use batcher::{Batcher, BatcherCfg, Request};
-pub use registry::AdapterRegistry;
+pub use registry::{AdapterRegistry, MergeEngine, MergedCache};
 pub use server::{Server, ServerStats};

@@ -1,9 +1,16 @@
-//! Adapter registry + merged-weight LRU cache.
+//! Adapter registry, merged-weight LRU cache, and the merge-on-demand
+//! [`MergeEngine`] (host-side blocked parallel merging with single-flight
+//! deduplication and a bounded merge-worker budget).
 
-use std::collections::{BTreeMap, HashMap, VecDeque};
-use std::sync::Arc;
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::{anyhow, Result};
+
+use crate::peft::apply::{peft_layout_for, MergePlan, ModelDims};
+use crate::peft::flat::Layout;
+use crate::peft::{MethodKind, MethodSpec};
 
 /// One registered adapter: the tiny trainable vector plus its identity.
 #[derive(Clone, Debug)]
@@ -16,8 +23,9 @@ pub struct AdapterEntry {
 
 /// Store of per-user adapters. The whole point of ETHER-style PEFT at
 /// scale: a `small`-config ETHER adapter is ~9 KB of f32 — a million
-/// users fit in host RAM.
-#[derive(Default)]
+/// users fit in host RAM. Cloning shares the parameter `Arc`s, so a
+/// registry copy costs one refcount bump per adapter.
+#[derive(Clone, Default)]
 pub struct AdapterRegistry {
     adapters: BTreeMap<String, AdapterEntry>,
 }
@@ -100,6 +108,12 @@ impl MergedCache {
         }
     }
 
+    /// Non-counting, non-reordering lookup — used by the single-flight
+    /// double-check so a race-window probe doesn't skew hit/miss stats.
+    fn peek(&self, id: &str) -> Option<Arc<Vec<f32>>> {
+        self.map.get(id).cloned()
+    }
+
     pub fn put(&mut self, id: &str, merged: Arc<Vec<f32>>) {
         if self.map.contains_key(id) {
             return;
@@ -128,9 +142,178 @@ impl MergedCache {
     }
 }
 
+/// Merge-on-demand engine over the blocked parallel [`MergePlan`].
+///
+/// Request threads call [`MergeEngine::merged`] directly; the engine
+/// provides three serving-path properties on top of the raw merge:
+///
+/// * **cache** — merged weights live in a [`MergedCache`] LRU; hits are
+///   lock-then-clone cheap.
+/// * **single-flight** — concurrent misses for the *same* adapter
+///   deduplicate: one thread merges, the rest wait on a condvar and then
+///   read the cache.
+/// * **bounded workers** — misses for *different* adapters merge in
+///   parallel (instead of serializing behind one big lock), capped by a
+///   permit budget. The budget bounds concurrent *merges*, not threads:
+///   each in-flight merge fans out across `parallel_for_chunks`
+///   internally, so peak compute threads ≈ `max_workers ×
+///   pool::default_threads()` — size `max_workers` (or pin
+///   `ETHER_THREADS`) accordingly for latency-sensitive hosts.
+pub struct MergeEngine {
+    dims: ModelDims,
+    base: Arc<Vec<f32>>,
+    plan: MergePlan,
+    cache: Mutex<MergedCache>,
+    inflight: Mutex<HashSet<String>>,
+    inflight_cv: Condvar,
+    permits: Mutex<usize>,
+    permits_cv: Condvar,
+    /// Number of merges actually executed (cache misses that did work).
+    pub merges: AtomicU64,
+}
+
+/// RAII single-flight marker: removes the id and wakes waiters on drop,
+/// so an error (or panic) in the merge can never wedge other threads.
+struct Flight<'a> {
+    engine: &'a MergeEngine,
+    id: String,
+}
+
+impl Drop for Flight<'_> {
+    fn drop(&mut self) {
+        self.engine.inflight.lock().unwrap().remove(&self.id);
+        self.engine.inflight_cv.notify_all();
+    }
+}
+
+/// RAII merge-worker permit.
+struct Permit<'a>(&'a MergeEngine);
+
+impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        *self.0.permits.lock().unwrap() += 1;
+        self.0.permits_cv.notify_one();
+    }
+}
+
+impl MergeEngine {
+    /// Build an engine over frozen base weights. `max_workers` bounds how
+    /// many distinct adapters may merge concurrently.
+    pub fn new(
+        dims: ModelDims,
+        base: Vec<f32>,
+        base_layout: &Layout,
+        cache_capacity: usize,
+        max_workers: usize,
+    ) -> Result<MergeEngine> {
+        let plan = MergePlan::new(dims, base_layout)?;
+        anyhow::ensure!(base.len() == base_layout.total, "base length mismatch");
+        Ok(MergeEngine {
+            dims,
+            base: Arc::new(base),
+            plan,
+            cache: Mutex::new(MergedCache::new(cache_capacity)),
+            inflight: Mutex::new(HashSet::new()),
+            inflight_cv: Condvar::new(),
+            permits: Mutex::new(max_workers.max(1)),
+            permits_cv: Condvar::new(),
+            merges: AtomicU64::new(0),
+        })
+    }
+
+    pub fn dims(&self) -> ModelDims {
+        self.dims
+    }
+
+    pub fn base(&self) -> &Arc<Vec<f32>> {
+        &self.base
+    }
+
+    /// (hits, misses) of the merged-weight cache. Waiting threads probe
+    /// the cache again after a single-flight merge completes, so their
+    /// second probe counts as the hit it is.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        let c = self.cache.lock().unwrap();
+        (c.hits, c.misses)
+    }
+
+    /// Fetch the merged weights for an adapter, merging on demand.
+    pub fn merged(&self, entry: &AdapterEntry) -> Result<Arc<Vec<f32>>> {
+        loop {
+            if let Some(m) = self.cache.lock().unwrap().get(&entry.id) {
+                return Ok(m);
+            }
+            let mut inflight = self.inflight.lock().unwrap();
+            if !inflight.contains(&entry.id) {
+                inflight.insert(entry.id.clone());
+                break;
+            }
+            // Another thread is merging this adapter. The condvar is
+            // shared across all flights (notify_all fires when ANY flight
+            // ends), so loop on OUR id's condition here — without
+            // touching the counting cache probe — and only fall through
+            // to re-probe the cache once our flight has actually ended.
+            while inflight.contains(&entry.id) {
+                inflight = self.inflight_cv.wait(inflight).unwrap();
+            }
+        }
+        let flight = Flight { engine: self, id: entry.id.clone() };
+        // Double-checked single-flight: another thread may have merged and
+        // published between our cache probe and winning the flight slot.
+        // `peek` keeps the race-window probe out of the hit/miss stats.
+        if let Some(m) = self.cache.lock().unwrap().peek(&entry.id) {
+            drop(flight);
+            return Ok(m);
+        }
+        let merged = self.do_merge(entry)?;
+        // Publish before ending the flight so woken waiters hit the cache.
+        self.cache.lock().unwrap().put(&entry.id, merged.clone());
+        drop(flight);
+        Ok(merged)
+    }
+
+    fn do_merge(&self, entry: &AdapterEntry) -> Result<Arc<Vec<f32>>> {
+        let spec = MethodSpec::parse(&entry.method)?;
+        // Reject unsupported kinds before taking a permit, bumping the
+        // merge counter, or allocating — `merges` documents merges that
+        // actually executed.
+        anyhow::ensure!(
+            spec.kind != MethodKind::Vera,
+            "host merge unsupported for vera (use the merge artifact)"
+        );
+        let peft_layout = peft_layout_for(self.dims, &spec);
+        anyhow::ensure!(
+            entry.peft.len() == peft_layout.total,
+            "adapter {:?}: peft length {} != {} expected for {}",
+            entry.id,
+            entry.peft.len(),
+            peft_layout.total,
+            entry.method
+        );
+        let _permit = self.acquire_permit();
+        self.merges.fetch_add(1, Ordering::SeqCst);
+        // Zero-alloc (calloc): MergePlan::execute writes every byte, so
+        // cloning the base here would be a redundant full-buffer copy.
+        let mut out = vec![0.0f32; self.base.len()];
+        self.plan.execute(&spec, &self.base, &entry.peft, &peft_layout, &mut out)?;
+        Ok(Arc::new(out))
+    }
+
+    fn acquire_permit(&self) -> Permit<'_> {
+        let mut n = self.permits.lock().unwrap();
+        while *n == 0 {
+            n = self.permits_cv.wait(n).unwrap();
+        }
+        *n -= 1;
+        Permit(self)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::peft::apply::merge_into_base;
+    use crate::util::rng::Rng;
 
     #[test]
     fn registry_roundtrip() {
@@ -165,5 +348,103 @@ mod tests {
         c.put("a", Arc::new(vec![9.0]));
         assert_eq!(c.get("a").unwrap()[0], 1.0);
         assert_eq!(c.len(), 1);
+    }
+
+    // -- MergeEngine --
+
+    fn engine_fixture(cache_cap: usize, workers: usize) -> (MergeEngine, Vec<f32>, Layout) {
+        let dims = ModelDims { d_model: 16, d_ff: 32, n_layers: 2 };
+        let layout = crate::peft::apply::base_layout_for(dims);
+        let mut rng = Rng::new(21);
+        let base: Vec<f32> = rng.normal_vec(layout.total, 0.05);
+        let engine =
+            MergeEngine::new(dims, base.clone(), &layout, cache_cap, workers).unwrap();
+        (engine, base, layout)
+    }
+
+    fn adapter(id: &str, engine: &MergeEngine, seed: u64) -> AdapterEntry {
+        let spec = MethodSpec::parse("ether_n4").unwrap();
+        let pl = peft_layout_for(engine.dims(), &spec);
+        let mut rng = Rng::new(seed);
+        AdapterEntry {
+            id: id.to_string(),
+            method: "ether_n4".to_string(),
+            cfg: "host".to_string(),
+            peft: Arc::new(rng.normal_vec(pl.total, 0.5)),
+        }
+    }
+
+    #[test]
+    fn merged_matches_direct_merge_and_caches() {
+        let (engine, base, layout) = engine_fixture(2, 2);
+        let a = adapter("a", &engine, 3);
+        let spec = MethodSpec::parse("ether_n4").unwrap();
+        let pl = peft_layout_for(engine.dims(), &spec);
+        let want =
+            merge_into_base(engine.dims(), &spec, &base, &layout, &a.peft, &pl).unwrap();
+        let got = engine.merged(&a).unwrap();
+        assert_eq!(got.as_ref(), &want, "engine merge must equal direct merge");
+        let again = engine.merged(&a).unwrap();
+        assert!(Arc::ptr_eq(&got, &again), "second fetch must be the cached Arc");
+        assert_eq!(engine.merges.load(Ordering::SeqCst), 1);
+        let (hits, misses) = engine.cache_stats();
+        assert_eq!((hits, misses), (1, 1));
+    }
+
+    #[test]
+    fn single_flight_dedupes_concurrent_same_adapter() {
+        let (engine, _, _) = engine_fixture(4, 4);
+        let a = adapter("hot", &engine, 9);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let engine = &engine;
+                let a = a.clone();
+                s.spawn(move || {
+                    let m = engine.merged(&a).unwrap();
+                    assert!(!m.is_empty());
+                });
+            }
+        });
+        assert_eq!(
+            engine.merges.load(Ordering::SeqCst),
+            1,
+            "8 concurrent requests for one adapter must merge exactly once"
+        );
+    }
+
+    #[test]
+    fn distinct_adapters_merge_in_parallel_with_bounded_workers() {
+        let (engine, _, _) = engine_fixture(8, 2);
+        std::thread::scope(|s| {
+            for i in 0..6 {
+                let engine = &engine;
+                s.spawn(move || {
+                    let a = adapter(&format!("u{i}"), engine, 100 + i as u64);
+                    let m = engine.merged(&a).unwrap();
+                    assert!(!m.is_empty());
+                });
+            }
+        });
+        assert_eq!(engine.merges.load(Ordering::SeqCst), 6);
+        // All permits returned.
+        assert_eq!(*engine.permits.lock().unwrap(), 2);
+    }
+
+    #[test]
+    fn failed_merge_does_not_wedge_the_engine() {
+        let (engine, _, _) = engine_fixture(2, 2);
+        let bad = AdapterEntry {
+            id: "bad".into(),
+            method: "vera_r4".into(), // host merge unsupported
+            cfg: "host".into(),
+            peft: Arc::new(vec![0.0; 16]),
+        };
+        assert!(engine.merged(&bad).is_err());
+        // The single-flight marker must have been cleaned up: a retry
+        // fails again (rather than deadlocking), and a good adapter works.
+        assert!(engine.merged(&bad).is_err());
+        let good = adapter("good", &engine, 4);
+        assert!(engine.merged(&good).is_ok());
+        assert!(engine.inflight.lock().unwrap().is_empty());
     }
 }

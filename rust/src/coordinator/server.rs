@@ -12,7 +12,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::batcher::{Batcher, BatcherCfg, Request};
-use super::registry::{AdapterEntry, AdapterRegistry, MergedCache};
+use super::registry::{AdapterEntry, AdapterRegistry, MergeEngine, MergedCache};
 use crate::runtime::engine::PjrtEngine;
 use crate::runtime::HostTensor;
 
@@ -38,6 +38,12 @@ pub trait GenBackend {
         prompts: &[Vec<i32>],
         max_new: usize,
     ) -> Result<Vec<Vec<i32>>>;
+
+    /// Cumulative (hits, misses) of the backend's merged-weight cache —
+    /// surfaced into [`ServerStats`] after each pump.
+    fn merge_stats(&self) -> (u64, u64) {
+        (0, 0)
+    }
 }
 
 /// Serving statistics.
@@ -181,6 +187,59 @@ impl<'e> GenBackend for PjrtBackend<'e> {
         let merged = self.merged(adapter, &base)?;
         decode_merged(self.engine, &self.cfg, &merged, prompts, max_new)
     }
+
+    fn merge_stats(&self) -> (u64, u64) {
+        (self.cache.hits, self.cache.misses)
+    }
+}
+
+/// PJRT-free backend over the blocked parallel host [`MergeEngine`]:
+/// every batch performs a real adapter merge (cached, single-flight,
+/// bounded workers) and then echoes prompts tagged with a merged-weight
+/// fingerprint in place of model decode. This puts genuine merge
+/// pressure on the serving path without compiled artifacts — it backs
+/// the coordinator benches, the serving example's offline mode, and the
+/// merge-concurrency tests.
+pub struct HostMergeBackend {
+    pub merger: Arc<MergeEngine>,
+}
+
+impl HostMergeBackend {
+    pub fn new(merger: Arc<MergeEngine>) -> HostMergeBackend {
+        HostMergeBackend { merger }
+    }
+}
+
+impl GenBackend for HostMergeBackend {
+    fn generate(
+        &mut self,
+        adapter: &AdapterEntry,
+        prompts: &[Vec<i32>],
+        _max_new: usize,
+    ) -> Result<Vec<Vec<i32>>> {
+        let merged = self.merger.merged(adapter)?;
+        // Cheap per-adapter fingerprint proving which weights served the
+        // batch: a strided bit-fold over the whole vector, so it stays
+        // adapter-distinct regardless of where the adapted matrices sit
+        // in the base layout.
+        let stride = merged.len() / 64 + 1;
+        let tag = merged
+            .iter()
+            .step_by(stride)
+            .fold(0u32, |acc, x| acc.rotate_left(5) ^ x.to_bits()) as i32;
+        Ok(prompts
+            .iter()
+            .map(|p| {
+                let mut o = p.clone();
+                o.push(tag);
+                o
+            })
+            .collect())
+    }
+
+    fn merge_stats(&self) -> (u64, u64) {
+        self.merger.cache_stats()
+    }
 }
 
 /// In-process serving coordinator (single worker loop).
@@ -223,6 +282,9 @@ impl Server {
                 });
             }
         }
+        let (hits, misses) = backend.merge_stats();
+        self.stats.merge_hits = hits;
+        self.stats.merge_misses = misses;
         Ok(())
     }
 
@@ -270,6 +332,9 @@ impl Server {
                             });
                         }
                     }
+                    let (hits, misses) = backend.merge_stats();
+                    self.stats.merge_hits = hits;
+                    self.stats.merge_misses = misses;
                     return Ok(self.stats);
                 }
             }
@@ -345,6 +410,71 @@ mod tests {
         assert_eq!(backend.calls, 2);
         assert_eq!(server.stats.served, 3);
         assert_eq!(server.stats.batches, 2);
+    }
+
+    #[test]
+    fn host_merge_backend_serves_through_the_merge_engine() {
+        use crate::peft::apply::{base_layout_for, peft_layout_for, ModelDims};
+        use crate::peft::MethodSpec;
+        use crate::util::rng::Rng;
+
+        let dims = ModelDims { d_model: 16, d_ff: 32, n_layers: 2 };
+        let layout = base_layout_for(dims);
+        let mut rng = Rng::new(7);
+        let base: Vec<f32> = rng.normal_vec(layout.total, 0.05);
+        let merger = Arc::new(MergeEngine::new(dims, base, &layout, 2, 2).unwrap());
+        let spec = MethodSpec::parse("ether_n4").unwrap();
+        let pl = peft_layout_for(dims, &spec);
+        let mut registry = AdapterRegistry::new();
+        for id in ["a", "b"] {
+            registry.register(id, "ether_n4", "host", rng.normal_vec(pl.total, 0.5));
+        }
+        let mut server = Server::new(
+            registry,
+            BatcherCfg { max_batch: 4, max_wait: Duration::ZERO },
+        );
+        let t = Instant::now();
+        for (i, adapter) in ["a", "b", "a", "b"].iter().enumerate() {
+            server.batcher.push(Request {
+                id: i as u64,
+                adapter: adapter.to_string(),
+                prompt: vec![i as i32],
+                max_new: 1,
+                enqueued: t,
+            });
+        }
+        let mut backend = HostMergeBackend::new(merger.clone());
+        let mut got = vec![];
+        server
+            .pump(&mut backend, t + Duration::from_millis(1), |r| got.push(r))
+            .unwrap();
+        assert_eq!(got.len(), 4);
+        // Distinct adapters must be served from distinct merged weights.
+        let tag = |id: &str| {
+            got.iter()
+                .find(|r| r.adapter == id)
+                .and_then(|r| r.output.last().copied())
+                .unwrap()
+        };
+        assert_ne!(tag("a"), tag("b"));
+        // Two adapters → exactly two real merges, surfaced in the stats.
+        assert_eq!(merger.merges.load(std::sync::atomic::Ordering::SeqCst), 2);
+        assert_eq!(server.stats.merge_misses, 2);
+        // A second pump over the same adapters hits the cache.
+        for (i, adapter) in ["a", "b"].iter().enumerate() {
+            server.batcher.push(Request {
+                id: 10 + i as u64,
+                adapter: adapter.to_string(),
+                prompt: vec![0],
+                max_new: 1,
+                enqueued: t,
+            });
+        }
+        server
+            .pump(&mut backend, t + Duration::from_millis(2), |_| {})
+            .unwrap();
+        assert_eq!(merger.merges.load(std::sync::atomic::Ordering::SeqCst), 2);
+        assert_eq!(server.stats.merge_hits, 2);
     }
 
     #[test]

@@ -64,9 +64,15 @@ pub fn artifacts_dir() -> std::path::PathBuf {
     }
 }
 
-/// Resolve the reports output directory (created on demand).
+/// Resolve the reports output directory (created on demand). Creation
+/// failures are logged through the `util::logging` facade instead of
+/// being silently swallowed — the caller's subsequent write will then
+/// fail with a path that has already been explained in the log.
 pub fn reports_dir() -> std::path::PathBuf {
     let dir = artifacts_dir().parent().map(|p| p.join("reports")).unwrap_or_else(|| "reports".into());
-    let _ = std::fs::create_dir_all(&dir);
+    if let Err(e) = std::fs::create_dir_all(&dir) {
+        util::logging::init();
+        log::error!("could not create reports dir {dir:?}: {e}");
+    }
     dir
 }

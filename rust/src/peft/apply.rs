@@ -1,9 +1,20 @@
 //! Apply a PEFT adapter to full base weights on the host ("host merge").
 //!
-//! The serving coordinator uses the HLO `merge` artifact on its hot path;
-//! this host implementation exists for (a) the perturbation and distance
-//! studies that sweep transform parameters without a runtime, (b) parity
-//! tests against the artifact, and (c) the merge micro-benchmarks.
+//! The serving coordinator uses this path (or the HLO `merge` artifact)
+//! on its merge-cache-miss hot path; it also backs (a) the perturbation
+//! and distance studies that sweep transform parameters without a
+//! runtime, (b) parity tests against the artifact, and (c) the merge
+//! micro-benchmarks.
+//!
+//! The engine is a [`MergePlan`]: all (matrix, layer) work items are
+//! enumerated once against the base layout, parameter views are resolved
+//! up front, and the sweep executes as one `parallel_for_chunks` pass in
+//! which each worker writes its items' transformed weights **directly
+//! into the output buffer** through the layout offsets — no per-matrix
+//! `Mat` clones. Work items use the single-threaded slice kernels from
+//! [`crate::peft::transforms`], which are bit-deterministic, so the
+//! parallel sweep is bit-identical to [`MergePlan::execute_serial`]
+//! (locked in by `rust/tests/merge_parallel.rs`).
 
 use anyhow::{bail, Result};
 
@@ -11,6 +22,7 @@ use crate::peft::flat::Layout;
 use crate::peft::transforms as tf;
 use crate::peft::{adapted_matrices, MethodKind, MethodSpec};
 use crate::tensor::Mat;
+use crate::util::pool::{parallel_for_chunks, parallel_for_chunks_with, SendPtr};
 
 /// Model dimensions needed to interpret the layer-stacked layouts.
 #[derive(Clone, Copy, Debug)]
@@ -34,7 +46,9 @@ pub fn weight_matrix(
     Ok(Mat::from_vec(rows, cols, slice.to_vec()))
 }
 
-/// Transform one weight matrix with this layer's adapter parameters.
+/// Transform one weight matrix with this layer's adapter parameters
+/// (blocked parallel kernels; used by the analysis drivers that work on
+/// individual matrices rather than whole models).
 pub fn transform_matrix(
     spec: &MethodSpec,
     peft: &[f32],
@@ -58,17 +72,8 @@ pub fn transform_matrix(
         }
         MethodKind::Oft => {
             let blocks = tf::cayley_blocks(get("r")?, n, d / n);
-            let mut out = tf::bdmm(&blocks, w);
-            if spec.magnitude_refit {
-                let mag = get("mag")?;
-                for r in 0..d {
-                    let row = out.row_mut(r);
-                    for c in 0..f {
-                        row[c] *= 1.0 + mag[c];
-                    }
-                }
-            }
-            out
+            let scale = if spec.magnitude_refit { Some(get("mag")?) } else { None };
+            tf::bdmm_scaled(&blocks, w, scale)
         }
         MethodKind::Naive => {
             let blocks = tf::naive_blocks(get("r")?, n, d / n);
@@ -88,9 +93,292 @@ pub fn transform_matrix(
     })
 }
 
+/// One (matrix, layer) unit of merge work, resolved to its flat-vector
+/// location in the base layout.
+#[derive(Clone, Copy, Debug)]
+pub struct MergeItem {
+    pub name: &'static str,
+    pub layer: usize,
+    pub rows: usize,
+    pub cols: usize,
+    /// Offset of this layer's matrix in the flat base vector.
+    pub offset: usize,
+}
+
+/// Per-item adapter parameter views, resolved before the parallel sweep
+/// so workers never touch the layout (and therefore cannot fail).
+enum ItemParams<'a> {
+    Ether { u: &'a [f32] },
+    EtherPlus { u: &'a [f32], v: &'a [f32], right: Option<(&'a [f32], &'a [f32])> },
+    Oft { r: &'a [f32], mag: Option<&'a [f32]> },
+    Naive { r: &'a [f32] },
+    Lora { a: &'a [f32], b: &'a [f32] },
+    Full { w: &'a [f32] },
+}
+
+/// Pre-enumerated merge schedule: every adapted matrix × layer as an
+/// independent work item over disjoint output ranges, plus the gap
+/// ranges (non-adapted tensors) that are copied through from the base.
+pub struct MergePlan {
+    pub dims: ModelDims,
+    pub items: Vec<MergeItem>,
+    /// Ranges of the base vector not covered by any item.
+    gaps: Vec<(usize, usize)>,
+    base_total: usize,
+}
+
+impl MergePlan {
+    /// Enumerate all work items once, validating the base layout.
+    pub fn new(dims: ModelDims, base_layout: &Layout) -> Result<MergePlan> {
+        let mut items = Vec::with_capacity(6 * dims.n_layers);
+        for (name, d, f) in adapted_matrices(dims.d_model, dims.d_ff) {
+            let e = base_layout.entry(name)?;
+            anyhow::ensure!(
+                e.size == dims.n_layers * d * f,
+                "base layout entry {name} has size {} != {} layers × {d}×{f}",
+                e.size,
+                dims.n_layers
+            );
+            for l in 0..dims.n_layers {
+                items.push(MergeItem {
+                    name,
+                    layer: l,
+                    rows: d,
+                    cols: f,
+                    offset: e.offset + l * d * f,
+                });
+            }
+        }
+        // Complement of the item ranges: copied (not transformed) by the
+        // sweep, so `execute` fully writes `out` and callers never need a
+        // redundant whole-base pre-copy.
+        let mut ranges: Vec<(usize, usize)> =
+            items.iter().map(|it| (it.offset, it.offset + it.rows * it.cols)).collect();
+        ranges.sort_unstable();
+        let mut gaps = vec![];
+        let mut pos = 0;
+        for (a, b) in ranges {
+            if a > pos {
+                gaps.push((pos, a));
+            }
+            pos = pos.max(b);
+        }
+        if pos < base_layout.total {
+            gaps.push((pos, base_layout.total));
+        }
+        Ok(MergePlan { dims, items, gaps, base_total: base_layout.total })
+    }
+
+    /// Execute the plan as one parallel sweep. `out` is fully written:
+    /// adapted regions receive the transformed weights and every other
+    /// range is copied through from `base`, so callers can hand in any
+    /// correctly-sized buffer (e.g. a freshly zero-allocated one) —
+    /// no whole-base pre-copy needed.
+    pub fn execute(
+        &self,
+        spec: &MethodSpec,
+        base: &[f32],
+        peft: &[f32],
+        peft_layout: &Layout,
+        out: &mut [f32],
+    ) -> Result<()> {
+        self.run(spec, base, peft, peft_layout, out, None)
+    }
+
+    /// Serial driver over the same kernels and item order — the
+    /// determinism oracle: [`MergePlan::execute`] must produce identical
+    /// bits.
+    pub fn execute_serial(
+        &self,
+        spec: &MethodSpec,
+        base: &[f32],
+        peft: &[f32],
+        peft_layout: &Layout,
+        out: &mut [f32],
+    ) -> Result<()> {
+        self.run(spec, base, peft, peft_layout, out, Some(1))
+    }
+
+    fn run(
+        &self,
+        spec: &MethodSpec,
+        base: &[f32],
+        peft: &[f32],
+        peft_layout: &Layout,
+        out: &mut [f32],
+        threads: Option<usize>,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            base.len() == self.base_total,
+            "base length {} != layout total {}",
+            base.len(),
+            self.base_total
+        );
+        anyhow::ensure!(out.len() == base.len(), "output buffer length mismatch");
+        if spec.kind == MethodKind::Vera {
+            bail!("host merge unsupported for vera (use the merge artifact)");
+        }
+        if spec.kind == MethodKind::None {
+            out.copy_from_slice(base);
+            return Ok(());
+        }
+        // Pass the non-adapted tensors through.
+        for &(a, b) in &self.gaps {
+            out[a..b].copy_from_slice(&base[a..b]);
+        }
+        // Resolve every parameter view on this thread; the sweep below is
+        // then infallible.
+        let params: Vec<ItemParams> = self
+            .items
+            .iter()
+            .map(|it| resolve_params(spec, peft, peft_layout, it))
+            .collect::<Result<_>>()?;
+        let items = &self.items;
+        let params = &params;
+        let ptr = SendPtr::new(out.as_mut_ptr());
+        let sweep = |a: usize, b: usize| {
+            for idx in a..b {
+                let it = &items[idx];
+                let size = it.rows * it.cols;
+                // SAFETY: layout entries are non-overlapping, so items
+                // cover disjoint [offset, offset + size) output ranges.
+                let region =
+                    unsafe { std::slice::from_raw_parts_mut(ptr.get().add(it.offset), size) };
+                let src = &base[it.offset..it.offset + size];
+                run_item(spec, it, &params[idx], src, region);
+            }
+        };
+        match threads {
+            Some(t) => parallel_for_chunks_with(t, items.len(), 1, sweep),
+            None => parallel_for_chunks(items.len(), 1, sweep),
+        }
+        Ok(())
+    }
+}
+
+fn resolve_params<'a>(
+    spec: &MethodSpec,
+    peft: &'a [f32],
+    peft_layout: &Layout,
+    it: &MergeItem,
+) -> Result<ItemParams<'a>> {
+    // Block-divisibility validation (the Mat-based transforms enforce
+    // this with asserts; the slice kernels only debug_assert, so a
+    // release build must be guarded here or a non-dividing n would
+    // silently leave trailing rows untransformed).
+    if spec.kind.is_multiplicative() {
+        anyhow::ensure!(
+            spec.n_blocks > 0 && it.rows % spec.n_blocks == 0,
+            "{}[{}]: n_blocks={} must divide rows {}",
+            it.name,
+            it.layer,
+            spec.n_blocks,
+            it.rows
+        );
+        if spec.kind == MethodKind::EtherPlus && spec.sides == 2 {
+            anyhow::ensure!(
+                it.cols % spec.n_blocks == 0,
+                "{}[{}]: n_blocks={} must divide cols {}",
+                it.name,
+                it.layer,
+                spec.n_blocks,
+                it.cols
+            );
+        }
+    }
+    // Every resolved view's length is checked against the item here —
+    // the slice kernels only debug_assert sizes, so this is what keeps a
+    // release build from silently part-transforming (or a worker thread
+    // from panicking) on a peft layout inconsistent with ModelDims.
+    let get = |field: &str, want: usize| -> Result<&'a [f32]> {
+        let v = peft_layout.view_layer(peft, &format!("{}.{field}", it.name), it.layer)?;
+        anyhow::ensure!(
+            v.len() == want,
+            "{}[{}].{field}: length {} != expected {want}",
+            it.name,
+            it.layer,
+            v.len()
+        );
+        Ok(v)
+    };
+    let (d, f, n) = (it.rows, it.cols, spec.n_blocks);
+    Ok(match spec.kind {
+        MethodKind::Ether => ItemParams::Ether { u: get("u", d)? },
+        MethodKind::EtherPlus => ItemParams::EtherPlus {
+            u: get("u", d)?,
+            v: get("v", d)?,
+            right: if spec.sides == 2 { Some((get("ru", f)?, get("rv", f)?)) } else { None },
+        },
+        MethodKind::Oft => ItemParams::Oft {
+            r: get("r", n * (d / n) * (d / n))?,
+            mag: if spec.magnitude_refit { Some(get("mag", f)?) } else { None },
+        },
+        MethodKind::Naive => ItemParams::Naive { r: get("r", n * (d / n) * (d / n))? },
+        MethodKind::Lora => ItemParams::Lora {
+            a: get("a", d * spec.rank)?,
+            b: get("b", spec.rank * f)?,
+        },
+        MethodKind::Full => ItemParams::Full { w: get("w", d * f)? },
+        MethodKind::None | MethodKind::Vera => unreachable!("filtered in MergePlan::run"),
+    })
+}
+
+/// Transform one work item from `src` (its slice of the base) into
+/// `out` (its slice of the merged buffer). Infallible by construction.
+fn run_item(spec: &MethodSpec, it: &MergeItem, params: &ItemParams, src: &[f32], out: &mut [f32]) {
+    let n = spec.n_blocks;
+    let (d, f) = (it.rows, it.cols);
+    match params {
+        ItemParams::Ether { u } => {
+            let uh = tf::normalize_blocks(u, n);
+            tf::ether_into(&uh, n, src, f, out);
+        }
+        ItemParams::EtherPlus { u, v, right } => {
+            let uh = tf::normalize_blocks(u, n);
+            let vh = tf::normalize_blocks(v, n);
+            tf::ether_plus_left_into(&uh, &vh, n, src, f, out);
+            if let Some((ru, rv)) = right {
+                let ruh = tf::normalize_blocks(ru, n);
+                let rvh = tf::normalize_blocks(rv, n);
+                tf::ether_plus_right_rows(out, f, &ruh, &rvh, n);
+            }
+        }
+        ItemParams::Oft { r, mag } => {
+            let blocks = tf::cayley_blocks(r, n, d / n);
+            tf::bdmm_into(&blocks, src, f, *mag, out);
+        }
+        ItemParams::Naive { r } => {
+            let blocks = tf::naive_blocks(r, n, d / n);
+            tf::bdmm_into(&blocks, src, f, None, out);
+        }
+        ItemParams::Lora { a, b } => tf::lora_into(a, b, src, d, spec.rank, f, out),
+        ItemParams::Full { w } => out.copy_from_slice(w),
+    }
+}
+
 /// Merge an adapter into a copy of the base weights (all layers, all six
-/// adapted matrices). Mirrors the HLO `merge` artifact.
+/// adapted matrices) — one blocked parallel sweep. Mirrors the HLO
+/// `merge` artifact.
 pub fn merge_into_base(
+    dims: ModelDims,
+    spec: &MethodSpec,
+    base: &[f32],
+    base_layout: &Layout,
+    peft: &[f32],
+    peft_layout: &Layout,
+) -> Result<Vec<f32>> {
+    let plan = MergePlan::new(dims, base_layout)?;
+    // Zero-alloc (calloc) rather than cloning the base: the sweep writes
+    // every byte (items + gaps), so a base pre-copy would be pure wasted
+    // memory bandwidth on the cache-miss hot path.
+    let mut out = vec![0.0f32; base.len()];
+    plan.execute(spec, base, peft, peft_layout, &mut out)?;
+    Ok(out)
+}
+
+/// The pre-refactor per-matrix scalar merge, kept as the parity oracle
+/// for the blocked engine and as the benchmark baseline.
+pub fn merge_into_base_reference(
     dims: ModelDims,
     spec: &MethodSpec,
     base: &[f32],
@@ -102,13 +390,79 @@ pub fn merge_into_base(
     for (name, d, f) in adapted_matrices(dims.d_model, dims.d_ff) {
         for l in 0..dims.n_layers {
             let w = weight_matrix(base, base_layout, name, l, d, f)?;
-            let t = transform_matrix(spec, peft, peft_layout, name, l, &w)?;
+            let t = transform_matrix_serial(spec, peft, peft_layout, name, l, &w)?;
             base_layout
                 .view_layer_mut(&mut out, name, l)?
                 .copy_from_slice(&t.data);
         }
     }
     Ok(out)
+}
+
+/// Serial scalar transform of one matrix (reference path only).
+fn transform_matrix_serial(
+    spec: &MethodSpec,
+    peft: &[f32],
+    peft_layout: &Layout,
+    name: &str,
+    l: usize,
+    w: &Mat,
+) -> Result<Mat> {
+    let n = spec.n_blocks;
+    let (d, f) = (w.rows, w.cols);
+    let get = |field: &str| peft_layout.view_layer(peft, &format!("{name}.{field}"), l);
+    Ok(match spec.kind {
+        MethodKind::None => w.clone(),
+        MethodKind::Ether => tf::ether_apply_serial(get("u")?, n, w),
+        MethodKind::EtherPlus => {
+            let mut out = tf::ether_plus_left_serial(get("u")?, get("v")?, n, w);
+            if spec.sides == 2 {
+                out = tf::ether_plus_right_serial(&out, get("ru")?, get("rv")?, n);
+            }
+            out
+        }
+        MethodKind::Oft => {
+            let blocks = tf::cayley_blocks(get("r")?, n, d / n);
+            let mut out = tf::bdmm_serial(&blocks, w);
+            if spec.magnitude_refit {
+                let mag = get("mag")?;
+                for r in 0..d {
+                    let row = out.row_mut(r);
+                    for c in 0..f {
+                        row[c] *= 1.0 + mag[c];
+                    }
+                }
+            }
+            out
+        }
+        MethodKind::Naive => {
+            let blocks = tf::naive_blocks(get("r")?, n, d / n);
+            tf::bdmm_serial(&blocks, w)
+        }
+        MethodKind::Lora => {
+            let a = Mat::from_vec(d, spec.rank, get("a")?.to_vec());
+            let b = Mat::from_vec(spec.rank, f, get("b")?.to_vec());
+            tf::lora_apply(&a, &b, w)
+        }
+        MethodKind::Full => Mat::from_vec(d, f, get("w")?.to_vec()),
+        MethodKind::Vera => {
+            bail!("host merge unsupported for vera (use the merge artifact)")
+        }
+    })
+}
+
+/// Base layout holding exactly the six adapted matrices, layer-stacked
+/// (`[n_layers, d, f]` each) — the synthetic-base convention shared by
+/// the host benches, the merge tests, and the PJRT-free serving mode.
+/// The companion of [`peft_layout_for`]: together they encode the host
+/// side of the L2↔L3 shape contract.
+pub fn base_layout_for(dims: ModelDims) -> Layout {
+    Layout::new(
+        adapted_matrices(dims.d_model, dims.d_ff)
+            .into_iter()
+            .map(|(name, d, f)| (name.to_string(), vec![dims.n_layers, d, f]))
+            .collect(),
+    )
 }
 
 /// Build the peft layout the same way `python/compile/peft.py` does
@@ -162,15 +516,28 @@ mod tests {
 
     fn fake_base(dims: ModelDims) -> (Vec<f32>, Layout) {
         // Only the six adapted matrices — enough for merge tests.
-        let l = dims.n_layers;
-        let layout = Layout::new(
-            adapted_matrices(dims.d_model, dims.d_ff)
-                .into_iter()
-                .map(|(n, d, f)| (n.to_string(), vec![l, d, f]))
-                .collect(),
-        );
+        let layout = base_layout_for(dims);
         let mut rng = Rng::new(11);
         (rng.normal_vec(layout.total, 0.05), layout)
+    }
+
+    #[test]
+    fn merge_plan_enumerates_disjoint_cover() {
+        let dims = tiny_dims();
+        let (_, bl) = fake_base(dims);
+        let plan = MergePlan::new(dims, &bl).unwrap();
+        assert_eq!(plan.items.len(), 6 * dims.n_layers);
+        let mut ranges: Vec<(usize, usize)> = plan
+            .items
+            .iter()
+            .map(|it| (it.offset, it.offset + it.rows * it.cols))
+            .collect();
+        ranges.sort();
+        for pair in ranges.windows(2) {
+            assert!(pair[0].1 <= pair[1].0, "overlapping items {pair:?}");
+        }
+        let covered: usize = ranges.iter().map(|(a, b)| b - a).sum();
+        assert_eq!(covered, bl.total, "items must cover the whole base");
     }
 
     #[test]
@@ -256,5 +623,26 @@ mod tests {
         let pl = peft_layout_for(dims, &spec);
         let peft = vec![0.0; pl.total];
         assert!(merge_into_base(dims, &spec, &base, &bl, &peft, &pl).is_err());
+        assert!(merge_into_base_reference(dims, &spec, &base, &bl, &peft, &pl).is_err());
+    }
+
+    #[test]
+    fn blocked_merge_matches_reference_oracle() {
+        let dims = tiny_dims();
+        let (base, bl) = fake_base(dims);
+        let mut rng = Rng::new(12);
+        for name in ["ether_n4", "etherplus_n4", "etherplus_n2_1s", "oft_n4_mrf", "naive_n2", "lora_r4"] {
+            let spec = MethodSpec::parse(name).unwrap();
+            let pl = peft_layout_for(dims, &spec);
+            let peft = rng.normal_vec(pl.total, 0.3);
+            let fast = merge_into_base(dims, &spec, &base, &bl, &peft, &pl).unwrap();
+            let slow = merge_into_base_reference(dims, &spec, &base, &bl, &peft, &pl).unwrap();
+            let diff: f32 = fast
+                .iter()
+                .zip(&slow)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f32::max);
+            assert!(diff <= 1e-5, "{name}: blocked vs reference diff {diff}");
+        }
     }
 }

@@ -2,12 +2,39 @@
 //!
 //! Math mirrors the Layer-1 Pallas kernels exactly (same guarded
 //! normalization, same block semantics); see `python/compile/kernels/`.
+//!
+//! Since the blocked-engine refactor, each multiplicative transform has
+//! two implementations:
+//!
+//! * a **blocked parallel** engine (the default public functions): the
+//!   output is split into column tiles (rows, for the right-side
+//!   reflection) processed by `parallel_for_chunks` workers, with the
+//!   per-column reductions accumulated in f64. Every output element is a
+//!   fixed-order function of one column of `W`, so results are
+//!   **bit-identical** regardless of thread count or tile boundaries —
+//!   the property `rust/tests/merge_parallel.rs` locks in.
+//! * a **serial scalar reference** (`*_serial`): the original per-row
+//!   f32 implementation, kept as the parity oracle and as the baseline
+//!   for the blocked-vs-serial benchmark cases.
+//!
+//! The `*_into` slice kernels are the single-threaded building blocks
+//! `peft::apply::MergePlan` runs per (matrix, layer) work item, writing
+//! straight into the merged-weight buffer without intermediate `Mat`
+//! clones.
 
 use crate::tensor::{solve, Mat};
+use crate::util::pool::{parallel_for_chunks, SendPtr};
 
 /// Guard used by the kernels' in-place normalization (must match
 /// `kernels/ether.py::NORM_EPS`).
 pub const NORM_EPS: f64 = 1e-12;
+
+/// Column-tile width for the parallel drivers: wide enough to amortize
+/// thread spawn, narrow enough to split the typical d_model range.
+const COL_TILE: usize = 64;
+
+/// Row-chunk floor for the (row-parallel) right-side reflection.
+const ROW_TILE: usize = 8;
 
 /// û = u · rsqrt(Σu² + ε).
 pub fn normalize(u: &[f32]) -> Vec<f32> {
@@ -16,11 +43,314 @@ pub fn normalize(u: &[f32]) -> Vec<f32> {
     u.iter().map(|&x| (x as f64 * r) as f32).collect()
 }
 
-/// Block-diagonal Householder reflection `H^B W` (paper Eq. 1 + §3.4).
+/// Normalize all `n` blocks of `u` in one pass (blocks tile `u` evenly).
+pub(crate) fn normalize_blocks(u: &[f32], n: usize) -> Vec<f32> {
+    debug_assert_eq!(u.len() % n, 0);
+    let db = u.len() / n;
+    let mut out = Vec::with_capacity(u.len());
+    for b in 0..n {
+        out.extend_from_slice(&normalize(&u[b * db..(b + 1) * db]));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Column-tile kernels. Each writes columns [c0, c1) of the output; every
+// element depends only on its own column of `w` with a fixed reduction
+// order, so any tiling of [0, f) produces identical bits.
+// ---------------------------------------------------------------------------
+
+/// Columns `[c0, c1)` of `H^B W` (Eq. 1): per block, `w − 2 û (ûᵀ w)`.
 ///
-/// `u` is the flattened (n, d/n) block of raw hyperplane normals. Never
+/// # Safety
+/// `out` must point at a `uh.len() × f` buffer, and no other thread may
+/// concurrently access columns `[c0, c1)` of it.
+unsafe fn ether_cols(uh: &[f32], n: usize, w: &[f32], f: usize, out: *mut f32, c0: usize, c1: usize) {
+    let d = uh.len();
+    let db = d / n;
+    let width = c1 - c0;
+    let mut proj = vec![0.0f64; width];
+    for b in 0..n {
+        proj.fill(0.0);
+        for r in 0..db {
+            let off = (b * db + r) * f;
+            let uv = uh[b * db + r] as f64;
+            let row = &w[off + c0..off + c1];
+            for (p, &x) in proj.iter_mut().zip(row) {
+                *p += uv * x as f64;
+            }
+        }
+        for r in 0..db {
+            let off = (b * db + r) * f;
+            let uv = 2.0 * uh[b * db + r] as f64;
+            let row = &w[off + c0..off + c1];
+            for (i, (&x, p)) in row.iter().zip(&proj).enumerate() {
+                *out.add(off + c0 + i) = (x as f64 - uv * p) as f32;
+            }
+        }
+    }
+}
+
+/// Columns `[c0, c1)` of `H⁺ W`, `H⁺ = I − ûûᵀ + v̂v̂ᵀ` (§3.3).
+///
+/// # Safety
+/// Same contract as [`ether_cols`].
+#[allow(clippy::too_many_arguments)]
+unsafe fn ether_plus_left_cols(
+    uh: &[f32],
+    vh: &[f32],
+    n: usize,
+    w: &[f32],
+    f: usize,
+    out: *mut f32,
+    c0: usize,
+    c1: usize,
+) {
+    let db = uh.len() / n;
+    let width = c1 - c0;
+    let mut pu = vec![0.0f64; width];
+    let mut pv = vec![0.0f64; width];
+    for b in 0..n {
+        pu.fill(0.0);
+        pv.fill(0.0);
+        for r in 0..db {
+            let off = (b * db + r) * f;
+            let uv = uh[b * db + r] as f64;
+            let vv = vh[b * db + r] as f64;
+            let row = &w[off + c0..off + c1];
+            for (i, &x) in row.iter().enumerate() {
+                pu[i] += uv * x as f64;
+                pv[i] += vv * x as f64;
+            }
+        }
+        for r in 0..db {
+            let off = (b * db + r) * f;
+            let uv = uh[b * db + r] as f64;
+            let vv = vh[b * db + r] as f64;
+            let row = &w[off + c0..off + c1];
+            for (i, &x) in row.iter().enumerate() {
+                *out.add(off + c0 + i) = (x as f64 - uv * pu[i] + vv * pv[i]) as f32;
+            }
+        }
+    }
+}
+
+/// Columns `[c0, c1)` of the block-diagonal multiply `Q^B W`, optionally
+/// fused with the OFT magnitude-refit column scaling `(1 + mag[c])`.
+///
+/// # Safety
+/// Same contract as [`ether_cols`] (buffer is `n·k × f`).
+unsafe fn bdmm_cols(
+    blocks: &[Mat],
+    w: &[f32],
+    f: usize,
+    scale: Option<&[f32]>,
+    out: *mut f32,
+    c0: usize,
+    c1: usize,
+) {
+    let k = blocks[0].rows;
+    let width = c1 - c0;
+    let mut acc = vec![0.0f64; width];
+    for (b, q) in blocks.iter().enumerate() {
+        for i in 0..k {
+            acc.fill(0.0);
+            for j in 0..k {
+                let qv = q.at(i, j) as f64;
+                if qv == 0.0 {
+                    continue;
+                }
+                let off = (b * k + j) * f;
+                let row = &w[off + c0..off + c1];
+                for (a, &x) in acc.iter_mut().zip(row) {
+                    *a += qv * x as f64;
+                }
+            }
+            let off = (b * k + i) * f;
+            match scale {
+                Some(mag) => {
+                    for (idx, a) in acc.iter().enumerate() {
+                        let m = 1.0 + mag[c0 + idx] as f64;
+                        *out.add(off + c0 + idx) = (*a * m) as f32;
+                    }
+                }
+                None => {
+                    for (idx, a) in acc.iter().enumerate() {
+                        *out.add(off + c0 + idx) = *a as f32;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Single-threaded slice kernels for MergePlan work items (full width).
+// ---------------------------------------------------------------------------
+
+/// `out = H^B w` over a full `d×f` slice pair (pre-normalized `uh`).
+pub(crate) fn ether_into(uh: &[f32], n: usize, w: &[f32], f: usize, out: &mut [f32]) {
+    debug_assert_eq!(w.len(), out.len());
+    debug_assert_eq!(w.len(), uh.len() * f);
+    // SAFETY: exclusive &mut access to the whole buffer, single thread.
+    unsafe { ether_cols(uh, n, w, f, out.as_mut_ptr(), 0, f) }
+}
+
+/// `out = H⁺ w` over a full `d×f` slice pair (pre-normalized `uh`, `vh`).
+pub(crate) fn ether_plus_left_into(
+    uh: &[f32],
+    vh: &[f32],
+    n: usize,
+    w: &[f32],
+    f: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(w.len(), out.len());
+    // SAFETY: exclusive &mut access to the whole buffer, single thread.
+    unsafe { ether_plus_left_cols(uh, vh, n, w, f, out.as_mut_ptr(), 0, f) }
+}
+
+/// `out = Q^B w` (optionally magnitude-refit) over a full slice pair.
+pub(crate) fn bdmm_into(blocks: &[Mat], w: &[f32], f: usize, scale: Option<&[f32]>, out: &mut [f32]) {
+    debug_assert_eq!(w.len(), out.len());
+    // SAFETY: exclusive &mut access to the whole buffer, single thread.
+    unsafe { bdmm_cols(blocks, w, f, scale, out.as_mut_ptr(), 0, f) }
+}
+
+/// Apply the right-side relaxed reflection `· H̃⁺` to contiguous rows in
+/// place (row-local: each row only mixes within its own column blocks).
+pub(crate) fn ether_plus_right_rows(rows: &mut [f32], f: usize, uh: &[f32], vh: &[f32], n: usize) {
+    debug_assert_eq!(rows.len() % f, 0);
+    let fb = f / n;
+    for row in rows.chunks_mut(f) {
+        for b in 0..n {
+            let seg = &mut row[b * fb..(b + 1) * fb];
+            let ub = &uh[b * fb..(b + 1) * fb];
+            let vb = &vh[b * fb..(b + 1) * fb];
+            let mut pu = 0.0f64;
+            let mut pv = 0.0f64;
+            for c in 0..fb {
+                pu += seg[c] as f64 * ub[c] as f64;
+                pv += seg[c] as f64 * vb[c] as f64;
+            }
+            for c in 0..fb {
+                seg[c] = (seg[c] as f64 - pu * ub[c] as f64 + pv * vb[c] as f64) as f32;
+            }
+        }
+    }
+}
+
+/// `out = w + a·b` (LoRA) over full slices: `a` is `d×r`, `b` is `r×f`.
+pub(crate) fn lora_into(a: &[f32], b: &[f32], w: &[f32], d: usize, r: usize, f: usize, out: &mut [f32]) {
+    debug_assert_eq!(w.len(), d * f);
+    out.copy_from_slice(w);
+    for i in 0..d {
+        let orow = &mut out[i * f..(i + 1) * f];
+        for t in 0..r {
+            let av = a[i * r + t];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[t * f..(t + 1) * f];
+            for (o, &x) in orow.iter_mut().zip(brow) {
+                *o += av * x;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Blocked parallel drivers (the default public API).
+// ---------------------------------------------------------------------------
+
+/// Block-diagonal Householder reflection `H^B W` (paper Eq. 1 + §3.4),
+/// blocked over column tiles and run on the scoped thread pool. Never
 /// materializes H: per block it computes `W_i − 2 û_i (û_iᵀ W_i)`.
 pub fn ether_apply(u: &[f32], n: usize, w: &Mat) -> Mat {
+    let (d, f) = (w.rows, w.cols);
+    assert_eq!(u.len(), d, "u blocks must tile the rows");
+    assert!(n > 0 && d % n == 0, "n={n} must divide d={d}");
+    let uh = normalize_blocks(u, n);
+    let mut out = Mat::zeros(d, f);
+    let ptr = SendPtr::new(out.data.as_mut_ptr());
+    parallel_for_chunks(f, COL_TILE, |c0, c1| {
+        // SAFETY: workers receive disjoint column ranges.
+        unsafe { ether_cols(&uh, n, &w.data, f, ptr.get(), c0, c1) }
+    });
+    out
+}
+
+/// Left-side relaxed reflection `H⁺ W`, `H⁺ = I − ûûᵀ + v̂v̂ᵀ` (§3.3),
+/// blocked over column tiles.
+pub fn ether_plus_left(u: &[f32], v: &[f32], n: usize, w: &Mat) -> Mat {
+    let (d, f) = (w.rows, w.cols);
+    assert_eq!(u.len(), d, "u blocks must tile the rows");
+    assert_eq!(v.len(), d, "v blocks must tile the rows");
+    assert!(n > 0 && d % n == 0, "n={n} must divide d={d}");
+    let uh = normalize_blocks(u, n);
+    let vh = normalize_blocks(v, n);
+    let mut out = Mat::zeros(d, f);
+    let ptr = SendPtr::new(out.data.as_mut_ptr());
+    parallel_for_chunks(f, COL_TILE, |c0, c1| {
+        // SAFETY: workers receive disjoint column ranges.
+        unsafe { ether_plus_left_cols(&uh, &vh, n, &w.data, f, ptr.get(), c0, c1) }
+    });
+    out
+}
+
+/// Right-side relaxed reflection `W H̃⁺` (columns blocked into n groups),
+/// parallel over row chunks (the transform is row-local).
+pub fn ether_plus_right(w: &Mat, u: &[f32], v: &[f32], n: usize) -> Mat {
+    let (d, f) = (w.rows, w.cols);
+    assert_eq!(u.len(), f, "u blocks must tile the columns");
+    assert_eq!(v.len(), f, "v blocks must tile the columns");
+    assert!(n > 0 && f % n == 0, "n={n} must divide f={f}");
+    let uh = normalize_blocks(u, n);
+    let vh = normalize_blocks(v, n);
+    let mut out = w.clone();
+    let ptr = SendPtr::new(out.data.as_mut_ptr());
+    parallel_for_chunks(d, ROW_TILE, |r0, r1| {
+        // SAFETY: workers receive disjoint row ranges of `out`.
+        let rows =
+            unsafe { std::slice::from_raw_parts_mut(ptr.get().add(r0 * f), (r1 - r0) * f) };
+        ether_plus_right_rows(rows, f, &uh, &vh, n);
+    });
+    out
+}
+
+/// Apply block-diagonal multipliers: `Q^B W` (OFT / Naive compute path),
+/// blocked over column tiles.
+pub fn bdmm(blocks: &[Mat], w: &Mat) -> Mat {
+    bdmm_scaled(blocks, w, None)
+}
+
+/// [`bdmm`] fused with the OFT magnitude-refit column scaling
+/// `out[·, c] *= 1 + mag[c]` — one sweep instead of a multiply followed
+/// by a per-row rescale pass.
+pub fn bdmm_scaled(blocks: &[Mat], w: &Mat, scale: Option<&[f32]>) -> Mat {
+    let n = blocks.len();
+    let k = blocks[0].rows;
+    assert_eq!(n * k, w.rows);
+    let f = w.cols;
+    if let Some(mag) = scale {
+        assert_eq!(mag.len(), f, "magnitude vector must have one entry per column");
+    }
+    let mut out = Mat::zeros(w.rows, f);
+    let ptr = SendPtr::new(out.data.as_mut_ptr());
+    parallel_for_chunks(f, COL_TILE, |c0, c1| {
+        // SAFETY: workers receive disjoint column ranges.
+        unsafe { bdmm_cols(blocks, &w.data, f, scale, ptr.get(), c0, c1) }
+    });
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Serial scalar references (the pre-refactor implementations, kept as
+// parity oracles and benchmark baselines).
+// ---------------------------------------------------------------------------
+
+/// Serial scalar reference for [`ether_apply`].
+pub fn ether_apply_serial(u: &[f32], n: usize, w: &Mat) -> Mat {
     let d = w.rows;
     let db = d / n;
     assert_eq!(u.len(), d, "u blocks must tile the rows");
@@ -48,8 +378,8 @@ pub fn ether_apply(u: &[f32], n: usize, w: &Mat) -> Mat {
     out
 }
 
-/// Left-side relaxed reflection `H⁺ W`, `H⁺ = I − ûûᵀ + v̂v̂ᵀ` (§3.3).
-pub fn ether_plus_left(u: &[f32], v: &[f32], n: usize, w: &Mat) -> Mat {
+/// Serial scalar reference for [`ether_plus_left`].
+pub fn ether_plus_left_serial(u: &[f32], v: &[f32], n: usize, w: &Mat) -> Mat {
     let d = w.rows;
     let db = d / n;
     let f = w.cols;
@@ -76,8 +406,8 @@ pub fn ether_plus_left(u: &[f32], v: &[f32], n: usize, w: &Mat) -> Mat {
     out
 }
 
-/// Right-side relaxed reflection `W H̃⁺` (columns blocked into n groups).
-pub fn ether_plus_right(w: &Mat, u: &[f32], v: &[f32], n: usize) -> Mat {
+/// Serial scalar reference for [`ether_plus_right`].
+pub fn ether_plus_right_serial(w: &Mat, u: &[f32], v: &[f32], n: usize) -> Mat {
     let f = w.cols;
     let fb = f / n;
     let d = w.rows;
@@ -101,6 +431,35 @@ pub fn ether_plus_right(w: &Mat, u: &[f32], v: &[f32], n: usize) -> Mat {
     }
     out
 }
+
+/// Serial scalar reference for [`bdmm`].
+pub fn bdmm_serial(blocks: &[Mat], w: &Mat) -> Mat {
+    let n = blocks.len();
+    let k = blocks[0].rows;
+    assert_eq!(n * k, w.rows);
+    let f = w.cols;
+    let mut out = Mat::zeros(w.rows, f);
+    for (b, q) in blocks.iter().enumerate() {
+        for i in 0..k {
+            let orow = out.row_mut(b * k + i);
+            for j in 0..k {
+                let qv = q.at(i, j);
+                if qv == 0.0 {
+                    continue;
+                }
+                let wrow = w.row(b * k + j);
+                for c in 0..f {
+                    orow[c] += qv * wrow[c];
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Block constructors and dense materializations (unchanged).
+// ---------------------------------------------------------------------------
 
 /// Cayley map per block: R → Q = (I + S)(I − S)⁻¹, S = ½(R − Rᵀ) (OFT).
 pub fn cayley_blocks(r: &[f32], n: usize, k: usize) -> Vec<Mat> {
@@ -134,31 +493,6 @@ pub fn naive_blocks(r: &[f32], n: usize, k: usize) -> Vec<Mat> {
             m
         })
         .collect()
-}
-
-/// Apply block-diagonal multipliers: `Q^B W` (OFT / Naive compute path).
-pub fn bdmm(blocks: &[Mat], w: &Mat) -> Mat {
-    let n = blocks.len();
-    let k = blocks[0].rows;
-    assert_eq!(n * k, w.rows);
-    let f = w.cols;
-    let mut out = Mat::zeros(w.rows, f);
-    for (b, q) in blocks.iter().enumerate() {
-        for i in 0..k {
-            let orow = out.row_mut(b * k + i);
-            for j in 0..k {
-                let qv = q.at(i, j);
-                if qv == 0.0 {
-                    continue;
-                }
-                let wrow = w.row(b * k + j);
-                for c in 0..f {
-                    orow[c] += qv * wrow[c];
-                }
-            }
-        }
-    }
-    out
 }
 
 /// LoRA additive update `W + A B` (A: d×r, B: r×f).
@@ -268,6 +602,53 @@ mod tests {
         let fast_r = ether_plus_right(&w, &ru, &rv, n);
         let dense_r = w.matmul(&ether_plus_dense(&ru, &rv, n));
         assert!(fast_r.max_abs_diff(&dense_r) < 1e-5);
+    }
+
+    #[test]
+    fn blocked_engine_matches_serial_reference() {
+        // Odd shapes on purpose: f smaller than, equal to, and far above
+        // the column tile, so every chunking path is exercised.
+        let mut rng = Rng::new(7);
+        for &(d, f, n) in &[(24usize, 10usize, 4usize), (32, 64, 2), (48, 200, 3), (16, 1, 1)] {
+            let w = Mat::randn(d, f, 1.0, &mut rng);
+            let u = rng.normal_vec(d, 1.0);
+            let v = rng.normal_vec(d, 1.0);
+            let fast = ether_apply(&u, n, &w);
+            let slow = ether_apply_serial(&u, n, &w);
+            assert!(fast.max_abs_diff(&slow) < 1e-5, "ether d={d} f={f} n={n}");
+            let fast = ether_plus_left(&u, &v, n, &w);
+            let slow = ether_plus_left_serial(&u, &v, n, &w);
+            assert!(fast.max_abs_diff(&slow) < 1e-5, "ether+ left d={d} f={f} n={n}");
+        }
+        // Right side + bdmm on column-block-compatible shapes.
+        let w = Mat::randn(24, 12, 1.0, &mut rng);
+        let ru = rng.normal_vec(12, 1.0);
+        let rv = rng.normal_vec(12, 1.0);
+        let fast = ether_plus_right(&w, &ru, &rv, 3);
+        let slow = ether_plus_right_serial(&w, &ru, &rv, 3);
+        assert!(fast.max_abs_diff(&slow) < 1e-5);
+        let blocks: Vec<Mat> = (0..3).map(|_| Mat::randn(8, 8, 1.0, &mut rng)).collect();
+        let w = Mat::randn(24, 100, 1.0, &mut rng);
+        assert!(bdmm(&blocks, &w).max_abs_diff(&bdmm_serial(&blocks, &w)) < 1e-5);
+    }
+
+    #[test]
+    fn bdmm_scaled_fuses_magnitude_refit() {
+        let mut rng = Rng::new(8);
+        let (n, k, f) = (2usize, 4usize, 9usize);
+        let blocks: Vec<Mat> = (0..n).map(|_| Mat::randn(k, k, 1.0, &mut rng)).collect();
+        let w = Mat::randn(n * k, f, 1.0, &mut rng);
+        let mag = rng.normal_vec(f, 0.1);
+        let fused = bdmm_scaled(&blocks, &w, Some(&mag));
+        // reference: multiply, then scale columns
+        let mut two_pass = bdmm_serial(&blocks, &w);
+        for r in 0..n * k {
+            let row = two_pass.row_mut(r);
+            for c in 0..f {
+                row[c] *= 1.0 + mag[c];
+            }
+        }
+        assert!(fused.max_abs_diff(&two_pass) < 1e-5);
     }
 
     #[test]

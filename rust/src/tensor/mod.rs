@@ -7,7 +7,7 @@
 
 pub mod solve;
 
-use crate::util::pool::parallel_for_chunks;
+use crate::util::pool::{parallel_for_chunks, SendPtr};
 use crate::util::rng::Rng;
 
 /// Row-major dense f32 matrix.
@@ -73,13 +73,13 @@ impl Mat {
         assert_eq!(self.cols, b.rows, "matmul dims {}x{} @ {}x{}", self.rows, self.cols, b.rows, b.cols);
         let (m, k, n) = (self.rows, self.cols, b.cols);
         let mut out = Mat::zeros(m, n);
-        let out_ptr = SendPtr(out.data.as_mut_ptr());
+        let out_ptr = SendPtr::new(out.data.as_mut_ptr());
         parallel_for_chunks(m, 16, |r0, r1| {
             let out_ptr = &out_ptr;
             // i-k-j loop order: unit-stride inner loop over the output row.
             for i in r0..r1 {
                 let orow = unsafe {
-                    std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), n)
+                    std::slice::from_raw_parts_mut(out_ptr.get().add(i * n), n)
                 };
                 let arow = &self.data[i * k..(i + 1) * k];
                 for (kk, &a) in arow.iter().enumerate() {
@@ -146,11 +146,6 @@ impl Mat {
             .fold(0.0, f32::max)
     }
 }
-
-/// Wrapper to send a raw pointer across scoped threads (rows are disjoint).
-struct SendPtr(*mut f32);
-unsafe impl Sync for SendPtr {}
-unsafe impl Send for SendPtr {}
 
 // -- flat-vector helpers shared by runtime + peft --
 

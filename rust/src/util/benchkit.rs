@@ -1,9 +1,17 @@
 //! Micro/macro benchmark harness with robust statistics (criterion is
 //! unavailable offline). Used by every `cargo bench` target
 //! (`harness = false`) and by the experiment drivers that report timings.
+//!
+//! Besides the aligned text table, [`Bench::report`] emits a
+//! machine-readable `BENCH_<slug>.json` into the directory named by
+//! `ETHER_BENCH_JSON` (when set) — the CI bench-smoke job uploads those
+//! files as artifacts, seeding the repo's perf trajectory.
 
 use std::hint::black_box as bb;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+use crate::util::json::Value;
 
 /// Re-export for bench bodies.
 pub fn black_box<T>(x: T) -> T {
@@ -96,6 +104,59 @@ impl Bench {
         &self.rows.last().unwrap().1
     }
 
+    /// Machine-readable form of the result table.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("name", Value::s(self.name.clone())),
+            ("quick", Value::Bool(std::env::var("ETHER_BENCH_QUICK").is_ok())),
+            ("threads", Value::num(crate::util::pool::default_threads() as f64)),
+            (
+                "cases",
+                Value::arr(
+                    self.rows
+                        .iter()
+                        .map(|(label, s, work)| {
+                            Value::obj(vec![
+                                ("label", Value::s(label.clone())),
+                                ("iters", Value::num(s.iters as f64)),
+                                ("median_ns", Value::num(s.median_ns)),
+                                ("p10_ns", Value::num(s.p10_ns)),
+                                ("p90_ns", Value::num(s.p90_ns)),
+                                ("mean_ns", Value::num(s.mean_ns)),
+                                ("work", work.map(Value::num).unwrap_or(Value::Null)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write `BENCH_<slug>.json` into `dir` (created on demand).
+    pub fn write_json(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        let mut slug = String::new();
+        for c in self.name.chars() {
+            if c.is_ascii_alphanumeric() {
+                slug.push(c.to_ascii_lowercase());
+            } else if !slug.ends_with('_') {
+                slug.push('_');
+            }
+        }
+        let path = dir.join(format!("BENCH_{}.json", slug.trim_matches('_')));
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(&path, self.to_json().dump())?;
+        Ok(path)
+    }
+
+    /// Honor `ETHER_BENCH_JSON` if set (called from [`Bench::report`]).
+    fn maybe_write_json(&self) {
+        let Ok(dir) = std::env::var("ETHER_BENCH_JSON") else { return };
+        match self.write_json(Path::new(&dir)) {
+            Ok(path) => println!("[benchkit] wrote {path:?}"),
+            Err(e) => eprintln!("[benchkit] could not write bench JSON to {dir:?}: {e}"),
+        }
+    }
+
     /// Print the aligned result table; returns (label → median ns).
     pub fn report(&self) -> Vec<(String, f64)> {
         println!("\n== bench: {} ==", self.name);
@@ -129,6 +190,7 @@ impl Bench {
                 thr
             );
         }
+        self.maybe_write_json();
         self.rows.iter().map(|(l, s, _)| (l.clone(), s.median_ns)).collect()
     }
 }
@@ -154,6 +216,34 @@ mod tests {
             x = black_box(x.wrapping_add(1));
         });
         assert!(s.iters >= 1);
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        let mut b = Bench::new("json demo").with_budget(Duration::from_millis(5), 10);
+        b.case("a", Some(100.0), || {
+            black_box(1 + 1);
+        });
+        b.case("b", None, || {
+            black_box(2 + 2);
+        });
+        let v = b.to_json();
+        assert_eq!(v.at("name").unwrap().as_str().unwrap(), "json demo");
+        let cases = v.at("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 2);
+        assert_eq!(cases[0].at("label").unwrap().as_str().unwrap(), "a");
+        assert!(cases[0].at("median_ns").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(cases[1].at("work").unwrap(), &crate::util::json::Value::Null);
+        // dump → parse roundtrip through the project JSON codec
+        let parsed = crate::util::json::parse(&v.dump()).unwrap();
+        assert_eq!(&parsed, &v);
+
+        // file emission
+        let dir = std::env::temp_dir().join("ether_benchkit_json_test");
+        let path = b.write_json(&dir).unwrap();
+        assert!(path.file_name().unwrap().to_str().unwrap().starts_with("BENCH_json_demo"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(crate::util::json::parse(&text).is_ok());
     }
 
     #[test]

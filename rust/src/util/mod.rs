@@ -1,10 +1,11 @@
 //! Offline substrates.
 //!
-//! This build environment has no crate registry beyond the `xla` crate's
-//! dependency closure, so the conveniences a production crate would pull
-//! from the ecosystem (serde, clap, criterion, proptest, rayon, tokio)
-//! are implemented here from scratch — small, tested, and tailored to
-//! what the rest of the system needs.
+//! This build environment has no crate registry (the three external
+//! dependencies — `anyhow`, `log`, `xla` — are vendored path crates
+//! under `rust/vendor/`), so the conveniences a production crate would
+//! pull from the ecosystem (serde, clap, criterion, proptest, rayon,
+//! tokio) are implemented here from scratch — small, tested, and
+//! tailored to what the rest of the system needs.
 
 pub mod benchkit;
 pub mod cli;

@@ -2,16 +2,22 @@
 //!
 //! `parallel_for_chunks` splits an index range into contiguous chunks and
 //! runs them on `std::thread::scope` threads — used by the host matmul,
-//! adapter merging, and workload generation.
+//! the blocked transform kernels, adapter merging, and workload
+//! generation. [`SendPtr`] is the shared escape hatch for workers that
+//! write disjoint (possibly interleaved) regions of one output buffer.
 
 /// Number of worker threads to use (capped, env-overridable).
 pub fn default_threads() -> usize {
-    if let Ok(v) = std::env::var("ETHER_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
-        }
+    if let Some(n) = std::env::var("ETHER_THREADS").ok().and_then(|v| parse_threads(&v)) {
+        return n;
     }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Parse an `ETHER_THREADS` override: numeric values clamp up to 1,
+/// garbage is ignored (falls through to the hardware default).
+fn parse_threads(v: &str) -> Option<usize> {
+    v.parse::<usize>().ok().map(|n| n.max(1))
 }
 
 /// Run `f(start, end)` over disjoint chunks of `0..n` in parallel.
@@ -20,7 +26,16 @@ pub fn parallel_for_chunks<F>(n: usize, min_chunk: usize, f: F)
 where
     F: Fn(usize, usize) + Sync,
 {
-    let threads = default_threads();
+    parallel_for_chunks_with(default_threads(), n, min_chunk, f)
+}
+
+/// [`parallel_for_chunks`] with an explicit thread budget — the testable
+/// core (no env lookups), also used to pin serial execution (`threads=1`)
+/// for determinism oracles.
+pub fn parallel_for_chunks_with<F>(threads: usize, n: usize, min_chunk: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
     if n == 0 {
         return;
     }
@@ -62,6 +77,29 @@ where
     out
 }
 
+/// Raw-pointer wrapper so scoped workers can write **disjoint** regions of
+/// one buffer (rows, column tiles, or layout ranges) without aliasing
+/// `&mut` slices.
+///
+/// Safety is the caller's contract: every concurrent worker must touch a
+/// region no other worker touches, and the pointer must stay valid for
+/// the whole scope. Used by the tensor matmul and the blocked transform
+/// engine in `peft::transforms` / `peft::apply`.
+pub struct SendPtr<T>(*mut T);
+
+impl<T> SendPtr<T> {
+    pub fn new(ptr: *mut T) -> SendPtr<T> {
+        SendPtr(ptr)
+    }
+
+    pub fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -79,12 +117,72 @@ mod tests {
     }
 
     #[test]
+    fn zero_n_never_invokes() {
+        let calls = AtomicUsize::new(0);
+        parallel_for_chunks(0, 16, |_, _| {
+            calls.fetch_add(1, Ordering::SeqCst);
+        });
+        parallel_for_chunks_with(8, 0, 1, |_, _| {
+            calls.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(calls.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
     fn small_n_inline() {
+        // n <= min_chunk must run as exactly one inline call.
+        let calls = AtomicUsize::new(0);
         let count = AtomicUsize::new(0);
         parallel_for_chunks(3, 64, |a, b| {
+            calls.fetch_add(1, Ordering::SeqCst);
             count.fetch_add(b - a, Ordering::SeqCst);
         });
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
         assert_eq!(count.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn single_thread_budget_is_one_call() {
+        let calls = AtomicUsize::new(0);
+        let count = AtomicUsize::new(0);
+        parallel_for_chunks_with(1, 500, 16, |a, b| {
+            calls.fetch_add(1, Ordering::SeqCst);
+            count.fetch_add(b - a, Ordering::SeqCst);
+        });
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+        assert_eq!(count.load(Ordering::SeqCst), 500);
+    }
+
+    #[test]
+    fn non_divisible_chunking_covers_exactly() {
+        // n not divisible by the chunk count: 10 indices over 3 threads
+        // with min_chunk 1 → uneven chunks, still an exact disjoint cover.
+        for (threads, n, min_chunk) in [(3, 10, 1), (4, 7, 2), (16, 33, 4), (5, 5, 1)] {
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            parallel_for_chunks_with(threads, n, min_chunk, |a, b| {
+                assert!(a < b && b <= n);
+                for i in a..b {
+                    hits[i].fetch_add(1, Ordering::SeqCst);
+                }
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::SeqCst) == 1),
+                "threads={threads} n={n} min_chunk={min_chunk}"
+            );
+        }
+    }
+
+    #[test]
+    fn ether_threads_parsing() {
+        // Pure parsing test — no env mutation (set_var while other test
+        // threads call getenv is a libc data race).
+        assert_eq!(parse_threads("1"), Some(1));
+        assert_eq!(parse_threads("8"), Some(8));
+        assert_eq!(parse_threads("0"), Some(1)); // clamped up to 1
+        assert_eq!(parse_threads("not-a-number"), None); // ignored
+        assert_eq!(parse_threads(""), None);
+        assert_eq!(parse_threads("-3"), None);
+        assert!(default_threads() >= 1);
     }
 
     #[test]
@@ -92,5 +190,18 @@ mod tests {
         let xs: Vec<usize> = (0..257).collect();
         let ys = parallel_map(&xs, |x| x * 2);
         assert_eq!(ys, xs.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn send_ptr_disjoint_writes() {
+        let mut buf = vec![0u32; 64];
+        let ptr = SendPtr::new(buf.as_mut_ptr());
+        parallel_for_chunks(64, 4, |a, b| {
+            for i in a..b {
+                // SAFETY: chunks are disjoint index ranges.
+                unsafe { *ptr.get().add(i) = i as u32 };
+            }
+        });
+        assert!(buf.iter().enumerate().all(|(i, &v)| v == i as u32));
     }
 }

@@ -1,0 +1,200 @@
+//! Offline drop-in for the `anyhow` error-handling crate.
+//!
+//! The hermetic build image has no crates.io access, so this vendored
+//! crate provides the (small) subset of anyhow's API the workspace uses:
+//! [`Error`], [`Result`], the [`anyhow!`] / [`bail!`] / [`ensure!`]
+//! macros, and the [`Context`] extension trait for `Result` and `Option`.
+//! Semantics match the real crate closely enough that swapping the path
+//! dependency for crates.io `anyhow = "1"` requires no source changes.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error: an outermost message plus a chain of causes.
+///
+/// Like the real `anyhow::Error`, this type deliberately does **not**
+/// implement `std::error::Error`, which is what makes the blanket
+/// `From<E: std::error::Error>` conversion (and therefore `?` on any
+/// std error) coherent.
+pub struct Error {
+    /// `stack[0]` is the outermost message; later entries are causes.
+    stack: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { stack: vec![message.to_string()] }
+    }
+
+    /// Wrap the error with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.stack.insert(0, context.to_string());
+        self
+    }
+
+    /// The innermost message of the cause chain.
+    pub fn root_cause(&self) -> &str {
+        self.stack.last().map(String::as_str).unwrap_or("")
+    }
+
+    /// The full cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.stack.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` joins the whole chain, matching real anyhow.
+            write!(f, "{}", self.stack.join(": "))
+        } else {
+            write!(f, "{}", self.stack.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.stack.first().map(String::as_str).unwrap_or(""))?;
+        if self.stack.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.stack[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut stack = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            stack.push(s.to_string());
+            src = s.source();
+        }
+        Error { stack }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] when a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::Error::msg(concat!(
+                "Condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = io_err().into();
+        let e = e.context("reading manifest");
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: missing file");
+        assert_eq!(e.root_cause(), "missing file");
+    }
+
+    #[test]
+    fn macros_and_question_mark() {
+        fn inner(fail: bool) -> Result<u32> {
+            ensure!(!fail, "failed with {}", 42);
+            let _file = std::str::from_utf8(&[0x80]).context("decoding")?;
+            bail!("unreachable")
+        }
+        assert_eq!(format!("{}", inner(true).unwrap_err()), "failed with 42");
+        let e = inner(false).unwrap_err();
+        assert_eq!(format!("{e}"), "decoding");
+        let plain = anyhow!("x = {}", 7);
+        assert_eq!(format!("{plain}"), "x = 7");
+    }
+
+    #[test]
+    fn ensure_without_message() {
+        fn inner(x: usize) -> Result<()> {
+            ensure!(x > 3);
+            Ok(())
+        }
+        assert!(inner(5).is_ok());
+        assert!(format!("{}", inner(1).unwrap_err()).contains("Condition failed"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let e = v.with_context(|| format!("empty {}", "slot")).unwrap_err();
+        assert_eq!(format!("{e}"), "empty slot");
+    }
+}

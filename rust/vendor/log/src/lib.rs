@@ -1,0 +1,210 @@
+//! Offline drop-in for the `log` logging facade.
+//!
+//! The hermetic build image has no crates.io access, so this vendored
+//! crate provides the subset of the facade the workspace uses: the
+//! [`Log`] trait, [`Level`] / [`LevelFilter`], [`set_logger`] /
+//! [`set_max_level`] / [`max_level`], and the `error!`..`trace!` macros.
+//! Swapping the path dependency for crates.io `log = "0.4"` requires no
+//! source changes.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Verbosity level of a single log record (Error is most severe).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+/// Global verbosity ceiling ([`Level`] plus `Off`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    Off = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+impl PartialEq<LevelFilter> for Level {
+    fn eq(&self, other: &LevelFilter) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<LevelFilter> for Level {
+    fn partial_cmp(&self, other: &LevelFilter) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+impl PartialEq<Level> for LevelFilter {
+    fn eq(&self, other: &Level) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<Level> for LevelFilter {
+    fn partial_cmp(&self, other: &Level) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+/// Metadata attached to a record (just the level in this subset).
+pub struct Metadata {
+    level: Level,
+}
+
+impl Metadata {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+}
+
+/// One log record: level + preformatted arguments.
+pub struct Record<'a> {
+    metadata: Metadata,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    pub fn metadata(&self) -> &Metadata {
+        &self.metadata
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+/// A logger implementation (installed once via [`set_logger`]).
+pub trait Log: Send + Sync {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record);
+    fn flush(&self);
+}
+
+static LOGGER: Mutex<Option<&'static dyn Log>> = Mutex::new(None);
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(0); // Off until init
+
+/// Returned when [`set_logger`] is called twice.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("attempted to set a logger after one was already set")
+    }
+}
+
+/// Install the global logger (first caller wins).
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    let mut slot = LOGGER.lock().unwrap();
+    if slot.is_some() {
+        return Err(SetLoggerError(()));
+    }
+    *slot = Some(logger);
+    Ok(())
+}
+
+/// Set the global verbosity ceiling.
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::SeqCst);
+}
+
+/// The current global verbosity ceiling.
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        0 => LevelFilter::Off,
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        _ => LevelFilter::Trace,
+    }
+}
+
+/// Macro plumbing — not part of the public facade API.
+#[doc(hidden)]
+pub fn __log(level: Level, args: fmt::Arguments) {
+    if (level as usize) > (max_level() as usize) {
+        return;
+    }
+    let logger = *LOGGER.lock().unwrap();
+    if let Some(logger) = logger {
+        let record = Record { metadata: Metadata { level }, args };
+        if logger.enabled(record.metadata()) {
+            logger.log(&record);
+        }
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => { $crate::__log($crate::Level::Error, format_args!($($arg)+)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => { $crate::__log($crate::Level::Warn, format_args!($($arg)+)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => { $crate::__log($crate::Level::Info, format_args!($($arg)+)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => { $crate::__log($crate::Level::Debug, format_args!($($arg)+)) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => { $crate::__log($crate::Level::Trace, format_args!($($arg)+)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    static SEEN: AtomicUsize = AtomicUsize::new(0);
+
+    struct Counter;
+
+    impl Log for Counter {
+        fn enabled(&self, metadata: &Metadata) -> bool {
+            metadata.level() <= max_level()
+        }
+        fn log(&self, record: &Record) {
+            let _ = format!("{}", record.args());
+            SEEN.fetch_add(1, Ordering::SeqCst);
+        }
+        fn flush(&self) {}
+    }
+
+    static COUNTER: Counter = Counter;
+
+    #[test]
+    fn filtering_and_dispatch() {
+        let _ = set_logger(&COUNTER);
+        set_max_level(LevelFilter::Info);
+        info!("hello {}", 1);
+        debug!("filtered {}", 2);
+        assert!(SEEN.load(Ordering::SeqCst) >= 1);
+        assert!(Level::Info <= max_level());
+        assert!((Level::Debug as usize) > (max_level() as usize));
+        assert!(set_logger(&COUNTER).is_err());
+    }
+}

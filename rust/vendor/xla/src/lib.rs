@@ -1,0 +1,256 @@
+//! Offline stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! The real bindings link against a prebuilt `xla_extension`; the
+//! hermetic build image has neither the shared library nor crates.io
+//! access. This stub provides the exact API surface the `ether` runtime
+//! layer uses so the workspace always compiles, while every device entry
+//! point ([`PjRtClient::cpu`], compile, execute, upload) returns a clear
+//! runtime error. Host-only literal plumbing ([`Literal::vec1`],
+//! `reshape`, `to_vec`) is implemented for real so signature checks and
+//! unit tests work.
+//!
+//! To execute the AOT HLO artifacts, replace the `xla` path dependency in
+//! `rust/Cargo.toml` with the real xla-rs bindings — no source changes
+//! are needed anywhere else.
+
+use std::fmt;
+
+/// Stub error: carries the message of the unavailable operation.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT is unavailable in this build — the `xla` dependency is the \
+         offline stub (rust/vendor/xla). Swap in the real xla-rs bindings to \
+         execute HLO artifacts."
+    ))
+}
+
+/// Element types (the full set mirrors xla-rs; the artifact ABI only
+/// crosses F32/S32, but downstream matches use wildcard arms, so the
+/// enum must not collapse to just those two).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrimitiveType {
+    Pred,
+    S32,
+    S64,
+    U32,
+    U64,
+    F16,
+    F32,
+    F64,
+    Tuple,
+}
+
+/// Typed storage behind a [`Literal`].
+#[derive(Clone, Debug)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Native element types that can cross the literal boundary.
+pub trait ArrayElement: Copy {
+    const TY: PrimitiveType;
+    fn wrap(data: &[Self]) -> LiteralData;
+    fn unwrap(data: &LiteralData) -> Option<Vec<Self>>;
+}
+
+impl ArrayElement for f32 {
+    const TY: PrimitiveType = PrimitiveType::F32;
+    fn wrap(data: &[f32]) -> LiteralData {
+        LiteralData::F32(data.to_vec())
+    }
+    fn unwrap(data: &LiteralData) -> Option<Vec<f32>> {
+        match data {
+            LiteralData::F32(v) => Some(v.clone()),
+            LiteralData::I32(_) => None,
+        }
+    }
+}
+
+impl ArrayElement for i32 {
+    const TY: PrimitiveType = PrimitiveType::S32;
+    fn wrap(data: &[i32]) -> LiteralData {
+        LiteralData::I32(data.to_vec())
+    }
+    fn unwrap(data: &LiteralData) -> Option<Vec<i32>> {
+        match data {
+            LiteralData::I32(v) => Some(v.clone()),
+            LiteralData::F32(_) => None,
+        }
+    }
+}
+
+/// Host-side literal (dims + typed data). Fully functional in the stub.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: LiteralData,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: ArrayElement>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: T::wrap(data) }
+    }
+
+    /// Reinterpret the literal with new dimensions (same element count).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = match &self.data {
+            LiteralData::F32(v) => v.len() as i64,
+            LiteralData::I32(v) => v.len() as i64,
+        };
+        if want != have {
+            return Err(Error(format!("reshape {dims:?} does not hold {have} elements")));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        let ty = match &self.data {
+            LiteralData::F32(_) => PrimitiveType::F32,
+            LiteralData::I32(_) => PrimitiveType::S32,
+        };
+        Ok(ArrayShape { dims: self.dims.clone(), ty })
+    }
+
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data).ok_or_else(|| Error("literal element type mismatch".into()))
+    }
+
+    /// Tuple decomposition — only produced by device execution, which the
+    /// stub cannot perform.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Shape of an array literal.
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: PrimitiveType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn primitive_type(&self) -> PrimitiveType {
+        self.ty
+    }
+}
+
+/// Parsed HLO module (stub: never constructible from a file).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle (stub: never constructible).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle (stub: never constructible).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+
+    pub fn execute_b<B: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// PJRT client (stub: construction fails with a clear message).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T: ArrayElement>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let lit = lit.reshape(&[2, 2]).unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(shape.primitive_type(), PrimitiveType::F32);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.to_vec::<i32>().is_err());
+        assert!(lit.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn device_paths_error_clearly() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("PJRT is unavailable"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        assert!(PjRtLoadedExecutable.execute::<Literal>(&[]).is_err());
+    }
+}

@@ -10,14 +10,16 @@
 //! * **host** (no artifacts / stub xla): merge through the blocked
 //!   parallel [`MergeEngine`] with single-flight + bounded workers —
 //!   the serving-path half of the engine is exercised for real, decode
-//!   is an echo.
+//!   is an echo. The host mode also demos the **in-place swap** serving
+//!   path ([`SwapMode::Rebase`] / [`SwapMode::Involution`]): one merged
+//!   buffer total instead of one model copy per cached adapter.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 use ether::coordinator::server::{HostMergeBackend, PjrtBackend};
-use ether::coordinator::{AdapterRegistry, BatcherCfg, MergeEngine, Request, Server};
+use ether::coordinator::{AdapterRegistry, BatcherCfg, MergeEngine, Request, Server, SwapMode};
 use ether::peft::apply::{base_layout_for, peft_layout_for, ModelDims};
 use ether::peft::MethodSpec;
 use ether::runtime::engine::PjrtEngine;
@@ -60,6 +62,11 @@ fn run_pjrt(engine: &PjrtEngine, cfg: &str, n_users: usize, n_requests: usize) -
                 n,
                 1e9 / (n as f64 * 4.0)
             );
+            // Manifest layouts must agree with the host registry schema
+            // (TransformOp::param_schema is the source of truth).
+            if let Err(e) = engine.manifest.validate_peft_layout(method, cfg) {
+                println!("  WARNING: {e:#}");
+            }
         }
     }
 
@@ -91,7 +98,7 @@ fn run_pjrt(engine: &PjrtEngine, cfg: &str, n_users: usize, n_requests: usize) -
         let t0 = Instant::now();
         push_zipf_stream(&mut server, n_users, n_requests, &mut rng);
         server.pump(&mut backend, Instant::now() + Duration::from_secs(1), |_| {})?;
-        report_line(&server, cache_cap, t0);
+        report_line(&server, &format!("cache={cache_cap}"), t0);
     }
     println!("multi_adapter_serving OK");
     Ok(())
@@ -137,10 +144,39 @@ fn run_host(n_users: usize, n_requests: usize) -> Result<()> {
         let t0 = Instant::now();
         push_zipf_stream(&mut server, n_users, n_requests, &mut rng);
         server.pump(&mut backend, Instant::now() + Duration::from_secs(1), |_| {})?;
-        report_line(&server, cache_cap, t0);
+        report_line(&server, &format!("cache={cache_cap}"), t0);
         println!(
-            "           {} real merges executed by the bounded worker pool",
-            merger.merges.load(std::sync::atomic::Ordering::SeqCst)
+            "           {} real merges | {:.1} MB merged weights resident",
+            merger.merges.load(std::sync::atomic::Ordering::SeqCst),
+            backend.resident_weight_bytes() as f64 / 1e6,
+        );
+    }
+
+    // In-place swap serving: ONE merged buffer total, rewritten on every
+    // adapter change — the O(1)-memory counterpart of the LRU cache.
+    for (label, mode) in [("rebase", SwapMode::Rebase), ("involution", SwapMode::Involution)] {
+        let merger = Arc::new(MergeEngine::new(dims, base.clone(), &layout, 1, 4)?);
+        let mut server = Server::new(
+            registry.clone(),
+            BatcherCfg { max_batch: 8, max_wait: Duration::from_millis(4) },
+        );
+        let mut backend = HostMergeBackend::with_swap(merger.clone(), mode);
+        let mut rng = Rng::new(99);
+        let t0 = Instant::now();
+        push_zipf_stream(&mut server, n_users, n_requests, &mut rng);
+        server.pump(&mut backend, Instant::now() + Duration::from_secs(1), |_| {})?;
+        report_line(&server, &format!("swap:{label}"), t0);
+        println!(
+            "           {} in-place swaps | {:.1} MB resident (vs {:.1} MB for a \
+             {n_users}-deep cache){}",
+            server.stats.merge_swaps,
+            backend.resident_weight_bytes() as f64 / 1e6,
+            (n_users * layout.total * 4) as f64 / 1e6,
+            if mode == SwapMode::Involution {
+                format!(" | max involution residual {:.2e}", server.stats.swap_residual)
+            } else {
+                String::new()
+            },
         );
     }
     println!("multi_adapter_serving OK (host mode)");
@@ -162,15 +198,17 @@ fn push_zipf_stream(server: &mut Server, n_users: usize, n_requests: usize, rng:
     }
 }
 
-fn report_line(server: &Server, cache_cap: usize, t0: Instant) {
+fn report_line(server: &Server, label: &str, t0: Instant) {
     let dt = t0.elapsed().as_secs_f64();
     let s = &server.stats;
+    // One sort for every quantile (LatencySummary), not one per call.
+    let lat = s.latency_summary();
     println!(
-        "cache={cache_cap:<3} → {:.1} req/s | p50 {:>7.1} ms p95 {:>7.1} ms | \
+        "{label:<16} → {:.1} req/s | p50 {:>7.1} ms p95 {:>7.1} ms | \
          mean batch {:.1} | merge hits/misses {}/{}",
         s.served as f64 / dt,
-        s.p50_ms(),
-        s.p95_ms(),
+        lat.p50_ms(),
+        lat.p95_ms(),
         s.mean_batch(),
         s.merge_hits,
         s.merge_misses,

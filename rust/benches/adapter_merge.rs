@@ -6,12 +6,19 @@
 //! merge-cache-miss path. Each method's parity (max-abs blocked vs
 //! serial) is asserted ≤ 1e-5 before timing, and the speedup is printed.
 //!
+//! Swap section: the serving layer's **in-place adapter swap** vs a
+//! fresh merge into a new buffer — the O(1)-weight-buffer mode built on
+//! `TransformOp::unmerge_into` (ETHER's reflection is its own inverse).
+//! Bit-parity of the rebase flavour and ≤ 1e-5 agreement of the
+//! involution flavour are asserted before timing.
+//!
 //! Secondary section (only when `make artifacts` has run and real PJRT
 //! bindings are linked): HLO merge artifact vs host merge on the tiny
 //! config.
 
 use ether::peft::apply::{
-    base_layout_for, merge_into_base, merge_into_base_reference, peft_layout_for, ModelDims,
+    base_layout_for, merge_into_base, merge_into_base_reference, peft_layout_for, AdapterRef,
+    MergePlan, ModelDims,
 };
 use ether::peft::flat::Layout;
 use ether::peft::MethodSpec;
@@ -80,6 +87,83 @@ fn host_section() {
     bench.report();
 }
 
+fn swap_section() {
+    let dims = ModelDims { d_model: 1024, d_ff: 2048, n_layers: 8 };
+    let (base, bl) = synth_base(dims, 7);
+    let plan = MergePlan::new(dims, &bl).unwrap();
+    let spec = MethodSpec::parse("ether_n4").unwrap();
+    let pl = peft_layout_for(dims, &spec);
+    let mut rng = Rng::new(8);
+    let peft: Vec<Vec<f32>> =
+        (0..2).map(|_| rng.normal_vec(pl.total, 0.3)).collect();
+    let adapter = |i: usize| AdapterRef { spec: &spec, peft: &peft[i], layout: &pl };
+    let fresh: Vec<Vec<f32>> = (0..2)
+        .map(|i| merge_into_base(dims, &spec, &base, &bl, &peft[i], &pl).unwrap())
+        .collect();
+
+    // Parity gates (outside timing): the in-place swap flavours against
+    // a fresh merge of the same adapter.
+    let mut buf = fresh[0].clone();
+    plan.execute_rebase(adapter(1), &base, &mut buf, None).unwrap();
+    assert!(
+        buf.iter().zip(&fresh[1]).all(|(x, y)| x.to_bits() == y.to_bits()),
+        "rebase swap must be bit-identical to a fresh merge"
+    );
+    let mut ibuf = fresh[0].clone();
+    let residual = plan
+        .execute_swap_involution(adapter(0), adapter(1), Some(&base), &mut ibuf, None)
+        .unwrap();
+    let drift = ibuf
+        .iter()
+        .zip(&fresh[1])
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(
+        residual <= 1e-5 && drift <= 1e-5,
+        "involution swap drift {drift} (audited residual {residual})"
+    );
+    println!(
+        "swap parity: rebase bit-identical, involution drift {drift:.2e} \
+         (residual {residual:.2e})"
+    );
+
+    let mut bench = Bench::new("adapter swap vs fresh merge (ether_n4, d=1024 L=8)");
+    bench.case("fresh merge (new buffer per adapter)", None, || {
+        ether::util::benchkit::black_box(
+            merge_into_base(dims, &spec, &base, &bl, &peft[1], &pl).unwrap(),
+        );
+    });
+    // In-place flavours alternate between the two adapters so every
+    // iteration performs a genuine adapter change.
+    buf.copy_from_slice(&fresh[0]);
+    let mut cur = 0usize;
+    bench.case("swap rebase (in place)", None, || {
+        let next = 1 - cur;
+        plan.execute_rebase(adapter(next), &base, &mut buf, None).unwrap();
+        cur = next;
+    });
+    ibuf.copy_from_slice(&fresh[0]);
+    let mut icur = 0usize;
+    bench.case("swap involution (unmerge + merge, in place)", None, || {
+        let next = 1 - icur;
+        plan.execute_swap_involution(adapter(icur), adapter(next), None, &mut ibuf, None)
+            .unwrap();
+        icur = next;
+    });
+    // The serving path (MergeEngine::swap_into) always audits against
+    // the base — time that configuration too, so the published numbers
+    // reflect what the server actually pays.
+    let mut abuf = fresh[0].clone();
+    let mut acur = 0usize;
+    bench.case("swap involution (audited, serving config)", None, || {
+        let next = 1 - acur;
+        plan.execute_swap_involution(adapter(acur), adapter(next), Some(&base), &mut abuf, None)
+            .unwrap();
+        acur = next;
+    });
+    bench.report();
+}
+
 fn artifact_section() {
     let dir = ether::artifacts_dir();
     if !dir.join("manifest.json").exists() {
@@ -128,5 +212,6 @@ fn artifact_section() {
 
 fn main() {
     host_section();
+    swap_section();
     artifact_section();
 }

@@ -17,6 +17,25 @@
 //! * [`server`] — the serving loop: route → batch → merge(cache) →
 //!   greedy decode → respond, with latency/throughput accounting.
 //!
+//! **In-place swap mode.** The merged-weight cache costs one full model
+//! copy per cached adapter. Because the transform family is built from
+//! invertible maps — ETHER's reflection is its own inverse (paper Eq. 1,
+//! H·H = I) — the engine can instead run a single
+//! [`registry::SwapSlot`] buffer and rewrite it in place on every
+//! adapter change via [`registry::MergeEngine::swap_into`]:
+//! [`registry::SwapMode::Rebase`] re-merges from the frozen base
+//! (bit-identical to a fresh merge), while
+//! [`registry::SwapMode::Involution`] unmerges the resident adapter
+//! through `TransformOp::unmerge_into` and merges the next one from the
+//! recovered weights, auditing the involution residual against the
+//! base — and enforcing it: a residual past
+//! [`registry::INVOLUTION_REBASELINE`] triggers an automatic bit-exact
+//! rebase, so drift never reaches serving. Either way the
+//! merged-weight footprint is O(1) buffers instead
+//! of O(cache capacity) model copies; `server::HostMergeBackend` and
+//! the `multi_adapter_serving` example wire both flavours through
+//! [`server::ServerStats`].
+//!
 //! Everything is testable without PJRT via the [`server::GenBackend`]
 //! trait (`rust/tests/coordinator_props.rs` exercises the invariants).
 
@@ -25,5 +44,5 @@ pub mod registry;
 pub mod server;
 
 pub use batcher::{Batcher, BatcherCfg, Request};
-pub use registry::{AdapterRegistry, MergeEngine, MergedCache};
+pub use registry::{AdapterRegistry, MergeEngine, MergedCache, SwapMode, SwapSlot};
 pub use server::{Server, ServerStats};

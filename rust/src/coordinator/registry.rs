@@ -1,16 +1,25 @@
 //! Adapter registry, merged-weight LRU cache, and the merge-on-demand
 //! [`MergeEngine`] (host-side blocked parallel merging with single-flight
 //! deduplication and a bounded merge-worker budget).
+//!
+//! Besides the per-adapter [`MergedCache`] (one full merged copy per
+//! cached adapter), the engine offers the **in-place swap mode** built
+//! on the `TransformOp::unmerge_into` inversion hook: a [`SwapSlot`]
+//! owns a *single* merged-weight buffer and [`MergeEngine::swap_into`]
+//! rewrites it from adapter A to adapter B in place — O(1) weight
+//! buffers regardless of how many adapters rotate through. See
+//! [`SwapMode`] for the two flavours (bit-exact rebase vs. the
+//! involution path that exploits the paper's H·H = I structure).
 
 use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::{anyhow, Result};
 
-use crate::peft::apply::{peft_layout_for, MergePlan, ModelDims};
+use crate::peft::apply::{peft_layout_for, AdapterRef, MergePlan, ModelDims};
 use crate::peft::flat::Layout;
-use crate::peft::{MethodKind, MethodSpec};
+use crate::peft::{registry as ops, MethodSpec};
 
 /// One registered adapter: the tiny trainable vector plus its identity.
 #[derive(Clone, Debug)]
@@ -140,6 +149,72 @@ impl MergedCache {
     pub fn contains(&self, id: &str) -> bool {
         self.map.contains_key(id)
     }
+
+    /// Bytes of merged weights currently resident — the footprint the
+    /// swap mode collapses to a single buffer.
+    pub fn resident_bytes(&self) -> usize {
+        self.map.values().map(|v| v.len() * std::mem::size_of::<f32>()).sum()
+    }
+}
+
+/// How [`MergeEngine::swap_into`] rewrites a [`SwapSlot`] in place.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwapMode {
+    /// Re-merge the new adapter's work items from the frozen base into
+    /// the slot buffer (gap regions already hold base bits from the
+    /// initial full merge). **Bit-identical** to a fresh merge, with no
+    /// buffer allocation and no gap-range copies.
+    Rebase,
+    /// Unmerge the resident adapter through its inverse transform
+    /// (ETHER: the reflection is its own inverse) and merge the new one
+    /// from the recovered weights — the base is never read inside
+    /// adapted regions. Agrees with a fresh merge to the involution
+    /// residual, which is audited against the base on every swap and
+    /// **enforced**: a residual above [`INVOLUTION_REBASELINE`] (a
+    /// barely-invertible adapter, or drift accumulated over a long swap
+    /// chain) triggers an automatic bit-exact rebase from the frozen
+    /// base, so drifted weights never reach serving.
+    Involution,
+}
+
+/// Audited involution residual above which [`MergeEngine::swap_into`]
+/// re-baselines the slot with a bit-exact rebase instead of serving the
+/// drifted buffer. Well-conditioned family members stay orders of
+/// magnitude below this (the reflection is orthogonal); only
+/// near-singular inversions or accumulated drift cross it.
+pub const INVOLUTION_REBASELINE: f32 = 1e-5;
+
+/// A single reusable merged-weight buffer for the in-place swap mode.
+/// Create via [`MergeEngine::new_swap_slot`]; the engine maintains the
+/// invariant that non-adapted (gap) regions always hold base bits.
+pub struct SwapSlot {
+    buf: Vec<f32>,
+    current: Option<CurrentAdapter>,
+}
+
+struct CurrentAdapter {
+    id: String,
+    spec: MethodSpec,
+    peft: Arc<Vec<f32>>,
+    layout: Layout,
+}
+
+impl SwapSlot {
+    /// The merged weights of the resident adapter (empty before the
+    /// first [`MergeEngine::swap_into`]).
+    pub fn weights(&self) -> &[f32] {
+        &self.buf
+    }
+
+    /// Id of the adapter currently merged into the slot.
+    pub fn current_id(&self) -> Option<&str> {
+        self.current.as_ref().map(|c| c.id.as_str())
+    }
+
+    /// Memory footprint of the slot — one base-sized buffer, total.
+    pub fn resident_bytes(&self) -> usize {
+        self.buf.len() * std::mem::size_of::<f32>()
+    }
 }
 
 /// Merge-on-demand engine over the blocked parallel [`MergePlan`].
@@ -170,6 +245,18 @@ pub struct MergeEngine {
     permits_cv: Condvar,
     /// Number of merges actually executed (cache misses that did work).
     pub merges: AtomicU64,
+    /// Number of in-place slot swaps executed (excludes first fills,
+    /// which count as merges).
+    swaps: AtomicU64,
+    /// Swap requests satisfied because the adapter was already resident.
+    swap_hits: AtomicU64,
+    /// Max involution residual observed across audited swaps (f32 bits —
+    /// non-negative floats order like their bit patterns).
+    swap_residual_bits: AtomicU32,
+    /// Involution swaps whose audited residual exceeded
+    /// [`INVOLUTION_REBASELINE`] and were repaired with a bit-exact
+    /// rebase.
+    rebaselines: AtomicU64,
 }
 
 /// RAII single-flight marker: removes the id and wakes waiters on drop,
@@ -218,6 +305,10 @@ impl MergeEngine {
             permits: Mutex::new(max_workers.max(1)),
             permits_cv: Condvar::new(),
             merges: AtomicU64::new(0),
+            swaps: AtomicU64::new(0),
+            swap_hits: AtomicU64::new(0),
+            swap_residual_bits: AtomicU32::new(0),
+            rebaselines: AtomicU64::new(0),
         })
     }
 
@@ -272,14 +363,15 @@ impl MergeEngine {
         Ok(merged)
     }
 
-    fn do_merge(&self, entry: &AdapterEntry) -> Result<Arc<Vec<f32>>> {
+    /// Parse and validate an adapter entry against the registry schema:
+    /// the method must be host-mergeable and the flat vector must have
+    /// exactly the schema-derived length.
+    fn checked_spec(&self, entry: &AdapterEntry) -> Result<(MethodSpec, Layout)> {
         let spec = MethodSpec::parse(&entry.method)?;
-        // Reject unsupported kinds before taking a permit, bumping the
-        // merge counter, or allocating — `merges` documents merges that
-        // actually executed.
         anyhow::ensure!(
-            spec.kind != MethodKind::Vera,
-            "host merge unsupported for vera (use the merge artifact)"
+            ops::op_for(spec.kind).host_mergeable(),
+            "host merge unsupported for {} (use the merge artifact)",
+            spec.kind.as_str()
         );
         let peft_layout = peft_layout_for(self.dims, &spec);
         anyhow::ensure!(
@@ -290,6 +382,14 @@ impl MergeEngine {
             peft_layout.total,
             entry.method
         );
+        Ok((spec, peft_layout))
+    }
+
+    fn do_merge(&self, entry: &AdapterEntry) -> Result<Arc<Vec<f32>>> {
+        // Reject unsupported kinds before taking a permit, bumping the
+        // merge counter, or allocating — `merges` documents merges that
+        // actually executed.
+        let (spec, peft_layout) = self.checked_spec(entry)?;
         let _permit = self.acquire_permit();
         self.merges.fetch_add(1, Ordering::SeqCst);
         // Zero-alloc (calloc): MergePlan::execute writes every byte, so
@@ -306,6 +406,131 @@ impl MergeEngine {
         }
         *n -= 1;
         Permit(self)
+    }
+
+    /// Bytes of merged weights resident in the per-adapter cache.
+    pub fn cache_resident_bytes(&self) -> usize {
+        self.cache.lock().unwrap().resident_bytes()
+    }
+
+    /// Create an empty swap slot. The buffer is allocated lazily on the
+    /// first [`MergeEngine::swap_into`] (one full merge); afterwards the
+    /// slot is rewritten in place on every adapter change.
+    pub fn new_swap_slot(&self) -> SwapSlot {
+        SwapSlot { buf: Vec::new(), current: None }
+    }
+
+    /// Ensure `slot` holds the merged weights for `entry`, rewriting the
+    /// buffer **in place** when a different adapter is resident. Returns
+    /// `true` if work was performed (`false` = the adapter was already
+    /// resident). Swap work honours the same bounded worker permits as
+    /// cache-miss merges.
+    ///
+    /// On error the slot is reset to empty (the next call performs a
+    /// fresh full merge), so a failed swap can never serve a
+    /// half-rewritten buffer.
+    pub fn swap_into(&self, slot: &mut SwapSlot, entry: &AdapterEntry, mode: SwapMode) -> Result<bool> {
+        if slot.current.as_ref().is_some_and(|c| c.id == entry.id) {
+            self.swap_hits.fetch_add(1, Ordering::SeqCst);
+            return Ok(false);
+        }
+        let (spec, layout) = self.checked_spec(entry)?;
+        // Pre-flight the one sweep precondition that would otherwise
+        // surface *inside* the plan call: a resident adapter that cannot
+        // unmerge must reject the request without evicting the (still
+        // perfectly valid) resident weights. Every failure past this
+        // point may have dirtied the buffer and resets the slot.
+        if mode == SwapMode::Involution && !slot.buf.is_empty() {
+            if let Some(cur) = slot.current.as_ref() {
+                let cur_op = ops::op_for(cur.spec.kind);
+                anyhow::ensure!(
+                    cur_op.supports_unmerge(),
+                    "resident adapter {:?} ({}) does not support in-place unmerge; \
+                     use SwapMode::Rebase",
+                    cur.id,
+                    cur_op.token()
+                );
+            }
+        }
+        let result = (|| -> Result<()> {
+            let _permit = self.acquire_permit();
+            if slot.buf.is_empty() {
+                // First fill: one fresh merge establishes the gap-bits
+                // invariant (non-adapted regions = base bits, forever).
+                slot.buf = vec![0.0f32; self.base.len()];
+                self.plan.execute(&spec, &self.base, &entry.peft, &layout, &mut slot.buf)?;
+                self.merges.fetch_add(1, Ordering::SeqCst);
+                return Ok(());
+            }
+            match mode {
+                SwapMode::Rebase => {
+                    self.plan.execute_rebase(
+                        AdapterRef { spec: &spec, peft: &entry.peft, layout: &layout },
+                        &self.base,
+                        &mut slot.buf,
+                        None,
+                    )?;
+                }
+                SwapMode::Involution => {
+                    let cur = slot
+                        .current
+                        .as_ref()
+                        .expect("non-empty swap slot always has a resident adapter");
+                    let residual = self.plan.execute_swap_involution(
+                        AdapterRef { spec: &cur.spec, peft: &cur.peft, layout: &cur.layout },
+                        AdapterRef { spec: &spec, peft: &entry.peft, layout: &layout },
+                        Some(&self.base),
+                        &mut slot.buf,
+                        None,
+                    )?;
+                    self.swap_residual_bits.fetch_max(residual.to_bits(), Ordering::SeqCst);
+                    if residual > INVOLUTION_REBASELINE {
+                        // The recovered weights drifted past the audit
+                        // bound (e.g. a barely-invertible relaxed
+                        // reflection above the determinant cutoff):
+                        // repair with the bit-exact rebase so the drift
+                        // never reaches serving.
+                        self.rebaselines.fetch_add(1, Ordering::SeqCst);
+                        self.plan.execute_rebase(
+                            AdapterRef { spec: &spec, peft: &entry.peft, layout: &layout },
+                            &self.base,
+                            &mut slot.buf,
+                            None,
+                        )?;
+                    }
+                }
+            }
+            self.swaps.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        })();
+        if let Err(e) = result {
+            slot.buf.clear();
+            slot.current = None;
+            return Err(e);
+        }
+        slot.current = Some(CurrentAdapter {
+            id: entry.id.clone(),
+            spec,
+            peft: entry.peft.clone(),
+            layout,
+        });
+        Ok(true)
+    }
+
+    /// Involution swaps repaired with a bit-exact rebase because their
+    /// audited residual exceeded [`INVOLUTION_REBASELINE`].
+    pub fn swap_rebaselines(&self) -> u64 {
+        self.rebaselines.load(Ordering::SeqCst)
+    }
+
+    /// (swaps performed, already-resident hits, max audited involution
+    /// residual) across all slots served by this engine.
+    pub fn swap_stats(&self) -> (u64, u64, f32) {
+        (
+            self.swaps.load(Ordering::SeqCst),
+            self.swap_hits.load(Ordering::SeqCst),
+            f32::from_bits(self.swap_residual_bits.load(Ordering::SeqCst)),
+        )
     }
 }
 
@@ -428,6 +653,197 @@ mod tests {
         assert_eq!(engine.merges.load(Ordering::SeqCst), 6);
         // All permits returned.
         assert_eq!(*engine.permits.lock().unwrap(), 2);
+    }
+
+    fn bits_equal(a: &[f32], b: &[f32]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    #[test]
+    fn swap_slot_rebase_is_bit_identical_to_fresh_merge() {
+        let (engine, _, _) = engine_fixture(4, 2);
+        let a = adapter("a", &engine, 41);
+        let b = adapter("b", &engine, 42);
+        let fresh_b = engine.merged(&b).unwrap();
+        let mut slot = engine.new_swap_slot();
+        assert!(engine.swap_into(&mut slot, &a, SwapMode::Rebase).unwrap());
+        assert_eq!(slot.current_id(), Some("a"));
+        assert!(engine.swap_into(&mut slot, &b, SwapMode::Rebase).unwrap());
+        assert!(
+            bits_equal(slot.weights(), &fresh_b),
+            "in-place rebase swap must be bit-identical to a fresh merge"
+        );
+        // Resident adapter short-circuits.
+        assert!(!engine.swap_into(&mut slot, &b, SwapMode::Rebase).unwrap());
+        let (swaps, hits, _) = engine.swap_stats();
+        assert_eq!((swaps, hits), (1, 1));
+        // One buffer, ever: the slot footprint equals one base copy.
+        assert_eq!(slot.resident_bytes(), engine.base().len() * 4);
+    }
+
+    #[test]
+    fn swap_slot_involution_recovers_fresh_merge_within_tolerance() {
+        let (engine, _, _) = engine_fixture(4, 2);
+        let a = adapter("a", &engine, 51);
+        let b = adapter("b", &engine, 52);
+        let fresh_b = engine.merged(&b).unwrap();
+        let mut slot = engine.new_swap_slot();
+        engine.swap_into(&mut slot, &a, SwapMode::Involution).unwrap();
+        engine.swap_into(&mut slot, &b, SwapMode::Involution).unwrap();
+        let err = slot
+            .weights()
+            .iter()
+            .zip(fresh_b.iter())
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(err <= 1e-5, "involution swap drifted {err} from a fresh merge");
+        let (_, _, residual) = engine.swap_stats();
+        assert!(residual > 0.0 && residual <= 1e-5, "audited residual {residual}");
+    }
+
+    #[test]
+    fn rejected_swap_request_leaves_the_slot_intact() {
+        // Validation failures (unknown/unmergeable method, bad length)
+        // happen before any buffer write — the resident weights must
+        // keep serving.
+        let (engine, _, _) = engine_fixture(2, 2);
+        let good = adapter("good", &engine, 61);
+        let bad = AdapterEntry {
+            id: "bad".into(),
+            method: "vera_r4".into(), // host merge unsupported
+            cfg: "host".into(),
+            peft: Arc::new(vec![0.0; 16]),
+        };
+        let mut slot = engine.new_swap_slot();
+        engine.swap_into(&mut slot, &good, SwapMode::Rebase).unwrap();
+        assert!(engine.swap_into(&mut slot, &bad, SwapMode::Rebase).is_err());
+        assert_eq!(slot.current_id(), Some("good"), "validation failure must not evict");
+        assert!(!engine.swap_into(&mut slot, &good, SwapMode::Rebase).unwrap());
+    }
+
+    #[test]
+    fn failed_involution_unmerge_resets_the_slot() {
+        let (engine, _, _) = engine_fixture(2, 2);
+        let dims = engine.dims();
+        let spec = MethodSpec::parse("etherplus_n4").unwrap();
+        let pl = peft_layout_for(dims, &spec);
+        // û ⊥ v̂ in every block: the relaxed reflection merges fine but
+        // is singular, so the involution swap's unmerge must fail and
+        // the half-rewritten slot must reset to empty.
+        let mut peft = vec![0.0f32; pl.total];
+        for (name, d, f) in crate::peft::adapted_matrices(dims.d_model, dims.d_ff) {
+            for l in 0..dims.n_layers {
+                for (field, dim) in [("u", d), ("v", d), ("ru", f), ("rv", f)] {
+                    let view =
+                        pl.view_layer_mut(&mut peft, &format!("{name}.{field}"), l).unwrap();
+                    let db = dim / 4;
+                    let lane = if field.ends_with('u') { 0 } else { 1 };
+                    for b in 0..4 {
+                        view[b * db + lane] = 1.0;
+                    }
+                }
+            }
+        }
+        let singular = AdapterEntry {
+            id: "sing".into(),
+            method: "etherplus_n4".into(),
+            cfg: "host".into(),
+            peft: Arc::new(peft),
+        };
+        let good = adapter("good", &engine, 62);
+        let mut slot = engine.new_swap_slot();
+        // First fill is a plain merge — succeeds.
+        engine.swap_into(&mut slot, &singular, SwapMode::Involution).unwrap();
+        let err = engine.swap_into(&mut slot, &good, SwapMode::Involution).unwrap_err();
+        assert!(format!("{err:#}").contains("singular"), "{err:#}");
+        assert_eq!(slot.current_id(), None, "poisoned buffer must not stay resident");
+        // Recovers with a fresh full merge.
+        assert!(engine.swap_into(&mut slot, &good, SwapMode::Involution).unwrap());
+        assert_eq!(slot.current_id(), Some("good"));
+    }
+
+    #[test]
+    fn drifting_involution_swap_rebaselines_to_fresh_merge_bits() {
+        let (engine, _, _) = engine_fixture(2, 2);
+        let dims = engine.dims();
+        let spec = MethodSpec::parse("etherplus_n4").unwrap();
+        let pl = peft_layout_for(dims, &spec);
+        // Barely-invertible relaxed reflection: per block û ≈ e0 and
+        // v̂ ≈ e1 + 1e-3·e0. The Woodbury determinant (≈ ⟨û,v̂⟩² ≈ 1e-6)
+        // clears the 1e-9 singularity cutoff, but inverting it amplifies
+        // f32 rounding orders of magnitude past INVOLUTION_REBASELINE.
+        let mut peft = vec![0.0f32; pl.total];
+        for (name, d, f) in crate::peft::adapted_matrices(dims.d_model, dims.d_ff) {
+            for l in 0..dims.n_layers {
+                for (field, dim) in [("u", d), ("v", d), ("ru", f), ("rv", f)] {
+                    let view =
+                        pl.view_layer_mut(&mut peft, &format!("{name}.{field}"), l).unwrap();
+                    let db = dim / 4;
+                    for b in 0..4 {
+                        if field.ends_with('u') {
+                            view[b * db] = 1.0;
+                        } else {
+                            view[b * db] = 1e-3;
+                            view[b * db + 1] = 1.0;
+                        }
+                    }
+                }
+            }
+        }
+        let drifty = AdapterEntry {
+            id: "drifty".into(),
+            method: "etherplus_n4".into(),
+            cfg: "host".into(),
+            peft: Arc::new(peft),
+        };
+        let good = adapter("good", &engine, 63);
+        let fresh_good = engine.merged(&good).unwrap();
+        let mut slot = engine.new_swap_slot();
+        engine.swap_into(&mut slot, &drifty, SwapMode::Involution).unwrap();
+        assert_eq!(engine.swap_rebaselines(), 0);
+        // Unmerging the drifty adapter exceeds the audit bound — the
+        // engine must repair the slot with a bit-exact rebase instead of
+        // serving the drifted buffer.
+        assert!(engine.swap_into(&mut slot, &good, SwapMode::Involution).unwrap());
+        assert_eq!(engine.swap_rebaselines(), 1);
+        assert!(
+            bits_equal(slot.weights(), &fresh_good),
+            "rebaseline must restore fresh-merge bits"
+        );
+        let (_, _, residual) = engine.swap_stats();
+        assert!(
+            residual > INVOLUTION_REBASELINE,
+            "audited residual {residual} should exceed the rebaseline bound"
+        );
+    }
+
+    #[test]
+    fn unmergeable_resident_rejects_involution_swap_without_eviction() {
+        let (engine, _, _) = engine_fixture(2, 2);
+        let dims = engine.dims();
+        let full_spec = MethodSpec::parse("full").unwrap();
+        let pl = peft_layout_for(dims, &full_spec);
+        let mut rng = Rng::new(64);
+        let full = AdapterEntry {
+            id: "full".into(),
+            method: "full".into(),
+            cfg: "host".into(),
+            peft: Arc::new(rng.normal_vec(pl.total, 0.1)),
+        };
+        let good = adapter("good", &engine, 65);
+        let mut slot = engine.new_swap_slot();
+        // First fill is a plain merge, fine even though `full` cannot
+        // unmerge.
+        engine.swap_into(&mut slot, &full, SwapMode::Involution).unwrap();
+        // The involution swap away from it must fail in pre-flight
+        // without evicting the (valid) resident weights.
+        let err = engine.swap_into(&mut slot, &good, SwapMode::Involution).unwrap_err();
+        assert!(err.to_string().contains("Rebase"), "{err}");
+        assert_eq!(slot.current_id(), Some("full"), "pre-flight failure must not evict");
+        assert!(!engine.swap_into(&mut slot, &full, SwapMode::Involution).unwrap());
+        // Rebase mode swaps away from an unmergeable resident just fine.
+        assert!(engine.swap_into(&mut slot, &good, SwapMode::Rebase).unwrap());
+        assert_eq!(slot.current_id(), Some("good"));
     }
 
     #[test]

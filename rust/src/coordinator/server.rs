@@ -12,7 +12,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::batcher::{Batcher, BatcherCfg, Request};
-use super::registry::{AdapterEntry, AdapterRegistry, MergeEngine, MergedCache};
+use super::registry::{AdapterEntry, AdapterRegistry, MergeEngine, MergedCache, SwapMode, SwapSlot};
 use crate::runtime::engine::PjrtEngine;
 use crate::runtime::HostTensor;
 
@@ -44,6 +44,13 @@ pub trait GenBackend {
     fn merge_stats(&self) -> (u64, u64) {
         (0, 0)
     }
+
+    /// Cumulative (in-place swaps, max audited involution residual) for
+    /// backends running a swap slot — surfaced into [`ServerStats`]
+    /// after each pump. Default: no swap machinery.
+    fn swap_stats(&self) -> (u64, f64) {
+        (0, 0.0)
+    }
 }
 
 /// Serving statistics.
@@ -53,25 +60,85 @@ pub struct ServerStats {
     pub batches: u64,
     pub merge_hits: u64,
     pub merge_misses: u64,
+    /// In-place slot swaps performed by a swap-mode backend.
+    pub merge_swaps: u64,
+    /// Max involution residual audited across swaps (0.0 without swaps).
+    pub swap_residual: f64,
     pub latencies_us: Vec<u64>,
 }
 
-impl ServerStats {
+/// Latency quantiles over a **sorted-once** sample buffer. Build one via
+/// [`ServerStats::latency_summary`] and read as many quantiles as
+/// needed — the old per-call `p50_ms`/`p95_ms` pattern cloned and
+/// re-sorted the whole sample vector on every call.
+#[derive(Clone, Debug)]
+pub struct LatencySummary {
+    sorted_us: Vec<u64>,
+}
+
+impl LatencySummary {
+    fn new(mut samples: Vec<u64>) -> LatencySummary {
+        samples.sort_unstable();
+        LatencySummary { sorted_us: samples }
+    }
+
+    /// Quantile in milliseconds with proper rank interpolation: the
+    /// position `q·(n−1)` is interpolated linearly between the two
+    /// neighbouring order statistics, so `q = 0` / `q = 1` hit the exact
+    /// min/max and interior quantiles no longer truncate to the lower
+    /// rank the way the old integer cast did.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        if self.sorted_us.is_empty() {
+            return 0.0;
+        }
+        let pos = q.clamp(0.0, 1.0) * (self.sorted_us.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        let frac = pos - lo as f64;
+        let us = self.sorted_us[lo] as f64 * (1.0 - frac) + self.sorted_us[hi] as f64 * frac;
+        us / 1000.0
+    }
+
     pub fn p50_ms(&self) -> f64 {
-        self.quantile(0.5)
+        self.quantile_ms(0.5)
     }
 
     pub fn p95_ms(&self) -> f64 {
-        self.quantile(0.95)
+        self.quantile_ms(0.95)
     }
 
-    fn quantile(&self, q: f64) -> f64 {
-        if self.latencies_us.is_empty() {
-            return 0.0;
-        }
-        let mut xs = self.latencies_us.clone();
-        xs.sort();
-        xs[((xs.len() - 1) as f64 * q) as usize] as f64 / 1000.0
+    pub fn max_ms(&self) -> f64 {
+        self.sorted_us.last().map(|&us| us as f64 / 1000.0).unwrap_or(0.0)
+    }
+
+    pub fn count(&self) -> usize {
+        self.sorted_us.len()
+    }
+}
+
+impl ServerStats {
+    /// Sort the latency samples once and return a summary that answers
+    /// any number of quantile queries. Callers needing several
+    /// quantiles (reports, dashboards) should hold on to this instead
+    /// of calling [`ServerStats::p50_ms`]-style conveniences repeatedly.
+    pub fn latency_summary(&self) -> LatencySummary {
+        LatencySummary::new(self.latencies_us.clone())
+    }
+
+    /// Consuming variant: reuses the sample buffer, no clone.
+    pub fn into_latency_summary(self) -> LatencySummary {
+        LatencySummary::new(self.latencies_us)
+    }
+
+    /// Convenience single-quantile accessor (builds a one-off summary;
+    /// prefer [`ServerStats::latency_summary`] for multiple quantiles).
+    pub fn p50_ms(&self) -> f64 {
+        self.latency_summary().p50_ms()
+    }
+
+    /// See [`ServerStats::p50_ms`].
+    pub fn p95_ms(&self) -> f64 {
+        self.latency_summary().p95_ms()
     }
 
     pub fn mean_batch(&self) -> f64 {
@@ -193,20 +260,58 @@ impl<'e> GenBackend for PjrtBackend<'e> {
     }
 }
 
+/// Cheap per-adapter fingerprint proving which weights served a batch:
+/// a strided bit-fold over the whole vector, so it stays
+/// adapter-distinct regardless of where the adapted matrices sit in the
+/// base layout.
+fn weights_fingerprint(merged: &[f32]) -> i32 {
+    let stride = merged.len() / 64 + 1;
+    merged
+        .iter()
+        .step_by(stride)
+        .fold(0u32, |acc, x| acc.rotate_left(5) ^ x.to_bits()) as i32
+}
+
 /// PJRT-free backend over the blocked parallel host [`MergeEngine`]:
-/// every batch performs a real adapter merge (cached, single-flight,
-/// bounded workers) and then echoes prompts tagged with a merged-weight
-/// fingerprint in place of model decode. This puts genuine merge
-/// pressure on the serving path without compiled artifacts — it backs
-/// the coordinator benches, the serving example's offline mode, and the
-/// merge-concurrency tests.
+/// every batch performs a real adapter merge and then echoes prompts
+/// tagged with a merged-weight fingerprint in place of model decode.
+/// This puts genuine merge pressure on the serving path without
+/// compiled artifacts — it backs the coordinator benches, the serving
+/// example's offline mode, and the merge-concurrency tests.
+///
+/// Two weight-residency strategies:
+///
+/// * [`HostMergeBackend::new`] — per-adapter merged-weight cache
+///   (single-flight, bounded workers): one full merged copy per cached
+///   adapter.
+/// * [`HostMergeBackend::with_swap`] — a single [`SwapSlot`] rewritten
+///   in place on every adapter change ([`SwapMode::Rebase`] bit-exact,
+///   [`SwapMode::Involution`] through the inverse transform): O(1)
+///   weight buffers however many adapters rotate through.
 pub struct HostMergeBackend {
     pub merger: Arc<MergeEngine>,
+    swap: Option<(SwapSlot, SwapMode)>,
 }
 
 impl HostMergeBackend {
     pub fn new(merger: Arc<MergeEngine>) -> HostMergeBackend {
-        HostMergeBackend { merger }
+        HostMergeBackend { merger, swap: None }
+    }
+
+    /// Serve from one in-place swap slot instead of the per-adapter
+    /// merged cache.
+    pub fn with_swap(merger: Arc<MergeEngine>, mode: SwapMode) -> HostMergeBackend {
+        let slot = merger.new_swap_slot();
+        HostMergeBackend { merger, swap: Some((slot, mode)) }
+    }
+
+    /// Bytes of merged weights this backend keeps resident (the swap
+    /// slot's single buffer, or the engine cache).
+    pub fn resident_weight_bytes(&self) -> usize {
+        match &self.swap {
+            Some((slot, _)) => slot.resident_bytes(),
+            None => self.merger.cache_resident_bytes(),
+        }
     }
 }
 
@@ -217,16 +322,13 @@ impl GenBackend for HostMergeBackend {
         prompts: &[Vec<i32>],
         _max_new: usize,
     ) -> Result<Vec<Vec<i32>>> {
-        let merged = self.merger.merged(adapter)?;
-        // Cheap per-adapter fingerprint proving which weights served the
-        // batch: a strided bit-fold over the whole vector, so it stays
-        // adapter-distinct regardless of where the adapted matrices sit
-        // in the base layout.
-        let stride = merged.len() / 64 + 1;
-        let tag = merged
-            .iter()
-            .step_by(stride)
-            .fold(0u32, |acc, x| acc.rotate_left(5) ^ x.to_bits()) as i32;
+        let tag = match &mut self.swap {
+            Some((slot, mode)) => {
+                self.merger.swap_into(slot, adapter, *mode)?;
+                weights_fingerprint(slot.weights())
+            }
+            None => weights_fingerprint(&self.merger.merged(adapter)?),
+        };
         Ok(prompts
             .iter()
             .map(|p| {
@@ -238,7 +340,25 @@ impl GenBackend for HostMergeBackend {
     }
 
     fn merge_stats(&self) -> (u64, u64) {
-        self.merger.cache_stats()
+        match &self.swap {
+            // Swap mode: a "hit" is an already-resident adapter, a
+            // "miss" is any rewrite (first fill counts in `merges`).
+            Some(_) => {
+                let (swaps, hits, _) = self.merger.swap_stats();
+                (hits, swaps + self.merger.merges.load(std::sync::atomic::Ordering::SeqCst))
+            }
+            None => self.merger.cache_stats(),
+        }
+    }
+
+    fn swap_stats(&self) -> (u64, f64) {
+        match &self.swap {
+            Some(_) => {
+                let (swaps, _, residual) = self.merger.swap_stats();
+                (swaps, residual as f64)
+            }
+            None => (0, 0.0),
+        }
     }
 }
 
@@ -285,6 +405,9 @@ impl Server {
         let (hits, misses) = backend.merge_stats();
         self.stats.merge_hits = hits;
         self.stats.merge_misses = misses;
+        let (swaps, residual) = backend.swap_stats();
+        self.stats.merge_swaps = swaps;
+        self.stats.swap_residual = residual;
         Ok(())
     }
 
@@ -335,6 +458,9 @@ impl Server {
                     let (hits, misses) = backend.merge_stats();
                     self.stats.merge_hits = hits;
                     self.stats.merge_misses = misses;
+                    let (swaps, residual) = backend.swap_stats();
+                    self.stats.merge_swaps = swaps;
+                    self.stats.swap_residual = residual;
                     return Ok(self.stats);
                 }
             }
@@ -475,6 +601,99 @@ mod tests {
             .unwrap();
         assert_eq!(merger.merges.load(std::sync::atomic::Ordering::SeqCst), 2);
         assert_eq!(server.stats.merge_hits, 2);
+    }
+
+    #[test]
+    fn swap_backend_serves_from_one_in_place_buffer() {
+        use crate::peft::apply::{base_layout_for, peft_layout_for, ModelDims};
+        use crate::peft::MethodSpec;
+        use crate::util::rng::Rng;
+
+        let dims = ModelDims { d_model: 16, d_ff: 32, n_layers: 2 };
+        let layout = base_layout_for(dims);
+        let mut rng = Rng::new(17);
+        let base: Vec<f32> = rng.normal_vec(layout.total, 0.05);
+        let base_bytes = base.len() * 4;
+        let spec = MethodSpec::parse("ether_n4").unwrap();
+        let pl = peft_layout_for(dims, &spec);
+        let mut registry = AdapterRegistry::new();
+        for id in ["a", "b", "c"] {
+            registry.register(id, "ether_n4", "host", rng.normal_vec(pl.total, 0.5));
+        }
+        for mode in [SwapMode::Rebase, SwapMode::Involution] {
+            let merger = Arc::new(MergeEngine::new(dims, base.clone(), &layout, 1, 2).unwrap());
+            let mut server = Server::new(
+                registry.clone(),
+                BatcherCfg { max_batch: 4, max_wait: Duration::ZERO },
+            );
+            let t = Instant::now();
+            for (i, adapter) in ["a", "b", "c", "a"].iter().enumerate() {
+                server.batcher.push(Request {
+                    id: i as u64,
+                    adapter: adapter.to_string(),
+                    prompt: vec![i as i32],
+                    max_new: 1,
+                    enqueued: t,
+                });
+            }
+            let mut backend = HostMergeBackend::with_swap(merger.clone(), mode);
+            let mut got = vec![];
+            server
+                .pump(&mut backend, t + Duration::from_millis(1), |r| got.push(r))
+                .unwrap();
+            assert_eq!(got.len(), 4);
+            // Distinct adapters must be served from distinct weights.
+            let tag = |id: &str| {
+                got.iter()
+                    .find(|r| r.adapter == id)
+                    .and_then(|r| r.output.last().copied())
+                    .unwrap()
+            };
+            assert_ne!(tag("a"), tag("b"), "{mode:?}");
+            assert_ne!(tag("b"), tag("c"), "{mode:?}");
+            // Three distinct adapters over ONE buffer (the batcher folds
+            // the repeat "a" into its batch): 1 first fill + 2 in-place
+            // swaps, O(1) resident bytes.
+            assert_eq!(backend.resident_weight_bytes(), base_bytes, "{mode:?}");
+            assert_eq!(server.stats.merge_swaps, 2, "{mode:?}");
+            assert_eq!(server.stats.merge_misses, 3, "{mode:?}");
+            if mode == SwapMode::Involution {
+                assert!(
+                    server.stats.swap_residual <= 1e-5,
+                    "{mode:?}: residual {}",
+                    server.stats.swap_residual
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn latency_summary_sorts_once_and_interpolates() {
+        let stats = ServerStats {
+            served: 4,
+            batches: 2,
+            latencies_us: vec![4000, 1000, 3000, 2000],
+            ..Default::default()
+        };
+        let lat = stats.latency_summary();
+        assert_eq!(lat.count(), 4);
+        // Interpolated median of {1,2,3,4} ms = 2.5 ms (the old
+        // truncating quantile reported 2.0).
+        assert!((lat.p50_ms() - 2.5).abs() < 1e-9, "{}", lat.p50_ms());
+        assert!((lat.quantile_ms(0.0) - 1.0).abs() < 1e-9);
+        assert!((lat.quantile_ms(1.0) - 4.0).abs() < 1e-9);
+        assert!((lat.max_ms() - 4.0).abs() < 1e-9);
+        // p95 of 4 samples: pos 2.85 → between 3 and 4 ms.
+        let p95 = lat.p95_ms();
+        assert!(p95 > 3.0 && p95 < 4.0, "{p95}");
+        // Convenience accessors agree with the summary.
+        assert_eq!(stats.p50_ms(), lat.p50_ms());
+        assert_eq!(stats.p95_ms(), lat.p95_ms());
+        // Consuming variant avoids the clone.
+        let owned = stats.into_latency_summary();
+        assert_eq!(owned.p50_ms(), lat.p50_ms());
+        // Empty stats stay at zero.
+        assert_eq!(ServerStats::default().latency_summary().p50_ms(), 0.0);
     }
 
     #[test]

@@ -248,6 +248,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     )?;
     let dt = t0.elapsed().as_secs_f64();
     let s = &server.stats;
+    let lat = s.latency_summary();
     println!(
         "served {} requests in {dt:.2}s ({:.1} req/s) | batches {} (mean size {:.1}) | \
          p50 {:.1} ms p95 {:.1} ms | merge cache: {} hits / {} misses",
@@ -255,8 +256,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         s.served as f64 / dt,
         s.batches,
         s.mean_batch(),
-        s.p50_ms(),
-        s.p95_ms(),
+        lat.p50_ms(),
+        lat.p95_ms(),
         backend.cache.hits,
         backend.cache.misses,
     );

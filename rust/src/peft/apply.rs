@@ -8,19 +8,41 @@
 //!
 //! The engine is a [`MergePlan`]: all (matrix, layer) work items are
 //! enumerated once against the base layout, parameter views are resolved
-//! up front, and the sweep executes as one `parallel_for_chunks` pass in
+//! up front through each method's [`crate::peft::op::TransformOp`]
+//! schema, and the sweep executes as one `parallel_for_chunks` pass in
 //! which each worker writes its items' transformed weights **directly
 //! into the output buffer** through the layout offsets — no per-matrix
-//! `Mat` clones. Work items use the single-threaded slice kernels from
-//! [`crate::peft::transforms`], which are bit-deterministic, so the
+//! `Mat` clones. Work items run the op's single-threaded
+//! `apply_into` slice kernel, which is bit-deterministic, so the
 //! parallel sweep is bit-identical to [`MergePlan::execute_serial`]
 //! (locked in by `rust/tests/merge_parallel.rs`).
+//!
+//! On top of the plain merge, the plan exposes the **in-place swap**
+//! primitives the serving layer's O(1)-buffer mode is built on:
+//!
+//! * [`MergePlan::execute_rebase`] — re-merge a new adapter over a
+//!   buffer that already holds a merged model, reading adapted regions
+//!   from the frozen base and *skipping* the gap copies (the buffer
+//!   invariant keeps non-adapted regions at base bits). Bit-identical
+//!   to a fresh [`MergePlan::execute`] into a new buffer.
+//! * [`MergePlan::execute_unmerge`] — invert the currently merged
+//!   adapter in place via the op's `unmerge_into` (ETHER's reflection
+//!   is its own inverse, Eq. 1/§3.2; ETHER+/OFT/Naive invert through
+//!   Woodbury/transpose/block-inverse structure).
+//! * [`MergePlan::execute_swap_involution`] — fused unmerge(old) +
+//!   merge(new) per work item, never reading the base inside adapted
+//!   regions; optionally audits the recovered weights against the true
+//!   base and reports the max involution residual.
 
-use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
 
 use crate::peft::flat::Layout;
-use crate::peft::transforms as tf;
-use crate::peft::{adapted_matrices, MethodKind, MethodSpec};
+use crate::peft::op::{resolve_params, ResolvedParams};
+use crate::peft::registry;
+use crate::peft::{adapted_matrices, MethodSpec};
 use crate::tensor::Mat;
 use crate::util::pool::{parallel_for_chunks, parallel_for_chunks_with, SendPtr};
 
@@ -30,6 +52,15 @@ pub struct ModelDims {
     pub d_model: usize,
     pub d_ff: usize,
     pub n_layers: usize,
+}
+
+/// Borrowed view of one adapter (spec + flat parameters + their layout)
+/// for the swap/unmerge entry points.
+#[derive(Clone, Copy)]
+pub struct AdapterRef<'a> {
+    pub spec: &'a MethodSpec,
+    pub peft: &'a [f32],
+    pub layout: &'a Layout,
 }
 
 /// Extract layer `l` of adapted matrix `name` from the flat base weights.
@@ -48,7 +79,8 @@ pub fn weight_matrix(
 
 /// Transform one weight matrix with this layer's adapter parameters
 /// (blocked parallel kernels; used by the analysis drivers that work on
-/// individual matrices rather than whole models).
+/// individual matrices rather than whole models). Registry-dispatched:
+/// resolves the op's schema views, then runs its blocked engine.
 pub fn transform_matrix(
     spec: &MethodSpec,
     peft: &[f32],
@@ -57,40 +89,23 @@ pub fn transform_matrix(
     l: usize,
     w: &Mat,
 ) -> Result<Mat> {
-    let n = spec.n_blocks;
-    let (d, f) = (w.rows, w.cols);
-    let get = |field: &str| peft_layout.view_layer(peft, &format!("{name}.{field}"), l);
-    Ok(match spec.kind {
-        MethodKind::None => w.clone(),
-        MethodKind::Ether => tf::ether_apply(get("u")?, n, w),
-        MethodKind::EtherPlus => {
-            let mut out = tf::ether_plus_left(get("u")?, get("v")?, n, w);
-            if spec.sides == 2 {
-                out = tf::ether_plus_right(&out, get("ru")?, get("rv")?, n);
-            }
-            out
-        }
-        MethodKind::Oft => {
-            let blocks = tf::cayley_blocks(get("r")?, n, d / n);
-            let scale = if spec.magnitude_refit { Some(get("mag")?) } else { None };
-            tf::bdmm_scaled(&blocks, w, scale)
-        }
-        MethodKind::Naive => {
-            let blocks = tf::naive_blocks(get("r")?, n, d / n);
-            tf::bdmm(&blocks, w)
-        }
-        MethodKind::Lora => {
-            let a = Mat::from_vec(d, spec.rank, get("a")?.to_vec());
-            let b = Mat::from_vec(spec.rank, f, get("b")?.to_vec());
-            tf::lora_apply(&a, &b, w)
-        }
-        MethodKind::Full => Mat::from_vec(d, f, get("w")?.to_vec()),
-        MethodKind::Vera => {
-            // VeRA's frozen projections are jax-seeded HLO constants; the
-            // host cannot reproduce them bit-exactly — merge via artifact.
-            bail!("host merge unsupported for vera (use the merge artifact)")
-        }
-    })
+    let op = registry::op_for(spec.kind);
+    let p = resolve_params(op, spec, peft, peft_layout, name, l, w.rows, w.cols)?;
+    op.apply_blocked(spec, &p, w)
+}
+
+/// Serial scalar transform of one matrix (reference path only).
+fn transform_matrix_serial(
+    spec: &MethodSpec,
+    peft: &[f32],
+    peft_layout: &Layout,
+    name: &str,
+    l: usize,
+    w: &Mat,
+) -> Result<Mat> {
+    let op = registry::op_for(spec.kind);
+    let p = resolve_params(op, spec, peft, peft_layout, name, l, w.rows, w.cols)?;
+    op.apply_serial(spec, &p, w)
 }
 
 /// One (matrix, layer) unit of merge work, resolved to its flat-vector
@@ -103,17 +118,6 @@ pub struct MergeItem {
     pub cols: usize,
     /// Offset of this layer's matrix in the flat base vector.
     pub offset: usize,
-}
-
-/// Per-item adapter parameter views, resolved before the parallel sweep
-/// so workers never touch the layout (and therefore cannot fail).
-enum ItemParams<'a> {
-    Ether { u: &'a [f32] },
-    EtherPlus { u: &'a [f32], v: &'a [f32], right: Option<(&'a [f32], &'a [f32])> },
-    Oft { r: &'a [f32], mag: Option<&'a [f32]> },
-    Naive { r: &'a [f32] },
-    Lora { a: &'a [f32], b: &'a [f32] },
-    Full { w: &'a [f32] },
 }
 
 /// Pre-enumerated merge schedule: every adapted matrix × layer as an
@@ -169,6 +173,26 @@ impl MergePlan {
         Ok(MergePlan { dims, items, gaps, base_total: base_layout.total })
     }
 
+    /// Largest single work item (scratch sizing for in-place sweeps).
+    fn max_item_size(&self) -> usize {
+        self.items.iter().map(|it| it.rows * it.cols).max().unwrap_or(0)
+    }
+
+    /// Resolve every item's parameter views up front on this thread, so
+    /// the parallel sweeps below are infallible.
+    fn resolve_all<'a>(
+        &self,
+        spec: &MethodSpec,
+        peft: &'a [f32],
+        peft_layout: &Layout,
+    ) -> Result<Vec<ResolvedParams<'a>>> {
+        let op = registry::op_for(spec.kind);
+        self.items
+            .iter()
+            .map(|it| resolve_params(op, spec, peft, peft_layout, it.name, it.layer, it.rows, it.cols))
+            .collect()
+    }
+
     /// Execute the plan as one parallel sweep. `out` is fully written:
     /// adapted regions receive the transformed weights and every other
     /// range is copied through from `base`, so callers can hand in any
@@ -182,7 +206,7 @@ impl MergePlan {
         peft_layout: &Layout,
         out: &mut [f32],
     ) -> Result<()> {
-        self.run(spec, base, peft, peft_layout, out, None)
+        self.run(spec, base, peft, peft_layout, out, None, true)
     }
 
     /// Serial driver over the same kernels and item order — the
@@ -196,7 +220,26 @@ impl MergePlan {
         peft_layout: &Layout,
         out: &mut [f32],
     ) -> Result<()> {
-        self.run(spec, base, peft, peft_layout, out, Some(1))
+        self.run(spec, base, peft, peft_layout, out, Some(1), true)
+    }
+
+    /// In-place adapter swap, rebase flavour: re-merge `new` over a
+    /// buffer that already holds a merged model. Adapted regions are
+    /// recomputed from the frozen `base`; gap copies are skipped — the
+    /// swap-slot invariant is that non-adapted regions still hold base
+    /// bits from the initial full merge. The result is **bit-identical**
+    /// to a fresh [`MergePlan::execute`] into a new buffer, without the
+    /// buffer allocation or the gap-range memcpy.
+    ///
+    /// `threads: None` uses the ambient pool; `Some(1)` pins serial.
+    pub fn execute_rebase(
+        &self,
+        new: AdapterRef,
+        base: &[f32],
+        buf: &mut [f32],
+        threads: Option<usize>,
+    ) -> Result<()> {
+        self.run(new.spec, base, new.peft, new.layout, buf, threads, false)
     }
 
     fn run(
@@ -207,6 +250,7 @@ impl MergePlan {
         peft_layout: &Layout,
         out: &mut [f32],
         threads: Option<usize>,
+        copy_gaps: bool,
     ) -> Result<()> {
         anyhow::ensure!(
             base.len() == self.base_total,
@@ -215,24 +259,33 @@ impl MergePlan {
             self.base_total
         );
         anyhow::ensure!(out.len() == base.len(), "output buffer length mismatch");
-        if spec.kind == MethodKind::Vera {
-            bail!("host merge unsupported for vera (use the merge artifact)");
-        }
-        if spec.kind == MethodKind::None {
-            out.copy_from_slice(base);
+        let op = registry::op_for(spec.kind);
+        anyhow::ensure!(
+            op.host_mergeable(),
+            "host merge unsupported for {} (use the merge artifact)",
+            op.token()
+        );
+        if op.is_identity() {
+            if copy_gaps {
+                out.copy_from_slice(base);
+            } else {
+                for it in &self.items {
+                    let size = it.rows * it.cols;
+                    out[it.offset..it.offset + size]
+                        .copy_from_slice(&base[it.offset..it.offset + size]);
+                }
+            }
             return Ok(());
         }
         // Pass the non-adapted tensors through.
-        for &(a, b) in &self.gaps {
-            out[a..b].copy_from_slice(&base[a..b]);
+        if copy_gaps {
+            for &(a, b) in &self.gaps {
+                out[a..b].copy_from_slice(&base[a..b]);
+            }
         }
         // Resolve every parameter view on this thread; the sweep below is
         // then infallible.
-        let params: Vec<ItemParams> = self
-            .items
-            .iter()
-            .map(|it| resolve_params(spec, peft, peft_layout, it))
-            .collect::<Result<_>>()?;
+        let params = self.resolve_all(spec, peft, peft_layout)?;
         let items = &self.items;
         let params = &params;
         let ptr = SendPtr::new(out.as_mut_ptr());
@@ -245,7 +298,7 @@ impl MergePlan {
                 let region =
                     unsafe { std::slice::from_raw_parts_mut(ptr.get().add(it.offset), size) };
                 let src = &base[it.offset..it.offset + size];
-                run_item(spec, it, &params[idx], src, region);
+                op.apply_into(spec, &params[idx], src, it.rows, it.cols, region);
             }
         };
         match threads {
@@ -254,105 +307,157 @@ impl MergePlan {
         }
         Ok(())
     }
-}
 
-fn resolve_params<'a>(
-    spec: &MethodSpec,
-    peft: &'a [f32],
-    peft_layout: &Layout,
-    it: &MergeItem,
-) -> Result<ItemParams<'a>> {
-    // Block-divisibility validation (the Mat-based transforms enforce
-    // this with asserts; the slice kernels only debug_assert, so a
-    // release build must be guarded here or a non-dividing n would
-    // silently leave trailing rows untransformed).
-    if spec.kind.is_multiplicative() {
+    /// Invert `adapter`'s transform **in place** over a merged buffer,
+    /// recovering the pre-merge weights in every adapted region (gaps
+    /// were plain copies and are left untouched). Requires the op to
+    /// support unmerge; errors on numerically non-invertible parameters
+    /// (in which case the buffer must be considered poisoned).
+    ///
+    /// `threads: None` uses the ambient pool; `Some(1)` pins serial —
+    /// both produce identical bits (per-item kernels are
+    /// single-threaded and item order never affects disjoint regions).
+    pub fn execute_unmerge(
+        &self,
+        adapter: AdapterRef,
+        buf: &mut [f32],
+        threads: Option<usize>,
+    ) -> Result<()> {
+        anyhow::ensure!(buf.len() == self.base_total, "buffer length mismatch");
+        let op = registry::op_for(adapter.spec.kind);
         anyhow::ensure!(
-            spec.n_blocks > 0 && it.rows % spec.n_blocks == 0,
-            "{}[{}]: n_blocks={} must divide rows {}",
-            it.name,
-            it.layer,
-            spec.n_blocks,
-            it.rows
+            op.supports_unmerge(),
+            "{} does not support in-place unmerge",
+            op.token()
         );
-        if spec.kind == MethodKind::EtherPlus && spec.sides == 2 {
-            anyhow::ensure!(
-                it.cols % spec.n_blocks == 0,
-                "{}[{}]: n_blocks={} must divide cols {}",
-                it.name,
-                it.layer,
-                spec.n_blocks,
-                it.cols
-            );
+        let params = self.resolve_all(adapter.spec, adapter.peft, adapter.layout)?;
+        let max_size = self.max_item_size();
+        let items = &self.items;
+        let params = &params;
+        let spec = adapter.spec;
+        let err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        let ptr = SendPtr::new(buf.as_mut_ptr());
+        let sweep = |a: usize, b: usize| {
+            let mut scratch = vec![0.0f32; max_size];
+            for idx in a..b {
+                let it = &items[idx];
+                let size = it.rows * it.cols;
+                // SAFETY: items cover disjoint output ranges.
+                let region =
+                    unsafe { std::slice::from_raw_parts_mut(ptr.get().add(it.offset), size) };
+                scratch[..size].copy_from_slice(region);
+                if let Err(e) =
+                    op.unmerge_into(spec, &params[idx], &scratch[..size], it.rows, it.cols, region)
+                {
+                    let mut slot = err.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(e.context(format!("unmerge {}[{}]", it.name, it.layer)));
+                    }
+                }
+            }
+        };
+        match threads {
+            Some(t) => parallel_for_chunks_with(t, items.len(), 1, sweep),
+            None => parallel_for_chunks(items.len(), 1, sweep),
+        }
+        match err.into_inner().unwrap() {
+            Some(e) => Err(e),
+            None => Ok(()),
         }
     }
-    // Every resolved view's length is checked against the item here —
-    // the slice kernels only debug_assert sizes, so this is what keeps a
-    // release build from silently part-transforming (or a worker thread
-    // from panicking) on a peft layout inconsistent with ModelDims.
-    let get = |field: &str, want: usize| -> Result<&'a [f32]> {
-        let v = peft_layout.view_layer(peft, &format!("{}.{field}", it.name), it.layer)?;
-        anyhow::ensure!(
-            v.len() == want,
-            "{}[{}].{field}: length {} != expected {want}",
-            it.name,
-            it.layer,
-            v.len()
-        );
-        Ok(v)
-    };
-    let (d, f, n) = (it.rows, it.cols, spec.n_blocks);
-    Ok(match spec.kind {
-        MethodKind::Ether => ItemParams::Ether { u: get("u", d)? },
-        MethodKind::EtherPlus => ItemParams::EtherPlus {
-            u: get("u", d)?,
-            v: get("v", d)?,
-            right: if spec.sides == 2 { Some((get("ru", f)?, get("rv", f)?)) } else { None },
-        },
-        MethodKind::Oft => ItemParams::Oft {
-            r: get("r", n * (d / n) * (d / n))?,
-            mag: if spec.magnitude_refit { Some(get("mag", f)?) } else { None },
-        },
-        MethodKind::Naive => ItemParams::Naive { r: get("r", n * (d / n) * (d / n))? },
-        MethodKind::Lora => ItemParams::Lora {
-            a: get("a", d * spec.rank)?,
-            b: get("b", spec.rank * f)?,
-        },
-        MethodKind::Full => ItemParams::Full { w: get("w", d * f)? },
-        MethodKind::None | MethodKind::Vera => unreachable!("filtered in MergePlan::run"),
-    })
-}
 
-/// Transform one work item from `src` (its slice of the base) into
-/// `out` (its slice of the merged buffer). Infallible by construction.
-fn run_item(spec: &MethodSpec, it: &MergeItem, params: &ItemParams, src: &[f32], out: &mut [f32]) {
-    let n = spec.n_blocks;
-    let (d, f) = (it.rows, it.cols);
-    match params {
-        ItemParams::Ether { u } => {
-            let uh = tf::normalize_blocks(u, n);
-            tf::ether_into(&uh, n, src, f, out);
+    /// In-place adapter swap, involution flavour: per work item, invert
+    /// `old`'s transform on the merged slice (recovering ≈ base weights
+    /// through the paper's involution/inversion structure) and
+    /// immediately re-apply `new` — one fused parallel sweep that never
+    /// reads the base inside adapted regions.
+    ///
+    /// When `audit_base` is given, the recovered weights are compared
+    /// against it mid-sweep and the max-abs involution residual is
+    /// returned (0.0 without an audit). The result agrees with a fresh
+    /// merge of `new` to within that residual's amplification (≤ 1e-5
+    /// for the family, asserted by tests and the adapter_merge bench);
+    /// for exact bit-parity use [`MergePlan::execute_rebase`].
+    ///
+    /// On error the buffer must be considered poisoned (a fresh merge
+    /// restores it).
+    pub fn execute_swap_involution(
+        &self,
+        old: AdapterRef,
+        new: AdapterRef,
+        audit_base: Option<&[f32]>,
+        buf: &mut [f32],
+        threads: Option<usize>,
+    ) -> Result<f32> {
+        anyhow::ensure!(buf.len() == self.base_total, "buffer length mismatch");
+        let op_old = registry::op_for(old.spec.kind);
+        let op_new = registry::op_for(new.spec.kind);
+        anyhow::ensure!(
+            op_old.supports_unmerge(),
+            "{} does not support in-place unmerge",
+            op_old.token()
+        );
+        anyhow::ensure!(
+            op_new.host_mergeable(),
+            "host merge unsupported for {} (use the merge artifact)",
+            op_new.token()
+        );
+        if let Some(base) = audit_base {
+            anyhow::ensure!(base.len() == buf.len(), "audit base length mismatch");
         }
-        ItemParams::EtherPlus { u, v, right } => {
-            let uh = tf::normalize_blocks(u, n);
-            let vh = tf::normalize_blocks(v, n);
-            tf::ether_plus_left_into(&uh, &vh, n, src, f, out);
-            if let Some((ru, rv)) = right {
-                let ruh = tf::normalize_blocks(ru, n);
-                let rvh = tf::normalize_blocks(rv, n);
-                tf::ether_plus_right_rows(out, f, &ruh, &rvh, n);
+        let old_params = self.resolve_all(old.spec, old.peft, old.layout)?;
+        let new_params = self.resolve_all(new.spec, new.peft, new.layout)?;
+        let max_size = self.max_item_size();
+        let items = &self.items;
+        let (old_params, new_params) = (&old_params, &new_params);
+        let (old_spec, new_spec) = (old.spec, new.spec);
+        let residual_bits = AtomicU32::new(0);
+        let err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        let ptr = SendPtr::new(buf.as_mut_ptr());
+        let sweep = |a: usize, b: usize| {
+            let mut scratch = vec![0.0f32; max_size];
+            for idx in a..b {
+                let it = &items[idx];
+                let size = it.rows * it.cols;
+                // SAFETY: items cover disjoint output ranges.
+                let region =
+                    unsafe { std::slice::from_raw_parts_mut(ptr.get().add(it.offset), size) };
+                scratch[..size].copy_from_slice(region);
+                if let Err(e) = op_old.unmerge_into(
+                    old_spec,
+                    &old_params[idx],
+                    &scratch[..size],
+                    it.rows,
+                    it.cols,
+                    region,
+                ) {
+                    let mut slot = err.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(e.context(format!("unmerge {}[{}]", it.name, it.layer)));
+                    }
+                    continue;
+                }
+                if let Some(base) = audit_base {
+                    let mut local = 0.0f32;
+                    for (x, y) in region.iter().zip(&base[it.offset..it.offset + size]) {
+                        local = local.max((x - y).abs());
+                    }
+                    // f32 bit patterns of non-negative floats order like
+                    // the floats themselves, so an integer max works.
+                    residual_bits.fetch_max(local.to_bits(), Ordering::Relaxed);
+                }
+                scratch[..size].copy_from_slice(region);
+                op_new.apply_into(new_spec, &new_params[idx], &scratch[..size], it.rows, it.cols, region);
             }
+        };
+        match threads {
+            Some(t) => parallel_for_chunks_with(t, items.len(), 1, sweep),
+            None => parallel_for_chunks(items.len(), 1, sweep),
         }
-        ItemParams::Oft { r, mag } => {
-            let blocks = tf::cayley_blocks(r, n, d / n);
-            tf::bdmm_into(&blocks, src, f, *mag, out);
+        if let Some(e) = err.into_inner().unwrap() {
+            return Err(e);
         }
-        ItemParams::Naive { r } => {
-            let blocks = tf::naive_blocks(r, n, d / n);
-            tf::bdmm_into(&blocks, src, f, None, out);
-        }
-        ItemParams::Lora { a, b } => tf::lora_into(a, b, src, d, spec.rank, f, out),
-        ItemParams::Full { w } => out.copy_from_slice(w),
+        Ok(f32::from_bits(residual_bits.load(Ordering::Relaxed)))
     }
 }
 
@@ -386,7 +491,16 @@ pub fn merge_into_base_reference(
     peft: &[f32],
     peft_layout: &Layout,
 ) -> Result<Vec<f32>> {
+    let op = registry::op_for(spec.kind);
+    anyhow::ensure!(
+        op.host_mergeable(),
+        "host merge unsupported for {} (use the merge artifact)",
+        op.token()
+    );
     let mut out = base.to_vec();
+    if op.is_identity() {
+        return Ok(out);
+    }
     for (name, d, f) in adapted_matrices(dims.d_model, dims.d_ff) {
         for l in 0..dims.n_layers {
             let w = weight_matrix(base, base_layout, name, l, d, f)?;
@@ -397,58 +511,6 @@ pub fn merge_into_base_reference(
         }
     }
     Ok(out)
-}
-
-/// Serial scalar transform of one matrix (reference path only).
-fn transform_matrix_serial(
-    spec: &MethodSpec,
-    peft: &[f32],
-    peft_layout: &Layout,
-    name: &str,
-    l: usize,
-    w: &Mat,
-) -> Result<Mat> {
-    let n = spec.n_blocks;
-    let (d, f) = (w.rows, w.cols);
-    let get = |field: &str| peft_layout.view_layer(peft, &format!("{name}.{field}"), l);
-    Ok(match spec.kind {
-        MethodKind::None => w.clone(),
-        MethodKind::Ether => tf::ether_apply_serial(get("u")?, n, w),
-        MethodKind::EtherPlus => {
-            let mut out = tf::ether_plus_left_serial(get("u")?, get("v")?, n, w);
-            if spec.sides == 2 {
-                out = tf::ether_plus_right_serial(&out, get("ru")?, get("rv")?, n);
-            }
-            out
-        }
-        MethodKind::Oft => {
-            let blocks = tf::cayley_blocks(get("r")?, n, d / n);
-            let mut out = tf::bdmm_serial(&blocks, w);
-            if spec.magnitude_refit {
-                let mag = get("mag")?;
-                for r in 0..d {
-                    let row = out.row_mut(r);
-                    for c in 0..f {
-                        row[c] *= 1.0 + mag[c];
-                    }
-                }
-            }
-            out
-        }
-        MethodKind::Naive => {
-            let blocks = tf::naive_blocks(get("r")?, n, d / n);
-            tf::bdmm_serial(&blocks, w)
-        }
-        MethodKind::Lora => {
-            let a = Mat::from_vec(d, spec.rank, get("a")?.to_vec());
-            let b = Mat::from_vec(spec.rank, f, get("b")?.to_vec());
-            tf::lora_apply(&a, &b, w)
-        }
-        MethodKind::Full => Mat::from_vec(d, f, get("w")?.to_vec()),
-        MethodKind::Vera => {
-            bail!("host merge unsupported for vera (use the merge artifact)")
-        }
-    })
 }
 
 /// Base layout holding exactly the six adapted matrices, layer-stacked
@@ -465,44 +527,29 @@ pub fn base_layout_for(dims: ModelDims) -> Layout {
     )
 }
 
-/// Build the peft layout the same way `python/compile/peft.py` does
-/// (used when no manifest is available, e.g. pure-host studies).
+/// Build the flat PEFT layout for (dims, spec) from the op's parameter
+/// schema — the same single source of truth as `peft::count_params` and
+/// manifest validation, with each field stacked over layers exactly the
+/// way `python/compile/peft.py` packs it.
 pub fn peft_layout_for(dims: ModelDims, spec: &MethodSpec) -> Layout {
+    let op = registry::op_for(spec.kind);
     let mut items: Vec<(String, Vec<usize>)> = vec![];
-    let l = dims.n_layers;
-    let n = spec.n_blocks;
-    let r = spec.rank;
     for (name, d, f) in adapted_matrices(dims.d_model, dims.d_ff) {
-        match spec.kind {
-            MethodKind::Ether => items.push((format!("{name}.u"), vec![l, n, d / n])),
-            MethodKind::EtherPlus => {
-                items.push((format!("{name}.u"), vec![l, n, d / n]));
-                items.push((format!("{name}.v"), vec![l, n, d / n]));
-                if spec.sides == 2 {
-                    items.push((format!("{name}.ru"), vec![l, n, f / n]));
-                    items.push((format!("{name}.rv"), vec![l, n, f / n]));
-                }
-            }
-            MethodKind::Oft => {
-                items.push((format!("{name}.r"), vec![l, n, d / n, d / n]));
-                if spec.magnitude_refit {
-                    items.push((format!("{name}.mag"), vec![l, f]));
-                }
-            }
-            MethodKind::Naive => items.push((format!("{name}.r"), vec![l, n, d / n, d / n])),
-            MethodKind::Lora => {
-                items.push((format!("{name}.a"), vec![l, d, r]));
-                items.push((format!("{name}.b"), vec![l, r, f]));
-            }
-            MethodKind::Vera => {
-                items.push((format!("{name}.dv"), vec![l, r]));
-                items.push((format!("{name}.bv"), vec![l, f]));
-            }
-            MethodKind::Full => items.push((format!("{name}.w"), vec![l, d, f])),
-            MethodKind::None => {}
+        for (field, shape) in op.param_schema(spec, d, f) {
+            let mut full = Vec::with_capacity(shape.len() + 1);
+            full.push(dims.n_layers);
+            full.extend_from_slice(&shape);
+            items.push((format!("{name}.{field}"), full));
         }
     }
     Layout::new(items)
+}
+
+/// Cross-check `count_params` against a schema-derived layout — the two
+/// must agree because they are computed from the same schema. Exposed
+/// for the registry property tests.
+pub fn schema_total(dims: ModelDims, spec: &MethodSpec) -> usize {
+    peft_layout_for(dims, spec).total
 }
 
 #[cfg(test)]
@@ -544,7 +591,7 @@ mod tests {
     fn merge_neutral_methods_are_identity() {
         let dims = tiny_dims();
         let (base, bl) = fake_base(dims);
-        for name in ["oft_n4", "naive_n4", "lora_r4"] {
+        for name in ["oft_n4", "naive_n4", "lora_r4", "delora_r4"] {
             let spec = MethodSpec::parse(name).unwrap();
             let pl = peft_layout_for(dims, &spec);
             // zero init except lora.a (any value works since b = 0)
@@ -644,5 +691,63 @@ mod tests {
                 .fold(0.0, f32::max);
             assert!(diff <= 1e-5, "{name}: blocked vs reference diff {diff}");
         }
+    }
+
+    #[test]
+    fn rebase_swap_is_bit_identical_to_fresh_merge() {
+        let dims = tiny_dims();
+        let (base, bl) = fake_base(dims);
+        let plan = MergePlan::new(dims, &bl).unwrap();
+        let spec = MethodSpec::parse("ether_n4").unwrap();
+        let pl = peft_layout_for(dims, &spec);
+        let mut rng = Rng::new(31);
+        let peft_a = rng.normal_vec(pl.total, 0.4);
+        let peft_b = rng.normal_vec(pl.total, 0.4);
+        let fresh_b = merge_into_base(dims, &spec, &base, &bl, &peft_b, &pl).unwrap();
+        let mut buf = merge_into_base(dims, &spec, &base, &bl, &peft_a, &pl).unwrap();
+        plan.execute_rebase(
+            AdapterRef { spec: &spec, peft: &peft_b, layout: &pl },
+            &base,
+            &mut buf,
+            None,
+        )
+        .unwrap();
+        assert!(
+            buf.iter().zip(&fresh_b).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "rebase swap must be bit-identical to a fresh merge"
+        );
+    }
+
+    #[test]
+    fn unmerge_recovers_base_within_tolerance() {
+        let dims = tiny_dims();
+        let (base, bl) = fake_base(dims);
+        let plan = MergePlan::new(dims, &bl).unwrap();
+        let spec = MethodSpec::parse("ether_n4").unwrap();
+        let pl = peft_layout_for(dims, &spec);
+        let mut rng = Rng::new(32);
+        let peft = rng.normal_vec(pl.total, 0.4);
+        let mut buf = merge_into_base(dims, &spec, &base, &bl, &peft, &pl).unwrap();
+        plan.execute_unmerge(AdapterRef { spec: &spec, peft: &peft, layout: &pl }, &mut buf, None)
+            .unwrap();
+        let err: f32 =
+            buf.iter().zip(&base).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
+        assert!(err <= 1e-5, "involution residual {err}");
+    }
+
+    #[test]
+    fn unmerge_rejects_non_invertible_methods() {
+        let dims = tiny_dims();
+        let (base, bl) = fake_base(dims);
+        let plan = MergePlan::new(dims, &bl).unwrap();
+        let spec = MethodSpec::parse("full").unwrap();
+        let pl = peft_layout_for(dims, &spec);
+        let mut rng = Rng::new(33);
+        let peft = rng.normal_vec(pl.total, 0.1);
+        let mut buf = merge_into_base(dims, &spec, &base, &bl, &peft, &pl).unwrap();
+        let err = plan
+            .execute_unmerge(AdapterRef { spec: &spec, peft: &peft, layout: &pl }, &mut buf, None)
+            .unwrap_err();
+        assert!(err.to_string().contains("unmerge"), "{err}");
     }
 }

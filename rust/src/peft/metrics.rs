@@ -3,9 +3,10 @@
 
 use anyhow::Result;
 
-use crate::peft::apply::{transform_matrix, ModelDims};
+use crate::peft::apply::ModelDims;
 use crate::peft::flat::Layout;
-use crate::peft::{adapted_matrices, MethodKind, MethodSpec};
+use crate::peft::op::resolve_params;
+use crate::peft::{adapted_matrices, registry, MethodSpec};
 use crate::tensor::{l2_dist, Mat};
 
 /// Hyperspherical energy of a weight matrix: `Σ_{i<j} ‖ŵ_i − ŵ_j‖⁻¹`
@@ -56,75 +57,27 @@ pub fn model_he(
 /// The paper's "Transformation Distance" (Fig. 4): aggregate
 /// `‖T − I‖_F` over layers and matrices.
 ///
-/// For multiplicative methods T is the materialized (left-side, block-
-/// diagonal) multiplier. For additive methods (LoRA/VeRA) the analogous
-/// quantity is `‖ΔW‖_F`, the distance of the additive update from its
-/// neutral element 0 — reported on the same axis as in the paper.
+/// Registry-dispatched: each op's
+/// [`crate::peft::op::TransformOp::distance_sq`] materializes the
+/// distance of its own transform from the neutral element — `‖T − I‖_F`
+/// for multiplicative methods (left/right factors on the identity),
+/// `‖ΔW‖_F` for additive methods (transform of the zero matrix) —
+/// reported on the same axis as in the paper.
 pub fn transformation_distance(
     dims: ModelDims,
     spec: &MethodSpec,
     peft: &[f32],
     peft_layout: &Layout,
 ) -> Result<f64> {
+    let op = registry::op_for(spec.kind);
     let mut acc = 0.0f64;
     for (name, d, f) in adapted_matrices(dims.d_model, dims.d_ff) {
         for l in 0..dims.n_layers {
-            let dist2 = match spec.kind {
-                MethodKind::None => 0.0,
-                MethodKind::Lora | MethodKind::Vera | MethodKind::Full => {
-                    // ‖ΔW‖_F via transform of the zero matrix ⇒ ΔW itself.
-                    let zero = Mat::zeros(d, f);
-                    let delta = transform_matrix(spec, peft, peft_layout, name, l, &zero)?;
-                    delta.fro().powi(2)
-                }
-                _ => {
-                    // Materialize the left multiplier by transforming I.
-                    let eye = Mat::eye(d);
-                    let mut t = transform_matrix_left_only(spec, peft, peft_layout, name, l, &eye)?;
-                    if spec.kind == MethodKind::EtherPlus && spec.sides == 2 {
-                        // Include the right side on its own identity.
-                        let eye_f = Mat::eye(f);
-                        let get = |field: &str| {
-                            peft_layout.view_layer(peft, &format!("{name}.{field}"), l)
-                        };
-                        let tr = crate::peft::transforms::ether_plus_right(
-                            &eye_f,
-                            get("ru")?,
-                            get("rv")?,
-                            spec.n_blocks,
-                        );
-                        acc += tr.dist_from_identity().powi(2);
-                    }
-                    let d2 = t.dist_from_identity().powi(2);
-                    t.data.clear();
-                    d2
-                }
-            };
-            acc += dist2;
+            let p = resolve_params(op, spec, peft, peft_layout, name, l, d, f)?;
+            acc += op.distance_sq(spec, &p, d, f)?;
         }
     }
     Ok(acc.sqrt())
-}
-
-fn transform_matrix_left_only(
-    spec: &MethodSpec,
-    peft: &[f32],
-    peft_layout: &Layout,
-    name: &str,
-    l: usize,
-    eye: &Mat,
-) -> Result<Mat> {
-    // For EtherPlus restrict to the left factor (right handled separately).
-    if spec.kind == MethodKind::EtherPlus {
-        let get = |field: &str| peft_layout.view_layer(peft, &format!("{name}.{field}"), l);
-        return Ok(crate::peft::transforms::ether_plus_left(
-            get("u")?,
-            get("v")?,
-            spec.n_blocks,
-            eye,
-        ));
-    }
-    transform_matrix(spec, peft, peft_layout, name, l, eye)
 }
 
 /// The paper's "Weights Distance" (Fig. 4): ‖W′ − W‖₂ over all weights.

@@ -12,15 +12,26 @@
 //!
 //! Parity with the kernels is enforced by `rust/tests/transform_props.rs`
 //! (same math) and transitively by the Python kernel-vs-oracle tests.
+//!
+//! Since the `TransformOp` redesign, per-method behaviour lives behind
+//! the [`op::TransformOp`] trait, dispatched through [`registry::op_for`]
+//! — name parsing, parameter counting, layout construction, merge
+//! kernels, unmerge (the involution/inversion path the serving swap mode
+//! exploits) and the Fig. 4 distance metric are all derived from it.
 
 pub mod apply;
 pub mod flat;
 pub mod metrics;
+pub mod op;
+pub mod registry;
 pub mod transforms;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
-/// Method family member (mirrors `python/compile/peft.py::MethodSpec`).
+use op::Arity;
+
+/// Method family member (mirrors `python/compile/peft.py::MethodSpec`;
+/// `delora` is a host-only extension with no Layer-2 counterpart yet).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct MethodSpec {
     pub kind: MethodKind,
@@ -38,31 +49,20 @@ pub enum MethodKind {
     Naive,
     Lora,
     Vera,
+    Delora,
     Full,
     None,
 }
 
 impl MethodKind {
     pub fn as_str(&self) -> &'static str {
-        match self {
-            MethodKind::Ether => "ether",
-            MethodKind::EtherPlus => "etherplus",
-            MethodKind::Oft => "oft",
-            MethodKind::Naive => "naive",
-            MethodKind::Lora => "lora",
-            MethodKind::Vera => "vera",
-            MethodKind::Full => "full",
-            MethodKind::None => "none",
-        }
+        registry::op_for(*self).token()
     }
 
     /// Multiplicative methods transform W by matrix multiplication; the
     /// paper's §5.3 control study hinges on this split.
     pub fn is_multiplicative(&self) -> bool {
-        matches!(
-            self,
-            MethodKind::Ether | MethodKind::EtherPlus | MethodKind::Oft | MethodKind::Naive
-        )
+        registry::op_for(*self).is_multiplicative()
     }
 }
 
@@ -75,12 +75,12 @@ impl MethodSpec {
             sides: 2,
             magnitude_refit: false,
         };
-        if name == "full" {
-            spec.kind = MethodKind::Full;
-            return Ok(spec);
-        }
-        if name == "none" {
-            return Ok(spec);
+        // Suffix-less members (`full`, `none`).
+        if let Some(op) = registry::by_token(name) {
+            if op.arity() == Arity::Fixed {
+                spec.kind = op.kind();
+                return Ok(spec);
+            }
         }
         let (base, tail) = match name.split_once('_') {
             Some(x) => x,
@@ -99,41 +99,34 @@ impl MethodSpec {
             .get(1..)
             .and_then(|s| s.parse().ok())
             .ok_or_else(|| anyhow::anyhow!("bad method suffix in {name:?}"))?;
-        spec.kind = match base {
-            "ether" => MethodKind::Ether,
-            "etherplus" => MethodKind::EtherPlus,
-            "oft" => MethodKind::Oft,
-            "naive" => MethodKind::Naive,
-            "lora" => MethodKind::Lora,
-            "vera" => MethodKind::Vera,
-            _ => bail!("unknown method {name:?}"),
-        };
-        match spec.kind {
-            MethodKind::Lora | MethodKind::Vera => spec.rank = num,
-            _ => spec.n_blocks = num,
+        let op = registry::by_token(base).ok_or_else(|| anyhow::anyhow!("unknown method {name:?}"))?;
+        spec.kind = op.kind();
+        match op.arity() {
+            Arity::Blocks => {
+                ensure!(num > 0, "n_blocks must be > 0 in {name:?}");
+                spec.n_blocks = num;
+            }
+            Arity::Rank => {
+                ensure!(num > 0, "rank must be > 0 in {name:?}");
+                spec.rank = num;
+            }
+            Arity::Fixed => bail!("method {base:?} takes no numeric suffix ({name:?})"),
         }
+        // Only canonical names parse: the suffix letter must match the
+        // op's arity ("ether_r4" ≠ "ether_n4") and flag suffixes are
+        // rejected on methods whose canonical name never renders them
+        // ("lora_r8_mrf" would silently drop the flag). One registry-
+        // derived check instead of per-method letter tables.
+        let canonical = op.spec_name(&spec);
+        ensure!(
+            canonical == name,
+            "non-canonical method name {name:?} (did you mean {canonical:?}?)"
+        );
         Ok(spec)
     }
 
     pub fn name(&self) -> String {
-        match self.kind {
-            MethodKind::Ether => format!("ether_n{}", self.n_blocks),
-            MethodKind::EtherPlus => format!(
-                "etherplus_n{}{}",
-                self.n_blocks,
-                if self.sides == 1 { "_1s" } else { "" }
-            ),
-            MethodKind::Oft => format!(
-                "oft_n{}{}",
-                self.n_blocks,
-                if self.magnitude_refit { "_mrf" } else { "" }
-            ),
-            MethodKind::Naive => format!("naive_n{}", self.n_blocks),
-            MethodKind::Lora => format!("lora_r{}", self.rank),
-            MethodKind::Vera => format!("vera_r{}", self.rank),
-            MethodKind::Full => "full".into(),
-            MethodKind::None => "none".into(),
-        }
+        registry::op_for(self.kind).spec_name(self)
     }
 }
 
@@ -150,25 +143,18 @@ pub fn adapted_matrices(d_model: usize, d_ff: usize) -> Vec<(&'static str, usize
     ]
 }
 
-/// Exact trainable-parameter count (paper §4 "Parameter Efficiency").
+/// Exact trainable-parameter count (paper §4 "Parameter Efficiency"),
+/// derived from each op's [`op::TransformOp::param_schema`] — the same
+/// source of truth `apply::peft_layout_for` builds flat layouts from.
 pub fn count_params(d_model: usize, d_ff: usize, n_layers: usize, spec: &MethodSpec) -> usize {
+    let op = registry::op_for(spec.kind);
     let per_layer: usize = adapted_matrices(d_model, d_ff)
         .iter()
-        .map(|&(_, d, f)| match spec.kind {
-            MethodKind::Ether => d,
-            MethodKind::EtherPlus => {
-                if spec.sides == 2 {
-                    2 * d + 2 * f
-                } else {
-                    2 * d
-                }
-            }
-            MethodKind::Oft => d * d / spec.n_blocks + if spec.magnitude_refit { f } else { 0 },
-            MethodKind::Naive => d * d / spec.n_blocks,
-            MethodKind::Lora => spec.rank * (d + f),
-            MethodKind::Vera => spec.rank + f,
-            MethodKind::Full => d * f,
-            MethodKind::None => 0,
+        .map(|&(_, d, f)| {
+            op.param_schema(spec, d, f)
+                .iter()
+                .map(|(_, shape)| shape.iter().product::<usize>())
+                .sum::<usize>()
         })
         .sum();
     per_layer * n_layers
@@ -182,11 +168,30 @@ mod tests {
     fn parse_roundtrip() {
         for name in [
             "ether_n4", "ether_n32", "etherplus_n4", "etherplus_n4_1s", "oft_n256",
-            "oft_n4_mrf", "naive_n4", "lora_r8", "vera_r64", "full", "none",
+            "oft_n4_mrf", "naive_n4", "lora_r8", "vera_r64", "delora_r8", "full", "none",
         ] {
             assert_eq!(MethodSpec::parse(name).unwrap().name(), name, "{name}");
         }
         assert!(MethodSpec::parse("bogus_x2").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_degenerate_arity() {
+        // n_blocks = 0 used to parse and divide by zero at layout time.
+        for name in ["ether_n0", "etherplus_n0", "oft_n0", "naive_n0", "lora_r0", "vera_r0",
+                     "delora_r0"] {
+            assert!(MethodSpec::parse(name).is_err(), "{name} must be rejected");
+        }
+        // Suffix-less methods reject stray suffixes.
+        assert!(MethodSpec::parse("full_n4").is_err());
+        assert!(MethodSpec::parse("none_r2").is_err());
+        // The suffix letter must match the op's arity, and flag suffixes
+        // are rejected where the canonical name never renders them.
+        assert!(MethodSpec::parse("ether_r4").is_err());
+        assert!(MethodSpec::parse("lora_n8").is_err());
+        assert!(MethodSpec::parse("lora_r8_mrf").is_err());
+        assert!(MethodSpec::parse("ether_n4_1s").is_err());
+        assert!(MethodSpec::parse("ether_n04").is_err());
     }
 
     #[test]
@@ -203,13 +208,17 @@ mod tests {
         let o16 = MethodSpec::parse("oft_n16").unwrap();
         assert_eq!(count_params(d, f, l, &o4), 4 * count_params(d, f, l, &o16));
         // ETHER < everything else.
-        for other in ["etherplus_n4", "oft_n16", "lora_r8", "full"] {
+        for other in ["etherplus_n4", "oft_n16", "lora_r8", "delora_r8", "full"] {
             let spec = MethodSpec::parse(other).unwrap();
             assert!(
                 count_params(d, f, l, &ether) < count_params(d, f, l, &spec),
                 "{other}"
             );
         }
+        // DeLoRA = LoRA + one strength scalar per adapted matrix.
+        let lora = MethodSpec::parse("lora_r8").unwrap();
+        let delora = MethodSpec::parse("delora_r8").unwrap();
+        assert_eq!(count_params(d, f, l, &delora), count_params(d, f, l, &lora) + 6 * l);
     }
 
     #[test]
@@ -218,5 +227,6 @@ mod tests {
         assert!(MethodKind::Oft.is_multiplicative());
         assert!(!MethodKind::Lora.is_multiplicative());
         assert!(!MethodKind::Vera.is_multiplicative());
+        assert!(!MethodKind::Delora.is_multiplicative());
     }
 }

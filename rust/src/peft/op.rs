@@ -1,0 +1,1143 @@
+//! The [`TransformOp`] trait: one object per PEFT family member.
+//!
+//! Every method in the family — ETHER's hyperplane reflections (paper
+//! Eq. 1), the relaxed ETHER+ (§3.3), OFT's Cayley blocks, the §5.3
+//! Naive control, LoRA/VeRA/DeLoRA-style additive updates, full
+//! finetuning and the `none` identity — is described by a single trait
+//! implementation instead of `match spec.kind` arms scattered across the
+//! crate. The trait contract:
+//!
+//! * [`TransformOp::param_schema`] is the **single source of truth** for
+//!   a method's per-layer parameter fields. `peft::apply::peft_layout_for`
+//!   (flat [`crate::peft::flat::Layout`] construction),
+//!   `peft::count_params`, manifest cross-validation, and per-item view
+//!   resolution are all derived from it — adding a field in one place
+//!   propagates everywhere.
+//! * [`TransformOp::apply_blocked`] transforms one weight matrix with the
+//!   blocked parallel column-tile engine (analysis drivers).
+//! * [`TransformOp::apply_into`] is the single-threaded slice kernel a
+//!   `MergePlan` work item runs, writing straight into the merged buffer.
+//! * [`TransformOp::apply_serial`] is the scalar parity oracle.
+//! * [`TransformOp::unmerge_into`] (optional) inverts the transform on a
+//!   merged slice. ETHER's reflection is its own inverse (H·H = I,
+//!   §3.2); ETHER+ inverts through the rank-2 Woodbury identity; OFT
+//!   through the orthogonal transpose; Naive through a block inverse;
+//!   LoRA/DeLoRA by subtracting the additive update. The serving layer's
+//!   in-place adapter swap is built on this hook.
+//!
+//! To add a new method: implement the trait on a unit struct here, add
+//! the [`crate::peft::MethodKind`] variant, and register it in
+//! [`crate::peft::registry::op_for`]. Nothing else in the crate changes —
+//! [`DeloraOp`] (DeLoRA-style normalized low-rank with a decoupled
+//! strength scalar) is the worked example.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::peft::flat::Layout;
+use crate::peft::transforms as tf;
+use crate::peft::{MethodKind, MethodSpec};
+use crate::tensor::{solve, Mat};
+
+/// How a method's numeric name suffix parameterizes it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arity {
+    /// `<token>_n<num>` sets `n_blocks` (ether, etherplus, oft, naive).
+    Blocks,
+    /// `<token>_r<num>` sets `rank` (lora, vera, delora).
+    Rank,
+    /// No numeric suffix (full, none).
+    Fixed,
+}
+
+/// Parameter views for one (matrix, layer) pair, resolved against the
+/// op's schema by [`resolve_params`] — every field is present with the
+/// exact schema size, so op kernels read them infallibly via
+/// [`ResolvedParams::get`].
+pub struct ResolvedParams<'a> {
+    fields: Vec<(&'static str, &'a [f32])>,
+}
+
+impl<'a> ResolvedParams<'a> {
+    /// Fetch a schema field. Panics on a field the schema does not
+    /// declare — that is a programming error in the op, not bad data
+    /// (data errors are caught in [`resolve_params`]).
+    pub fn get(&self, field: &str) -> &'a [f32] {
+        self.fields
+            .iter()
+            .find(|(name, _)| *name == field)
+            .map(|(_, v)| *v)
+            .unwrap_or_else(|| panic!("op requested field {field:?} missing from its own schema"))
+    }
+}
+
+/// Resolve an op's schema fields for adapted matrix `mat` (shape `d×f`),
+/// layer `layer`, against a flat PEFT vector. Validates the spec for
+/// this shape and every field's length, so downstream kernels cannot
+/// silently part-transform (or panic on a worker thread) on a layout
+/// inconsistent with the model dims.
+pub fn resolve_params<'a>(
+    op: &dyn TransformOp,
+    spec: &MethodSpec,
+    peft: &'a [f32],
+    layout: &Layout,
+    mat: &str,
+    layer: usize,
+    d: usize,
+    f: usize,
+) -> Result<ResolvedParams<'a>> {
+    op.validate(spec, mat, d, f)?;
+    let mut fields = Vec::new();
+    for (field, shape) in op.param_schema(spec, d, f) {
+        let want: usize = shape.iter().product();
+        let v = layout.view_layer(peft, &format!("{mat}.{field}"), layer)?;
+        ensure!(
+            v.len() == want,
+            "{mat}[{layer}].{field}: length {} != {want} expected by the {} schema",
+            v.len(),
+            op.token()
+        );
+        fields.push((field, v));
+    }
+    Ok(ResolvedParams { fields })
+}
+
+/// One member of the PEFT transform family (object-safe).
+pub trait TransformOp: Sync + Send {
+    /// The enum variant this op implements.
+    fn kind(&self) -> MethodKind;
+
+    /// Canonical name token (`"ether"`, `"lora"`, …) — also the full
+    /// method name for [`Arity::Fixed`] ops.
+    fn token(&self) -> &'static str;
+
+    /// How the numeric suffix of the method name is interpreted.
+    fn arity(&self) -> Arity;
+
+    /// Render the canonical method name for a spec of this kind.
+    fn spec_name(&self, spec: &MethodSpec) -> String;
+
+    /// Multiplicative methods transform W by matrix multiplication; the
+    /// paper's §5.3 control study hinges on this split.
+    fn is_multiplicative(&self) -> bool {
+        false
+    }
+
+    /// True only for the `none` op (merge is a pass-through copy).
+    fn is_identity(&self) -> bool {
+        false
+    }
+
+    /// Whether the host can merge this method (VeRA cannot: its frozen
+    /// projections are jax-seeded HLO constants).
+    fn host_mergeable(&self) -> bool {
+        true
+    }
+
+    /// Whether [`TransformOp::unmerge_into`] is implemented.
+    fn supports_unmerge(&self) -> bool {
+        false
+    }
+
+    /// Per-layer parameter fields for one adapted `d×f` matrix:
+    /// `(field, shape)` pairs in flat-vector order. The single source of
+    /// truth for layout construction, parameter counting and validation.
+    fn param_schema(&self, spec: &MethodSpec, d: usize, f: usize) -> Vec<(&'static str, Vec<usize>)>;
+
+    /// Validate the spec against a `d×f` matrix before any kernel runs.
+    /// Default: multiplicative ops require `n_blocks` to divide the rows.
+    fn validate(&self, spec: &MethodSpec, mat: &str, d: usize, f: usize) -> Result<()> {
+        let _ = f;
+        if self.is_multiplicative() {
+            ensure!(
+                spec.n_blocks > 0 && d % spec.n_blocks == 0,
+                "{mat}: n_blocks={} must divide rows {d}",
+                spec.n_blocks
+            );
+        }
+        Ok(())
+    }
+
+    /// Transform one matrix with the blocked parallel engine.
+    fn apply_blocked(&self, spec: &MethodSpec, p: &ResolvedParams, w: &Mat) -> Result<Mat>;
+
+    /// Serial scalar reference (parity oracle for `apply_blocked`).
+    fn apply_serial(&self, spec: &MethodSpec, p: &ResolvedParams, w: &Mat) -> Result<Mat>;
+
+    /// Single-threaded slice kernel for one `MergePlan` work item:
+    /// transform the `d×f` slice `src` into `out`. Infallible by
+    /// construction — params were resolved and validated up front.
+    fn apply_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        src: &[f32],
+        d: usize,
+        f: usize,
+        out: &mut [f32],
+    );
+
+    /// Inverse slice kernel: recover the pre-merge `d×f` slice from
+    /// `merged`. Errors on numerically non-invertible parameters.
+    fn unmerge_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        merged: &[f32],
+        d: usize,
+        f: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let _ = (spec, p, merged, d, f, out);
+        bail!("{} does not support unmerge", self.token())
+    }
+
+    /// Squared transformation-distance contribution of one matrix/layer
+    /// (paper Fig. 4): `‖T − I‖²_F` for multiplicative ops (materialized
+    /// by transforming the identity), `‖ΔW‖²_F` for additive ops
+    /// (materialized by transforming the zero matrix).
+    fn distance_sq(&self, spec: &MethodSpec, p: &ResolvedParams, d: usize, f: usize) -> Result<f64> {
+        if self.is_identity() {
+            return Ok(0.0);
+        }
+        if self.is_multiplicative() {
+            Ok(self.apply_blocked(spec, p, &Mat::eye(d))?.dist_from_identity().powi(2))
+        } else {
+            Ok(self.apply_blocked(spec, p, &Mat::zeros(d, f))?.fro().powi(2))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared inverse kernels (Woodbury rank-2 for the relaxed reflection).
+// ---------------------------------------------------------------------------
+
+/// Per-block 2×2 system for inverting `I − ûûᵀ + v̂v̂ᵀ`: writing the
+/// operator as `I + A Bᵀ` with `A = [−û v̂]`, `B = [û v̂]`, Woodbury gives
+/// `(I + A Bᵀ)⁻¹ = I − A M⁻¹ Bᵀ` with `M = I₂ + Bᵀ A`. Returns
+/// `(m00, m01, m10, m11, det)` of `M`.
+fn woodbury_2x2(ub: &[f32], vb: &[f32]) -> Result<(f64, f64, f64, f64, f64)> {
+    let (mut c_uu, mut c_uv, mut c_vv) = (0.0f64, 0.0f64, 0.0f64);
+    for (&u, &v) in ub.iter().zip(vb) {
+        let (u, v) = (u as f64, v as f64);
+        c_uu += u * u;
+        c_uv += u * v;
+        c_vv += v * v;
+    }
+    let (a, b, c, d) = (1.0 - c_uu, c_uv, -c_uv, 1.0 + c_vv);
+    let det = a * d - b * c;
+    ensure!(
+        det.abs() > 1e-9,
+        "relaxed reflection block is numerically singular (û ⊥ v̂): cannot unmerge"
+    );
+    Ok((a, b, c, d, det))
+}
+
+/// Inverse of the left relaxed reflection over a full `d×f` slice pair:
+/// `out = (I − ûûᵀ + v̂v̂ᵀ)⁻¹ merged`, per block (pre-normalized û, v̂).
+fn ether_plus_left_uninto(
+    uh: &[f32],
+    vh: &[f32],
+    n: usize,
+    merged: &[f32],
+    f: usize,
+    out: &mut [f32],
+) -> Result<()> {
+    let d = uh.len();
+    let db = d / n;
+    debug_assert_eq!(merged.len(), d * f);
+    debug_assert_eq!(out.len(), merged.len());
+    let mut pu = vec![0.0f64; f];
+    let mut pv = vec![0.0f64; f];
+    for b in 0..n {
+        let ub = &uh[b * db..(b + 1) * db];
+        let vb = &vh[b * db..(b + 1) * db];
+        let (a, bq, c2, d2, det) = woodbury_2x2(ub, vb)?;
+        pu.fill(0.0);
+        pv.fill(0.0);
+        for r in 0..db {
+            let row = &merged[(b * db + r) * f..(b * db + r + 1) * f];
+            let (u, v) = (ub[r] as f64, vb[r] as f64);
+            for c in 0..f {
+                pu[c] += u * row[c] as f64;
+                pv[c] += v * row[c] as f64;
+            }
+        }
+        // Solve M [s0 s1]ᵀ = [pu pv]ᵀ per column; y = m + û s0 − v̂ s1.
+        for c in 0..f {
+            let s0 = (d2 * pu[c] - bq * pv[c]) / det;
+            let s1 = (-c2 * pu[c] + a * pv[c]) / det;
+            pu[c] = s0;
+            pv[c] = s1;
+        }
+        for r in 0..db {
+            let off = (b * db + r) * f;
+            let (u, v) = (ub[r] as f64, vb[r] as f64);
+            for c in 0..f {
+                out[off + c] = (merged[off + c] as f64 + u * pu[c] - v * pv[c]) as f32;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Inverse of the right relaxed reflection, in place over contiguous
+/// rows (column blocks of width `f / n`; pre-normalized û, v̂).
+fn ether_plus_right_uninto(
+    rows: &mut [f32],
+    f: usize,
+    uh: &[f32],
+    vh: &[f32],
+    n: usize,
+) -> Result<()> {
+    debug_assert_eq!(rows.len() % f, 0);
+    let fb = f / n;
+    let mut coefs = Vec::with_capacity(n);
+    for b in 0..n {
+        coefs.push(woodbury_2x2(&uh[b * fb..(b + 1) * fb], &vh[b * fb..(b + 1) * fb])?);
+    }
+    for row in rows.chunks_mut(f) {
+        for (b, &(a, bq, c2, d2, det)) in coefs.iter().enumerate() {
+            let seg = &mut row[b * fb..(b + 1) * fb];
+            let ub = &uh[b * fb..(b + 1) * fb];
+            let vb = &vh[b * fb..(b + 1) * fb];
+            let (mut pu, mut pv) = (0.0f64, 0.0f64);
+            for c in 0..fb {
+                pu += seg[c] as f64 * ub[c] as f64;
+                pv += seg[c] as f64 * vb[c] as f64;
+            }
+            let s0 = (d2 * pu - bq * pv) / det;
+            let s1 = (-c2 * pu + a * pv) / det;
+            for c in 0..fb {
+                seg[c] = (seg[c] as f64 + s0 * ub[c] as f64 - s1 * vb[c] as f64) as f32;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// DeLoRA's strength-scaled column normalization folded into `A`:
+/// `scaled_a[:, t] = a[:, t] · sign·λ / (r · (‖a_t‖·‖b_t‖ + ε))`, so the
+/// additive update `ΔW = scaled_a · b` matches
+/// `(λ/r) Σ_t (a_t b_tᵀ)/(‖a_t‖‖b_t‖)`. Norms accumulate in f64 in a
+/// fixed order, so the scaling is bit-deterministic.
+fn delora_scaled_a(
+    a: &[f32],
+    b: &[f32],
+    lambda: f32,
+    d: usize,
+    r: usize,
+    f: usize,
+    sign: f64,
+) -> Vec<f32> {
+    let mut coef = vec![0.0f64; r];
+    for (t, ct) in coef.iter_mut().enumerate() {
+        let mut na = 0.0f64;
+        for i in 0..d {
+            let x = a[i * r + t] as f64;
+            na += x * x;
+        }
+        let mut nb = 0.0f64;
+        for c in 0..f {
+            let x = b[t * f + c] as f64;
+            nb += x * x;
+        }
+        *ct = sign * lambda as f64 / (r as f64 * (na.sqrt() * nb.sqrt() + tf::NORM_EPS));
+    }
+    let mut out = vec![0.0f32; a.len()];
+    for i in 0..d {
+        for t in 0..r {
+            out[i * r + t] = (a[i * r + t] as f64 * coef[t]) as f32;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// The family.
+// ---------------------------------------------------------------------------
+
+/// ETHER: block-diagonal hyperplane reflections (paper Eq. 1, §3.4).
+pub struct EtherOp;
+
+impl TransformOp for EtherOp {
+    fn kind(&self) -> MethodKind {
+        MethodKind::Ether
+    }
+
+    fn token(&self) -> &'static str {
+        "ether"
+    }
+
+    fn arity(&self) -> Arity {
+        Arity::Blocks
+    }
+
+    fn spec_name(&self, spec: &MethodSpec) -> String {
+        format!("ether_n{}", spec.n_blocks)
+    }
+
+    fn is_multiplicative(&self) -> bool {
+        true
+    }
+
+    /// Reflections are involutory: `H·H = I` (§3.2), so unmerge is a
+    /// second application of the same kernel.
+    fn supports_unmerge(&self) -> bool {
+        true
+    }
+
+    fn param_schema(&self, spec: &MethodSpec, d: usize, _f: usize) -> Vec<(&'static str, Vec<usize>)> {
+        vec![("u", vec![spec.n_blocks, d / spec.n_blocks])]
+    }
+
+    fn apply_blocked(&self, spec: &MethodSpec, p: &ResolvedParams, w: &Mat) -> Result<Mat> {
+        Ok(tf::ether_apply(p.get("u"), spec.n_blocks, w))
+    }
+
+    fn apply_serial(&self, spec: &MethodSpec, p: &ResolvedParams, w: &Mat) -> Result<Mat> {
+        Ok(tf::ether_apply_serial(p.get("u"), spec.n_blocks, w))
+    }
+
+    fn apply_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        src: &[f32],
+        _d: usize,
+        f: usize,
+        out: &mut [f32],
+    ) {
+        let uh = tf::normalize_blocks(p.get("u"), spec.n_blocks);
+        tf::ether_into(&uh, spec.n_blocks, src, f, out);
+    }
+
+    fn unmerge_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        merged: &[f32],
+        d: usize,
+        f: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        self.apply_into(spec, p, merged, d, f, out);
+        Ok(())
+    }
+}
+
+/// ETHER+: relaxed one- or two-sided reflections `I − ûûᵀ + v̂v̂ᵀ` (§3.3).
+pub struct EtherPlusOp;
+
+impl TransformOp for EtherPlusOp {
+    fn kind(&self) -> MethodKind {
+        MethodKind::EtherPlus
+    }
+
+    fn token(&self) -> &'static str {
+        "etherplus"
+    }
+
+    fn arity(&self) -> Arity {
+        Arity::Blocks
+    }
+
+    fn spec_name(&self, spec: &MethodSpec) -> String {
+        format!("etherplus_n{}{}", spec.n_blocks, if spec.sides == 1 { "_1s" } else { "" })
+    }
+
+    fn is_multiplicative(&self) -> bool {
+        true
+    }
+
+    /// Invertible through the rank-2 Woodbury identity (per block), as
+    /// long as û is not orthogonal to v̂.
+    fn supports_unmerge(&self) -> bool {
+        true
+    }
+
+    fn param_schema(&self, spec: &MethodSpec, d: usize, f: usize) -> Vec<(&'static str, Vec<usize>)> {
+        let n = spec.n_blocks;
+        let mut fields = vec![("u", vec![n, d / n]), ("v", vec![n, d / n])];
+        if spec.sides == 2 {
+            fields.push(("ru", vec![n, f / n]));
+            fields.push(("rv", vec![n, f / n]));
+        }
+        fields
+    }
+
+    fn validate(&self, spec: &MethodSpec, mat: &str, d: usize, f: usize) -> Result<()> {
+        ensure!(
+            spec.n_blocks > 0 && d % spec.n_blocks == 0,
+            "{mat}: n_blocks={} must divide rows {d}",
+            spec.n_blocks
+        );
+        if spec.sides == 2 {
+            ensure!(
+                f % spec.n_blocks == 0,
+                "{mat}: n_blocks={} must divide cols {f}",
+                spec.n_blocks
+            );
+        }
+        Ok(())
+    }
+
+    fn apply_blocked(&self, spec: &MethodSpec, p: &ResolvedParams, w: &Mat) -> Result<Mat> {
+        let n = spec.n_blocks;
+        let mut out = tf::ether_plus_left(p.get("u"), p.get("v"), n, w);
+        if spec.sides == 2 {
+            out = tf::ether_plus_right(&out, p.get("ru"), p.get("rv"), n);
+        }
+        Ok(out)
+    }
+
+    fn apply_serial(&self, spec: &MethodSpec, p: &ResolvedParams, w: &Mat) -> Result<Mat> {
+        let n = spec.n_blocks;
+        let mut out = tf::ether_plus_left_serial(p.get("u"), p.get("v"), n, w);
+        if spec.sides == 2 {
+            out = tf::ether_plus_right_serial(&out, p.get("ru"), p.get("rv"), n);
+        }
+        Ok(out)
+    }
+
+    fn apply_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        src: &[f32],
+        _d: usize,
+        f: usize,
+        out: &mut [f32],
+    ) {
+        let n = spec.n_blocks;
+        let uh = tf::normalize_blocks(p.get("u"), n);
+        let vh = tf::normalize_blocks(p.get("v"), n);
+        tf::ether_plus_left_into(&uh, &vh, n, src, f, out);
+        if spec.sides == 2 {
+            let ruh = tf::normalize_blocks(p.get("ru"), n);
+            let rvh = tf::normalize_blocks(p.get("rv"), n);
+            tf::ether_plus_right_rows(out, f, &ruh, &rvh, n);
+        }
+    }
+
+    fn unmerge_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        merged: &[f32],
+        _d: usize,
+        f: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let n = spec.n_blocks;
+        let uh = tf::normalize_blocks(p.get("u"), n);
+        let vh = tf::normalize_blocks(p.get("v"), n);
+        if spec.sides == 2 {
+            // Merge applied left then right, so unmerge peels the right
+            // factor first, then the left.
+            let mut tmp = merged.to_vec();
+            let ruh = tf::normalize_blocks(p.get("ru"), n);
+            let rvh = tf::normalize_blocks(p.get("rv"), n);
+            ether_plus_right_uninto(&mut tmp, f, &ruh, &rvh, n)?;
+            ether_plus_left_uninto(&uh, &vh, n, &tmp, f, out)
+        } else {
+            ether_plus_left_uninto(&uh, &vh, n, merged, f, out)
+        }
+    }
+
+    /// Fig. 4 convention: the left factor's distance on `I_d` plus (for
+    /// two-sided specs) the right factor's distance on `I_f`.
+    fn distance_sq(&self, spec: &MethodSpec, p: &ResolvedParams, d: usize, f: usize) -> Result<f64> {
+        let n = spec.n_blocks;
+        let left = tf::ether_plus_left(p.get("u"), p.get("v"), n, &Mat::eye(d));
+        let mut acc = left.dist_from_identity().powi(2);
+        if spec.sides == 2 {
+            let right = tf::ether_plus_right(&Mat::eye(f), p.get("ru"), p.get("rv"), n);
+            acc += right.dist_from_identity().powi(2);
+        }
+        Ok(acc)
+    }
+}
+
+/// OFT: block-diagonal Cayley-orthogonal multipliers, optionally with
+/// magnitude refitting.
+pub struct OftOp;
+
+impl TransformOp for OftOp {
+    fn kind(&self) -> MethodKind {
+        MethodKind::Oft
+    }
+
+    fn token(&self) -> &'static str {
+        "oft"
+    }
+
+    fn arity(&self) -> Arity {
+        Arity::Blocks
+    }
+
+    fn spec_name(&self, spec: &MethodSpec) -> String {
+        format!("oft_n{}{}", spec.n_blocks, if spec.magnitude_refit { "_mrf" } else { "" })
+    }
+
+    fn is_multiplicative(&self) -> bool {
+        true
+    }
+
+    /// Cayley blocks are orthogonal, so the inverse is the transpose.
+    fn supports_unmerge(&self) -> bool {
+        true
+    }
+
+    fn param_schema(&self, spec: &MethodSpec, d: usize, f: usize) -> Vec<(&'static str, Vec<usize>)> {
+        let n = spec.n_blocks;
+        let k = d / n;
+        let mut fields = vec![("r", vec![n, k, k])];
+        if spec.magnitude_refit {
+            fields.push(("mag", vec![f]));
+        }
+        fields
+    }
+
+    fn apply_blocked(&self, spec: &MethodSpec, p: &ResolvedParams, w: &Mat) -> Result<Mat> {
+        let blocks = tf::cayley_blocks(p.get("r"), spec.n_blocks, w.rows / spec.n_blocks);
+        let scale = if spec.magnitude_refit { Some(p.get("mag")) } else { None };
+        Ok(tf::bdmm_scaled(&blocks, w, scale))
+    }
+
+    fn apply_serial(&self, spec: &MethodSpec, p: &ResolvedParams, w: &Mat) -> Result<Mat> {
+        let blocks = tf::cayley_blocks(p.get("r"), spec.n_blocks, w.rows / spec.n_blocks);
+        let mut out = tf::bdmm_serial(&blocks, w);
+        if spec.magnitude_refit {
+            let mag = p.get("mag");
+            for r in 0..out.rows {
+                let row = out.row_mut(r);
+                for (c, x) in row.iter_mut().enumerate() {
+                    *x *= 1.0 + mag[c];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn apply_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        src: &[f32],
+        d: usize,
+        f: usize,
+        out: &mut [f32],
+    ) {
+        let blocks = tf::cayley_blocks(p.get("r"), spec.n_blocks, d / spec.n_blocks);
+        let scale = if spec.magnitude_refit { Some(p.get("mag")) } else { None };
+        tf::bdmm_into(&blocks, src, f, scale, out);
+    }
+
+    fn unmerge_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        merged: &[f32],
+        d: usize,
+        f: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let blocks = tf::cayley_blocks(p.get("r"), spec.n_blocks, d / spec.n_blocks);
+        let qt: Vec<Mat> = blocks.iter().map(Mat::transpose).collect();
+        if spec.magnitude_refit {
+            let mag = p.get("mag");
+            for (c, &m) in mag.iter().enumerate() {
+                ensure!(
+                    (1.0 + m).abs() > 1e-6,
+                    "magnitude refit zeroed column {c} (1 + mag ≈ 0): cannot unmerge"
+                );
+            }
+            let mut tmp = vec![0.0f32; merged.len()];
+            for r in 0..d {
+                for c in 0..f {
+                    tmp[r * f + c] = merged[r * f + c] / (1.0 + mag[c]);
+                }
+            }
+            tf::bdmm_into(&qt, &tmp, f, None, out);
+        } else {
+            tf::bdmm_into(&qt, merged, f, None, out);
+        }
+        Ok(())
+    }
+}
+
+/// Naive: unconstrained block-diagonal multipliers `I + R` (§5.3).
+pub struct NaiveOp;
+
+impl TransformOp for NaiveOp {
+    fn kind(&self) -> MethodKind {
+        MethodKind::Naive
+    }
+
+    fn token(&self) -> &'static str {
+        "naive"
+    }
+
+    fn arity(&self) -> Arity {
+        Arity::Blocks
+    }
+
+    fn spec_name(&self, spec: &MethodSpec) -> String {
+        format!("naive_n{}", spec.n_blocks)
+    }
+
+    fn is_multiplicative(&self) -> bool {
+        true
+    }
+
+    /// Invertible whenever every `I + R` block is non-singular.
+    fn supports_unmerge(&self) -> bool {
+        true
+    }
+
+    fn param_schema(&self, spec: &MethodSpec, d: usize, _f: usize) -> Vec<(&'static str, Vec<usize>)> {
+        let n = spec.n_blocks;
+        let k = d / n;
+        vec![("r", vec![n, k, k])]
+    }
+
+    fn apply_blocked(&self, spec: &MethodSpec, p: &ResolvedParams, w: &Mat) -> Result<Mat> {
+        let blocks = tf::naive_blocks(p.get("r"), spec.n_blocks, w.rows / spec.n_blocks);
+        Ok(tf::bdmm(&blocks, w))
+    }
+
+    fn apply_serial(&self, spec: &MethodSpec, p: &ResolvedParams, w: &Mat) -> Result<Mat> {
+        let blocks = tf::naive_blocks(p.get("r"), spec.n_blocks, w.rows / spec.n_blocks);
+        Ok(tf::bdmm_serial(&blocks, w))
+    }
+
+    fn apply_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        src: &[f32],
+        d: usize,
+        f: usize,
+        out: &mut [f32],
+    ) {
+        let blocks = tf::naive_blocks(p.get("r"), spec.n_blocks, d / spec.n_blocks);
+        tf::bdmm_into(&blocks, src, f, None, out);
+    }
+
+    fn unmerge_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        merged: &[f32],
+        d: usize,
+        f: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let blocks = tf::naive_blocks(p.get("r"), spec.n_blocks, d / spec.n_blocks);
+        let inv: Vec<Mat> = blocks
+            .iter()
+            .map(solve::gauss_jordan_inv)
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| anyhow!("naive block I + R is singular: cannot unmerge"))?;
+        tf::bdmm_into(&inv, merged, f, None, out);
+        Ok(())
+    }
+}
+
+/// LoRA: additive low-rank update `W + A B`.
+pub struct LoraOp;
+
+impl TransformOp for LoraOp {
+    fn kind(&self) -> MethodKind {
+        MethodKind::Lora
+    }
+
+    fn token(&self) -> &'static str {
+        "lora"
+    }
+
+    fn arity(&self) -> Arity {
+        Arity::Rank
+    }
+
+    fn spec_name(&self, spec: &MethodSpec) -> String {
+        format!("lora_r{}", spec.rank)
+    }
+
+    /// Additive updates invert exactly by subtraction.
+    fn supports_unmerge(&self) -> bool {
+        true
+    }
+
+    fn param_schema(&self, spec: &MethodSpec, d: usize, f: usize) -> Vec<(&'static str, Vec<usize>)> {
+        vec![("a", vec![d, spec.rank]), ("b", vec![spec.rank, f])]
+    }
+
+    fn validate(&self, spec: &MethodSpec, mat: &str, _d: usize, _f: usize) -> Result<()> {
+        ensure!(spec.rank > 0, "{mat}: lora rank must be > 0");
+        Ok(())
+    }
+
+    fn apply_blocked(&self, spec: &MethodSpec, p: &ResolvedParams, w: &Mat) -> Result<Mat> {
+        let a = Mat::from_vec(w.rows, spec.rank, p.get("a").to_vec());
+        let b = Mat::from_vec(spec.rank, w.cols, p.get("b").to_vec());
+        Ok(tf::lora_apply(&a, &b, w))
+    }
+
+    fn apply_serial(&self, spec: &MethodSpec, p: &ResolvedParams, w: &Mat) -> Result<Mat> {
+        self.apply_blocked(spec, p, w)
+    }
+
+    fn apply_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        src: &[f32],
+        d: usize,
+        f: usize,
+        out: &mut [f32],
+    ) {
+        tf::lora_into(p.get("a"), p.get("b"), src, d, spec.rank, f, out);
+    }
+
+    fn unmerge_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        merged: &[f32],
+        d: usize,
+        f: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let neg_a: Vec<f32> = p.get("a").iter().map(|x| -x).collect();
+        tf::lora_into(&neg_a, p.get("b"), merged, d, spec.rank, f, out);
+        Ok(())
+    }
+}
+
+/// VeRA: shared frozen random projections with tiny trainable scalings.
+/// Host-mergeable: no — the frozen projections are jax-seeded HLO
+/// constants the host cannot reproduce bit-exactly.
+pub struct VeraOp;
+
+impl TransformOp for VeraOp {
+    fn kind(&self) -> MethodKind {
+        MethodKind::Vera
+    }
+
+    fn token(&self) -> &'static str {
+        "vera"
+    }
+
+    fn arity(&self) -> Arity {
+        Arity::Rank
+    }
+
+    fn spec_name(&self, spec: &MethodSpec) -> String {
+        format!("vera_r{}", spec.rank)
+    }
+
+    fn host_mergeable(&self) -> bool {
+        false
+    }
+
+    fn param_schema(&self, spec: &MethodSpec, _d: usize, f: usize) -> Vec<(&'static str, Vec<usize>)> {
+        vec![("dv", vec![spec.rank]), ("bv", vec![f])]
+    }
+
+    fn validate(&self, spec: &MethodSpec, mat: &str, _d: usize, _f: usize) -> Result<()> {
+        ensure!(spec.rank > 0, "{mat}: vera rank must be > 0");
+        Ok(())
+    }
+
+    fn apply_blocked(&self, _spec: &MethodSpec, _p: &ResolvedParams, _w: &Mat) -> Result<Mat> {
+        bail!("host merge unsupported for vera (use the merge artifact)")
+    }
+
+    fn apply_serial(&self, spec: &MethodSpec, p: &ResolvedParams, w: &Mat) -> Result<Mat> {
+        self.apply_blocked(spec, p, w)
+    }
+
+    fn apply_into(
+        &self,
+        _spec: &MethodSpec,
+        _p: &ResolvedParams,
+        _src: &[f32],
+        _d: usize,
+        _f: usize,
+        _out: &mut [f32],
+    ) {
+        unreachable!("vera is rejected by host_mergeable() before any plan sweep")
+    }
+}
+
+/// DeLoRA-style normalized low-rank update with a decoupled strength:
+/// `W + (λ/r) Σ_t (a_t b_tᵀ) / (‖a_t‖‖b_t‖)` — the update's direction
+/// (column/row-normalized dyads) and magnitude (the scalar λ) are
+/// learned independently, which bounds the weight change like ETHER's
+/// reflections bound theirs. Host-only family member added through the
+/// registry; the worked example of the one-file extension path.
+pub struct DeloraOp;
+
+impl TransformOp for DeloraOp {
+    fn kind(&self) -> MethodKind {
+        MethodKind::Delora
+    }
+
+    fn token(&self) -> &'static str {
+        "delora"
+    }
+
+    fn arity(&self) -> Arity {
+        Arity::Rank
+    }
+
+    fn spec_name(&self, spec: &MethodSpec) -> String {
+        format!("delora_r{}", spec.rank)
+    }
+
+    /// Additive updates invert exactly by subtraction.
+    fn supports_unmerge(&self) -> bool {
+        true
+    }
+
+    fn param_schema(&self, spec: &MethodSpec, d: usize, f: usize) -> Vec<(&'static str, Vec<usize>)> {
+        vec![("a", vec![d, spec.rank]), ("b", vec![spec.rank, f]), ("lambda", vec![1])]
+    }
+
+    fn validate(&self, spec: &MethodSpec, mat: &str, _d: usize, _f: usize) -> Result<()> {
+        ensure!(spec.rank > 0, "{mat}: delora rank must be > 0");
+        Ok(())
+    }
+
+    fn apply_blocked(&self, spec: &MethodSpec, p: &ResolvedParams, w: &Mat) -> Result<Mat> {
+        let (d, f, r) = (w.rows, w.cols, spec.rank);
+        let sa = delora_scaled_a(p.get("a"), p.get("b"), p.get("lambda")[0], d, r, f, 1.0);
+        let a = Mat::from_vec(d, r, sa);
+        let b = Mat::from_vec(r, f, p.get("b").to_vec());
+        Ok(tf::lora_apply(&a, &b, w))
+    }
+
+    fn apply_serial(&self, spec: &MethodSpec, p: &ResolvedParams, w: &Mat) -> Result<Mat> {
+        self.apply_blocked(spec, p, w)
+    }
+
+    fn apply_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        src: &[f32],
+        d: usize,
+        f: usize,
+        out: &mut [f32],
+    ) {
+        let r = spec.rank;
+        let sa = delora_scaled_a(p.get("a"), p.get("b"), p.get("lambda")[0], d, r, f, 1.0);
+        tf::lora_into(&sa, p.get("b"), src, d, r, f, out);
+    }
+
+    fn unmerge_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        merged: &[f32],
+        d: usize,
+        f: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let r = spec.rank;
+        let sa = delora_scaled_a(p.get("a"), p.get("b"), p.get("lambda")[0], d, r, f, -1.0);
+        tf::lora_into(&sa, p.get("b"), merged, d, r, f, out);
+        Ok(())
+    }
+}
+
+/// Full finetuning: the adapter *is* the replacement weight matrix.
+pub struct FullOp;
+
+impl TransformOp for FullOp {
+    fn kind(&self) -> MethodKind {
+        MethodKind::Full
+    }
+
+    fn token(&self) -> &'static str {
+        "full"
+    }
+
+    fn arity(&self) -> Arity {
+        Arity::Fixed
+    }
+
+    fn spec_name(&self, _spec: &MethodSpec) -> String {
+        "full".into()
+    }
+
+    fn param_schema(&self, _spec: &MethodSpec, d: usize, f: usize) -> Vec<(&'static str, Vec<usize>)> {
+        vec![("w", vec![d, f])]
+    }
+
+    fn apply_blocked(&self, _spec: &MethodSpec, p: &ResolvedParams, w: &Mat) -> Result<Mat> {
+        Ok(Mat::from_vec(w.rows, w.cols, p.get("w").to_vec()))
+    }
+
+    fn apply_serial(&self, spec: &MethodSpec, p: &ResolvedParams, w: &Mat) -> Result<Mat> {
+        self.apply_blocked(spec, p, w)
+    }
+
+    fn apply_into(
+        &self,
+        _spec: &MethodSpec,
+        p: &ResolvedParams,
+        _src: &[f32],
+        _d: usize,
+        _f: usize,
+        out: &mut [f32],
+    ) {
+        out.copy_from_slice(p.get("w"));
+    }
+}
+
+/// `none`: the frozen base model — merge is a pass-through.
+pub struct NoneOp;
+
+impl TransformOp for NoneOp {
+    fn kind(&self) -> MethodKind {
+        MethodKind::None
+    }
+
+    fn token(&self) -> &'static str {
+        "none"
+    }
+
+    fn arity(&self) -> Arity {
+        Arity::Fixed
+    }
+
+    fn spec_name(&self, _spec: &MethodSpec) -> String {
+        "none".into()
+    }
+
+    fn is_identity(&self) -> bool {
+        true
+    }
+
+    /// The identity is trivially its own inverse.
+    fn supports_unmerge(&self) -> bool {
+        true
+    }
+
+    fn param_schema(&self, _spec: &MethodSpec, _d: usize, _f: usize) -> Vec<(&'static str, Vec<usize>)> {
+        vec![]
+    }
+
+    fn apply_blocked(&self, _spec: &MethodSpec, _p: &ResolvedParams, w: &Mat) -> Result<Mat> {
+        Ok(w.clone())
+    }
+
+    fn apply_serial(&self, _spec: &MethodSpec, _p: &ResolvedParams, w: &Mat) -> Result<Mat> {
+        Ok(w.clone())
+    }
+
+    fn apply_into(
+        &self,
+        _spec: &MethodSpec,
+        _p: &ResolvedParams,
+        src: &[f32],
+        _d: usize,
+        _f: usize,
+        out: &mut [f32],
+    ) {
+        out.copy_from_slice(src);
+    }
+
+    fn unmerge_into(
+        &self,
+        _spec: &MethodSpec,
+        _p: &ResolvedParams,
+        merged: &[f32],
+        _d: usize,
+        _f: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        out.copy_from_slice(merged);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn params_for<'a>(fields: Vec<(&'static str, &'a [f32])>) -> ResolvedParams<'a> {
+        ResolvedParams { fields }
+    }
+
+    #[test]
+    fn woodbury_inverts_relaxed_reflection() {
+        // y = (I − ûûᵀ + v̂v̂ᵀ) x, then the Woodbury solve recovers x.
+        let mut rng = Rng::new(3);
+        let (d, f, n) = (16, 5, 2);
+        let u = tf::normalize_blocks(&rng.normal_vec(d, 1.0), n);
+        let mut v = tf::normalize_blocks(&rng.normal_vec(d, 1.0), n);
+        // Keep û·v̂ away from zero so every block stays invertible.
+        for (vi, ui) in v.iter_mut().zip(&u) {
+            *vi = 0.7 * *vi + 0.7 * *ui;
+        }
+        let v = tf::normalize_blocks(&v, n);
+        let x: Vec<f32> = rng.normal_vec(d * f, 1.0);
+        let mut y = vec![0.0f32; d * f];
+        tf::ether_plus_left_into(&u, &v, n, &x, f, &mut y);
+        let mut back = vec![0.0f32; d * f];
+        ether_plus_left_uninto(&u, &v, n, &y, f, &mut back).unwrap();
+        let err = x.iter().zip(&back).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(err < 1e-5, "woodbury roundtrip error {err}");
+    }
+
+    #[test]
+    fn woodbury_rejects_orthogonal_pair() {
+        // û ⊥ v̂ makes the relaxed reflection singular (H⁺û = 0).
+        let u = [1.0f32, 0.0, 0.0, 0.0];
+        let v = [0.0f32, 1.0, 0.0, 0.0];
+        assert!(woodbury_2x2(&u, &v).is_err());
+    }
+
+    #[test]
+    fn delora_update_is_normalized_and_signed() {
+        let mut rng = Rng::new(9);
+        let (d, r, f) = (8, 2, 6);
+        let a: Vec<f32> = rng.normal_vec(d * r, 1.0);
+        let b: Vec<f32> = rng.normal_vec(r * f, 1.0);
+        let sa = delora_scaled_a(&a, &b, 2.0, d, r, f, 1.0);
+        let nsa = delora_scaled_a(&a, &b, 2.0, d, r, f, -1.0);
+        for (x, y) in sa.iter().zip(&nsa) {
+            assert_eq!(*x, -*y);
+        }
+        // ‖scaled_a_t‖·‖b_t‖ == λ/r for every component.
+        for t in 0..r {
+            let na: f64 = (0..d).map(|i| (sa[i * r + t] as f64).powi(2)).sum::<f64>().sqrt();
+            let nb: f64 = (0..f).map(|c| (b[t * f + c] as f64).powi(2)).sum::<f64>().sqrt();
+            assert!((na * nb - 2.0 / r as f64).abs() < 1e-6, "component {t}: {}", na * nb);
+        }
+    }
+
+    #[test]
+    fn delora_roundtrip_subtracts_exactly_enough() {
+        let mut rng = Rng::new(11);
+        let (d, r, f) = (12, 3, 7);
+        let spec = MethodSpec::parse("delora_r3").unwrap();
+        let a: Vec<f32> = rng.normal_vec(d * r, 0.5);
+        let b: Vec<f32> = rng.normal_vec(r * f, 0.5);
+        let lambda = [0.8f32];
+        let w: Vec<f32> = rng.normal_vec(d * f, 0.1);
+        let p = params_for(vec![("a", &a[..]), ("b", &b[..]), ("lambda", &lambda[..])]);
+        let mut merged = vec![0.0f32; d * f];
+        DeloraOp.apply_into(&spec, &p, &w, d, f, &mut merged);
+        let moved = w.iter().zip(&merged).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+        assert!(moved > 1e-4, "delora update did nothing");
+        let mut back = vec![0.0f32; d * f];
+        DeloraOp.unmerge_into(&spec, &p, &merged, d, f, &mut back).unwrap();
+        let err = w.iter().zip(&back).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+        assert!(err < 1e-5, "delora unmerge error {err}");
+    }
+}

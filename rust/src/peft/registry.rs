@@ -1,0 +1,71 @@
+//! Transform registry: the **single** `MethodKind` dispatch site.
+//!
+//! Everything else in the crate reaches a method's behaviour through
+//! [`op_for`] (or [`by_token`] when parsing names); per-method `match`
+//! arms are confined to this module and the trait impls in
+//! [`crate::peft::op`]. The `match` in [`op_for`] is exhaustive, so
+//! adding a [`MethodKind`] variant without registering its op is a
+//! compile error — the property `rust/tests/op_registry_props.rs` locks
+//! in from the outside.
+
+use crate::peft::op::{
+    DeloraOp, EtherOp, EtherPlusOp, FullOp, LoraOp, NaiveOp, NoneOp, OftOp, TransformOp, VeraOp,
+};
+use crate::peft::MethodKind;
+
+/// Every registered family member, in canonical (parse-priority) order.
+pub const ALL_KINDS: [MethodKind; 9] = [
+    MethodKind::Ether,
+    MethodKind::EtherPlus,
+    MethodKind::Oft,
+    MethodKind::Naive,
+    MethodKind::Lora,
+    MethodKind::Vera,
+    MethodKind::Delora,
+    MethodKind::Full,
+    MethodKind::None,
+];
+
+/// Look up the transform op implementing `kind`. The one canonical
+/// per-method dispatch in the crate.
+pub fn op_for(kind: MethodKind) -> &'static dyn TransformOp {
+    match kind {
+        MethodKind::Ether => &EtherOp,
+        MethodKind::EtherPlus => &EtherPlusOp,
+        MethodKind::Oft => &OftOp,
+        MethodKind::Naive => &NaiveOp,
+        MethodKind::Lora => &LoraOp,
+        MethodKind::Vera => &VeraOp,
+        MethodKind::Delora => &DeloraOp,
+        MethodKind::Full => &FullOp,
+        MethodKind::None => &NoneOp,
+    }
+}
+
+/// Look up an op by its name token (`"ether"`, `"lora"`, …).
+pub fn by_token(token: &str) -> Option<&'static dyn TransformOp> {
+    ALL_KINDS.iter().map(|&k| op_for(k)).find(|op| op.token() == token)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_kind_registers_its_own_op() {
+        for &kind in ALL_KINDS.iter() {
+            let op = op_for(kind);
+            assert_eq!(op.kind(), kind, "{:?}", kind);
+            let again = by_token(op.token()).expect("token lookup");
+            assert_eq!(again.kind(), kind);
+        }
+    }
+
+    #[test]
+    fn tokens_are_unique() {
+        let mut tokens: Vec<&str> = ALL_KINDS.iter().map(|&k| op_for(k).token()).collect();
+        tokens.sort_unstable();
+        tokens.dedup();
+        assert_eq!(tokens.len(), ALL_KINDS.len());
+    }
+}

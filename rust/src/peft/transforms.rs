@@ -44,8 +44,19 @@ pub fn normalize(u: &[f32]) -> Vec<f32> {
 }
 
 /// Normalize all `n` blocks of `u` in one pass (blocks tile `u` evenly).
+///
+/// Hard-asserts the tiling in release builds too: a malformed adapter
+/// vector must fail loudly here rather than silently mis-blocking the
+/// reflection (the old `debug_assert` let release builds normalize
+/// against truncated blocks). Upstream schema validation makes this
+/// unreachable from the public merge paths.
 pub(crate) fn normalize_blocks(u: &[f32], n: usize) -> Vec<f32> {
-    debug_assert_eq!(u.len() % n, 0);
+    assert!(n > 0, "normalize_blocks: n must be > 0");
+    assert!(
+        u.len() % n == 0,
+        "normalize_blocks: {} parameters do not tile into {n} blocks",
+        u.len()
+    );
     let db = u.len() / n;
     let mut out = Vec::with_capacity(u.len());
     for b in 0..n {
@@ -681,6 +692,12 @@ mod tests {
         let fast = bdmm(&blocks, &w);
         let dense = blockdiag_dense(&blocks).matmul(&w);
         assert!(fast.max_abs_diff(&dense) < 1e-5);
+    }
+
+    #[test]
+    #[should_panic(expected = "do not tile")]
+    fn normalize_blocks_rejects_non_tiling_input_in_release_too() {
+        let _ = normalize_blocks(&[1.0; 10], 3);
     }
 
     #[test]

@@ -208,6 +208,32 @@ impl Manifest {
             .collect())
     }
 
+    /// Cross-check a manifest-declared PEFT layout against the layout
+    /// the host registry derives from the method's
+    /// `TransformOp::param_schema` — the schema is the single source of
+    /// truth, so an artifact manifest that disagrees on the flat-vector
+    /// size was built against a different parameterization and must not
+    /// be merged on the host. (Entry *names* may differ between the
+    /// Python packer and the host convention; totals may not.)
+    pub fn validate_peft_layout(&self, method: &str, cfg: &str) -> Result<()> {
+        let spec = crate::peft::MethodSpec::parse(method)?;
+        let dims = self.config(cfg)?.dims();
+        let want = crate::peft::apply::peft_layout_for(dims, &spec);
+        let got = self.peft_layout(method, cfg)?;
+        anyhow::ensure!(
+            got.total == want.total,
+            "manifest peft layout for {method}/{cfg} holds {} params, \
+             but the {} schema derives {} for d_model={} d_ff={} n_layers={}",
+            got.total,
+            method,
+            want.total,
+            dims.d_model,
+            dims.d_ff,
+            dims.n_layers
+        );
+        Ok(())
+    }
+
     /// Trainable-vector size the artifacts expect for (method, cfg):
     /// max(count, 1) — 'none' still crosses as a 1-element placeholder.
     pub fn peft_vec_size(&self, method: &str, cfg: &str) -> Result<usize> {
@@ -267,5 +293,18 @@ mod tests {
         assert_eq!(m.load_init("t_base").unwrap(), vec![1.0, 2.0, 3.0]);
         assert_eq!(m.peft_vec_size("none", "t").unwrap(), 1);
         assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn schema_validation_catches_layout_drift() {
+        // The fixture's ether_n4 layout holds 6 params, but the schema
+        // for cfg `t` (d=8, ff=16, L=1) derives 5·8 + 16 = 56 — the
+        // cross-check must flag the disagreement.
+        let m = Manifest::load(&fixture_dir()).unwrap();
+        let err = m.validate_peft_layout("ether_n4", "t").unwrap_err();
+        assert!(format!("{err:#}").contains("schema"), "{err:#}");
+        // Unknown methods/configs surface their own errors.
+        assert!(m.validate_peft_layout("bogus_x1", "t").is_err());
+        assert!(m.validate_peft_layout("ether_n4", "nope").is_err());
     }
 }

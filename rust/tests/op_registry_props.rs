@@ -1,0 +1,204 @@
+//! Property tests for the `TransformOp` trait API and its registry.
+//!
+//! Locks in the three contract properties of the redesign from outside
+//! the crate:
+//!
+//! 1. every registered op's `param_schema` is the single source of truth
+//!    — `count_params` and the schema-derived flat `Layout` agree exactly
+//!    for every method and model shape;
+//! 2. ETHER's unmerge is the paper's involution (H·H = I, §3.2):
+//!    `unmerge(merge(W)) == W` to ≤ 1e-5 max-abs, and the unmerge sweep
+//!    is bit-identical for every thread count;
+//! 3. the registry covers every `MethodKind` variant (compile-time
+//!    exhaustive `match` below — adding a variant without updating the
+//!    registry breaks this file's build).
+
+use ether::peft::apply::{
+    base_layout_for, peft_layout_for, schema_total, AdapterRef, MergePlan, ModelDims,
+};
+use ether::peft::registry::{by_token, op_for, ALL_KINDS};
+use ether::peft::{adapted_matrices, count_params, MethodKind, MethodSpec};
+use ether::util::rng::Rng;
+
+/// Canonical spec for each family member. The `match` is deliberately
+/// exhaustive (no `_` arm): a new `MethodKind` variant fails to compile
+/// here until it is wired through the registry and this test.
+fn canonical_spec(kind: MethodKind) -> &'static str {
+    match kind {
+        MethodKind::Ether => "ether_n4",
+        MethodKind::EtherPlus => "etherplus_n4",
+        MethodKind::Oft => "oft_n4",
+        MethodKind::Naive => "naive_n4",
+        MethodKind::Lora => "lora_r8",
+        MethodKind::Vera => "vera_r8",
+        MethodKind::Delora => "delora_r8",
+        MethodKind::Full => "full",
+        MethodKind::None => "none",
+    }
+}
+
+/// Spec variants beyond the canonical one per kind (suffix flags, other
+/// block counts) — schema properties must hold for all of them.
+const SPEC_NAMES: &[&str] = &[
+    "ether_n4", "ether_n16", "etherplus_n4", "etherplus_n2_1s", "oft_n4", "oft_n4_mrf",
+    "naive_n4", "lora_r8", "vera_r8", "delora_r8", "full", "none",
+];
+
+fn bits_equal(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn registry_covers_every_method_kind() {
+    for &kind in ALL_KINDS.iter() {
+        let op = op_for(kind);
+        assert_eq!(op.kind(), kind, "op registered under {kind:?} reports itself as {kind:?}");
+        assert_eq!(by_token(op.token()).map(|o| o.kind()), Some(kind), "{kind:?} token lookup");
+        let spec = MethodSpec::parse(canonical_spec(kind)).unwrap();
+        assert_eq!(spec.kind, kind, "canonical spec for {kind:?} parses to its own kind");
+        assert_eq!(spec.name(), canonical_spec(kind), "{kind:?} name round-trip");
+    }
+}
+
+#[test]
+fn unmerge_support_matches_the_family_structure() {
+    // Involutory / invertible members support unmerge; `full` overwrites
+    // and VeRA cannot host-merge at all.
+    for (name, want) in [
+        ("ether_n4", true),
+        ("etherplus_n4", true),
+        ("oft_n4", true),
+        ("naive_n4", true),
+        ("lora_r8", true),
+        ("delora_r8", true),
+        ("none", true),
+        ("full", false),
+        ("vera_r8", false),
+    ] {
+        let spec = MethodSpec::parse(name).unwrap();
+        assert_eq!(op_for(spec.kind).supports_unmerge(), want, "{name}");
+    }
+    assert!(!op_for(MethodKind::Vera).host_mergeable());
+}
+
+#[test]
+fn schema_sizes_match_count_params_for_every_op() {
+    for &(d, ff, l) in &[(16usize, 32usize, 1usize), (32, 64, 2), (64, 128, 3)] {
+        let dims = ModelDims { d_model: d, d_ff: ff, n_layers: l };
+        for name in SPEC_NAMES {
+            let spec = MethodSpec::parse(name).unwrap();
+            assert_eq!(
+                count_params(d, ff, l, &spec),
+                schema_total(dims, &spec),
+                "{name} at d_model={d} d_ff={ff} n_layers={l}"
+            );
+            // Every schema field is non-degenerate for every adapted matrix.
+            let op = op_for(spec.kind);
+            for (mat, md, mf) in adapted_matrices(d, ff) {
+                for (field, shape) in op.param_schema(&spec, md, mf) {
+                    assert!(
+                        shape.iter().product::<usize>() > 0,
+                        "{name}: {mat}.{field} has an empty shape {shape:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn ether_unmerge_roundtrip_tight_and_bit_invariant_across_threads() {
+    let dims = ModelDims { d_model: 32, d_ff: 64, n_layers: 2 };
+    let bl = base_layout_for(dims);
+    let mut rng = Rng::new(71);
+    let base: Vec<f32> = rng.normal_vec(bl.total, 0.05);
+    let spec = MethodSpec::parse("ether_n4").unwrap();
+    let pl = peft_layout_for(dims, &spec);
+    let peft: Vec<f32> = rng.normal_vec(pl.total, 0.5);
+    let plan = MergePlan::new(dims, &bl).unwrap();
+    let mut merged = vec![0.0f32; bl.total];
+    plan.execute(&spec, &base, &peft, &pl, &mut merged).unwrap();
+
+    let adapter = AdapterRef { spec: &spec, peft: &peft, layout: &pl };
+    let mut results: Vec<Vec<f32>> = Vec::new();
+    for threads in [Some(1), Some(2), Some(3), None] {
+        let mut buf = merged.clone();
+        plan.execute_unmerge(adapter, &mut buf, threads).unwrap();
+        results.push(buf);
+    }
+    for (i, r) in results.iter().enumerate().skip(1) {
+        assert!(bits_equal(&results[0], r), "thread variant {i} changed unmerge bits");
+    }
+    let err = results[0]
+        .iter()
+        .zip(&base)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(err <= 1e-5, "ETHER involution residual {err} > 1e-5");
+}
+
+#[test]
+fn unmerge_recovers_base_for_every_invertible_op() {
+    // Random well-conditioned adapters: OFT blocks are orthogonal,
+    // Naive blocks stay diagonally dominant at this scale, LoRA/DeLoRA
+    // invert by exact subtraction, ETHER by the involution.
+    let dims = ModelDims { d_model: 32, d_ff: 64, n_layers: 2 };
+    let bl = base_layout_for(dims);
+    let mut rng = Rng::new(83);
+    let base: Vec<f32> = rng.normal_vec(bl.total, 0.05);
+    let plan = MergePlan::new(dims, &bl).unwrap();
+    for name in ["ether_n4", "oft_n4", "oft_n4_mrf", "naive_n4", "lora_r4", "delora_r4", "none"] {
+        let spec = MethodSpec::parse(name).unwrap();
+        let pl = peft_layout_for(dims, &spec);
+        let peft: Vec<f32> = rng.normal_vec(pl.total, 0.05);
+        let mut buf = vec![0.0f32; bl.total];
+        plan.execute(&spec, &base, &peft, &pl, &mut buf).unwrap();
+        plan.execute_unmerge(AdapterRef { spec: &spec, peft: &peft, layout: &pl }, &mut buf, None)
+            .unwrap();
+        let err = buf
+            .iter()
+            .zip(&base)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(err <= 1e-4, "{name}: unmerge residual {err} > 1e-4");
+    }
+}
+
+#[test]
+fn etherplus_unmerge_inverts_the_relaxed_reflection() {
+    // ETHER+ inverts through the per-block rank-2 Woodbury identity,
+    // which needs û · v̂ bounded away from zero — bias v toward u the way
+    // a trained adapter (starting from v = u ⇒ identity) stays.
+    let dims = ModelDims { d_model: 32, d_ff: 64, n_layers: 2 };
+    let bl = base_layout_for(dims);
+    let mut rng = Rng::new(97);
+    let base: Vec<f32> = rng.normal_vec(bl.total, 0.05);
+    let plan = MergePlan::new(dims, &bl).unwrap();
+    let spec = MethodSpec::parse("etherplus_n4").unwrap();
+    let pl = peft_layout_for(dims, &spec);
+    let mut peft = vec![0.0f32; pl.total];
+    for (mat, d, f) in adapted_matrices(dims.d_model, dims.d_ff) {
+        for l in 0..dims.n_layers {
+            for (uf, vf, dim) in [("u", "v", d), ("ru", "rv", f)] {
+                let u: Vec<f32> = rng.normal_vec(dim, 1.0);
+                let v: Vec<f32> = u.iter().map(|&x| 0.7 * x + 0.3 * rng.normal()).collect();
+                pl.view_layer_mut(&mut peft, &format!("{mat}.{uf}"), l)
+                    .unwrap()
+                    .copy_from_slice(&u);
+                pl.view_layer_mut(&mut peft, &format!("{mat}.{vf}"), l)
+                    .unwrap()
+                    .copy_from_slice(&v);
+            }
+        }
+    }
+    let mut buf = vec![0.0f32; bl.total];
+    plan.execute(&spec, &base, &peft, &pl, &mut buf).unwrap();
+    plan.execute_unmerge(AdapterRef { spec: &spec, peft: &peft, layout: &pl }, &mut buf, None)
+        .unwrap();
+    let err = buf
+        .iter()
+        .zip(&base)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(err <= 1e-4, "etherplus Woodbury unmerge residual {err} > 1e-4");
+}

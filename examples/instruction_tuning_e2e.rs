@@ -17,7 +17,7 @@
 use std::time::Instant;
 
 use anyhow::Result;
-use ether::coordinator::{server::PjrtBackend, AdapterRegistry, BatcherCfg, Request, Server};
+use ether::coordinator::{server::PjrtBackend, AdapterRegistry, Request, SchedulerCfg, Server};
 use ether::data::corpus::Corpus;
 use ether::data::instruct::InstructData;
 use ether::eval::harness::mc_eval;
@@ -102,7 +102,11 @@ fn main() -> Result<()> {
     registry.register("tuned", "etherplus_n4", &cfg, tuner.peft.clone());
     let mut server = Server::new(
         registry,
-        BatcherCfg { max_batch: c.batch, max_wait: std::time::Duration::from_millis(5) },
+        SchedulerCfg {
+            max_batch: c.batch,
+            max_wait: std::time::Duration::from_millis(5),
+            ..Default::default()
+        },
     );
     let mut backend = PjrtBackend::new(&engine, &cfg, 2);
     let t2 = Instant::now();
@@ -111,13 +115,15 @@ fn main() -> Result<()> {
         let mut prompt = vec![ether::data::BOS];
         let (inst, _) = data.sample(&mut ether::util::rng::Rng::new(9000 + i));
         prompt.extend(ether::data::encode(&format!("{inst}=")));
-        server.batcher.push(Request {
-            id: i,
-            adapter: "tuned".into(),
-            prompt,
-            max_new: 10,
-            enqueued: Instant::now(),
-        });
+        server
+            .submit(Request {
+                id: i,
+                adapter: "tuned".into(),
+                prompt,
+                max_new: 10,
+                enqueued: Instant::now(),
+            })
+            .expect("within admission bounds");
     }
     let mut shown = 0;
     server.pump(&mut backend, Instant::now() + std::time::Duration::from_secs(1), |r| {

@@ -1,8 +1,8 @@
 //! Multi-adapter serving scenario — the paper's §1 deployment story:
-//! many per-user adapters over one frozen base, dynamic batching, and a
-//! merged-weight LRU cache. Compares adapter memory footprints across
-//! methods (the paper's 10–100× headline) and reports serving metrics
-//! under a skewed (zipf-ish) request mix.
+//! many per-user adapters over one frozen base, adapter-aware
+//! scheduling, and a merged-weight LRU cache. Compares adapter memory
+//! footprints across methods (the paper's 10–100× headline) and reports
+//! serving metrics under a configurable synthetic traffic scenario.
 //!
 //! Two modes:
 //! * **PJRT** (artifacts built): merge via the HLO `merge` artifact and
@@ -10,21 +10,35 @@
 //! * **host** (no artifacts / stub xla): merge through the blocked
 //!   parallel [`MergeEngine`] with single-flight + bounded workers —
 //!   the serving-path half of the engine is exercised for real, decode
-//!   is an echo. The host mode also demos the **in-place swap** serving
-//!   path ([`SwapMode::Rebase`] / [`SwapMode::Involution`]): one merged
-//!   buffer total instead of one model copy per cached adapter.
+//!   is an echo. The host mode drives the concurrent
+//!   `Server::pump_pool` dispatch stage, and also demos the **in-place
+//!   swap** serving path ([`SwapMode::Rebase`] / [`SwapMode::Involution`]):
+//!   one merged buffer total instead of one model copy per cached
+//!   adapter.
+//!
+//! Scheduler knobs (see the README "Serving guide"):
+//! `--scenario uniform|zipf|bursty|churn`, `--max-batch N`,
+//! `--max-wait-us N`, `--depth N` (per-adapter queue bound),
+//! `--quantum N` (DRR credit), `--workers N` (dispatch pool).
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
-use ether::coordinator::server::{HostMergeBackend, PjrtBackend};
-use ether::coordinator::{AdapterRegistry, BatcherCfg, MergeEngine, Request, Server, SwapMode};
+use ether::coordinator::loadgen::{self, LoadGenCfg};
+use ether::coordinator::server::{dispatch_workers, HostMergeBackend, HostPoolBackend, PjrtBackend};
+use ether::coordinator::{AdapterRegistry, MergeEngine, Request, SchedulerCfg, Server, SwapMode};
 use ether::peft::apply::{base_layout_for, peft_layout_for, ModelDims};
 use ether::peft::MethodSpec;
 use ether::runtime::engine::PjrtEngine;
 use ether::util::cli::Args;
 use ether::util::rng::Rng;
+
+struct Knobs {
+    sched: SchedulerCfg,
+    load: LoadGenCfg,
+    workers: usize,
+}
 
 fn main() -> Result<()> {
     ether::util::logging::init();
@@ -32,21 +46,61 @@ fn main() -> Result<()> {
     let cfg = args.str_or("cfg", "tiny");
     let n_users = args.usize_or("users", 12)?;
     let n_requests = args.usize_or("requests", 64)?;
+    let scenario = loadgen::parse_scenario(&args.str_or("scenario", "zipf"))?;
+    let sched = SchedulerCfg {
+        max_batch: args.usize_or("max-batch", 8)?,
+        max_wait: Duration::from_micros(args.usize_or("max-wait-us", 4_000)? as u64),
+        quantum: args.usize_or("quantum", 0)?,
+        max_queue_per_adapter: args.usize_or("depth", 256)?,
+        ..Default::default()
+    };
+    let workers = args.usize_or("workers", dispatch_workers())?;
     args.finish()?;
     anyhow::ensure!(n_users >= 1, "--users must be >= 1");
+    let knobs = Knobs {
+        sched,
+        load: LoadGenCfg {
+            n_adapters: n_users,
+            n_requests,
+            scenario,
+            seed: 99,
+            ..Default::default()
+        },
+        workers,
+    };
 
     match PjrtEngine::open_default() {
-        Ok(engine) => run_pjrt(&engine, &cfg, n_users, n_requests),
+        Ok(engine) => run_pjrt(&engine, &cfg, n_users, &knobs),
         Err(e) => {
             println!("[PJRT unavailable: {e:#}]");
             println!("falling back to the host-merge serving demo\n");
-            run_host(n_users, n_requests)
+            run_host(n_users, &knobs)
         }
     }
 }
 
+/// Feed the generated trace through admission control (real arrival
+/// stamps, so reported latencies are wall-clock); returns shed count.
+fn push_trace(server: &mut Server, load: &LoadGenCfg) -> u64 {
+    let arrivals = loadgen::generate(load);
+    let mut shed = 0;
+    for (i, a) in arrivals.iter().enumerate() {
+        let req = Request {
+            id: i as u64,
+            adapter: format!("user{}", a.adapter),
+            prompt: a.prompt.clone(),
+            max_new: a.max_new,
+            enqueued: Instant::now(),
+        };
+        if server.submit(req).is_err() {
+            shed += 1;
+        }
+    }
+    shed
+}
+
 /// Original PJRT path: HLO merge artifact + compiled decode.
-fn run_pjrt(engine: &PjrtEngine, cfg: &str, n_users: usize, n_requests: usize) -> Result<()> {
+fn run_pjrt(engine: &PjrtEngine, cfg: &str, n_users: usize, knobs: &Knobs) -> Result<()> {
     let c = engine.manifest.config(cfg)?.clone();
 
     // The multi-tenancy argument: per-user adapter footprint by method.
@@ -87,16 +141,24 @@ fn run_pjrt(engine: &PjrtEngine, cfg: &str, n_users: usize, n_requests: usize) -
         c.base_size as f64 * 4.0 / 1e6
     );
 
-    // Serve a zipf-skewed stream; report cache behaviour + latency.
+    // Serve the scenario stream; report cache behaviour + latency. The
+    // artifact batch dim is a hard bound on PJRT decode, so --max-batch
+    // clamps to it (with a notice) rather than silently overriding.
+    let max_batch = knobs.sched.max_batch.min(c.batch);
+    if max_batch != knobs.sched.max_batch {
+        println!(
+            "[--max-batch {} clamped to the `{cfg}` artifact batch dim {}]",
+            knobs.sched.max_batch, c.batch
+        );
+    }
     for cache_cap in [2usize, n_users] {
         let mut server = Server::new(
             registry.clone(),
-            BatcherCfg { max_batch: c.batch, max_wait: Duration::from_millis(4) },
+            SchedulerCfg { max_batch, ..knobs.sched },
         );
         let mut backend = PjrtBackend::new(engine, cfg, cache_cap);
-        let mut rng = Rng::new(99);
         let t0 = Instant::now();
-        push_zipf_stream(&mut server, n_users, n_requests, &mut rng);
+        push_trace(&mut server, &knobs.load);
         server.pump(&mut backend, Instant::now() + Duration::from_secs(1), |_| {})?;
         report_line(&server, &format!("cache={cache_cap}"), t0);
     }
@@ -104,18 +166,21 @@ fn run_pjrt(engine: &PjrtEngine, cfg: &str, n_users: usize, n_requests: usize) -
     Ok(())
 }
 
-/// Host path: synthetic base, blocked parallel merge-on-demand engine.
-fn run_host(n_users: usize, n_requests: usize) -> Result<()> {
+/// Host path: synthetic base, blocked parallel merge-on-demand engine,
+/// concurrent pool dispatch.
+fn run_host(n_users: usize, knobs: &Knobs) -> Result<()> {
     let dims = ModelDims { d_model: 128, d_ff: 256, n_layers: 4 };
     let layout = base_layout_for(dims);
     let mut rng = Rng::new(77);
     let base: Vec<f32> = rng.normal_vec(layout.total, 0.05);
     println!(
-        "synthetic base: d={} ff={} L={} ({:.1} MB)",
+        "synthetic base: d={} ff={} L={} ({:.1} MB) | scenario {} | {} dispatch workers",
         dims.d_model,
         dims.d_ff,
         dims.n_layers,
-        layout.total as f64 * 4.0 / 1e6
+        layout.total as f64 * 4.0 / 1e6,
+        knobs.load.scenario.name(),
+        knobs.workers,
     );
 
     let spec = MethodSpec::parse("ether_n4")?;
@@ -128,43 +193,42 @@ fn run_host(n_users: usize, n_requests: usize) -> Result<()> {
     );
 
     let mut registry = AdapterRegistry::new();
-    for u in 0..n_users {
-        registry.register(&format!("user{u}"), "ether_n4", "host", rng.normal_vec(pl.total, 0.5));
-    }
+    registry.register_fleet(n_users, "ether_n4", "host", dims, 77)?;
 
+    // Concurrent pool dispatch over the merged-weight LRU cache.
     for cache_cap in [2usize, n_users] {
-        let merger =
-            Arc::new(MergeEngine::new(dims, base.clone(), &layout, cache_cap, 4)?);
-        let mut server = Server::new(
-            registry.clone(),
-            BatcherCfg { max_batch: 8, max_wait: Duration::from_millis(4) },
-        );
-        let mut backend = HostMergeBackend::new(merger.clone());
-        let mut rng = Rng::new(99);
+        let merger = Arc::new(MergeEngine::new(dims, base.clone(), &layout, cache_cap, 4)?);
+        let mut server = Server::new(registry.clone(), knobs.sched);
+        let backend = HostPoolBackend::new(merger.clone());
         let t0 = Instant::now();
-        push_zipf_stream(&mut server, n_users, n_requests, &mut rng);
-        server.pump(&mut backend, Instant::now() + Duration::from_secs(1), |_| {})?;
-        report_line(&server, &format!("cache={cache_cap}"), t0);
+        push_trace(&mut server, &knobs.load);
+        server.pump_pool(
+            &backend,
+            Instant::now() + knobs.sched.max_wait,
+            knobs.workers,
+            |_| {},
+        )?;
+        report_line(&server, &format!("pool cache={cache_cap}"), t0);
         println!(
-            "           {} real merges | {:.1} MB merged weights resident",
+            "           {} real merges | {:.1} MB merged weights resident | \
+             fairness spread {:.1} ms",
             merger.merges.load(std::sync::atomic::Ordering::SeqCst),
             backend.resident_weight_bytes() as f64 / 1e6,
+            server.stats.fairness_spread_ms(),
         );
     }
 
     // In-place swap serving: ONE merged buffer total, rewritten on every
     // adapter change — the O(1)-memory counterpart of the LRU cache.
+    // (The slot is a single mutable buffer, so this path runs on the
+    // single-threaded pump.)
     for (label, mode) in [("rebase", SwapMode::Rebase), ("involution", SwapMode::Involution)] {
         let merger = Arc::new(MergeEngine::new(dims, base.clone(), &layout, 1, 4)?);
-        let mut server = Server::new(
-            registry.clone(),
-            BatcherCfg { max_batch: 8, max_wait: Duration::from_millis(4) },
-        );
+        let mut server = Server::new(registry.clone(), knobs.sched);
         let mut backend = HostMergeBackend::with_swap(merger.clone(), mode);
-        let mut rng = Rng::new(99);
         let t0 = Instant::now();
-        push_zipf_stream(&mut server, n_users, n_requests, &mut rng);
-        server.pump(&mut backend, Instant::now() + Duration::from_secs(1), |_| {})?;
+        push_trace(&mut server, &knobs.load);
+        server.pump(&mut backend, Instant::now() + knobs.sched.max_wait, |_| {})?;
         report_line(&server, &format!("swap:{label}"), t0);
         println!(
             "           {} in-place swaps | {:.1} MB resident (vs {:.1} MB for a \
@@ -183,21 +247,6 @@ fn run_host(n_users: usize, n_requests: usize) -> Result<()> {
     Ok(())
 }
 
-fn push_zipf_stream(server: &mut Server, n_users: usize, n_requests: usize, rng: &mut Rng) {
-    for i in 0..n_requests {
-        let user = ((rng.f64().powi(3)) * n_users as f64) as usize % n_users;
-        let mut prompt = vec![ether::data::BOS];
-        prompt.extend(ether::data::encode("the "));
-        server.batcher.push(Request {
-            id: i as u64,
-            adapter: format!("user{user}"),
-            prompt,
-            max_new: 6,
-            enqueued: Instant::now(),
-        });
-    }
-}
-
 fn report_line(server: &Server, label: &str, t0: Instant) {
     let dt = t0.elapsed().as_secs_f64();
     let s = &server.stats;
@@ -205,11 +254,12 @@ fn report_line(server: &Server, label: &str, t0: Instant) {
     let lat = s.latency_summary();
     println!(
         "{label:<16} → {:.1} req/s | p50 {:>7.1} ms p95 {:>7.1} ms | \
-         mean batch {:.1} | merge hits/misses {}/{}",
+         mean batch {:.1} | shed {} | merge hits/misses {}/{}",
         s.served as f64 / dt,
         lat.p50_ms(),
         lat.p95_ms(),
         s.mean_batch(),
+        s.shed,
         s.merge_hits,
         s.merge_misses,
     );

@@ -4,7 +4,10 @@
 
 use std::time::{Duration, Instant};
 
-use ether::coordinator::{server::GenBackend, AdapterRegistry, Batcher, BatcherCfg, Request, Server};
+use ether::coordinator::{
+    server::GenBackend, AdapterRegistry, Batcher, BatcherCfg, Request, Scheduler, SchedulerCfg,
+    Server,
+};
 use ether::util::benchkit::Bench;
 
 struct NoopBackend;
@@ -43,6 +46,31 @@ fn main() {
         assert_eq!(n, 1000);
     });
 
+    // Pure scheduler throughput (admission + DRR/deadline release).
+    bench.case("scheduler offer+pop x1000 (8 adapters)", Some(1000.0), || {
+        let mut s = Scheduler::new(SchedulerCfg {
+            max_batch: 8,
+            max_wait: Duration::ZERO,
+            ..Default::default()
+        });
+        let t = Instant::now();
+        for i in 0..1000u64 {
+            s.offer(Request {
+                id: i,
+                adapter: format!("a{}", i % 8),
+                prompt: vec![1, 2, 3],
+                max_new: 4,
+                enqueued: t,
+            })
+            .unwrap();
+        }
+        let mut n = 0;
+        while let Some((_, batch)) = s.pop_ready(t + Duration::from_millis(1)) {
+            n += batch.len();
+        }
+        assert_eq!(n, 1000);
+    });
+
     // Full pump loop with a no-op model: measures routing + accounting.
     bench.case("server pump 256 reqs (L3 only)", Some(256.0), || {
         let mut registry = AdapterRegistry::new();
@@ -51,17 +79,19 @@ fn main() {
         }
         let mut server = Server::new(
             registry,
-            BatcherCfg { max_batch: 8, max_wait: Duration::ZERO },
+            SchedulerCfg { max_batch: 8, max_wait: Duration::ZERO, ..Default::default() },
         );
         let t = Instant::now();
         for i in 0..256u64 {
-            server.batcher.push(Request {
-                id: i,
-                adapter: format!("a{}", i % 8),
-                prompt: vec![1, 2, 3, 4],
-                max_new: 4,
-                enqueued: t,
-            });
+            server
+                .submit(Request {
+                    id: i,
+                    adapter: format!("a{}", i % 8),
+                    prompt: vec![1, 2, 3, 4],
+                    max_new: 4,
+                    enqueued: t,
+                })
+                .unwrap();
         }
         let mut served = 0;
         server
@@ -82,18 +112,20 @@ fn main() {
         let mut backend = ether::coordinator::server::PjrtBackend::new(&engine, "tiny", 2);
         let mut server = Server::new(
             registry,
-            BatcherCfg { max_batch: 8, max_wait: Duration::ZERO },
+            SchedulerCfg { max_batch: 8, max_wait: Duration::ZERO, ..Default::default() },
         );
         bench.case("8-req batch, 6 new tokens", Some(8.0), || {
             let t = Instant::now();
             for i in 0..8u64 {
-                server.batcher.push(Request {
-                    id: i,
-                    adapter: "u0".into(),
-                    prompt: vec![ether::data::BOS],
-                    max_new: 6,
-                    enqueued: t,
-                });
+                server
+                    .submit(Request {
+                        id: i,
+                        adapter: "u0".into(),
+                        prompt: vec![ether::data::BOS],
+                        max_new: 6,
+                        enqueued: t,
+                    })
+                    .unwrap();
             }
             server
                 .pump(&mut backend, t + Duration::from_millis(1), |_| {})

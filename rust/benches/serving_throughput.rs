@@ -1,0 +1,253 @@
+//! Bench — end-to-end serving throughput under the four synthetic
+//! traffic scenarios (uniform, zipf, bursty, adapter-churn) through the
+//! adapter-aware scheduler and the concurrent pool dispatch stage, with
+//! real blocked-parallel merges (host engine, PJRT-free).
+//!
+//! Emits `BENCH_serving_throughput.json` (when `ETHER_BENCH_JSON` is
+//! set) with per-scenario requests/s, p50/p95 latency, shed rate,
+//! fairness spread, and merge/swap counters — the serving-path
+//! regression record. The `churn+swap` row replays the churn trace
+//! through the in-place involution swap slot (single-threaded by
+//! construction: one mutable buffer), so the PR-2 swap path is under
+//! the same traffic.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use ether::coordinator::loadgen::{self, LoadGenCfg, Scenario};
+use ether::coordinator::server::{HostMergeBackend, HostPoolBackend};
+use ether::coordinator::{AdapterRegistry, MergeEngine, Request, SchedulerCfg, Server, SwapMode};
+use ether::peft::apply::{base_layout_for, ModelDims};
+use ether::util::benchkit;
+use ether::util::json::Value;
+use ether::util::rng::Rng;
+
+const N_ADAPTERS: usize = 12;
+
+struct RunReport {
+    label: String,
+    served: u64,
+    shed: u64,
+    req_per_s: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+    shed_rate: f64,
+    fairness_spread_ms: f64,
+    release_fairness: f64,
+    merges: u64,
+    swaps: u64,
+}
+
+impl RunReport {
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("scenario", Value::s(self.label.clone())),
+            ("served", Value::num(self.served as f64)),
+            ("shed", Value::num(self.shed as f64)),
+            ("req_per_s", Value::num(self.req_per_s)),
+            ("p50_ms", Value::num(self.p50_ms)),
+            ("p95_ms", Value::num(self.p95_ms)),
+            ("shed_rate", Value::num(self.shed_rate)),
+            ("fairness_spread_ms", Value::num(self.fairness_spread_ms)),
+            ("release_fairness_jain", Value::num(self.release_fairness)),
+            ("merges", Value::num(self.merges as f64)),
+            ("swaps", Value::num(self.swaps as f64)),
+        ])
+    }
+}
+
+enum Dispatch {
+    /// Concurrent pool dispatch through [`HostPoolBackend`].
+    Pool { workers: usize },
+    /// Single-threaded in-place swap slot ([`HostMergeBackend`]).
+    Swap(SwapMode),
+}
+
+/// Replay one scenario trace through a fresh server; pump on burst
+/// boundaries and every 32 submissions, then drain.
+fn run_scenario(
+    label: &str,
+    scenario: Scenario,
+    n_requests: usize,
+    base: &[f32],
+    dims: ModelDims,
+    dispatch: &Dispatch,
+) -> RunReport {
+    let layout = base_layout_for(dims);
+    let merger = Arc::new(MergeEngine::new(dims, base.to_vec(), &layout, 4, 4).unwrap());
+    let mut registry = AdapterRegistry::new();
+    registry.register_fleet(N_ADAPTERS, "ether_n4", "host", dims, 42).unwrap();
+    // Tight queue bounds so overload (the bursty scenario) actually
+    // sheds instead of queueing without bound.
+    let cfg = SchedulerCfg {
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+        quantum: 4,
+        max_queue_per_adapter: 16,
+        max_pending: 64,
+    };
+    let mut server = Server::new(registry, cfg);
+    let arrivals = loadgen::generate(&LoadGenCfg {
+        n_adapters: N_ADAPTERS,
+        n_requests,
+        seed: 99,
+        scenario,
+        ..Default::default()
+    });
+
+    let t0 = Instant::now();
+    match dispatch {
+        Dispatch::Pool { workers } => {
+            let backend = HostPoolBackend::new(merger.clone());
+            drive(&mut server, &arrivals, |s, now| {
+                s.pump_pool(&backend, now, *workers, |_| {}).unwrap()
+            });
+        }
+        Dispatch::Swap(mode) => {
+            let mut backend = HostMergeBackend::with_swap(merger.clone(), *mode);
+            drive(&mut server, &arrivals, |s, now| {
+                s.pump(&mut backend, now, |_| {}).unwrap()
+            });
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let stats = &server.stats;
+    let sched = server.sched.stats();
+    assert_eq!(
+        stats.served + sched.shed(),
+        n_requests as u64,
+        "{label}: every offered request must be served or shed"
+    );
+    let lat = stats.latency_summary();
+    RunReport {
+        label: label.to_string(),
+        served: stats.served,
+        shed: sched.shed(),
+        req_per_s: stats.served as f64 / dt,
+        p50_ms: lat.p50_ms(),
+        p95_ms: lat.p95_ms(),
+        shed_rate: sched.shed_rate(),
+        fairness_spread_ms: stats.fairness_spread_ms(),
+        release_fairness: sched.release_fairness(),
+        merges: merger.merges.load(std::sync::atomic::Ordering::SeqCst),
+        swaps: merger.swap_stats().0,
+    }
+}
+
+/// Submission loop shared by both dispatch flavours: pace submissions to
+/// the trace's virtual arrival times (so a burst floods admission
+/// control at once while exponential traffic trickles), pump whenever
+/// virtual time advances, then drain past the deadline. Requests carry
+/// real enqueue stamps, so reported latencies are wall-clock.
+fn drive(
+    server: &mut Server,
+    arrivals: &[loadgen::Arrival],
+    mut pump: impl FnMut(&mut Server, Instant),
+) {
+    let t0 = Instant::now();
+    let mut last_at = None;
+    for (i, a) in arrivals.iter().enumerate() {
+        let target = t0 + a.at;
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let _ = server.submit(Request {
+            id: i as u64,
+            adapter: format!("user{}", a.adapter),
+            prompt: a.prompt.clone(),
+            max_new: a.max_new,
+            enqueued: Instant::now(),
+        });
+        // Within a burst (virtual time frozen) the queue absorbs the
+        // flood un-pumped — that is what admission control is for.
+        if last_at != Some(a.at) {
+            last_at = Some(a.at);
+            pump(server, Instant::now());
+        }
+    }
+    // Drain: everything still queued is past its deadline at now+wait.
+    let late = Instant::now() + server.sched.cfg.max_wait + Duration::from_millis(1);
+    pump(server, late);
+}
+
+fn main() {
+    let quick = std::env::var("ETHER_BENCH_QUICK").is_ok();
+    let n_requests = if quick { 192 } else { 1024 };
+    let workers = ether::coordinator::server::dispatch_workers();
+    let dims = ModelDims { d_model: 64, d_ff: 128, n_layers: 2 };
+    let layout = base_layout_for(dims);
+    let mut rng = Rng::new(7);
+    let base: Vec<f32> = rng.normal_vec(layout.total, 0.05);
+
+    println!(
+        "== bench: serving throughput ({} adapters, {} reqs/scenario, {} workers) ==",
+        N_ADAPTERS, n_requests, workers
+    );
+    println!(
+        "{:<12} {:>10} {:>8} {:>10} {:>10} {:>9} {:>11} {:>8} {:>8} {:>7}",
+        "scenario", "req/s", "served", "p50 ms", "p95 ms", "shed", "spread ms", "jain", "merges", "swaps"
+    );
+
+    let mut rows: Vec<Value> = vec![];
+    for scenario in Scenario::all() {
+        let r = run_scenario(
+            scenario.name(),
+            scenario,
+            n_requests,
+            &base,
+            dims,
+            &Dispatch::Pool { workers },
+        );
+        if scenario.name() == "bursty" {
+            // A 96-request burst against a 64-deep global bound must
+            // shed — the admission-control demonstration.
+            assert!(r.shed > 0, "bursty overload must exercise shedding");
+        }
+        print_row(&r);
+        rows.push(r.to_json());
+    }
+    // The churn trace again, through the in-place involution swap slot
+    // (PR-2 path): maximal adapter turnover over ONE merged buffer.
+    let churn = Scenario::all()[3];
+    assert_eq!(churn.name(), "churn");
+    let r = run_scenario(
+        "churn+swap",
+        churn,
+        n_requests,
+        &base,
+        dims,
+        &Dispatch::Swap(SwapMode::Involution),
+    );
+    assert!(r.swaps > 0, "churn must exercise the in-place swap path");
+    print_row(&r);
+    rows.push(r.to_json());
+
+    let payload = Value::obj(vec![
+        ("name", Value::s("serving throughput".to_string())),
+        ("quick", Value::Bool(quick)),
+        ("n_adapters", Value::num(N_ADAPTERS as f64)),
+        ("n_requests", Value::num(n_requests as f64)),
+        ("workers", Value::num(workers as f64)),
+        ("threads", Value::num(ether::util::pool::default_threads() as f64)),
+        ("scenarios", Value::arr(rows)),
+    ]);
+    benchkit::emit_named_json("serving throughput", &payload);
+}
+
+fn print_row(r: &RunReport) {
+    println!(
+        "{:<12} {:>10.1} {:>8} {:>10.2} {:>10.2} {:>8.1}% {:>11.2} {:>8.3} {:>8} {:>7}",
+        r.label,
+        r.req_per_s,
+        r.served,
+        r.p50_ms,
+        r.p95_ms,
+        r.shed_rate * 100.0,
+        r.fairness_spread_ms,
+        r.release_fairness,
+        r.merges,
+        r.swaps,
+    );
+}

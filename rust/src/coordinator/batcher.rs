@@ -1,5 +1,11 @@
 //! Dynamic batching: group requests per adapter, release a batch when it
 //! is full or its oldest request exceeds the wait deadline.
+//!
+//! This is the minimal single-lane building block; the serving path now
+//! runs the adapter-aware [`super::scheduler::Scheduler`] (admission
+//! control, deadline lane, DRR fairness) instead. The batcher stays for
+//! its conservation property tests and as the simplest reference
+//! release policy.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::time::{Duration, Instant};
@@ -36,17 +42,38 @@ pub struct Batcher {
 }
 
 impl Batcher {
-    pub fn new(cfg: BatcherCfg) -> Batcher {
+    pub fn new(mut cfg: BatcherCfg) -> Batcher {
+        // max_batch == 0 would make every release drain zero requests:
+        // `pop_ready` would return empty batches forever and `drain_all`
+        // would spin without ever decrementing `pending` — the counter
+        // and the queues could then drift arbitrarily. Clamp instead.
+        cfg.max_batch = cfg.max_batch.max(1);
         Batcher { cfg, queues: BTreeMap::new(), pending: 0 }
     }
 
     pub fn push(&mut self, req: Request) {
         self.pending += 1;
         self.queues.entry(req.adapter.clone()).or_default().push_back(req);
+        self.debug_check();
     }
 
     pub fn pending(&self) -> usize {
         self.pending
+    }
+
+    /// Debug invariant: the `pending` counter always equals the sum of
+    /// the per-adapter queue lengths, and drained adapters don't linger
+    /// as empty queues.
+    fn debug_check(&self) {
+        debug_assert_eq!(
+            self.pending,
+            self.queues.values().map(|q| q.len()).sum::<usize>(),
+            "batcher pending counter drifted from queue contents"
+        );
+        debug_assert!(
+            self.queues.values().all(|q| !q.is_empty()),
+            "batcher kept an empty per-adapter queue"
+        );
     }
 
     /// Release the next ready batch: any adapter with a full batch, else
@@ -77,6 +104,7 @@ impl Batcher {
             self.queues.remove(&pick);
         }
         self.pending -= batch.len();
+        self.debug_check();
         Some((pick, batch))
     }
 
@@ -93,6 +121,7 @@ impl Batcher {
                 out.push((a.clone(), batch));
             }
         }
+        self.debug_check();
         out
     }
 }
@@ -137,6 +166,48 @@ mod tests {
         b.push(req(1, "a", t0));
         let (adapter, _) = b.pop_ready(t0 + Duration::from_millis(10)).unwrap();
         assert_eq!(adapter, "a");
+    }
+
+    #[test]
+    fn pending_counter_stays_consistent_under_mixed_ops() {
+        // Regression for the pending-drift class of bugs: interleave
+        // pushes, pops, and drains and re-derive the counter from the
+        // queues at every step.
+        let mut b = Batcher::new(BatcherCfg { max_batch: 3, max_wait: Duration::ZERO });
+        let t = Instant::now();
+        let late = t + Duration::from_millis(1);
+        let mut expected: usize = 0;
+        for round in 0..4u64 {
+            for i in 0..5u64 {
+                b.push(req(round * 10 + i, if i % 2 == 0 { "a" } else { "b" }, t));
+                expected += 1;
+                assert_eq!(b.pending(), expected);
+            }
+            let (_, batch) = b.pop_ready(late).unwrap();
+            expected -= batch.len();
+            assert_eq!(b.pending(), expected);
+        }
+        let drained: usize = b.drain_all().iter().map(|(_, batch)| batch.len()).sum();
+        assert_eq!(drained, expected);
+        assert_eq!(b.pending(), 0);
+        assert!(b.pop_ready(late).is_none());
+        assert!(b.drain_all().is_empty());
+    }
+
+    #[test]
+    fn zero_max_batch_clamps_instead_of_spinning() {
+        // max_batch == 0 used to release empty batches forever (and
+        // loop drain_all): the clamp keeps both release paths finite.
+        let mut b = Batcher::new(BatcherCfg { max_batch: 0, max_wait: Duration::ZERO });
+        assert_eq!(b.cfg.max_batch, 1);
+        let t = Instant::now();
+        b.push(req(1, "a", t));
+        b.push(req(2, "a", t));
+        let (_, batch) = b.pop_ready(t + Duration::from_millis(1)).unwrap();
+        assert_eq!(batch.len(), 1);
+        let drained: usize = b.drain_all().iter().map(|(_, x)| x.len()).sum();
+        assert_eq!(drained, 1);
+        assert_eq!(b.pending(), 0);
     }
 
     #[test]

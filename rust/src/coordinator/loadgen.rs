@@ -1,0 +1,315 @@
+//! Synthetic traffic generation for the serving coordinator: deterministic
+//! arrival traces over configurable scenarios, plus a pure-scheduling
+//! replay used by the determinism tests and the `serving_throughput`
+//! bench.
+//!
+//! Four scenarios model the traffic mixes a multi-adapter deployment
+//! actually sees:
+//!
+//! | scenario  | adapter popularity            | arrival process            |
+//! |-----------|-------------------------------|----------------------------|
+//! | `uniform` | flat across the fleet         | exponential inter-arrivals |
+//! | `zipf`    | `1/rank^s` (hot-head)         | exponential inter-arrivals |
+//! | `bursty`  | flat                          | bursts of `burst` requests at one instant, `gap_us` apart |
+//! | `churn`   | small working set that rotates every `dwell` requests | exponential inter-arrivals |
+//!
+//! `zipf` stresses fairness (one hot adapter vs. a cold tail), `bursty`
+//! stresses admission control / shedding, and `churn` keeps changing the
+//! resident adapter — the worst case for the in-place
+//! [`super::registry::SwapSlot`] serving path.
+//!
+//! Everything derives from [`crate::util::rng::Rng`] with an explicit
+//! seed: the same [`LoadGenCfg`] always yields the same trace, bit for
+//! bit.
+//!
+//! ```
+//! use ether::coordinator::loadgen::{generate, parse_scenario, LoadGenCfg};
+//!
+//! let cfg = LoadGenCfg {
+//!     n_adapters: 4,
+//!     n_requests: 16,
+//!     scenario: parse_scenario("zipf").unwrap(),
+//!     ..Default::default()
+//! };
+//! let trace = generate(&cfg);
+//! assert_eq!(trace.len(), 16);
+//! // Arrivals are time-ordered and target registered adapters.
+//! assert!(trace.windows(2).all(|w| w[0].at <= w[1].at));
+//! assert!(trace.iter().all(|a| a.adapter < 4));
+//! // Same seed, same trace.
+//! assert_eq!(generate(&cfg), trace);
+//! ```
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use super::batcher::Request;
+use super::scheduler::{SchedStats, Scheduler, SchedulerCfg};
+use crate::util::rng::Rng;
+
+/// A traffic shape. See the module docs for the scenario table.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Scenario {
+    /// Flat adapter popularity, exponential inter-arrivals.
+    Uniform,
+    /// Zipf adapter popularity: P(rank r) ∝ 1/(r+1)^exponent.
+    Zipf { exponent: f64 },
+    /// `burst` requests arrive at the same instant, bursts `gap_us`
+    /// apart — the shedding / backpressure stress.
+    Bursty { burst: usize, gap_us: u64 },
+    /// Adapter selection confined to a `working_set`-wide window that
+    /// slides one adapter every `dwell` requests — constant adapter
+    /// turnover, the swap-path stress.
+    Churn { working_set: usize, dwell: usize },
+}
+
+impl Scenario {
+    /// Stable short name (bench labels, JSON fields, CLI values).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::Uniform => "uniform",
+            Scenario::Zipf { .. } => "zipf",
+            Scenario::Bursty { .. } => "bursty",
+            Scenario::Churn { .. } => "churn",
+        }
+    }
+
+    /// The canonical four-scenario sweep the `serving_throughput` bench
+    /// runs (default parameters).
+    pub fn all() -> [Scenario; 4] {
+        [
+            Scenario::Uniform,
+            Scenario::Zipf { exponent: 1.2 },
+            Scenario::Bursty { burst: 96, gap_us: 2_000 },
+            Scenario::Churn { working_set: 2, dwell: 16 },
+        ]
+    }
+}
+
+/// Parse a CLI scenario name into its default-parameter [`Scenario`].
+pub fn parse_scenario(s: &str) -> Result<Scenario> {
+    for sc in Scenario::all() {
+        if sc.name() == s {
+            return Ok(sc);
+        }
+    }
+    bail!("unknown scenario {s:?} (expected uniform | zipf | bursty | churn)")
+}
+
+/// Trace generation knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadGenCfg {
+    pub n_adapters: usize,
+    pub n_requests: usize,
+    pub seed: u64,
+    pub scenario: Scenario,
+    /// Mean inter-arrival gap in µs for the exponential scenarios
+    /// (ignored by `bursty`, which uses its own `gap_us`).
+    pub mean_gap_us: u64,
+    pub max_new: usize,
+}
+
+impl Default for LoadGenCfg {
+    fn default() -> Self {
+        LoadGenCfg {
+            n_adapters: 8,
+            n_requests: 256,
+            seed: 0x5eed,
+            scenario: Scenario::Uniform,
+            mean_gap_us: 200,
+            max_new: 4,
+        }
+    }
+}
+
+/// One generated request: a virtual arrival offset from the trace start,
+/// the target adapter index (into a `user{i}` fleet), and the prompt.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Arrival {
+    pub at: Duration,
+    pub adapter: usize,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+}
+
+impl Arrival {
+    /// Materialize into a coordinator [`Request`] against a `user{i}`
+    /// fleet, stamping `enqueued = t0 + self.at` (virtual clock).
+    pub fn to_request(&self, id: u64, t0: Instant) -> Request {
+        Request {
+            id,
+            adapter: format!("user{}", self.adapter),
+            prompt: self.prompt.clone(),
+            max_new: self.max_new,
+            enqueued: t0 + self.at,
+        }
+    }
+}
+
+/// Generate a deterministic, time-ordered arrival trace for `cfg`.
+pub fn generate(cfg: &LoadGenCfg) -> Vec<Arrival> {
+    assert!(cfg.n_adapters >= 1, "loadgen needs at least one adapter");
+    let mut rng = Rng::new(cfg.seed);
+    // Zipf CDF over adapter ranks (adapter 0 = hottest).
+    let zipf_cdf: Vec<f64> = match cfg.scenario {
+        Scenario::Zipf { exponent } => {
+            let weights: Vec<f64> =
+                (0..cfg.n_adapters).map(|r| 1.0 / ((r + 1) as f64).powf(exponent)).collect();
+            let total: f64 = weights.iter().sum();
+            let mut acc = 0.0;
+            weights
+                .iter()
+                .map(|w| {
+                    acc += w / total;
+                    acc
+                })
+                .collect()
+        }
+        _ => vec![],
+    };
+    let mut t_us: u64 = 0;
+    let mut out = Vec::with_capacity(cfg.n_requests);
+    for i in 0..cfg.n_requests {
+        let adapter = match cfg.scenario {
+            Scenario::Uniform | Scenario::Bursty { .. } => rng.below(cfg.n_adapters),
+            Scenario::Zipf { .. } => {
+                let u = rng.f64();
+                zipf_cdf.iter().position(|&c| u < c).unwrap_or(cfg.n_adapters - 1)
+            }
+            Scenario::Churn { working_set, dwell } => {
+                let ws = working_set.clamp(1, cfg.n_adapters);
+                let window = i / dwell.max(1);
+                (window + rng.below(ws)) % cfg.n_adapters
+            }
+        };
+        match cfg.scenario {
+            Scenario::Bursty { burst, gap_us } => {
+                if i > 0 && i % burst.max(1) == 0 {
+                    t_us += gap_us;
+                }
+            }
+            _ => {
+                // Exponential inter-arrival: -mean·ln(1-u), u ∈ [0,1).
+                t_us += (-(1.0 - rng.f64()).ln() * cfg.mean_gap_us as f64) as u64;
+            }
+        }
+        out.push(Arrival {
+            at: Duration::from_micros(t_us),
+            adapter,
+            prompt: vec![crate::data::BOS, adapter as i32],
+            max_new: cfg.max_new,
+        });
+    }
+    out
+}
+
+/// Pure-scheduling replay on a virtual clock: offer each arrival at its
+/// virtual time, draining ready batches between arrivals, then drain the
+/// remainder. Returns the decision trace (adapter, released request ids
+/// in order) plus the final scheduler stats — with no execution stage
+/// and no wall-clock reads, the trace is a deterministic function of
+/// `(cfg, arrivals)`, which the determinism tests assert by replaying.
+pub fn schedule_trace(
+    cfg: &SchedulerCfg,
+    arrivals: &[Arrival],
+) -> (Vec<(String, Vec<u64>)>, SchedStats) {
+    let t0 = Instant::now();
+    let mut sched = Scheduler::new(*cfg);
+    let mut trace = vec![];
+    for (i, a) in arrivals.iter().enumerate() {
+        let now = t0 + a.at;
+        // Sheds are part of the schedule, captured in the stats.
+        let _ = sched.offer(a.to_request(i as u64, t0));
+        while let Some((id, batch)) = sched.pop_ready(now) {
+            trace.push((id, batch.iter().map(|r| r.id).collect()));
+        }
+    }
+    for (id, batch) in sched.drain_all() {
+        trace.push((id, batch.iter().map(|r| r.id).collect()));
+    }
+    (trace, sched.stats().clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traces_are_deterministic_and_ordered() {
+        for scenario in Scenario::all() {
+            let cfg = LoadGenCfg { n_requests: 200, scenario, ..Default::default() };
+            let a = generate(&cfg);
+            let b = generate(&cfg);
+            assert_eq!(a, b, "{}", scenario.name());
+            assert_eq!(a.len(), 200);
+            assert!(a.windows(2).all(|w| w[0].at <= w[1].at), "{}", scenario.name());
+            assert!(a.iter().all(|x| x.adapter < cfg.n_adapters));
+        }
+    }
+
+    #[test]
+    fn zipf_skews_toward_low_ranks() {
+        let cfg = LoadGenCfg {
+            n_adapters: 8,
+            n_requests: 4000,
+            scenario: Scenario::Zipf { exponent: 1.2 },
+            ..Default::default()
+        };
+        let trace = generate(&cfg);
+        let mut counts = [0usize; 8];
+        for a in &trace {
+            counts[a.adapter] += 1;
+        }
+        assert!(
+            counts[0] > counts[7] * 3,
+            "rank 0 should dominate rank 7: {counts:?}"
+        );
+    }
+
+    #[test]
+    fn bursty_arrivals_cluster() {
+        let cfg = LoadGenCfg {
+            n_adapters: 4,
+            n_requests: 96,
+            scenario: Scenario::Bursty { burst: 32, gap_us: 5_000 },
+            ..Default::default()
+        };
+        let trace = generate(&cfg);
+        // Exactly three distinct arrival instants, 5 ms apart, 32 each.
+        let mut instants: Vec<Duration> = trace.iter().map(|a| a.at).collect();
+        instants.dedup();
+        assert_eq!(
+            instants,
+            vec![
+                Duration::ZERO,
+                Duration::from_micros(5_000),
+                Duration::from_micros(10_000)
+            ]
+        );
+        assert_eq!(trace.iter().filter(|a| a.at == Duration::ZERO).count(), 32);
+    }
+
+    #[test]
+    fn churn_rotates_the_working_set() {
+        let cfg = LoadGenCfg {
+            n_adapters: 8,
+            n_requests: 64,
+            scenario: Scenario::Churn { working_set: 1, dwell: 8 },
+            ..Default::default()
+        };
+        let trace = generate(&cfg);
+        // working_set 1 → adapter is exactly the window index.
+        for (i, a) in trace.iter().enumerate() {
+            assert_eq!(a.adapter, (i / 8) % 8);
+        }
+    }
+
+    #[test]
+    fn scenario_parsing_roundtrips() {
+        for sc in Scenario::all() {
+            assert_eq!(parse_scenario(sc.name()).unwrap().name(), sc.name());
+        }
+        assert!(parse_scenario("poisson").is_err());
+    }
+}

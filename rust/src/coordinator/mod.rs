@@ -3,8 +3,37 @@
 //! The paper motivates ETHER with adaptation "deployed at scale to serve
 //! numerous individual requests" (§1): thousands of per-user adapters
 //! over one frozen base model, each adapter 10–100× smaller than LoRA's.
-//! This module is that deployment story as a runnable system:
+//! This module is that deployment story as a runnable system.
 //!
+//! # Pipeline
+//!
+//! A request flows through five stages:
+//!
+//! ```text
+//!            submit()                 pop_ready(now)
+//! clients ─────────────► Scheduler ───────────────────► dispatch
+//!            │            per-adapter queues             │
+//!            │            ├ admission control            │ one batch per
+//!            ▼            │  (depth bounds → shed)       │ pool worker
+//!          shed()         ├ deadline lane (EDF)          ▼
+//!       ShedReason +      └ DRR lane (quantum)      MergeEngine
+//!       SchedStats                                  merge-on-demand:
+//!                                                   LRU cache │ SwapSlot
+//!                                                   single-   │ in-place
+//!                                                   flight    │ rebase /
+//!                                                        │    │ involution
+//!                                                        ▼    ▼
+//!                                                   decode (PJRT or
+//!                                                   host fingerprint)
+//!                                                        │
+//!            on_response(Response) ◄─────────────────────┘
+//!            latency + fairness accounting (ServerStats)
+//! ```
+//!
+//! * [`scheduler`] — the adapter-aware continuous scheduler: per-adapter
+//!   queues, admission control with shed counters, deadline-based
+//!   release (earliest-deadline-first, starvation-free), and
+//!   deficit-round-robin fairness across saturated adapters.
 //! * [`registry`] — adapter store (tiny per-user PEFT vectors), an LRU
 //!   cache of *merged* weights, and the merge-on-demand
 //!   [`registry::MergeEngine`]: multiplicative adapters fold into the
@@ -12,10 +41,17 @@
 //!   requests through the plain `none` forward artifact, and concurrent
 //!   misses for different adapters merge in parallel through the blocked
 //!   host engine (single-flight per adapter, bounded worker budget).
-//! * [`batcher`] — dynamic batching per adapter with size + deadline
-//!   triggers (vLLM-router-style).
-//! * [`server`] — the serving loop: route → batch → merge(cache) →
-//!   greedy decode → respond, with latency/throughput accounting.
+//! * [`server`] — the serving loop plumbing: [`server::Server::pump`]
+//!   (single-threaded, PJRT/swap backends) and
+//!   [`server::Server::pump_pool`] (concurrent — every released batch
+//!   executes on a scoped pool worker, so merges and decodes for
+//!   different adapters overlap instead of serializing).
+//! * [`loadgen`] — deterministic synthetic traffic (uniform / Zipf /
+//!   bursty / adapter-churn) for the `serving_throughput` bench and the
+//!   scheduling determinism tests.
+//! * [`batcher`] — the original single-lane dynamic batcher, kept as the
+//!   minimal building block (and for its conservation property tests);
+//!   the scheduler supersedes it on the serving path.
 //!
 //! **In-place swap mode.** The merged-weight cache costs one full model
 //! copy per cached adapter. Because the transform family is built from
@@ -36,13 +72,62 @@
 //! the `multi_adapter_serving` example wire both flavours through
 //! [`server::ServerStats`].
 //!
-//! Everything is testable without PJRT via the [`server::GenBackend`]
-//! trait (`rust/tests/coordinator_props.rs` exercises the invariants).
+//! # Example
+//!
+//! End-to-end host serving without PJRT (the same snippet as the README
+//! "Serving guide" — this doctest keeps it honest):
+//!
+//! ```
+//! use std::sync::Arc;
+//! use std::time::{Duration, Instant};
+//! use ether::coordinator::server::HostPoolBackend;
+//! use ether::coordinator::{AdapterRegistry, MergeEngine, Request, SchedulerCfg, Server};
+//! use ether::peft::apply::{base_layout_for, ModelDims};
+//!
+//! // A tiny synthetic base plus a fleet of per-user ETHER adapters.
+//! let dims = ModelDims { d_model: 16, d_ff: 32, n_layers: 2 };
+//! let layout = base_layout_for(dims);
+//! let base = vec![0.02f32; layout.total];
+//! let merger = Arc::new(MergeEngine::new(dims, base, &layout, 2, 2)?);
+//! let mut registry = AdapterRegistry::new();
+//! registry.register_fleet(4, "ether_n4", "host", dims, 7)?;
+//!
+//! // Scheduler-fronted server; submit() applies admission control.
+//! let mut server = Server::new(registry, SchedulerCfg::default());
+//! let t = Instant::now();
+//! for i in 0..8u64 {
+//!     server
+//!         .submit(Request {
+//!             id: i,
+//!             adapter: format!("user{}", i % 4),
+//!             prompt: vec![1],
+//!             max_new: 4,
+//!             enqueued: t,
+//!         })
+//!         .expect("under the admission bounds");
+//! }
+//!
+//! // Concurrent dispatch: batches for different adapters merge and
+//! // decode in parallel on 4 pool workers.
+//! let backend = HostPoolBackend::new(merger);
+//! let mut served = 0;
+//! server.pump_pool(&backend, t + Duration::from_millis(100), 4, |_resp| served += 1)?;
+//! assert_eq!(served, 8);
+//! assert_eq!(server.stats.shed, 0);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! Everything is testable without PJRT via the [`server::GenBackend`] /
+//! [`server::SharedBackend`] traits (`rust/tests/coordinator_props.rs`
+//! and `rust/tests/scheduler_props.rs` exercise the invariants).
 
 pub mod batcher;
+pub mod loadgen;
 pub mod registry;
+pub mod scheduler;
 pub mod server;
 
 pub use batcher::{Batcher, BatcherCfg, Request};
 pub use registry::{AdapterRegistry, MergeEngine, MergedCache, SwapMode, SwapSlot};
+pub use scheduler::{SchedStats, Scheduler, SchedulerCfg, ShedReason};
 pub use server::{Server, ServerStats};

@@ -77,6 +77,30 @@ impl AdapterRegistry {
     pub fn total_params(&self) -> usize {
         self.adapters.values().map(|a| a.peft.len()).sum()
     }
+
+    /// Register a fleet of `n` random adapters named `user0..user{n-1}`
+    /// with schema-correct parameter vectors for `method` at `dims` —
+    /// the shared fixture for the serving bench, the load-generator
+    /// scenarios, and the scheduler tests. Deterministic in `seed`.
+    pub fn register_fleet(
+        &mut self,
+        n: usize,
+        method: &str,
+        cfg: &str,
+        dims: ModelDims,
+        seed: u64,
+    ) -> Result<Vec<String>> {
+        let spec = MethodSpec::parse(method)?;
+        let layout = peft_layout_for(dims, &spec);
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut ids = Vec::with_capacity(n);
+        for u in 0..n {
+            let id = format!("user{u}");
+            self.register(&id, method, cfg, rng.normal_vec(layout.total, 0.5));
+            ids.push(id);
+        }
+        Ok(ids)
+    }
 }
 
 /// LRU cache of merged base weights keyed by adapter id. Merged weights
@@ -549,6 +573,26 @@ mod tests {
         assert_eq!(r.get("u1").unwrap().method, "ether_n4");
         assert_eq!(r.total_params(), 24);
         assert!(r.get("nope").is_err());
+    }
+
+    #[test]
+    fn register_fleet_builds_schema_correct_adapters() {
+        let dims = ModelDims { d_model: 16, d_ff: 32, n_layers: 2 };
+        let spec = MethodSpec::parse("ether_n4").unwrap();
+        let pl = peft_layout_for(dims, &spec);
+        let mut r = AdapterRegistry::new();
+        let ids = r.register_fleet(5, "ether_n4", "host", dims, 11).unwrap();
+        assert_eq!(ids, ["user0", "user1", "user2", "user3", "user4"]);
+        assert_eq!(r.len(), 5);
+        for id in &ids {
+            assert_eq!(r.get(id).unwrap().peft.len(), pl.total);
+        }
+        // Deterministic in the seed.
+        let mut r2 = AdapterRegistry::new();
+        r2.register_fleet(5, "ether_n4", "host", dims, 11).unwrap();
+        assert_eq!(r.get("user3").unwrap().peft, r2.get("user3").unwrap().peft);
+        // Unknown methods propagate the parse error.
+        assert!(r.register_fleet(1, "nope_n4", "host", dims, 1).is_err());
     }
 
     #[test]

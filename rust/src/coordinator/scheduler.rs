@@ -1,0 +1,501 @@
+//! Adapter-aware continuous scheduler: per-adapter queues, admission
+//! control with load shedding, deadline-based release, and
+//! deficit-round-robin (DRR) fairness across adapters.
+//!
+//! The original [`super::batcher::Batcher`] releases whichever adapter
+//! fills a batch first — under a hot adapter that policy starves every
+//! cold adapter until the hot queue momentarily drains. The scheduler
+//! replaces it on the serving path with two release lanes:
+//!
+//! 1. **Deadline lane** (latency): any adapter whose *oldest* request has
+//!    waited past [`SchedulerCfg::max_wait`] becomes immediately
+//!    eligible; among expired adapters the oldest head releases first
+//!    (earliest-deadline-first). Serving an adapter advances its head
+//!    timestamp, so this lane is starvation-free by construction — a
+//!    single cold request is released at most `max_wait` plus one batch
+//!    after arrival, however saturated the hot adapters are.
+//! 2. **DRR lane** (throughput): adapters with a full batch are served in
+//!    ring order. Each visit grants the adapter
+//!    [`SchedulerCfg::quantum`] requests of credit and releases at most
+//!    `min(deficit, max_batch)`; the served adapter rotates to the back
+//!    of the ring. With `quantum < max_batch` a saturating adapter needs
+//!    several ring passes per full batch, interleaving service across
+//!    competitors instead of draining one queue end-to-end.
+//!
+//! **Admission control**: [`Scheduler::offer`] bounds both the
+//! per-adapter queue depth and the global pending total; requests beyond
+//! either bound are shed with a [`ShedReason`] and counted in
+//! [`SchedStats`] — backpressure is a counter the operator can watch,
+//! not an unbounded queue.
+//!
+//! All decisions are pure functions of the arrival trace and the `now`
+//! values passed to [`Scheduler::pop_ready`], so a fixed trace replays
+//! to an identical schedule (see `rust/tests/scheduler_props.rs` and
+//! [`super::loadgen::schedule_trace`]).
+//!
+//! ```
+//! use std::time::{Duration, Instant};
+//! use ether::coordinator::batcher::Request;
+//! use ether::coordinator::scheduler::{Scheduler, SchedulerCfg};
+//!
+//! let mut sched = Scheduler::new(SchedulerCfg {
+//!     max_batch: 2,
+//!     max_wait: Duration::from_millis(5),
+//!     ..Default::default()
+//! });
+//! let t = Instant::now();
+//! for i in 0..4u64 {
+//!     sched
+//!         .offer(Request { id: i, adapter: "u0".into(), prompt: vec![1], max_new: 1, enqueued: t })
+//!         .expect("within queue bounds");
+//! }
+//! // A full batch releases immediately; FIFO within the adapter.
+//! let (adapter, batch) = sched.pop_ready(t).unwrap();
+//! assert_eq!(adapter, "u0");
+//! assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+//! ```
+
+use std::collections::{BTreeMap, VecDeque};
+use std::time::{Duration, Instant};
+
+use super::batcher::Request;
+
+/// Scheduler knobs. `max_batch`/`max_wait` mirror the old
+/// [`super::batcher::BatcherCfg`]; the rest bound queues and tune
+/// fairness.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerCfg {
+    /// Maximum requests per released batch (bounded by the artifact
+    /// batch dim). Clamped up to 1 at construction.
+    pub max_batch: usize,
+    /// Maximum time the oldest request of an adapter may wait before the
+    /// deadline lane forces a (possibly partial) release.
+    pub max_wait: Duration,
+    /// DRR credit granted per ring visit, in requests. `0` means "one
+    /// full batch" (`max_batch`), i.e. plain round-robin. Values below
+    /// `max_batch` interleave service across saturated adapters at the
+    /// cost of smaller throughput-lane batches.
+    pub quantum: usize,
+    /// Admission bound per adapter queue; offers beyond it are shed with
+    /// [`ShedReason::AdapterQueueFull`].
+    pub max_queue_per_adapter: usize,
+    /// Admission bound on total pending requests; offers beyond it are
+    /// shed with [`ShedReason::GlobalQueueFull`].
+    pub max_pending: usize,
+}
+
+impl Default for SchedulerCfg {
+    fn default() -> Self {
+        SchedulerCfg {
+            max_batch: 8,
+            max_wait: Duration::from_millis(20),
+            quantum: 0,
+            max_queue_per_adapter: 256,
+            max_pending: 4096,
+        }
+    }
+}
+
+impl SchedulerCfg {
+    fn quantum_or_batch(&self) -> usize {
+        if self.quantum == 0 {
+            self.max_batch
+        } else {
+            self.quantum
+        }
+    }
+}
+
+/// Why an offered request was shed instead of admitted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The target adapter's queue is at `max_queue_per_adapter`.
+    AdapterQueueFull,
+    /// The scheduler as a whole is at `max_pending`.
+    GlobalQueueFull,
+}
+
+impl std::fmt::Display for ShedReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShedReason::AdapterQueueFull => write!(f, "adapter queue full"),
+            ShedReason::GlobalQueueFull => write!(f, "global queue full"),
+        }
+    }
+}
+
+/// Admission / release accounting. `PartialEq` so determinism tests can
+/// compare whole replays.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SchedStats {
+    /// Requests accepted into a queue.
+    pub admitted: u64,
+    /// Requests shed because their adapter queue was full.
+    pub shed_adapter_full: u64,
+    /// Requests shed because the global pending bound was hit.
+    pub shed_global_full: u64,
+    /// Batches released (both lanes).
+    pub batches: u64,
+    /// Requests released (both lanes).
+    pub released: u64,
+    /// Per-adapter released counts — the raw material for fairness
+    /// metrics ([`jain_fairness`]).
+    pub released_per_adapter: BTreeMap<String, u64>,
+}
+
+impl SchedStats {
+    /// Total shed requests across both reasons.
+    pub fn shed(&self) -> u64 {
+        self.shed_adapter_full + self.shed_global_full
+    }
+
+    /// Total offered = admitted + shed.
+    pub fn offered(&self) -> u64 {
+        self.admitted + self.shed()
+    }
+
+    /// Fraction of offered requests that were shed (0.0 when idle).
+    pub fn shed_rate(&self) -> f64 {
+        let offered = self.offered();
+        if offered == 0 {
+            0.0
+        } else {
+            self.shed() as f64 / offered as f64
+        }
+    }
+
+    /// Jain's fairness index over the per-adapter released counts
+    /// (1.0 = perfectly even service, 1/n = one adapter got everything).
+    pub fn release_fairness(&self) -> f64 {
+        let counts: Vec<u64> = self.released_per_adapter.values().copied().collect();
+        jain_fairness(&counts)
+    }
+}
+
+/// Jain's fairness index `(Σx)² / (n·Σx²)` over non-negative shares.
+/// Returns 1.0 for empty or all-zero input (nothing to be unfair about).
+pub fn jain_fairness(counts: &[u64]) -> f64 {
+    if counts.is_empty() {
+        return 1.0;
+    }
+    let s: f64 = counts.iter().map(|&c| c as f64).sum();
+    let s2: f64 = counts.iter().map(|&c| c as f64 * c as f64).sum();
+    if s2 == 0.0 {
+        1.0
+    } else {
+        s * s / (counts.len() as f64 * s2)
+    }
+}
+
+struct AdapterQueue {
+    q: VecDeque<Request>,
+    /// DRR credit in requests, reset when the queue drains.
+    deficit: usize,
+}
+
+/// The adapter-aware continuous scheduler. See the module docs for the
+/// release policy; [`super::server::Server`] owns one on the serving
+/// path.
+pub struct Scheduler {
+    pub cfg: SchedulerCfg,
+    queues: BTreeMap<String, AdapterQueue>,
+    /// DRR ring: every adapter with a non-empty queue appears exactly
+    /// once, in first-arrival order (served adapters rotate to the back).
+    ring: VecDeque<String>,
+    pending: usize,
+    stats: SchedStats,
+}
+
+impl Scheduler {
+    pub fn new(mut cfg: SchedulerCfg) -> Scheduler {
+        // A zero batch bound would make release loops spin forever on
+        // empty batches (the old Batcher had exactly that latent bug).
+        cfg.max_batch = cfg.max_batch.max(1);
+        cfg.max_queue_per_adapter = cfg.max_queue_per_adapter.max(1);
+        cfg.max_pending = cfg.max_pending.max(1);
+        Scheduler {
+            cfg,
+            queues: BTreeMap::new(),
+            ring: VecDeque::new(),
+            pending: 0,
+            stats: SchedStats::default(),
+        }
+    }
+
+    /// Requests currently queued.
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
+    /// Adapters currently holding queued requests.
+    pub fn active_adapters(&self) -> usize {
+        self.queues.len()
+    }
+
+    pub fn stats(&self) -> &SchedStats {
+        &self.stats
+    }
+
+    /// Would an offer for `adapter` be shed right now? Callers that must
+    /// not drop requests (e.g. [`super::server::Server::serve`], whose
+    /// clients block on one response per request) check this and drain
+    /// the scheduler first — backpressure instead of load shedding.
+    pub fn at_capacity(&self, adapter: &str) -> bool {
+        self.pending >= self.cfg.max_pending
+            || self
+                .queues
+                .get(adapter)
+                .is_some_and(|aq| aq.q.len() >= self.cfg.max_queue_per_adapter)
+    }
+
+    /// Admit `req` or shed it. Shedding bumps the matching counter and
+    /// returns the reason; the request is dropped (load-shedding
+    /// semantics — the caller decides whether to surface an error).
+    /// Callers that prefer lossless backpressure should gate on
+    /// [`Scheduler::at_capacity`] and drain before offering.
+    pub fn offer(&mut self, req: Request) -> Result<(), ShedReason> {
+        if self.pending >= self.cfg.max_pending {
+            self.stats.shed_global_full += 1;
+            return Err(ShedReason::GlobalQueueFull);
+        }
+        if let Some(aq) = self.queues.get(&req.adapter) {
+            if aq.q.len() >= self.cfg.max_queue_per_adapter {
+                self.stats.shed_adapter_full += 1;
+                return Err(ShedReason::AdapterQueueFull);
+            }
+        }
+        let adapter = req.adapter.clone();
+        let aq = self
+            .queues
+            .entry(adapter.clone())
+            .or_insert_with(|| AdapterQueue { q: VecDeque::new(), deficit: 0 });
+        if aq.q.is_empty() {
+            self.ring.push_back(adapter);
+        }
+        aq.q.push_back(req);
+        self.pending += 1;
+        self.stats.admitted += 1;
+        self.debug_check();
+        Ok(())
+    }
+
+    /// Release the next ready batch, or `None` when nothing is eligible
+    /// at `now`. Deadline lane first (oldest expired head wins), then
+    /// the DRR lane over full batches. FIFO order within an adapter is
+    /// always preserved.
+    pub fn pop_ready(&mut self, now: Instant) -> Option<(String, Vec<Request>)> {
+        // Deadline lane: earliest-deadline-first across expired heads.
+        let expired = self
+            .queues
+            .iter()
+            .filter(|(_, aq)| {
+                aq.q.front()
+                    .map(|r| now.duration_since(r.enqueued) >= self.cfg.max_wait)
+                    .unwrap_or(false)
+            })
+            .min_by_key(|(_, aq)| aq.q.front().map(|r| r.enqueued))
+            .map(|(a, _)| a.clone());
+        if let Some(a) = expired {
+            let out = self.release(&a, self.cfg.max_batch);
+            self.debug_check();
+            return Some(out);
+        }
+        // DRR lane: serve the first adapter in ring order holding a full
+        // batch; grant quantum credit, cap the release by the deficit,
+        // rotate to the back.
+        for _ in 0..self.ring.len() {
+            let a = match self.ring.pop_front() {
+                Some(a) => a,
+                None => break,
+            };
+            let cap = {
+                let aq = match self.queues.get_mut(&a) {
+                    Some(aq) => aq,
+                    None => continue, // stale ring entry; drop it
+                };
+                if aq.q.len() < self.cfg.max_batch {
+                    self.ring.push_back(a);
+                    continue;
+                }
+                aq.deficit += self.cfg.quantum_or_batch();
+                let cap = aq.deficit.min(self.cfg.max_batch);
+                aq.deficit -= cap;
+                cap
+            };
+            let out = self.release(&a, cap);
+            if self.queues.contains_key(&a) {
+                self.ring.push_back(a);
+            }
+            self.debug_check();
+            return Some(out);
+        }
+        None
+    }
+
+    /// Drain everything regardless of deadlines or deficits (shutdown
+    /// path), in adapter-name order, batches of at most `max_batch`.
+    pub fn drain_all(&mut self) -> Vec<(String, Vec<Request>)> {
+        let mut out = vec![];
+        let ids: Vec<String> = self.queues.keys().cloned().collect();
+        for id in ids {
+            while self.queues.contains_key(&id) {
+                out.push(self.release(&id, self.cfg.max_batch));
+            }
+        }
+        self.ring.clear();
+        self.debug_check();
+        out
+    }
+
+    /// Pop up to `cap` (>= 1) requests off one adapter queue, maintaining
+    /// the pending counter, the release stats, and the ring/queue
+    /// invariant (a drained adapter leaves both structures).
+    fn release(&mut self, id: &str, cap: usize) -> (String, Vec<Request>) {
+        let aq = self.queues.get_mut(id).expect("release targets an existing queue");
+        let take = aq.q.len().min(cap.max(1));
+        let batch: Vec<Request> = aq.q.drain(..take).collect();
+        self.pending -= batch.len();
+        self.stats.batches += 1;
+        self.stats.released += batch.len() as u64;
+        *self.stats.released_per_adapter.entry(id.to_string()).or_default() +=
+            batch.len() as u64;
+        if aq.q.is_empty() {
+            self.queues.remove(id);
+            self.ring.retain(|x| x != id);
+        }
+        (id.to_string(), batch)
+    }
+
+    /// Debug invariant: the pending counter equals the sum of queue
+    /// lengths, no queue is empty, and each queued adapter appears in the
+    /// DRR ring exactly once.
+    fn debug_check(&self) {
+        debug_assert_eq!(
+            self.pending,
+            self.queues.values().map(|aq| aq.q.len()).sum::<usize>(),
+            "scheduler pending counter drifted from queue contents"
+        );
+        debug_assert!(
+            self.queues.values().all(|aq| !aq.q.is_empty()),
+            "scheduler kept an empty per-adapter queue"
+        );
+        debug_assert!(
+            self.queues.keys().all(|k| self.ring.iter().filter(|x| *x == k).count() == 1),
+            "DRR ring out of sync with the queue map"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, adapter: &str, t: Instant) -> Request {
+        Request { id, adapter: adapter.into(), prompt: vec![1], max_new: 4, enqueued: t }
+    }
+
+    #[test]
+    fn full_batch_releases_immediately_fifo() {
+        let mut s = Scheduler::new(SchedulerCfg {
+            max_batch: 2,
+            max_wait: Duration::from_secs(60),
+            ..Default::default()
+        });
+        let t = Instant::now();
+        s.offer(req(1, "a", t)).unwrap();
+        assert!(s.pop_ready(t).is_none());
+        s.offer(req(2, "a", t)).unwrap();
+        let (adapter, batch) = s.pop_ready(t).unwrap();
+        assert_eq!(adapter, "a");
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(s.pending(), 0);
+        assert_eq!(s.stats().released, 2);
+    }
+
+    #[test]
+    fn deadline_releases_partial_batch() {
+        let mut s = Scheduler::new(SchedulerCfg {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            ..Default::default()
+        });
+        let t0 = Instant::now();
+        s.offer(req(1, "a", t0)).unwrap();
+        assert!(s.pop_ready(t0).is_none());
+        let (_, batch) = s.pop_ready(t0 + Duration::from_millis(10)).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(s.pending(), 0);
+    }
+
+    #[test]
+    fn admission_sheds_beyond_bounds() {
+        let mut s = Scheduler::new(SchedulerCfg {
+            max_batch: 4,
+            max_wait: Duration::from_secs(60),
+            max_queue_per_adapter: 2,
+            max_pending: 3,
+            ..Default::default()
+        });
+        let t = Instant::now();
+        s.offer(req(0, "a", t)).unwrap();
+        s.offer(req(1, "a", t)).unwrap();
+        // Adapter bound.
+        assert_eq!(s.offer(req(2, "a", t)), Err(ShedReason::AdapterQueueFull));
+        // Other adapters still admitted until the global bound.
+        s.offer(req(3, "b", t)).unwrap();
+        assert_eq!(s.offer(req(4, "c", t)), Err(ShedReason::GlobalQueueFull));
+        assert_eq!(s.stats().shed_adapter_full, 1);
+        assert_eq!(s.stats().shed_global_full, 1);
+        assert_eq!(s.stats().admitted, 3);
+        assert_eq!(s.pending(), 3);
+        assert!(s.stats().shed_rate() > 0.0);
+    }
+
+    #[test]
+    fn drain_all_conserves_and_resets() {
+        let mut s = Scheduler::new(SchedulerCfg {
+            max_batch: 3,
+            max_wait: Duration::from_secs(60),
+            ..Default::default()
+        });
+        let t = Instant::now();
+        for i in 0..7 {
+            s.offer(req(i, if i % 2 == 0 { "a" } else { "b" }, t)).unwrap();
+        }
+        let drained = s.drain_all();
+        let total: usize = drained.iter().map(|(_, b)| b.len()).sum();
+        assert_eq!(total, 7);
+        assert!(drained.iter().all(|(_, b)| b.len() <= 3));
+        assert_eq!(s.pending(), 0);
+        assert_eq!(s.active_adapters(), 0);
+        assert!(s.pop_ready(t + Duration::from_secs(120)).is_none());
+    }
+
+    #[test]
+    fn zero_max_batch_is_clamped_not_a_spin_loop() {
+        // Regression guard shared with the Batcher fix: a zero batch
+        // bound must clamp to 1, not release empty batches forever.
+        let mut s = Scheduler::new(SchedulerCfg {
+            max_batch: 0,
+            max_wait: Duration::ZERO,
+            ..Default::default()
+        });
+        let t = Instant::now();
+        s.offer(req(1, "a", t)).unwrap();
+        let mut n = 0;
+        while let Some((_, batch)) = s.pop_ready(t) {
+            assert!(!batch.is_empty());
+            n += batch.len();
+        }
+        assert_eq!(n, 1);
+    }
+
+    #[test]
+    fn jain_index_bounds() {
+        assert_eq!(jain_fairness(&[]), 1.0);
+        assert_eq!(jain_fairness(&[0, 0]), 1.0);
+        assert!((jain_fairness(&[5, 5, 5]) - 1.0).abs() < 1e-12);
+        // One adapter takes everything among four: index = 1/4.
+        assert!((jain_fairness(&[8, 0, 0, 0]) - 0.25).abs() < 1e-12);
+    }
+}

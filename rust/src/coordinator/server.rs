@@ -1,20 +1,36 @@
-//! The serving loop: route → batch → merge (cached) → decode → respond.
+//! The serving loop: route → schedule → merge (cached/swap) → decode →
+//! respond.
 //!
-//! A dedicated coordinator thread owns the batcher; client threads submit
-//! [`Request`]s through an mpsc channel and receive [`Response`]s on a
-//! per-client channel. Model execution is behind [`GenBackend`] so the
-//! loop is testable without PJRT.
+//! A coordinator owns the adapter-aware [`Scheduler`]; clients submit
+//! [`Request`]s through [`Server::submit`] (admission-controlled — an
+//! overloaded scheduler sheds instead of queueing unboundedly) and
+//! batches release through the deadline/DRR policy. Execution goes
+//! through one of two backend traits:
+//!
+//! * [`GenBackend`] (`&mut self`) — the single-threaded path driven by
+//!   [`Server::pump`] / [`Server::serve`]. The PJRT client wrapper is
+//!   `Rc`-based and the in-place [`SwapSlot`](super::registry::SwapSlot)
+//!   owns a single mutable buffer, so both run here.
+//! * [`SharedBackend`] (`&self + Sync`) — the concurrent path driven by
+//!   [`Server::pump_pool`]: every released batch executes on a worker
+//!   from a scoped pool, so merges and decodes for *different* adapters
+//!   proceed in parallel instead of serially. [`HostPoolBackend`] backs
+//!   it with the blocked parallel [`MergeEngine`] (single-flight per
+//!   adapter, bounded merge permits).
 
+use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::batcher::{Batcher, BatcherCfg, Request};
+use super::batcher::Request;
 use super::registry::{AdapterEntry, AdapterRegistry, MergeEngine, MergedCache, SwapMode, SwapSlot};
+use super::scheduler::{Scheduler, SchedulerCfg, ShedReason};
 use crate::runtime::engine::PjrtEngine;
 use crate::runtime::HostTensor;
+use crate::util::pool;
 
 /// A completed generation.
 #[derive(Clone, Debug)]
@@ -26,10 +42,8 @@ pub struct Response {
     pub batch_size: usize,
 }
 
-/// Model side of the serving loop. (The threaded [`Server::serve`] needs
-/// a `Send` backend; the PJRT client wrapper is `Rc`-based, so
-/// [`PjrtBackend`] is driven via the single-threaded [`Server::pump`]
-/// while client load is generated from other threads.)
+/// Model side of the single-threaded serving loop (see the module docs
+/// for when to use this vs. [`SharedBackend`]).
 pub trait GenBackend {
     /// Merge the adapter (or fetch from cache) and decode greedily.
     fn generate(
@@ -53,6 +67,62 @@ pub trait GenBackend {
     }
 }
 
+/// Model side of the concurrent serving path: `&self` + `Sync`, so one
+/// backend instance serves many released batches at once from the
+/// [`Server::pump_pool`] worker pool.
+pub trait SharedBackend: Sync {
+    fn generate(
+        &self,
+        adapter: &AdapterEntry,
+        prompts: &[Vec<i32>],
+        max_new: usize,
+    ) -> Result<Vec<Vec<i32>>>;
+
+    /// See [`GenBackend::merge_stats`].
+    fn merge_stats(&self) -> (u64, u64) {
+        (0, 0)
+    }
+
+    /// See [`GenBackend::swap_stats`].
+    fn swap_stats(&self) -> (u64, f64) {
+        (0, 0.0)
+    }
+}
+
+/// Any [`SharedBackend`] reference also works on the single-threaded
+/// [`GenBackend`] paths ([`Server::pump`], [`Server::serve`]).
+impl<S: SharedBackend> GenBackend for &S {
+    fn generate(
+        &mut self,
+        adapter: &AdapterEntry,
+        prompts: &[Vec<i32>],
+        max_new: usize,
+    ) -> Result<Vec<Vec<i32>>> {
+        SharedBackend::generate(*self, adapter, prompts, max_new)
+    }
+
+    fn merge_stats(&self) -> (u64, u64) {
+        SharedBackend::merge_stats(*self)
+    }
+
+    fn swap_stats(&self) -> (u64, f64) {
+        SharedBackend::swap_stats(*self)
+    }
+}
+
+/// Worker threads for the [`Server::pump_pool`] dispatch stage:
+/// `ETHER_SCHED_WORKERS` overrides, otherwise the shared
+/// [`pool::default_threads`] budget. Note each dispatched merge fans out
+/// further through `parallel_for_chunks`, so this bounds concurrent
+/// *batches*, not total compute threads.
+pub fn dispatch_workers() -> usize {
+    std::env::var("ETHER_SCHED_WORKERS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .map(|n| n.max(1))
+        .unwrap_or_else(pool::default_threads)
+}
+
 /// Serving statistics.
 #[derive(Clone, Debug, Default)]
 pub struct ServerStats {
@@ -64,7 +134,13 @@ pub struct ServerStats {
     pub merge_swaps: u64,
     /// Max involution residual audited across swaps (0.0 without swaps).
     pub swap_residual: f64,
+    /// Requests shed by scheduler admission control (mirror of
+    /// [`super::scheduler::SchedStats::shed`]).
+    pub shed: u64,
     pub latencies_us: Vec<u64>,
+    /// Latency samples split per adapter — the raw material for the
+    /// fairness spread ([`ServerStats::fairness_spread_ms`]).
+    pub latencies_us_by_adapter: BTreeMap<String, Vec<u64>>,
 }
 
 /// Latency quantiles over a **sorted-once** sample buffer. Build one via
@@ -147,6 +223,43 @@ impl ServerStats {
         } else {
             self.served as f64 / self.batches as f64
         }
+    }
+
+    /// Mean latency per adapter in ms, in adapter-name order.
+    pub fn per_adapter_mean_ms(&self) -> Vec<(String, f64)> {
+        self.latencies_us_by_adapter
+            .iter()
+            .filter(|(_, v)| !v.is_empty())
+            .map(|(a, v)| {
+                (a.clone(), v.iter().sum::<u64>() as f64 / v.len() as f64 / 1000.0)
+            })
+            .collect()
+    }
+
+    /// Fairness spread: max − min of the per-adapter mean latencies, in
+    /// ms. A starvation-free scheduler keeps this bounded by the
+    /// deadline even when one adapter saturates the queue; 0.0 when
+    /// fewer than two adapters have been served.
+    pub fn fairness_spread_ms(&self) -> f64 {
+        let means = self.per_adapter_mean_ms();
+        if means.len() < 2 {
+            return 0.0;
+        }
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for (_, m) in means {
+            lo = lo.min(m);
+            hi = hi.max(m);
+        }
+        hi - lo
+    }
+
+    /// Record one completed request.
+    fn record(&mut self, adapter: &str, latency: Duration) {
+        let us = latency.as_micros() as u64;
+        self.served += 1;
+        self.latencies_us.push(us);
+        self.latencies_us_by_adapter.entry(adapter.to_string()).or_default().push(us);
     }
 }
 
@@ -288,6 +401,11 @@ fn weights_fingerprint(merged: &[f32]) -> i32 {
 ///   in place on every adapter change ([`SwapMode::Rebase`] bit-exact,
 ///   [`SwapMode::Involution`] through the inverse transform): O(1)
 ///   weight buffers however many adapters rotate through.
+///
+/// For the *concurrent* dispatch stage ([`Server::pump_pool`]) use
+/// [`HostPoolBackend`]: the swap slot's single mutable buffer is
+/// inherently one-batch-at-a-time, so swap mode stays on this
+/// single-threaded backend.
 pub struct HostMergeBackend {
     pub merger: Arc<MergeEngine>,
     swap: Option<(SwapSlot, SwapMode)>,
@@ -362,27 +480,90 @@ impl GenBackend for HostMergeBackend {
     }
 }
 
-/// In-process serving coordinator (single worker loop).
+/// Thread-safe host backend for the concurrent dispatch stage: merges
+/// go through the [`MergeEngine`]'s `&self` cache path (single-flight
+/// per adapter, bounded merge permits), so any number of pool workers
+/// can serve batches at once. Decode is the same fingerprint-tagged
+/// echo as [`HostMergeBackend`].
+pub struct HostPoolBackend {
+    pub merger: Arc<MergeEngine>,
+}
+
+impl HostPoolBackend {
+    pub fn new(merger: Arc<MergeEngine>) -> HostPoolBackend {
+        HostPoolBackend { merger }
+    }
+
+    /// Bytes of merged weights resident in the engine cache.
+    pub fn resident_weight_bytes(&self) -> usize {
+        self.merger.cache_resident_bytes()
+    }
+}
+
+impl SharedBackend for HostPoolBackend {
+    fn generate(
+        &self,
+        adapter: &AdapterEntry,
+        prompts: &[Vec<i32>],
+        _max_new: usize,
+    ) -> Result<Vec<Vec<i32>>> {
+        let tag = weights_fingerprint(&self.merger.merged(adapter)?);
+        Ok(prompts
+            .iter()
+            .map(|p| {
+                let mut o = p.clone();
+                o.push(tag);
+                o
+            })
+            .collect())
+    }
+
+    fn merge_stats(&self) -> (u64, u64) {
+        self.merger.cache_stats()
+    }
+}
+
+/// In-process serving coordinator over the adapter-aware [`Scheduler`].
 pub struct Server {
     pub registry: AdapterRegistry,
-    pub batcher: Batcher,
+    pub sched: Scheduler,
     pub stats: ServerStats,
 }
 
 impl Server {
-    pub fn new(registry: AdapterRegistry, cfg: BatcherCfg) -> Server {
-        Server { registry, batcher: Batcher::new(cfg), stats: ServerStats::default() }
+    pub fn new(registry: AdapterRegistry, cfg: SchedulerCfg) -> Server {
+        Server { registry, sched: Scheduler::new(cfg), stats: ServerStats::default() }
     }
 
-    /// Process everything currently queued (plus deadline waits) against
-    /// the backend, invoking `on_response` per finished request.
+    /// Submit a request through admission control. Shed requests are
+    /// dropped (and counted); the caller decides whether that is an
+    /// error or expected overload behaviour.
+    pub fn submit(&mut self, req: Request) -> Result<(), ShedReason> {
+        let r = self.sched.offer(req);
+        self.stats.shed = self.sched.stats().shed();
+        r
+    }
+
+    /// Copy backend-side counters into the serving stats (called at the
+    /// end of every pump flavour).
+    fn mirror_backend_stats(&mut self, merge: (u64, u64), swap: (u64, f64)) {
+        self.stats.merge_hits = merge.0;
+        self.stats.merge_misses = merge.1;
+        self.stats.merge_swaps = swap.0;
+        self.stats.swap_residual = swap.1;
+        self.stats.shed = self.sched.stats().shed();
+    }
+
+    /// Process everything currently released by the scheduler at `now`
+    /// against a single-threaded backend, invoking `on_response` per
+    /// finished request.
     pub fn pump<B: GenBackend>(
         &mut self,
         backend: &mut B,
         now: Instant,
         mut on_response: impl FnMut(Response),
     ) -> Result<()> {
-        while let Some((adapter_id, batch)) = self.batcher.pop_ready(now) {
+        while let Some((adapter_id, batch)) = self.sched.pop_ready(now) {
             let adapter = self.registry.get(&adapter_id)?.clone();
             let prompts: Vec<Vec<i32>> = batch.iter().map(|r| r.prompt.clone()).collect();
             let max_new = batch.iter().map(|r| r.max_new).max().unwrap_or(8);
@@ -391,8 +572,7 @@ impl Server {
             self.stats.batches += 1;
             for (req, output) in batch.into_iter().zip(outputs) {
                 let latency = Instant::now().duration_since(req.enqueued);
-                self.stats.served += 1;
-                self.stats.latencies_us.push(latency.as_micros() as u64);
+                self.stats.record(&adapter_id, latency);
                 on_response(Response {
                     id: req.id,
                     adapter: adapter_id.clone(),
@@ -402,17 +582,117 @@ impl Server {
                 });
             }
         }
-        let (hits, misses) = backend.merge_stats();
-        self.stats.merge_hits = hits;
-        self.stats.merge_misses = misses;
-        let (swaps, residual) = backend.swap_stats();
-        self.stats.merge_swaps = swaps;
-        self.stats.swap_residual = residual;
+        self.mirror_backend_stats(backend.merge_stats(), backend.swap_stats());
+        Ok(())
+    }
+
+    /// Concurrent pump: collect every batch the scheduler releases at
+    /// `now`, execute them on up to `workers` scoped pool threads
+    /// (different adapters merge and decode in parallel; same-adapter
+    /// merges deduplicate through the engine's single-flight), then
+    /// deliver responses in release order.
+    ///
+    /// Failure isolation: an unknown adapter or a failed `generate`
+    /// affects only its own batch — every sibling batch still delivers
+    /// its responses — and the pump then returns the **first** error
+    /// (the failed batch's requests are dropped, like a fatal backend
+    /// error on the single-threaded path). Latency is stamped on the
+    /// worker at batch completion, so a slow sibling batch does not
+    /// inflate the per-adapter fairness metrics.
+    pub fn pump_pool<B: SharedBackend>(
+        &mut self,
+        backend: &B,
+        now: Instant,
+        workers: usize,
+        mut on_response: impl FnMut(Response),
+    ) -> Result<()> {
+        let mut ready: Vec<(String, Vec<Request>)> = vec![];
+        while let Some(b) = self.sched.pop_ready(now) {
+            ready.push(b);
+        }
+        let mut first_err: Option<anyhow::Error> = None;
+        if !ready.is_empty() {
+            // Resolve adapters; an unknown id fails only its own batch.
+            let mut jobs: Vec<(AdapterEntry, Vec<Request>)> = Vec::with_capacity(ready.len());
+            for (id, batch) in ready {
+                match self.registry.get(&id) {
+                    Ok(adapter) => jobs.push((adapter.clone(), batch)),
+                    Err(e) => first_err = first_err.or(Some(e)),
+                }
+            }
+            let outcomes: Vec<Result<(Vec<Vec<i32>>, Instant)>> =
+                pool::parallel_map_with(workers.max(1), &jobs, |(adapter, batch)| {
+                    let prompts: Vec<Vec<i32>> =
+                        batch.iter().map(|r| r.prompt.clone()).collect();
+                    let max_new = batch.iter().map(|r| r.max_new).max().unwrap_or(8);
+                    let outputs = backend.generate(adapter, &prompts, max_new)?;
+                    // Completion stamped here, on the worker: latency
+                    // reflects this batch's service time, not the
+                    // slowest sibling's.
+                    Ok((outputs, Instant::now()))
+                });
+            for ((adapter, batch), outcome) in jobs.into_iter().zip(outcomes) {
+                let (outputs, done_at) = match outcome {
+                    Ok(v) => v,
+                    Err(e) => {
+                        // One failed batch must not discard the
+                        // completed work of its siblings.
+                        first_err = first_err.or(Some(e));
+                        continue;
+                    }
+                };
+                let bsz = batch.len();
+                self.stats.batches += 1;
+                for (req, output) in batch.into_iter().zip(outputs) {
+                    let latency = done_at.duration_since(req.enqueued);
+                    self.stats.record(&adapter.id, latency);
+                    on_response(Response {
+                        id: req.id,
+                        adapter: adapter.id.clone(),
+                        output,
+                        latency,
+                        batch_size: bsz,
+                    });
+                }
+            }
+        }
+        self.mirror_backend_stats(backend.merge_stats(), backend.swap_stats());
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// serve()-path admission: clients of the threaded loop block on one
+    /// response per submitted request, so shedding here would deadlock
+    /// them. Instead, force-release the oldest queued work until the
+    /// scheduler has room (lossless backpressure), then offer — which is
+    /// then guaranteed to be admitted.
+    fn ingest<B: GenBackend>(
+        &mut self,
+        req: Request,
+        backend: &mut B,
+        tx: &mpsc::Sender<Response>,
+    ) -> Result<()> {
+        while self.sched.at_capacity(&req.adapter) {
+            // A future `now` expires every queued head, so each pump
+            // releases at least one batch and the loop terminates.
+            let tx2 = tx.clone();
+            self.pump(backend, Instant::now() + self.sched.cfg.max_wait, move |resp| {
+                let _ = tx2.send(resp);
+            })?;
+        }
+        let admitted = self.sched.offer(req);
+        debug_assert!(admitted.is_ok(), "capacity was ensured before the offer");
+        let _ = admitted;
         Ok(())
     }
 
     /// Run a threaded serving session: clients feed `rx`, responses flow
-    /// to `tx`. Exits when `rx` disconnects and queues drain.
+    /// to `tx`. Exits when `rx` disconnects and queues drain. The serve
+    /// loop never sheds: when admission bounds are hit it drains the
+    /// oldest work first (backpressure), so every submitted request gets
+    /// exactly one response.
     pub fn serve<B: GenBackend + Send>(
         mut self,
         mut backend: B,
@@ -422,19 +702,19 @@ impl Server {
         loop {
             // Ingest whatever is available without blocking past the
             // batching deadline.
-            let deadline = self.batcher.cfg.max_wait;
+            let deadline = self.sched.cfg.max_wait;
             match rx.recv_timeout(deadline) {
                 Ok(req) => {
-                    self.batcher.push(req);
+                    self.ingest(req, &mut backend, &tx)?;
                     // opportunistically drain the channel
                     while let Ok(r) = rx.try_recv() {
-                        self.batcher.push(r);
+                        self.ingest(r, &mut backend, &tx)?;
                     }
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
                 Err(mpsc::RecvTimeoutError::Disconnected) => {
                     // flush the remainder and exit
-                    for (adapter_id, batch) in self.batcher.drain_all() {
+                    for (adapter_id, batch) in self.sched.drain_all() {
                         let adapter = self.registry.get(&adapter_id)?.clone();
                         let prompts: Vec<Vec<i32>> =
                             batch.iter().map(|r| r.prompt.clone()).collect();
@@ -444,8 +724,7 @@ impl Server {
                         self.stats.batches += 1;
                         for (req, output) in batch.into_iter().zip(outputs) {
                             let latency = Instant::now().duration_since(req.enqueued);
-                            self.stats.served += 1;
-                            self.stats.latencies_us.push(latency.as_micros() as u64);
+                            self.stats.record(&adapter_id, latency);
                             let _ = tx.send(Response {
                                 id: req.id,
                                 adapter: adapter_id.clone(),
@@ -455,12 +734,7 @@ impl Server {
                             });
                         }
                     }
-                    let (hits, misses) = backend.merge_stats();
-                    self.stats.merge_hits = hits;
-                    self.stats.merge_misses = misses;
-                    let (swaps, residual) = backend.swap_stats();
-                    self.stats.merge_swaps = swaps;
-                    self.stats.swap_residual = residual;
+                    self.mirror_backend_stats(backend.merge_stats(), backend.swap_stats());
                     return Ok(self.stats);
                 }
             }
@@ -505,21 +779,24 @@ mod tests {
         r
     }
 
+    fn cfg(max_batch: usize, max_wait: Duration) -> SchedulerCfg {
+        SchedulerCfg { max_batch, max_wait, ..Default::default() }
+    }
+
     #[test]
     fn pump_routes_to_correct_adapter() {
-        let mut server = Server::new(
-            registry(),
-            BatcherCfg { max_batch: 4, max_wait: Duration::ZERO },
-        );
+        let mut server = Server::new(registry(), cfg(4, Duration::ZERO));
         let t = Instant::now();
         for (i, adapter) in ["a", "b", "a"].iter().enumerate() {
-            server.batcher.push(Request {
-                id: i as u64,
-                adapter: adapter.to_string(),
-                prompt: vec![i as i32],
-                max_new: 1,
-                enqueued: t,
-            });
+            server
+                .submit(Request {
+                    id: i as u64,
+                    adapter: adapter.to_string(),
+                    prompt: vec![i as i32],
+                    max_new: 1,
+                    enqueued: t,
+                })
+                .unwrap();
         }
         let mut backend = EchoBackend { calls: 0 };
         let mut got = vec![];
@@ -536,6 +813,44 @@ mod tests {
         assert_eq!(backend.calls, 2);
         assert_eq!(server.stats.served, 3);
         assert_eq!(server.stats.batches, 2);
+        // per-adapter latency accounting feeds the fairness spread
+        assert_eq!(server.stats.latencies_us_by_adapter.len(), 2);
+        assert!(server.stats.fairness_spread_ms() >= 0.0);
+    }
+
+    #[test]
+    fn submit_sheds_at_the_admission_bound_and_surfaces_in_stats() {
+        let mut server = Server::new(
+            registry(),
+            SchedulerCfg {
+                max_batch: 4,
+                max_wait: Duration::ZERO,
+                max_queue_per_adapter: 2,
+                ..Default::default()
+            },
+        );
+        let t = Instant::now();
+        for i in 0..5u64 {
+            let r = server.submit(Request {
+                id: i,
+                adapter: "a".into(),
+                prompt: vec![0],
+                max_new: 1,
+                enqueued: t,
+            });
+            if i < 2 {
+                assert!(r.is_ok());
+            } else {
+                assert_eq!(r, Err(ShedReason::AdapterQueueFull));
+            }
+        }
+        assert_eq!(server.stats.shed, 3);
+        let mut served = 0;
+        server
+            .pump(&mut EchoBackend { calls: 0 }, t + Duration::from_millis(1), |_| served += 1)
+            .unwrap();
+        assert_eq!(served, 2);
+        assert_eq!(server.stats.shed, 3, "pump must preserve the shed mirror");
     }
 
     #[test]
@@ -555,19 +870,18 @@ mod tests {
         for id in ["a", "b"] {
             registry.register(id, "ether_n4", "host", rng.normal_vec(pl.total, 0.5));
         }
-        let mut server = Server::new(
-            registry,
-            BatcherCfg { max_batch: 4, max_wait: Duration::ZERO },
-        );
+        let mut server = Server::new(registry, cfg(4, Duration::ZERO));
         let t = Instant::now();
         for (i, adapter) in ["a", "b", "a", "b"].iter().enumerate() {
-            server.batcher.push(Request {
-                id: i as u64,
-                adapter: adapter.to_string(),
-                prompt: vec![i as i32],
-                max_new: 1,
-                enqueued: t,
-            });
+            server
+                .submit(Request {
+                    id: i as u64,
+                    adapter: adapter.to_string(),
+                    prompt: vec![i as i32],
+                    max_new: 1,
+                    enqueued: t,
+                })
+                .unwrap();
         }
         let mut backend = HostMergeBackend::new(merger.clone());
         let mut got = vec![];
@@ -588,19 +902,134 @@ mod tests {
         assert_eq!(server.stats.merge_misses, 2);
         // A second pump over the same adapters hits the cache.
         for (i, adapter) in ["a", "b"].iter().enumerate() {
-            server.batcher.push(Request {
-                id: 10 + i as u64,
-                adapter: adapter.to_string(),
-                prompt: vec![0],
-                max_new: 1,
-                enqueued: t,
-            });
+            server
+                .submit(Request {
+                    id: 10 + i as u64,
+                    adapter: adapter.to_string(),
+                    prompt: vec![0],
+                    max_new: 1,
+                    enqueued: t,
+                })
+                .unwrap();
         }
         server
             .pump(&mut backend, t + Duration::from_millis(2), |_| {})
             .unwrap();
         assert_eq!(merger.merges.load(std::sync::atomic::Ordering::SeqCst), 2);
         assert_eq!(server.stats.merge_hits, 2);
+    }
+
+    #[test]
+    fn pump_pool_serves_adapters_concurrently_and_correctly() {
+        use crate::peft::apply::{base_layout_for, ModelDims};
+        use crate::util::rng::Rng;
+
+        let dims = ModelDims { d_model: 16, d_ff: 32, n_layers: 2 };
+        let layout = base_layout_for(dims);
+        let mut rng = Rng::new(31);
+        let base: Vec<f32> = rng.normal_vec(layout.total, 0.05);
+        let merger = Arc::new(MergeEngine::new(dims, base, &layout, 8, 4).unwrap());
+        let mut registry = AdapterRegistry::new();
+        registry.register_fleet(6, "ether_n4", "host", dims, 77).unwrap();
+        let mut server = Server::new(registry, cfg(4, Duration::ZERO));
+        let t = Instant::now();
+        for i in 0..24u64 {
+            server
+                .submit(Request {
+                    id: i,
+                    adapter: format!("user{}", i % 6),
+                    prompt: vec![i as i32],
+                    max_new: 1,
+                    enqueued: t,
+                })
+                .unwrap();
+        }
+        let backend = HostPoolBackend::new(merger.clone());
+        let mut got = vec![];
+        server
+            .pump_pool(&backend, t + Duration::from_millis(1), 4, |r| got.push(r))
+            .unwrap();
+        assert_eq!(got.len(), 24);
+        // Every response carries its own prompt plus its adapter's tag;
+        // distinct adapters get distinct merged weights.
+        let mut tags: std::collections::BTreeMap<String, i32> = Default::default();
+        for r in &got {
+            assert_eq!(r.output[0], r.id as i32);
+            let tag = *r.output.last().unwrap();
+            if let Some(prev) = tags.insert(r.adapter.clone(), tag) {
+                assert_eq!(prev, tag, "adapter {} served from two weights", r.adapter);
+            }
+        }
+        assert_eq!(tags.len(), 6);
+        assert_eq!(tags.values().collect::<std::collections::BTreeSet<_>>().len(), 6);
+        // Six adapters, single-flight: exactly six real merges.
+        assert_eq!(merger.merges.load(std::sync::atomic::Ordering::SeqCst), 6);
+        assert_eq!(server.stats.served, 24);
+        // The shared backend also works on the single-threaded pump path
+        // through the blanket GenBackend impl.
+        server
+            .submit(Request {
+                id: 99,
+                adapter: "user0".into(),
+                prompt: vec![9],
+                max_new: 1,
+                enqueued: t,
+            })
+            .unwrap();
+        let mut served = 0;
+        server
+            .pump(&mut (&backend), t + Duration::from_millis(2), |_| served += 1)
+            .unwrap();
+        assert_eq!(served, 1);
+        assert_eq!(merger.merges.load(std::sync::atomic::Ordering::SeqCst), 6);
+    }
+
+    #[test]
+    fn pump_pool_failed_batch_does_not_discard_siblings() {
+        struct SharedEcho;
+        impl SharedBackend for SharedEcho {
+            fn generate(
+                &self,
+                adapter: &AdapterEntry,
+                prompts: &[Vec<i32>],
+                _max_new: usize,
+            ) -> Result<Vec<Vec<i32>>> {
+                let salt = adapter.peft[0] as i32;
+                Ok(prompts.iter().map(|p| {
+                    let mut o = p.clone();
+                    o.push(salt);
+                    o
+                }).collect())
+            }
+        }
+        // "ghost" is schedulable but not registered: its batch must fail
+        // the pump WITHOUT discarding the sibling batch's responses.
+        let mut server = Server::new(registry(), cfg(4, Duration::ZERO));
+        let t = Instant::now();
+        for (i, adapter) in ["a", "ghost", "a"].iter().enumerate() {
+            server
+                .submit(Request {
+                    id: i as u64,
+                    adapter: adapter.to_string(),
+                    prompt: vec![i as i32],
+                    max_new: 1,
+                    enqueued: t,
+                })
+                .unwrap();
+        }
+        let mut got = vec![];
+        let err = server
+            .pump_pool(&SharedEcho, t + Duration::from_millis(1), 2, |r| got.push(r.id))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("ghost"), "{err:#}");
+        got.sort();
+        assert_eq!(got, vec![0, 2], "the healthy adapter's batch must still deliver");
+        assert_eq!(server.stats.served, 2);
+        // The scheduler is drained either way — a retry pump is clean.
+        assert_eq!(server.sched.pending(), 0);
+        server
+            .pump_pool(&SharedEcho, t + Duration::from_millis(2), 2, |_| {})
+            .unwrap();
     }
 
     #[test]
@@ -622,19 +1051,18 @@ mod tests {
         }
         for mode in [SwapMode::Rebase, SwapMode::Involution] {
             let merger = Arc::new(MergeEngine::new(dims, base.clone(), &layout, 1, 2).unwrap());
-            let mut server = Server::new(
-                registry.clone(),
-                BatcherCfg { max_batch: 4, max_wait: Duration::ZERO },
-            );
+            let mut server = Server::new(registry.clone(), cfg(4, Duration::ZERO));
             let t = Instant::now();
             for (i, adapter) in ["a", "b", "c", "a"].iter().enumerate() {
-                server.batcher.push(Request {
-                    id: i as u64,
-                    adapter: adapter.to_string(),
-                    prompt: vec![i as i32],
-                    max_new: 1,
-                    enqueued: t,
-                });
+                server
+                    .submit(Request {
+                        id: i as u64,
+                        adapter: adapter.to_string(),
+                        prompt: vec![i as i32],
+                        max_new: 1,
+                        enqueued: t,
+                    })
+                    .unwrap();
             }
             let mut backend = HostMergeBackend::with_swap(merger.clone(), mode);
             let mut got = vec![];
@@ -651,7 +1079,7 @@ mod tests {
             };
             assert_ne!(tag("a"), tag("b"), "{mode:?}");
             assert_ne!(tag("b"), tag("c"), "{mode:?}");
-            // Three distinct adapters over ONE buffer (the batcher folds
+            // Three distinct adapters over ONE buffer (the scheduler folds
             // the repeat "a" into its batch): 1 first fill + 2 in-place
             // swaps, O(1) resident bytes.
             assert_eq!(backend.resident_weight_bytes(), base_bytes, "{mode:?}");
@@ -697,11 +1125,22 @@ mod tests {
     }
 
     #[test]
+    fn fairness_spread_over_per_adapter_means() {
+        let mut stats = ServerStats::default();
+        stats.record("hot", Duration::from_millis(2));
+        stats.record("hot", Duration::from_millis(4));
+        stats.record("cold", Duration::from_millis(10));
+        // hot mean 3 ms, cold mean 10 ms → spread 7 ms.
+        assert!((stats.fairness_spread_ms() - 7.0).abs() < 1e-9);
+        let means = stats.per_adapter_mean_ms();
+        assert_eq!(means.len(), 2);
+        // Single-adapter or empty stats have zero spread.
+        assert_eq!(ServerStats::default().fairness_spread_ms(), 0.0);
+    }
+
+    #[test]
     fn threaded_serve_completes_all() {
-        let server = Server::new(
-            registry(),
-            BatcherCfg { max_batch: 3, max_wait: Duration::from_millis(1) },
-        );
+        let server = Server::new(registry(), cfg(3, Duration::from_millis(1)));
         let (req_tx, req_rx) = mpsc::channel();
         let (resp_tx, resp_rx) = mpsc::channel();
         let handle =
@@ -724,5 +1163,45 @@ mod tests {
         let stats = handle.join().unwrap().unwrap();
         assert_eq!(stats.served, 20);
         assert!(stats.mean_batch() >= 1.0);
+        assert_eq!(stats.shed, 0);
+    }
+
+    #[test]
+    fn threaded_serve_backpressures_instead_of_shedding() {
+        // Admission bounds far below the offered load: serve() must
+        // drain-and-retry (lossless), never shed, so every client
+        // request still gets exactly one response.
+        let server = Server::new(
+            registry(),
+            SchedulerCfg {
+                max_batch: 3,
+                max_wait: Duration::from_millis(1),
+                max_queue_per_adapter: 2,
+                max_pending: 3,
+                ..Default::default()
+            },
+        );
+        let (req_tx, req_rx) = mpsc::channel();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let handle =
+            std::thread::spawn(move || server.serve(EchoBackend { calls: 0 }, req_rx, resp_tx));
+        for i in 0..40u64 {
+            req_tx
+                .send(Request {
+                    id: i,
+                    adapter: "a".into(),
+                    prompt: vec![i as i32],
+                    max_new: 1,
+                    enqueued: Instant::now(),
+                })
+                .unwrap();
+        }
+        drop(req_tx);
+        let mut seen: Vec<u64> = resp_rx.iter().map(|r| r.id).collect();
+        seen.sort();
+        assert_eq!(seen, (0..40).collect::<Vec<_>>(), "no request may be dropped");
+        let stats = handle.join().unwrap().unwrap();
+        assert_eq!(stats.served, 40);
+        assert_eq!(stats.shed, 0, "serve() must backpressure, not shed");
     }
 }

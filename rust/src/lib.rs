@@ -28,7 +28,7 @@
 //! | [`data`]       | synthetic workloads (corpus, SynthGLUE, instructions, |
 //! |                | generation control, subject-driven)                   |
 //! | [`train`]      | training loop, LR schedules, checkpoints, sweeps      |
-//! | [`coordinator`]| adapter registry, dynamic batcher, serving loop       |
+//! | [`coordinator`]| adapter registry, fair scheduler, loadgen, serving    |
 //! | [`eval`]       | metric suite + evaluation harnesses                   |
 //! | [`exp`]        | one driver per paper table / figure                   |
 

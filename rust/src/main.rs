@@ -11,7 +11,7 @@
 
 use anyhow::{bail, Result};
 
-use ether::coordinator::{server::PjrtBackend, AdapterRegistry, BatcherCfg, Request, Server};
+use ether::coordinator::{server::PjrtBackend, AdapterRegistry, Request, SchedulerCfg, Server};
 use ether::data::corpus::Corpus;
 use ether::eval::harness::default_lr;
 use ether::exp;
@@ -210,7 +210,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let mut server = Server::new(
         registry,
-        BatcherCfg { max_batch, max_wait: std::time::Duration::from_millis(5) },
+        SchedulerCfg {
+            max_batch,
+            max_wait: std::time::Duration::from_millis(5),
+            ..Default::default()
+        },
     );
     let mut backend = PjrtBackend::new(&engine, &cfg, cache);
     let t0 = std::time::Instant::now();
@@ -220,7 +224,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             format!("user{}", (rng.f64().powi(2) * n_adapters as f64) as usize % n_adapters);
         let mut prompt = vec![ether::data::BOS];
         prompt.extend(ether::data::encode("the "));
-        server.batcher.push(Request {
+        let _ = server.submit(Request {
             id: i as u64,
             adapter,
             prompt,
@@ -251,13 +255,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let lat = s.latency_summary();
     println!(
         "served {} requests in {dt:.2}s ({:.1} req/s) | batches {} (mean size {:.1}) | \
-         p50 {:.1} ms p95 {:.1} ms | merge cache: {} hits / {} misses",
+         p50 {:.1} ms p95 {:.1} ms | shed {} | merge cache: {} hits / {} misses",
         s.served,
         s.served as f64 / dt,
         s.batches,
         s.mean_batch(),
         lat.p50_ms(),
         lat.p95_ms(),
+        s.shed,
         backend.cache.hits,
         backend.cache.misses,
     );

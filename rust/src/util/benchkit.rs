@@ -47,6 +47,48 @@ impl Stats {
     }
 }
 
+/// Slugify a bench name for the `BENCH_<slug>.json` convention.
+fn slugify(name: &str) -> String {
+    let mut slug = String::new();
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() {
+            slug.push(c.to_ascii_lowercase());
+        } else if !slug.ends_with('_') {
+            slug.push('_');
+        }
+    }
+    slug.trim_matches('_').to_string()
+}
+
+/// Write an arbitrary JSON payload as `BENCH_<slug>.json` into `dir`
+/// (created on demand). Shared by [`Bench::write_json`] and by benches
+/// whose result shape is richer than a timing table (e.g. the
+/// `serving_throughput` scenario metrics).
+pub fn write_named_json(name: &str, v: &Value, dir: &Path) -> std::io::Result<PathBuf> {
+    let path = dir.join(format!("BENCH_{}.json", slugify(name)));
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(&path, v.dump())?;
+    Ok(path)
+}
+
+/// [`write_named_json`] into the `ETHER_BENCH_JSON` directory: a no-op
+/// `None` when the env var is unset, `Some(path)` on success, and an
+/// explained `None` on IO failure (mirrors [`Bench::report`]'s
+/// behaviour).
+pub fn emit_named_json(name: &str, v: &Value) -> Option<PathBuf> {
+    let dir = std::env::var("ETHER_BENCH_JSON").ok()?;
+    match write_named_json(name, v, Path::new(&dir)) {
+        Ok(path) => {
+            println!("[benchkit] wrote {path:?}");
+            Some(path)
+        }
+        Err(e) => {
+            eprintln!("[benchkit] could not write bench JSON to {dir:?}: {e}");
+            None
+        }
+    }
+}
+
 /// Human format for a nanosecond quantity.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -134,18 +176,7 @@ impl Bench {
 
     /// Write `BENCH_<slug>.json` into `dir` (created on demand).
     pub fn write_json(&self, dir: &Path) -> std::io::Result<PathBuf> {
-        let mut slug = String::new();
-        for c in self.name.chars() {
-            if c.is_ascii_alphanumeric() {
-                slug.push(c.to_ascii_lowercase());
-            } else if !slug.ends_with('_') {
-                slug.push('_');
-            }
-        }
-        let path = dir.join(format!("BENCH_{}.json", slug.trim_matches('_')));
-        std::fs::create_dir_all(dir)?;
-        std::fs::write(&path, self.to_json().dump())?;
-        Ok(path)
+        write_named_json(&self.name, &self.to_json(), dir)
     }
 
     /// Honor `ETHER_BENCH_JSON` if set (called from [`Bench::report`]).
@@ -244,6 +275,17 @@ mod tests {
         assert!(path.file_name().unwrap().to_str().unwrap().starts_with("BENCH_json_demo"));
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(crate::util::json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn named_json_slug_and_emission() {
+        assert_eq!(slugify("serving throughput (4 scenarios)"), "serving_throughput_4_scenarios");
+        let dir = std::env::temp_dir().join("ether_benchkit_named_json_test");
+        let v = Value::obj(vec![("ok", Value::Bool(true))]);
+        let path = write_named_json("named demo!", &v, &dir).unwrap();
+        assert!(path.file_name().unwrap().to_str().unwrap().starts_with("BENCH_named_demo"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(crate::util::json::parse(&text).unwrap(), v);
     }
 
     #[test]

@@ -77,6 +77,55 @@ where
     out
 }
 
+/// [`parallel_map`] with an explicit thread budget and no
+/// `Default + Clone` bound on the result — results land in `Option`
+/// slots, so fallible work (`R = Result<_, _>`) maps directly.
+///
+/// Unlike the chunked helpers above (tuned for many uniform indices),
+/// items are handed out through a **shared index**, one at a time: a
+/// slow item never serializes its neighbours behind the same static
+/// chunk. This is the coordinator's batch-dispatch primitive — each
+/// item is one released batch with wildly varying cost (cache-hit echo
+/// vs. cold full-model merge), exactly the skew static chunking handles
+/// worst.
+pub fn parallel_map_with<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return vec![];
+    }
+    let threads = threads.max(1).min(n);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    if threads == 1 {
+        for (slot, item) in out.iter_mut().zip(items) {
+            *slot = Some(f(item));
+        }
+    } else {
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        let slots: Vec<std::sync::Mutex<&mut Option<R>>> =
+            out.iter_mut().map(std::sync::Mutex::new).collect();
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                let (f, next, slots) = (&f, &next, &slots);
+                s.spawn(move || loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    **slots[i].lock().unwrap() = Some(f(&items[i]));
+                });
+            }
+        });
+    }
+    out.into_iter()
+        .map(|r| r.expect("parallel_map_with covers every index exactly once"))
+        .collect()
+}
+
 /// Raw-pointer wrapper so scoped workers can write **disjoint** regions of
 /// one buffer (rows, column tiles, or layout ranges) without aliasing
 /// `&mut` slices.
@@ -190,6 +239,26 @@ mod tests {
         let xs: Vec<usize> = (0..257).collect();
         let ys = parallel_map(&xs, |x| x * 2);
         assert_eq!(ys, xs.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_with_supports_results_and_order() {
+        let xs: Vec<usize> = (0..100).collect();
+        // Result<_, _> has no Default — exactly the case parallel_map
+        // cannot express.
+        let ys: Vec<Result<usize, String>> =
+            parallel_map_with(4, &xs, |x| if x % 7 == 0 { Err(format!("{x}")) } else { Ok(x * 3) });
+        for (i, y) in ys.iter().enumerate() {
+            match y {
+                Ok(v) => assert_eq!(*v, i * 3),
+                Err(e) => assert_eq!(*e, format!("{i}")),
+            }
+        }
+        // Empty input and single-thread budget both work.
+        let empty: Vec<usize> = parallel_map_with(4, &[] as &[usize], |x| *x);
+        assert!(empty.is_empty());
+        let one = parallel_map_with(1, &xs, |x| *x + 1);
+        assert_eq!(one[99], 100);
     }
 
     #[test]

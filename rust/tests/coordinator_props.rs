@@ -5,7 +5,7 @@
 use std::time::{Duration, Instant};
 
 use ether::coordinator::registry::MergedCache;
-use ether::coordinator::{AdapterRegistry, Batcher, BatcherCfg, Request, Server};
+use ether::coordinator::{AdapterRegistry, Batcher, BatcherCfg, Request, SchedulerCfg, Server};
 use ether::util::prop::check;
 use ether::util::rng::Rng;
 
@@ -149,7 +149,11 @@ fn server_routes_every_request_to_its_own_adapter() {
         }
         let mut server = Server::new(
             registry,
-            BatcherCfg { max_batch: rng.range(1, 9), max_wait: Duration::ZERO },
+            SchedulerCfg {
+                max_batch: rng.range(1, 9),
+                max_wait: Duration::ZERO,
+                ..Default::default()
+            },
         );
         let t0 = Instant::now();
         let n_req = rng.range(1, 40);
@@ -159,7 +163,7 @@ fn server_routes_every_request_to_its_own_adapter() {
             .map(|r| (r.id, r.adapter[1..].parse::<i32>().unwrap()))
             .collect();
         for r in reqs {
-            server.batcher.push(r);
+            server.submit(r).map_err(|e| format!("unexpected shed: {e}"))?;
         }
         let mut errors = vec![];
         server

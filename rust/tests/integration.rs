@@ -96,23 +96,25 @@ fn mock_serving_pipeline_end_to_end() {
         }
     }
 
-    use ether::coordinator::{AdapterRegistry, BatcherCfg, Request, Server};
+    use ether::coordinator::{AdapterRegistry, Request, SchedulerCfg, Server};
     let mut registry = AdapterRegistry::new();
     registry.register("a", "ether_n4", "tiny", vec![0.3]);
     registry.register("b", "ether_n4", "tiny", vec![1.7]);
     let mut server = Server::new(
         registry,
-        BatcherCfg { max_batch: 4, max_wait: std::time::Duration::ZERO },
+        SchedulerCfg { max_batch: 4, max_wait: std::time::Duration::ZERO, ..Default::default() },
     );
     let t = std::time::Instant::now();
     for (i, ad) in ["a", "b"].iter().enumerate() {
-        server.batcher.push(Request {
-            id: i as u64,
-            adapter: ad.to_string(),
-            prompt: vec![5, 6, 7],
-            max_new: 4,
-            enqueued: t,
-        });
+        server
+            .submit(Request {
+                id: i as u64,
+                adapter: ad.to_string(),
+                prompt: vec![5, 6, 7],
+                max_new: 4,
+                enqueued: t,
+            })
+            .unwrap();
     }
     let mut outs = std::collections::BTreeMap::new();
     server

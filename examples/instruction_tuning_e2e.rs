@@ -17,7 +17,7 @@
 use std::time::Instant;
 
 use anyhow::Result;
-use ether::coordinator::{server::PjrtBackend, AdapterRegistry, Request, SchedulerCfg, Server};
+use ether::coordinator::{AdapterEngine, AdapterRegistry, Request, SchedulerCfg, Server};
 use ether::data::corpus::Corpus;
 use ether::data::instruct::InstructData;
 use ether::eval::harness::mc_eval;
@@ -108,7 +108,7 @@ fn main() -> Result<()> {
             ..Default::default()
         },
     );
-    let mut backend = PjrtBackend::new(&engine, &cfg, 2);
+    let backend = AdapterEngine::pjrt(&engine, &cfg, 2);
     let t2 = Instant::now();
     let n_req = 24;
     for i in 0..n_req {
@@ -126,7 +126,7 @@ fn main() -> Result<()> {
             .expect("within admission bounds");
     }
     let mut shown = 0;
-    server.pump(&mut backend, Instant::now() + std::time::Duration::from_secs(1), |r| {
+    server.pump(&backend, Instant::now() + std::time::Duration::from_secs(1), |r| {
         if shown < 4 {
             println!("  resp[{}] {:?} ({} ms)", r.id, ether::data::decode(&r.output), r.latency.as_millis());
             shown += 1;

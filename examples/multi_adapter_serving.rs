@@ -6,15 +6,16 @@
 //!
 //! Two modes:
 //! * **PJRT** (artifacts built): merge via the HLO `merge` artifact and
-//!   decode through the compiled model.
-//! * **host** (no artifacts / stub xla): merge through the blocked
-//!   parallel [`MergeEngine`] with single-flight + bounded workers —
-//!   the serving-path half of the engine is exercised for real, decode
-//!   is an echo. The host mode drives the concurrent
-//!   `Server::pump_pool` dispatch stage, and also demos the **in-place
-//!   swap** serving path ([`SwapMode::Rebase`] / [`SwapMode::Involution`]):
-//!   one merged buffer total instead of one model copy per cached
-//!   adapter.
+//!   decode through the compiled model ([`AdapterEngine::pjrt`]).
+//! * **host** (no artifacts / stub xla): the unified [`AdapterEngine`]
+//!   facade over the blocked parallel [`MergeEngine`], exercising all
+//!   three weight-residency strategies — the merged LRU cache through
+//!   the concurrent `Server::pump_pool` stage, the **in-place swap**
+//!   slot ([`SwapMode::Rebase`] / [`SwapMode::Involution`]: one merged
+//!   buffer total), and the merge-free **on-the-fly** strategy (zero
+//!   merged buffers: the transform is applied directly to activations) —
+//!   plus the traffic-aware policy that promotes hot adapters to merged
+//!   buffers while the cold tail stays merge-free.
 //!
 //! Scheduler knobs (see the README "Serving guide"):
 //! `--scenario uniform|zipf|bursty|churn`, `--max-batch N`,
@@ -26,8 +27,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 use ether::coordinator::loadgen::{self, LoadGenCfg};
-use ether::coordinator::server::{dispatch_workers, HostMergeBackend, HostPoolBackend, PjrtBackend};
-use ether::coordinator::{AdapterRegistry, MergeEngine, Request, SchedulerCfg, Server, SwapMode};
+use ether::coordinator::server::dispatch_workers;
+use ether::coordinator::{
+    AdapterEngine, AdapterRegistry, ExecutionPolicy, ExecutionStrategy, MergeEngine, Request,
+    SchedulerCfg, Server, StrategyKind, SwapMode,
+};
 use ether::peft::apply::{base_layout_for, peft_layout_for, ModelDims};
 use ether::peft::MethodSpec;
 use ether::runtime::engine::PjrtEngine;
@@ -156,10 +160,10 @@ fn run_pjrt(engine: &PjrtEngine, cfg: &str, n_users: usize, knobs: &Knobs) -> Re
             registry.clone(),
             SchedulerCfg { max_batch, ..knobs.sched },
         );
-        let mut backend = PjrtBackend::new(engine, cfg, cache_cap);
+        let backend = AdapterEngine::pjrt(engine, cfg, cache_cap);
         let t0 = Instant::now();
         push_trace(&mut server, &knobs.load);
-        server.pump(&mut backend, Instant::now() + Duration::from_secs(1), |_| {})?;
+        server.pump(&backend, Instant::now() + Duration::from_secs(1), |_| {})?;
         report_line(&server, &format!("cache={cache_cap}"), t0);
     }
     println!("multi_adapter_serving OK");
@@ -199,7 +203,8 @@ fn run_host(n_users: usize, knobs: &Knobs) -> Result<()> {
     for cache_cap in [2usize, n_users] {
         let merger = Arc::new(MergeEngine::new(dims, base.clone(), &layout, cache_cap, 4)?);
         let mut server = Server::new(registry.clone(), knobs.sched);
-        let backend = HostPoolBackend::new(merger.clone());
+        let backend =
+            AdapterEngine::host(merger.clone(), ExecutionPolicy::Static(StrategyKind::Merged));
         let t0 = Instant::now();
         push_trace(&mut server, &knobs.load);
         server.pump_pool(
@@ -225,10 +230,10 @@ fn run_host(n_users: usize, knobs: &Knobs) -> Result<()> {
     for (label, mode) in [("rebase", SwapMode::Rebase), ("involution", SwapMode::Involution)] {
         let merger = Arc::new(MergeEngine::new(dims, base.clone(), &layout, 1, 4)?);
         let mut server = Server::new(registry.clone(), knobs.sched);
-        let mut backend = HostMergeBackend::with_swap(merger.clone(), mode);
+        let backend = AdapterEngine::host_swap(merger.clone(), mode);
         let t0 = Instant::now();
         push_trace(&mut server, &knobs.load);
-        server.pump(&mut backend, Instant::now() + knobs.sched.max_wait, |_| {})?;
+        server.pump(&backend, Instant::now() + knobs.sched.max_wait, |_| {})?;
         report_line(&server, &format!("swap:{label}"), t0);
         println!(
             "           {} in-place swaps | {:.1} MB resident (vs {:.1} MB for a \
@@ -241,6 +246,63 @@ fn run_host(n_users: usize, knobs: &Knobs) -> Result<()> {
             } else {
                 String::new()
             },
+        );
+    }
+
+    // Merge-free on-the-fly serving: ZERO merged buffers — the adapter
+    // transform is applied directly to activations (`y = T(W)·x`; for
+    // ETHER the O(d)-per-column reflection), so the whole fleet serves
+    // at O(1) extra memory.
+    {
+        let merger = Arc::new(MergeEngine::new(dims, base.clone(), &layout, 1, 4)?);
+        let mut server = Server::new(registry.clone(), knobs.sched);
+        let backend =
+            AdapterEngine::host(merger.clone(), ExecutionPolicy::Static(StrategyKind::OnTheFly));
+        let t0 = Instant::now();
+        push_trace(&mut server, &knobs.load);
+        server.pump_pool(
+            &backend,
+            Instant::now() + knobs.sched.max_wait,
+            knobs.workers,
+            |_| {},
+        )?;
+        report_line(&server, "onthefly", t0);
+        println!(
+            "           {} merges (must be 0) | {} merged bytes resident | \
+             {} requests served merge-free",
+            merger.merges.load(std::sync::atomic::Ordering::SeqCst),
+            backend.resident_weight_bytes(),
+            server.stats.served_onthefly,
+        );
+        assert_eq!(merger.merges.load(std::sync::atomic::Ordering::SeqCst), 0);
+    }
+
+    // Traffic-aware policy: hot adapters are promoted to merged buffers,
+    // the cold tail stays merge-free — the multi-tenant memory story.
+    {
+        let merger = Arc::new(MergeEngine::new(dims, base.clone(), &layout, n_users, 4)?);
+        let mut server = Server::new(registry.clone(), knobs.sched);
+        let backend = AdapterEngine::host(
+            merger.clone(),
+            ExecutionPolicy::TrafficAware { hot_threshold: 8 },
+        );
+        let t0 = Instant::now();
+        push_trace(&mut server, &knobs.load);
+        server.pump_pool(
+            &backend,
+            Instant::now() + knobs.sched.max_wait,
+            knobs.workers,
+            |_| {},
+        )?;
+        report_line(&server, "traffic-aware", t0);
+        println!(
+            "           {} promotions | {} served merged / {} merge-free | \
+             {:.1} MB resident (vs {:.1} MB all-merged)",
+            server.stats.policy_promotions,
+            server.stats.served_merged,
+            server.stats.served_onthefly,
+            backend.resident_weight_bytes() as f64 / 1e6,
+            (n_users * layout.total * 4) as f64 / 1e6,
         );
     }
     println!("multi_adapter_serving OK (host mode)");

@@ -5,16 +5,20 @@
 use std::time::{Duration, Instant};
 
 use ether::coordinator::{
-    server::GenBackend, AdapterRegistry, Batcher, BatcherCfg, Request, Scheduler, SchedulerCfg,
-    Server,
+    AdapterEngine, AdapterRegistry, Batcher, BatcherCfg, ExecutionStrategy, Request, Scheduler,
+    SchedulerCfg, Server,
 };
 use ether::util::benchkit::Bench;
 
 struct NoopBackend;
 
-impl GenBackend for NoopBackend {
+impl ExecutionStrategy for NoopBackend {
+    fn name(&self) -> &'static str {
+        "noop"
+    }
+
     fn generate(
-        &mut self,
+        &self,
         _adapter: &ether::coordinator::registry::AdapterEntry,
         prompts: &[Vec<i32>],
         _max_new: usize,
@@ -95,7 +99,7 @@ fn main() {
         }
         let mut served = 0;
         server
-            .pump(&mut NoopBackend, t + Duration::from_millis(1), |_| served += 1)
+            .pump(&NoopBackend, t + Duration::from_millis(1), |_| served += 1)
             .unwrap();
         assert_eq!(served, 256);
     });
@@ -109,7 +113,7 @@ fn main() {
         let mut bench = Bench::new("serving end-to-end (tiny, PJRT decode)");
         let mut registry = AdapterRegistry::new();
         registry.register("u0", "ether_n4", "tiny", init);
-        let mut backend = ether::coordinator::server::PjrtBackend::new(&engine, "tiny", 2);
+        let backend = AdapterEngine::pjrt(&engine, "tiny", 2);
         let mut server = Server::new(
             registry,
             SchedulerCfg { max_batch: 8, max_wait: Duration::ZERO, ..Default::default() },
@@ -128,7 +132,7 @@ fn main() {
                     .unwrap();
             }
             server
-                .pump(&mut backend, t + Duration::from_millis(1), |_| {})
+                .pump(&backend, t + Duration::from_millis(1), |_| {})
                 .unwrap();
         });
         bench.report();

@@ -1,22 +1,25 @@
 //! Bench — end-to-end serving throughput under the four synthetic
 //! traffic scenarios (uniform, zipf, bursty, adapter-churn) through the
-//! adapter-aware scheduler and the concurrent pool dispatch stage, with
-//! real blocked-parallel merges (host engine, PJRT-free).
+//! adapter-aware scheduler and the unified [`AdapterEngine`] execution
+//! facade, with real blocked-parallel merges (host engine, PJRT-free).
 //!
 //! Emits `BENCH_serving_throughput.json` (when `ETHER_BENCH_JSON` is
 //! set) with per-scenario requests/s, p50/p95 latency, shed rate,
-//! fairness spread, and merge/swap counters — the serving-path
-//! regression record. The `churn+swap` row replays the churn trace
-//! through the in-place involution swap slot (single-threaded by
-//! construction: one mutable buffer), so the PR-2 swap path is under
-//! the same traffic.
+//! fairness spread, merge hit rate, and merge/swap/on-the-fly counters —
+//! the serving-path regression record. The zipf and churn traces are
+//! each replayed through all three weight-residency strategies
+//! (`merged` LRU cache via the concurrent pool, `onthefly` merge-free
+//! activation application, `swap` in-place involution slot), so the
+//! BENCH JSON records the memory/throughput trade per strategy.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use ether::coordinator::loadgen::{self, LoadGenCfg, Scenario};
-use ether::coordinator::server::{HostMergeBackend, HostPoolBackend};
-use ether::coordinator::{AdapterRegistry, MergeEngine, Request, SchedulerCfg, Server, SwapMode};
+use ether::coordinator::{
+    AdapterEngine, AdapterRegistry, ExecutionPolicy, MergeEngine, Request, SchedulerCfg, Server,
+    StrategyKind, SwapMode,
+};
 use ether::peft::apply::{base_layout_for, ModelDims};
 use ether::util::benchkit;
 use ether::util::json::Value;
@@ -34,8 +37,10 @@ struct RunReport {
     shed_rate: f64,
     fairness_spread_ms: f64,
     release_fairness: f64,
+    merge_hit_rate: f64,
     merges: u64,
     swaps: u64,
+    served_onthefly: u64,
 }
 
 impl RunReport {
@@ -50,21 +55,26 @@ impl RunReport {
             ("shed_rate", Value::num(self.shed_rate)),
             ("fairness_spread_ms", Value::num(self.fairness_spread_ms)),
             ("release_fairness_jain", Value::num(self.release_fairness)),
+            ("merge_hit_rate", Value::num(self.merge_hit_rate)),
             ("merges", Value::num(self.merges as f64)),
             ("swaps", Value::num(self.swaps as f64)),
+            ("served_onthefly", Value::num(self.served_onthefly as f64)),
         ])
     }
 }
 
+/// Which strategy row to run a scenario under.
 enum Dispatch {
-    /// Concurrent pool dispatch through [`HostPoolBackend`].
+    /// Merged-weight LRU cache through the concurrent pool stage.
     Pool { workers: usize },
-    /// Single-threaded in-place swap slot ([`HostMergeBackend`]).
+    /// Merge-free activation application through the concurrent pool.
+    OnTheFly { workers: usize },
+    /// Single-threaded in-place swap slot.
     Swap(SwapMode),
 }
 
 /// Replay one scenario trace through a fresh server; pump on burst
-/// boundaries and every 32 submissions, then drain.
+/// boundaries and whenever virtual time advances, then drain.
 fn run_scenario(
     label: &str,
     scenario: Scenario,
@@ -98,15 +108,27 @@ fn run_scenario(
     let t0 = Instant::now();
     match dispatch {
         Dispatch::Pool { workers } => {
-            let backend = HostPoolBackend::new(merger.clone());
+            let engine = AdapterEngine::host(
+                merger.clone(),
+                ExecutionPolicy::Static(StrategyKind::Merged),
+            );
             drive(&mut server, &arrivals, |s, now| {
-                s.pump_pool(&backend, now, *workers, |_| {}).unwrap()
+                s.pump_pool(&engine, now, *workers, |_| {}).unwrap()
+            });
+        }
+        Dispatch::OnTheFly { workers } => {
+            let engine = AdapterEngine::host(
+                merger.clone(),
+                ExecutionPolicy::Static(StrategyKind::OnTheFly),
+            );
+            drive(&mut server, &arrivals, |s, now| {
+                s.pump_pool(&engine, now, *workers, |_| {}).unwrap()
             });
         }
         Dispatch::Swap(mode) => {
-            let mut backend = HostMergeBackend::with_swap(merger.clone(), *mode);
+            let engine = AdapterEngine::host_swap(merger.clone(), *mode);
             drive(&mut server, &arrivals, |s, now| {
-                s.pump(&mut backend, now, |_| {}).unwrap()
+                s.pump(&engine, now, |_| {}).unwrap()
             });
         }
     }
@@ -130,12 +152,14 @@ fn run_scenario(
         shed_rate: sched.shed_rate(),
         fairness_spread_ms: stats.fairness_spread_ms(),
         release_fairness: sched.release_fairness(),
+        merge_hit_rate: stats.merge_hit_rate(),
         merges: merger.merges.load(std::sync::atomic::Ordering::SeqCst),
         swaps: merger.swap_stats().0,
+        served_onthefly: stats.served_onthefly,
     }
 }
 
-/// Submission loop shared by both dispatch flavours: pace submissions to
+/// Submission loop shared by all dispatch flavours: pace submissions to
 /// the trace's virtual arrival times (so a burst floods admission
 /// control at once while exponential traffic trickles), pump whenever
 /// virtual time advances, then drain past the deadline. Requests carry
@@ -186,8 +210,9 @@ fn main() {
         N_ADAPTERS, n_requests, workers
     );
     println!(
-        "{:<12} {:>10} {:>8} {:>10} {:>10} {:>9} {:>11} {:>8} {:>8} {:>7}",
-        "scenario", "req/s", "served", "p50 ms", "p95 ms", "shed", "spread ms", "jain", "merges", "swaps"
+        "{:<14} {:>10} {:>8} {:>10} {:>10} {:>9} {:>11} {:>8} {:>8} {:>8} {:>7} {:>7}",
+        "scenario", "req/s", "served", "p50 ms", "p95 ms", "shed", "spread ms", "jain",
+        "hitrate", "merges", "swaps", "otf"
     );
 
     let mut rows: Vec<Value> = vec![];
@@ -208,21 +233,39 @@ fn main() {
         print_row(&r);
         rows.push(r.to_json());
     }
-    // The churn trace again, through the in-place involution swap slot
-    // (PR-2 path): maximal adapter turnover over ONE merged buffer.
+    // Per-strategy rows: the zipf (hot-head popularity) and churn
+    // (rotating working set) traces replayed through the merge-free
+    // on-the-fly strategy and the in-place involution swap slot, so the
+    // BENCH JSON records the memory/throughput trade per strategy.
+    let zipf = Scenario::all()[1];
+    assert_eq!(zipf.name(), "zipf");
     let churn = Scenario::all()[3];
     assert_eq!(churn.name(), "churn");
-    let r = run_scenario(
-        "churn+swap",
-        churn,
-        n_requests,
-        &base,
-        dims,
-        &Dispatch::Swap(SwapMode::Involution),
-    );
-    assert!(r.swaps > 0, "churn must exercise the in-place swap path");
-    print_row(&r);
-    rows.push(r.to_json());
+    for (scenario, name) in [(zipf, "zipf"), (churn, "churn")] {
+        let r = run_scenario(
+            &format!("{name}+otf"),
+            scenario,
+            n_requests,
+            &base,
+            dims,
+            &Dispatch::OnTheFly { workers },
+        );
+        assert_eq!(r.merges, 0, "{name}+otf: on-the-fly serving must never merge");
+        assert!(r.served_onthefly > 0, "{name}+otf must serve merge-free");
+        print_row(&r);
+        rows.push(r.to_json());
+        let r = run_scenario(
+            &format!("{name}+swap"),
+            scenario,
+            n_requests,
+            &base,
+            dims,
+            &Dispatch::Swap(SwapMode::Involution),
+        );
+        assert!(r.swaps > 0, "{name}+swap must exercise the in-place swap path");
+        print_row(&r);
+        rows.push(r.to_json());
+    }
 
     let payload = Value::obj(vec![
         ("name", Value::s("serving throughput".to_string())),
@@ -238,7 +281,7 @@ fn main() {
 
 fn print_row(r: &RunReport) {
     println!(
-        "{:<12} {:>10.1} {:>8} {:>10.2} {:>10.2} {:>8.1}% {:>11.2} {:>8.3} {:>8} {:>7}",
+        "{:<14} {:>10.1} {:>8} {:>10.2} {:>10.2} {:>8.1}% {:>11.2} {:>8.3} {:>7.0}% {:>7} {:>7} {:>7}",
         r.label,
         r.req_per_s,
         r.served,
@@ -247,7 +290,9 @@ fn print_row(r: &RunReport) {
         r.shed_rate * 100.0,
         r.fairness_spread_ms,
         r.release_fairness,
+        r.merge_hit_rate * 100.0,
         r.merges,
         r.swaps,
-    );
+        r.served_onthefly,
+    )
 }

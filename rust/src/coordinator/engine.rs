@@ -1,0 +1,761 @@
+//! The unified [`AdapterEngine`]: one `&self + Sync` execution facade
+//! over pluggable [`ExecutionStrategy`] implementations.
+//!
+//! Before this module the backend API had sprawled into two
+//! near-duplicate traits (`GenBackend` with `&mut self`, `SharedBackend`
+//! with `&self + Sync`) and three backend structs (`PjrtBackend`,
+//! `HostMergeBackend`, `HostPoolBackend`). Every execution path is now
+//! one object-safe trait — [`ExecutionStrategy`], `&self + Sync` by
+//! contract, so the same instance drives the single-threaded
+//! [`Server::pump`](super::server::Server::pump), the concurrent
+//! [`Server::pump_pool`](super::server::Server::pump_pool) worker stage,
+//! and the threaded [`Server::serve`](super::server::Server::serve) loop
+//! without blanket-impl adapters.
+//!
+//! # Strategies
+//!
+//! * [`MergedCacheStrategy`] (`"merged"`) — merge-on-demand through the
+//!   [`MergeEngine`] LRU cache: one full model copy per cached adapter,
+//!   single-flight deduplication, concurrency-friendly. The hot-adapter
+//!   workhorse (a cache hit is a lock-and-clone).
+//! * [`InvolutionSwapStrategy`] (`"swap"`) — a single in-place
+//!   [`SwapSlot`] rewritten on every adapter change
+//!   ([`SwapMode::Rebase`] bit-exact, [`SwapMode::Involution`] through
+//!   the paper's H·H = I inversion): one model copy **total**. The slot
+//!   is one mutable buffer, so batches serialize on its lock.
+//! * [`OnTheFlyStrategy`] (`"onthefly"`) — **zero** merged buffers: the
+//!   transform is applied directly to activations per work item
+//!   (`y = T(W)·x`; for ETHER the O(d)-per-column reflection
+//!   `H·y = y − 2û(ûᵀy)`) through
+//!   `TransformOp::apply_activations_into`. Serving an adapter costs
+//!   O(1) extra memory however many adapters rotate through — the cold
+//!   long-tail strategy.
+//! * [`PjrtMergedStrategy`] (`"pjrt-merged"`) — merge via the HLO
+//!   `merge` artifact, greedy decode through the compiled model, with
+//!   the same merged-weight LRU semantics behind a mutex.
+//!
+//! # Policy
+//!
+//! [`ExecutionPolicy`] picks the strategy per adapter:
+//! [`ExecutionPolicy::Static`] routes everything through one strategy;
+//! [`ExecutionPolicy::TrafficAware`] watches the per-adapter request
+//! counters the scheduler feeds through
+//! [`ExecutionStrategy::record_traffic`] and **promotes** an adapter to
+//! the merged cache once its cumulative request count reaches the
+//! threshold — hot adapters get merged buffers, the cold tail is served
+//! merge-free. Promotions are sticky and counted
+//! ([`StrategyCounters::policy_promotions`]).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use super::registry::{AdapterEntry, MergeEngine, MergedCache, SwapMode, SwapSlot};
+use crate::runtime::engine::PjrtEngine;
+use crate::runtime::HostTensor;
+
+/// Cheap fingerprint proving which weights (or adapted activations)
+/// served a batch: a strided bit-fold over the whole vector, so it stays
+/// adapter-distinct regardless of where the adapted values sit.
+pub fn weights_fingerprint(data: &[f32]) -> i32 {
+    let stride = data.len() / 64 + 1;
+    data.iter()
+        .step_by(stride)
+        .fold(0u32, |acc, x| acc.rotate_left(5) ^ x.to_bits()) as i32
+}
+
+/// Echo decode shared by the host strategies: each prompt comes back
+/// with the strategy's weight/activation fingerprint appended, so tests
+/// and benches can observe which weights served which request.
+fn echo_tagged(prompts: &[Vec<i32>], tag: i32) -> Vec<Vec<i32>> {
+    prompts
+        .iter()
+        .map(|p| {
+            let mut o = p.clone();
+            o.push(tag);
+            o
+        })
+        .collect()
+}
+
+/// Per-strategy serving counters, surfaced into
+/// [`ServerStats`](super::server::ServerStats) after every pump.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StrategyCounters {
+    /// Requests served through the merged-weight cache strategy.
+    pub served_merged: u64,
+    /// Requests served merge-free through the on-the-fly strategy.
+    pub served_onthefly: u64,
+    /// Requests served through the in-place swap strategy.
+    pub served_swap: u64,
+    /// Cold→hot promotions performed by a traffic-aware policy.
+    pub policy_promotions: u64,
+}
+
+/// Object-safe execution strategy: how an adapter's weights meet a
+/// released batch. `&self + Sync + Send` by contract, so one instance
+/// serves any number of concurrent pool workers (and moves into the
+/// threaded serve loop).
+pub trait ExecutionStrategy: Sync + Send {
+    /// Short kind label (`"merged"` / `"swap"` / `"onthefly"` / ...).
+    fn name(&self) -> &'static str;
+
+    /// Execute one batch for `adapter`: one output row per prompt.
+    fn generate(
+        &self,
+        adapter: &AdapterEntry,
+        prompts: &[Vec<i32>],
+        max_new: usize,
+    ) -> Result<Vec<Vec<i32>>>;
+
+    /// Cumulative (hits, misses) of any merged-weight cache behind this
+    /// strategy — mirrored into `ServerStats` after each pump.
+    fn merge_stats(&self) -> (u64, u64) {
+        (0, 0)
+    }
+
+    /// Cumulative (in-place swaps, max audited involution residual).
+    fn swap_stats(&self) -> (u64, f64) {
+        (0, 0.0)
+    }
+
+    /// Per-strategy served counters (policy facades report real values;
+    /// leaf strategies report zeros).
+    fn strategy_counters(&self) -> StrategyCounters {
+        StrategyCounters::default()
+    }
+
+    /// Scheduler feed: the cumulative released-request count for
+    /// `adapter`. Policy-aware facades use it for promotion decisions;
+    /// leaf strategies ignore it.
+    fn record_traffic(&self, adapter: &str, requests: u64) {
+        let _ = (adapter, requests);
+    }
+
+    /// Bytes of merged weights this strategy keeps resident.
+    fn resident_weight_bytes(&self) -> usize {
+        0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Leaf strategies.
+// ---------------------------------------------------------------------------
+
+/// Merged-weight LRU strategy over the blocked parallel [`MergeEngine`]
+/// (single-flight per adapter, bounded merge permits): any number of
+/// pool workers serve batches at once. Decode is the fingerprint-tagged
+/// echo (real model decode lives in [`PjrtMergedStrategy`]).
+pub struct MergedCacheStrategy {
+    merger: Arc<MergeEngine>,
+}
+
+impl MergedCacheStrategy {
+    pub fn new(merger: Arc<MergeEngine>) -> MergedCacheStrategy {
+        MergedCacheStrategy { merger }
+    }
+}
+
+impl ExecutionStrategy for MergedCacheStrategy {
+    fn name(&self) -> &'static str {
+        "merged"
+    }
+
+    fn generate(
+        &self,
+        adapter: &AdapterEntry,
+        prompts: &[Vec<i32>],
+        _max_new: usize,
+    ) -> Result<Vec<Vec<i32>>> {
+        let tag = weights_fingerprint(&self.merger.merged(adapter)?);
+        Ok(echo_tagged(prompts, tag))
+    }
+
+    fn merge_stats(&self) -> (u64, u64) {
+        self.merger.cache_stats()
+    }
+
+    fn resident_weight_bytes(&self) -> usize {
+        self.merger.cache_resident_bytes()
+    }
+}
+
+/// In-place swap strategy: ONE merged buffer total, rewritten on every
+/// adapter change through [`MergeEngine::swap_into`]. The slot is a
+/// single mutable buffer, so concurrent batches serialize on its lock —
+/// the memory-for-concurrency trade this strategy exists for.
+pub struct InvolutionSwapStrategy {
+    merger: Arc<MergeEngine>,
+    slot: Mutex<SwapSlot>,
+    mode: SwapMode,
+}
+
+impl InvolutionSwapStrategy {
+    pub fn new(merger: Arc<MergeEngine>, mode: SwapMode) -> InvolutionSwapStrategy {
+        let slot = merger.new_swap_slot();
+        InvolutionSwapStrategy { merger, slot: Mutex::new(slot), mode }
+    }
+}
+
+impl ExecutionStrategy for InvolutionSwapStrategy {
+    fn name(&self) -> &'static str {
+        "swap"
+    }
+
+    fn generate(
+        &self,
+        adapter: &AdapterEntry,
+        prompts: &[Vec<i32>],
+        _max_new: usize,
+    ) -> Result<Vec<Vec<i32>>> {
+        let mut slot = self.slot.lock().unwrap();
+        self.merger.swap_into(&mut slot, adapter, self.mode)?;
+        let tag = weights_fingerprint(slot.weights());
+        Ok(echo_tagged(prompts, tag))
+    }
+
+    /// Swap semantics: a "hit" is an already-resident adapter, a "miss"
+    /// is any rewrite (the first fill counts in `merges`).
+    fn merge_stats(&self) -> (u64, u64) {
+        let (swaps, hits, _) = self.merger.swap_stats();
+        (hits, swaps + self.merger.merges.load(Ordering::SeqCst))
+    }
+
+    fn swap_stats(&self) -> (u64, f64) {
+        let (swaps, _, residual) = self.merger.swap_stats();
+        (swaps, residual as f64)
+    }
+
+    fn resident_weight_bytes(&self) -> usize {
+        self.slot.lock().unwrap().resident_bytes()
+    }
+}
+
+/// Merge-free strategy: serves an adapter by applying its transform
+/// directly to activations — per work item `y = T(W)·x` through
+/// `TransformOp::apply_activations_into` — with **zero merged weight
+/// buffers** allocated, however many adapters rotate through. Decode is
+/// the fingerprint-tagged echo over the adapted probe activations.
+pub struct OnTheFlyStrategy {
+    merger: Arc<MergeEngine>,
+}
+
+impl OnTheFlyStrategy {
+    pub fn new(merger: Arc<MergeEngine>) -> OnTheFlyStrategy {
+        OnTheFlyStrategy { merger }
+    }
+}
+
+impl ExecutionStrategy for OnTheFlyStrategy {
+    fn name(&self) -> &'static str {
+        "onthefly"
+    }
+
+    fn generate(
+        &self,
+        adapter: &AdapterEntry,
+        prompts: &[Vec<i32>],
+        _max_new: usize,
+    ) -> Result<Vec<Vec<i32>>> {
+        let y = self.merger.activations(adapter, 1)?;
+        let tag = weights_fingerprint(&y);
+        Ok(echo_tagged(prompts, tag))
+    }
+    // resident_weight_bytes: the default 0 — and the engine's merge
+    // counters stay untouched, which rust/tests/engine_parity.rs pins.
+}
+
+/// PJRT-backed merged-cache strategy: merge via the HLO `merge`
+/// artifact, greedy decode through the `none` logits artifact on the
+/// merged weights. Cache misses deduplicate through a single-flight
+/// marker (mirroring [`MergeEngine::merged`], minus the permit budget),
+/// so cache hits never wait behind an in-flight HLO merge.
+///
+/// **Sync caveat**: this strategy satisfies the `&self + Sync` contract
+/// because the vendored `xla` stub's client types are plain unit
+/// structs. The real xla-rs PJRT client is `Rc`-based (the reason the
+/// pre-engine `PjrtBackend` was confined to a `&mut self` trait);
+/// swapping the real bindings in makes this impl fail the `Sync + Send`
+/// supertrait bound **at compile time** — at which point the strategy
+/// needs a thread-confined client or a dedicated single-threaded
+/// wrapper, never an `unsafe impl Send/Sync`.
+pub struct PjrtMergedStrategy<'e> {
+    engine: &'e PjrtEngine,
+    cfg: String,
+    cache: Mutex<MergedCache>,
+    inflight: Mutex<std::collections::HashSet<String>>,
+    inflight_cv: Condvar,
+}
+
+/// RAII single-flight marker: removes the id and wakes waiters on drop,
+/// so an error (or panic) inside the HLO merge can never wedge other
+/// threads waiting on the same adapter.
+struct PjrtFlight<'s, 'e> {
+    owner: &'s PjrtMergedStrategy<'e>,
+    id: String,
+}
+
+impl Drop for PjrtFlight<'_, '_> {
+    fn drop(&mut self) {
+        self.owner
+            .inflight
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .remove(&self.id);
+        self.owner.inflight_cv.notify_all();
+    }
+}
+
+impl<'e> PjrtMergedStrategy<'e> {
+    pub fn new(engine: &'e PjrtEngine, cfg: &str, cache_capacity: usize) -> PjrtMergedStrategy<'e> {
+        PjrtMergedStrategy {
+            engine,
+            cfg: cfg.to_string(),
+            cache: Mutex::new(MergedCache::new(cache_capacity)),
+            inflight: Mutex::new(std::collections::HashSet::new()),
+            inflight_cv: Condvar::new(),
+        }
+    }
+
+    /// Cache guard with poison recovery: the cache is a plain LRU map
+    /// with no cross-entry invariants, so one panicked merge must not
+    /// cascade panics into every later lookup (same rationale as
+    /// `PjrtEngine::cache_guard`).
+    fn cache_guard(&self) -> std::sync::MutexGuard<'_, MergedCache> {
+        self.cache
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    fn merged(&self, adapter: &AdapterEntry, base: &[f32]) -> Result<Arc<Vec<f32>>> {
+        loop {
+            if let Some(m) = self.cache_guard().get(&adapter.id) {
+                return Ok(m);
+            }
+            let mut inflight = self
+                .inflight
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            if !inflight.contains(&adapter.id) {
+                inflight.insert(adapter.id.clone());
+                break;
+            }
+            // Another thread is merging this adapter: wait for its
+            // flight to end, then re-probe the cache.
+            while inflight.contains(&adapter.id) {
+                inflight = self
+                    .inflight_cv
+                    .wait(inflight)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
+            }
+        }
+        let _flight = PjrtFlight { owner: self, id: adapter.id.clone() };
+        // Double-checked: a racer may have published between our cache
+        // probe and winning the flight slot.
+        if let Some(m) = self.cache_guard().get(&adapter.id) {
+            return Ok(m);
+        }
+        let exec = self
+            .engine
+            .load(&format!("lm_{}_{}_merge", self.cfg, adapter.method))?;
+        let out = exec.run(&[
+            HostTensor::vec_f32(base.to_vec()),
+            HostTensor::vec_f32((*adapter.peft).clone()),
+        ])?;
+        let merged = Arc::new(out[0].f32s()?.to_vec());
+        // Publish before the flight marker drops, so woken waiters hit.
+        self.cache_guard().put(&adapter.id, merged.clone());
+        Ok(merged)
+    }
+}
+
+impl ExecutionStrategy for PjrtMergedStrategy<'_> {
+    fn name(&self) -> &'static str {
+        "pjrt-merged"
+    }
+
+    fn generate(
+        &self,
+        adapter: &AdapterEntry,
+        prompts: &[Vec<i32>],
+        max_new: usize,
+    ) -> Result<Vec<Vec<i32>>> {
+        let base = self
+            .engine
+            .manifest
+            .load_init(&format!("{}_base", self.cfg))?;
+        let merged = self.merged(adapter, &base)?;
+        decode_merged(self.engine, &self.cfg, &merged, prompts, max_new)
+    }
+
+    fn merge_stats(&self) -> (u64, u64) {
+        let c = self.cache_guard();
+        (c.hits, c.misses)
+    }
+
+    fn resident_weight_bytes(&self) -> usize {
+        self.cache_guard().resident_bytes()
+    }
+}
+
+/// Greedy decode through the `none` logits artifact on merged weights.
+pub fn decode_merged(
+    engine: &PjrtEngine,
+    cfg: &str,
+    merged: &[f32],
+    prompts: &[Vec<i32>],
+    max_new: usize,
+) -> Result<Vec<Vec<i32>>> {
+    let c = engine.manifest.config(cfg)?.clone();
+    let exec = engine.load(&format!("lm_{cfg}_none_logits"))?;
+    let mut rows: Vec<Vec<i32>> = prompts.to_vec();
+    rows.resize(c.batch, vec![crate::data::BOS]);
+    let mut done = vec![false; c.batch];
+    let base = HostTensor::vec_f32(merged.to_vec());
+    let peft = HostTensor::vec_f32(vec![0.0]);
+    for _ in 0..max_new {
+        let mut tokens = vec![crate::data::PAD; c.batch * c.seq];
+        let mut lengths = vec![1i32; c.batch];
+        for (i, row) in rows.iter().enumerate() {
+            let start = row.len().saturating_sub(c.seq);
+            let window = &row[start..];
+            tokens[i * c.seq..i * c.seq + window.len()].copy_from_slice(window);
+            lengths[i] = window.len() as i32;
+        }
+        let out = exec.run(&[
+            base.clone(),
+            peft.clone(),
+            HostTensor::mat_i32(c.batch, c.seq, tokens),
+            HostTensor::vec_i32(lengths),
+        ])?;
+        let logits = out[0].f32s()?;
+        let mut all_done = true;
+        for i in 0..prompts.len() {
+            if done[i] {
+                continue;
+            }
+            let row = &logits[i * c.vocab..(i + 1) * c.vocab];
+            let next = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(t, _)| t as i32)
+                .unwrap_or(crate::data::EOS);
+            if next == crate::data::EOS || next == crate::data::PAD {
+                done[i] = true;
+            } else {
+                rows[i].push(next);
+                all_done = false;
+            }
+        }
+        if all_done {
+            break;
+        }
+    }
+    Ok(rows[..prompts.len()]
+        .iter()
+        .zip(prompts)
+        .map(|(row, p)| row[p.len()..].to_vec())
+        .collect())
+}
+
+// ---------------------------------------------------------------------------
+// Policy + facade.
+// ---------------------------------------------------------------------------
+
+/// Which execution strategy serves a batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum StrategyKind {
+    /// Merged-weight LRU cache: one model copy per cached adapter.
+    Merged,
+    /// Single in-place swap slot: one model copy total.
+    Swap,
+    /// Merge-free activation application: zero model copies.
+    OnTheFly,
+}
+
+/// Per-adapter strategy selection.
+#[derive(Clone, Copy, Debug)]
+pub enum ExecutionPolicy {
+    /// Every adapter through one strategy.
+    Static(StrategyKind),
+    /// Hot adapters (cumulative scheduler request count ≥
+    /// `hot_threshold`) are promoted to [`StrategyKind::Merged`]; the
+    /// cold long tail stays on [`StrategyKind::OnTheFly`] at O(1) extra
+    /// memory. Promotion is sticky and counted.
+    TrafficAware {
+        /// Released-request count at which an adapter earns a merged
+        /// buffer.
+        hot_threshold: u64,
+    },
+}
+
+/// The unified execution facade: owns the strategies its
+/// [`ExecutionPolicy`] can select, routes every batch, and keeps the
+/// per-strategy counters [`ServerStats`](super::server::ServerStats)
+/// mirrors. `&self + Sync` — one engine serves all pump flavours.
+pub struct AdapterEngine<'a> {
+    merged: Option<Box<dyn ExecutionStrategy + 'a>>,
+    swap: Option<Box<dyn ExecutionStrategy + 'a>>,
+    onthefly: Option<Box<dyn ExecutionStrategy + 'a>>,
+    policy: ExecutionPolicy,
+    served_merged: AtomicU64,
+    served_onthefly: AtomicU64,
+    served_swap: AtomicU64,
+    promotions: AtomicU64,
+    /// Latest cumulative per-adapter request counters fed from the
+    /// scheduler via [`ExecutionStrategy::record_traffic`].
+    traffic: Mutex<BTreeMap<String, u64>>,
+    /// Adapters promoted to the merged strategy (sticky).
+    promoted: Mutex<BTreeSet<String>>,
+}
+
+impl<'a> AdapterEngine<'a> {
+    fn empty(policy: ExecutionPolicy) -> AdapterEngine<'a> {
+        AdapterEngine {
+            merged: None,
+            swap: None,
+            onthefly: None,
+            policy,
+            served_merged: AtomicU64::new(0),
+            served_onthefly: AtomicU64::new(0),
+            served_swap: AtomicU64::new(0),
+            promotions: AtomicU64::new(0),
+            traffic: Mutex::new(BTreeMap::new()),
+            promoted: Mutex::new(BTreeSet::new()),
+        }
+    }
+
+    /// Host-mode engine over the blocked parallel [`MergeEngine`]:
+    /// exactly the strategies the policy can select are instantiated
+    /// (`Static` builds one; `TrafficAware` builds Merged + OnTheFly).
+    /// `Static(StrategyKind::Swap)` defaults to
+    /// [`SwapMode::Involution`]; use [`AdapterEngine::host_swap`] to
+    /// pick the bit-exact [`SwapMode::Rebase`] flavour explicitly.
+    pub fn host(merger: Arc<MergeEngine>, policy: ExecutionPolicy) -> AdapterEngine<'static> {
+        let mut e = AdapterEngine::empty(policy);
+        match policy {
+            ExecutionPolicy::Static(StrategyKind::Merged) => {
+                e.merged = Some(Box::new(MergedCacheStrategy::new(merger)));
+            }
+            ExecutionPolicy::Static(StrategyKind::Swap) => {
+                e.swap =
+                    Some(Box::new(InvolutionSwapStrategy::new(merger, SwapMode::Involution)));
+            }
+            ExecutionPolicy::Static(StrategyKind::OnTheFly) => {
+                e.onthefly = Some(Box::new(OnTheFlyStrategy::new(merger)));
+            }
+            ExecutionPolicy::TrafficAware { .. } => {
+                e.merged = Some(Box::new(MergedCacheStrategy::new(merger.clone())));
+                e.onthefly = Some(Box::new(OnTheFlyStrategy::new(merger)));
+            }
+        }
+        e
+    }
+
+    /// Host engine pinned to the in-place swap strategy with an explicit
+    /// [`SwapMode`] flavour.
+    pub fn host_swap(merger: Arc<MergeEngine>, mode: SwapMode) -> AdapterEngine<'static> {
+        let mut e = AdapterEngine::empty(ExecutionPolicy::Static(StrategyKind::Swap));
+        e.swap = Some(Box::new(InvolutionSwapStrategy::new(merger, mode)));
+        e
+    }
+
+    /// PJRT-backed engine: HLO-artifact merge + compiled-model decode
+    /// behind the merged-cache strategy.
+    pub fn pjrt(engine: &'a PjrtEngine, cfg: &str, cache_capacity: usize) -> AdapterEngine<'a> {
+        let mut e = AdapterEngine::empty(ExecutionPolicy::Static(StrategyKind::Merged));
+        e.merged = Some(Box::new(PjrtMergedStrategy::new(engine, cfg, cache_capacity)));
+        e
+    }
+
+    /// Strategy the policy selects for this adapter right now.
+    pub fn strategy_for(&self, adapter: &str) -> StrategyKind {
+        match self.policy {
+            ExecutionPolicy::Static(kind) => kind,
+            ExecutionPolicy::TrafficAware { .. } => {
+                if self.promoted.lock().unwrap().contains(adapter) {
+                    StrategyKind::Merged
+                } else {
+                    StrategyKind::OnTheFly
+                }
+            }
+        }
+    }
+
+    fn leaf(&self, kind: StrategyKind) -> Result<&(dyn ExecutionStrategy + 'a)> {
+        let slot = match kind {
+            StrategyKind::Merged => &self.merged,
+            StrategyKind::Swap => &self.swap,
+            StrategyKind::OnTheFly => &self.onthefly,
+        };
+        slot.as_deref()
+            .ok_or_else(|| anyhow!("engine has no {kind:?} strategy installed"))
+    }
+}
+
+impl ExecutionStrategy for AdapterEngine<'_> {
+    fn name(&self) -> &'static str {
+        "engine"
+    }
+
+    fn generate(
+        &self,
+        adapter: &AdapterEntry,
+        prompts: &[Vec<i32>],
+        max_new: usize,
+    ) -> Result<Vec<Vec<i32>>> {
+        let kind = self.strategy_for(&adapter.id);
+        let out = self.leaf(kind)?.generate(adapter, prompts, max_new)?;
+        let counter = match kind {
+            StrategyKind::Merged => &self.served_merged,
+            StrategyKind::Swap => &self.served_swap,
+            StrategyKind::OnTheFly => &self.served_onthefly,
+        };
+        counter.fetch_add(prompts.len() as u64, Ordering::SeqCst);
+        Ok(out)
+    }
+
+    fn merge_stats(&self) -> (u64, u64) {
+        if let Some(m) = &self.merged {
+            return m.merge_stats();
+        }
+        if let Some(s) = &self.swap {
+            return s.merge_stats();
+        }
+        (0, 0)
+    }
+
+    fn swap_stats(&self) -> (u64, f64) {
+        self.swap.as_ref().map(|s| s.swap_stats()).unwrap_or((0, 0.0))
+    }
+
+    fn strategy_counters(&self) -> StrategyCounters {
+        StrategyCounters {
+            served_merged: self.served_merged.load(Ordering::SeqCst),
+            served_onthefly: self.served_onthefly.load(Ordering::SeqCst),
+            served_swap: self.served_swap.load(Ordering::SeqCst),
+            policy_promotions: self.promotions.load(Ordering::SeqCst),
+        }
+    }
+
+    fn record_traffic(&self, adapter: &str, requests: u64) {
+        let ExecutionPolicy::TrafficAware { hot_threshold } = self.policy else {
+            return;
+        };
+        let hot = {
+            let mut t = self.traffic.lock().unwrap();
+            let entry = t.entry(adapter.to_string()).or_insert(0);
+            *entry = (*entry).max(requests);
+            *entry >= hot_threshold
+        };
+        if hot {
+            let mut p = self.promoted.lock().unwrap();
+            if p.insert(adapter.to_string()) {
+                self.promotions.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+    }
+
+    fn resident_weight_bytes(&self) -> usize {
+        [&self.merged, &self.swap, &self.onthefly]
+            .into_iter()
+            .flatten()
+            .map(|s| s.resident_weight_bytes())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::peft::apply::{base_layout_for, ModelDims};
+    use crate::util::rng::Rng;
+
+    fn merger_fixture() -> Arc<MergeEngine> {
+        let dims = ModelDims { d_model: 16, d_ff: 32, n_layers: 2 };
+        let layout = base_layout_for(dims);
+        let mut rng = Rng::new(5);
+        let base: Vec<f32> = rng.normal_vec(layout.total, 0.05);
+        Arc::new(MergeEngine::new(dims, base, &layout, 4, 2).unwrap())
+    }
+
+    fn adapter(merger: &MergeEngine, id: &str, seed: u64) -> AdapterEntry {
+        use crate::peft::apply::peft_layout_for;
+        use crate::peft::MethodSpec;
+        let spec = MethodSpec::parse("ether_n4").unwrap();
+        let pl = peft_layout_for(merger.dims(), &spec);
+        let mut rng = Rng::new(seed);
+        AdapterEntry {
+            id: id.to_string(),
+            method: "ether_n4".to_string(),
+            cfg: "host".to_string(),
+            peft: Arc::new(rng.normal_vec(pl.total, 0.5)),
+        }
+    }
+
+    #[test]
+    fn onthefly_serves_with_zero_merged_buffers() {
+        let merger = merger_fixture();
+        let engine =
+            AdapterEngine::host(merger.clone(), ExecutionPolicy::Static(StrategyKind::OnTheFly));
+        let a = adapter(&merger, "a", 1);
+        let b = adapter(&merger, "b", 2);
+        let out_a = engine.generate(&a, &[vec![1, 2]], 1).unwrap();
+        let out_b = engine.generate(&b, &[vec![1, 2]], 1).unwrap();
+        let out_a2 = engine.generate(&a, &[vec![9]], 1).unwrap();
+        // Distinct adapters → distinct activation fingerprints; the same
+        // adapter is stable across calls.
+        assert_ne!(out_a[0].last(), out_b[0].last());
+        assert_eq!(out_a[0].last(), out_a2[0].last());
+        // The merge-free claim, asserted through the engine counters:
+        // no merge ever ran, no merged bytes are resident.
+        assert_eq!(merger.merges.load(Ordering::SeqCst), 0);
+        assert_eq!(merger.cache_resident_bytes(), 0);
+        assert_eq!(engine.resident_weight_bytes(), 0);
+        assert_eq!(engine.strategy_counters().served_onthefly, 3);
+    }
+
+    #[test]
+    fn traffic_aware_policy_promotes_hot_adapters_only() {
+        let merger = merger_fixture();
+        let engine = AdapterEngine::host(
+            merger.clone(),
+            ExecutionPolicy::TrafficAware { hot_threshold: 3 },
+        );
+        let hot = adapter(&merger, "hot", 11);
+        let cold = adapter(&merger, "cold", 12);
+        // Below the threshold everything is served merge-free.
+        engine.record_traffic("hot", 2);
+        engine.record_traffic("cold", 1);
+        assert_eq!(engine.strategy_for("hot"), StrategyKind::OnTheFly);
+        engine.generate(&hot, &[vec![1]], 1).unwrap();
+        engine.generate(&cold, &[vec![2]], 1).unwrap();
+        assert_eq!(merger.merges.load(Ordering::SeqCst), 0);
+        // The hot adapter crosses the threshold: promoted (sticky, once).
+        engine.record_traffic("hot", 3);
+        engine.record_traffic("hot", 7);
+        assert_eq!(engine.strategy_for("hot"), StrategyKind::Merged);
+        assert_eq!(engine.strategy_for("cold"), StrategyKind::OnTheFly);
+        engine.generate(&hot, &[vec![3], vec![4]], 1).unwrap();
+        engine.generate(&cold, &[vec![5]], 1).unwrap();
+        let c = engine.strategy_counters();
+        assert_eq!(c.policy_promotions, 1);
+        assert_eq!(c.served_merged, 2);
+        assert_eq!(c.served_onthefly, 3);
+        // Exactly the hot adapter's weights were merged.
+        assert_eq!(merger.merges.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn static_engine_rejects_uninstalled_strategies() {
+        let merger = merger_fixture();
+        let engine = AdapterEngine::host(merger.clone(), ExecutionPolicy::Static(StrategyKind::Merged));
+        // The merged leaf exists; swap/onthefly were never built.
+        assert!(engine.leaf(StrategyKind::Merged).is_ok());
+        assert!(engine.leaf(StrategyKind::Swap).is_err());
+        assert!(engine.leaf(StrategyKind::OnTheFly).is_err());
+    }
+}

@@ -7,45 +7,60 @@
 //!
 //! # Pipeline
 //!
-//! A request flows through five stages:
+//! A request flows through five stages; execution is one
+//! [`engine::AdapterEngine`] facade whose [`engine::ExecutionPolicy`]
+//! picks a weight-residency strategy per adapter:
 //!
 //! ```text
 //!            submit()                 pop_ready(now)
 //! clients ─────────────► Scheduler ───────────────────► dispatch
-//!            │            per-adapter queues             │
-//!            │            ├ admission control            │ one batch per
-//!            ▼            │  (depth bounds → shed)       │ pool worker
-//!          shed()         ├ deadline lane (EDF)          ▼
-//!       ShedReason +      └ DRR lane (quantum)      MergeEngine
-//!       SchedStats                                  merge-on-demand:
-//!                                                   LRU cache │ SwapSlot
-//!                                                   single-   │ in-place
-//!                                                   flight    │ rebase /
-//!                                                        │    │ involution
-//!                                                        ▼    ▼
+//!            │            per-adapter queues             │ pump /
+//!            │            ├ admission control            │ pump_pool
+//!            ▼            │  (depth bounds → shed)       ▼
+//!          shed()         ├ deadline lane (EDF)     AdapterEngine
+//!       ShedReason +      └ DRR lane (quantum)      ExecutionPolicy
+//!       SchedStats              │                   (Static | TrafficAware)
+//!                               │ released_for()         │ picks per adapter
+//!                               └──── traffic feed ──────┤
+//!                                                        ▼
+//!                                          ┌─────────────┼─────────────┐
+//!                                          ▼             ▼             ▼
+//!                                     MergedCache  InvolutionSwap   OnTheFly
+//!                                     LRU + single  one SwapSlot,   T(W)·x on
+//!                                     flight merge  in-place        activations,
+//!                                     (1 copy per   rebase/invol.   ZERO merged
+//!                                     cached user)  (1 copy total)  buffers
+//!                                          │             │             │
+//!                                          └─────────────┼─────────────┘
+//!                                                        ▼
 //!                                                   decode (PJRT or
 //!                                                   host fingerprint)
 //!                                                        │
 //!            on_response(Response) ◄─────────────────────┘
-//!            latency + fairness accounting (ServerStats)
+//!            latency + fairness + per-strategy counters (ServerStats)
 //! ```
 //!
 //! * [`scheduler`] — the adapter-aware continuous scheduler: per-adapter
 //!   queues, admission control with shed counters, deadline-based
 //!   release (earliest-deadline-first, starvation-free), and
-//!   deficit-round-robin fairness across saturated adapters.
-//! * [`registry`] — adapter store (tiny per-user PEFT vectors), an LRU
-//!   cache of *merged* weights, and the merge-on-demand
-//!   [`registry::MergeEngine`]: multiplicative adapters fold into the
-//!   base at zero inference cost (paper §3.1), so a cache hit serves
-//!   requests through the plain `none` forward artifact, and concurrent
-//!   misses for different adapters merge in parallel through the blocked
-//!   host engine (single-flight per adapter, bounded worker budget).
+//!   deficit-round-robin fairness across saturated adapters. Its
+//!   cumulative per-adapter release counters
+//!   ([`scheduler::SchedStats::released_for`]) are the traffic signal a
+//!   [`engine::ExecutionPolicy::TrafficAware`] promotes on.
+//! * [`registry`] — adapter store (tiny per-user PEFT vectors) and the
+//!   merge-on-demand [`registry::MergeEngine`]: an LRU cache of *merged*
+//!   weights (single-flight per adapter, bounded worker budget), the
+//!   in-place [`registry::SwapSlot`], and the merge-free
+//!   [`registry::MergeEngine::activations`] path.
+//! * [`engine`] — the unified execution API: the object-safe
+//!   [`engine::ExecutionStrategy`] trait (`&self + Sync` — one instance
+//!   drives every pump flavour), the three weight-residency strategies,
+//!   the PJRT-backed strategy, and the [`engine::AdapterEngine`] facade
+//!   with its per-adapter [`engine::ExecutionPolicy`].
 //! * [`server`] — the serving loop plumbing: [`server::Server::pump`]
-//!   (single-threaded, PJRT/swap backends) and
-//!   [`server::Server::pump_pool`] (concurrent — every released batch
-//!   executes on a scoped pool worker, so merges and decodes for
-//!   different adapters overlap instead of serializing).
+//!   (single-threaded), [`server::Server::pump_pool`] (concurrent —
+//!   every released batch executes on a scoped pool worker), and
+//!   [`server::Server::serve`] (threaded, lossless backpressure).
 //! * [`loadgen`] — deterministic synthetic traffic (uniform / Zipf /
 //!   bursty / adapter-churn) for the `serving_throughput` bench and the
 //!   scheduling determinism tests.
@@ -53,24 +68,21 @@
 //!   minimal building block (and for its conservation property tests);
 //!   the scheduler supersedes it on the serving path.
 //!
-//! **In-place swap mode.** The merged-weight cache costs one full model
-//! copy per cached adapter. Because the transform family is built from
-//! invertible maps — ETHER's reflection is its own inverse (paper Eq. 1,
-//! H·H = I) — the engine can instead run a single
-//! [`registry::SwapSlot`] buffer and rewrite it in place on every
-//! adapter change via [`registry::MergeEngine::swap_into`]:
-//! [`registry::SwapMode::Rebase`] re-merges from the frozen base
-//! (bit-identical to a fresh merge), while
-//! [`registry::SwapMode::Involution`] unmerges the resident adapter
-//! through `TransformOp::unmerge_into` and merges the next one from the
-//! recovered weights, auditing the involution residual against the
-//! base — and enforcing it: a residual past
-//! [`registry::INVOLUTION_REBASELINE`] triggers an automatic bit-exact
-//! rebase, so drift never reaches serving. Either way the
-//! merged-weight footprint is O(1) buffers instead
-//! of O(cache capacity) model copies; `server::HostMergeBackend` and
-//! the `multi_adapter_serving` example wire both flavours through
-//! [`server::ServerStats`].
+//! # Weight-residency strategies
+//!
+//! The memory/throughput trade is the policy's to make, per adapter:
+//!
+//! | strategy | merged buffers | best for |
+//! |----------|----------------|----------|
+//! | [`engine::MergedCacheStrategy`] | one per cached adapter | hot adapters: a cache hit is a lock-and-clone |
+//! | [`engine::InvolutionSwapStrategy`] | **one, total** | small deployments; exploits the paper's H·H = I inversion ([`registry::SwapMode::Involution`]) or bit-exact rebase |
+//! | [`engine::OnTheFlyStrategy`] | **zero** | the cold long tail: `y = T(W)·x` applied directly to activations (`TransformOp::apply_activations_into`), O(1) extra memory per adapter |
+//!
+//! [`engine::ExecutionPolicy::TrafficAware`] combines the first and
+//! last: adapters whose scheduler request count crosses the threshold
+//! are promoted to merged buffers (sticky, counted in
+//! [`server::ServerStats::policy_promotions`]); everyone else is served
+//! merge-free.
 //!
 //! # Example
 //!
@@ -80,8 +92,10 @@
 //! ```
 //! use std::sync::Arc;
 //! use std::time::{Duration, Instant};
-//! use ether::coordinator::server::HostPoolBackend;
-//! use ether::coordinator::{AdapterRegistry, MergeEngine, Request, SchedulerCfg, Server};
+//! use ether::coordinator::{
+//!     AdapterEngine, AdapterRegistry, ExecutionPolicy, MergeEngine, Request, SchedulerCfg,
+//!     Server, StrategyKind,
+//! };
 //! use ether::peft::apply::{base_layout_for, ModelDims};
 //!
 //! // A tiny synthetic base plus a fleet of per-user ETHER adapters.
@@ -107,27 +121,34 @@
 //!         .expect("under the admission bounds");
 //! }
 //!
-//! // Concurrent dispatch: batches for different adapters merge and
-//! // decode in parallel on 4 pool workers.
-//! let backend = HostPoolBackend::new(merger);
+//! // One AdapterEngine serves every pump flavour. A traffic-aware
+//! // policy would promote hot adapters to merged buffers; Static pins
+//! // one strategy for all.
+//! let engine = AdapterEngine::host(merger, ExecutionPolicy::Static(StrategyKind::Merged));
 //! let mut served = 0;
-//! server.pump_pool(&backend, t + Duration::from_millis(100), 4, |_resp| served += 1)?;
+//! server.pump_pool(&engine, t + Duration::from_millis(100), 4, |_resp| served += 1)?;
 //! assert_eq!(served, 8);
 //! assert_eq!(server.stats.shed, 0);
+//! assert_eq!(server.stats.served_merged, 8);
 //! # Ok::<(), anyhow::Error>(())
 //! ```
 //!
-//! Everything is testable without PJRT via the [`server::GenBackend`] /
-//! [`server::SharedBackend`] traits (`rust/tests/coordinator_props.rs`
+//! Everything is testable without PJRT by implementing
+//! [`engine::ExecutionStrategy`] on a mock
+//! (`rust/tests/coordinator_props.rs`, `rust/tests/engine_parity.rs`
 //! and `rust/tests/scheduler_props.rs` exercise the invariants).
 
 pub mod batcher;
+pub mod engine;
 pub mod loadgen;
 pub mod registry;
 pub mod scheduler;
 pub mod server;
 
 pub use batcher::{Batcher, BatcherCfg, Request};
+pub use engine::{
+    AdapterEngine, ExecutionPolicy, ExecutionStrategy, StrategyCounters, StrategyKind,
+};
 pub use registry::{AdapterRegistry, MergeEngine, MergedCache, SwapMode, SwapSlot};
 pub use scheduler::{SchedStats, Scheduler, SchedulerCfg, ShedReason};
 pub use server::{Server, ServerStats};

@@ -437,6 +437,41 @@ impl MergeEngine {
         self.cache.lock().unwrap().resident_bytes()
     }
 
+    /// The pre-enumerated merge schedule — shared with the merge-free
+    /// activation path and the parity tests.
+    pub fn plan(&self) -> &MergePlan {
+        &self.plan
+    }
+
+    /// Deterministic probe matrix (`max_item_cols()×m`, row-major) for
+    /// the merge-free activation path: every call sees identical bits,
+    /// so per-adapter outputs are stable fingerprinting material.
+    pub fn activation_probe(&self, m: usize) -> Vec<f32> {
+        let mut rng = crate::util::rng::Rng::new(0xE7AE);
+        rng.normal_vec(self.plan.max_item_cols() * m, 1.0)
+    }
+
+    /// Merge-free adapted forward for `entry` over the deterministic
+    /// probe: per work item `y = T(W)·x`, concatenated in item order.
+    /// Allocates only activation-sized buffers — the engine's merged
+    /// cache, merge counters and swap slots are untouched (the
+    /// on-the-fly serving tests assert exactly that through
+    /// [`MergeEngine::merges`] and [`MergeEngine::cache_resident_bytes`]).
+    pub fn activations(&self, entry: &AdapterEntry, m: usize) -> Result<Vec<f32>> {
+        let (spec, layout) = self.checked_spec(entry)?;
+        let x = self.activation_probe(m);
+        let mut out = vec![0.0f32; self.plan.activations_out_len(m)];
+        self.plan.execute_activations(
+            AdapterRef { spec: &spec, peft: &entry.peft, layout: &layout },
+            &self.base,
+            &x,
+            m,
+            &mut out,
+            None,
+        )?;
+        Ok(out)
+    }
+
     /// Create an empty swap slot. The buffer is allocated lazily on the
     /// first [`MergeEngine::swap_into`] (one full merge); afterwards the
     /// slot is rewritten in place on every adapter change.

@@ -170,6 +170,14 @@ impl SchedStats {
         let counts: Vec<u64> = self.released_per_adapter.values().copied().collect();
         jain_fairness(&counts)
     }
+
+    /// Cumulative requests released for one adapter (0 before any
+    /// release). The traffic signal the server feeds to a policy-aware
+    /// [`ExecutionStrategy`](super::engine::ExecutionStrategy): hot
+    /// adapters earn merged buffers, the cold tail stays merge-free.
+    pub fn released_for(&self, id: &str) -> u64 {
+        self.released_per_adapter.get(id).copied().unwrap_or(0)
+    }
 }
 
 /// Jain's fairness index `(Σx)² / (n·Σx²)` over non-negative shares.

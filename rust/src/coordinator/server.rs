@@ -1,35 +1,34 @@
-//! The serving loop: route → schedule → merge (cached/swap) → decode →
-//! respond.
+//! The serving loop: route → schedule → execute (merged / swap /
+//! on-the-fly) → decode → respond.
 //!
 //! A coordinator owns the adapter-aware [`Scheduler`]; clients submit
 //! [`Request`]s through [`Server::submit`] (admission-controlled — an
 //! overloaded scheduler sheds instead of queueing unboundedly) and
 //! batches release through the deadline/DRR policy. Execution goes
-//! through one of two backend traits:
+//! through the unified [`ExecutionStrategy`] API (`&self + Sync`) —
+//! typically an [`AdapterEngine`](super::engine::AdapterEngine) facade
+//! whose [`ExecutionPolicy`](super::engine::ExecutionPolicy) picks the
+//! weight-residency strategy per adapter:
 //!
-//! * [`GenBackend`] (`&mut self`) — the single-threaded path driven by
-//!   [`Server::pump`] / [`Server::serve`]. The PJRT client wrapper is
-//!   `Rc`-based and the in-place [`SwapSlot`](super::registry::SwapSlot)
-//!   owns a single mutable buffer, so both run here.
-//! * [`SharedBackend`] (`&self + Sync`) — the concurrent path driven by
-//!   [`Server::pump_pool`]: every released batch executes on a worker
-//!   from a scoped pool, so merges and decodes for *different* adapters
-//!   proceed in parallel instead of serially. [`HostPoolBackend`] backs
-//!   it with the blocked parallel [`MergeEngine`] (single-flight per
-//!   adapter, bounded merge permits).
+//! * [`Server::pump`] — single-threaded drive: every released batch
+//!   executes inline.
+//! * [`Server::pump_pool`] — concurrent drive: every released batch
+//!   executes on a worker from a scoped pool, so merges and decodes for
+//!   *different* adapters proceed in parallel (the `&self + Sync`
+//!   contract is what makes one backend instance safe here).
+//! * [`Server::serve`] — the threaded loop over the single-threaded
+//!   drive with lossless backpressure.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc;
-use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use super::batcher::Request;
-use super::registry::{AdapterEntry, AdapterRegistry, MergeEngine, MergedCache, SwapMode, SwapSlot};
+use super::engine::ExecutionStrategy;
+use super::registry::AdapterRegistry;
 use super::scheduler::{Scheduler, SchedulerCfg, ShedReason};
-use crate::runtime::engine::PjrtEngine;
-use crate::runtime::HostTensor;
 use crate::util::pool;
 
 /// A completed generation.
@@ -40,74 +39,6 @@ pub struct Response {
     pub output: Vec<i32>,
     pub latency: Duration,
     pub batch_size: usize,
-}
-
-/// Model side of the single-threaded serving loop (see the module docs
-/// for when to use this vs. [`SharedBackend`]).
-pub trait GenBackend {
-    /// Merge the adapter (or fetch from cache) and decode greedily.
-    fn generate(
-        &mut self,
-        adapter: &AdapterEntry,
-        prompts: &[Vec<i32>],
-        max_new: usize,
-    ) -> Result<Vec<Vec<i32>>>;
-
-    /// Cumulative (hits, misses) of the backend's merged-weight cache —
-    /// surfaced into [`ServerStats`] after each pump.
-    fn merge_stats(&self) -> (u64, u64) {
-        (0, 0)
-    }
-
-    /// Cumulative (in-place swaps, max audited involution residual) for
-    /// backends running a swap slot — surfaced into [`ServerStats`]
-    /// after each pump. Default: no swap machinery.
-    fn swap_stats(&self) -> (u64, f64) {
-        (0, 0.0)
-    }
-}
-
-/// Model side of the concurrent serving path: `&self` + `Sync`, so one
-/// backend instance serves many released batches at once from the
-/// [`Server::pump_pool`] worker pool.
-pub trait SharedBackend: Sync {
-    fn generate(
-        &self,
-        adapter: &AdapterEntry,
-        prompts: &[Vec<i32>],
-        max_new: usize,
-    ) -> Result<Vec<Vec<i32>>>;
-
-    /// See [`GenBackend::merge_stats`].
-    fn merge_stats(&self) -> (u64, u64) {
-        (0, 0)
-    }
-
-    /// See [`GenBackend::swap_stats`].
-    fn swap_stats(&self) -> (u64, f64) {
-        (0, 0.0)
-    }
-}
-
-/// Any [`SharedBackend`] reference also works on the single-threaded
-/// [`GenBackend`] paths ([`Server::pump`], [`Server::serve`]).
-impl<S: SharedBackend> GenBackend for &S {
-    fn generate(
-        &mut self,
-        adapter: &AdapterEntry,
-        prompts: &[Vec<i32>],
-        max_new: usize,
-    ) -> Result<Vec<Vec<i32>>> {
-        SharedBackend::generate(*self, adapter, prompts, max_new)
-    }
-
-    fn merge_stats(&self) -> (u64, u64) {
-        SharedBackend::merge_stats(*self)
-    }
-
-    fn swap_stats(&self) -> (u64, f64) {
-        SharedBackend::swap_stats(*self)
-    }
 }
 
 /// Worker threads for the [`Server::pump_pool`] dispatch stage:
@@ -130,10 +61,19 @@ pub struct ServerStats {
     pub batches: u64,
     pub merge_hits: u64,
     pub merge_misses: u64,
-    /// In-place slot swaps performed by a swap-mode backend.
+    /// In-place slot swaps performed by a swap-strategy backend.
     pub merge_swaps: u64,
     /// Max involution residual audited across swaps (0.0 without swaps).
     pub swap_residual: f64,
+    /// Requests served through the merged-cache strategy (mirror of
+    /// [`StrategyCounters`](super::engine::StrategyCounters)).
+    pub served_merged: u64,
+    /// Requests served merge-free through the on-the-fly strategy.
+    pub served_onthefly: u64,
+    /// Requests served through the in-place swap strategy.
+    pub served_swap: u64,
+    /// Cold→hot strategy promotions performed by a traffic-aware policy.
+    pub policy_promotions: u64,
     /// Requests shed by scheduler admission control (mirror of
     /// [`super::scheduler::SchedStats::shed`]).
     pub shed: u64,
@@ -225,6 +165,20 @@ impl ServerStats {
         }
     }
 
+    /// Fraction of merged-weight lookups served from the cache:
+    /// `hits / (hits + misses)`, 0.0 before any lookup. The per-scenario
+    /// form of the raw [`ServerStats::merge_hits`] /
+    /// [`ServerStats::merge_misses`] counters, also emitted in
+    /// `BENCH_serving_throughput.json`.
+    pub fn merge_hit_rate(&self) -> f64 {
+        let total = self.merge_hits + self.merge_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.merge_hits as f64 / total as f64
+        }
+    }
+
     /// Mean latency per adapter in ms, in adapter-name order.
     pub fn per_adapter_mean_ms(&self) -> Vec<(String, f64)> {
         self.latencies_us_by_adapter
@@ -263,266 +217,6 @@ impl ServerStats {
     }
 }
 
-/// PJRT-backed generation with a merged-weight LRU cache.
-pub struct PjrtBackend<'e> {
-    pub engine: &'e PjrtEngine,
-    pub cfg: String,
-    pub cache: MergedCache,
-}
-
-impl<'e> PjrtBackend<'e> {
-    pub fn new(engine: &'e PjrtEngine, cfg: &str, cache_capacity: usize) -> PjrtBackend<'e> {
-        PjrtBackend { engine, cfg: cfg.to_string(), cache: MergedCache::new(cache_capacity) }
-    }
-
-    fn merged(&mut self, adapter: &AdapterEntry, base: &[f32]) -> Result<Arc<Vec<f32>>> {
-        if let Some(m) = self.cache.get(&adapter.id) {
-            return Ok(m);
-        }
-        let exec = self
-            .engine
-            .load(&format!("lm_{}_{}_merge", self.cfg, adapter.method))?;
-        let out = exec.run(&[
-            HostTensor::vec_f32(base.to_vec()),
-            HostTensor::vec_f32((*adapter.peft).clone()),
-        ])?;
-        let merged = Arc::new(out[0].f32s()?.to_vec());
-        self.cache.put(&adapter.id, merged.clone());
-        Ok(merged)
-    }
-}
-
-/// Greedy decode through the `none` logits artifact on merged weights.
-pub fn decode_merged(
-    engine: &PjrtEngine,
-    cfg: &str,
-    merged: &[f32],
-    prompts: &[Vec<i32>],
-    max_new: usize,
-) -> Result<Vec<Vec<i32>>> {
-    let c = engine.manifest.config(cfg)?.clone();
-    let exec = engine.load(&format!("lm_{cfg}_none_logits"))?;
-    let mut rows: Vec<Vec<i32>> = prompts.to_vec();
-    rows.resize(c.batch, vec![crate::data::BOS]);
-    let mut done = vec![false; c.batch];
-    let base = HostTensor::vec_f32(merged.to_vec());
-    let peft = HostTensor::vec_f32(vec![0.0]);
-    for _ in 0..max_new {
-        let mut tokens = vec![crate::data::PAD; c.batch * c.seq];
-        let mut lengths = vec![1i32; c.batch];
-        for (i, row) in rows.iter().enumerate() {
-            let start = row.len().saturating_sub(c.seq);
-            let window = &row[start..];
-            tokens[i * c.seq..i * c.seq + window.len()].copy_from_slice(window);
-            lengths[i] = window.len() as i32;
-        }
-        let out = exec.run(&[
-            base.clone(),
-            peft.clone(),
-            HostTensor::mat_i32(c.batch, c.seq, tokens),
-            HostTensor::vec_i32(lengths),
-        ])?;
-        let logits = out[0].f32s()?;
-        let mut all_done = true;
-        for i in 0..prompts.len() {
-            if done[i] {
-                continue;
-            }
-            let row = &logits[i * c.vocab..(i + 1) * c.vocab];
-            let next = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(t, _)| t as i32)
-                .unwrap_or(crate::data::EOS);
-            if next == crate::data::EOS || next == crate::data::PAD {
-                done[i] = true;
-            } else {
-                rows[i].push(next);
-                all_done = false;
-            }
-        }
-        if all_done {
-            break;
-        }
-    }
-    Ok(rows[..prompts.len()]
-        .iter()
-        .zip(prompts)
-        .map(|(row, p)| row[p.len()..].to_vec())
-        .collect())
-}
-
-impl<'e> GenBackend for PjrtBackend<'e> {
-    fn generate(
-        &mut self,
-        adapter: &AdapterEntry,
-        prompts: &[Vec<i32>],
-        max_new: usize,
-    ) -> Result<Vec<Vec<i32>>> {
-        let base = self
-            .engine
-            .manifest
-            .load_init(&format!("{}_base", self.cfg))?;
-        let merged = self.merged(adapter, &base)?;
-        decode_merged(self.engine, &self.cfg, &merged, prompts, max_new)
-    }
-
-    fn merge_stats(&self) -> (u64, u64) {
-        (self.cache.hits, self.cache.misses)
-    }
-}
-
-/// Cheap per-adapter fingerprint proving which weights served a batch:
-/// a strided bit-fold over the whole vector, so it stays
-/// adapter-distinct regardless of where the adapted matrices sit in the
-/// base layout.
-fn weights_fingerprint(merged: &[f32]) -> i32 {
-    let stride = merged.len() / 64 + 1;
-    merged
-        .iter()
-        .step_by(stride)
-        .fold(0u32, |acc, x| acc.rotate_left(5) ^ x.to_bits()) as i32
-}
-
-/// PJRT-free backend over the blocked parallel host [`MergeEngine`]:
-/// every batch performs a real adapter merge and then echoes prompts
-/// tagged with a merged-weight fingerprint in place of model decode.
-/// This puts genuine merge pressure on the serving path without
-/// compiled artifacts — it backs the coordinator benches, the serving
-/// example's offline mode, and the merge-concurrency tests.
-///
-/// Two weight-residency strategies:
-///
-/// * [`HostMergeBackend::new`] — per-adapter merged-weight cache
-///   (single-flight, bounded workers): one full merged copy per cached
-///   adapter.
-/// * [`HostMergeBackend::with_swap`] — a single [`SwapSlot`] rewritten
-///   in place on every adapter change ([`SwapMode::Rebase`] bit-exact,
-///   [`SwapMode::Involution`] through the inverse transform): O(1)
-///   weight buffers however many adapters rotate through.
-///
-/// For the *concurrent* dispatch stage ([`Server::pump_pool`]) use
-/// [`HostPoolBackend`]: the swap slot's single mutable buffer is
-/// inherently one-batch-at-a-time, so swap mode stays on this
-/// single-threaded backend.
-pub struct HostMergeBackend {
-    pub merger: Arc<MergeEngine>,
-    swap: Option<(SwapSlot, SwapMode)>,
-}
-
-impl HostMergeBackend {
-    pub fn new(merger: Arc<MergeEngine>) -> HostMergeBackend {
-        HostMergeBackend { merger, swap: None }
-    }
-
-    /// Serve from one in-place swap slot instead of the per-adapter
-    /// merged cache.
-    pub fn with_swap(merger: Arc<MergeEngine>, mode: SwapMode) -> HostMergeBackend {
-        let slot = merger.new_swap_slot();
-        HostMergeBackend { merger, swap: Some((slot, mode)) }
-    }
-
-    /// Bytes of merged weights this backend keeps resident (the swap
-    /// slot's single buffer, or the engine cache).
-    pub fn resident_weight_bytes(&self) -> usize {
-        match &self.swap {
-            Some((slot, _)) => slot.resident_bytes(),
-            None => self.merger.cache_resident_bytes(),
-        }
-    }
-}
-
-impl GenBackend for HostMergeBackend {
-    fn generate(
-        &mut self,
-        adapter: &AdapterEntry,
-        prompts: &[Vec<i32>],
-        _max_new: usize,
-    ) -> Result<Vec<Vec<i32>>> {
-        let tag = match &mut self.swap {
-            Some((slot, mode)) => {
-                self.merger.swap_into(slot, adapter, *mode)?;
-                weights_fingerprint(slot.weights())
-            }
-            None => weights_fingerprint(&self.merger.merged(adapter)?),
-        };
-        Ok(prompts
-            .iter()
-            .map(|p| {
-                let mut o = p.clone();
-                o.push(tag);
-                o
-            })
-            .collect())
-    }
-
-    fn merge_stats(&self) -> (u64, u64) {
-        match &self.swap {
-            // Swap mode: a "hit" is an already-resident adapter, a
-            // "miss" is any rewrite (first fill counts in `merges`).
-            Some(_) => {
-                let (swaps, hits, _) = self.merger.swap_stats();
-                (hits, swaps + self.merger.merges.load(std::sync::atomic::Ordering::SeqCst))
-            }
-            None => self.merger.cache_stats(),
-        }
-    }
-
-    fn swap_stats(&self) -> (u64, f64) {
-        match &self.swap {
-            Some(_) => {
-                let (swaps, _, residual) = self.merger.swap_stats();
-                (swaps, residual as f64)
-            }
-            None => (0, 0.0),
-        }
-    }
-}
-
-/// Thread-safe host backend for the concurrent dispatch stage: merges
-/// go through the [`MergeEngine`]'s `&self` cache path (single-flight
-/// per adapter, bounded merge permits), so any number of pool workers
-/// can serve batches at once. Decode is the same fingerprint-tagged
-/// echo as [`HostMergeBackend`].
-pub struct HostPoolBackend {
-    pub merger: Arc<MergeEngine>,
-}
-
-impl HostPoolBackend {
-    pub fn new(merger: Arc<MergeEngine>) -> HostPoolBackend {
-        HostPoolBackend { merger }
-    }
-
-    /// Bytes of merged weights resident in the engine cache.
-    pub fn resident_weight_bytes(&self) -> usize {
-        self.merger.cache_resident_bytes()
-    }
-}
-
-impl SharedBackend for HostPoolBackend {
-    fn generate(
-        &self,
-        adapter: &AdapterEntry,
-        prompts: &[Vec<i32>],
-        _max_new: usize,
-    ) -> Result<Vec<Vec<i32>>> {
-        let tag = weights_fingerprint(&self.merger.merged(adapter)?);
-        Ok(prompts
-            .iter()
-            .map(|p| {
-                let mut o = p.clone();
-                o.push(tag);
-                o
-            })
-            .collect())
-    }
-
-    fn merge_stats(&self) -> (u64, u64) {
-        self.merger.cache_stats()
-    }
-}
-
 /// In-process serving coordinator over the adapter-aware [`Scheduler`].
 pub struct Server {
     pub registry: AdapterRegistry,
@@ -546,25 +240,39 @@ impl Server {
 
     /// Copy backend-side counters into the serving stats (called at the
     /// end of every pump flavour).
-    fn mirror_backend_stats(&mut self, merge: (u64, u64), swap: (u64, f64)) {
-        self.stats.merge_hits = merge.0;
-        self.stats.merge_misses = merge.1;
-        self.stats.merge_swaps = swap.0;
-        self.stats.swap_residual = swap.1;
+    fn mirror_backend_stats<E: ExecutionStrategy + ?Sized>(&mut self, backend: &E) {
+        let (hits, misses) = backend.merge_stats();
+        self.stats.merge_hits = hits;
+        self.stats.merge_misses = misses;
+        let (swaps, residual) = backend.swap_stats();
+        self.stats.merge_swaps = swaps;
+        self.stats.swap_residual = residual;
+        let c = backend.strategy_counters();
+        self.stats.served_merged = c.served_merged;
+        self.stats.served_onthefly = c.served_onthefly;
+        self.stats.served_swap = c.served_swap;
+        self.stats.policy_promotions = c.policy_promotions;
         self.stats.shed = self.sched.stats().shed();
     }
 
+    /// Feed the scheduler's cumulative released-request counter for
+    /// `adapter` to the backend (a traffic-aware policy promotes on it).
+    fn feed_traffic<E: ExecutionStrategy + ?Sized>(&self, backend: &E, adapter: &str) {
+        backend.record_traffic(adapter, self.sched.stats().released_for(adapter));
+    }
+
     /// Process everything currently released by the scheduler at `now`
-    /// against a single-threaded backend, invoking `on_response` per
-    /// finished request.
-    pub fn pump<B: GenBackend>(
+    /// against the backend inline (single-threaded), invoking
+    /// `on_response` per finished request.
+    pub fn pump<E: ExecutionStrategy + ?Sized>(
         &mut self,
-        backend: &mut B,
+        backend: &E,
         now: Instant,
         mut on_response: impl FnMut(Response),
     ) -> Result<()> {
         while let Some((adapter_id, batch)) = self.sched.pop_ready(now) {
             let adapter = self.registry.get(&adapter_id)?.clone();
+            self.feed_traffic(backend, &adapter_id);
             let prompts: Vec<Vec<i32>> = batch.iter().map(|r| r.prompt.clone()).collect();
             let max_new = batch.iter().map(|r| r.max_new).max().unwrap_or(8);
             let outputs = backend.generate(&adapter, &prompts, max_new)?;
@@ -582,7 +290,7 @@ impl Server {
                 });
             }
         }
-        self.mirror_backend_stats(backend.merge_stats(), backend.swap_stats());
+        self.mirror_backend_stats(backend);
         Ok(())
     }
 
@@ -599,9 +307,9 @@ impl Server {
     /// error on the single-threaded path). Latency is stamped on the
     /// worker at batch completion, so a slow sibling batch does not
     /// inflate the per-adapter fairness metrics.
-    pub fn pump_pool<B: SharedBackend>(
+    pub fn pump_pool<E: ExecutionStrategy + ?Sized>(
         &mut self,
-        backend: &B,
+        backend: &E,
         now: Instant,
         workers: usize,
         mut on_response: impl FnMut(Response),
@@ -612,11 +320,16 @@ impl Server {
         }
         let mut first_err: Option<anyhow::Error> = None;
         if !ready.is_empty() {
-            // Resolve adapters; an unknown id fails only its own batch.
-            let mut jobs: Vec<(AdapterEntry, Vec<Request>)> = Vec::with_capacity(ready.len());
+            // Resolve adapters (and feed the policy its traffic
+            // counters); an unknown id fails only its own batch.
+            let mut jobs: Vec<(super::registry::AdapterEntry, Vec<Request>)> =
+                Vec::with_capacity(ready.len());
             for (id, batch) in ready {
                 match self.registry.get(&id) {
-                    Ok(adapter) => jobs.push((adapter.clone(), batch)),
+                    Ok(adapter) => {
+                        self.feed_traffic(backend, &id);
+                        jobs.push((adapter.clone(), batch));
+                    }
                     Err(e) => first_err = first_err.or(Some(e)),
                 }
             }
@@ -656,7 +369,7 @@ impl Server {
                 }
             }
         }
-        self.mirror_backend_stats(backend.merge_stats(), backend.swap_stats());
+        self.mirror_backend_stats(backend);
         match first_err {
             Some(e) => Err(e),
             None => Ok(()),
@@ -668,10 +381,10 @@ impl Server {
     /// them. Instead, force-release the oldest queued work until the
     /// scheduler has room (lossless backpressure), then offer — which is
     /// then guaranteed to be admitted.
-    fn ingest<B: GenBackend>(
+    fn ingest<E: ExecutionStrategy + ?Sized>(
         &mut self,
         req: Request,
-        backend: &mut B,
+        backend: &E,
         tx: &mpsc::Sender<Response>,
     ) -> Result<()> {
         while self.sched.at_capacity(&req.adapter) {
@@ -693,9 +406,9 @@ impl Server {
     /// loop never sheds: when admission bounds are hit it drains the
     /// oldest work first (backpressure), so every submitted request gets
     /// exactly one response.
-    pub fn serve<B: GenBackend + Send>(
+    pub fn serve<E: ExecutionStrategy>(
         mut self,
-        mut backend: B,
+        backend: E,
         rx: mpsc::Receiver<Request>,
         tx: mpsc::Sender<Response>,
     ) -> Result<ServerStats> {
@@ -705,10 +418,10 @@ impl Server {
             let deadline = self.sched.cfg.max_wait;
             match rx.recv_timeout(deadline) {
                 Ok(req) => {
-                    self.ingest(req, &mut backend, &tx)?;
+                    self.ingest(req, &backend, &tx)?;
                     // opportunistically drain the channel
                     while let Ok(r) = rx.try_recv() {
-                        self.ingest(r, &mut backend, &tx)?;
+                        self.ingest(r, &backend, &tx)?;
                     }
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
@@ -716,6 +429,7 @@ impl Server {
                     // flush the remainder and exit
                     for (adapter_id, batch) in self.sched.drain_all() {
                         let adapter = self.registry.get(&adapter_id)?.clone();
+                        self.feed_traffic(&backend, &adapter_id);
                         let prompts: Vec<Vec<i32>> =
                             batch.iter().map(|r| r.prompt.clone()).collect();
                         let max_new = batch.iter().map(|r| r.max_new).max().unwrap_or(8);
@@ -734,12 +448,12 @@ impl Server {
                             });
                         }
                     }
-                    self.mirror_backend_stats(backend.merge_stats(), backend.swap_stats());
+                    self.mirror_backend_stats(&backend);
                     return Ok(self.stats);
                 }
             }
             let tx2 = tx.clone();
-            self.pump(&mut backend, Instant::now(), move |resp| {
+            self.pump(&backend, Instant::now(), move |resp| {
                 let _ = tx2.send(resp);
             })?;
         }
@@ -749,20 +463,36 @@ impl Server {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::engine::{
+        AdapterEngine, ExecutionPolicy, StrategyKind, StrategyCounters,
+    };
+    use crate::coordinator::registry::{AdapterEntry, MergeEngine, SwapMode};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
 
     /// Echo backend: output = salt-tagged copy of the prompt.
     struct EchoBackend {
-        calls: usize,
+        calls: AtomicUsize,
     }
 
-    impl GenBackend for EchoBackend {
+    impl EchoBackend {
+        fn new() -> EchoBackend {
+            EchoBackend { calls: AtomicUsize::new(0) }
+        }
+    }
+
+    impl ExecutionStrategy for EchoBackend {
+        fn name(&self) -> &'static str {
+            "echo"
+        }
+
         fn generate(
-            &mut self,
+            &self,
             adapter: &AdapterEntry,
             prompts: &[Vec<i32>],
             _max_new: usize,
         ) -> Result<Vec<Vec<i32>>> {
-            self.calls += 1;
+            self.calls.fetch_add(1, Ordering::SeqCst);
             let salt = adapter.peft[0] as i32;
             Ok(prompts.iter().map(|p| {
                 let mut o = p.clone();
@@ -798,10 +528,10 @@ mod tests {
                 })
                 .unwrap();
         }
-        let mut backend = EchoBackend { calls: 0 };
+        let backend = EchoBackend::new();
         let mut got = vec![];
         server
-            .pump(&mut backend, t + Duration::from_millis(1), |r| got.push(r))
+            .pump(&backend, t + Duration::from_millis(1), |r| got.push(r))
             .unwrap();
         assert_eq!(got.len(), 3);
         for r in &got {
@@ -810,9 +540,11 @@ mod tests {
             assert_eq!(r.output[0], r.id as i32); // prompt preserved per request
         }
         // two adapters → exactly two batches
-        assert_eq!(backend.calls, 2);
+        assert_eq!(backend.calls.load(Ordering::SeqCst), 2);
         assert_eq!(server.stats.served, 3);
         assert_eq!(server.stats.batches, 2);
+        // A plain (non-engine) backend reports zero strategy counters.
+        assert_eq!(backend.strategy_counters(), StrategyCounters::default());
         // per-adapter latency accounting feeds the fairness spread
         assert_eq!(server.stats.latencies_us_by_adapter.len(), 2);
         assert!(server.stats.fairness_spread_ms() >= 0.0);
@@ -847,14 +579,14 @@ mod tests {
         assert_eq!(server.stats.shed, 3);
         let mut served = 0;
         server
-            .pump(&mut EchoBackend { calls: 0 }, t + Duration::from_millis(1), |_| served += 1)
+            .pump(&EchoBackend::new(), t + Duration::from_millis(1), |_| served += 1)
             .unwrap();
         assert_eq!(served, 2);
         assert_eq!(server.stats.shed, 3, "pump must preserve the shed mirror");
     }
 
     #[test]
-    fn host_merge_backend_serves_through_the_merge_engine() {
+    fn merged_engine_serves_through_the_merge_engine() {
         use crate::peft::apply::{base_layout_for, peft_layout_for, ModelDims};
         use crate::peft::MethodSpec;
         use crate::util::rng::Rng;
@@ -883,10 +615,11 @@ mod tests {
                 })
                 .unwrap();
         }
-        let mut backend = HostMergeBackend::new(merger.clone());
+        let backend =
+            AdapterEngine::host(merger.clone(), ExecutionPolicy::Static(StrategyKind::Merged));
         let mut got = vec![];
         server
-            .pump(&mut backend, t + Duration::from_millis(1), |r| got.push(r))
+            .pump(&backend, t + Duration::from_millis(1), |r| got.push(r))
             .unwrap();
         assert_eq!(got.len(), 4);
         // Distinct adapters must be served from distinct merged weights.
@@ -900,6 +633,8 @@ mod tests {
         // Two adapters → exactly two real merges, surfaced in the stats.
         assert_eq!(merger.merges.load(std::sync::atomic::Ordering::SeqCst), 2);
         assert_eq!(server.stats.merge_misses, 2);
+        assert_eq!(server.stats.served_merged, 4);
+        assert_eq!(server.stats.served_onthefly, 0);
         // A second pump over the same adapters hits the cache.
         for (i, adapter) in ["a", "b"].iter().enumerate() {
             server
@@ -913,10 +648,11 @@ mod tests {
                 .unwrap();
         }
         server
-            .pump(&mut backend, t + Duration::from_millis(2), |_| {})
+            .pump(&backend, t + Duration::from_millis(2), |_| {})
             .unwrap();
         assert_eq!(merger.merges.load(std::sync::atomic::Ordering::SeqCst), 2);
         assert_eq!(server.stats.merge_hits, 2);
+        assert!((server.stats.merge_hit_rate() - 0.5).abs() < 1e-12);
     }
 
     #[test]
@@ -944,7 +680,8 @@ mod tests {
                 })
                 .unwrap();
         }
-        let backend = HostPoolBackend::new(merger.clone());
+        let backend =
+            AdapterEngine::host(merger.clone(), ExecutionPolicy::Static(StrategyKind::Merged));
         let mut got = vec![];
         server
             .pump_pool(&backend, t + Duration::from_millis(1), 4, |r| got.push(r))
@@ -965,8 +702,9 @@ mod tests {
         // Six adapters, single-flight: exactly six real merges.
         assert_eq!(merger.merges.load(std::sync::atomic::Ordering::SeqCst), 6);
         assert_eq!(server.stats.served, 24);
-        // The shared backend also works on the single-threaded pump path
-        // through the blanket GenBackend impl.
+        assert_eq!(server.stats.served_merged, 24);
+        // The same engine instance also drives the single-threaded pump —
+        // one API, no blanket-impl adapters.
         server
             .submit(Request {
                 id: 99,
@@ -978,7 +716,7 @@ mod tests {
             .unwrap();
         let mut served = 0;
         server
-            .pump(&mut (&backend), t + Duration::from_millis(2), |_| served += 1)
+            .pump(&backend, t + Duration::from_millis(2), |_| served += 1)
             .unwrap();
         assert_eq!(served, 1);
         assert_eq!(merger.merges.load(std::sync::atomic::Ordering::SeqCst), 6);
@@ -986,22 +724,6 @@ mod tests {
 
     #[test]
     fn pump_pool_failed_batch_does_not_discard_siblings() {
-        struct SharedEcho;
-        impl SharedBackend for SharedEcho {
-            fn generate(
-                &self,
-                adapter: &AdapterEntry,
-                prompts: &[Vec<i32>],
-                _max_new: usize,
-            ) -> Result<Vec<Vec<i32>>> {
-                let salt = adapter.peft[0] as i32;
-                Ok(prompts.iter().map(|p| {
-                    let mut o = p.clone();
-                    o.push(salt);
-                    o
-                }).collect())
-            }
-        }
         // "ghost" is schedulable but not registered: its batch must fail
         // the pump WITHOUT discarding the sibling batch's responses.
         let mut server = Server::new(registry(), cfg(4, Duration::ZERO));
@@ -1017,9 +739,10 @@ mod tests {
                 })
                 .unwrap();
         }
+        let backend = EchoBackend::new();
         let mut got = vec![];
         let err = server
-            .pump_pool(&SharedEcho, t + Duration::from_millis(1), 2, |r| got.push(r.id))
+            .pump_pool(&backend, t + Duration::from_millis(1), 2, |r| got.push(r.id))
             .unwrap_err();
         assert!(format!("{err:#}").contains("ghost"), "{err:#}");
         got.sort();
@@ -1028,12 +751,12 @@ mod tests {
         // The scheduler is drained either way — a retry pump is clean.
         assert_eq!(server.sched.pending(), 0);
         server
-            .pump_pool(&SharedEcho, t + Duration::from_millis(2), 2, |_| {})
+            .pump_pool(&backend, t + Duration::from_millis(2), 2, |_| {})
             .unwrap();
     }
 
     #[test]
-    fn swap_backend_serves_from_one_in_place_buffer() {
+    fn swap_engine_serves_from_one_in_place_buffer() {
         use crate::peft::apply::{base_layout_for, peft_layout_for, ModelDims};
         use crate::peft::MethodSpec;
         use crate::util::rng::Rng;
@@ -1064,10 +787,10 @@ mod tests {
                     })
                     .unwrap();
             }
-            let mut backend = HostMergeBackend::with_swap(merger.clone(), mode);
+            let backend = AdapterEngine::host_swap(merger.clone(), mode);
             let mut got = vec![];
             server
-                .pump(&mut backend, t + Duration::from_millis(1), |r| got.push(r))
+                .pump(&backend, t + Duration::from_millis(1), |r| got.push(r))
                 .unwrap();
             assert_eq!(got.len(), 4);
             // Distinct adapters must be served from distinct weights.
@@ -1085,6 +808,7 @@ mod tests {
             assert_eq!(backend.resident_weight_bytes(), base_bytes, "{mode:?}");
             assert_eq!(server.stats.merge_swaps, 2, "{mode:?}");
             assert_eq!(server.stats.merge_misses, 3, "{mode:?}");
+            assert_eq!(server.stats.served_swap, 4, "{mode:?}");
             if mode == SwapMode::Involution {
                 assert!(
                     server.stats.swap_residual <= 1e-5,
@@ -1125,6 +849,15 @@ mod tests {
     }
 
     #[test]
+    fn merge_hit_rate_is_hits_over_lookups() {
+        let mut stats = ServerStats::default();
+        assert_eq!(stats.merge_hit_rate(), 0.0, "no lookups yet");
+        stats.merge_hits = 3;
+        stats.merge_misses = 1;
+        assert!((stats.merge_hit_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
     fn fairness_spread_over_per_adapter_means() {
         let mut stats = ServerStats::default();
         stats.record("hot", Duration::from_millis(2));
@@ -1144,7 +877,7 @@ mod tests {
         let (req_tx, req_rx) = mpsc::channel();
         let (resp_tx, resp_rx) = mpsc::channel();
         let handle =
-            std::thread::spawn(move || server.serve(EchoBackend { calls: 0 }, req_rx, resp_tx));
+            std::thread::spawn(move || server.serve(EchoBackend::new(), req_rx, resp_tx));
         for i in 0..20u64 {
             req_tx
                 .send(Request {
@@ -1184,7 +917,7 @@ mod tests {
         let (req_tx, req_rx) = mpsc::channel();
         let (resp_tx, resp_rx) = mpsc::channel();
         let handle =
-            std::thread::spawn(move || server.serve(EchoBackend { calls: 0 }, req_rx, resp_tx));
+            std::thread::spawn(move || server.serve(EchoBackend::new(), req_rx, resp_tx));
         for i in 0..40u64 {
             req_tx
                 .send(Request {

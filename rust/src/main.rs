@@ -11,7 +11,7 @@
 
 use anyhow::{bail, Result};
 
-use ether::coordinator::{server::PjrtBackend, AdapterRegistry, Request, SchedulerCfg, Server};
+use ether::coordinator::{AdapterEngine, AdapterRegistry, Request, SchedulerCfg, Server};
 use ether::data::corpus::Corpus;
 use ether::eval::harness::default_lr;
 use ether::exp;
@@ -216,7 +216,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ..Default::default()
         },
     );
-    let mut backend = PjrtBackend::new(&engine, &cfg, cache);
+    let backend = AdapterEngine::pjrt(&engine, &cfg, cache);
     let t0 = std::time::Instant::now();
     for i in 0..n_requests {
         // zipf-ish adapter popularity
@@ -234,7 +234,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let mut responses = 0;
     server.pump(
-        &mut backend,
+        &backend,
         std::time::Instant::now() + std::time::Duration::from_secs(1),
         |r| {
             responses += 1;
@@ -255,7 +255,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let lat = s.latency_summary();
     println!(
         "served {} requests in {dt:.2}s ({:.1} req/s) | batches {} (mean size {:.1}) | \
-         p50 {:.1} ms p95 {:.1} ms | shed {} | merge cache: {} hits / {} misses",
+         p50 {:.1} ms p95 {:.1} ms | shed {} | merge cache: {} hits / {} misses \
+         (hit rate {:.0}%)",
         s.served,
         s.served as f64 / dt,
         s.batches,
@@ -263,8 +264,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         lat.p50_ms(),
         lat.p95_ms(),
         s.shed,
-        backend.cache.hits,
-        backend.cache.misses,
+        s.merge_hits,
+        s.merge_misses,
+        s.merge_hit_rate() * 100.0,
     );
     Ok(())
 }

@@ -40,7 +40,7 @@ use std::sync::Mutex;
 use anyhow::Result;
 
 use crate::peft::flat::Layout;
-use crate::peft::op::{resolve_params, ResolvedParams};
+use crate::peft::op::{resolve_params, ActShape, ResolvedParams};
 use crate::peft::registry;
 use crate::peft::{adapted_matrices, MethodSpec};
 use crate::tensor::Mat;
@@ -306,6 +306,115 @@ impl MergePlan {
             None => parallel_for_chunks(items.len(), 1, sweep),
         }
         Ok(())
+    }
+
+    /// Widest work item (`max cols`) — the row budget of the shared
+    /// probe matrix for [`MergePlan::execute_activations`].
+    pub fn max_item_cols(&self) -> usize {
+        self.items.iter().map(|it| it.cols).max().unwrap_or(0)
+    }
+
+    /// Output length of one activation sweep with `m` probe columns
+    /// (Σ rows·m over the work items, in item order).
+    pub fn activations_out_len(&self, m: usize) -> usize {
+        self.items.iter().map(|it| it.rows * m).sum()
+    }
+
+    /// Merge-free adapted forward over every work item: item `i`
+    /// computes `y_i = T(W_i)·x_i` through the op's
+    /// `apply_activations_into` kernel, where `x_i` is the top `cols_i`
+    /// rows of the shared `max_item_cols()×m` row-major probe `x` (the
+    /// first `cols_i·m` elements). Outputs land concatenated in item
+    /// order in `out` ([`MergePlan::activations_out_len`] long). **No
+    /// merged `d×f` buffer is ever allocated** — scratch stays
+    /// activation-sized, which is the whole point of the serving layer's
+    /// `OnTheFly` execution strategy.
+    ///
+    /// Blocked-parallel over items (`threads: None` = the ambient pool,
+    /// `Some(1)` = the serial oracle ordering); per-item kernels are
+    /// single-threaded and bit-deterministic over disjoint output
+    /// ranges, so results are **bit-identical for any thread count** —
+    /// locked in by `rust/tests/engine_parity.rs`.
+    pub fn execute_activations(
+        &self,
+        adapter: AdapterRef,
+        base: &[f32],
+        x: &[f32],
+        m: usize,
+        out: &mut [f32],
+        threads: Option<usize>,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            base.len() == self.base_total,
+            "base length {} != layout total {}",
+            base.len(),
+            self.base_total
+        );
+        anyhow::ensure!(m > 0, "activation probe needs at least one column");
+        let max_cols = self.max_item_cols();
+        anyhow::ensure!(
+            x.len() == max_cols * m,
+            "probe length {} != {} ({max_cols} rows × {m} columns)",
+            x.len(),
+            max_cols * m
+        );
+        anyhow::ensure!(
+            out.len() == self.activations_out_len(m),
+            "activation output buffer length mismatch"
+        );
+        let op = registry::op_for(adapter.spec.kind);
+        anyhow::ensure!(
+            op.supports_activations(),
+            "{} does not support activation application",
+            op.token()
+        );
+        let params = self.resolve_all(adapter.spec, adapter.peft, adapter.layout)?;
+        // Per-item output offsets: items have heterogeneous row counts.
+        let mut offsets = Vec::with_capacity(self.items.len());
+        let mut pos = 0usize;
+        for it in &self.items {
+            offsets.push(pos);
+            pos += it.rows * m;
+        }
+        let items = &self.items;
+        let params = &params;
+        let offsets = &offsets;
+        let spec = adapter.spec;
+        let err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        let ptr = SendPtr::new(out.as_mut_ptr());
+        let sweep = |a: usize, b: usize| {
+            for idx in a..b {
+                let it = &items[idx];
+                let size = it.rows * m;
+                // SAFETY: the offsets partition `out` into disjoint
+                // [offset, offset + rows·m) ranges in item order.
+                let region =
+                    unsafe { std::slice::from_raw_parts_mut(ptr.get().add(offsets[idx]), size) };
+                let src = &base[it.offset..it.offset + it.rows * it.cols];
+                let shape = ActShape { d: it.rows, f: it.cols, m };
+                if let Err(e) = op.apply_activations_into(
+                    spec,
+                    &params[idx],
+                    src,
+                    &x[..it.cols * m],
+                    shape,
+                    region,
+                ) {
+                    let mut slot = err.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(e.context(format!("activations {}[{}]", it.name, it.layer)));
+                    }
+                }
+            }
+        };
+        match threads {
+            Some(t) => parallel_for_chunks_with(t, items.len(), 1, sweep),
+            None => parallel_for_chunks(items.len(), 1, sweep),
+        }
+        match err.into_inner().unwrap() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 
     /// Invert `adapter`'s transform **in place** over a merged buffer,

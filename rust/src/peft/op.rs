@@ -24,6 +24,14 @@
 //!   through the orthogonal transpose; Naive through a block inverse;
 //!   LoRA/DeLoRA by subtracting the additive update. The serving layer's
 //!   in-place adapter swap is built on this hook.
+//! * [`TransformOp::apply_activations_into`] (optional, gated by
+//!   [`TransformOp::supports_activations`]) applies the transform
+//!   **directly to activations**: `out = T(W)·x` without ever
+//!   materializing the merged `d×f` matrix. A rank-1 reflection costs
+//!   O(d) per column on top of the base product, so the serving layer's
+//!   `OnTheFly` execution strategy can serve the cold adapter long tail
+//!   at zero merged-buffer memory. [`TransformOp::apply_activations_serial`]
+//!   is the oracle (materialize, then multiply).
 //!
 //! To add a new method: implement the trait on a unit struct here, add
 //! the [`crate::peft::MethodKind`] variant, and register it in
@@ -99,6 +107,17 @@ pub fn resolve_params<'a>(
         fields.push((field, v));
     }
     Ok(ResolvedParams { fields })
+}
+
+/// Shape of one activation batch for the merge-free execution path
+/// ([`TransformOp::apply_activations_into`]): the input `x` holds `m`
+/// `f`-dimensional columns (`f×m`, row-major) and the output holds `m`
+/// `d`-dimensional columns (`d×m`).
+#[derive(Clone, Copy, Debug)]
+pub struct ActShape {
+    pub d: usize,
+    pub f: usize,
+    pub m: usize,
 }
 
 /// One member of the PEFT transform family (object-safe).
@@ -189,6 +208,71 @@ pub trait TransformOp: Sync + Send {
     ) -> Result<()> {
         let _ = (spec, p, merged, d, f, out);
         bail!("{} does not support unmerge", self.token())
+    }
+
+    /// Whether [`TransformOp::apply_activations_into`] is implemented.
+    /// The serving layer's on-the-fly (merge-free) execution strategy
+    /// gates on this; every host-mergeable family member supports it.
+    fn supports_activations(&self) -> bool {
+        false
+    }
+
+    /// Merge-free adapted forward on activations: `out = T(W)·x` for one
+    /// `d×f` base slice `w` and `m` input columns `x` (`f×m`), without
+    /// ever materializing the merged `d×f` matrix — scratch stays
+    /// activation-sized (`O((d+f)·m)`). This is the structural shortcut
+    /// the paper's reflections make cheap: `H·y = y − 2û(ûᵀy)` costs
+    /// `O(d)` per column on top of the base product, vs. the `O(d·f)`
+    /// merged buffer the cached strategies keep resident.
+    fn apply_activations_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        w: &[f32],
+        x: &[f32],
+        shape: ActShape,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let _ = (spec, p, w, x, shape, out);
+        bail!("{} does not support activation application", self.token())
+    }
+
+    /// Allocating convenience over [`TransformOp::apply_activations_into`].
+    fn apply_activations(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        w: &[f32],
+        x: &[f32],
+        shape: ActShape,
+    ) -> Result<Vec<f32>> {
+        let mut out = vec![0.0f32; shape.d * shape.m];
+        self.apply_activations_into(spec, p, w, x, shape, &mut out)?;
+        Ok(out)
+    }
+
+    /// Serial oracle for the activation path: materialize the merged
+    /// slice with [`TransformOp::apply_into`] and multiply — exactly the
+    /// buffer the fast path avoids. Parity (≤ 1e-5) across the registry
+    /// is locked in by `rust/tests/engine_parity.rs`.
+    fn apply_activations_serial(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        w: &[f32],
+        x: &[f32],
+        shape: ActShape,
+    ) -> Result<Vec<f32>> {
+        ensure!(
+            self.host_mergeable(),
+            "host merge unsupported for {} (no activation oracle)",
+            self.token()
+        );
+        let mut merged = vec![0.0f32; shape.d * shape.f];
+        self.apply_into(spec, p, w, shape.d, shape.f, &mut merged);
+        let mut out = vec![0.0f32; shape.d * shape.m];
+        tf::matmul_acc_into(&merged, x, shape.d, shape.f, shape.m, &mut out);
+        Ok(out)
     }
 
     /// Squared transformation-distance contribution of one matrix/layer
@@ -423,6 +507,29 @@ impl TransformOp for EtherOp {
         self.apply_into(spec, p, merged, d, f, out);
         Ok(())
     }
+
+    fn supports_activations(&self) -> bool {
+        true
+    }
+
+    /// `(H·W)·x = H·(W·x)`: one base product, then the O(d)-per-column
+    /// reflection on the outputs — never the d×f merged matrix.
+    fn apply_activations_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        w: &[f32],
+        x: &[f32],
+        shape: ActShape,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let ActShape { d, f, m } = shape;
+        let uh = tf::normalize_blocks(p.get("u"), spec.n_blocks);
+        let mut y0 = vec![0.0f32; d * m];
+        tf::matmul_acc_into(w, x, d, f, m, &mut y0);
+        tf::ether_into(&uh, spec.n_blocks, &y0, m, out);
+        Ok(())
+    }
 }
 
 /// ETHER+: relaxed one- or two-sided reflections `I − ûûᵀ + v̂v̂ᵀ` (§3.3).
@@ -556,6 +663,40 @@ impl TransformOp for EtherPlusOp {
         }
         Ok(acc)
     }
+
+    fn supports_activations(&self) -> bool {
+        true
+    }
+
+    /// `(H⁺·W·H̃⁺)·x = H⁺·(W·(H̃⁺·x))`: the symmetric right factor applies
+    /// to the f-dim input columns first, then one base product, then the
+    /// left relaxed reflection on the outputs.
+    fn apply_activations_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        w: &[f32],
+        x: &[f32],
+        shape: ActShape,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let ActShape { d, f, m } = shape;
+        let n = spec.n_blocks;
+        let uh = tf::normalize_blocks(p.get("u"), n);
+        let vh = tf::normalize_blocks(p.get("v"), n);
+        let mut y0 = vec![0.0f32; d * m];
+        if spec.sides == 2 {
+            let ruh = tf::normalize_blocks(p.get("ru"), n);
+            let rvh = tf::normalize_blocks(p.get("rv"), n);
+            let mut xp = vec![0.0f32; f * m];
+            tf::ether_plus_left_into(&ruh, &rvh, n, x, m, &mut xp);
+            tf::matmul_acc_into(w, &xp, d, f, m, &mut y0);
+        } else {
+            tf::matmul_acc_into(w, x, d, f, m, &mut y0);
+        }
+        tf::ether_plus_left_into(&uh, &vh, n, &y0, m, out);
+        Ok(())
+    }
 }
 
 /// OFT: block-diagonal Cayley-orthogonal multipliers, optionally with
@@ -664,6 +805,42 @@ impl TransformOp for OftOp {
         }
         Ok(())
     }
+
+    fn supports_activations(&self) -> bool {
+        true
+    }
+
+    /// `(Q·W·diag(1+mag))·x = Q·(W·(diag(1+mag)·x))`: scale the f-dim
+    /// input rows, one base product, then the block-diagonal multiply on
+    /// the d-dim outputs.
+    fn apply_activations_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        w: &[f32],
+        x: &[f32],
+        shape: ActShape,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let ActShape { d, f, m } = shape;
+        let blocks = tf::cayley_blocks(p.get("r"), spec.n_blocks, d / spec.n_blocks);
+        let mut y0 = vec![0.0f32; d * m];
+        if spec.magnitude_refit {
+            let mag = p.get("mag");
+            let mut xs = vec![0.0f32; f * m];
+            for j in 0..f {
+                let s = 1.0 + mag[j];
+                for c in 0..m {
+                    xs[j * m + c] = x[j * m + c] * s;
+                }
+            }
+            tf::matmul_acc_into(w, &xs, d, f, m, &mut y0);
+        } else {
+            tf::matmul_acc_into(w, x, d, f, m, &mut y0);
+        }
+        tf::bdmm_into(&blocks, &y0, m, None, out);
+        Ok(())
+    }
 }
 
 /// Naive: unconstrained block-diagonal multipliers `I + R` (§5.3).
@@ -742,6 +919,28 @@ impl TransformOp for NaiveOp {
         tf::bdmm_into(&inv, merged, f, None, out);
         Ok(())
     }
+
+    fn supports_activations(&self) -> bool {
+        true
+    }
+
+    /// `((I+R)·W)·x = (I+R)·(W·x)`.
+    fn apply_activations_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        w: &[f32],
+        x: &[f32],
+        shape: ActShape,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let ActShape { d, f, m } = shape;
+        let blocks = tf::naive_blocks(p.get("r"), spec.n_blocks, d / spec.n_blocks);
+        let mut y0 = vec![0.0f32; d * m];
+        tf::matmul_acc_into(w, x, d, f, m, &mut y0);
+        tf::bdmm_into(&blocks, &y0, m, None, out);
+        Ok(())
+    }
 }
 
 /// LoRA: additive low-rank update `W + A B`.
@@ -811,6 +1010,27 @@ impl TransformOp for LoraOp {
     ) -> Result<()> {
         let neg_a: Vec<f32> = p.get("a").iter().map(|x| -x).collect();
         tf::lora_into(&neg_a, p.get("b"), merged, d, spec.rank, f, out);
+        Ok(())
+    }
+
+    fn supports_activations(&self) -> bool {
+        true
+    }
+
+    /// `(W + A·B)·x = W·x + A·(B·x)` — the classic low-rank shortcut;
+    /// scratch is the r×m intermediate only.
+    fn apply_activations_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        w: &[f32],
+        x: &[f32],
+        shape: ActShape,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let ActShape { d, f, m } = shape;
+        tf::matmul_acc_into(w, x, d, f, m, out);
+        tf::lora_activations_acc(p.get("a"), p.get("b"), x, d, spec.rank, f, m, out);
         Ok(())
     }
 }
@@ -950,6 +1170,28 @@ impl TransformOp for DeloraOp {
         tf::lora_into(&sa, p.get("b"), merged, d, r, f, out);
         Ok(())
     }
+
+    fn supports_activations(&self) -> bool {
+        true
+    }
+
+    /// Same low-rank shortcut as LoRA, with the strength-scaled `A`.
+    fn apply_activations_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        w: &[f32],
+        x: &[f32],
+        shape: ActShape,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let ActShape { d, f, m } = shape;
+        let r = spec.rank;
+        let sa = delora_scaled_a(p.get("a"), p.get("b"), p.get("lambda")[0], d, r, f, 1.0);
+        tf::matmul_acc_into(w, x, d, f, m, out);
+        tf::lora_activations_acc(&sa, p.get("b"), x, d, r, f, m, out);
+        Ok(())
+    }
 }
 
 /// Full finetuning: the adapter *is* the replacement weight matrix.
@@ -994,6 +1236,25 @@ impl TransformOp for FullOp {
         out: &mut [f32],
     ) {
         out.copy_from_slice(p.get("w"));
+    }
+
+    fn supports_activations(&self) -> bool {
+        true
+    }
+
+    /// The adapter *is* the weight matrix: one product with it.
+    fn apply_activations_into(
+        &self,
+        _spec: &MethodSpec,
+        p: &ResolvedParams,
+        _w: &[f32],
+        x: &[f32],
+        shape: ActShape,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let ActShape { d, f, m } = shape;
+        tf::matmul_acc_into(p.get("w"), x, d, f, m, out);
+        Ok(())
     }
 }
 
@@ -1062,6 +1323,25 @@ impl TransformOp for NoneOp {
         out.copy_from_slice(merged);
         Ok(())
     }
+
+    fn supports_activations(&self) -> bool {
+        true
+    }
+
+    /// The frozen base forward.
+    fn apply_activations_into(
+        &self,
+        _spec: &MethodSpec,
+        _p: &ResolvedParams,
+        w: &[f32],
+        x: &[f32],
+        shape: ActShape,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let ActShape { d, f, m } = shape;
+        tf::matmul_acc_into(w, x, d, f, m, out);
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -1119,6 +1399,54 @@ mod tests {
             let nb: f64 = (0..f).map(|c| (b[t * f + c] as f64).powi(2)).sum::<f64>().sqrt();
             assert!((na * nb - 2.0 / r as f64).abs() < 1e-6, "component {t}: {}", na * nb);
         }
+    }
+
+    #[test]
+    fn activation_fast_paths_match_the_materialize_oracle() {
+        // Every kind's merge-free activation kernel must agree with the
+        // materialize-then-multiply oracle on one (d, f) slice. The
+        // registry-wide sweep over whole models lives in
+        // rust/tests/engine_parity.rs; this is the op-local unit.
+        let mut rng = Rng::new(23);
+        let (d, f, m) = (16usize, 12usize, 3usize);
+        let w: Vec<f32> = rng.normal_vec(d * f, 0.1);
+        let x: Vec<f32> = rng.normal_vec(f * m, 0.5);
+        let shape = ActShape { d, f, m };
+
+        // ETHER
+        let spec = MethodSpec::parse("ether_n4").unwrap();
+        let u: Vec<f32> = rng.normal_vec(d, 0.8);
+        let p = params_for(vec![("u", &u[..])]);
+        let fast = EtherOp.apply_activations(&spec, &p, &w, &x, shape).unwrap();
+        let slow = EtherOp.apply_activations_serial(&spec, &p, &w, &x, shape).unwrap();
+        let err = fast.iter().zip(&slow).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(err <= 1e-5, "ether activation parity {err}");
+
+        // Two-sided ETHER+ (the order-of-factors case).
+        let spec = MethodSpec::parse("etherplus_n4").unwrap();
+        let u: Vec<f32> = rng.normal_vec(d, 0.8);
+        let v: Vec<f32> = rng.normal_vec(d, 0.8);
+        let ru: Vec<f32> = rng.normal_vec(f, 0.8);
+        let rv: Vec<f32> = rng.normal_vec(f, 0.8);
+        let p = params_for(vec![("u", &u[..]), ("v", &v[..]), ("ru", &ru[..]), ("rv", &rv[..])]);
+        let fast = EtherPlusOp.apply_activations(&spec, &p, &w, &x, shape).unwrap();
+        let slow = EtherPlusOp.apply_activations_serial(&spec, &p, &w, &x, shape).unwrap();
+        let err = fast.iter().zip(&slow).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(err <= 1e-5, "etherplus activation parity {err}");
+
+        // LoRA (the low-rank shortcut).
+        let spec = MethodSpec::parse("lora_r3").unwrap();
+        let a: Vec<f32> = rng.normal_vec(d * 3, 0.4);
+        let b: Vec<f32> = rng.normal_vec(3 * f, 0.4);
+        let p = params_for(vec![("a", &a[..]), ("b", &b[..])]);
+        let fast = LoraOp.apply_activations(&spec, &p, &w, &x, shape).unwrap();
+        let slow = LoraOp.apply_activations_serial(&spec, &p, &w, &x, shape).unwrap();
+        let err = fast.iter().zip(&slow).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(err <= 1e-5, "lora activation parity {err}");
+
+        // VeRA stays unsupported (and says so).
+        assert!(!VeraOp.supports_activations());
+        assert!(VeraOp.apply_activations(&spec, &p, &w, &x, shape).is_err());
     }
 
     #[test]

@@ -251,6 +251,70 @@ pub(crate) fn ether_plus_right_rows(rows: &mut [f32], f: usize, uh: &[f32], vh: 
     }
 }
 
+/// `out (d×m) = W (d×f) · X (f×m)` with the per-element reduction over
+/// the shared dimension accumulated in f64 in a fixed order — the
+/// activation-path analogue of the merge kernels' determinism contract
+/// (bit-identical regardless of how callers parallelize *across* calls).
+pub(crate) fn matmul_acc_into(w: &[f32], x: &[f32], d: usize, f: usize, m: usize, out: &mut [f32]) {
+    debug_assert_eq!(w.len(), d * f);
+    debug_assert_eq!(x.len(), f * m);
+    debug_assert_eq!(out.len(), d * m);
+    for i in 0..d {
+        let wrow = &w[i * f..(i + 1) * f];
+        let orow = &mut out[i * m..(i + 1) * m];
+        for (c, o) in orow.iter_mut().enumerate() {
+            let mut acc = 0.0f64;
+            for (j, &wv) in wrow.iter().enumerate() {
+                acc += wv as f64 * x[j * m + c] as f64;
+            }
+            *o = acc as f32;
+        }
+    }
+}
+
+/// `out (d×m) += A (d×r) · (B (r×f) · X (f×m))` — the low-rank additive
+/// update applied to activations without ever materializing `A·B`
+/// (scratch is the `r×m` intermediate only). Fixed-order f64
+/// accumulation, same determinism contract as [`matmul_acc_into`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn lora_activations_acc(
+    a: &[f32],
+    b: &[f32],
+    x: &[f32],
+    d: usize,
+    r: usize,
+    f: usize,
+    m: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), d * r);
+    debug_assert_eq!(b.len(), r * f);
+    debug_assert_eq!(x.len(), f * m);
+    debug_assert_eq!(out.len(), d * m);
+    let mut t = vec![0.0f64; r * m];
+    for ti in 0..r {
+        let brow = &b[ti * f..(ti + 1) * f];
+        for c in 0..m {
+            let mut acc = 0.0f64;
+            for (j, &bv) in brow.iter().enumerate() {
+                acc += bv as f64 * x[j * m + c] as f64;
+            }
+            t[ti * m + c] = acc;
+        }
+    }
+    for i in 0..d {
+        let arow = &a[i * r..(i + 1) * r];
+        let orow = &mut out[i * m..(i + 1) * m];
+        for (c, o) in orow.iter_mut().enumerate() {
+            let mut acc = *o as f64;
+            for (ti, &av) in arow.iter().enumerate() {
+                acc += av as f64 * t[ti * m + c];
+            }
+            *o = acc as f32;
+        }
+    }
+}
+
 /// `out = w + a·b` (LoRA) over full slices: `a` is `d×r`, `b` is `r×f`.
 pub(crate) fn lora_into(a: &[f32], b: &[f32], w: &[f32], d: usize, r: usize, f: usize, out: &mut [f32]) {
     debug_assert_eq!(w.len(), d * f);

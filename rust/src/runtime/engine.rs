@@ -114,9 +114,22 @@ impl PjrtEngine {
         PjrtEngine::new(&crate::artifacts_dir())
     }
 
+    /// Executable-cache guard with poison recovery. The cache is a plain
+    /// name→executable map with no cross-entry invariants, so a panic on
+    /// one compile thread (which poisons the mutex) must not cascade:
+    /// with a bare `lock().unwrap()` every *subsequent* `load` — for any
+    /// artifact, however healthy — would panic on the poisoned guard.
+    /// Regression note: the pre-fix code did exactly that; recover the
+    /// guard and keep serving compiles.
+    fn cache_guard(&self) -> std::sync::MutexGuard<'_, BTreeMap<String, std::sync::Arc<PjrtExec>>> {
+        self.cache
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
     /// Load + compile an artifact (cached).
     pub fn load(&self, name: &str) -> Result<std::sync::Arc<PjrtExec>> {
-        if let Some(e) = self.cache.lock().unwrap().get(name) {
+        if let Some(e) = self.cache_guard().get(name) {
             return Ok(e.clone());
         }
         let info = self.manifest.artifact(name)?.clone();
@@ -129,7 +142,7 @@ impl PjrtEngine {
         let exe = self.client.compile(&comp)?;
         log::info!("compiled {} in {:.2}s", name, t0.elapsed().as_secs_f64());
         let exec = std::sync::Arc::new(PjrtExec { name: name.to_string(), info, exe });
-        self.cache.lock().unwrap().insert(name.to_string(), exec.clone());
+        self.cache_guard().insert(name.to_string(), exec.clone());
         Ok(exec)
     }
 

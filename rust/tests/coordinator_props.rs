@@ -129,9 +129,13 @@ fn lru_cache_capacity_and_recency() {
 #[test]
 fn server_routes_every_request_to_its_own_adapter() {
     struct TagBackend;
-    impl ether::coordinator::server::GenBackend for TagBackend {
+    impl ether::coordinator::ExecutionStrategy for TagBackend {
+        fn name(&self) -> &'static str {
+            "tag"
+        }
+
         fn generate(
-            &mut self,
+            &self,
             adapter: &ether::coordinator::registry::AdapterEntry,
             prompts: &[Vec<i32>],
             _max_new: usize,
@@ -167,7 +171,7 @@ fn server_routes_every_request_to_its_own_adapter() {
         }
         let mut errors = vec![];
         server
-            .pump(&mut TagBackend, t0 + Duration::from_secs(1), |resp| {
+            .pump(&TagBackend, t0 + Duration::from_secs(1), |resp| {
                 if resp.output[0] != expected[&resp.id] {
                     errors.push(resp.id);
                 }

@@ -1,0 +1,252 @@
+//! Parity + policy coverage for the merge-free activation execution
+//! path (the `OnTheFly` strategy behind the unified `AdapterEngine`):
+//!
+//! * **merged vs on-the-fly parity**: for every registry kind that
+//!   implements `apply_activations`, the activation outputs
+//!   `y = T(W)·x` must agree with multiplying the *merged* weights by
+//!   the same probe to ≤ 1e-5 — and the coverage set itself is pinned
+//!   (every host-mergeable family member supports the path; VeRA does
+//!   not).
+//! * **thread-count bit-invariance**: the blocked-parallel activation
+//!   sweep produces identical bits pinned to 1 or 4 threads (the
+//!   explicit-thread core `ETHER_THREADS` feeds) and on the ambient
+//!   pool.
+//! * **zero merged buffers**: serving through the on-the-fly strategy
+//!   never merges and keeps zero merged bytes resident, asserted via
+//!   the engine counters.
+//! * **traffic-aware policy**: a hot adapter is promoted to the merged
+//!   strategy once its scheduler request count crosses the threshold;
+//!   a cold adapter stays on the merge-free path.
+
+use std::collections::HashSet;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use ether::coordinator::{
+    AdapterEngine, AdapterRegistry, ExecutionPolicy, MergeEngine, Request, SchedulerCfg, Server,
+    StrategyKind,
+};
+use ether::peft::apply::{
+    base_layout_for, merge_into_base, peft_layout_for, AdapterRef, MergePlan, ModelDims,
+};
+use ether::peft::registry as ops;
+use ether::peft::MethodSpec;
+use ether::util::rng::Rng;
+
+fn tiny_dims() -> ModelDims {
+    ModelDims { d_model: 16, d_ff: 32, n_layers: 2 }
+}
+
+/// Every registry kind with an activation fast path, by canonical name.
+const ACTIVATION_METHODS: [&str; 10] = [
+    "ether_n4",
+    "etherplus_n4",
+    "etherplus_n2_1s",
+    "oft_n4",
+    "oft_n4_mrf",
+    "naive_n2",
+    "lora_r4",
+    "delora_r4",
+    "full",
+    "none",
+];
+
+#[test]
+fn activation_support_covers_exactly_the_host_mergeable_family() {
+    let covered: HashSet<_> = ACTIVATION_METHODS
+        .iter()
+        .map(|m| MethodSpec::parse(m).unwrap().kind)
+        .collect();
+    for &kind in ops::ALL_KINDS.iter() {
+        let op = ops::op_for(kind);
+        assert_eq!(
+            op.supports_activations(),
+            covered.contains(&kind),
+            "{kind:?}: activation support / parity coverage out of sync"
+        );
+        if op.supports_activations() {
+            assert!(op.host_mergeable(), "{kind:?}: activation path needs host weights");
+        }
+    }
+}
+
+#[test]
+fn merged_weights_and_onthefly_activations_agree_across_the_registry() {
+    let dims = tiny_dims();
+    let layout = base_layout_for(dims);
+    let plan = MergePlan::new(dims, &layout).unwrap();
+    let mut rng = Rng::new(41);
+    let base: Vec<f32> = rng.normal_vec(layout.total, 0.05);
+    let m = 2usize;
+    let x: Vec<f32> = rng.normal_vec(plan.max_item_cols() * m, 1.0);
+
+    for name in ACTIVATION_METHODS {
+        let spec = MethodSpec::parse(name).unwrap();
+        let pl = peft_layout_for(dims, &spec);
+        let peft: Vec<f32> = rng.normal_vec(pl.total, 0.5);
+        // The buffer the on-the-fly path refuses to materialize…
+        let merged = merge_into_base(dims, &spec, &base, &layout, &peft, &pl).unwrap();
+        // …and the activation outputs computed without it.
+        let mut fast = vec![0.0f32; plan.activations_out_len(m)];
+        plan.execute_activations(
+            AdapterRef { spec: &spec, peft: &peft, layout: &pl },
+            &base,
+            &x,
+            m,
+            &mut fast,
+            None,
+        )
+        .unwrap();
+        // Oracle: y = merged_slice · x per work item, f64 accumulation.
+        let mut pos = 0usize;
+        let mut max_err = 0.0f32;
+        for it in &plan.items {
+            let slice = &merged[it.offset..it.offset + it.rows * it.cols];
+            for i in 0..it.rows {
+                for c in 0..m {
+                    let mut acc = 0.0f64;
+                    for j in 0..it.cols {
+                        acc += slice[i * it.cols + j] as f64 * x[j * m + c] as f64;
+                    }
+                    let got = fast[pos + i * m + c];
+                    max_err = max_err.max((got - acc as f32).abs());
+                }
+            }
+            pos += it.rows * m;
+        }
+        assert!(
+            max_err <= 1e-5,
+            "{name}: merged-vs-onthefly activation parity {max_err}"
+        );
+    }
+}
+
+#[test]
+fn activation_sweep_is_bit_invariant_across_thread_counts() {
+    // The explicit-thread core is what ETHER_THREADS ∈ {1, 4} pins; the
+    // ambient pool must agree bit-for-bit too.
+    let dims = tiny_dims();
+    let layout = base_layout_for(dims);
+    let plan = MergePlan::new(dims, &layout).unwrap();
+    let mut rng = Rng::new(43);
+    let base: Vec<f32> = rng.normal_vec(layout.total, 0.05);
+    let m = 3usize;
+    let x: Vec<f32> = rng.normal_vec(plan.max_item_cols() * m, 1.0);
+    for name in ACTIVATION_METHODS {
+        let spec = MethodSpec::parse(name).unwrap();
+        let pl = peft_layout_for(dims, &spec);
+        let peft: Vec<f32> = rng.normal_vec(pl.total, 0.5);
+        let adapter = AdapterRef { spec: &spec, peft: &peft, layout: &pl };
+        let mut serial = vec![0.0f32; plan.activations_out_len(m)];
+        plan.execute_activations(adapter, &base, &x, m, &mut serial, Some(1)).unwrap();
+        let mut four = vec![0.0f32; plan.activations_out_len(m)];
+        plan.execute_activations(adapter, &base, &x, m, &mut four, Some(4)).unwrap();
+        let mut ambient = vec![0.0f32; plan.activations_out_len(m)];
+        plan.execute_activations(adapter, &base, &x, m, &mut ambient, None).unwrap();
+        assert!(
+            serial.iter().zip(&four).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{name}: 1-thread vs 4-thread activation bits differ"
+        );
+        assert!(
+            serial.iter().zip(&ambient).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{name}: serial vs ambient-pool activation bits differ"
+        );
+    }
+}
+
+fn serving_fixture(cache_cap: usize) -> (Arc<MergeEngine>, AdapterRegistry) {
+    let dims = tiny_dims();
+    let layout = base_layout_for(dims);
+    let mut rng = Rng::new(47);
+    let base: Vec<f32> = rng.normal_vec(layout.total, 0.05);
+    let merger = Arc::new(MergeEngine::new(dims, base, &layout, cache_cap, 2).unwrap());
+    let mut registry = AdapterRegistry::new();
+    registry.register_fleet(4, "ether_n4", "host", dims, 53).unwrap();
+    (merger, registry)
+}
+
+fn req(id: u64, adapter: &str, t: Instant) -> Request {
+    Request { id, adapter: adapter.into(), prompt: vec![id as i32], max_new: 1, enqueued: t }
+}
+
+#[test]
+fn onthefly_serving_allocates_zero_merged_buffers() {
+    let (merger, registry) = serving_fixture(4);
+    let mut server = Server::new(
+        registry,
+        SchedulerCfg { max_batch: 8, max_wait: Duration::ZERO, ..Default::default() },
+    );
+    let engine =
+        AdapterEngine::host(merger.clone(), ExecutionPolicy::Static(StrategyKind::OnTheFly));
+    let t = Instant::now();
+    for i in 0..12u64 {
+        server.submit(req(i, &format!("user{}", i % 4), t)).unwrap();
+    }
+    let mut got = vec![];
+    server
+        .pump_pool(&engine, t + Duration::from_millis(1), 4, |r| got.push(r))
+        .unwrap();
+    assert_eq!(got.len(), 12);
+    // Distinct adapters are observably served from distinct adapted
+    // activations; the same adapter's tag is stable.
+    let mut tags: std::collections::BTreeMap<String, i32> = Default::default();
+    for r in &got {
+        let tag = *r.output.last().unwrap();
+        if let Some(prev) = tags.insert(r.adapter.clone(), tag) {
+            assert_eq!(prev, tag, "adapter {} served inconsistently", r.adapter);
+        }
+    }
+    assert_eq!(tags.values().collect::<HashSet<_>>().len(), 4);
+    // The zero-merged-buffers claim, through the engine counters: no
+    // merge ever ran, nothing resident, every request merge-free.
+    assert_eq!(merger.merges.load(Ordering::SeqCst), 0, "on-the-fly must never merge");
+    assert_eq!(merger.cache_resident_bytes(), 0);
+    assert_eq!(server.stats.served_onthefly, 12);
+    assert_eq!(server.stats.served_merged, 0);
+    assert_eq!(server.stats.merge_hits + server.stats.merge_misses, 0);
+}
+
+#[test]
+fn traffic_aware_policy_promotes_hot_and_keeps_cold_merge_free() {
+    let (merger, registry) = serving_fixture(4);
+    let mut server = Server::new(
+        registry,
+        SchedulerCfg { max_batch: 8, max_wait: Duration::ZERO, ..Default::default() },
+    );
+    let engine = AdapterEngine::host(
+        merger.clone(),
+        ExecutionPolicy::TrafficAware { hot_threshold: 4 },
+    );
+    let t = Instant::now();
+    // Round 1: both adapters below the threshold — everything merge-free.
+    for i in 0..2u64 {
+        server.submit(req(i, "user0", t)).unwrap();
+    }
+    server.submit(req(10, "user1", t)).unwrap();
+    server.pump(&engine, t + Duration::from_millis(1), |_| {}).unwrap();
+    assert_eq!(server.stats.served_onthefly, 3);
+    assert_eq!(server.stats.policy_promotions, 0);
+    assert_eq!(merger.merges.load(Ordering::SeqCst), 0);
+    // Round 2: user0 crosses the threshold (cumulative 5 ≥ 4) and is
+    // promoted to the merged cache; user1 stays cold and merge-free.
+    for i in 2..5u64 {
+        server.submit(req(i, "user0", t)).unwrap();
+    }
+    server.submit(req(11, "user1", t)).unwrap();
+    server.pump(&engine, t + Duration::from_millis(2), |_| {}).unwrap();
+    assert_eq!(server.stats.policy_promotions, 1, "exactly one (sticky) promotion");
+    assert_eq!(server.stats.served_merged, 3, "user0's round-2 batch is merged");
+    assert_eq!(server.stats.served_onthefly, 4, "user1 stays on the merge-free path");
+    assert_eq!(engine.strategy_for("user0"), StrategyKind::Merged);
+    assert_eq!(engine.strategy_for("user1"), StrategyKind::OnTheFly);
+    // Exactly the promoted adapter's weights were merged — the cold
+    // tail never cost a merged buffer.
+    assert_eq!(merger.merges.load(Ordering::SeqCst), 1);
+    // Round 3: the promotion is sticky — user0 keeps hitting the cache.
+    server.submit(req(5, "user0", t)).unwrap();
+    server.pump(&engine, t + Duration::from_millis(3), |_| {}).unwrap();
+    assert_eq!(server.stats.policy_promotions, 1);
+    assert_eq!(merger.merges.load(Ordering::SeqCst), 1);
+    assert!(server.stats.merge_hits >= 1);
+}

@@ -61,12 +61,16 @@ fn mock_serving_pipeline_end_to_end() {
     // Coordinator + mock logits backend: adapters produce different
     // outputs for the same prompt (routing is observable).
     use ether::coordinator::registry::AdapterEntry;
-    use ether::coordinator::server::GenBackend;
+    use ether::coordinator::ExecutionStrategy;
 
     struct MockModelBackend;
-    impl GenBackend for MockModelBackend {
+    impl ExecutionStrategy for MockModelBackend {
+        fn name(&self) -> &'static str {
+            "mock-model"
+        }
+
         fn generate(
-            &mut self,
+            &self,
             adapter: &AdapterEntry,
             prompts: &[Vec<i32>],
             max_new: usize,
@@ -118,7 +122,7 @@ fn mock_serving_pipeline_end_to_end() {
     }
     let mut outs = std::collections::BTreeMap::new();
     server
-        .pump(&mut MockModelBackend, t + std::time::Duration::from_millis(1), |r| {
+        .pump(&MockModelBackend, t + std::time::Duration::from_millis(1), |r| {
             outs.insert(r.adapter.clone(), r.output.clone());
         })
         .unwrap();

@@ -1,26 +1,128 @@
-//! Bench — end-to-end train-step latency per method (backs Tables 4/5's
-//! cost column and the §Perf train-loop numbers). Compares the
-//! host-literal path against the device-resident-base path to quantify
-//! the L3 optimization.
+//! Bench — train-step gradient cost per method.
+//!
+//! Primary section (always runs, no artifacts needed): the host-native
+//! gradient engine on a synthetic d_model=1024 model — one full
+//! forward + backward (`HostTrainer::loss_and_grad`) per iteration,
+//! blocked-parallel over work items vs the pinned-serial oracle, per
+//! differentiable method. Grad **bit-parity** between the two drivers
+//! is asserted before timing (the determinism contract of the gradient
+//! surface), the speedup is printed per method, and the table lands in
+//! `BENCH_train_step.json` (via `ETHER_BENCH_JSON`) with one blocked
+//! and one serial row per method — grads/s is the throughput column.
+//!
+//! Secondary section (only with `make artifacts` + real PJRT bindings):
+//! the original device train-step latency comparison.
 
 use ether::data::corpus::Corpus;
+use ether::peft::apply::ModelDims;
+use ether::peft::registry;
 use ether::runtime::{HostTensor, PjrtEngine};
+use ether::train::host::{HostTrainCfg, HostTrainer, Objective};
 use ether::train::LmTrainer;
 use ether::util::benchkit::Bench;
 
-fn main() {
+fn host_section() {
+    let quick = std::env::var("ETHER_BENCH_QUICK").is_ok();
+    let dims = if quick {
+        ModelDims { d_model: 1024, d_ff: 2048, n_layers: 2 }
+    } else {
+        ModelDims { d_model: 1024, d_ff: 2048, n_layers: 4 }
+    };
+    let batch_cols = 2;
+    println!(
+        "host grad step: d_model={} d_ff={} n_layers={} m={batch_cols} ({} threads)",
+        dims.d_model,
+        dims.d_ff,
+        dims.n_layers,
+        ether::util::pool::default_threads()
+    );
+    let methods: Vec<String> = if quick {
+        vec!["ether_n4".into(), "etherplus_n4".into(), "lora_r8".into()]
+    } else {
+        registry::grad_kinds()
+            .into_iter()
+            .map(|k| {
+                let op = registry::op_for(k);
+                let spec = ether::peft::MethodSpec::parse(match op.token() {
+                    "ether" => "ether_n4",
+                    "etherplus" => "etherplus_n4",
+                    "oft" => "oft_n64",
+                    "naive" => "naive_n64",
+                    "lora" => "lora_r8",
+                    "delora" => "delora_r8",
+                    other => other, // "full"
+                })
+                .unwrap();
+                spec.name()
+            })
+            .collect()
+    };
+
+    let mut bench = Bench::new("train step");
+    for method in &methods {
+        let cfg = HostTrainCfg {
+            dims,
+            method: method.clone(),
+            objective: Objective::LeastSquares,
+            batch_cols,
+            telemetry: false,
+            ..Default::default()
+        };
+        let tr = HostTrainer::new(cfg).expect("trainer");
+        let x = tr.probe(0);
+        // Parity gate (outside timing): blocked grads must reproduce
+        // the serial oracle's bits exactly, at any pinned thread count.
+        let (l1, g1) = tr.loss_and_grad(&x, Some(1)).unwrap();
+        let (l4, g4) = tr.loss_and_grad(&x, Some(4)).unwrap();
+        let (la, ga) = tr.loss_and_grad(&x, None).unwrap();
+        assert_eq!(l1.to_bits(), l4.to_bits(), "{method}: loss bits differ (1 vs 4 threads)");
+        assert_eq!(l1.to_bits(), la.to_bits(), "{method}: loss bits differ (serial vs ambient)");
+        assert!(
+            g1.iter().zip(&g4).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{method}: grad bits differ (1 vs 4 threads)"
+        );
+        assert!(
+            g1.iter().zip(&ga).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{method}: grad bits differ (serial vs ambient pool)"
+        );
+        drop((g1, g4, ga));
+        let blocked_ns = bench
+            .case(&format!("{method} (blocked parallel)"), Some(1.0), || {
+                ether::util::benchkit::black_box(tr.loss_and_grad(&x, None).unwrap());
+            })
+            .median_ns;
+        let serial_ns = bench
+            .case(&format!("{method} (serial reference)"), Some(1.0), || {
+                ether::util::benchkit::black_box(tr.loss_and_grad(&x, Some(1)).unwrap());
+            })
+            .median_ns;
+        println!(
+            "  {method}: blocked grads {:.2}x vs serial (bit-identical, loss {l1:.5})",
+            serial_ns / blocked_ns
+        );
+    }
+    bench.report();
+}
+
+fn artifact_section() {
     let dir = ether::artifacts_dir();
     if !dir.join("manifest.json").exists() {
-        println!("[skip] artifacts not built — run `make artifacts`");
+        println!("[skip] PJRT train-step section — run `make artifacts`");
         return;
     }
-    let engine = PjrtEngine::new(&dir).expect("engine");
+    let engine = match PjrtEngine::new(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            println!("[skip] PJRT train-step section — PJRT unavailable: {e:#}");
+            return;
+        }
+    };
     let cfg = "tiny";
     let c = engine.manifest.config(cfg).unwrap().clone();
     let corpus = Corpus::new(3);
     let batch = corpus.lm_batch(c.batch, c.seq, 0);
 
-    let mut bench = Bench::new("train step latency (tiny)");
+    let mut bench = Bench::new("train step latency (tiny, PJRT)");
     for method in ["ether_n4", "etherplus_n4", "oft_n4", "naive_n4", "lora_r8", "vera_r16"] {
         let mut trainer = LmTrainer::new(&engine, cfg, method, None).unwrap();
         bench.case(&format!("{method} (device-resident base)"), None, || {
@@ -51,4 +153,9 @@ fn main() {
         ether::util::benchkit::black_box(out);
     });
     bench.report();
+}
+
+fn main() {
+    host_section();
+    artifact_section();
 }

@@ -27,7 +27,7 @@
 //! | [`runtime`]    | PJRT client, manifest, typed executables, mock engine |
 //! | [`data`]       | synthetic workloads (corpus, SynthGLUE, instructions, |
 //! |                | generation control, subject-driven)                   |
-//! | [`train`]      | training loop, LR schedules, checkpoints, sweeps      |
+//! | [`train`]      | PJRT + host-native training, LR schedules, checkpoints|
 //! | [`coordinator`]| adapter registry, fair scheduler, loadgen, serving    |
 //! | [`eval`]       | metric suite + evaluation harnesses                   |
 //! | [`exp`]        | one driver per paper table / figure                   |

@@ -1,11 +1,13 @@
 //! `ether` — the Layer-3 launcher.
 //!
 //! ```text
-//! ether pretrain  [--cfg tiny|small] [--steps N] [--lr X]
-//! ether finetune  [--cfg C] --method M --task subject|control|instruct [--steps N] [--lr X]
-//! ether eval      [--cfg C]                                  # un-tuned baseline scores
-//! ether serve     [--cfg C] [--adapters N] [--requests N] [--max-batch B]
-//! ether exp       <table1|fig3|…|all> [--quick] [--steps N]
+//! ether pretrain   [--cfg tiny|small] [--steps N] [--lr X]
+//! ether finetune   [--cfg C] --method M --task subject|control|instruct [--steps N] [--lr X]
+//! ether train-host [--method M] [--objective lsq|logistic] [--steps N] [--lr X]
+//!                  [--d-model D] [--d-ff F] [--layers L]     # artifact-free host training
+//! ether eval       [--cfg C]                                 # un-tuned baseline scores
+//! ether serve      [--cfg C] [--adapters N] [--requests N] [--max-batch B]
+//! ether exp        <table1|fig3|…|all> [--quick] [--steps N]
 //! ether info                                                 # manifest summary
 //! ```
 
@@ -40,6 +42,7 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.cmd.as_str() {
         "pretrain" => cmd_pretrain(args),
         "finetune" => cmd_finetune(args),
+        "train-host" => cmd_train_host(args),
         "eval" => cmd_eval(args),
         "serve" => cmd_serve(args),
         "exp" => {
@@ -62,12 +65,13 @@ fn dispatch(args: &Args) -> Result<()> {
 const HELP: &str = "\
 ether — ETHER (hyperplane-reflection PEFT) reproduction, ICML 2024
 commands:
-  pretrain   train the base model on the synthetic corpus
-  finetune   adapt with a PEFT method on a downstream task
-  eval       score the un-tuned base on the MC suites
-  serve      multi-adapter serving demo with dynamic batching
-  exp <id>   regenerate a paper table/figure (table1..12, fig3..8, all)
-  info       artifact + method summary from the manifest";
+  pretrain    train the base model on the synthetic corpus
+  finetune    adapt with a PEFT method on a downstream task (PJRT artifacts)
+  train-host  artifact-free host training via the TransformOp gradient surface
+  eval        score the un-tuned base on the MC suites
+  serve       multi-adapter serving demo with dynamic batching
+  exp <id>    regenerate a paper table/figure (table1..12, fig3..8, all)
+  info        artifact + method summary from the manifest";
 
 fn cmd_pretrain(args: &Args) -> Result<()> {
     let cfg = args.str_or("cfg", "tiny");
@@ -161,6 +165,67 @@ fn cmd_finetune(args: &Args) -> Result<()> {
         ]),
     )?;
     println!("saved adapter ({} params) -> {path:?}", tr.peft.len());
+    Ok(())
+}
+
+/// Artifact-free host training: synthetic teacher objectives over the
+/// `TransformOp` gradient surface — runs on a bare checkout, no PJRT.
+fn cmd_train_host(args: &Args) -> Result<()> {
+    let method = args.str_or("method", "etherplus_n4");
+    let objective = ether::train::host::Objective::parse(&args.str_or("objective", "lsq"))?;
+    let steps = args.usize_or("steps", 200)? as u64;
+    let lr = args.f32_or("lr", 1e-2)?;
+    let d_model = args.usize_or("d-model", 64)?;
+    let d_ff = args.usize_or("d-ff", 128)?;
+    let n_layers = args.usize_or("layers", 2)?;
+    let batch_cols = args.usize_or("batch-cols", 4)?;
+    let seed = args.usize_or("seed", 17)? as u64;
+    args.finish()?;
+    let cfg = ether::train::host::HostTrainCfg {
+        dims: ether::peft::apply::ModelDims { d_model, d_ff, n_layers },
+        method: method.clone(),
+        objective,
+        batch_cols,
+        seed,
+        ..Default::default()
+    };
+    let mut tr = ether::train::HostTrainer::new(cfg)?;
+    let sched = Schedule::Cosine { base: lr, warmup: steps / 10, total: steps };
+    println!(
+        "host training {method} ({} params) on {objective:?}: d={d_model} ff={d_ff} L={n_layers}",
+        tr.peft.len()
+    );
+    let t0 = std::time::Instant::now();
+    let mut diverged = false;
+    for i in 0..steps {
+        let slr = sched.lr(tr.step);
+        let loss = tr.train_step(slr)?;
+        if i % (steps / 20).max(1) == 0 || i + 1 == steps {
+            let s = tr.telemetry.last().unwrap();
+            println!(
+                "step {i:>6}  loss {loss:.5}  lr {slr:.2e}  ‖g‖ {:.3e}  ‖θ‖ {:.3}  dist {:.3}  {:.1} steps/s",
+                s.grad_norm,
+                s.param_norm,
+                s.distance,
+                (i + 1) as f64 / t0.elapsed().as_secs_f64()
+            );
+        }
+        if !loss.is_finite() {
+            println!("diverged at step {i} — stopping");
+            diverged = true;
+            break;
+        }
+    }
+    if diverged {
+        // The parameters and Adam moments are poisoned — persisting
+        // them would make the "resumable" checkpoint a NaN trap.
+        println!("not saving a checkpoint for a diverged run (try a lower --lr)");
+        return Ok(());
+    }
+    println!("eval loss (held-out probe): {:.5}", tr.eval_loss()?);
+    let path = checkpoint::path_for(&format!("host_{method}_{}", objective.name()));
+    tr.save_checkpoint(&path)?;
+    println!("saved train state ({} params + Adam moments) -> {path:?}", tr.peft.len());
     Ok(())
 }
 

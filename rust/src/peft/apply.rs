@@ -33,6 +33,12 @@
 //!   merge(new) per work item, never reading the base inside adapted
 //!   regions; optionally audits the recovered weights against the true
 //!   base and reports the max involution residual.
+//!
+//! Since the host-training PR the plan also carries the **backward**
+//! sweep, [`MergePlan::execute_grad_activations`]: the gradient of a
+//! loss through the merge-free forward, accumulated per work item into
+//! disjoint regions of a flat gradient vector — the engine
+//! `train::host::HostTrainer` drives every optimizer step through.
 
 use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Mutex;
@@ -403,6 +409,131 @@ impl MergePlan {
                     let mut slot = err.lock().unwrap();
                     if slot.is_none() {
                         *slot = Some(e.context(format!("activations {}[{}]", it.name, it.layer)));
+                    }
+                }
+            }
+        };
+        match threads {
+            Some(t) => parallel_for_chunks_with(t, items.len(), 1, sweep),
+            None => parallel_for_chunks(items.len(), 1, sweep),
+        }
+        match err.into_inner().unwrap() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Backward companion of [`MergePlan::execute_activations`]:
+    /// accumulate `∂L/∂θ` into the flat `grad` vector (laid out exactly
+    /// like the adapter's PEFT vector) given `upstream = ∂L/∂y` for the
+    /// concatenated activation outputs. Per item, the op's
+    /// [`crate::peft::op::TransformOp::grad_params_into`] kernel runs
+    /// single-threaded into **disjoint gradient regions** (distinct
+    /// (matrix, layer) slices of non-overlapping layout entries), with
+    /// the sweep blocked-parallel over items — results are
+    /// **bit-identical for any thread count** (`None` = ambient pool,
+    /// `Some(1)` = the serial oracle), which `rust/tests/grad_props.rs`
+    /// locks in alongside central-finite-difference correctness.
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_grad_activations(
+        &self,
+        adapter: AdapterRef,
+        base: &[f32],
+        x: &[f32],
+        m: usize,
+        upstream: &[f32],
+        grad: &mut [f32],
+        threads: Option<usize>,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            base.len() == self.base_total,
+            "base length {} != layout total {}",
+            base.len(),
+            self.base_total
+        );
+        anyhow::ensure!(m > 0, "gradient sweep needs at least one activation column");
+        let max_cols = self.max_item_cols();
+        anyhow::ensure!(
+            x.len() == max_cols * m,
+            "probe length {} != {} ({max_cols} rows × {m} columns)",
+            x.len(),
+            max_cols * m
+        );
+        anyhow::ensure!(
+            upstream.len() == self.activations_out_len(m),
+            "upstream buffer length mismatch"
+        );
+        anyhow::ensure!(
+            grad.len() == adapter.layout.total,
+            "gradient vector length {} != layout total {}",
+            grad.len(),
+            adapter.layout.total
+        );
+        let op = registry::op_for(adapter.spec.kind);
+        anyhow::ensure!(
+            op.supports_grad(),
+            "{} does not support parameter gradients",
+            op.token()
+        );
+        let params = self.resolve_all(adapter.spec, adapter.peft, adapter.layout)?;
+        // Per-item gradient-field locations, resolved (fallibly) up
+        // front — through the same `grad_field_locs` the op-level
+        // `resolve_grad` uses — so the sweep below is infallible.
+        let mut locs: Vec<Vec<(&'static str, usize, usize)>> = Vec::with_capacity(self.items.len());
+        for it in &self.items {
+            locs.push(crate::peft::op::grad_field_locs(
+                op,
+                adapter.spec,
+                adapter.layout,
+                it.name,
+                it.layer,
+                it.rows,
+                it.cols,
+            )?);
+        }
+        // Upstream offsets (same partition as the activation outputs).
+        let mut offsets = Vec::with_capacity(self.items.len());
+        let mut pos = 0usize;
+        for it in &self.items {
+            offsets.push(pos);
+            pos += it.rows * m;
+        }
+        let items = &self.items;
+        let (params, locs, offsets) = (&params, &locs, &offsets);
+        let spec = adapter.spec;
+        let err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        let gptr = SendPtr::new(grad.as_mut_ptr());
+        let sweep = |a: usize, b: usize| {
+            for idx in a..b {
+                let it = &items[idx];
+                // SAFETY: field locations are disjoint across items
+                // (distinct (matrix, layer) slices of non-overlapping
+                // layout entries), so concurrent items never alias.
+                let fields: Vec<(&'static str, &mut [f32])> = locs[idx]
+                    .iter()
+                    .map(|&(field, off, len)| {
+                        (field, unsafe {
+                            std::slice::from_raw_parts_mut(gptr.get().add(off), len)
+                        })
+                    })
+                    .collect();
+                let mut gp = crate::peft::op::GradParams::from_fields(fields);
+                let src = &base[it.offset..it.offset + it.rows * it.cols];
+                let g = &upstream[offsets[idx]..offsets[idx] + it.rows * m];
+                let shape = ActShape { d: it.rows, f: it.cols, m };
+                if let Err(e) = op.grad_params_into(
+                    spec,
+                    &params[idx],
+                    src,
+                    &x[..it.cols * m],
+                    g,
+                    shape,
+                    Some(1),
+                    &mut gp,
+                ) {
+                    let mut slot = err.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(e.context(format!("grad {}[{}]", it.name, it.layer)));
                     }
                 }
             }

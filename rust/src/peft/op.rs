@@ -32,6 +32,19 @@
 //!   `OnTheFly` execution strategy can serve the cold adapter long tail
 //!   at zero merged-buffer memory. [`TransformOp::apply_activations_serial`]
 //!   is the oracle (materialize, then multiply).
+//! * [`TransformOp::grad_params_into`] (optional, gated by
+//!   [`TransformOp::supports_grad`]) is the **training surface**:
+//!   accumulate `∂L/∂θ` through the merged transform's activation
+//!   forward, given `upstream = ∂L/∂y`. ETHER differentiates through
+//!   the Householder product rule (the training loop re-normalizes each
+//!   reflection vector after the step, as the paper prescribes), ETHER+
+//!   through the rank-2 relaxation, OFT through the Cayley map, and the
+//!   additive members through plain product rules. Kernels are
+//!   blocked-parallel over disjoint gradient regions with fixed-order
+//!   f64 reductions — bit-identical for any thread count — and are
+//!   verified against central finite differences by
+//!   `rust/tests/grad_props.rs`. [`TransformOp::grad_params_serial`] is
+//!   the pinned-serial oracle.
 //!
 //! To add a new method: implement the trait on a unit struct here, add
 //! the [`crate::peft::MethodKind`] variant, and register it in
@@ -45,6 +58,7 @@ use crate::peft::flat::Layout;
 use crate::peft::transforms as tf;
 use crate::peft::{MethodKind, MethodSpec};
 use crate::tensor::{solve, Mat};
+use crate::util::pool::{parallel_for_chunks_opt, SendPtr};
 
 /// How a method's numeric name suffix parameterizes it.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -107,6 +121,132 @@ pub fn resolve_params<'a>(
         fields.push((field, v));
     }
     Ok(ResolvedParams { fields })
+}
+
+/// Mutable parameter-gradient views for one (matrix, layer) pair: the
+/// same schema fields as [`ResolvedParams`], borrowed from a flat
+/// gradient vector laid out exactly like the PEFT parameter vector.
+/// Gradient kernels **accumulate** (`+=`) into these views, so callers
+/// can sum contributions over work items and batches into one buffer
+/// (zero it first for a plain gradient).
+pub struct GradParams<'a> {
+    fields: Vec<(&'static str, &'a mut [f32])>,
+}
+
+impl<'a> GradParams<'a> {
+    /// Assemble from pre-carved field slices. The plan-level gradient
+    /// sweep builds these from disjoint layout regions; [`resolve_grad`]
+    /// is the checked constructor for everyone else. Slice lengths must
+    /// match the op's schema exactly.
+    pub fn from_fields(fields: Vec<(&'static str, &'a mut [f32])>) -> GradParams<'a> {
+        GradParams { fields }
+    }
+
+    /// Fetch a schema field's gradient view. Panics on a field the
+    /// schema does not declare — a programming error in the op, exactly
+    /// like [`ResolvedParams::get`].
+    pub fn get(&mut self, field: &str) -> &mut [f32] {
+        self.fields
+            .iter_mut()
+            .find(|(name, _)| *name == field)
+            .map(|(_, v)| &mut **v)
+            .unwrap_or_else(|| panic!("op requested grad field {field:?} missing from its own schema"))
+    }
+
+    /// Fetch two distinct fields at once (for kernels that write both
+    /// sides of a coupled update, e.g. the relaxed reflection's û/v̂).
+    pub fn get2(&mut self, a: &str, b: &str) -> (&mut [f32], &mut [f32]) {
+        let ia = self.index_of(a);
+        let ib = self.index_of(b);
+        assert_ne!(ia, ib, "get2 needs two distinct fields");
+        let (lo, hi) = (ia.min(ib), ia.max(ib));
+        let (head, tail) = self.fields.split_at_mut(hi);
+        let first = &mut *head[lo].1;
+        let second = &mut *tail[0].1;
+        if ia < ib {
+            (first, second)
+        } else {
+            (second, first)
+        }
+    }
+
+    fn index_of(&self, field: &str) -> usize {
+        self.fields
+            .iter()
+            .position(|(name, _)| *name == field)
+            .unwrap_or_else(|| panic!("op requested grad field {field:?} missing from its own schema"))
+    }
+}
+
+/// Resolved `(field, flat offset, length)` locations of an op's schema
+/// fields for one (matrix, layer) pair in a flat PEFT-layout vector —
+/// the single source of field placement shared by [`resolve_grad`] and
+/// the plan-level gradient sweep
+/// ([`crate::peft::apply::MergePlan::execute_grad_activations`]).
+pub fn grad_field_locs(
+    op: &dyn TransformOp,
+    spec: &MethodSpec,
+    layout: &Layout,
+    mat: &str,
+    layer: usize,
+    d: usize,
+    f: usize,
+) -> Result<Vec<(&'static str, usize, usize)>> {
+    let mut locs = Vec::new();
+    for (field, shape) in op.param_schema(spec, d, f) {
+        let want: usize = shape.iter().product();
+        let e = layout.entry(&format!("{mat}.{field}"))?;
+        let layers = e.shape[0];
+        ensure!(layer < layers, "{mat}.{field}: layer {layer} out of range");
+        let per = e.size / layers;
+        ensure!(
+            per == want,
+            "{mat}[{layer}].{field}: length {per} != {want} expected by the {} schema",
+            op.token()
+        );
+        locs.push((field, e.offset + layer * per, want));
+    }
+    Ok(locs)
+}
+
+/// Resolve an op's mutable gradient views for adapted matrix `mat`
+/// (shape `d×f`), layer `layer`, against a flat gradient vector laid
+/// out like the PEFT vector. The mutable companion of
+/// [`resolve_params`]: validates the spec and every field's location,
+/// then carves disjoint `&mut` slices out of `grad`.
+#[allow(clippy::too_many_arguments)]
+pub fn resolve_grad<'a>(
+    op: &dyn TransformOp,
+    spec: &MethodSpec,
+    grad: &'a mut [f32],
+    layout: &Layout,
+    mat: &str,
+    layer: usize,
+    d: usize,
+    f: usize,
+) -> Result<GradParams<'a>> {
+    op.validate(spec, mat, d, f)?;
+    ensure!(
+        grad.len() == layout.total,
+        "gradient vector length {} != layout total {}",
+        grad.len(),
+        layout.total
+    );
+    let mut locs = grad_field_locs(op, spec, layout, mat, layer, d, f)?;
+    locs.sort_unstable_by_key(|&(_, off, _)| off);
+    let mut fields = Vec::with_capacity(locs.len());
+    let mut rest: &'a mut [f32] = grad;
+    let mut consumed = 0usize;
+    for (field, off, len) in locs {
+        ensure!(off >= consumed, "overlapping gradient fields for {mat}[{layer}]");
+        let r = std::mem::take(&mut rest);
+        let (_, tail) = r.split_at_mut(off - consumed);
+        let (slice, tail) = tail.split_at_mut(len);
+        fields.push((field, slice));
+        rest = tail;
+        consumed = off + len;
+    }
+    Ok(GradParams { fields })
 }
 
 /// Shape of one activation batch for the merge-free execution path
@@ -275,6 +415,65 @@ pub trait TransformOp: Sync + Send {
         Ok(out)
     }
 
+    /// Whether [`TransformOp::grad_params_into`] is implemented. The
+    /// host-native training engine ([`crate::train::host`]) gates on
+    /// this; the differentiable family is pinned from the outside by
+    /// `rust/tests/grad_props.rs`, the way `engine_parity.rs` pins the
+    /// host-mergeable family.
+    fn supports_grad(&self) -> bool {
+        false
+    }
+
+    /// Accumulate `∂L/∂θ` into `grad` for one `d×f` work item, where
+    /// the loss reaches this op's parameters θ through the merged
+    /// transform's activation forward `y = T(W)·x` and
+    /// `upstream = ∂L/∂y` (`d×m`, the activation-output shape).
+    /// Kernels **accumulate** (`+=`) so callers can sum over items and
+    /// batches.
+    ///
+    /// Implementations re-derive the forward intermediates they need
+    /// (`z = W·x`, …) — the backward API is stateless. Every reduction
+    /// runs in f64 in a fixed order and the blocked parallelism only
+    /// splits **disjoint gradient regions** (blocks, rows, rank
+    /// components), so results are **bit-identical for any thread
+    /// count** (`threads: None` = ambient pool, `Some(1)` = pinned
+    /// serial). Verified against central finite differences by
+    /// `rust/tests/grad_props.rs`.
+    #[allow(clippy::too_many_arguments)]
+    fn grad_params_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        w: &[f32],
+        x: &[f32],
+        upstream: &[f32],
+        shape: ActShape,
+        threads: Option<usize>,
+        grad: &mut GradParams,
+    ) -> Result<()> {
+        let _ = (spec, p, w, x, upstream, shape, threads, grad);
+        bail!("{} does not support parameter gradients", self.token())
+    }
+
+    /// Scalar serial oracle for [`TransformOp::grad_params_into`]: the
+    /// same fixed-order kernels pinned to one worker (mirroring
+    /// [`crate::peft::apply::MergePlan::execute_serial`]) — the blocked
+    /// engine must reproduce its bits exactly, and central finite
+    /// differences are the independent correctness oracle on top.
+    #[allow(clippy::too_many_arguments)]
+    fn grad_params_serial(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        w: &[f32],
+        x: &[f32],
+        upstream: &[f32],
+        shape: ActShape,
+        grad: &mut GradParams,
+    ) -> Result<()> {
+        self.grad_params_into(spec, p, w, x, upstream, shape, Some(1), grad)
+    }
+
     /// Squared transformation-distance contribution of one matrix/layer
     /// (paper Fig. 4): `‖T − I‖²_F` for multiplicative ops (materialized
     /// by transforming the identity), `‖ΔW‖²_F` for additive ops
@@ -437,6 +636,160 @@ fn delora_scaled_a(
 }
 
 // ---------------------------------------------------------------------------
+// Shared gradient kernels (the training-side backward of the family).
+// ---------------------------------------------------------------------------
+
+/// Common shape guard for the gradient surface.
+fn ensure_grad_shapes(
+    op: &dyn TransformOp,
+    w: &[f32],
+    x: &[f32],
+    upstream: &[f32],
+    shape: ActShape,
+) -> Result<()> {
+    let ActShape { d, f, m } = shape;
+    ensure!(m > 0, "{}: gradient needs at least one activation column", op.token());
+    ensure!(
+        w.len() == d * f,
+        "{}: base slice length {} != {d}×{f}",
+        op.token(),
+        w.len()
+    );
+    ensure!(
+        x.len() == f * m,
+        "{}: input length {} != {f}×{m}",
+        op.token(),
+        x.len()
+    );
+    ensure!(
+        upstream.len() == d * m,
+        "{}: upstream length {} != {d}×{m}",
+        op.token(),
+        upstream.len()
+    );
+    Ok(())
+}
+
+/// Chain a gradient w.r.t. the *normalized* vector `û = u·r`,
+/// `r = (Σu² + ε)^(−1/2)`, back to the raw parameter `u`, and
+/// accumulate: `∂L/∂u = r·gh − r³·(u·gh)·u`. f64 throughout, fixed
+/// reduction order.
+fn normalize_backward_acc(u: &[f32], gh: &[f64], out: &mut [f32]) {
+    debug_assert_eq!(u.len(), gh.len());
+    debug_assert_eq!(u.len(), out.len());
+    let s: f64 = u.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    let r = 1.0 / (s + tf::NORM_EPS).sqrt();
+    let dot: f64 = u.iter().zip(gh).map(|(&x, &g)| x as f64 * g).sum();
+    let r3 = r * r * r;
+    for ((o, &x), &g) in out.iter_mut().zip(u).zip(gh) {
+        *o = (*o as f64 + r * g - r3 * dot * x as f64) as f32;
+    }
+}
+
+/// `∂L/∂u` of the pure reflection `y = z − 2û(ûᵀz)` over all blocks
+/// (Householder product rule), accumulated in raw-parameter space
+/// (chained through the block normalization). With `s_c = ûᵀz_c` and
+/// `t_c = ûᵀg_c` per column, `∂L/∂û = −2·Σ_c (s_c·g_c + t_c·z_c)`.
+/// Parallel over blocks — disjoint gradient regions, fixed order
+/// within a block.
+fn ether_grad_acc(
+    threads: Option<usize>,
+    u: &[f32],
+    n: usize,
+    z: &[f32],
+    g: &[f32],
+    m: usize,
+    gu: &mut [f32],
+) {
+    let d = u.len();
+    let db = d / n;
+    debug_assert_eq!(z.len(), d * m);
+    debug_assert_eq!(g.len(), d * m);
+    debug_assert_eq!(gu.len(), d);
+    let uh = tf::normalize_blocks(u, n);
+    let ptr = SendPtr::new(gu.as_mut_ptr());
+    parallel_for_chunks_opt(threads, n, 1, |b0, b1| {
+        for b in b0..b1 {
+            let ub = &uh[b * db..(b + 1) * db];
+            let mut gh = vec![0.0f64; db];
+            for c in 0..m {
+                let (mut s, mut t) = (0.0f64, 0.0f64);
+                for r in 0..db {
+                    let i = (b * db + r) * m + c;
+                    s += ub[r] as f64 * z[i] as f64;
+                    t += ub[r] as f64 * g[i] as f64;
+                }
+                for (r, gh_r) in gh.iter_mut().enumerate() {
+                    let i = (b * db + r) * m + c;
+                    *gh_r -= 2.0 * (s * g[i] as f64 + t * z[i] as f64);
+                }
+            }
+            // SAFETY: workers receive disjoint block ranges of `gu`.
+            let out = unsafe { std::slice::from_raw_parts_mut(ptr.get().add(b * db), db) };
+            normalize_backward_acc(&u[b * db..(b + 1) * db], &gh, out);
+        }
+    });
+}
+
+/// `∂L/∂(u, v)` of the relaxed reflection
+/// `y = z − û(ûᵀz) + v̂(v̂ᵀz)` (per block), given the input `z` and
+/// `g = ∂L/∂y` — used by both sides of ETHER+ (the right factor sees
+/// `x` as input and `Wᵀ·(H⁺·g)` as upstream). Parallel over blocks,
+/// chained through the block normalization like [`ether_grad_acc`].
+#[allow(clippy::too_many_arguments)]
+fn relaxed_reflection_grad_acc(
+    threads: Option<usize>,
+    u: &[f32],
+    v: &[f32],
+    n: usize,
+    z: &[f32],
+    g: &[f32],
+    m: usize,
+    gu: &mut [f32],
+    gv: &mut [f32],
+) {
+    let d = u.len();
+    let db = d / n;
+    debug_assert_eq!(v.len(), d);
+    debug_assert_eq!(z.len(), d * m);
+    debug_assert_eq!(g.len(), d * m);
+    debug_assert_eq!(gu.len(), d);
+    debug_assert_eq!(gv.len(), d);
+    let uh = tf::normalize_blocks(u, n);
+    let vh = tf::normalize_blocks(v, n);
+    let pu = SendPtr::new(gu.as_mut_ptr());
+    let pv = SendPtr::new(gv.as_mut_ptr());
+    parallel_for_chunks_opt(threads, n, 1, |b0, b1| {
+        for b in b0..b1 {
+            let ub = &uh[b * db..(b + 1) * db];
+            let vb = &vh[b * db..(b + 1) * db];
+            let mut ghu = vec![0.0f64; db];
+            let mut ghv = vec![0.0f64; db];
+            for c in 0..m {
+                let (mut su, mut tu, mut sv, mut tv) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+                for r in 0..db {
+                    let i = (b * db + r) * m + c;
+                    su += ub[r] as f64 * z[i] as f64;
+                    tu += ub[r] as f64 * g[i] as f64;
+                    sv += vb[r] as f64 * z[i] as f64;
+                    tv += vb[r] as f64 * g[i] as f64;
+                }
+                for r in 0..db {
+                    let i = (b * db + r) * m + c;
+                    ghu[r] -= su * g[i] as f64 + tu * z[i] as f64;
+                    ghv[r] += sv * g[i] as f64 + tv * z[i] as f64;
+                }
+            }
+            // SAFETY: workers receive disjoint block ranges of gu/gv.
+            let ou = unsafe { std::slice::from_raw_parts_mut(pu.get().add(b * db), db) };
+            normalize_backward_acc(&u[b * db..(b + 1) * db], &ghu, ou);
+            let ov = unsafe { std::slice::from_raw_parts_mut(pv.get().add(b * db), db) };
+            normalize_backward_acc(&v[b * db..(b + 1) * db], &ghv, ov);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
 // The family.
 // ---------------------------------------------------------------------------
 
@@ -528,6 +881,33 @@ impl TransformOp for EtherOp {
         let mut y0 = vec![0.0f32; d * m];
         tf::matmul_acc_into(w, x, d, f, m, &mut y0);
         tf::ether_into(&uh, spec.n_blocks, &y0, m, out);
+        Ok(())
+    }
+
+    fn supports_grad(&self) -> bool {
+        true
+    }
+
+    /// Householder product rule on `y = H(û)·(W·x)`, chained through
+    /// the unit normalization (the training loop re-normalizes û after
+    /// each step, as the paper prescribes, which keeps the chain term
+    /// well-conditioned).
+    fn grad_params_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        w: &[f32],
+        x: &[f32],
+        upstream: &[f32],
+        shape: ActShape,
+        threads: Option<usize>,
+        grad: &mut GradParams,
+    ) -> Result<()> {
+        ensure_grad_shapes(self, w, x, upstream, shape)?;
+        let ActShape { d, f, m } = shape;
+        let mut z = vec![0.0f32; d * m];
+        tf::matmul_par(threads, w, x, d, f, m, &mut z);
+        ether_grad_acc(threads, p.get("u"), spec.n_blocks, &z, upstream, m, grad.get("u"));
         Ok(())
     }
 }
@@ -697,6 +1077,60 @@ impl TransformOp for EtherPlusOp {
         tf::ether_plus_left_into(&uh, &vh, n, &y0, m, out);
         Ok(())
     }
+
+    fn supports_grad(&self) -> bool {
+        true
+    }
+
+    /// Rank-2 relaxation backward (§3.3): the left factor's (û, v̂)
+    /// grads use `z = W·x′` (x′ is the right-reflected input) and the
+    /// upstream directly; for two-sided specs the right factor's grads
+    /// see `x` as input and `Wᵀ·(H⁺·g)` as upstream — H⁺ is symmetric,
+    /// so no separate transpose kernel is needed.
+    fn grad_params_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        w: &[f32],
+        x: &[f32],
+        upstream: &[f32],
+        shape: ActShape,
+        threads: Option<usize>,
+        grad: &mut GradParams,
+    ) -> Result<()> {
+        ensure_grad_shapes(self, w, x, upstream, shape)?;
+        let ActShape { d, f, m } = shape;
+        let n = spec.n_blocks;
+        let (u, v) = (p.get("u"), p.get("v"));
+        // Forward recompute: x′ (right-reflected input) and z = W·x′.
+        let mut z = vec![0.0f32; d * m];
+        if spec.sides == 2 {
+            let ruh = tf::normalize_blocks(p.get("ru"), n);
+            let rvh = tf::normalize_blocks(p.get("rv"), n);
+            let mut xp = vec![0.0f32; f * m];
+            tf::ether_plus_left_into(&ruh, &rvh, n, x, m, &mut xp);
+            tf::matmul_par(threads, w, &xp, d, f, m, &mut z);
+        } else {
+            tf::matmul_par(threads, w, x, d, f, m, &mut z);
+        }
+        {
+            let (gu, gv) = grad.get2("u", "v");
+            relaxed_reflection_grad_acc(threads, u, v, n, &z, upstream, m, gu, gv);
+        }
+        if spec.sides == 2 {
+            // ∂L/∂x′ = Wᵀ·(H⁺·g); the right factor is the same relaxed
+            // reflection acting on the f-dimensional input blocks.
+            let uh = tf::normalize_blocks(u, n);
+            let vh = tf::normalize_blocks(v, n);
+            let mut hg = vec![0.0f32; d * m];
+            tf::ether_plus_left_into(&uh, &vh, n, upstream, m, &mut hg);
+            let mut gx = vec![0.0f32; f * m];
+            tf::matmul_t_par(threads, w, &hg, d, f, m, &mut gx);
+            let (gru, grv) = grad.get2("ru", "rv");
+            relaxed_reflection_grad_acc(threads, p.get("ru"), p.get("rv"), n, x, &gx, m, gru, grv);
+        }
+        Ok(())
+    }
 }
 
 /// OFT: block-diagonal Cayley-orthogonal multipliers, optionally with
@@ -841,6 +1275,157 @@ impl TransformOp for OftOp {
         tf::bdmm_into(&blocks, &y0, m, None, out);
         Ok(())
     }
+
+    fn supports_grad(&self) -> bool {
+        true
+    }
+
+    /// Cayley backward: with `Q = (I+S)·M`, `M = (I−S)⁻¹`, the chain
+    /// rule gives `dQ = (I+Q)·dS·M`, hence `G_S = (I+Q)ᵀ·G_Q·Mᵀ` and
+    /// `G_R = ½(G_S − G_Sᵀ)` for `S = ½(R − Rᵀ)`, where `G_Q = g·zᵀ`
+    /// per block over `z = W·x̃` (x̃ is the magnitude-scaled input when
+    /// refitting). The magnitude grad is
+    /// `∂L/∂mag_c = Σ_m x[c,m]·(Wᵀ·Qᵀ·g)[c,m]`.
+    fn grad_params_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        w: &[f32],
+        x: &[f32],
+        upstream: &[f32],
+        shape: ActShape,
+        threads: Option<usize>,
+        grad: &mut GradParams,
+    ) -> Result<()> {
+        ensure_grad_shapes(self, w, x, upstream, shape)?;
+        let ActShape { d, f, m } = shape;
+        let n = spec.n_blocks;
+        let k = d / n;
+        let r = p.get("r");
+        // Forward recompute: x̃ (magnitude-scaled input) and z = W·x̃.
+        let xs_owned: Option<Vec<f32>> = if spec.magnitude_refit {
+            let mag = p.get("mag");
+            let mut scaled = vec![0.0f32; f * m];
+            for j in 0..f {
+                let s = 1.0 + mag[j];
+                for c in 0..m {
+                    scaled[j * m + c] = x[j * m + c] * s;
+                }
+            }
+            Some(scaled)
+        } else {
+            None
+        };
+        let xs: &[f32] = xs_owned.as_deref().unwrap_or(x);
+        let mut z = vec![0.0f32; d * m];
+        tf::matmul_par(threads, w, xs, d, f, m, &mut z);
+        let blocks = tf::cayley_blocks(r, n, k);
+        {
+            let gr = grad.get("r");
+            let ptr = SendPtr::new(gr.as_mut_ptr());
+            let (z, blocks) = (&z, &blocks);
+            parallel_for_chunks_opt(threads, n, 1, |b0, b1| {
+                for b in b0..b1 {
+                    // G_Q[i][j] = Σ_c g[bk+i, c]·z[bk+j, c]  (f64).
+                    let mut gq = vec![0.0f64; k * k];
+                    for i in 0..k {
+                        for j in 0..k {
+                            let mut acc = 0.0f64;
+                            for c in 0..m {
+                                acc += upstream[(b * k + i) * m + c] as f64
+                                    * z[(b * k + j) * m + c] as f64;
+                            }
+                            gq[i * k + j] = acc;
+                        }
+                    }
+                    // M = (I − S)⁻¹ recomputed from this block of R.
+                    let blk = &r[b * k * k..(b + 1) * k * k];
+                    let mut s = Mat::zeros(k, k);
+                    for i in 0..k {
+                        for j in 0..k {
+                            *s.at_mut(i, j) = 0.5 * (blk[i * k + j] - blk[j * k + i]);
+                        }
+                    }
+                    let minv = solve::gauss_jordan_inv(&Mat::eye(k).sub(&s))
+                        .expect("I − S is always invertible for skew-symmetric S");
+                    let q = &blocks[b];
+                    // T = (I+Q)ᵀ·G_Q, then G_S = T·Mᵀ (f64, fixed order).
+                    let mut t = vec![0.0f64; k * k];
+                    for i in 0..k {
+                        for j in 0..k {
+                            let mut acc = gq[i * k + j];
+                            for l in 0..k {
+                                acc += q.at(l, i) as f64 * gq[l * k + j];
+                            }
+                            t[i * k + j] = acc;
+                        }
+                    }
+                    let mut gs = vec![0.0f64; k * k];
+                    for i in 0..k {
+                        for j in 0..k {
+                            let mut acc = 0.0f64;
+                            for l in 0..k {
+                                acc += t[i * k + l] * minv.at(j, l) as f64;
+                            }
+                            gs[i * k + j] = acc;
+                        }
+                    }
+                    // SAFETY: workers receive disjoint block ranges of gr.
+                    let out = unsafe {
+                        std::slice::from_raw_parts_mut(ptr.get().add(b * k * k), k * k)
+                    };
+                    for i in 0..k {
+                        for j in 0..k {
+                            let gr_ij = 0.5 * (gs[i * k + j] - gs[j * k + i]);
+                            let o = &mut out[i * k + j];
+                            *o = (*o as f64 + gr_ij) as f32;
+                        }
+                    }
+                }
+            });
+        }
+        if spec.magnitude_refit {
+            // Qᵀ·g (f64), block-diagonal transpose multiply, then
+            // gmag[c] = Σ_i W[i,c]·Σ_cc (Qᵀg)[i,cc]·x[c,cc].
+            let mut qtg = vec![0.0f64; d * m];
+            for (b, q) in blocks.iter().enumerate() {
+                for j in 0..k {
+                    for c in 0..m {
+                        let mut acc = 0.0f64;
+                        for i in 0..k {
+                            acc += q.at(i, j) as f64 * upstream[(b * k + i) * m + c] as f64;
+                        }
+                        qtg[(b * k + j) * m + c] = acc;
+                    }
+                }
+            }
+            let gmag = grad.get("mag");
+            let ptr = SendPtr::new(gmag.as_mut_ptr());
+            let qtg = &qtg;
+            parallel_for_chunks_opt(threads, f, 16, |c0, c1| {
+                for cidx in c0..c1 {
+                    let mut acc = 0.0f64;
+                    for i in 0..d {
+                        let wv = w[i * f + cidx] as f64;
+                        if wv == 0.0 {
+                            continue;
+                        }
+                        let mut inner = 0.0f64;
+                        for c in 0..m {
+                            inner += qtg[i * m + c] * x[cidx * m + c] as f64;
+                        }
+                        acc += wv * inner;
+                    }
+                    // SAFETY: workers receive disjoint column ranges.
+                    unsafe {
+                        let o = ptr.get().add(cidx);
+                        *o = (*o as f64 + acc) as f32;
+                    }
+                }
+            });
+        }
+        Ok(())
+    }
 }
 
 /// Naive: unconstrained block-diagonal multipliers `I + R` (§5.3).
@@ -941,6 +1526,55 @@ impl TransformOp for NaiveOp {
         tf::bdmm_into(&blocks, &y0, m, None, out);
         Ok(())
     }
+
+    fn supports_grad(&self) -> bool {
+        true
+    }
+
+    /// `y = (I+R)·z` per block with `z = W·x`, so `∂L/∂R = g·zᵀ`
+    /// blockwise — the unconstrained control's backward is the plain
+    /// outer product.
+    fn grad_params_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        w: &[f32],
+        x: &[f32],
+        upstream: &[f32],
+        shape: ActShape,
+        threads: Option<usize>,
+        grad: &mut GradParams,
+    ) -> Result<()> {
+        ensure_grad_shapes(self, w, x, upstream, shape)?;
+        let _ = p;
+        let ActShape { d, f, m } = shape;
+        let n = spec.n_blocks;
+        let k = d / n;
+        let mut z = vec![0.0f32; d * m];
+        tf::matmul_par(threads, w, x, d, f, m, &mut z);
+        let gr = grad.get("r");
+        let ptr = SendPtr::new(gr.as_mut_ptr());
+        let z = &z;
+        parallel_for_chunks_opt(threads, n, 1, |b0, b1| {
+            for b in b0..b1 {
+                // SAFETY: workers receive disjoint block ranges of gr.
+                let out =
+                    unsafe { std::slice::from_raw_parts_mut(ptr.get().add(b * k * k), k * k) };
+                for i in 0..k {
+                    for j in 0..k {
+                        let mut acc = 0.0f64;
+                        for c in 0..m {
+                            acc += upstream[(b * k + i) * m + c] as f64
+                                * z[(b * k + j) * m + c] as f64;
+                        }
+                        let o = &mut out[i * k + j];
+                        *o = (*o as f64 + acc) as f32;
+                    }
+                }
+            }
+        });
+        Ok(())
+    }
 }
 
 /// LoRA: additive low-rank update `W + A B`.
@@ -1031,6 +1665,91 @@ impl TransformOp for LoraOp {
         let ActShape { d, f, m } = shape;
         tf::matmul_acc_into(w, x, d, f, m, out);
         tf::lora_activations_acc(p.get("a"), p.get("b"), x, d, spec.rank, f, m, out);
+        Ok(())
+    }
+
+    fn supports_grad(&self) -> bool {
+        true
+    }
+
+    /// Low-rank backward: `∂L/∂A = g·(B·x)ᵀ` and `∂L/∂B = (Aᵀ·g)·xᵀ` —
+    /// nothing larger than an r×m intermediate is materialized.
+    fn grad_params_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        w: &[f32],
+        x: &[f32],
+        upstream: &[f32],
+        shape: ActShape,
+        threads: Option<usize>,
+        grad: &mut GradParams,
+    ) -> Result<()> {
+        ensure_grad_shapes(self, w, x, upstream, shape)?;
+        let ActShape { d, f, m } = shape;
+        let rk = spec.rank;
+        let (a, b) = (p.get("a"), p.get("b"));
+        // h = B·x and ag = Aᵀ·g, both r×m in f64 (fixed order).
+        let mut h = vec![0.0f64; rk * m];
+        for t in 0..rk {
+            let brow = &b[t * f..(t + 1) * f];
+            for c in 0..m {
+                let mut acc = 0.0f64;
+                for (j, &bv) in brow.iter().enumerate() {
+                    acc += bv as f64 * x[j * m + c] as f64;
+                }
+                h[t * m + c] = acc;
+            }
+        }
+        let mut ag = vec![0.0f64; rk * m];
+        for t in 0..rk {
+            for c in 0..m {
+                let mut acc = 0.0f64;
+                for i in 0..d {
+                    acc += a[i * rk + t] as f64 * upstream[i * m + c] as f64;
+                }
+                ag[t * m + c] = acc;
+            }
+        }
+        {
+            let ga = grad.get("a");
+            let ptr = SendPtr::new(ga.as_mut_ptr());
+            let h = &h;
+            parallel_for_chunks_opt(threads, d, 16, |r0, r1| {
+                for i in r0..r1 {
+                    // SAFETY: workers receive disjoint row ranges of ga.
+                    let out =
+                        unsafe { std::slice::from_raw_parts_mut(ptr.get().add(i * rk), rk) };
+                    for (t, o) in out.iter_mut().enumerate() {
+                        let mut acc = 0.0f64;
+                        for c in 0..m {
+                            acc += upstream[i * m + c] as f64 * h[t * m + c];
+                        }
+                        *o = (*o as f64 + acc) as f32;
+                    }
+                }
+            });
+        }
+        {
+            let gb = grad.get("b");
+            let ptr = SendPtr::new(gb.as_mut_ptr());
+            let ag = &ag;
+            parallel_for_chunks_opt(threads, f, 16, |j0, j1| {
+                for j in j0..j1 {
+                    for t in 0..rk {
+                        let mut acc = 0.0f64;
+                        for c in 0..m {
+                            acc += ag[t * m + c] * x[j * m + c] as f64;
+                        }
+                        // SAFETY: workers receive disjoint column sets.
+                        unsafe {
+                            let o = ptr.get().add(t * f + j);
+                            *o = (*o as f64 + acc) as f32;
+                        }
+                    }
+                }
+            });
+        }
         Ok(())
     }
 }
@@ -1192,6 +1911,124 @@ impl TransformOp for DeloraOp {
         tf::lora_activations_acc(&sa, p.get("b"), x, d, r, f, m, out);
         Ok(())
     }
+
+    fn supports_grad(&self) -> bool {
+        true
+    }
+
+    /// Backward of the normalized, strength-scaled update
+    /// `ΔW = (λ/r)·Σ_t a_t b_tᵀ/(‖a_t‖‖b_t‖ + ε)` (DeLoRA's decoupled
+    /// direction/magnitude view): with `p_t = a_tᵀ·g`, `q_t = b_t·x`
+    /// (per column) and `α_t = Σ_c p_t[c]·q_t[c]`, each component's
+    /// direct term mirrors LoRA with coefficient `c_t = λ/(r·s_t)`,
+    /// `s_t = ‖a_t‖‖b_t‖ + ε`; the norm chain subtracts the radial
+    /// component `λ‖b_t‖α_t/(r·s_t²·‖a_t‖)·a_t` (and symmetrically for
+    /// `b_t`); `∂L/∂λ = Σ_t α_t/(r·s_t)`.
+    fn grad_params_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        w: &[f32],
+        x: &[f32],
+        upstream: &[f32],
+        shape: ActShape,
+        threads: Option<usize>,
+        grad: &mut GradParams,
+    ) -> Result<()> {
+        ensure_grad_shapes(self, w, x, upstream, shape)?;
+        let ActShape { d, f, m } = shape;
+        let rk = spec.rank;
+        let (a, b) = (p.get("a"), p.get("b"));
+        let lam = p.get("lambda")[0] as f64;
+        let rk_f = rk as f64;
+        // Per-component norms, coefficients and projections (f64).
+        let mut na = vec![0.0f64; rk];
+        let mut nb = vec![0.0f64; rk];
+        for t in 0..rk {
+            let mut sa = 0.0f64;
+            for i in 0..d {
+                let v = a[i * rk + t] as f64;
+                sa += v * v;
+            }
+            na[t] = sa.sqrt().max(1e-12);
+            let mut sb = 0.0f64;
+            for j in 0..f {
+                let v = b[t * f + j] as f64;
+                sb += v * v;
+            }
+            nb[t] = sb.sqrt().max(1e-12);
+        }
+        let s: Vec<f64> = (0..rk).map(|t| na[t] * nb[t] + tf::NORM_EPS).collect();
+        let coef: Vec<f64> = (0..rk).map(|t| lam / (rk_f * s[t])).collect();
+        // p_t[c] = a_tᵀ·g_c, q_t[c] = b_t·x_c, α_t = Σ_c p_t·q_t.
+        let mut pg = vec![0.0f64; rk * m];
+        let mut qx = vec![0.0f64; rk * m];
+        for t in 0..rk {
+            for c in 0..m {
+                let mut acc = 0.0f64;
+                for i in 0..d {
+                    acc += a[i * rk + t] as f64 * upstream[i * m + c] as f64;
+                }
+                pg[t * m + c] = acc;
+                let mut acc = 0.0f64;
+                for j in 0..f {
+                    acc += b[t * f + j] as f64 * x[j * m + c] as f64;
+                }
+                qx[t * m + c] = acc;
+            }
+        }
+        let alpha: Vec<f64> =
+            (0..rk).map(|t| (0..m).map(|c| pg[t * m + c] * qx[t * m + c]).sum()).collect();
+        let ra: Vec<f64> =
+            (0..rk).map(|t| lam * nb[t] * alpha[t] / (rk_f * s[t] * s[t] * na[t])).collect();
+        let rb: Vec<f64> =
+            (0..rk).map(|t| lam * na[t] * alpha[t] / (rk_f * s[t] * s[t] * nb[t])).collect();
+        {
+            let ga = grad.get("a");
+            let ptr = SendPtr::new(ga.as_mut_ptr());
+            let (qx, coef, ra) = (&qx, &coef, &ra);
+            parallel_for_chunks_opt(threads, d, 16, |r0, r1| {
+                for i in r0..r1 {
+                    // SAFETY: workers receive disjoint row ranges of ga.
+                    let out =
+                        unsafe { std::slice::from_raw_parts_mut(ptr.get().add(i * rk), rk) };
+                    for (t, o) in out.iter_mut().enumerate() {
+                        let mut acc = 0.0f64;
+                        for c in 0..m {
+                            acc += upstream[i * m + c] as f64 * qx[t * m + c];
+                        }
+                        let g = coef[t] * acc - ra[t] * a[i * rk + t] as f64;
+                        *o = (*o as f64 + g) as f32;
+                    }
+                }
+            });
+        }
+        {
+            let gb = grad.get("b");
+            let ptr = SendPtr::new(gb.as_mut_ptr());
+            let (pg, coef, rb) = (&pg, &coef, &rb);
+            parallel_for_chunks_opt(threads, f, 16, |j0, j1| {
+                for j in j0..j1 {
+                    for t in 0..rk {
+                        let mut acc = 0.0f64;
+                        for c in 0..m {
+                            acc += pg[t * m + c] * x[j * m + c] as f64;
+                        }
+                        let g = coef[t] * acc - rb[t] * b[t * f + j] as f64;
+                        // SAFETY: workers receive disjoint column sets.
+                        unsafe {
+                            let o = ptr.get().add(t * f + j);
+                            *o = (*o as f64 + g) as f32;
+                        }
+                    }
+                }
+            });
+        }
+        let glam = grad.get("lambda");
+        let dlam: f64 = (0..rk).map(|t| alpha[t] / (rk_f * s[t])).sum();
+        glam[0] = (glam[0] as f64 + dlam) as f32;
+        Ok(())
+    }
 }
 
 /// Full finetuning: the adapter *is* the replacement weight matrix.
@@ -1254,6 +2091,43 @@ impl TransformOp for FullOp {
     ) -> Result<()> {
         let ActShape { d, f, m } = shape;
         tf::matmul_acc_into(p.get("w"), x, d, f, m, out);
+        Ok(())
+    }
+
+    fn supports_grad(&self) -> bool {
+        true
+    }
+
+    /// The adapter *is* the weight matrix: `∂L/∂P = g·xᵀ` — the frozen
+    /// base never enters the gradient.
+    fn grad_params_into(
+        &self,
+        _spec: &MethodSpec,
+        _p: &ResolvedParams,
+        w: &[f32],
+        x: &[f32],
+        upstream: &[f32],
+        shape: ActShape,
+        threads: Option<usize>,
+        grad: &mut GradParams,
+    ) -> Result<()> {
+        ensure_grad_shapes(self, w, x, upstream, shape)?;
+        let ActShape { d, f, m } = shape;
+        let gw = grad.get("w");
+        let ptr = SendPtr::new(gw.as_mut_ptr());
+        parallel_for_chunks_opt(threads, d, 16, |r0, r1| {
+            for i in r0..r1 {
+                // SAFETY: workers receive disjoint row ranges of gw.
+                let out = unsafe { std::slice::from_raw_parts_mut(ptr.get().add(i * f), f) };
+                for (j, o) in out.iter_mut().enumerate() {
+                    let mut acc = 0.0f64;
+                    for c in 0..m {
+                        acc += upstream[i * m + c] as f64 * x[j * m + c] as f64;
+                    }
+                    *o = (*o as f64 + acc) as f32;
+                }
+            }
+        });
         Ok(())
     }
 }
@@ -1447,6 +2321,79 @@ mod tests {
         // VeRA stays unsupported (and says so).
         assert!(!VeraOp.supports_activations());
         assert!(VeraOp.apply_activations(&spec, &p, &w, &x, shape).is_err());
+    }
+
+    #[test]
+    fn lora_grad_matches_dense_reference() {
+        // ∂L/∂A = g·(B·x)ᵀ and ∂L/∂B = (Aᵀ·g)·xᵀ, checked against
+        // dense Mat products (the full FD harness lives in
+        // rust/tests/grad_props.rs; this is the op-local unit).
+        let mut rng = Rng::new(31);
+        let (d, f, m, r) = (12usize, 10usize, 3usize, 2usize);
+        let spec = MethodSpec::parse("lora_r2").unwrap();
+        let a: Vec<f32> = rng.normal_vec(d * r, 0.5);
+        let b: Vec<f32> = rng.normal_vec(r * f, 0.5);
+        let w: Vec<f32> = rng.normal_vec(d * f, 0.1);
+        let x: Vec<f32> = rng.normal_vec(f * m, 1.0);
+        let g: Vec<f32> = rng.normal_vec(d * m, 1.0);
+        let p = params_for(vec![("a", &a[..]), ("b", &b[..])]);
+        let mut ga = vec![0.0f32; d * r];
+        let mut gb = vec![0.0f32; r * f];
+        {
+            let mut gp = GradParams::from_fields(vec![("a", &mut ga[..]), ("b", &mut gb[..])]);
+            LoraOp
+                .grad_params_into(&spec, &p, &w, &x, &g, ActShape { d, f, m }, None, &mut gp)
+                .unwrap();
+        }
+        let gm = Mat::from_vec(d, m, g.clone());
+        let xm = Mat::from_vec(f, m, x.clone());
+        let am = Mat::from_vec(d, r, a.clone());
+        let bm = Mat::from_vec(r, f, b.clone());
+        let want_ga = gm.matmul(&bm.matmul(&xm).transpose());
+        let want_gb = am.transpose().matmul(&gm).matmul(&xm.transpose());
+        let err_a =
+            ga.iter().zip(&want_ga.data).map(|(p, q)| (p - q).abs()).fold(0.0f32, f32::max);
+        let err_b =
+            gb.iter().zip(&want_gb.data).map(|(p, q)| (p - q).abs()).fold(0.0f32, f32::max);
+        assert!(err_a <= 1e-5, "lora ∂A parity {err_a}");
+        assert!(err_b <= 1e-5, "lora ∂B parity {err_b}");
+    }
+
+    #[test]
+    fn grads_accumulate_and_unsupported_ops_bail() {
+        let mut rng = Rng::new(32);
+        let (d, f, m) = (8usize, 6usize, 2usize);
+        let spec = MethodSpec::parse("ether_n2").unwrap();
+        let u: Vec<f32> = rng.normal_vec(d, 1.0);
+        let w: Vec<f32> = rng.normal_vec(d * f, 0.1);
+        let x: Vec<f32> = rng.normal_vec(f * m, 1.0);
+        let g: Vec<f32> = rng.normal_vec(d * m, 1.0);
+        let p = params_for(vec![("u", &u[..])]);
+        let shape = ActShape { d, f, m };
+        let mut once = vec![0.0f32; d];
+        {
+            let mut gp = GradParams::from_fields(vec![("u", &mut once[..])]);
+            EtherOp.grad_params_into(&spec, &p, &w, &x, &g, shape, Some(1), &mut gp).unwrap();
+        }
+        // Gradients accumulate: two identical calls double the result.
+        let mut twice = vec![0.0f32; d];
+        {
+            let mut gp = GradParams::from_fields(vec![("u", &mut twice[..])]);
+            EtherOp.grad_params_into(&spec, &p, &w, &x, &g, shape, Some(1), &mut gp).unwrap();
+            EtherOp.grad_params_into(&spec, &p, &w, &x, &g, shape, Some(1), &mut gp).unwrap();
+        }
+        for (o, t) in once.iter().zip(&twice) {
+            assert!((2.0 * o - t).abs() <= 1e-5 * t.abs().max(1.0), "{o} vs {t}");
+        }
+        assert!(once.iter().any(|v| v.abs() > 1e-6), "ether grad is all zero");
+        // The identity has no parameters; VeRA is device-only — both
+        // refuse the gradient surface.
+        assert!(!NoneOp.supports_grad());
+        assert!(!VeraOp.supports_grad());
+        let mut empty = GradParams::from_fields(vec![]);
+        assert!(NoneOp
+            .grad_params_into(&spec, &p, &w, &x, &g, shape, None, &mut empty)
+            .is_err());
     }
 
     #[test]

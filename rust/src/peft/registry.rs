@@ -47,6 +47,13 @@ pub fn by_token(token: &str) -> Option<&'static dyn TransformOp> {
     ALL_KINDS.iter().map(|&k| op_for(k)).find(|op| op.token() == token)
 }
 
+/// Every kind whose op implements the gradient surface
+/// ([`TransformOp::supports_grad`]) — the family the host trainer,
+/// the `train_step` bench and the gradcheck harness iterate over.
+pub fn grad_kinds() -> Vec<MethodKind> {
+    ALL_KINDS.iter().copied().filter(|&k| op_for(k).supports_grad()).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -58,6 +65,21 @@ mod tests {
             assert_eq!(op.kind(), kind, "{:?}", kind);
             let again = by_token(op.token()).expect("token lookup");
             assert_eq!(again.kind(), kind);
+        }
+    }
+
+    #[test]
+    fn grad_family_is_the_host_mergeable_parametric_family() {
+        // Differentiable ⇒ host weights + activation forward exist; the
+        // exact member list is pinned from the outside by
+        // rust/tests/grad_props.rs.
+        let kinds = grad_kinds();
+        assert!(!kinds.is_empty());
+        for kind in kinds {
+            let op = op_for(kind);
+            assert!(op.host_mergeable(), "{kind:?}: grads need host weights");
+            assert!(op.supports_activations(), "{kind:?}: grads need the activation forward");
+            assert!(!op.is_identity(), "{kind:?}: the identity has no parameters to train");
         }
     }
 

@@ -23,7 +23,7 @@
 //! clones.
 
 use crate::tensor::{solve, Mat};
-use crate::util::pool::{parallel_for_chunks, SendPtr};
+use crate::util::pool::{parallel_for_chunks, parallel_for_chunks_opt, SendPtr};
 
 /// Guard used by the kernels' in-place normalization (must match
 /// `kernels/ether.py::NORM_EPS`).
@@ -270,6 +270,75 @@ pub(crate) fn matmul_acc_into(w: &[f32], x: &[f32], d: usize, f: usize, m: usize
             *o = acc as f32;
         }
     }
+}
+
+/// Thread-aware variant of [`matmul_acc_into`], row-parallel: workers
+/// take disjoint row ranges of `out` and every output element keeps the
+/// same fixed-order f64 reduction, so the result is **bit-identical for
+/// any thread count** (including `Some(1)`, the serial pinning). This is
+/// the forward-recompute kernel of the `TransformOp` gradient surface —
+/// grad kernels re-derive their intermediates (`z = W·x`) instead of
+/// caching them, trading FLOPs for a stateless backward API.
+pub(crate) fn matmul_par(
+    threads: Option<usize>,
+    w: &[f32],
+    x: &[f32],
+    d: usize,
+    f: usize,
+    m: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(w.len(), d * f);
+    debug_assert_eq!(x.len(), f * m);
+    debug_assert_eq!(out.len(), d * m);
+    let ptr = SendPtr::new(out.as_mut_ptr());
+    parallel_for_chunks_opt(threads, d, 16, |r0, r1| {
+        for i in r0..r1 {
+            let wrow = &w[i * f..(i + 1) * f];
+            // SAFETY: workers receive disjoint row ranges of `out`.
+            let orow = unsafe { std::slice::from_raw_parts_mut(ptr.get().add(i * m), m) };
+            for (c, o) in orow.iter_mut().enumerate() {
+                let mut acc = 0.0f64;
+                for (j, &wv) in wrow.iter().enumerate() {
+                    acc += wv as f64 * x[j * m + c] as f64;
+                }
+                *o = acc as f32;
+            }
+        }
+    });
+}
+
+/// `out (f×m) = Wᵀ · G` for `W` (`d×f`) and `G` (`d×m`): the
+/// input-gradient kernel (`∂L/∂x = Wᵀ·∂L/∂y`) of the gradient surface.
+/// Row-parallel over the `f` output rows with fixed-order f64
+/// accumulation — bit-identical for any thread count, like
+/// [`matmul_par`].
+pub(crate) fn matmul_t_par(
+    threads: Option<usize>,
+    w: &[f32],
+    g: &[f32],
+    d: usize,
+    f: usize,
+    m: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(w.len(), d * f);
+    debug_assert_eq!(g.len(), d * m);
+    debug_assert_eq!(out.len(), f * m);
+    let ptr = SendPtr::new(out.as_mut_ptr());
+    parallel_for_chunks_opt(threads, f, 16, |j0, j1| {
+        for j in j0..j1 {
+            // SAFETY: workers receive disjoint row ranges of `out`.
+            let orow = unsafe { std::slice::from_raw_parts_mut(ptr.get().add(j * m), m) };
+            for (c, o) in orow.iter_mut().enumerate() {
+                let mut acc = 0.0f64;
+                for i in 0..d {
+                    acc += w[i * f + j] as f64 * g[i * m + c] as f64;
+                }
+                *o = acc as f32;
+            }
+        }
+    });
 }
 
 /// `out (d×m) += A (d×r) · (B (r×f) · X (f×m))` — the low-rank additive
@@ -762,6 +831,39 @@ mod tests {
     #[should_panic(expected = "do not tile")]
     fn normalize_blocks_rejects_non_tiling_input_in_release_too() {
         let _ = normalize_blocks(&[1.0; 10], 3);
+    }
+
+    #[test]
+    fn matmul_par_matches_serial_and_is_thread_invariant() {
+        let mut rng = Rng::new(17);
+        let (d, f, m) = (37usize, 23usize, 5usize);
+        let w: Vec<f32> = rng.normal_vec(d * f, 0.5);
+        let x: Vec<f32> = rng.normal_vec(f * m, 0.5);
+        let mut serial = vec![0.0f32; d * m];
+        matmul_acc_into(&w, &x, d, f, m, &mut serial);
+        for threads in [Some(1), Some(4), None] {
+            let mut out = vec![0.0f32; d * m];
+            matmul_par(threads, &w, &x, d, f, m, &mut out);
+            assert!(
+                out.iter().zip(&serial).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "matmul_par bits differ at threads={threads:?}"
+            );
+        }
+        // Transpose kernel against a dense reference.
+        let g: Vec<f32> = rng.normal_vec(d * m, 0.5);
+        let wm = Mat::from_vec(d, f, w.clone());
+        let gm = Mat::from_vec(d, m, g.clone());
+        let dense = wm.transpose().matmul(&gm);
+        for threads in [Some(1), Some(4), None] {
+            let mut out = vec![0.0f32; f * m];
+            matmul_t_par(threads, &w, &g, d, f, m, &mut out);
+            let err = out
+                .iter()
+                .zip(&dense.data)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(err < 1e-5, "matmul_t_par vs dense {err} (threads={threads:?})");
+        }
     }
 
     #[test]

@@ -1,8 +1,17 @@
 //! Checkpoints: flat f32 weights as raw little-endian + JSON sidecar.
+//!
+//! Besides the plain flat-vector form ([`save`]/[`load`]), trainers
+//! persist their full optimizer state as a [`TrainState`]
+//! ([`save_state`]/[`load_state`]): the PEFT parameters plus Adam's
+//! first/second moments and the step counter, packed into one raw file
+//! with the section lengths recorded in the JSON sidecar — a resumed
+//! run continues **bit-identically** (locked in by
+//! `rust/tests/train_host.rs`). Corrupted files (truncated payload,
+//! mangled sidecar, wrong kind) load as errors, never panics.
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 
 use crate::util::json::Value;
 
@@ -34,6 +43,61 @@ pub fn load(path: &Path) -> Result<(Vec<f32>, Value)> {
     Ok((vec, meta))
 }
 
+/// Full optimizer state of a training run: PEFT parameters, Adam
+/// moments and the step counter — everything needed for a
+/// bit-identical resume.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainState {
+    pub peft: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: u64,
+}
+
+/// Save a [`TrainState`] (sections concatenated, lengths + step in the
+/// sidecar). `extra` lands in the sidecar alongside the state fields —
+/// trainers record their method/objective so a resume can validate.
+pub fn save_state(path: &Path, st: &TrainState, extra: Vec<(&str, Value)>) -> Result<()> {
+    let mut meta = vec![
+        ("kind", Value::s("train_state")),
+        ("peft_len", Value::num(st.peft.len() as f64)),
+        ("m_len", Value::num(st.m.len() as f64)),
+        ("v_len", Value::num(st.v.len() as f64)),
+        ("step", Value::num(st.step as f64)),
+    ];
+    meta.extend(extra);
+    let mut cat = Vec::with_capacity(st.peft.len() + st.m.len() + st.v.len());
+    cat.extend_from_slice(&st.peft);
+    cat.extend_from_slice(&st.m);
+    cat.extend_from_slice(&st.v);
+    save(path, &cat, Value::obj(meta))
+}
+
+/// Load a [`TrainState`] and its full sidecar. Every failure mode —
+/// missing file, truncated payload, mangled JSON, wrong kind,
+/// inconsistent section lengths — is an error, never a panic.
+pub fn load_state(path: &Path) -> Result<(TrainState, Value)> {
+    let (cat, meta) = load(path)?;
+    let kind = meta
+        .at("kind")
+        .and_then(Value::as_str)
+        .with_context(|| format!("checkpoint {path:?} has no train-state sidecar"))?;
+    ensure!(kind == "train_state", "checkpoint {path:?} is not a train state (kind {kind:?})");
+    let peft_len = meta.at("peft_len")?.as_usize()?;
+    let m_len = meta.at("m_len")?.as_usize()?;
+    let v_len = meta.at("v_len")?.as_usize()?;
+    let step = meta.at("step")?.as_usize()? as u64;
+    ensure!(
+        peft_len + m_len + v_len == cat.len(),
+        "checkpoint {path:?}: sections {peft_len}+{m_len}+{v_len} != payload {}",
+        cat.len()
+    );
+    let mut cat = cat;
+    let v = cat.split_off(peft_len + m_len);
+    let m = cat.split_off(peft_len);
+    Ok((TrainState { peft: cat, m, v, step }, meta))
+}
+
 /// Conventional checkpoint path: `checkpoints/<name>.f32`.
 pub fn path_for(name: &str) -> std::path::PathBuf {
     let root = crate::artifacts_dir()
@@ -62,5 +126,54 @@ mod tests {
     #[test]
     fn missing_file_errors() {
         assert!(load(Path::new("/nonexistent/ckpt.f32")).is_err());
+    }
+
+    #[test]
+    fn train_state_roundtrip_is_bit_identical() {
+        let dir = std::env::temp_dir().join("ether_ckpt_state_test");
+        let path = dir.join("state.f32");
+        let st = TrainState {
+            peft: vec![1.0, -2.5, f32::MIN_POSITIVE, 3.25e-7],
+            m: vec![0.125, -0.25],
+            v: vec![9.5, 0.0, -0.0],
+            step: 17,
+        };
+        save_state(&path, &st, vec![("method", Value::s("ether_n4"))]).unwrap();
+        let (back, meta) = load_state(&path).unwrap();
+        assert_eq!(back.step, 17);
+        assert_eq!(meta.at("method").unwrap().as_str().unwrap(), "ether_n4");
+        // Bit-identical, not just approximately equal.
+        let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&back.peft), bits(&st.peft));
+        assert_eq!(bits(&back.m), bits(&st.m));
+        assert_eq!(bits(&back.v), bits(&st.v));
+    }
+
+    #[test]
+    fn corrupted_files_error_instead_of_panicking() {
+        let dir = std::env::temp_dir().join("ether_ckpt_corrupt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        // Truncated payload (not f32-aligned).
+        let odd = dir.join("odd.f32");
+        std::fs::write(&odd, [1u8, 2, 3]).unwrap();
+        assert!(load(&odd).is_err());
+        assert!(load_state(&odd).is_err());
+        // Mangled JSON sidecar.
+        let bad_meta = dir.join("badmeta.f32");
+        std::fs::write(&bad_meta, 1.0f32.to_le_bytes()).unwrap();
+        std::fs::write(bad_meta.with_extension("json"), "{not json!").unwrap();
+        assert!(load(&bad_meta).is_err());
+        assert!(load_state(&bad_meta).is_err());
+        // Valid payload but a sidecar of the wrong kind.
+        let wrong = dir.join("wrong.f32");
+        save(&wrong, &[1.0, 2.0], Value::obj(vec![("steps", Value::num(1.0))])).unwrap();
+        let err = load_state(&wrong).unwrap_err();
+        assert!(format!("{err:#}").contains("train-state"), "{err:#}");
+        // Sections that do not add up to the payload.
+        let short = dir.join("short.f32");
+        let st = TrainState { peft: vec![1.0, 2.0], m: vec![3.0], v: vec![4.0], step: 1 };
+        save_state(&short, &st, vec![]).unwrap();
+        std::fs::write(&short, 1.0f32.to_le_bytes()).unwrap(); // truncate payload
+        assert!(load_state(&short).is_err());
     }
 }

@@ -1,0 +1,577 @@
+//! Host-native differentiable PEFT training — the first path in the
+//! repo that **trains** without a PJRT artifact.
+//!
+//! The PJRT trainers in [`crate::train::trainer`] drive compiled
+//! `*_train` artifacts and silently skip on a bare checkout; this
+//! module closes that gap by wiring the `TransformOp` gradient surface
+//! ([`crate::peft::op::TransformOp::grad_params_into`]) into a complete
+//! optimizer loop over the same blocked-parallel infrastructure the
+//! serving layer uses:
+//!
+//! ```text
+//!  probe(step)        deterministic per-step batch (seed ⊕ step)
+//!    │
+//!    ▼
+//!  MergePlan::execute_activations      y  = T_θ(W)·x   (merge-free)
+//!  MergePlan::execute_activations      y* = T_θ*(W)·x  (hidden teacher)
+//!    │
+//!    ▼
+//!  objective            least-squares ½‖y − y*‖²/N, or logistic over
+//!    │                  readout scores with teacher-sign labels
+//!    ▼
+//!  MergePlan::execute_grad_activations  ∂L/∂θ  (blocked over items,
+//!    │                                   bit-identical ∀ thread counts)
+//!    ▼
+//!  Adam → re-normalize reflection vectors (ETHER/ETHER+, §3.2)
+//! ```
+//!
+//! Targets come from a **hidden same-family teacher adapter** (the
+//! student's init plus a small perturbation), so every objective is
+//! realizable and the paper's §4.3 LR-robustness story — ETHER/ETHER+
+//! stable across orders of magnitude of learning rate while
+//! unconstrained methods degrade — reproduces on a bare checkout
+//! (`cargo run --example lr_robustness -- --host`).
+//!
+//! ```
+//! use ether::peft::apply::ModelDims;
+//! use ether::train::host::{HostTrainCfg, HostTrainer, Objective};
+//! use ether::train::Schedule;
+//!
+//! // A tiny synthetic model: targets come from a hidden same-family
+//! // "teacher" adapter, so the objective is realizable.
+//! let cfg = HostTrainCfg {
+//!     dims: ModelDims { d_model: 16, d_ff: 32, n_layers: 1 },
+//!     method: "ether_n4".into(),
+//!     objective: Objective::LeastSquares,
+//!     ..HostTrainCfg::default()
+//! };
+//! let mut tr = HostTrainer::new(cfg).unwrap();
+//! tr.train_step(1e-2).unwrap();
+//! tr.run(9, Schedule::Const(1e-2)).unwrap();
+//! assert_eq!(tr.losses.len(), 10);
+//! assert!(tr.losses.iter().all(|l| l.is_finite()));
+//! // Per-step telemetry records the paper's bounded-transform axis.
+//! let last = tr.telemetry.last().unwrap();
+//! assert!(last.param_norm > 0.0 && last.distance.is_finite());
+//! ```
+
+use std::path::Path;
+
+use anyhow::{ensure, Result};
+
+use crate::peft::apply::{base_layout_for, peft_layout_for, AdapterRef, MergePlan, ModelDims};
+use crate::peft::flat::Layout;
+use crate::peft::transforms as tf;
+use crate::peft::{adapted_matrices, metrics, registry, MethodKind, MethodSpec};
+use crate::train::{checkpoint, Schedule};
+use crate::util::json::Value;
+use crate::util::rng::Rng;
+
+const BETA1: f64 = 0.9;
+const BETA2: f64 = 0.999;
+const ADAM_EPS: f64 = 1e-8;
+
+/// Training objective over the concatenated activation outputs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    /// `½·‖y − y*‖² / N` — the synthetic least-squares probe.
+    LeastSquares,
+    /// Binary logistic regression per (item, column): scores are fixed
+    /// random readouts of the activation outputs, labels are the
+    /// teacher score's sign.
+    Logistic,
+}
+
+impl Objective {
+    pub fn parse(s: &str) -> Result<Objective> {
+        match s {
+            "lsq" | "least-squares" => Ok(Objective::LeastSquares),
+            "logistic" => Ok(Objective::Logistic),
+            other => anyhow::bail!("unknown objective {other:?} (expected lsq | logistic)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::LeastSquares => "lsq",
+            Objective::Logistic => "logistic",
+        }
+    }
+}
+
+/// Configuration of one host training run.
+#[derive(Clone, Debug)]
+pub struct HostTrainCfg {
+    pub dims: ModelDims,
+    /// Canonical method name (`"ether_n4"`, `"lora_r8"`, …); must be a
+    /// member of the differentiable family.
+    pub method: String,
+    pub objective: Objective,
+    /// Probe columns per step (the batch dimension `m`).
+    pub batch_cols: usize,
+    /// Seeds the base weights, the init, the teacher and every
+    /// per-step probe — two runs with the same cfg are bit-identical.
+    pub seed: u64,
+    /// Scale of the random PEFT init (`full` instead starts at the
+    /// frozen base weights).
+    pub init_scale: f32,
+    /// Scale of the teacher's perturbation away from the init.
+    pub teacher_scale: f32,
+    /// Record the (non-free) transformation distance each step.
+    pub telemetry: bool,
+}
+
+impl Default for HostTrainCfg {
+    fn default() -> HostTrainCfg {
+        HostTrainCfg {
+            dims: ModelDims { d_model: 32, d_ff: 64, n_layers: 2 },
+            method: "etherplus_n4".into(),
+            objective: Objective::LeastSquares,
+            batch_cols: 4,
+            seed: 17,
+            init_scale: 0.1,
+            teacher_scale: 0.3,
+            telemetry: true,
+        }
+    }
+}
+
+/// Per-step telemetry row — the LR-robustness sweep's raw material.
+#[derive(Clone, Copy, Debug)]
+pub struct StepStats {
+    pub step: u64,
+    pub lr: f32,
+    pub loss: f32,
+    pub grad_norm: f32,
+    pub param_norm: f32,
+    /// Paper Fig. 4 transformation distance (NaN when
+    /// [`HostTrainCfg::telemetry`] is off — it materializes per-item
+    /// transforms and is not free).
+    pub distance: f32,
+}
+
+/// Host-native PEFT trainer: synthetic least-squares / logistic probes
+/// over [`crate::tensor::Mat`]-shaped activations, Adam, the shared
+/// [`Schedule`], and per-step param-norm / transform-distance
+/// telemetry. See the module docs for the pipeline walkthrough.
+pub struct HostTrainer {
+    pub cfg: HostTrainCfg,
+    pub spec: MethodSpec,
+    pub base: Vec<f32>,
+    pub base_layout: Layout,
+    pub plan: MergePlan,
+    pub peft_layout: Layout,
+    /// Flat PEFT parameters (the trained state).
+    pub peft: Vec<f32>,
+    /// Adam first/second moments.
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: u64,
+    pub losses: Vec<f32>,
+    pub telemetry: Vec<StepStats>,
+    teacher_peft: Vec<f32>,
+    readout: Vec<f32>,
+}
+
+fn l2(xs: &[f32]) -> f32 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32
+}
+
+fn softplus(x: f64) -> f64 {
+    if x > 30.0 {
+        x
+    } else if x < -30.0 {
+        x.exp()
+    } else {
+        (1.0 + x.exp()).ln()
+    }
+}
+
+fn sigmoid(x: f64) -> f64 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+impl HostTrainer {
+    pub fn new(cfg: HostTrainCfg) -> Result<HostTrainer> {
+        let spec = MethodSpec::parse(&cfg.method)?;
+        let op = registry::op_for(spec.kind);
+        ensure!(
+            op.supports_grad(),
+            "{} does not support host-native training (no gradient surface)",
+            op.token()
+        );
+        let base_layout = base_layout_for(cfg.dims);
+        let plan = MergePlan::new(cfg.dims, &base_layout)?;
+        let mut rng = Rng::new(cfg.seed);
+        let base = rng.normal_vec(base_layout.total, 0.05);
+        let peft_layout = peft_layout_for(cfg.dims, &spec);
+        let peft = Self::init_peft(&cfg, &spec, &base, &base_layout, &peft_layout, &mut rng)?;
+        // The hidden teacher: the student's init plus a bounded
+        // perturbation — realizable within the same family, and close
+        // enough that the low-LR end of a robustness sweep converges
+        // within a few hundred steps.
+        let mut teacher_peft = peft.clone();
+        for p in teacher_peft.iter_mut() {
+            *p += cfg.teacher_scale * rng.normal();
+        }
+        let readout = rng.normal_vec(plan.activations_out_len(1), 1.0);
+        let k = peft.len();
+        Ok(HostTrainer {
+            cfg,
+            spec,
+            base,
+            base_layout,
+            plan,
+            peft_layout,
+            peft,
+            m: vec![0.0; k],
+            v: vec![0.0; k],
+            step: 0,
+            losses: vec![],
+            telemetry: vec![],
+            teacher_peft,
+            readout,
+        })
+    }
+
+    /// Fresh PEFT init: `full` starts at the frozen base weights (its
+    /// parameters *are* the replacement matrices); everything else
+    /// starts at a small random point.
+    fn init_peft(
+        cfg: &HostTrainCfg,
+        spec: &MethodSpec,
+        base: &[f32],
+        base_layout: &Layout,
+        peft_layout: &Layout,
+        rng: &mut Rng,
+    ) -> Result<Vec<f32>> {
+        if spec.kind == MethodKind::Full {
+            let mut peft = vec![0.0f32; peft_layout.total];
+            for (name, _, _) in adapted_matrices(cfg.dims.d_model, cfg.dims.d_ff) {
+                for l in 0..cfg.dims.n_layers {
+                    let src = base_layout.view_layer(base, name, l)?;
+                    peft_layout
+                        .view_layer_mut(&mut peft, &format!("{name}.w"), l)?
+                        .copy_from_slice(src);
+                }
+            }
+            Ok(peft)
+        } else {
+            Ok(rng.normal_vec(peft_layout.total, cfg.init_scale))
+        }
+    }
+
+    /// Deterministic per-step probe batch: the training "data" is keyed
+    /// by (seed, step), so a resumed run replays exactly the same
+    /// batches — the bit-identical-resume guarantee rests on this.
+    pub fn probe(&self, step: u64) -> Vec<f32> {
+        let key = self.cfg.seed ^ step.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(0x5DEE_CE66);
+        let mut rng = Rng::new(key);
+        rng.normal_vec(self.plan.max_item_cols() * self.cfg.batch_cols, 1.0)
+    }
+
+    fn forward(&self, peft: &[f32], x: &[f32], threads: Option<usize>) -> Result<Vec<f32>> {
+        let m = self.cfg.batch_cols;
+        let mut y = vec![0.0f32; self.plan.activations_out_len(m)];
+        self.plan.execute_activations(
+            AdapterRef { spec: &self.spec, peft, layout: &self.peft_layout },
+            &self.base,
+            x,
+            m,
+            &mut y,
+            threads,
+        )?;
+        Ok(y)
+    }
+
+    /// Loss and `∂L/∂y` for student outputs `y` against teacher
+    /// outputs `t`, in f64.
+    fn loss_and_upstream(&self, y: &[f32], t: &[f32]) -> (f64, Vec<f32>) {
+        let m = self.cfg.batch_cols;
+        match self.cfg.objective {
+            Objective::LeastSquares => {
+                let n = y.len() as f64;
+                let mut loss = 0.0f64;
+                let mut up = vec![0.0f32; y.len()];
+                for ((u, &yv), &tv) in up.iter_mut().zip(y).zip(t) {
+                    let d = yv as f64 - tv as f64;
+                    loss += d * d;
+                    *u = (d / n) as f32;
+                }
+                (loss / (2.0 * n), up)
+            }
+            Objective::Logistic => {
+                let mut up = vec![0.0f32; y.len()];
+                let mut loss = 0.0f64;
+                let count = (self.plan.items.len() * m) as f64;
+                let mut pos = 0usize; // item region start in y
+                let mut roff = 0usize; // item region start in readout
+                for it in &self.plan.items {
+                    for c in 0..m {
+                        let (mut s, mut st) = (0.0f64, 0.0f64);
+                        for row in 0..it.rows {
+                            let r = self.readout[roff + row] as f64;
+                            s += r * y[pos + row * m + c] as f64;
+                            st += r * t[pos + row * m + c] as f64;
+                        }
+                        let label = if st >= 0.0 { 1.0 } else { -1.0 };
+                        let z = -label * s;
+                        loss += softplus(z) / count;
+                        let dls = -label * sigmoid(z) / count;
+                        for row in 0..it.rows {
+                            up[pos + row * m + c] += (dls * self.readout[roff + row] as f64) as f32;
+                        }
+                    }
+                    pos += it.rows * m;
+                    roff += it.rows;
+                }
+                (loss, up)
+            }
+        }
+    }
+
+    /// Loss and flat parameter gradient at the current parameters on
+    /// probe batch `x`. `threads: None` uses the ambient pool,
+    /// `Some(1)` pins the serial oracle — bit-identical either way
+    /// (the property `rust/tests/grad_props.rs` and the `train_step`
+    /// bench assert).
+    pub fn loss_and_grad(&self, x: &[f32], threads: Option<usize>) -> Result<(f64, Vec<f32>)> {
+        let m = self.cfg.batch_cols;
+        let y = self.forward(&self.peft, x, threads)?;
+        let t = self.forward(&self.teacher_peft, x, threads)?;
+        let (loss, up) = self.loss_and_upstream(&y, &t);
+        let mut grad = vec![0.0f32; self.peft_layout.total];
+        self.plan.execute_grad_activations(
+            AdapterRef { spec: &self.spec, peft: &self.peft, layout: &self.peft_layout },
+            &self.base,
+            x,
+            m,
+            &up,
+            &mut grad,
+            threads,
+        )?;
+        Ok((loss, grad))
+    }
+
+    /// Loss on a held-out probe batch (a step key no training step
+    /// ever uses).
+    pub fn eval_loss(&self) -> Result<f64> {
+        let x = self.probe(u64::MAX);
+        let y = self.forward(&self.peft, &x, None)?;
+        let t = self.forward(&self.teacher_peft, &x, None)?;
+        Ok(self.loss_and_upstream(&y, &t).0)
+    }
+
+    /// One Adam step at learning rate `lr` on the step-keyed probe
+    /// batch; returns the (pre-update) training loss.
+    pub fn train_step(&mut self, lr: f32) -> Result<f32> {
+        let x = self.probe(self.step);
+        let (loss, grad) = self.loss_and_grad(&x, None)?;
+        self.step += 1;
+        let bc1 = 1.0 - BETA1.powi(self.step as i32);
+        let bc2 = 1.0 - BETA2.powi(self.step as i32);
+        for k in 0..self.peft.len() {
+            let g = grad[k] as f64;
+            let m = BETA1 * self.m[k] as f64 + (1.0 - BETA1) * g;
+            let v = BETA2 * self.v[k] as f64 + (1.0 - BETA2) * g * g;
+            self.m[k] = m as f32;
+            self.v[k] = v as f32;
+            let update = lr as f64 * (m / bc1) / ((v / bc2).sqrt() + ADAM_EPS);
+            self.peft[k] = (self.peft[k] as f64 - update) as f32;
+        }
+        self.renormalize_reflections()?;
+        let distance =
+            if self.cfg.telemetry { self.transform_distance()? as f32 } else { f32::NAN };
+        self.telemetry.push(StepStats {
+            step: self.step,
+            lr,
+            loss: loss as f32,
+            grad_norm: l2(&grad),
+            param_norm: l2(&self.peft),
+            distance,
+        });
+        self.losses.push(loss as f32);
+        Ok(loss as f32)
+    }
+
+    /// Run `steps` optimizer steps under `sched` (indexed by the
+    /// trainer's own step counter, so a resumed run continues the
+    /// schedule), stopping early with a warning on a non-finite loss —
+    /// divergence is *data* for the LR-robustness sweep, not a crash.
+    pub fn run(&mut self, steps: u64, sched: Schedule) -> Result<()> {
+        for _ in 0..steps {
+            let lr = sched.lr(self.step);
+            let loss = self.train_step(lr)?;
+            if !loss.is_finite() {
+                log::warn!(
+                    "{}: non-finite loss at step {} (lr={lr:.1e}) — divergence",
+                    self.cfg.method,
+                    self.step
+                );
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Post-step projection: re-normalize every reflection vector
+    /// block to unit norm, as the paper prescribes for ETHER training
+    /// (§3.2/§3.3). Function values are unchanged — the kernels
+    /// normalize internally — but the projection keeps Adam's geometry
+    /// well-conditioned and makes "unit-norm reflection vectors" a
+    /// checkable invariant (`rust/tests/train_host.rs`). A no-op for
+    /// non-reflection methods.
+    fn renormalize_reflections(&mut self) -> Result<()> {
+        let fields: &[&str] = match self.spec.kind {
+            MethodKind::Ether => &["u"],
+            MethodKind::EtherPlus => {
+                if self.spec.sides == 2 {
+                    &["u", "v", "ru", "rv"]
+                } else {
+                    &["u", "v"]
+                }
+            }
+            _ => return Ok(()),
+        };
+        let dims = self.cfg.dims;
+        for (name, _, _) in adapted_matrices(dims.d_model, dims.d_ff) {
+            for field in fields {
+                let key = format!("{name}.{field}");
+                for l in 0..dims.n_layers {
+                    let slice = self.peft_layout.view_layer_mut(&mut self.peft, &key, l)?;
+                    let normed = tf::normalize_blocks(slice, self.spec.n_blocks);
+                    slice.copy_from_slice(&normed);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Aggregate transformation distance of the current adapter (paper
+    /// Fig. 4) — the bounded-transform telemetry axis.
+    pub fn transform_distance(&self) -> Result<f64> {
+        metrics::transformation_distance(self.cfg.dims, &self.spec, &self.peft, &self.peft_layout)
+    }
+
+    pub fn param_norm(&self) -> f32 {
+        l2(&self.peft)
+    }
+
+    /// Persist the full optimizer state (peft + Adam moments + step)
+    /// for a bit-identical resume.
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        checkpoint::save_state(
+            path,
+            &checkpoint::TrainState {
+                peft: self.peft.clone(),
+                m: self.m.clone(),
+                v: self.v.clone(),
+                step: self.step,
+            },
+            vec![
+                ("method", Value::s(self.cfg.method.clone())),
+                ("objective", Value::s(self.cfg.objective.name())),
+            ],
+        )
+    }
+
+    /// Restore state saved by [`HostTrainer::save_checkpoint`] into a
+    /// freshly constructed trainer with the same cfg; continuing the
+    /// run then replays bit-identically to the uninterrupted one.
+    pub fn resume_from(&mut self, path: &Path) -> Result<()> {
+        let (st, meta) = checkpoint::load_state(path)?;
+        let method = meta.at("method")?.as_str()?;
+        ensure!(
+            method == self.cfg.method,
+            "checkpoint is for {method:?}, this trainer runs {:?}",
+            self.cfg.method
+        );
+        let objective = meta.at("objective")?.as_str()?;
+        ensure!(
+            objective == self.cfg.objective.name(),
+            "checkpoint was trained on the {objective:?} objective, this trainer runs {:?} — \
+             Adam moments are not transferable across losses",
+            self.cfg.objective.name()
+        );
+        ensure!(
+            st.peft.len() == self.peft.len()
+                && st.m.len() == self.m.len()
+                && st.v.len() == self.v.len(),
+            "checkpoint state sizes do not match this trainer"
+        );
+        self.peft = st.peft;
+        self.m = st.m;
+        self.v = st.v;
+        self.step = st.step;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg(method: &str) -> HostTrainCfg {
+        HostTrainCfg {
+            dims: ModelDims { d_model: 16, d_ff: 32, n_layers: 1 },
+            method: method.into(),
+            batch_cols: 2,
+            ..HostTrainCfg::default()
+        }
+    }
+
+    #[test]
+    fn objective_names_roundtrip() {
+        for o in [Objective::LeastSquares, Objective::Logistic] {
+            assert_eq!(Objective::parse(o.name()).unwrap(), o);
+        }
+        assert!(Objective::parse("mse").is_err());
+    }
+
+    #[test]
+    fn trainer_rejects_non_differentiable_methods() {
+        for method in ["none", "vera_r4"] {
+            let err = HostTrainer::new(tiny_cfg(method)).unwrap_err();
+            assert!(format!("{err:#}").contains("grad"), "{method}: {err:#}");
+        }
+    }
+
+    #[test]
+    fn full_init_starts_at_the_frozen_base() {
+        let tr = HostTrainer::new(tiny_cfg("full")).unwrap();
+        // Zero transformation distance at init: the replacement weights
+        // equal the base, so the first loss is exactly the teacher gap.
+        let w0 = tr.peft_layout.view_layer(&tr.peft, "wq.w", 0).unwrap();
+        let b0 = tr.base_layout.view_layer(&tr.base, "wq", 0).unwrap();
+        assert_eq!(w0, b0);
+    }
+
+    #[test]
+    fn losses_are_deterministic_across_runs() {
+        let mut a = HostTrainer::new(tiny_cfg("ether_n4")).unwrap();
+        let mut b = HostTrainer::new(tiny_cfg("ether_n4")).unwrap();
+        a.run(3, Schedule::Const(1e-2)).unwrap();
+        b.run(3, Schedule::Const(1e-2)).unwrap();
+        assert_eq!(
+            a.peft.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.peft.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "same cfg must train bit-identically"
+        );
+        assert_eq!(a.losses, b.losses);
+    }
+
+    #[test]
+    fn logistic_objective_trains_finite() {
+        let mut cfg = tiny_cfg("lora_r4");
+        cfg.objective = Objective::Logistic;
+        let mut tr = HostTrainer::new(cfg).unwrap();
+        tr.run(5, Schedule::Const(1e-2)).unwrap();
+        assert_eq!(tr.losses.len(), 5);
+        assert!(tr.losses.iter().all(|l| l.is_finite() && *l >= 0.0));
+    }
+}

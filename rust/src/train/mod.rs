@@ -1,8 +1,20 @@
 //! Training infrastructure: loops, LR schedules, checkpoints.
+//!
+//! Two training paths share the [`Schedule`] and [`checkpoint`]
+//! machinery:
+//!
+//! * [`trainer`] — the PJRT path, driving compiled `*_train` artifacts
+//!   (requires `artifacts/manifest.json` + real xla bindings).
+//! * [`host`] — the host-native differentiable path over the
+//!   `TransformOp` gradient surface: trains on a bare checkout with no
+//!   artifacts at all (the LR-robustness repro and the `train-host`
+//!   subcommand run on it).
 
 pub mod checkpoint;
+pub mod host;
 pub mod schedule;
 pub mod trainer;
 
+pub use host::HostTrainer;
 pub use schedule::Schedule;
 pub use trainer::{ClsTrainer, LmTrainer, Pretrainer};

@@ -10,6 +10,13 @@ pub enum Schedule {
 }
 
 impl Schedule {
+    /// LR at `step` (0-indexed). For `Cosine`, warmup ramps
+    /// `base·(step+1)/warmup` and ends **exactly at `base`** on step
+    /// `warmup − 1`; decay then starts strictly below the peak on step
+    /// `warmup` (the old formula emitted `base` twice — a duplicated
+    /// peak at the warmup/decay boundary the schedule tests pinned
+    /// down) and reaches **exactly 0** on the final step `total − 1`,
+    /// staying 0 for any later step.
     pub fn lr(&self, step: u64) -> f32 {
         match *self {
             Schedule::Const(lr) => lr,
@@ -17,8 +24,8 @@ impl Schedule {
                 if step < warmup {
                     base * (step + 1) as f32 / warmup.max(1) as f32
                 } else {
-                    let t = (step - warmup) as f32 / (total.saturating_sub(warmup)).max(1) as f32;
-                    let t = t.min(1.0);
+                    let span = (total.saturating_sub(warmup)).max(1) as f32;
+                    let t = ((step - warmup + 1) as f32 / span).min(1.0);
                     base * 0.5 * (1.0 + (std::f32::consts::PI * t).cos())
                 }
             }
@@ -46,5 +53,62 @@ mod tests {
         // monotone decay after warmup
         assert!(s.lr(20) > s.lr(50));
         assert!(s.lr(50) > s.lr(100));
+    }
+
+    #[test]
+    fn warmup_is_strictly_monotone_and_peaks_once() {
+        let s = Schedule::Cosine { base: 1.0, warmup: 8, total: 40 };
+        for i in 0..7 {
+            assert!(s.lr(i) < s.lr(i + 1), "warmup not increasing at {i}");
+        }
+        // The peak is hit exactly once, at the last warmup step — the
+        // old formula emitted `base` again on the first decay step.
+        assert_eq!(s.lr(7), 1.0);
+        assert!(s.lr(8) < 1.0, "duplicated peak at the warmup/decay boundary");
+        for i in 8..39 {
+            assert!(s.lr(i) > s.lr(i + 1), "decay not decreasing at {i}");
+        }
+    }
+
+    #[test]
+    fn cosine_endpoints_are_exact() {
+        let s = Schedule::Cosine { base: 0.5, warmup: 4, total: 20 };
+        // End of warmup == base, final step == 0, and the schedule
+        // stays at 0 past `total` instead of going negative or rising.
+        assert_eq!(s.lr(3), 0.5);
+        assert!(s.lr(19).abs() < 1e-7, "lr(total-1) = {}", s.lr(19));
+        assert!(s.lr(20).abs() < 1e-7);
+        assert!(s.lr(1000).abs() < 1e-7);
+        // Degenerate shapes do not divide by zero.
+        let z = Schedule::Cosine { base: 1.0, warmup: 0, total: 1 };
+        assert!(z.lr(0).is_finite());
+        let w = Schedule::Cosine { base: 1.0, warmup: 5, total: 5 };
+        assert!(w.lr(5).is_finite());
+    }
+
+    #[test]
+    fn cosine_step_lr_table_regression() {
+        // Pinned step → lr table for base=1, warmup=4, total=12:
+        // warmup ramp ¼, ½, ¾, 1, then cosine over t = (i−3)/8.
+        let s = Schedule::Cosine { base: 1.0, warmup: 4, total: 12 };
+        let pi = std::f32::consts::PI;
+        let want: Vec<f32> = vec![
+            0.25,
+            0.5,
+            0.75,
+            1.0,
+            0.5 * (1.0 + (pi * 1.0 / 8.0).cos()),
+            0.5 * (1.0 + (pi * 2.0 / 8.0).cos()),
+            0.5 * (1.0 + (pi * 3.0 / 8.0).cos()),
+            0.5 * (1.0 + (pi * 4.0 / 8.0).cos()),
+            0.5 * (1.0 + (pi * 5.0 / 8.0).cos()),
+            0.5 * (1.0 + (pi * 6.0 / 8.0).cos()),
+            0.5 * (1.0 + (pi * 7.0 / 8.0).cos()),
+            0.0,
+        ];
+        for (i, w) in want.iter().enumerate() {
+            let got = s.lr(i as u64);
+            assert!((got - w).abs() < 1e-6, "step {i}: {got} != {w}");
+        }
     }
 }

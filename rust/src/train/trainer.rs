@@ -5,6 +5,11 @@
 //! **device-resident** (uploaded once, reused via `execute_b`) so each
 //! step only moves the small PEFT state and the batch — the L3 hot-path
 //! optimization measured in EXPERIMENTS.md §Perf.
+//!
+//! These trainers need `artifacts/manifest.json` and real PJRT
+//! bindings; on a bare checkout use the artifact-free
+//! [`crate::train::host::HostTrainer`], which trains through the
+//! `TransformOp` gradient surface instead.
 
 use anyhow::Result;
 

@@ -29,6 +29,20 @@ where
     parallel_for_chunks_with(default_threads(), n, min_chunk, f)
 }
 
+/// Dispatch on an optional thread budget: `None` uses the ambient pool
+/// ([`parallel_for_chunks`]), `Some(t)` pins the explicit-thread core —
+/// the calling convention shared by `MergePlan` sweeps and the
+/// `TransformOp` gradient kernels (`Some(1)` is the serial oracle).
+pub fn parallel_for_chunks_opt<F>(threads: Option<usize>, n: usize, min_chunk: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    match threads {
+        Some(t) => parallel_for_chunks_with(t, n, min_chunk, f),
+        None => parallel_for_chunks(n, min_chunk, f),
+    }
+}
+
 /// [`parallel_for_chunks`] with an explicit thread budget — the testable
 /// core (no env lookups), also used to pin serial execution (`threads=1`)
 /// for determinism oracles.
@@ -232,6 +246,22 @@ mod tests {
         assert_eq!(parse_threads(""), None);
         assert_eq!(parse_threads("-3"), None);
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn opt_dispatch_covers_all_indices_once() {
+        for threads in [None, Some(1), Some(4)] {
+            let hits: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+            parallel_for_chunks_opt(threads, 100, 8, |a, b| {
+                for i in a..b {
+                    hits[i].fetch_add(1, Ordering::SeqCst);
+                }
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::SeqCst) == 1),
+                "threads={threads:?}"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,172 @@
+//! Trainer-level invariants for constrained updates: host training
+//! must preserve exactly the structure the serving layer exploits.
+//!
+//! * After N optimizer steps, ETHER reflection vectors are still
+//!   unit-norm per block (≤ 1e-6 drift) and the merged transform is
+//!   still an involution (`‖H·H − I‖∞` bounded).
+//! * A trained ETHER adapter still passes the PR-2 swap gate: a
+//!   train → merge → involution-swap roundtrip through
+//!   `execute_swap_involution` audits at ≤ 1e-5 — training does not
+//!   break serving's in-place swap path.
+//! * A save → load → resume cycle through `train::checkpoint` replays
+//!   **bit-identically** against the uninterrupted run.
+
+use ether::peft::apply::{merge_into_base, AdapterRef, ModelDims};
+use ether::peft::metrics;
+use ether::peft::transforms::householder_dense;
+use ether::peft::MethodSpec;
+use ether::tensor::Mat;
+use ether::train::host::{HostTrainCfg, HostTrainer};
+use ether::train::Schedule;
+use ether::util::rng::Rng;
+
+fn cfg_for(method: &str) -> HostTrainCfg {
+    HostTrainCfg {
+        dims: ModelDims { d_model: 16, d_ff: 32, n_layers: 2 },
+        method: method.into(),
+        batch_cols: 2,
+        ..HostTrainCfg::default()
+    }
+}
+
+/// Max |‖block‖₂ − 1| over all blocks of a reflection-vector field.
+fn max_unit_norm_drift(tr: &HostTrainer, field: &str, n_blocks: usize) -> f64 {
+    let dims = tr.cfg.dims;
+    let mut worst = 0.0f64;
+    for (name, _, _) in ether::peft::adapted_matrices(dims.d_model, dims.d_ff) {
+        let key = format!("{name}.{field}");
+        for l in 0..dims.n_layers {
+            let Ok(slice) = tr.peft_layout.view_layer(&tr.peft, &key, l) else { continue };
+            let db = slice.len() / n_blocks;
+            for b in 0..n_blocks {
+                let norm: f64 = slice[b * db..(b + 1) * db]
+                    .iter()
+                    .map(|&x| (x as f64) * (x as f64))
+                    .sum::<f64>()
+                    .sqrt();
+                worst = worst.max((norm - 1.0).abs());
+            }
+        }
+    }
+    worst
+}
+
+#[test]
+fn ether_reflections_stay_unit_norm_after_training() {
+    let mut tr = HostTrainer::new(cfg_for("ether_n4")).unwrap();
+    tr.run(25, Schedule::Const(5e-2)).unwrap();
+    assert!(tr.losses.iter().all(|l| l.is_finite()));
+    let drift = max_unit_norm_drift(&tr, "u", 4);
+    assert!(drift <= 1e-6, "ether u blocks drifted {drift:.2e} off unit norm");
+}
+
+#[test]
+fn etherplus_reflection_pairs_stay_unit_norm_after_training() {
+    let mut tr = HostTrainer::new(cfg_for("etherplus_n4")).unwrap();
+    tr.run(15, Schedule::Const(2e-2)).unwrap();
+    for field in ["u", "v", "ru", "rv"] {
+        let drift = max_unit_norm_drift(&tr, field, 4);
+        assert!(drift <= 1e-6, "etherplus {field} blocks drifted {drift:.2e}");
+    }
+}
+
+#[test]
+fn trained_ether_is_still_an_involution_and_passes_the_swap_gate() {
+    let mut tr = HostTrainer::new(cfg_for("ether_n4")).unwrap();
+    tr.run(20, Schedule::Const(3e-2)).unwrap();
+    let dims = tr.cfg.dims;
+    let spec = MethodSpec::parse("ether_n4").unwrap();
+
+    // Direct involution residual on a trained reflection: H·H ≈ I.
+    let u = tr.peft_layout.view_layer(&tr.peft, "wq.u", 0).unwrap();
+    let h = householder_dense(u, 4);
+    let hh = h.matmul(&h);
+    let res = hh.max_abs_diff(&Mat::eye(dims.d_model));
+    assert!(res <= 1e-5, "trained H·H − I residual {res:.2e}");
+
+    // Merge → unmerge recovers the base within the serving tolerance.
+    let merged =
+        merge_into_base(dims, &spec, &tr.base, &tr.base_layout, &tr.peft, &tr.peft_layout)
+            .unwrap();
+    let trained = AdapterRef { spec: &spec, peft: &tr.peft, layout: &tr.peft_layout };
+    let mut buf = merged.clone();
+    tr.plan.execute_unmerge(trained, &mut buf, None).unwrap();
+    let err = buf.iter().zip(&tr.base).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(err <= 1e-5, "train→merge→unmerge residual {err:.2e}");
+
+    // The PR-2 swap gate: involution-swap from the trained adapter to
+    // a fresh one, audited against the true base, stays ≤ 1e-5 — and
+    // the buffer agrees with a fresh merge of the new adapter.
+    let mut rng = Rng::new(91);
+    let other: Vec<f32> = rng.normal_vec(tr.peft_layout.total, 0.4);
+    let new = AdapterRef { spec: &spec, peft: &other, layout: &tr.peft_layout };
+    let mut swap_buf = merged;
+    let residual = tr
+        .plan
+        .execute_swap_involution(trained, new, Some(&tr.base), &mut swap_buf, None)
+        .unwrap();
+    assert!(residual <= 1e-5, "audited swap residual {residual:.2e} breaks the 1e-5 gate");
+    let fresh =
+        merge_into_base(dims, &spec, &tr.base, &tr.base_layout, &other, &tr.peft_layout).unwrap();
+    let drift = swap_buf.iter().zip(&fresh).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(drift <= 1e-5, "swap-vs-fresh drift {drift:.2e} after training");
+}
+
+#[test]
+fn ether_transform_distance_stays_pinned_while_training() {
+    // ETHER's bounded-transform telemetry: every block is an exact
+    // reflection at every step, so the Fig. 4 distance equals the
+    // closed form before, during and after training — even at a high
+    // learning rate.
+    let mut tr = HostTrainer::new(cfg_for("ether_n4")).unwrap();
+    let want = metrics::ether_expected_distance(tr.cfg.dims, 4);
+    assert!((tr.transform_distance().unwrap() - want).abs() < 1e-3);
+    tr.run(30, Schedule::Const(1e-1)).unwrap();
+    assert!(tr.losses.iter().all(|l| l.is_finite()), "ether diverged at lr 1e-1");
+    assert!((tr.transform_distance().unwrap() - want).abs() < 1e-3);
+}
+
+#[test]
+fn training_reduces_loss_for_reflective_and_additive_methods() {
+    for (method, lr) in [("ether_n4", 2e-2f32), ("lora_r4", 5e-3)] {
+        let mut tr = HostTrainer::new(cfg_for(method)).unwrap();
+        tr.run(60, Schedule::Const(lr)).unwrap();
+        let first = tr.losses[0];
+        let last = *tr.losses.last().unwrap();
+        assert!(
+            last.is_finite() && last < first,
+            "{method}: loss did not improve ({first} -> {last})"
+        );
+    }
+}
+
+#[test]
+fn checkpoint_resume_replays_bit_identically() {
+    let dir = std::env::temp_dir().join("ether_host_resume_test");
+    let path = dir.join("mid.f32");
+    // Uninterrupted run: 6 + 4 steps.
+    let mut a = HostTrainer::new(cfg_for("etherplus_n4")).unwrap();
+    a.run(6, Schedule::Const(1e-2)).unwrap();
+    a.save_checkpoint(&path).unwrap();
+    a.run(4, Schedule::Const(1e-2)).unwrap();
+    // Resumed run: fresh trainer, restore at step 6, then 4 steps.
+    let mut b = HostTrainer::new(cfg_for("etherplus_n4")).unwrap();
+    b.resume_from(&path).unwrap();
+    assert_eq!(b.step, 6);
+    b.run(4, Schedule::Const(1e-2)).unwrap();
+    let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&a.peft), bits(&b.peft), "resumed peft diverged");
+    assert_eq!(bits(&a.m), bits(&b.m), "resumed Adam m diverged");
+    assert_eq!(bits(&a.v), bits(&b.v), "resumed Adam v diverged");
+    assert_eq!(a.step, b.step);
+    // A checkpoint for a different method refuses to load.
+    let mut c = HostTrainer::new(cfg_for("ether_n4")).unwrap();
+    assert!(c.resume_from(&path).is_err());
+    // Same method but a different objective also refuses: Adam moments
+    // are not transferable across losses.
+    let mut dcfg = cfg_for("etherplus_n4");
+    dcfg.objective = ether::train::host::Objective::Logistic;
+    let mut d = HostTrainer::new(dcfg).unwrap();
+    let err = d.resume_from(&path).unwrap_err();
+    assert!(format!("{err:#}").contains("objective"), "{err:#}");
+}

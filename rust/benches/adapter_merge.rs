@@ -33,7 +33,7 @@ fn synth_base(dims: ModelDims, seed: u64) -> (Vec<f32>, Layout) {
 }
 
 fn host_section() {
-    let quick = std::env::var("ETHER_BENCH_QUICK").is_ok();
+    let quick = ether::util::runtimecfg::RuntimeCfg::get().bench_quick;
     let dims = ModelDims { d_model: 1024, d_ff: 2048, n_layers: 8 };
     let (base, bl) = synth_base(dims, 5);
     println!(

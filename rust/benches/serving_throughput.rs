@@ -1,7 +1,9 @@
-//! Bench — end-to-end serving throughput under the four synthetic
-//! traffic scenarios (uniform, zipf, bursty, adapter-churn) through the
+//! Bench — end-to-end serving throughput under the synthetic traffic
+//! scenarios (uniform, zipf, bursty, adapter-churn) through the
 //! adapter-aware scheduler and the unified [`AdapterEngine`] execution
-//! facade, with real blocked-parallel merges (host engine, PJRT-free).
+//! facade, with real blocked-parallel merges (host engine, PJRT-free) —
+//! plus the fleet-scale `zipf-1M` scenario through the sharded
+//! [`ShardedFleet`] tier over the paged adapter store.
 //!
 //! Emits `BENCH_serving_throughput.json` (when `ETHER_BENCH_JSON` is
 //! set) with per-scenario requests/s, p50/p95 latency, shed rate,
@@ -10,58 +12,27 @@
 //! each replayed through all three weight-residency strategies
 //! (`merged` LRU cache via the concurrent pool, `onthefly` merge-free
 //! activation application, `swap` in-place involution slot), so the
-//! BENCH JSON records the memory/throughput trade per strategy.
+//! BENCH JSON records the memory/throughput trade per strategy. The
+//! `zipf-1M` row additionally records per-shard req/s, steal/replica
+//! counters, page-in/out counts, and steady-state resident bytes, and
+//! asserts paged-adapter serving parity against a never-paged fleet.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use ether::coordinator::loadgen::{self, LoadGenCfg, Scenario};
 use ether::coordinator::{
-    AdapterEngine, AdapterRegistry, ExecutionPolicy, MergeEngine, Request, SchedulerCfg, Server,
-    StrategyKind, SwapMode,
+    AdapterEngine, AdapterProvisioner, AdapterRegistry, ExecutionPolicy, FleetCfg, MergeEngine,
+    Request, SchedulerCfg, Server, ShardedFleet, StatsSnapshot, StrategyKind, SwapMode,
 };
 use ether::peft::apply::{base_layout_for, ModelDims};
+use ether::peft::store::{PagedStore, StoreCfg};
 use ether::util::benchkit;
 use ether::util::json::Value;
 use ether::util::rng::Rng;
+use ether::util::runtimecfg::RuntimeCfg;
 
 const N_ADAPTERS: usize = 12;
-
-struct RunReport {
-    label: String,
-    served: u64,
-    shed: u64,
-    req_per_s: f64,
-    p50_ms: f64,
-    p95_ms: f64,
-    shed_rate: f64,
-    fairness_spread_ms: f64,
-    release_fairness: f64,
-    merge_hit_rate: f64,
-    merges: u64,
-    swaps: u64,
-    served_onthefly: u64,
-}
-
-impl RunReport {
-    fn to_json(&self) -> Value {
-        Value::obj(vec![
-            ("scenario", Value::s(self.label.clone())),
-            ("served", Value::num(self.served as f64)),
-            ("shed", Value::num(self.shed as f64)),
-            ("req_per_s", Value::num(self.req_per_s)),
-            ("p50_ms", Value::num(self.p50_ms)),
-            ("p95_ms", Value::num(self.p95_ms)),
-            ("shed_rate", Value::num(self.shed_rate)),
-            ("fairness_spread_ms", Value::num(self.fairness_spread_ms)),
-            ("release_fairness_jain", Value::num(self.release_fairness)),
-            ("merge_hit_rate", Value::num(self.merge_hit_rate)),
-            ("merges", Value::num(self.merges as f64)),
-            ("swaps", Value::num(self.swaps as f64)),
-            ("served_onthefly", Value::num(self.served_onthefly as f64)),
-        ])
-    }
-}
 
 /// Which strategy row to run a scenario under.
 enum Dispatch {
@@ -74,7 +45,10 @@ enum Dispatch {
 }
 
 /// Replay one scenario trace through a fresh server; pump on burst
-/// boundaries and whenever virtual time advances, then drain.
+/// boundaries and whenever virtual time advances, then drain. Returns
+/// the server's unified [`StatsSnapshot`] plus the measured wall-clock
+/// seconds — everything the report needs, with no reaching into the
+/// individual stats structs.
 fn run_scenario(
     label: &str,
     scenario: Scenario,
@@ -82,7 +56,7 @@ fn run_scenario(
     base: &[f32],
     dims: ModelDims,
     dispatch: &Dispatch,
-) -> RunReport {
+) -> (StatsSnapshot, f64) {
     let layout = base_layout_for(dims);
     let merger = Arc::new(MergeEngine::new(dims, base.to_vec(), &layout, 4, 4).unwrap());
     let mut registry = AdapterRegistry::new();
@@ -134,29 +108,13 @@ fn run_scenario(
     }
     let dt = t0.elapsed().as_secs_f64().max(1e-9);
 
-    let stats = &server.stats;
-    let sched = server.sched.stats();
+    let snap = server.snapshot();
     assert_eq!(
-        stats.served + sched.shed(),
+        snap.server.served + snap.sched.shed(),
         n_requests as u64,
         "{label}: every offered request must be served or shed"
     );
-    let lat = stats.latency_summary();
-    RunReport {
-        label: label.to_string(),
-        served: stats.served,
-        shed: sched.shed(),
-        req_per_s: stats.served as f64 / dt,
-        p50_ms: lat.p50_ms(),
-        p95_ms: lat.p95_ms(),
-        shed_rate: sched.shed_rate(),
-        fairness_spread_ms: stats.fairness_spread_ms(),
-        release_fairness: sched.release_fairness(),
-        merge_hit_rate: stats.merge_hit_rate(),
-        merges: merger.merges.load(std::sync::atomic::Ordering::SeqCst),
-        swaps: merger.swap_stats().0,
-        served_onthefly: stats.served_onthefly,
-    }
+    (snap, dt)
 }
 
 /// Submission loop shared by all dispatch flavours: pace submissions to
@@ -196,8 +154,193 @@ fn drive(
     pump(server, late);
 }
 
+/// The fleet-scale scenario: a zipf-1M trace over a store-backed,
+/// provisioner-fed registry served by the sharded fleet. Asserts the
+/// paging path actually ran (page-ins > 0) and that steady-state
+/// resident memory stays bounded regardless of the id-space size, then
+/// returns the fleet's BENCH-JSON row.
+fn run_fleet_zipf1m(quick: bool, base: &[f32], dims: ModelDims) -> Value {
+    // Quick mode scales the id space down (CI) but keeps every moving
+    // part — paging, provisioning, stealing, replication — exercised.
+    let n_adapters: usize = if quick { 1 << 16 } else { 1 << 20 };
+    let n_requests: usize = if quick { 384 } else { 2048 };
+    let resident_cap: usize = if quick { 8 } else { 128 };
+    let rc = RuntimeCfg::get();
+    let shards = rc.fleet_shards();
+    let dir = std::env::temp_dir().join(format!("ether_bench_fleet_{}", std::process::id()));
+    let store = Arc::new(
+        PagedStore::create(
+            StoreCfg::new(dir.join("pages.bin"))
+                .page_bytes(rc.store_page_bytes())
+                .cache_pages(rc.store_cache_pages()),
+        )
+        .unwrap(),
+    );
+    let mut registry = AdapterRegistry::with_store(store.clone(), resident_cap);
+    registry.set_provisioner(AdapterProvisioner::new("ether_n4", "host", dims, 42).unwrap());
+
+    let hot = (n_requests as u64 / 16).max(8);
+    let fleet_cfg = FleetCfg {
+        shards,
+        hot_threshold: hot,
+        policy: ExecutionPolicy::TrafficAware { hot_threshold: hot },
+        sched: SchedulerCfg {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            quantum: 4,
+            max_queue_per_adapter: 64,
+            max_pending: 4096,
+        },
+        ..Default::default()
+    };
+    let mut fleet = ShardedFleet::host(registry, dims, base.to_vec(), fleet_cfg).unwrap();
+    let arrivals = loadgen::generate(&LoadGenCfg {
+        n_adapters,
+        n_requests,
+        seed: 99,
+        scenario: Scenario::Zipf1M { exponent: 1.05 },
+        ..Default::default()
+    });
+
+    let t0 = Instant::now();
+    let mut last_at = None;
+    let mut served = 0u64;
+    for (i, a) in arrivals.iter().enumerate() {
+        let target = t0 + a.at;
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let _ = fleet.submit(Request {
+            id: i as u64,
+            adapter: format!("user{}", a.adapter),
+            prompt: a.prompt.clone(),
+            max_new: a.max_new,
+            enqueued: Instant::now(),
+        });
+        if last_at != Some(a.at) {
+            last_at = Some(a.at);
+            fleet.pump(Instant::now(), |_| served += 1).unwrap();
+        }
+    }
+    let late = Instant::now() + Duration::from_millis(3);
+    fleet.drain(late, |_| served += 1).unwrap();
+    let dt = t0.elapsed().as_secs_f64().max(1e-9);
+
+    // Deterministic cold-read demonstration: seal and drop the store's
+    // page cache, then read a materialized id through a fresh (empty)
+    // registry clone — the page MUST come back from disk.
+    store.flush().unwrap();
+    store.drop_caches();
+    let probe = AdapterRegistry::with_store(store.clone(), 1);
+    probe.get(&format!("user{}", arrivals[0].adapter)).unwrap();
+
+    let snap = fleet.snapshot();
+    let st = snap.store.expect("fleet registry is store-backed");
+    assert_eq!(served, snap.served(), "response callbacks must match the served counter");
+    assert_eq!(snap.served() + snap.shed(), n_requests as u64, "zipf-1M conservation");
+    assert!(st.page_ins > 0, "zipf-1M must page adapters in from the store");
+    assert!(st.page_outs > 0, "zipf-1M must spill pages to disk");
+    // Steady-state resident memory stays bounded by the caps, not the
+    // id-space size: merged-weight caches + resident adapter params +
+    // the store's page cache.
+    let bound: u64 = if quick { 32 << 20 } else { 64 << 20 };
+    assert!(
+        snap.resident_bytes() < bound,
+        "fleet resident memory {} exceeds the {} byte bound",
+        snap.resident_bytes(),
+        bound
+    );
+
+    println!(
+        "zipf-1M fleet: {} shards over {} ids | served {} shed {} | {:.1} req/s \
+         (per-shard {:?}) | hot {} promotions {} replica-routes {} steals {} ({} reqs) | \
+         page-ins {} page-outs {} | resident {} KiB",
+        shards,
+        n_adapters,
+        snap.served(),
+        snap.shed(),
+        snap.served() as f64 / dt,
+        snap.shard_req_per_s(dt).iter().map(|r| r.round()).collect::<Vec<_>>(),
+        snap.hot,
+        snap.hot_promotions,
+        snap.replica_routes,
+        snap.steals,
+        snap.stolen_requests,
+        st.page_ins,
+        st.page_outs,
+        snap.resident_bytes() >> 10,
+    );
+    let row = snap.scenario_json("zipf-1M", dt);
+    std::fs::remove_dir_all(&dir).ok();
+    row
+}
+
+/// Paged-vs-unpaged serving parity: the same zipf-1M trace through a
+/// store-backed fleet (tiny resident cap — constant eviction and
+/// re-paging) and a never-paged provisioner-only fleet, both under the
+/// deterministic on-the-fly strategy. Outputs must match bit-for-bit
+/// (well within the ≤1e-5 acceptance bound: the store roundtrips exact
+/// bytes and the provisioner is a pure function of the id).
+fn assert_fleet_parity(base: &[f32], dims: ModelDims) {
+    let provisioner = || AdapterProvisioner::new("ether_n4", "host", dims, 42).unwrap();
+    let dir = std::env::temp_dir().join(format!("ether_bench_parity_{}", std::process::id()));
+    let store = Arc::new(
+        PagedStore::create(StoreCfg::new(dir.join("pages.bin")).page_bytes(8192).cache_pages(2))
+            .unwrap(),
+    );
+    let mut paged_reg = AdapterRegistry::with_store(store.clone(), 2);
+    paged_reg.set_provisioner(provisioner());
+    let mut plain_reg = AdapterRegistry::new();
+    plain_reg.set_provisioner(provisioner());
+
+    let cfg = FleetCfg {
+        shards: 2,
+        policy: ExecutionPolicy::Static(StrategyKind::OnTheFly),
+        sched: SchedulerCfg { max_batch: 4, ..Default::default() },
+        ..Default::default()
+    };
+    let arrivals = loadgen::generate(&LoadGenCfg {
+        n_adapters: 64,
+        n_requests: 128,
+        seed: 17,
+        scenario: Scenario::Zipf1M { exponent: 1.05 },
+        ..Default::default()
+    });
+    let run = |registry: AdapterRegistry| {
+        let mut fleet = ShardedFleet::host(registry, dims, base.to_vec(), cfg).unwrap();
+        let t = Instant::now();
+        for (i, a) in arrivals.iter().enumerate() {
+            fleet
+                .submit(Request {
+                    id: i as u64,
+                    adapter: format!("user{}", a.adapter),
+                    prompt: a.prompt.clone(),
+                    max_new: a.max_new,
+                    enqueued: t,
+                })
+                .expect("parity trace stays under admission bounds");
+        }
+        let mut out = std::collections::BTreeMap::new();
+        fleet
+            .drain(t + Duration::from_millis(10), |r| {
+                out.insert(r.id, r.output);
+            })
+            .unwrap();
+        out
+    };
+    let paged = run(paged_reg);
+    let plain = run(plain_reg);
+    assert_eq!(paged.len(), arrivals.len(), "parity run must serve everything");
+    assert_eq!(paged, plain, "paged and never-paged serving must agree exactly");
+    let st = store.stats();
+    assert!(st.page_ins > 0, "the paged side must actually page (cap 2 vs 64 ids)");
+    std::fs::remove_dir_all(&dir).ok();
+    println!("zipf-1M parity: paged == unpaged on {} responses ({} page-ins)", paged.len(), st.page_ins);
+}
+
 fn main() {
-    let quick = std::env::var("ETHER_BENCH_QUICK").is_ok();
+    let quick = RuntimeCfg::get().bench_quick;
     let n_requests = if quick { 192 } else { 1024 };
     let workers = ether::coordinator::server::dispatch_workers();
     let dims = ModelDims { d_model: 64, d_ff: 128, n_layers: 2 };
@@ -217,21 +360,17 @@ fn main() {
 
     let mut rows: Vec<Value> = vec![];
     for scenario in Scenario::all() {
-        let r = run_scenario(
-            scenario.name(),
-            scenario,
-            n_requests,
-            &base,
-            dims,
-            &Dispatch::Pool { workers },
-        );
+        let (snap, dt) =
+            run_scenario(scenario.name(), scenario, n_requests, &base, dims, &Dispatch::Pool {
+                workers,
+            });
         if scenario.name() == "bursty" {
             // A 96-request burst against a 64-deep global bound must
             // shed — the admission-control demonstration.
-            assert!(r.shed > 0, "bursty overload must exercise shedding");
+            assert!(snap.sched.shed() > 0, "bursty overload must exercise shedding");
         }
-        print_row(&r);
-        rows.push(r.to_json());
+        print_row(scenario.name(), &snap, dt);
+        rows.push(snap.scenario_json(scenario.name(), dt));
     }
     // Per-strategy rows: the zipf (hot-head popularity) and churn
     // (rotating working set) traces replayed through the merge-free
@@ -242,30 +381,34 @@ fn main() {
     let churn = Scenario::all()[3];
     assert_eq!(churn.name(), "churn");
     for (scenario, name) in [(zipf, "zipf"), (churn, "churn")] {
-        let r = run_scenario(
-            &format!("{name}+otf"),
-            scenario,
-            n_requests,
-            &base,
-            dims,
-            &Dispatch::OnTheFly { workers },
-        );
-        assert_eq!(r.merges, 0, "{name}+otf: on-the-fly serving must never merge");
-        assert!(r.served_onthefly > 0, "{name}+otf must serve merge-free");
-        print_row(&r);
-        rows.push(r.to_json());
-        let r = run_scenario(
-            &format!("{name}+swap"),
+        let label = format!("{name}+otf");
+        let (snap, dt) =
+            run_scenario(&label, scenario, n_requests, &base, dims, &Dispatch::OnTheFly {
+                workers,
+            });
+        assert_eq!(snap.server.merges, 0, "{name}+otf: on-the-fly serving must never merge");
+        assert!(snap.server.served_onthefly > 0, "{name}+otf must serve merge-free");
+        print_row(&label, &snap, dt);
+        rows.push(snap.scenario_json(&label, dt));
+
+        let label = format!("{name}+swap");
+        let (snap, dt) = run_scenario(
+            &label,
             scenario,
             n_requests,
             &base,
             dims,
             &Dispatch::Swap(SwapMode::Involution),
         );
-        assert!(r.swaps > 0, "{name}+swap must exercise the in-place swap path");
-        print_row(&r);
-        rows.push(r.to_json());
+        assert!(snap.server.merge_swaps > 0, "{name}+swap must exercise the in-place swap path");
+        print_row(&label, &snap, dt);
+        rows.push(snap.scenario_json(&label, dt));
     }
+
+    // The fleet tier: zipf-1M through sharded engines over the paged
+    // store, plus the paged-vs-unpaged serving parity check.
+    rows.push(run_fleet_zipf1m(quick, &base, dims));
+    assert_fleet_parity(&base, dims);
 
     let payload = Value::obj(vec![
         ("name", Value::s("serving throughput".to_string())),
@@ -279,20 +422,21 @@ fn main() {
     benchkit::emit_named_json("serving throughput", &payload);
 }
 
-fn print_row(r: &RunReport) {
+fn print_row(label: &str, snap: &StatsSnapshot, dt: f64) {
+    let lat = snap.server.latency_summary();
     println!(
         "{:<14} {:>10.1} {:>8} {:>10.2} {:>10.2} {:>8.1}% {:>11.2} {:>8.3} {:>7.0}% {:>7} {:>7} {:>7}",
-        r.label,
-        r.req_per_s,
-        r.served,
-        r.p50_ms,
-        r.p95_ms,
-        r.shed_rate * 100.0,
-        r.fairness_spread_ms,
-        r.release_fairness,
-        r.merge_hit_rate * 100.0,
-        r.merges,
-        r.swaps,
-        r.served_onthefly,
+        label,
+        snap.req_per_s(dt),
+        snap.server.served,
+        lat.p50_ms(),
+        lat.p95_ms(),
+        snap.sched.shed_rate() * 100.0,
+        snap.server.fairness_spread_ms(),
+        snap.sched.release_fairness(),
+        snap.server.merge_hit_rate() * 100.0,
+        snap.server.merges,
+        snap.server.merge_swaps,
+        snap.server.served_onthefly,
     )
 }

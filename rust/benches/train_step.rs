@@ -22,7 +22,7 @@ use ether::train::LmTrainer;
 use ether::util::benchkit::Bench;
 
 fn host_section() {
-    let quick = std::env::var("ETHER_BENCH_QUICK").is_ok();
+    let quick = ether::util::runtimecfg::RuntimeCfg::get().bench_quick;
     let dims = if quick {
         ModelDims { d_model: 1024, d_ff: 2048, n_layers: 2 }
     } else {

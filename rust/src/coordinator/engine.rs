@@ -138,6 +138,13 @@ pub trait ExecutionStrategy: Sync + Send {
     fn resident_weight_bytes(&self) -> usize {
         0
     }
+
+    /// Real merge executions performed so far (cache misses that ran the
+    /// merge kernel, swap-slot fills, …) — distinct from
+    /// [`ExecutionStrategy::merge_stats`], which counts cache probes.
+    fn merge_executions(&self) -> u64 {
+        0
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -179,6 +186,10 @@ impl ExecutionStrategy for MergedCacheStrategy {
 
     fn resident_weight_bytes(&self) -> usize {
         self.merger.cache_resident_bytes()
+    }
+
+    fn merge_executions(&self) -> u64 {
+        self.merger.merges.load(Ordering::SeqCst)
     }
 }
 
@@ -231,6 +242,10 @@ impl ExecutionStrategy for InvolutionSwapStrategy {
     fn resident_weight_bytes(&self) -> usize {
         self.slot.lock().unwrap().resident_bytes()
     }
+
+    fn merge_executions(&self) -> u64 {
+        self.merger.merges.load(Ordering::SeqCst)
+    }
 }
 
 /// Merge-free strategy: serves an adapter by applying its transform
@@ -262,6 +277,12 @@ impl ExecutionStrategy for OnTheFlyStrategy {
         let y = self.merger.activations(adapter, 1)?;
         let tag = weights_fingerprint(&y);
         Ok(echo_tagged(prompts, tag))
+    }
+
+    /// Merge-free by construction: the shared engine's merge counter
+    /// only moves if some *other* strategy drives it.
+    fn merge_executions(&self) -> u64 {
+        self.merger.merges.load(Ordering::SeqCst)
     }
     // resident_weight_bytes: the default 0 — and the engine's merge
     // counters stay untouched, which rust/tests/engine_parity.rs pins.
@@ -393,6 +414,12 @@ impl ExecutionStrategy for PjrtMergedStrategy<'_> {
     fn merge_stats(&self) -> (u64, u64) {
         let c = self.cache_guard();
         (c.hits, c.misses)
+    }
+
+    /// Each cache miss runs one artifact merge (single-flight dedups
+    /// racers into waiters, not extra merges).
+    fn merge_executions(&self) -> u64 {
+        self.cache_guard().misses
     }
 
     fn resident_weight_bytes(&self) -> usize {
@@ -665,6 +692,17 @@ impl ExecutionStrategy for AdapterEngine<'_> {
             .flatten()
             .map(|s| s.resident_weight_bytes())
             .sum()
+    }
+
+    /// Host leaves share one `MergeEngine` (its counter is engine-wide),
+    /// so take the max across leaves instead of summing duplicates.
+    fn merge_executions(&self) -> u64 {
+        [&self.merged, &self.swap, &self.onthefly]
+            .into_iter()
+            .flatten()
+            .map(|s| s.merge_executions())
+            .max()
+            .unwrap_or(0)
     }
 }
 

@@ -1,0 +1,692 @@
+//! Sharded serving tier: N [`Server`]+[`AdapterEngine`] shards behind a
+//! consistent-hash router, over one shared paged adapter store.
+//!
+//! The paper's parameter-efficiency headline (§4: an ETHER adapter is
+//! 10–100× smaller than LoRA's) makes *million*-adapter fleets a
+//! storage problem, not a memory problem: adapters live in a
+//! [`crate::peft::store::PagedStore`] on disk, every shard's
+//! [`AdapterRegistry`] clone reads through it with its own bounded
+//! resident LRU, and only the working set ever holds RAM.
+//!
+//! ```text
+//!                 submit(req)
+//!                     │
+//!              ConsistentRing ── hash64(adapter) → home shard
+//!                     │              hot set → least-loaded replica
+//!        ┌────────────┼────────────┐
+//!        ▼            ▼            ▼
+//!    Server 0     Server 1  …  Server N-1      pump():
+//!    Scheduler    Scheduler    Scheduler        1. promote_hot()
+//!    AdapterEng   AdapterEng   AdapterEng       2. rebalance() (steal)
+//!        │            │            │            3. per-shard pump_pool
+//!        └───────── shared ────────┘
+//!              AdapterRegistry clones
+//!              (per-shard resident LRU)
+//!                     │
+//!                PagedStore  ← page-in / page-out, LRU page cache
+//! ```
+//!
+//! Three fleet-level mechanisms on top of the per-shard machinery:
+//!
+//! * **Routing** — [`ConsistentRing`]: each adapter id hashes to a home
+//!   shard via `vnodes` virtual points per shard, so resizing the fleet
+//!   from N to N+1 shards moves only ~1/(N+1) of the id space
+//!   (`rust/tests/fleet_props.rs` pins this).
+//! * **Hot-set replication** — adapters whose fleet-wide released count
+//!   ([`SchedStats::released_for`], summed over shards) crosses
+//!   `hot_threshold` enter the hot set; their requests may route to any
+//!   of `replicas` successor shards on the ring, picked by least
+//!   pending. Cold adapters always route home, keeping their params
+//!   resident on exactly one shard.
+//! * **Work stealing** — [`ShardedFleet::rebalance`] moves whole
+//!   adapter queues from the most- to the least-loaded shard
+//!   ([`Scheduler::steal_newest`] → [`Scheduler::inject`]) whenever the
+//!   pending gap exceeds `steal_margin`; requests are conserved
+//!   (`stolen_out == stolen_in` fleet-wide).
+//!
+//! # Walkthrough
+//!
+//! Million-id serving on a laptop: a provisioner materializes adapters
+//! on first request, the store spills them to disk, and the fleet
+//! routes, steals, and reports through one [`FleetSnapshot`].
+//!
+//! ```
+//! use std::sync::Arc;
+//! use std::time::{Duration, Instant};
+//! use ether::coordinator::fleet::{FleetCfg, ShardedFleet};
+//! use ether::coordinator::registry::AdapterProvisioner;
+//! use ether::coordinator::{AdapterRegistry, Request, SchedulerCfg};
+//! use ether::peft::apply::{base_layout_for, ModelDims};
+//! use ether::peft::store::{PagedStore, StoreCfg};
+//!
+//! // 1. Paged store + provisioner-backed registry: ids materialize on
+//! //    first request and spill to disk; at most 6 stay resident.
+//! let dims = ModelDims { d_model: 16, d_ff: 32, n_layers: 2 };
+//! let path = std::env::temp_dir()
+//!     .join(format!("ether_fleet_doc_{}", std::process::id()))
+//!     .join("pages.bin");
+//! let store = Arc::new(PagedStore::create(
+//!     StoreCfg::new(&path).page_bytes(4096).cache_pages(2),
+//! )?);
+//! let mut registry = AdapterRegistry::with_store(store, 6);
+//! registry.set_provisioner(AdapterProvisioner::new("ether_n4", "host", dims, 42)?);
+//!
+//! // 2. Two shards over one synthetic base.
+//! let layout = base_layout_for(dims);
+//! let base = vec![0.02f32; layout.total];
+//! let cfg = FleetCfg {
+//!     shards: 2,
+//!     sched: SchedulerCfg { max_batch: 4, ..Default::default() },
+//!     ..Default::default()
+//! };
+//! let mut fleet = ShardedFleet::host(registry, dims, base, cfg)?;
+//!
+//! // 3. Submit a skewed trace and pump to completion.
+//! let t = Instant::now();
+//! for i in 0..24u64 {
+//!     fleet.submit(Request {
+//!         id: i,
+//!         adapter: format!("user{}", i % 12),
+//!         prompt: vec![i as i32],
+//!         max_new: 2,
+//!         enqueued: t,
+//!     }).expect("under admission bounds");
+//! }
+//! let mut served = 0;
+//! fleet.pump(t + Duration::from_millis(50), |_resp| served += 1)?;
+//!
+//! // 4. One snapshot: per-shard stats + fleet-level counters.
+//! let snap = fleet.snapshot();
+//! assert_eq!(served, 24);
+//! assert_eq!(snap.served(), 24);
+//! assert_eq!(snap.shards.len(), 2);
+//! // The resident set stayed bounded even though 12 ids materialized.
+//! assert!(fleet.registry(0).resident_len() <= 6);
+//! # std::fs::remove_dir_all(path.parent().unwrap()).ok();
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::peft::apply::{base_layout_for, ModelDims};
+use crate::peft::store::StoreStats;
+use crate::util::json::Value;
+use crate::util::pool;
+use crate::util::rng::hash64;
+
+use super::batcher::Request;
+use super::engine::{AdapterEngine, ExecutionPolicy};
+use super::registry::{AdapterRegistry, MergeEngine};
+use super::scheduler::{SchedulerCfg, ShedReason};
+use super::server::{Response, Server, StatsSnapshot};
+use std::sync::Arc;
+
+/// Consistent-hash ring: `vnodes` virtual points per shard, placed by
+/// [`hash64`] over `"shard{s}#vnode{v}"`. An id routes to the successor
+/// point clockwise, so changing the shard count only remaps the ids
+/// whose successor changed (~K/N of them).
+#[derive(Clone, Debug)]
+pub struct ConsistentRing {
+    /// (point hash, shard) sorted by hash.
+    points: Vec<(u64, usize)>,
+    shards: usize,
+}
+
+impl ConsistentRing {
+    pub fn new(shards: usize, vnodes: usize) -> ConsistentRing {
+        let (shards, vnodes) = (shards.max(1), vnodes.max(1));
+        let mut points = Vec::with_capacity(shards * vnodes);
+        for s in 0..shards {
+            for v in 0..vnodes {
+                points.push((hash64(format!("shard{s}#vnode{v}").as_bytes()), s));
+            }
+        }
+        points.sort_unstable();
+        ConsistentRing { points, shards }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Home shard for a key: first ring point at or after its hash,
+    /// wrapping at the top.
+    pub fn shard_for(&self, key: &str) -> usize {
+        let h = hash64(key.as_bytes());
+        let i = self.points.partition_point(|&(p, _)| p < h);
+        self.points[if i == self.points.len() { 0 } else { i }].1
+    }
+
+    /// The first `n` *distinct* shards clockwise from the key's point —
+    /// the replica set for hot adapters. Always starts with the home
+    /// shard; clamped to the shard count.
+    pub fn replicas_for(&self, key: &str, n: usize) -> Vec<usize> {
+        let n = n.clamp(1, self.shards);
+        let h = hash64(key.as_bytes());
+        let start = self.points.partition_point(|&(p, _)| p < h);
+        let mut out = Vec::with_capacity(n);
+        for k in 0..self.points.len() {
+            let s = self.points[(start + k) % self.points.len()].1;
+            if !out.contains(&s) {
+                out.push(s);
+                if out.len() == n {
+                    break;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Fleet-level knobs. Shard internals (scheduler bounds, execution
+/// policy, merge cache) are per-shard copies of the usual configs; the
+/// CLI and benches resolve these from [`crate::util::runtimecfg`] knobs
+/// (`ETHER_FLEET_SHARDS`, …) via `resolve(explicit, env, default)`.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetCfg {
+    /// Number of shards (engines + schedulers). Default 4.
+    pub shards: usize,
+    /// Virtual ring points per shard. More vnodes → smoother key
+    /// distribution and smaller per-resize movement. Default 64.
+    pub vnodes: usize,
+    /// Hot-set replication factor (1 disables replication). Default 2.
+    pub replicas: usize,
+    /// Fleet-wide released-request count at which an adapter joins the
+    /// hot set. Default 32.
+    pub hot_threshold: u64,
+    /// Pending-request gap between the most- and least-loaded shard
+    /// that triggers stealing. Default 8.
+    pub steal_margin: usize,
+    /// Max requests moved per steal. Default 32.
+    pub steal_max: usize,
+    /// Pool workers per shard pump; 0 = auto
+    /// ([`pool::shard_workers`]). Default 0.
+    pub workers_per_shard: usize,
+    /// Per-shard scheduler bounds.
+    pub sched: SchedulerCfg,
+    /// Per-shard execution policy.
+    pub policy: ExecutionPolicy,
+    /// Per-shard merged-weight cache capacity. Default 4.
+    pub merge_cache: usize,
+    /// Per-shard merge-worker budget. Default 2.
+    pub merge_workers: usize,
+}
+
+impl Default for FleetCfg {
+    fn default() -> FleetCfg {
+        FleetCfg {
+            shards: 4,
+            vnodes: 64,
+            replicas: 2,
+            hot_threshold: 32,
+            steal_margin: 8,
+            steal_max: 32,
+            workers_per_shard: 0,
+            sched: SchedulerCfg::default(),
+            policy: ExecutionPolicy::TrafficAware { hot_threshold: 32 },
+            merge_cache: 4,
+            merge_workers: 2,
+        }
+    }
+}
+
+struct FleetShard {
+    server: Server,
+    engine: AdapterEngine<'static>,
+}
+
+/// The sharded serving tier. See the [module docs](self) for the
+/// architecture and a runnable walkthrough.
+pub struct ShardedFleet {
+    cfg: FleetCfg,
+    ring: ConsistentRing,
+    shards: Vec<FleetShard>,
+    workers_per_shard: usize,
+    /// Adapters promoted to replica routing (sticky).
+    hot: BTreeSet<String>,
+    hot_promotions: u64,
+    /// Requests routed to a non-home replica.
+    replica_routes: u64,
+    steals: u64,
+    stolen_requests: u64,
+}
+
+impl ShardedFleet {
+    /// Build a host-mode fleet: every shard gets its own
+    /// [`MergeEngine`] over a copy of `base`, its own scheduler, and a
+    /// clone of `registry` (shared store/provisioner, independent
+    /// resident LRU — per-shard param heat *is* the hot-set replication
+    /// at the storage level).
+    pub fn host(
+        registry: AdapterRegistry,
+        dims: ModelDims,
+        base: Vec<f32>,
+        cfg: FleetCfg,
+    ) -> Result<ShardedFleet> {
+        let n = cfg.shards.max(1);
+        let layout = base_layout_for(dims);
+        let workers = if cfg.workers_per_shard == 0 {
+            pool::shard_workers(n)
+        } else {
+            cfg.workers_per_shard
+        };
+        let mut shards = Vec::with_capacity(n);
+        for _ in 0..n {
+            let merger = Arc::new(MergeEngine::new(
+                dims,
+                base.clone(),
+                &layout,
+                cfg.merge_cache,
+                cfg.merge_workers,
+            )?);
+            shards.push(FleetShard {
+                server: Server::new(registry.clone(), cfg.sched),
+                engine: AdapterEngine::host(merger, cfg.policy),
+            });
+        }
+        Ok(ShardedFleet {
+            ring: ConsistentRing::new(n, cfg.vnodes),
+            shards,
+            workers_per_shard: workers,
+            hot: BTreeSet::new(),
+            hot_promotions: 0,
+            replica_routes: 0,
+            steals: 0,
+            stolen_requests: 0,
+            cfg,
+        })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The ring's home shard for an adapter (ignores hot-set routing).
+    pub fn home_shard(&self, adapter: &str) -> usize {
+        self.ring.shard_for(adapter)
+    }
+
+    /// A shard's registry clone (shared store, per-shard resident LRU).
+    pub fn registry(&self, shard: usize) -> &AdapterRegistry {
+        &self.shards[shard].server.registry
+    }
+
+    /// Route and submit one request through the target shard's
+    /// admission control. Cold adapters go to their home shard; hot
+    /// adapters go to the least-pending member of their replica set.
+    pub fn submit(&mut self, req: Request) -> Result<(), ShedReason> {
+        let shard = self.route(&req.adapter);
+        self.shards[shard].server.submit(req)
+    }
+
+    fn route(&mut self, adapter: &str) -> usize {
+        let home = self.ring.shard_for(adapter);
+        if self.cfg.replicas > 1 && self.hot.contains(adapter) {
+            let best = self
+                .ring
+                .replicas_for(adapter, self.cfg.replicas)
+                .into_iter()
+                .min_by_key(|&s| self.shards[s].server.sched.pending())
+                .unwrap_or(home);
+            if best != home {
+                self.replica_routes += 1;
+            }
+            return best;
+        }
+        home
+    }
+
+    /// Promote adapters whose fleet-wide released count crossed
+    /// `hot_threshold` into the (sticky) hot set. Returns the number of
+    /// new promotions.
+    pub fn promote_hot(&mut self) -> usize {
+        let mut released: BTreeMap<String, u64> = BTreeMap::new();
+        for shard in &self.shards {
+            for (id, n) in &shard.server.sched.stats().released_per_adapter {
+                *released.entry(id.clone()).or_default() += n;
+            }
+        }
+        let mut promoted = 0;
+        for (id, n) in released {
+            if n >= self.cfg.hot_threshold && self.hot.insert(id) {
+                promoted += 1;
+            }
+        }
+        self.hot_promotions += promoted as u64;
+        promoted
+    }
+
+    /// Steal queued work from the most- to the least-loaded shard while
+    /// their pending gap exceeds `steal_margin`. Bounded passes; whole
+    /// newest-first runs of one adapter's queue move per steal
+    /// ([`super::scheduler::Scheduler::steal_newest`] →
+    /// [`super::scheduler::Scheduler::inject`]), so requests are
+    /// conserved. Returns the number of requests moved.
+    pub fn rebalance(&mut self) -> usize {
+        let mut moved = 0;
+        for _ in 0..self.shards.len() * 2 {
+            let pending: Vec<usize> =
+                self.shards.iter().map(|s| s.server.sched.pending()).collect();
+            let victim = (0..pending.len()).max_by_key(|&i| pending[i]).unwrap_or(0);
+            let thief = (0..pending.len()).min_by_key(|&i| pending[i]).unwrap_or(0);
+            let gap = pending[victim].saturating_sub(pending[thief]);
+            if victim == thief || gap <= self.cfg.steal_margin {
+                break;
+            }
+            let cap = self.cfg.steal_max.min((gap / 2).max(1));
+            let Some((adapter, reqs)) = self.shards[victim].server.sched.steal_newest(cap) else {
+                break;
+            };
+            let n = reqs.len();
+            self.shards[thief].server.sched.inject(&adapter, reqs);
+            self.steals += 1;
+            self.stolen_requests += n as u64;
+            moved += n;
+        }
+        moved
+    }
+
+    /// One fleet pump: promote the hot set, rebalance, then pump every
+    /// shard's pool. Responses from all shards stream through
+    /// `on_response`; a failed batch on one shard does not block the
+    /// others (first error returned, like [`Server::pump_pool`]).
+    pub fn pump(&mut self, now: Instant, mut on_response: impl FnMut(Response)) -> Result<()> {
+        self.promote_hot();
+        self.rebalance();
+        let workers = self.workers_per_shard;
+        let mut first_err = None;
+        for shard in &mut self.shards {
+            if let Err(e) = shard.server.pump_pool(&shard.engine, now, workers, &mut on_response)
+            {
+                first_err = first_err.or(Some(e));
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Total requests pending across all shards.
+    pub fn pending(&self) -> usize {
+        self.shards.iter().map(|s| s.server.sched.pending()).sum()
+    }
+
+    /// Drain every shard to completion: pump until no requests remain.
+    pub fn drain(&mut self, now: Instant, mut on_response: impl FnMut(Response)) -> Result<()> {
+        while self.pending() > 0 {
+            self.pump(now, &mut on_response)?;
+        }
+        Ok(())
+    }
+
+    /// One consistent [`FleetSnapshot`]: per-shard [`StatsSnapshot`]s
+    /// plus the fleet-level routing/stealing counters and the (single,
+    /// shared) store's paging stats.
+    pub fn snapshot(&self) -> FleetSnapshot {
+        FleetSnapshot {
+            shards: self.shards.iter().map(|s| s.server.snapshot()).collect(),
+            hot: self.hot.len(),
+            hot_promotions: self.hot_promotions,
+            replica_routes: self.replica_routes,
+            steals: self.steals,
+            stolen_requests: self.stolen_requests,
+            // Every shard's registry shares one store; report it once.
+            store: self.shards.first().and_then(|s| s.server.registry.store_stats()),
+        }
+    }
+}
+
+/// Point-in-time fleet statistics: per-shard snapshots + fleet-level
+/// counters. The shared store is reported once, not per shard.
+#[derive(Clone, Debug)]
+pub struct FleetSnapshot {
+    pub shards: Vec<StatsSnapshot>,
+    /// Hot-set size at snapshot time.
+    pub hot: usize,
+    pub hot_promotions: u64,
+    pub replica_routes: u64,
+    pub steals: u64,
+    pub stolen_requests: u64,
+    pub store: Option<StoreStats>,
+}
+
+impl FleetSnapshot {
+    pub fn served(&self) -> u64 {
+        self.shards.iter().map(|s| s.server.served).sum()
+    }
+
+    pub fn shed(&self) -> u64 {
+        self.shards.iter().map(|s| s.sched.shed()).sum()
+    }
+
+    /// Steady-state resident memory: per-shard resident adapter params
+    /// + per-shard merged weight buffers + the shared store's page
+    /// cache (once).
+    pub fn resident_bytes(&self) -> u64 {
+        let shards: u64 = self
+            .shards
+            .iter()
+            .map(|s| s.server.resident_weight_bytes + s.resident_param_bytes)
+            .sum();
+        shards + self.store.map(|st| st.resident_bytes as u64).unwrap_or(0)
+    }
+
+    /// Fleet-wide merged view: one [`StatsSnapshot`] with every
+    /// counter summed across shards (latency samples concatenated, so
+    /// percentiles and fairness are fleet-wide). The store appears once.
+    pub fn merged(&self) -> StatsSnapshot {
+        let mut out = StatsSnapshot {
+            server: Default::default(),
+            sched: Default::default(),
+            resident_param_bytes: 0,
+            store: self.store,
+        };
+        for s in &self.shards {
+            out.server.absorb(&s.server);
+            out.sched.absorb(&s.sched);
+            out.resident_param_bytes += s.resident_param_bytes;
+        }
+        out
+    }
+
+    /// Per-shard requests/s over a wall-clock interval.
+    pub fn shard_req_per_s(&self, dt_secs: f64) -> Vec<f64> {
+        self.shards.iter().map(|s| s.req_per_s(dt_secs)).collect()
+    }
+
+    /// BENCH-JSON view: the merged scenario row (stable field names
+    /// from [`StatsSnapshot::scenario_json`]) extended with the
+    /// fleet-level counters and the per-shard req/s vector.
+    pub fn scenario_json(&self, scenario: &str, dt_secs: f64) -> Value {
+        let mut v = self.merged().scenario_json(scenario, dt_secs);
+        if let Value::Obj(fields) = &mut v {
+            let per_shard =
+                Value::arr(self.shard_req_per_s(dt_secs).into_iter().map(Value::num).collect());
+            for (k, val) in [
+                ("shards", Value::num(self.shards.len() as f64)),
+                ("shard_req_per_s", per_shard),
+                ("hot_set", Value::num(self.hot as f64)),
+                ("hot_promotions", Value::num(self.hot_promotions as f64)),
+                ("replica_routes", Value::num(self.replica_routes as f64)),
+                ("steals", Value::num(self.steals as f64)),
+                ("stolen_requests", Value::num(self.stolen_requests as f64)),
+                ("fleet_resident_bytes", Value::num(self.resident_bytes() as f64)),
+            ] {
+                fields.insert(k.to_string(), val);
+            }
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::StrategyKind;
+    use crate::coordinator::registry::AdapterProvisioner;
+
+    fn dims() -> ModelDims {
+        ModelDims { d_model: 8, d_ff: 16, n_layers: 1 }
+    }
+
+    fn fleet(shards: usize, cfg: FleetCfg) -> ShardedFleet {
+        let d = dims();
+        let mut registry = AdapterRegistry::new();
+        registry.set_provisioner(AdapterProvisioner::new("ether_n4", "host", d, 7).unwrap());
+        let base = vec![0.01f32; base_layout_for(d).total];
+        ShardedFleet::host(registry, d, base, FleetCfg { shards, ..cfg }).unwrap()
+    }
+
+    fn req(i: u64, adapter: &str, t: Instant) -> Request {
+        Request { id: i, adapter: adapter.into(), prompt: vec![i as i32], max_new: 2, enqueued: t }
+    }
+
+    #[test]
+    fn ring_distributes_and_is_deterministic() {
+        let ring = ConsistentRing::new(4, 64);
+        let mut counts = [0usize; 4];
+        for i in 0..4000 {
+            counts[ring.shard_for(&format!("user{i}"))] += 1;
+        }
+        for (s, &c) in counts.iter().enumerate() {
+            assert!(c > 400, "shard {s} starved: {counts:?}");
+        }
+        let ring2 = ConsistentRing::new(4, 64);
+        assert_eq!(ring.shard_for("userX"), ring2.shard_for("userX"));
+    }
+
+    #[test]
+    fn replicas_are_distinct_and_start_home() {
+        let ring = ConsistentRing::new(4, 64);
+        for i in 0..64 {
+            let key = format!("user{i}");
+            let reps = ring.replicas_for(&key, 3);
+            assert_eq!(reps[0], ring.shard_for(&key));
+            let uniq: BTreeSet<_> = reps.iter().collect();
+            assert_eq!(uniq.len(), reps.len(), "{reps:?}");
+        }
+        // Replica count clamps to the shard count.
+        assert_eq!(ring.replicas_for("u", 99).len(), 4);
+    }
+
+    #[test]
+    fn fleet_serves_all_and_counts_per_shard() {
+        let mut f = fleet(
+            3,
+            FleetCfg {
+                policy: ExecutionPolicy::Static(StrategyKind::OnTheFly),
+                ..Default::default()
+            },
+        );
+        let t = Instant::now();
+        for i in 0..48u64 {
+            f.submit(req(i, &format!("user{}", i % 16), t)).unwrap();
+        }
+        let mut ids = vec![];
+        f.drain(t + std::time::Duration::from_millis(50), |r| ids.push(r.id)).unwrap();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..48).collect::<Vec<_>>());
+        let snap = f.snapshot();
+        assert_eq!(snap.served(), 48);
+        assert_eq!(snap.shards.len(), 3);
+        let total: u64 = snap.shards.iter().map(|s| s.server.served).sum();
+        assert_eq!(total, 48);
+        assert_eq!(snap.merged().server.served, 48);
+    }
+
+    #[test]
+    fn hot_promotion_enables_replica_routing() {
+        let mut f = fleet(
+            4,
+            FleetCfg {
+                hot_threshold: 4,
+                replicas: 2,
+                policy: ExecutionPolicy::Static(StrategyKind::OnTheFly),
+                ..Default::default()
+            },
+        );
+        let t = Instant::now();
+        // Hammer one adapter past the threshold across several pumps.
+        let mut id = 0u64;
+        for _ in 0..4 {
+            for _ in 0..8 {
+                f.submit(req(id, "celebrity", t)).unwrap();
+                id += 1;
+            }
+            f.drain(t + std::time::Duration::from_millis(50), |_| {}).unwrap();
+        }
+        f.promote_hot();
+        assert!(f.hot.contains("celebrity"), "released count should promote");
+        assert!(f.snapshot().hot_promotions >= 1);
+        // Load the home shard so the replica route is taken.
+        let home = f.home_shard("celebrity");
+        for i in 0..16 {
+            f.shards[home]
+                .server
+                .submit(req(9000 + i, &format!("filler{i}"), t))
+                .unwrap();
+        }
+        let before = f.replica_routes;
+        for i in 0..4 {
+            f.submit(req(9900 + i, "celebrity", t)).unwrap();
+        }
+        assert!(f.replica_routes > before, "hot adapter should route off-home");
+    }
+
+    #[test]
+    fn rebalance_conserves_requests() {
+        let mut f = fleet(
+            2,
+            FleetCfg {
+                steal_margin: 2,
+                policy: ExecutionPolicy::Static(StrategyKind::OnTheFly),
+                ..Default::default()
+            },
+        );
+        let t = Instant::now();
+        // Submit everything directly to shard 0 to force a skew.
+        for i in 0..32u64 {
+            f.shards[0].server.submit(req(i, &format!("user{}", i % 4), t)).unwrap();
+        }
+        let moved = f.rebalance();
+        assert!(moved > 0, "gap of 32 must trigger stealing");
+        assert_eq!(f.pending(), 32, "stealing conserves pending requests");
+        let snap = f.snapshot();
+        let out: u64 = snap.shards.iter().map(|s| s.sched.stolen_out).sum();
+        let inn: u64 = snap.shards.iter().map(|s| s.sched.stolen_in).sum();
+        assert_eq!(out, inn);
+        assert!(snap.steals > 0);
+        // Every request still serves exactly once.
+        let mut ids = vec![];
+        f.drain(t + std::time::Duration::from_millis(50), |r| ids.push(r.id)).unwrap();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn snapshot_json_has_fleet_fields() {
+        let mut f = fleet(
+            2,
+            FleetCfg {
+                policy: ExecutionPolicy::Static(StrategyKind::OnTheFly),
+                ..Default::default()
+            },
+        );
+        let t = Instant::now();
+        for i in 0..8u64 {
+            f.submit(req(i, &format!("user{i}"), t)).unwrap();
+        }
+        f.drain(t + std::time::Duration::from_millis(50), |_| {}).unwrap();
+        let json = f.snapshot().scenario_json("zipf-1M", 1.0).dump();
+        for field in [
+            "\"scenario\"", "\"served\"", "\"req_per_s\"", "\"shards\"",
+            "\"shard_req_per_s\"", "\"steals\"", "\"fleet_resident_bytes\"",
+        ] {
+            assert!(json.contains(field), "missing {field} in {json}");
+        }
+    }
+}

@@ -12,11 +12,14 @@
 //! | `zipf`    | `1/rank^s` (hot-head)         | exponential inter-arrivals |
 //! | `bursty`  | flat                          | bursts of `burst` requests at one instant, `gap_us` apart |
 //! | `churn`   | small working set that rotates every `dwell` requests | exponential inter-arrivals |
+//! | `zipf-1M` | `1/rank^s` over a **million ids** | exponential inter-arrivals |
 //!
 //! `zipf` stresses fairness (one hot adapter vs. a cold tail), `bursty`
-//! stresses admission control / shedding, and `churn` keeps changing the
+//! stresses admission control / shedding, `churn` keeps changing the
 //! resident adapter — the worst case for the in-place
-//! [`super::registry::SwapSlot`] serving path.
+//! [`super::registry::SwapSlot`] serving path — and `zipf-1M` is the
+//! fleet-scale scenario: an adapter id space far larger than RAM,
+//! served through [`super::fleet::ShardedFleet`] over the paged store.
 //!
 //! Everything derives from [`crate::util::rng::Rng`] with an explicit
 //! seed: the same [`LoadGenCfg`] always yields the same trace, bit for
@@ -62,6 +65,12 @@ pub enum Scenario {
     /// slides one adapter every `dwell` requests — constant adapter
     /// turnover, the swap-path stress.
     Churn { working_set: usize, dwell: usize },
+    /// The fleet-scale scenario: Zipf popularity over a **million-id**
+    /// adapter space (the bench shrinks it in quick mode). Same math as
+    /// [`Scenario::Zipf`] with a flatter default exponent — the hot
+    /// head fits in memory while the cold tail exercises the paged
+    /// store's admission-on-first-request path.
+    Zipf1M { exponent: f64 },
 }
 
 impl Scenario {
@@ -72,11 +81,14 @@ impl Scenario {
             Scenario::Zipf { .. } => "zipf",
             Scenario::Bursty { .. } => "bursty",
             Scenario::Churn { .. } => "churn",
+            Scenario::Zipf1M { .. } => "zipf-1M",
         }
     }
 
     /// The canonical four-scenario sweep the `serving_throughput` bench
-    /// runs (default parameters).
+    /// runs through a single server (default parameters). `zipf-1M`
+    /// is deliberately not in this sweep — it runs through the sharded
+    /// fleet instead; see [`Scenario::catalog`].
     pub fn all() -> [Scenario; 4] {
         [
             Scenario::Uniform,
@@ -85,16 +97,23 @@ impl Scenario {
             Scenario::Churn { working_set: 2, dwell: 16 },
         ]
     }
+
+    /// Every scenario with its default parameters — the CLI parse
+    /// space: [`Scenario::all`] plus the fleet-scale `zipf-1M`.
+    pub fn catalog() -> [Scenario; 5] {
+        let [a, b, c, d] = Scenario::all();
+        [a, b, c, d, Scenario::Zipf1M { exponent: 1.05 }]
+    }
 }
 
 /// Parse a CLI scenario name into its default-parameter [`Scenario`].
 pub fn parse_scenario(s: &str) -> Result<Scenario> {
-    for sc in Scenario::all() {
+    for sc in Scenario::catalog() {
         if sc.name() == s {
             return Ok(sc);
         }
     }
-    bail!("unknown scenario {s:?} (expected uniform | zipf | bursty | churn)")
+    bail!("unknown scenario {s:?} (expected uniform | zipf | bursty | churn | zipf-1M)")
 }
 
 /// Trace generation knobs.
@@ -153,7 +172,7 @@ pub fn generate(cfg: &LoadGenCfg) -> Vec<Arrival> {
     let mut rng = Rng::new(cfg.seed);
     // Zipf CDF over adapter ranks (adapter 0 = hottest).
     let zipf_cdf: Vec<f64> = match cfg.scenario {
-        Scenario::Zipf { exponent } => {
+        Scenario::Zipf { exponent } | Scenario::Zipf1M { exponent } => {
             let weights: Vec<f64> =
                 (0..cfg.n_adapters).map(|r| 1.0 / ((r + 1) as f64).powf(exponent)).collect();
             let total: f64 = weights.iter().sum();
@@ -173,9 +192,12 @@ pub fn generate(cfg: &LoadGenCfg) -> Vec<Arrival> {
     for i in 0..cfg.n_requests {
         let adapter = match cfg.scenario {
             Scenario::Uniform | Scenario::Bursty { .. } => rng.below(cfg.n_adapters),
-            Scenario::Zipf { .. } => {
+            Scenario::Zipf { .. } | Scenario::Zipf1M { .. } => {
+                // Binary search the CDF: first rank whose cumulative
+                // mass exceeds u (equivalent to the old linear scan —
+                // mandatory at zipf-1M's million-entry CDF).
                 let u = rng.f64();
-                zipf_cdf.iter().position(|&c| u < c).unwrap_or(cfg.n_adapters - 1)
+                zipf_cdf.partition_point(|&c| c <= u).min(cfg.n_adapters - 1)
             }
             Scenario::Churn { working_set, dwell } => {
                 let ws = working_set.clamp(1, cfg.n_adapters);
@@ -307,9 +329,40 @@ mod tests {
 
     #[test]
     fn scenario_parsing_roundtrips() {
-        for sc in Scenario::all() {
+        for sc in Scenario::catalog() {
             assert_eq!(parse_scenario(sc.name()).unwrap().name(), sc.name());
         }
         assert!(parse_scenario("poisson").is_err());
+        // The single-server sweep stays four wide (bench indexes it);
+        // the catalog adds exactly the fleet scenario.
+        assert_eq!(Scenario::all().len(), 4);
+        assert_eq!(Scenario::catalog()[4].name(), "zipf-1M");
+    }
+
+    #[test]
+    fn zipf_1m_matches_zipf_math_and_scales() {
+        // Same exponent → identical traces: zipf-1M is zipf's math over
+        // a bigger id space, nothing more.
+        let zipf = LoadGenCfg {
+            n_adapters: 64,
+            n_requests: 512,
+            scenario: Scenario::Zipf { exponent: 1.05 },
+            ..Default::default()
+        };
+        let zipf1m =
+            LoadGenCfg { scenario: Scenario::Zipf1M { exponent: 1.05 }, ..zipf };
+        assert_eq!(generate(&zipf), generate(&zipf1m));
+        // Large id spaces stay fast (binary-searched CDF) and hit the
+        // long tail: far more distinct adapters than a hot head.
+        let wide = LoadGenCfg {
+            n_adapters: 1 << 20,
+            n_requests: 2000,
+            scenario: Scenario::Zipf1M { exponent: 1.05 },
+            ..Default::default()
+        };
+        let trace = generate(&wide);
+        let distinct: std::collections::BTreeSet<usize> =
+            trace.iter().map(|a| a.adapter).collect();
+        assert!(distinct.len() > 500, "flat zipf should spread: {}", distinct.len());
     }
 }

@@ -61,9 +61,15 @@
 //!   (single-threaded), [`server::Server::pump_pool`] (concurrent —
 //!   every released batch executes on a scoped pool worker), and
 //!   [`server::Server::serve`] (threaded, lossless backpressure).
+//! * [`fleet`] — the sharded serving tier above all of this:
+//!   [`fleet::ShardedFleet`] consistent-hashes adapter ids across N
+//!   server+engine shards over one shared paged adapter store
+//!   ([`crate::peft::store::PagedStore`]), replicates the hot set, and
+//!   steals work across shards; [`fleet::FleetSnapshot`] merges every
+//!   shard's [`server::StatsSnapshot`] into one report.
 //! * [`loadgen`] — deterministic synthetic traffic (uniform / Zipf /
-//!   bursty / adapter-churn) for the `serving_throughput` bench and the
-//!   scheduling determinism tests.
+//!   bursty / adapter-churn / the million-id `zipf-1M`) for the
+//!   `serving_throughput` bench and the scheduling determinism tests.
 //! * [`batcher`] — the original single-lane dynamic batcher, kept as the
 //!   minimal building block (and for its conservation property tests);
 //!   the scheduler supersedes it on the serving path.
@@ -140,6 +146,7 @@
 
 pub mod batcher;
 pub mod engine;
+pub mod fleet;
 pub mod loadgen;
 pub mod registry;
 pub mod scheduler;
@@ -149,6 +156,9 @@ pub use batcher::{Batcher, BatcherCfg, Request};
 pub use engine::{
     AdapterEngine, ExecutionPolicy, ExecutionStrategy, StrategyCounters, StrategyKind,
 };
-pub use registry::{AdapterRegistry, MergeEngine, MergedCache, SwapMode, SwapSlot};
+pub use fleet::{ConsistentRing, FleetCfg, FleetSnapshot, ShardedFleet};
+pub use registry::{
+    AdapterProvisioner, AdapterRegistry, MergeEngine, MergedCache, SwapMode, SwapSlot,
+};
 pub use scheduler::{SchedStats, Scheduler, SchedulerCfg, ShedReason};
-pub use server::{Server, ServerStats};
+pub use server::{Server, ServerStats, StatsSnapshot};

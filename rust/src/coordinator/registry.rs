@@ -19,6 +19,7 @@ use anyhow::{anyhow, Result};
 
 use crate::peft::apply::{peft_layout_for, AdapterRef, MergePlan, ModelDims};
 use crate::peft::flat::Layout;
+use crate::peft::store::{PagedStore, StoreStats};
 use crate::peft::{registry as ops, MethodSpec};
 
 /// One registered adapter: the tiny trainable vector plus its identity.
@@ -30,13 +31,112 @@ pub struct AdapterEntry {
     pub peft: Arc<Vec<f32>>,
 }
 
+/// Deterministic lazy materializer for fleet-scale registries
+/// (admission-on-first-request). An adapter's params are a pure function
+/// of `(seed, id)` — any shard, any process, any time regenerates the
+/// identical vector — so a million-id space costs nothing until an id is
+/// actually requested.
+#[derive(Clone, Debug)]
+pub struct AdapterProvisioner {
+    method: String,
+    cfg: String,
+    total: usize,
+    seed: u64,
+}
+
+impl AdapterProvisioner {
+    pub fn new(method: &str, cfg: &str, dims: ModelDims, seed: u64) -> Result<AdapterProvisioner> {
+        let spec = MethodSpec::parse(method)?;
+        let layout = peft_layout_for(dims, &spec);
+        Ok(AdapterProvisioner {
+            method: method.to_string(),
+            cfg: cfg.to_string(),
+            total: layout.total,
+            seed,
+        })
+    }
+
+    /// Materialize `id`'s schema-correct parameter vector.
+    pub fn provision(&self, id: &str) -> AdapterEntry {
+        let seed = self.seed ^ crate::util::rng::hash64(id.as_bytes());
+        let mut rng = crate::util::rng::Rng::new(seed);
+        AdapterEntry {
+            id: id.to_string(),
+            method: self.method.clone(),
+            cfg: self.cfg.clone(),
+            peft: Arc::new(rng.normal_vec(self.total, 0.5)),
+        }
+    }
+
+    pub fn params_per_adapter(&self) -> usize {
+        self.total
+    }
+}
+
+/// Resident (in-memory) adapter set: LRU order, back = hottest.
+#[derive(Clone, Default)]
+struct Resident {
+    map: BTreeMap<String, AdapterEntry>,
+    order: VecDeque<String>,
+}
+
+impl Resident {
+    fn touch(&mut self, id: &str) {
+        if let Some(pos) = self.order.iter().position(|x| x == id) {
+            self.order.remove(pos);
+        }
+        self.order.push_back(id.to_string());
+    }
+
+    fn admit(&mut self, entry: AdapterEntry, cap: usize) {
+        let id = entry.id.clone();
+        self.map.insert(id.clone(), entry);
+        self.touch(&id);
+        while self.map.len() > cap.max(1) {
+            if let Some(cold) = self.order.pop_front() {
+                self.map.remove(&cold);
+            } else {
+                break;
+            }
+        }
+    }
+}
+
 /// Store of per-user adapters. The whole point of ETHER-style PEFT at
 /// scale: a `small`-config ETHER adapter is ~9 KB of f32 — a million
-/// users fit in host RAM. Cloning shares the parameter `Arc`s, so a
-/// registry copy costs one refcount bump per adapter.
-#[derive(Clone, Default)]
+/// users fit on disk trivially, and only the working set needs RAM.
+///
+/// Three tiers, consulted in order by [`AdapterRegistry::get`]:
+///
+/// 1. **resident** — an LRU-bounded in-memory map (cap
+///    `resident_cap`, unbounded for plain registries);
+/// 2. **store** — an optional [`PagedStore`] the registry reads through
+///    (page-in on miss, write-through on register), so the resident set
+///    stays bounded regardless of fleet size;
+/// 3. **provisioner** — an optional [`AdapterProvisioner`] that
+///    deterministically materializes ids on first request
+///    (admission-on-first-request for synthetic fleets).
+///
+/// Cloning shares the store/provisioner `Arc`s and snapshots the
+/// resident set (parameter `Arc`s shared) — shards of a fleet clone one
+/// registry and keep independent LRU heat but one backing store.
+#[derive(Default)]
 pub struct AdapterRegistry {
-    adapters: BTreeMap<String, AdapterEntry>,
+    resident: Mutex<Resident>,
+    store: Option<Arc<PagedStore>>,
+    provisioner: Option<Arc<AdapterProvisioner>>,
+    resident_cap: Option<usize>,
+}
+
+impl Clone for AdapterRegistry {
+    fn clone(&self) -> AdapterRegistry {
+        AdapterRegistry {
+            resident: Mutex::new(self.lock().clone()),
+            store: self.store.clone(),
+            provisioner: self.provisioner.clone(),
+            resident_cap: self.resident_cap,
+        }
+    }
 }
 
 impl AdapterRegistry {
@@ -44,44 +144,144 @@ impl AdapterRegistry {
         Self::default()
     }
 
+    /// A registry that reads through `store`, keeping at most
+    /// `resident_cap` adapters in memory.
+    pub fn with_store(store: Arc<PagedStore>, resident_cap: usize) -> Self {
+        AdapterRegistry {
+            resident: Mutex::new(Resident::default()),
+            store: Some(store),
+            provisioner: None,
+            resident_cap: Some(resident_cap.max(1)),
+        }
+    }
+
+    /// Install an [`AdapterProvisioner`]: unknown ids materialize
+    /// deterministically on first request instead of erroring.
+    pub fn set_provisioner(&mut self, p: AdapterProvisioner) {
+        self.provisioner = Some(Arc::new(p));
+    }
+
+    /// Bound the resident set (LRU eviction beyond `cap`).
+    pub fn set_resident_cap(&mut self, cap: usize) {
+        self.resident_cap = Some(cap.max(1));
+    }
+
+    fn cap(&self) -> usize {
+        self.resident_cap.unwrap_or(usize::MAX)
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Resident> {
+        self.resident.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
     pub fn register(&mut self, id: &str, method: &str, cfg: &str, peft: Vec<f32>) {
-        self.adapters.insert(
-            id.to_string(),
-            AdapterEntry {
-                id: id.to_string(),
-                method: method.to_string(),
-                cfg: cfg.to_string(),
-                peft: Arc::new(peft),
-            },
-        );
+        let entry = AdapterEntry {
+            id: id.to_string(),
+            method: method.to_string(),
+            cfg: cfg.to_string(),
+            peft: Arc::new(peft),
+        };
+        if let Some(store) = &self.store {
+            // Write-through; an eagerly-registered adapter must survive
+            // resident eviction. Store put only fails for records larger
+            // than a page — surface that loudly at registration time.
+            store
+                .put(id, method, cfg, &entry.peft)
+                .expect("adapter record exceeds the store page size");
+        }
+        let cap = self.cap();
+        self.lock().admit(entry, cap);
     }
 
-    pub fn get(&self, id: &str) -> Result<&AdapterEntry> {
-        self.adapters.get(id).ok_or_else(|| anyhow!("unknown adapter {id:?}"))
+    /// Look up an adapter: resident hit (LRU-touched), else page in from
+    /// the store, else materialize via the provisioner (write-through to
+    /// the store), else `Err`. Returns an owned entry — the params are
+    /// behind an `Arc`, so this is a refcount bump, not a copy.
+    pub fn get(&self, id: &str) -> Result<AdapterEntry> {
+        let mut r = self.lock();
+        if let Some(e) = r.map.get(id) {
+            let e = e.clone();
+            r.touch(id);
+            return Ok(e);
+        }
+        if let Some(store) = &self.store {
+            if store.contains(id) {
+                // A corrupt/short-read record surfaces here as Err.
+                let rec = store.get(id)?;
+                let entry = AdapterEntry {
+                    id: rec.id,
+                    method: rec.method,
+                    cfg: rec.cfg,
+                    peft: Arc::new(rec.params),
+                };
+                r.admit(entry.clone(), self.cap());
+                return Ok(entry);
+            }
+        }
+        if let Some(p) = &self.provisioner {
+            let entry = p.provision(id);
+            if let Some(store) = &self.store {
+                store.put(id, &entry.method, &entry.cfg, &entry.peft)?;
+            }
+            r.admit(entry.clone(), self.cap());
+            return Ok(entry);
+        }
+        Err(anyhow!("unknown adapter {id:?}"))
     }
 
+    /// Number of **materialized** adapters (store index when backed,
+    /// resident set otherwise). Provisionable-but-never-requested ids
+    /// are not counted — the whole point is that they cost nothing.
     pub fn len(&self) -> usize {
-        self.adapters.len()
+        match &self.store {
+            Some(store) => store.len(),
+            None => self.lock().map.len(),
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.adapters.is_empty()
+        self.len() == 0
     }
 
-    pub fn ids(&self) -> impl Iterator<Item = &String> {
-        self.adapters.keys()
+    /// Resident adapter ids, sorted.
+    pub fn ids(&self) -> Vec<String> {
+        self.lock().map.keys().cloned().collect()
     }
 
-    /// Total parameter footprint across all adapters (for the capacity
-    /// tables in the serving bench).
+    /// Adapters currently resident in memory.
+    pub fn resident_len(&self) -> usize {
+        self.lock().map.len()
+    }
+
+    /// Bytes of adapter params held in memory right now (resident set
+    /// only — the store's page cache reports separately via
+    /// [`AdapterRegistry::store_stats`]).
+    pub fn resident_param_bytes(&self) -> usize {
+        self.lock().map.values().map(|e| e.peft.len() * 4).sum()
+    }
+
+    /// Paging counters of the backing store, if any.
+    pub fn store_stats(&self) -> Option<StoreStats> {
+        self.store.as_ref().map(|s| s.stats())
+    }
+
+    /// Total parameter footprint across all materialized adapters (for
+    /// the capacity tables in the serving bench).
     pub fn total_params(&self) -> usize {
-        self.adapters.values().map(|a| a.peft.len()).sum()
+        match &self.store {
+            Some(store) => store.total_params(),
+            None => self.lock().map.values().map(|a| a.peft.len()).sum(),
+        }
     }
 
     /// Register a fleet of `n` random adapters named `user0..user{n-1}`
     /// with schema-correct parameter vectors for `method` at `dims` —
     /// the shared fixture for the serving bench, the load-generator
     /// scenarios, and the scheduler tests. Deterministic in `seed`.
+    ///
+    /// Eager: materializes all `n` vectors up front. Million-id fleets
+    /// should install an [`AdapterProvisioner`] instead and let ids
+    /// materialize on first request.
     pub fn register_fleet(
         &mut self,
         n: usize,

@@ -141,6 +141,12 @@ pub struct SchedStats {
     /// Per-adapter released counts — the raw material for fairness
     /// metrics ([`jain_fairness`]).
     pub released_per_adapter: BTreeMap<String, u64>,
+    /// Requests removed by [`Scheduler::steal_newest`] (fleet rebalance
+    /// victims).
+    pub stolen_out: u64,
+    /// Requests re-injected by [`Scheduler::inject`] (fleet rebalance
+    /// thieves). Not counted in `admitted` — the victim already did.
+    pub stolen_in: u64,
 }
 
 impl SchedStats {
@@ -169,6 +175,22 @@ impl SchedStats {
     pub fn release_fairness(&self) -> f64 {
         let counts: Vec<u64> = self.released_per_adapter.values().copied().collect();
         jain_fairness(&counts)
+    }
+
+    /// Merge another scheduler's stats into this one — the fleet-level
+    /// aggregation across shards. Counters (including the per-adapter
+    /// release map) add.
+    pub fn absorb(&mut self, other: &SchedStats) {
+        self.admitted += other.admitted;
+        self.shed_adapter_full += other.shed_adapter_full;
+        self.shed_global_full += other.shed_global_full;
+        self.batches += other.batches;
+        self.released += other.released;
+        self.stolen_out += other.stolen_out;
+        self.stolen_in += other.stolen_in;
+        for (a, n) in &other.released_per_adapter {
+            *self.released_per_adapter.entry(a.clone()).or_default() += n;
+        }
     }
 
     /// Cumulative requests released for one adapter (0 before any
@@ -374,6 +396,60 @@ impl Scheduler {
         (id.to_string(), batch)
     }
 
+    /// Remove up to `max_n` requests from the **back** of the longest
+    /// per-adapter queue — the fleet's work-stealing hook. Taking from
+    /// the back preserves FIFO order for everything the victim keeps
+    /// (the stolen suffix is the *newest* work, which would have waited
+    /// longest locally anyway). Returns `None` when nothing is queued.
+    ///
+    /// The caller is expected to hand the batch to a sibling scheduler
+    /// via [`Scheduler::inject`]; the `stolen_out`/`stolen_in` counters
+    /// let conservation be audited end-to-end.
+    pub fn steal_newest(&mut self, max_n: usize) -> Option<(String, Vec<Request>)> {
+        // Longest queue wins; ties break to the lexicographically first
+        // adapter so replays are deterministic.
+        let victim = self
+            .queues
+            .iter()
+            .max_by(|(ida, a), (idb, b)| a.q.len().cmp(&b.q.len()).then(idb.cmp(ida)))
+            .map(|(id, _)| id.clone())?;
+        let aq = self.queues.get_mut(&victim).expect("victim queue exists");
+        let take = aq.q.len().min(max_n.max(1));
+        let stolen: Vec<Request> = aq.q.split_off(aq.q.len() - take).into();
+        self.pending -= stolen.len();
+        self.stats.stolen_out += stolen.len() as u64;
+        if aq.q.is_empty() {
+            self.queues.remove(&victim);
+            self.ring.retain(|x| x != &victim);
+        }
+        self.debug_check();
+        Some((victim, stolen))
+    }
+
+    /// Append requests stolen from a sibling scheduler to the back of
+    /// `adapter`'s queue, **bypassing admission accounting and bounds**:
+    /// the requests were already admitted (and counted) at the victim,
+    /// so conservation demands they cannot be shed here. The thief's
+    /// pending total may transiently exceed `max_pending` by at most the
+    /// caller's steal cap; [`Scheduler::at_capacity`] then applies
+    /// backpressure until it drains.
+    pub fn inject(&mut self, adapter: &str, reqs: Vec<Request>) {
+        if reqs.is_empty() {
+            return;
+        }
+        let aq = self
+            .queues
+            .entry(adapter.to_string())
+            .or_insert_with(|| AdapterQueue { q: VecDeque::new(), deficit: 0 });
+        if aq.q.is_empty() {
+            self.ring.push_back(adapter.to_string());
+        }
+        self.pending += reqs.len();
+        self.stats.stolen_in += reqs.len() as u64;
+        aq.q.extend(reqs);
+        self.debug_check();
+    }
+
     /// Debug invariant: the pending counter equals the sum of queue
     /// lengths, no queue is empty, and each queued adapter appears in the
     /// DRR ring exactly once.
@@ -496,6 +572,58 @@ mod tests {
             n += batch.len();
         }
         assert_eq!(n, 1);
+    }
+
+    #[test]
+    fn steal_takes_newest_from_longest_and_inject_conserves() {
+        let mut victim = Scheduler::new(SchedulerCfg {
+            max_batch: 4,
+            max_wait: Duration::from_secs(60),
+            ..Default::default()
+        });
+        let t = Instant::now();
+        for i in 0..5 {
+            victim.offer(req(i, "hot", t)).unwrap();
+        }
+        victim.offer(req(10, "cold", t)).unwrap();
+        // Longest queue ("hot") loses its newest suffix.
+        let (adapter, stolen) = victim.steal_newest(2).unwrap();
+        assert_eq!(adapter, "hot");
+        assert_eq!(stolen.iter().map(|r| r.id).collect::<Vec<_>>(), vec![3, 4]);
+        assert_eq!(victim.pending(), 4);
+        assert_eq!(victim.stats().stolen_out, 2);
+        // Victim FIFO preserved for the kept prefix.
+        let drained = victim.drain_all();
+        let hot_ids: Vec<u64> = drained
+            .iter()
+            .filter(|(a, _)| a == "hot")
+            .flat_map(|(_, b)| b.iter().map(|r| r.id))
+            .collect();
+        assert_eq!(hot_ids, vec![0, 1, 2]);
+
+        // Thief takes them without admission accounting.
+        let mut thief = Scheduler::new(SchedulerCfg::default());
+        thief.inject(&adapter, stolen);
+        assert_eq!(thief.pending(), 2);
+        assert_eq!(thief.stats().stolen_in, 2);
+        assert_eq!(thief.stats().admitted, 0);
+        let (_, batch) = thief.pop_ready(t + Duration::from_secs(120)).unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![3, 4]);
+    }
+
+    #[test]
+    fn steal_drains_queue_cleanly() {
+        let mut s = Scheduler::new(SchedulerCfg::default());
+        let t = Instant::now();
+        s.offer(req(0, "a", t)).unwrap();
+        let (_, stolen) = s.steal_newest(100).unwrap();
+        assert_eq!(stolen.len(), 1);
+        assert_eq!(s.pending(), 0);
+        assert_eq!(s.active_adapters(), 0);
+        assert!(s.steal_newest(1).is_none());
+        // Empty inject is a no-op.
+        s.inject("a", vec![]);
+        assert_eq!(s.pending(), 0);
     }
 
     #[test]

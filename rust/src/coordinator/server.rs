@@ -28,8 +28,11 @@ use anyhow::Result;
 use super::batcher::Request;
 use super::engine::ExecutionStrategy;
 use super::registry::AdapterRegistry;
-use super::scheduler::{Scheduler, SchedulerCfg, ShedReason};
+use super::scheduler::{SchedStats, Scheduler, SchedulerCfg, ShedReason};
+use crate::peft::store::StoreStats;
+use crate::util::json::Value;
 use crate::util::pool;
+use crate::util::runtimecfg::RuntimeCfg;
 
 /// A completed generation.
 #[derive(Clone, Debug)]
@@ -47,11 +50,7 @@ pub struct Response {
 /// further through `parallel_for_chunks`, so this bounds concurrent
 /// *batches*, not total compute threads.
 pub fn dispatch_workers() -> usize {
-    std::env::var("ETHER_SCHED_WORKERS")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
-        .map(|n| n.max(1))
-        .unwrap_or_else(pool::default_threads)
+    RuntimeCfg::get().sched_workers()
 }
 
 /// Serving statistics.
@@ -77,6 +76,13 @@ pub struct ServerStats {
     /// Requests shed by scheduler admission control (mirror of
     /// [`super::scheduler::SchedStats::shed`]).
     pub shed: u64,
+    /// Real merge executions performed by the backend's merge engine
+    /// (mirror of [`ExecutionStrategy::merge_executions`]) — distinct
+    /// from `merge_misses`, which counts cache probes.
+    pub merges: u64,
+    /// Bytes of merged/base weights the backend holds resident (mirror
+    /// of [`ExecutionStrategy::resident_weight_bytes`]).
+    pub resident_weight_bytes: u64,
     pub latencies_us: Vec<u64>,
     /// Latency samples split per adapter — the raw material for the
     /// fairness spread ([`ServerStats::fairness_spread_ms`]).
@@ -215,6 +221,97 @@ impl ServerStats {
         self.latencies_us.push(us);
         self.latencies_us_by_adapter.entry(adapter.to_string()).or_default().push(us);
     }
+
+    /// Merge another server's stats into this one — the fleet-level
+    /// aggregation (per-shard servers each keep their own stats).
+    /// Counters add, residuals take the max, resident bytes add (each
+    /// shard holds its own weights), and latency samples concatenate so
+    /// quantiles/fairness are computed over the whole fleet.
+    pub fn absorb(&mut self, other: &ServerStats) {
+        self.served += other.served;
+        self.batches += other.batches;
+        self.merge_hits += other.merge_hits;
+        self.merge_misses += other.merge_misses;
+        self.merge_swaps += other.merge_swaps;
+        self.swap_residual = self.swap_residual.max(other.swap_residual);
+        self.served_merged += other.served_merged;
+        self.served_onthefly += other.served_onthefly;
+        self.served_swap += other.served_swap;
+        self.policy_promotions += other.policy_promotions;
+        self.shed += other.shed;
+        self.merges += other.merges;
+        self.resident_weight_bytes += other.resident_weight_bytes;
+        self.latencies_us.extend_from_slice(&other.latencies_us);
+        for (a, v) in &other.latencies_us_by_adapter {
+            self.latencies_us_by_adapter.entry(a.clone()).or_default().extend_from_slice(v);
+        }
+    }
+}
+
+/// The unified stats surface: one snapshot merging the server-side
+/// counters ([`ServerStats`]), the scheduler's admission/release
+/// accounting ([`SchedStats`]), the registry's resident footprint, and
+/// — when the registry is store-backed — the paging counters
+/// ([`StoreStats`]). Benches and the serve/fleet commands read this one
+/// struct via [`Server::snapshot`] instead of reaching into three.
+#[derive(Clone, Debug)]
+pub struct StatsSnapshot {
+    pub server: ServerStats,
+    pub sched: SchedStats,
+    /// Bytes of adapter params resident in the registry.
+    pub resident_param_bytes: u64,
+    /// Paging counters of the registry's backing store, if any.
+    pub store: Option<StoreStats>,
+}
+
+impl StatsSnapshot {
+    /// Requests per second over a measured wall-clock interval.
+    pub fn req_per_s(&self, dt_secs: f64) -> f64 {
+        if dt_secs <= 0.0 {
+            0.0
+        } else {
+            self.server.served as f64 / dt_secs
+        }
+    }
+
+    /// Steady-state resident memory: backend weights + registry-resident
+    /// adapter params + the store's open page and page cache.
+    pub fn resident_bytes(&self) -> u64 {
+        self.server.resident_weight_bytes
+            + self.resident_param_bytes
+            + self.store.map(|s| s.resident_bytes as u64).unwrap_or(0)
+    }
+
+    /// One scenario row for `BENCH_*.json`. Field names are **stable**
+    /// (the CI perf trajectory diffs them): `scenario`, `served`,
+    /// `shed`, `req_per_s`, `p50_ms`, `p95_ms`, `shed_rate`,
+    /// `fairness_spread_ms`, `release_fairness_jain`, `merge_hit_rate`,
+    /// `merges`, `swaps`, `served_onthefly`. Store-backed snapshots add
+    /// `page_ins`, `page_outs`, and `resident_bytes`.
+    pub fn scenario_json(&self, scenario: &str, dt_secs: f64) -> Value {
+        let lat = self.server.latency_summary();
+        let mut fields = vec![
+            ("scenario", Value::s(scenario.to_string())),
+            ("served", Value::num(self.server.served as f64)),
+            ("shed", Value::num(self.sched.shed() as f64)),
+            ("req_per_s", Value::num(self.req_per_s(dt_secs))),
+            ("p50_ms", Value::num(lat.p50_ms())),
+            ("p95_ms", Value::num(lat.p95_ms())),
+            ("shed_rate", Value::num(self.sched.shed_rate())),
+            ("fairness_spread_ms", Value::num(self.server.fairness_spread_ms())),
+            ("release_fairness_jain", Value::num(self.sched.release_fairness())),
+            ("merge_hit_rate", Value::num(self.server.merge_hit_rate())),
+            ("merges", Value::num(self.server.merges as f64)),
+            ("swaps", Value::num(self.server.merge_swaps as f64)),
+            ("served_onthefly", Value::num(self.server.served_onthefly as f64)),
+        ];
+        if let Some(store) = &self.store {
+            fields.push(("page_ins", Value::num(store.page_ins as f64)));
+            fields.push(("page_outs", Value::num(store.page_outs as f64)));
+            fields.push(("resident_bytes", Value::num(self.resident_bytes() as f64)));
+        }
+        Value::obj(fields)
+    }
 }
 
 /// In-process serving coordinator over the adapter-aware [`Scheduler`].
@@ -252,7 +349,20 @@ impl Server {
         self.stats.served_onthefly = c.served_onthefly;
         self.stats.served_swap = c.served_swap;
         self.stats.policy_promotions = c.policy_promotions;
+        self.stats.merges = backend.merge_executions();
+        self.stats.resident_weight_bytes = backend.resident_weight_bytes() as u64;
         self.stats.shed = self.sched.stats().shed();
+    }
+
+    /// The unified stats accessor: server + scheduler + registry/store
+    /// counters in one consistent [`StatsSnapshot`].
+    pub fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            server: self.stats.clone(),
+            sched: self.sched.stats().clone(),
+            resident_param_bytes: self.registry.resident_param_bytes() as u64,
+            store: self.registry.store_stats(),
+        }
     }
 
     /// Feed the scheduler's cumulative released-request counter for
@@ -271,7 +381,7 @@ impl Server {
         mut on_response: impl FnMut(Response),
     ) -> Result<()> {
         while let Some((adapter_id, batch)) = self.sched.pop_ready(now) {
-            let adapter = self.registry.get(&adapter_id)?.clone();
+            let adapter = self.registry.get(&adapter_id)?;
             self.feed_traffic(backend, &adapter_id);
             let prompts: Vec<Vec<i32>> = batch.iter().map(|r| r.prompt.clone()).collect();
             let max_new = batch.iter().map(|r| r.max_new).max().unwrap_or(8);
@@ -328,7 +438,7 @@ impl Server {
                 match self.registry.get(&id) {
                     Ok(adapter) => {
                         self.feed_traffic(backend, &id);
-                        jobs.push((adapter.clone(), batch));
+                        jobs.push((adapter, batch));
                     }
                     Err(e) => first_err = first_err.or(Some(e)),
                 }
@@ -428,7 +538,7 @@ impl Server {
                 Err(mpsc::RecvTimeoutError::Disconnected) => {
                     // flush the remainder and exit
                     for (adapter_id, batch) in self.sched.drain_all() {
-                        let adapter = self.registry.get(&adapter_id)?.clone();
+                        let adapter = self.registry.get(&adapter_id)?;
                         self.feed_traffic(&backend, &adapter_id);
                         let prompts: Vec<Vec<i32>> =
                             batch.iter().map(|r| r.prompt.clone()).collect();

@@ -45,12 +45,13 @@ pub mod exp;
 /// Canonical location of the AOT artifacts relative to the repo root.
 pub const ARTIFACTS_DIR: &str = "artifacts";
 
-/// Resolve the artifacts directory: `$ETHER_ARTIFACTS` if set, otherwise
-/// walk up from the current directory looking for `artifacts/manifest.json`
+/// Resolve the artifacts directory: `$ETHER_ARTIFACTS` (via the
+/// [`util::runtimecfg::RuntimeCfg`] snapshot) if set, otherwise walk up
+/// from the current directory looking for `artifacts/manifest.json`
 /// (so tests and benches work from any cargo target dir).
 pub fn artifacts_dir() -> std::path::PathBuf {
-    if let Ok(p) = std::env::var("ETHER_ARTIFACTS") {
-        return p.into();
+    if let Some(p) = util::runtimecfg::RuntimeCfg::get().artifacts.as_ref() {
+        return p.clone();
     }
     let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
     loop {

@@ -7,13 +7,21 @@
 //!                  [--d-model D] [--d-ff F] [--layers L]     # artifact-free host training
 //! ether eval       [--cfg C]                                 # un-tuned baseline scores
 //! ether serve      [--cfg C] [--adapters N] [--requests N] [--max-batch B]
+//! ether fleet      [--shards N] [--adapters N] [--requests N] [--resident N]
+//!                  [--page-kb K] [--cache-pages P] [--workers W] [--store PATH]
+//!                  # sharded host serving over the paged adapter store (no PJRT)
 //! ether exp        <table1|fig3|…|all> [--quick] [--steps N]
 //! ether info                                                 # manifest summary
 //! ```
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
-use ether::coordinator::{AdapterEngine, AdapterRegistry, Request, SchedulerCfg, Server};
+use ether::coordinator::{
+    AdapterEngine, AdapterProvisioner, AdapterRegistry, ExecutionPolicy, FleetCfg, Request,
+    SchedulerCfg, Server, ShardedFleet,
+};
+use ether::peft::store::{PagedStore, StoreCfg};
+use ether::util::runtimecfg::{self, RuntimeCfg};
 use ether::data::corpus::Corpus;
 use ether::eval::harness::default_lr;
 use ether::exp;
@@ -45,6 +53,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "train-host" => cmd_train_host(args),
         "eval" => cmd_eval(args),
         "serve" => cmd_serve(args),
+        "fleet" => cmd_fleet(args),
         "exp" => {
             let id = args
                 .positional
@@ -70,8 +79,18 @@ commands:
   train-host  artifact-free host training via the TransformOp gradient surface
   eval        score the un-tuned base on the MC suites
   serve       multi-adapter serving demo with dynamic batching
+  fleet       sharded fleet serving over the paged adapter store (host, no PJRT)
   exp <id>    regenerate a paper table/figure (table1..12, fig3..8, all)
   info        artifact + method summary from the manifest";
+
+/// `--name N` as an `Option<usize>` (absent stays `None` so the
+/// [`runtimecfg::resolve`] precedence chain — explicit arg > env var >
+/// default — can fall through to the environment).
+fn opt_usize(args: &Args, name: &str) -> Result<Option<usize>> {
+    args.opt(name)
+        .map(|s| s.parse().map_err(|e| anyhow!("--{name}={s}: {e}")))
+        .transpose()
+}
 
 fn cmd_pretrain(args: &Args) -> Result<()> {
     let cfg = args.str_or("cfg", "tiny");
@@ -316,23 +335,147 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
     )?;
     let dt = t0.elapsed().as_secs_f64();
-    let s = &server.stats;
-    let lat = s.latency_summary();
+    // One unified snapshot instead of picking through the stats structs.
+    let snap = server.snapshot();
+    let lat = snap.server.latency_summary();
     println!(
         "served {} requests in {dt:.2}s ({:.1} req/s) | batches {} (mean size {:.1}) | \
          p50 {:.1} ms p95 {:.1} ms | shed {} | merge cache: {} hits / {} misses \
          (hit rate {:.0}%)",
-        s.served,
-        s.served as f64 / dt,
-        s.batches,
-        s.mean_batch(),
+        snap.server.served,
+        snap.req_per_s(dt),
+        snap.server.batches,
+        snap.server.mean_batch(),
         lat.p50_ms(),
         lat.p95_ms(),
-        s.shed,
-        s.merge_hits,
-        s.merge_misses,
-        s.merge_hit_rate() * 100.0,
+        snap.sched.shed(),
+        snap.server.merge_hits,
+        snap.server.merge_misses,
+        snap.server.merge_hit_rate() * 100.0,
     );
+    Ok(())
+}
+
+/// Fleet-scale host serving: N engine shards behind a consistent-hash
+/// router over a paged on-disk adapter store, with adapters provisioned
+/// deterministically on first request. Runs on a bare checkout — no
+/// PJRT artifacts needed. Every knob resolves explicit arg > `ETHER_*`
+/// env var > default (see `util::runtimecfg`).
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let rc = RuntimeCfg::get();
+    let shards = runtimecfg::resolve(opt_usize(args, "shards")?, rc.fleet_shards, 4).max(1);
+    let n_adapters = args.usize_or("adapters", 4096)?.max(1);
+    let n_requests = args.usize_or("requests", 512)?;
+    let resident =
+        runtimecfg::resolve(opt_usize(args, "resident")?, rc.resident_adapters, 64).max(1);
+    let page_kb = runtimecfg::resolve(opt_usize(args, "page-kb")?, rc.store_page_kb, 64).max(1);
+    let cache_pages =
+        runtimecfg::resolve(opt_usize(args, "cache-pages")?, rc.store_cache_pages, 8).max(1);
+    let workers = runtimecfg::resolve(opt_usize(args, "workers")?, rc.sched_workers, 0);
+    let d_model = args.usize_or("d-model", 64)?;
+    let d_ff = args.usize_or("d-ff", 128)?;
+    let n_layers = args.usize_or("layers", 2)?;
+    let store_path = args.str_or(
+        "store",
+        &std::env::temp_dir()
+            .join(format!("ether_fleet_{}", std::process::id()))
+            .join("pages.bin")
+            .to_string_lossy(),
+    );
+    args.finish()?;
+
+    let dims = ether::peft::apply::ModelDims { d_model, d_ff, n_layers };
+    let store = std::sync::Arc::new(PagedStore::create(
+        StoreCfg::new(&store_path).page_bytes(page_kb * 1024).cache_pages(cache_pages),
+    )?);
+    let mut registry = AdapterRegistry::with_store(store, resident);
+    registry.set_provisioner(AdapterProvisioner::new("ether_n4", "host", dims, 2024)?);
+
+    let layout = ether::peft::apply::base_layout_for(dims);
+    let mut rng = Rng::new(2024);
+    let base = rng.normal_vec(layout.total, 0.05);
+    let hot = (n_requests as u64 / 16).max(8);
+    let fleet_cfg = FleetCfg {
+        shards,
+        workers_per_shard: workers,
+        hot_threshold: hot,
+        policy: ExecutionPolicy::TrafficAware { hot_threshold: hot },
+        sched: SchedulerCfg {
+            max_batch: 8,
+            max_wait: std::time::Duration::from_millis(2),
+            quantum: 4,
+            max_queue_per_adapter: 64,
+            max_pending: 4096,
+        },
+        ..Default::default()
+    };
+    let mut fleet = ShardedFleet::host(registry, dims, base, fleet_cfg)?;
+    println!(
+        "fleet: {shards} shards over a {n_adapters}-id space | resident cap {resident}/shard | \
+         store {store_path} ({page_kb} KiB pages, {cache_pages} cached)"
+    );
+
+    let arrivals = ether::coordinator::loadgen::generate(&ether::coordinator::loadgen::LoadGenCfg {
+        n_adapters,
+        n_requests,
+        seed: 2024,
+        scenario: ether::coordinator::loadgen::Scenario::Zipf1M { exponent: 1.05 },
+        ..Default::default()
+    });
+    let t0 = std::time::Instant::now();
+    let mut last_at = None;
+    for (i, a) in arrivals.iter().enumerate() {
+        let target = t0 + a.at;
+        let now = std::time::Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let _ = fleet.submit(Request {
+            id: i as u64,
+            adapter: format!("user{}", a.adapter),
+            prompt: a.prompt.clone(),
+            max_new: a.max_new,
+            enqueued: std::time::Instant::now(),
+        });
+        if last_at != Some(a.at) {
+            last_at = Some(a.at);
+            fleet.pump(std::time::Instant::now(), |_| {})?;
+        }
+    }
+    fleet.drain(std::time::Instant::now() + std::time::Duration::from_millis(3), |_| {})?;
+    let dt = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let snap = fleet.snapshot();
+    let merged = snap.merged();
+    let lat = merged.server.latency_summary();
+    println!(
+        "served {} shed {} in {dt:.2}s ({:.1} req/s; per-shard {:?}) | p50 {:.1} ms \
+         p95 {:.1} ms | hot {} (+{} promoted) replica-routes {} steals {} ({} reqs)",
+        snap.served(),
+        snap.shed(),
+        snap.served() as f64 / dt,
+        snap.shard_req_per_s(dt).iter().map(|r| r.round()).collect::<Vec<_>>(),
+        lat.p50_ms(),
+        lat.p95_ms(),
+        snap.hot,
+        snap.hot_promotions,
+        snap.replica_routes,
+        snap.steals,
+        snap.stolen_requests,
+    );
+    if let Some(st) = snap.store {
+        println!(
+            "store: {} adapters materialized on {} pages | page-ins {} page-outs {} \
+             (cache {} hits / {} misses) | fleet resident {} KiB",
+            st.records,
+            st.pages,
+            st.page_ins,
+            st.page_outs,
+            st.cache_hits,
+            st.cache_misses,
+            snap.resident_bytes() >> 10,
+        );
+    }
     Ok(())
 }
 

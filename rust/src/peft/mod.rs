@@ -24,6 +24,7 @@ pub mod flat;
 pub mod metrics;
 pub mod op;
 pub mod registry;
+pub mod store;
 pub mod transforms;
 
 use anyhow::{bail, ensure, Result};

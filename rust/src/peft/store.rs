@@ -1,0 +1,454 @@
+//! Paged on-disk adapter-parameter store.
+//!
+//! ETHER adapters are tiny (one reflection vector per adapted matrix —
+//! 10–100× fewer parameters than LoRA, PAPER.md §1), which is what makes
+//! a *million*-adapter fleet plausible: at ~KBs per adapter the params
+//! fit on disk trivially, and only the working set needs to be resident.
+//! This module is that spill tier. Cold adapter params live in a single
+//! **page file**; an in-memory index maps adapter id → (page, offset,
+//! length, checksum), and a small LRU cache of whole pages absorbs the
+//! zipf head so the resident footprint is `O(cache_pages × page_bytes)`
+//! regardless of how many adapters exist.
+//!
+//! Layout: records are appended into the current **open page** (an
+//! in-memory buffer). When a record no longer fits, the open page is
+//! sealed — padded to `page_bytes`, written at `page_no × page_bytes`,
+//! counted as a **page-out** — and a fresh page opens. Reads hit, in
+//! order: the open page, the page cache, and finally the disk (counted
+//! as a **page-in**). Every record carries an FNV-1a checksum verified
+//! on read.
+//!
+//! Failure policy: **errors, never panics**. A short read (truncated
+//! file), a checksum mismatch (bit rot / external corruption), an
+//! unknown id, or a record larger than a page all surface as `Err`.
+//!
+//! Non-goals (documented trade-offs): the page file is ephemeral spill
+//! space, re-created on open; re-`put`ting an id leaks the old record's
+//! bytes (the index just points at the new copy); `flush` seals a
+//! partially-filled page, wasting its tail. All fine at KB-sized records.
+
+use std::collections::HashMap;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::rng::hash64;
+
+/// Store geometry. Defaults match the `ETHER_STORE_PAGE_KB` /
+/// `ETHER_STORE_CACHE_PAGES` knob defaults (64 KiB pages, 8 cached).
+#[derive(Clone, Debug)]
+pub struct StoreCfg {
+    /// Path of the page file itself (parent directories are created).
+    pub path: PathBuf,
+    /// Page size in bytes; every record must fit in one page.
+    pub page_bytes: usize,
+    /// LRU page-cache capacity, in pages.
+    pub cache_pages: usize,
+}
+
+impl StoreCfg {
+    pub fn new(path: impl Into<PathBuf>) -> StoreCfg {
+        StoreCfg { path: path.into(), page_bytes: 64 * 1024, cache_pages: 8 }
+    }
+
+    pub fn page_bytes(mut self, n: usize) -> StoreCfg {
+        self.page_bytes = n.max(64);
+        self
+    }
+
+    pub fn cache_pages(mut self, n: usize) -> StoreCfg {
+        self.cache_pages = n.max(1);
+        self
+    }
+}
+
+/// One adapter's params + identity as stored. The registry wraps this
+/// into its own entry type; the store itself stays independent of the
+/// serving layer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdapterRecord {
+    pub id: String,
+    pub method: String,
+    pub cfg: String,
+    pub params: Vec<f32>,
+}
+
+/// Paging / caching counters plus the resident footprint, all taken
+/// under one lock so the numbers are mutually consistent.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StoreStats {
+    /// Records currently indexed.
+    pub records: usize,
+    /// Pages sealed to disk so far.
+    pub pages: u64,
+    /// Whole-page reads from disk (cold misses).
+    pub page_ins: u64,
+    /// Whole-page writes to disk (seals).
+    pub page_outs: u64,
+    /// Reads served from the open page or the page cache.
+    pub cache_hits: u64,
+    /// Reads that had to go to disk.
+    pub cache_misses: u64,
+    /// Bytes held in memory right now (open page + cached pages).
+    pub resident_bytes: usize,
+}
+
+#[derive(Clone, Debug)]
+struct RecordMeta {
+    page: u64,
+    off: usize,
+    nbytes: usize,
+    checksum: u64,
+    method: String,
+    cfg: String,
+}
+
+struct Inner {
+    file: std::fs::File,
+    index: HashMap<String, RecordMeta>,
+    /// Page number of the in-memory open page.
+    open_page: u64,
+    open_buf: Vec<u8>,
+    /// LRU page cache: back = most recently used.
+    cache: Vec<(u64, Arc<Vec<u8>>)>,
+    page_ins: u64,
+    page_outs: u64,
+    cache_hits: u64,
+    cache_misses: u64,
+}
+
+/// Thread-safe paged adapter store (share via `Arc`). See the module
+/// docs for the layout and failure policy.
+pub struct PagedStore {
+    cfg: StoreCfg,
+    inner: Mutex<Inner>,
+}
+
+impl std::fmt::Debug for PagedStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PagedStore")
+            .field("path", &self.cfg.path)
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+impl PagedStore {
+    /// Create (truncating any previous file at `cfg.path` — the store is
+    /// ephemeral spill space, not a durable database).
+    pub fn create(cfg: StoreCfg) -> Result<PagedStore> {
+        if let Some(parent) = cfg.path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating store dir {parent:?}"))?;
+            }
+        }
+        let file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&cfg.path)
+            .with_context(|| format!("opening page file {:?}", cfg.path))?;
+        Ok(PagedStore {
+            inner: Mutex::new(Inner {
+                file,
+                index: HashMap::new(),
+                open_page: 0,
+                open_buf: Vec::with_capacity(cfg.page_bytes),
+                cache: Vec::new(),
+                page_ins: 0,
+                page_outs: 0,
+                cache_hits: 0,
+                cache_misses: 0,
+            }),
+            cfg,
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.cfg.path
+    }
+
+    /// Append one adapter's params. Errors if the record cannot fit in a
+    /// single page. Re-putting an id replaces its index entry (the old
+    /// bytes leak — documented trade-off).
+    pub fn put(&self, id: &str, method: &str, cfg: &str, params: &[f32]) -> Result<()> {
+        let nbytes = params.len() * 4;
+        if nbytes > self.cfg.page_bytes {
+            bail!(
+                "adapter {id:?} is {nbytes} B but the store page is {} B — \
+                 raise ETHER_STORE_PAGE_KB",
+                self.cfg.page_bytes
+            );
+        }
+        let mut g = self.lock();
+        if g.open_buf.len() + nbytes > self.cfg.page_bytes {
+            self.seal_open(&mut g)?;
+        }
+        let off = g.open_buf.len();
+        for v in params {
+            g.open_buf.extend_from_slice(&v.to_le_bytes());
+        }
+        let checksum = hash64(&g.open_buf[off..off + nbytes]);
+        let meta = RecordMeta {
+            page: g.open_page,
+            off,
+            nbytes,
+            checksum,
+            method: method.to_string(),
+            cfg: cfg.to_string(),
+        };
+        g.index.insert(id.to_string(), meta);
+        Ok(())
+    }
+
+    /// Read one adapter back, verifying its checksum. Every failure mode
+    /// — unknown id, short read, out-of-bounds record, checksum mismatch
+    /// — is an `Err`, never a panic.
+    pub fn get(&self, id: &str) -> Result<AdapterRecord> {
+        let mut g = self.lock();
+        let meta = g
+            .index
+            .get(id)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown adapter {id:?} in store {:?}", self.cfg.path))?;
+        let bytes: Vec<u8> = if meta.page == g.open_page {
+            g.cache_hits += 1;
+            if meta.off + meta.nbytes > g.open_buf.len() {
+                bail!("corrupt store index: {id:?} points past the open page");
+            }
+            g.open_buf[meta.off..meta.off + meta.nbytes].to_vec()
+        } else {
+            let page = self.page_for(&mut g, meta.page)?;
+            if meta.off + meta.nbytes > page.len() {
+                bail!("corrupt store: record {id:?} out of page bounds");
+            }
+            page[meta.off..meta.off + meta.nbytes].to_vec()
+        };
+        if hash64(&bytes) != meta.checksum {
+            bail!("corrupt store: checksum mismatch reading adapter {id:?}");
+        }
+        let params: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(AdapterRecord { id: id.to_string(), method: meta.method, cfg: meta.cfg, params })
+    }
+
+    pub fn contains(&self, id: &str) -> bool {
+        self.lock().index.contains_key(id)
+    }
+
+    /// Number of adapters indexed.
+    pub fn len(&self) -> usize {
+        self.lock().index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total f32 params across all indexed records.
+    pub fn total_params(&self) -> usize {
+        self.lock().index.values().map(|m| m.nbytes / 4).sum()
+    }
+
+    /// Seal the open page to disk (even partially filled). After a flush
+    /// every record is durable in the page file; subsequent puts open a
+    /// fresh page.
+    pub fn flush(&self) -> Result<()> {
+        let mut g = self.lock();
+        self.seal_open(&mut g)
+    }
+
+    /// Drop the in-memory page cache (the open page stays). With
+    /// `flush()` first, this forces the next `get` of every record to
+    /// page in from disk — used by parity tests and cold-start probes.
+    pub fn drop_caches(&self) {
+        self.lock().cache.clear();
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        let g = self.lock();
+        StoreStats {
+            records: g.index.len(),
+            pages: g.open_page,
+            page_ins: g.page_ins,
+            page_outs: g.page_outs,
+            cache_hits: g.cache_hits,
+            cache_misses: g.cache_misses,
+            resident_bytes: g.open_buf.len() + g.cache.iter().map(|(_, p)| p.len()).sum::<usize>(),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn seal_open(&self, g: &mut Inner) -> Result<()> {
+        if g.open_buf.is_empty() {
+            return Ok(());
+        }
+        g.open_buf.resize(self.cfg.page_bytes, 0);
+        let pos = g.open_page * self.cfg.page_bytes as u64;
+        let page = std::mem::replace(&mut g.open_buf, Vec::with_capacity(self.cfg.page_bytes));
+        g.file
+            .seek(SeekFrom::Start(pos))
+            .and_then(|_| g.file.write_all(&page))
+            .and_then(|_| g.file.flush())
+            .with_context(|| format!("sealing page {} to {:?}", g.open_page, self.cfg.path))?;
+        g.page_outs += 1;
+        let sealed_no = g.open_page;
+        self.cache_insert(g, sealed_no, Arc::new(page));
+        g.open_page += 1;
+        Ok(())
+    }
+
+    /// Fetch a sealed page: cache hit (LRU-touched) or disk page-in.
+    fn page_for(&self, g: &mut Inner, page_no: u64) -> Result<Arc<Vec<u8>>> {
+        if let Some(i) = g.cache.iter().position(|(no, _)| *no == page_no) {
+            let hit = g.cache.remove(i);
+            let page = hit.1.clone();
+            g.cache.push(hit);
+            g.cache_hits += 1;
+            return Ok(page);
+        }
+        g.cache_misses += 1;
+        let mut buf = vec![0u8; self.cfg.page_bytes];
+        g.file
+            .seek(SeekFrom::Start(page_no * self.cfg.page_bytes as u64))
+            .and_then(|_| g.file.read_exact(&mut buf))
+            .with_context(|| {
+                format!("paging in page {page_no} from {:?} (short read?)", self.cfg.path)
+            })?;
+        g.page_ins += 1;
+        let page = Arc::new(buf);
+        self.cache_insert(g, page_no, page.clone());
+        Ok(page)
+    }
+
+    fn cache_insert(&self, g: &mut Inner, page_no: u64, page: Arc<Vec<u8>>) {
+        if let Some(i) = g.cache.iter().position(|(no, _)| *no == page_no) {
+            g.cache.remove(i);
+        }
+        g.cache.push((page_no, page));
+        while g.cache.len() > self.cfg.cache_pages {
+            g.cache.remove(0); // evict LRU; pages are clean, nothing to write back
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir()
+            .join(format!("ether_store_{}_{name}", std::process::id()))
+            .join("pages.bin")
+    }
+
+    fn small_store(name: &str) -> PagedStore {
+        // 256-byte pages / 2 cached: evictions and seals happen fast.
+        PagedStore::create(StoreCfg::new(tmp(name)).page_bytes(256).cache_pages(2)).unwrap()
+    }
+
+    #[test]
+    fn put_get_roundtrip_across_pages() {
+        let s = small_store("roundtrip");
+        let mk = |i: usize| (0..32).map(|j| (i * 100 + j) as f32).collect::<Vec<f32>>();
+        for i in 0..20 {
+            s.put(&format!("u{i}"), "ether_n4", "host", &mk(i)).unwrap();
+        }
+        assert_eq!(s.len(), 20);
+        // 32 f32 = 128 B → 2 records per 256 B page → 10 pages, 9 sealed.
+        assert!(s.stats().page_outs >= 8, "{:?}", s.stats());
+        for i in 0..20 {
+            let r = s.get(&format!("u{i}")).unwrap();
+            assert_eq!(r.params, mk(i));
+            assert_eq!(r.method, "ether_n4");
+            assert_eq!(r.cfg, "host");
+        }
+        // Far more sealed pages than the 2-page cache → some disk reads.
+        assert!(s.stats().page_ins > 0, "{:?}", s.stats());
+        assert_eq!(s.total_params(), 20 * 32);
+    }
+
+    #[test]
+    fn flush_then_cold_read_pages_in() {
+        let s = small_store("cold");
+        s.put("a", "m", "c", &[1.0, 2.0, 3.0]).unwrap();
+        s.flush().unwrap();
+        s.drop_caches();
+        let before = s.stats().page_ins;
+        assert_eq!(s.get("a").unwrap().params, vec![1.0, 2.0, 3.0]);
+        assert_eq!(s.stats().page_ins, before + 1);
+    }
+
+    #[test]
+    fn unknown_id_is_err() {
+        let s = small_store("unknown");
+        assert!(s.get("nope").is_err());
+    }
+
+    #[test]
+    fn oversized_record_is_err() {
+        let s = small_store("oversize");
+        let big = vec![0.0f32; 1024]; // 4 KiB > 256 B page
+        let e = s.put("big", "m", "c", &big).unwrap_err();
+        assert!(e.to_string().contains("page"), "{e}");
+    }
+
+    #[test]
+    fn corruption_is_err_not_panic() {
+        let s = small_store("corrupt");
+        s.put("a", "m", "c", &[5.0; 16]).unwrap();
+        s.flush().unwrap();
+        s.drop_caches();
+        // Flip a byte in the record on disk through an independent handle.
+        let path = s.path().to_path_buf();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[3] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let e = s.get("a").unwrap_err();
+        assert!(e.to_string().contains("checksum"), "{e}");
+    }
+
+    #[test]
+    fn short_read_is_err_not_panic() {
+        let s = small_store("shortread");
+        s.put("a", "m", "c", &[5.0; 16]).unwrap();
+        s.flush().unwrap();
+        s.drop_caches();
+        // Truncate the file: the page-in read must fail cleanly.
+        let f = std::fs::OpenOptions::new().write(true).open(s.path()).unwrap();
+        f.set_len(10).unwrap();
+        assert!(s.get("a").is_err());
+    }
+
+    #[test]
+    fn reput_replaces() {
+        let s = small_store("reput");
+        s.put("a", "m", "c", &[1.0]).unwrap();
+        s.put("a", "m", "c", &[2.0, 3.0]).unwrap();
+        assert_eq!(s.get("a").unwrap().params, vec![2.0, 3.0]);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.total_params(), 2);
+    }
+
+    #[test]
+    fn resident_bytes_bounded_by_cache() {
+        let s = small_store("bounded");
+        for i in 0..200 {
+            s.put(&format!("u{i}"), "m", "c", &[i as f32; 16]).unwrap();
+        }
+        for i in 0..200 {
+            s.get(&format!("u{i}")).unwrap();
+        }
+        // open page + 2 cached pages at 256 B each.
+        assert!(s.stats().resident_bytes <= 3 * 256, "{:?}", s.stats());
+    }
+}

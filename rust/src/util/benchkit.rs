@@ -12,6 +12,7 @@ use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 use crate::util::json::Value;
+use crate::util::runtimecfg::RuntimeCfg;
 
 /// Re-export for bench bodies.
 pub fn black_box<T>(x: T) -> T {
@@ -71,20 +72,21 @@ pub fn write_named_json(name: &str, v: &Value, dir: &Path) -> std::io::Result<Pa
     Ok(path)
 }
 
-/// [`write_named_json`] into the `ETHER_BENCH_JSON` directory: a no-op
-/// `None` when the env var is unset, `Some(path)` on success, and an
-/// explained `None` on IO failure (mirrors [`Bench::report`]'s
-/// behaviour).
+/// [`write_named_json`] into the `ETHER_BENCH_JSON` directory: `None`
+/// when the knob is unset (emission not requested), `Some(path)` on
+/// success. When `ETHER_BENCH_JSON` **is** set, an IO failure is a hard
+/// error — the caller asked for the file, so dropping it silently would
+/// corrupt the CI perf trajectory — and this **panics** with the path
+/// and OS error (mirrors [`Bench::report`]'s behaviour).
 pub fn emit_named_json(name: &str, v: &Value) -> Option<PathBuf> {
-    let dir = std::env::var("ETHER_BENCH_JSON").ok()?;
-    match write_named_json(name, v, Path::new(&dir)) {
+    let dir = RuntimeCfg::get().bench_json.clone()?;
+    match write_named_json(name, v, &dir) {
         Ok(path) => {
             println!("[benchkit] wrote {path:?}");
             Some(path)
         }
         Err(e) => {
-            eprintln!("[benchkit] could not write bench JSON to {dir:?}: {e}");
-            None
+            panic!("[benchkit] ETHER_BENCH_JSON is set but writing to {dir:?} failed: {e}")
         }
     }
 }
@@ -112,7 +114,7 @@ pub struct Bench {
 
 impl Bench {
     pub fn new(name: &str) -> Bench {
-        let quick = std::env::var("ETHER_BENCH_QUICK").is_ok();
+        let quick = RuntimeCfg::get().bench_quick;
         Bench {
             name: name.to_string(),
             min_time: if quick { Duration::from_millis(100) } else { Duration::from_millis(700) },
@@ -150,7 +152,7 @@ impl Bench {
     pub fn to_json(&self) -> Value {
         Value::obj(vec![
             ("name", Value::s(self.name.clone())),
-            ("quick", Value::Bool(std::env::var("ETHER_BENCH_QUICK").is_ok())),
+            ("quick", Value::Bool(RuntimeCfg::get().bench_quick)),
             ("threads", Value::num(crate::util::pool::default_threads() as f64)),
             (
                 "cases",
@@ -180,11 +182,15 @@ impl Bench {
     }
 
     /// Honor `ETHER_BENCH_JSON` if set (called from [`Bench::report`]).
+    /// An IO failure with the knob set is a hard error, not a warning —
+    /// see [`emit_named_json`].
     fn maybe_write_json(&self) {
-        let Ok(dir) = std::env::var("ETHER_BENCH_JSON") else { return };
-        match self.write_json(Path::new(&dir)) {
+        let Some(dir) = RuntimeCfg::get().bench_json.clone() else { return };
+        match self.write_json(&dir) {
             Ok(path) => println!("[benchkit] wrote {path:?}"),
-            Err(e) => eprintln!("[benchkit] could not write bench JSON to {dir:?}: {e}"),
+            Err(e) => {
+                panic!("[benchkit] ETHER_BENCH_JSON is set but writing to {dir:?} failed: {e}")
+            }
         }
     }
 
@@ -240,7 +246,9 @@ mod tests {
 
     #[test]
     fn bench_runs_case() {
-        std::env::set_var("ETHER_BENCH_QUICK", "1");
+        // No env mutation (RuntimeCfg snapshots at first access, and
+        // set_var races getenv in other test threads anyway): the budget
+        // override plays the role ETHER_BENCH_QUICK would.
         let mut b = Bench::new("t").with_budget(Duration::from_millis(10), 50);
         let mut x = 0u64;
         let s = b.case("noop", None, || {

@@ -38,17 +38,18 @@ impl log::Log for Logger {
 
 static LOGGER: Logger = Logger;
 
-/// Install the logger once; level from `ETHER_LOG` (error|warn|info|debug).
+/// Install the logger once; level from `ETHER_LOG` (error|warn|info|debug)
+/// via the [`crate::util::runtimecfg::RuntimeCfg`] snapshot.
 pub fn init() {
     INIT.call_once(|| {
         unsafe {
             START = Some(Instant::now());
         }
-        let level = match std::env::var("ETHER_LOG").as_deref() {
-            Ok("error") => LevelFilter::Error,
-            Ok("warn") => LevelFilter::Warn,
-            Ok("debug") => LevelFilter::Debug,
-            Ok("trace") => LevelFilter::Trace,
+        let level = match crate::util::runtimecfg::RuntimeCfg::get().log_level.as_deref() {
+            Some("error") => LevelFilter::Error,
+            Some("warn") => LevelFilter::Warn,
+            Some("debug") => LevelFilter::Debug,
+            Some("trace") => LevelFilter::Trace,
             _ => LevelFilter::Info,
         };
         let _ = log::set_logger(&LOGGER);

@@ -14,4 +14,5 @@ pub mod logging;
 pub mod pool;
 pub mod prop;
 pub mod rng;
+pub mod runtimecfg;
 pub mod table;

@@ -6,18 +6,19 @@
 //! generation. [`SendPtr`] is the shared escape hatch for workers that
 //! write disjoint (possibly interleaved) regions of one output buffer.
 
-/// Number of worker threads to use (capped, env-overridable).
+use crate::util::runtimecfg::RuntimeCfg;
+
+/// Number of worker threads to use (capped, `ETHER_THREADS`-overridable
+/// via the [`RuntimeCfg`] snapshot).
 pub fn default_threads() -> usize {
-    if let Some(n) = std::env::var("ETHER_THREADS").ok().and_then(|v| parse_threads(&v)) {
-        return n;
-    }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+    RuntimeCfg::get().threads()
 }
 
-/// Parse an `ETHER_THREADS` override: numeric values clamp up to 1,
-/// garbage is ignored (falls through to the hardware default).
-fn parse_threads(v: &str) -> Option<usize> {
-    v.parse::<usize>().ok().map(|n| n.max(1))
+/// Per-shard dispatch-worker budget for a fleet of `shards` schedulers:
+/// splits the ambient pool evenly so N shards pumping concurrently do
+/// not oversubscribe the machine, with a floor of one worker per shard.
+pub fn shard_workers(shards: usize) -> usize {
+    (default_threads() / shards.max(1)).max(1)
 }
 
 /// Run `f(start, end)` over disjoint chunks of `0..n` in parallel.
@@ -237,15 +238,25 @@ mod tests {
 
     #[test]
     fn ether_threads_parsing() {
-        // Pure parsing test — no env mutation (set_var while other test
-        // threads call getenv is a libc data race).
-        assert_eq!(parse_threads("1"), Some(1));
-        assert_eq!(parse_threads("8"), Some(8));
-        assert_eq!(parse_threads("0"), Some(1)); // clamped up to 1
-        assert_eq!(parse_threads("not-a-number"), None); // ignored
-        assert_eq!(parse_threads(""), None);
-        assert_eq!(parse_threads("-3"), None);
+        // Pure parsing test via RuntimeCfg::from_lookup — no env mutation
+        // (set_var while other test threads call getenv is a libc data
+        // race). Parsing itself is covered in util::runtimecfg; here we
+        // only pin the pool-facing semantics.
+        let explicit =
+            RuntimeCfg::from_lookup(|k| (k == "ETHER_THREADS").then(|| "8".to_string()));
+        assert_eq!(explicit.threads(), 8);
+        let garbage =
+            RuntimeCfg::from_lookup(|k| (k == "ETHER_THREADS").then(|| "nope".to_string()));
+        assert!(garbage.threads() >= 1); // falls through to hardware default
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn shard_workers_splits_pool() {
+        assert!(shard_workers(1) >= 1);
+        assert!(shard_workers(usize::MAX) == 1); // floor of one per shard
+        assert!(shard_workers(2) <= default_threads());
+        assert_eq!(shard_workers(0), shard_workers(1)); // clamped shard count
     }
 
     #[test]

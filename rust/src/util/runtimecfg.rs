@@ -1,0 +1,222 @@
+//! Single-site parsing of every `ETHER_*` environment knob.
+//!
+//! Historically each subsystem read its own `std::env::var("ETHER_…")`
+//! (thread pool, scheduler dispatch, benchkit, artifact paths, logging),
+//! which made the knob surface undiscoverable and untestable. All of it
+//! now funnels through [`RuntimeCfg`]:
+//!
+//! | variable                  | accessor                 | default                      |
+//! |---------------------------|--------------------------|------------------------------|
+//! | `ETHER_THREADS`           | [`RuntimeCfg::threads`]  | `available_parallelism ≤ 16` |
+//! | `ETHER_SCHED_WORKERS`     | [`RuntimeCfg::sched_workers`] | `threads()`             |
+//! | `ETHER_BENCH_QUICK`       | `bench_quick` field      | `false`                      |
+//! | `ETHER_BENCH_JSON`        | `bench_json` field       | unset (no JSON emission)     |
+//! | `ETHER_ARTIFACTS`         | `artifacts` field        | unset (walk-up search)       |
+//! | `ETHER_LOG`               | `log_level` field        | `info`                       |
+//! | `ETHER_FLEET_SHARDS`      | [`RuntimeCfg::fleet_shards`] | `4`                      |
+//! | `ETHER_STORE_PAGE_KB`     | [`RuntimeCfg::store_page_bytes`] | `64` KiB             |
+//! | `ETHER_STORE_CACHE_PAGES` | [`RuntimeCfg::store_cache_pages`] | `8`                 |
+//! | `ETHER_RESIDENT_ADAPTERS` | [`RuntimeCfg::resident_adapters`] | `1024`              |
+//!
+//! **Precedence is `explicit argument > environment > default`**: code
+//! that accepts a knob as a function/CLI argument resolves it with
+//! [`resolve`], falling back to the env-derived `Option` field and then
+//! to the built-in default. Numeric values clamp up to 1; garbage is
+//! ignored (falls through to the default) — the same forgiving semantics
+//! the old per-site readers had.
+//!
+//! [`RuntimeCfg::get`] returns a process-wide snapshot taken at **first
+//! access** (libc `getenv`/`setenv` races make repeated reads from
+//! threaded code unsound anyway). Tests that need specific values use
+//! [`RuntimeCfg::from_lookup`] with a closure instead of mutating the
+//! process environment.
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+/// Typed view of every `ETHER_*` knob. `None` means "not set in the
+/// environment" — resolved accessors apply the documented defaults.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RuntimeCfg {
+    /// `ETHER_THREADS` — worker-thread budget for the data-parallel pool.
+    pub threads: Option<usize>,
+    /// `ETHER_SCHED_WORKERS` — batch-dispatch workers in `Server::serve`.
+    pub sched_workers: Option<usize>,
+    /// `ETHER_BENCH_QUICK` — set (any value) shrinks bench budgets for CI.
+    pub bench_quick: bool,
+    /// `ETHER_BENCH_JSON` — directory for `BENCH_*.json` emission.
+    pub bench_json: Option<PathBuf>,
+    /// `ETHER_ARTIFACTS` — override for the exported-artifact directory.
+    pub artifacts: Option<PathBuf>,
+    /// `ETHER_LOG` — log level (`error|warn|info|debug|trace`).
+    pub log_level: Option<String>,
+    /// `ETHER_FLEET_SHARDS` — shard count for the sharded serving fleet.
+    pub fleet_shards: Option<usize>,
+    /// `ETHER_STORE_PAGE_KB` — paged adapter-store page size in KiB.
+    pub store_page_kb: Option<usize>,
+    /// `ETHER_STORE_CACHE_PAGES` — adapter-store LRU page-cache capacity.
+    pub store_cache_pages: Option<usize>,
+    /// `ETHER_RESIDENT_ADAPTERS` — registry resident-set cap (entries).
+    pub resident_adapters: Option<usize>,
+}
+
+/// Lenient counter parse: numeric clamps up to 1, garbage → `None`.
+fn parse_count(v: &str) -> Option<usize> {
+    v.parse::<usize>().ok().map(|n| n.max(1))
+}
+
+fn non_empty(v: String) -> Option<String> {
+    if v.is_empty() {
+        None
+    } else {
+        Some(v)
+    }
+}
+
+impl RuntimeCfg {
+    /// Parse from the process environment (fresh read, not the snapshot).
+    pub fn from_env() -> RuntimeCfg {
+        Self::from_lookup(|k| std::env::var(k).ok())
+    }
+
+    /// Parse from an arbitrary lookup function — the testable core, so
+    /// precedence/parsing tests never mutate the process environment.
+    pub fn from_lookup(get: impl Fn(&str) -> Option<String>) -> RuntimeCfg {
+        RuntimeCfg {
+            threads: get("ETHER_THREADS").as_deref().and_then(parse_count),
+            sched_workers: get("ETHER_SCHED_WORKERS").as_deref().and_then(parse_count),
+            bench_quick: get("ETHER_BENCH_QUICK").is_some(),
+            bench_json: get("ETHER_BENCH_JSON").and_then(non_empty).map(PathBuf::from),
+            artifacts: get("ETHER_ARTIFACTS").and_then(non_empty).map(PathBuf::from),
+            log_level: get("ETHER_LOG").and_then(non_empty),
+            fleet_shards: get("ETHER_FLEET_SHARDS").as_deref().and_then(parse_count),
+            store_page_kb: get("ETHER_STORE_PAGE_KB").as_deref().and_then(parse_count),
+            store_cache_pages: get("ETHER_STORE_CACHE_PAGES").as_deref().and_then(parse_count),
+            resident_adapters: get("ETHER_RESIDENT_ADAPTERS").as_deref().and_then(parse_count),
+        }
+    }
+
+    /// Process-wide snapshot, parsed once at first access.
+    pub fn get() -> &'static RuntimeCfg {
+        static CFG: OnceLock<RuntimeCfg> = OnceLock::new();
+        CFG.get_or_init(RuntimeCfg::from_env)
+    }
+
+    /// Resolved pool size: `ETHER_THREADS`, else hardware parallelism
+    /// capped at 16.
+    pub fn threads(&self) -> usize {
+        self.threads.unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+        })
+    }
+
+    /// Resolved dispatch-worker count: `ETHER_SCHED_WORKERS`, else the
+    /// pool size.
+    pub fn sched_workers(&self) -> usize {
+        self.sched_workers.unwrap_or_else(|| self.threads())
+    }
+
+    /// Resolved fleet shard count (default 4).
+    pub fn fleet_shards(&self) -> usize {
+        self.fleet_shards.unwrap_or(4)
+    }
+
+    /// Resolved adapter-store page size in **bytes** (default 64 KiB).
+    pub fn store_page_bytes(&self) -> usize {
+        self.store_page_kb.unwrap_or(64) * 1024
+    }
+
+    /// Resolved adapter-store page-cache capacity (default 8 pages).
+    pub fn store_cache_pages(&self) -> usize {
+        self.store_cache_pages.unwrap_or(8)
+    }
+
+    /// Resolved registry resident-set cap (default 1024 adapters).
+    pub fn resident_adapters(&self) -> usize {
+        self.resident_adapters.unwrap_or(1024)
+    }
+}
+
+/// `explicit argument > environment > default` in one expression:
+/// `resolve(cli_arg, cfg.fleet_shards, 4)`.
+pub fn resolve<T>(explicit: Option<T>, env: Option<T>, default: T) -> T {
+    explicit.or(env).unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lookup(pairs: &[(&str, &str)]) -> impl Fn(&str) -> Option<String> + '_ {
+        move |k| pairs.iter().find(|(n, _)| *n == k).map(|(_, v)| v.to_string())
+    }
+
+    #[test]
+    fn empty_env_is_all_defaults() {
+        let cfg = RuntimeCfg::from_lookup(|_| None);
+        assert_eq!(cfg, RuntimeCfg::default());
+        assert!(cfg.threads() >= 1);
+        assert_eq!(cfg.sched_workers(), cfg.threads());
+        assert_eq!(cfg.fleet_shards(), 4);
+        assert_eq!(cfg.store_page_bytes(), 64 * 1024);
+        assert_eq!(cfg.store_cache_pages(), 8);
+        assert_eq!(cfg.resident_adapters(), 1024);
+        assert!(!cfg.bench_quick);
+        assert!(cfg.bench_json.is_none());
+    }
+
+    #[test]
+    fn typed_parses_and_clamps() {
+        let cfg = RuntimeCfg::from_lookup(lookup(&[
+            ("ETHER_THREADS", "8"),
+            ("ETHER_SCHED_WORKERS", "0"), // clamps up to 1
+            ("ETHER_BENCH_QUICK", "1"),
+            ("ETHER_BENCH_JSON", "/tmp/bench"),
+            ("ETHER_FLEET_SHARDS", "6"),
+            ("ETHER_STORE_PAGE_KB", "16"),
+            ("ETHER_STORE_CACHE_PAGES", "2"),
+            ("ETHER_RESIDENT_ADAPTERS", "64"),
+        ]));
+        assert_eq!(cfg.threads(), 8);
+        assert_eq!(cfg.sched_workers(), 1);
+        assert!(cfg.bench_quick);
+        assert_eq!(cfg.bench_json.as_deref(), Some(std::path::Path::new("/tmp/bench")));
+        assert_eq!(cfg.fleet_shards(), 6);
+        assert_eq!(cfg.store_page_bytes(), 16 * 1024);
+        assert_eq!(cfg.store_cache_pages(), 2);
+        assert_eq!(cfg.resident_adapters(), 64);
+    }
+
+    #[test]
+    fn garbage_falls_through_to_default() {
+        let cfg = RuntimeCfg::from_lookup(lookup(&[
+            ("ETHER_THREADS", "not-a-number"),
+            ("ETHER_FLEET_SHARDS", "-3"),
+            ("ETHER_BENCH_JSON", ""),
+            ("ETHER_LOG", ""),
+        ]));
+        assert_eq!(cfg.threads, None);
+        assert_eq!(cfg.fleet_shards(), 4);
+        assert!(cfg.bench_json.is_none());
+        assert!(cfg.log_level.is_none());
+    }
+
+    #[test]
+    fn precedence_explicit_over_env_over_default() {
+        let cfg = RuntimeCfg::from_lookup(lookup(&[("ETHER_FLEET_SHARDS", "6")]));
+        // explicit beats env
+        assert_eq!(resolve(Some(2), cfg.fleet_shards, 4), 2);
+        // env beats default
+        assert_eq!(resolve(None, cfg.fleet_shards, 4), 6);
+        // default when neither
+        assert_eq!(resolve(None, RuntimeCfg::default().fleet_shards, 4), 4);
+    }
+
+    #[test]
+    fn snapshot_is_stable() {
+        // Same reference on every call (OnceLock).
+        let a = RuntimeCfg::get() as *const RuntimeCfg;
+        let b = RuntimeCfg::get() as *const RuntimeCfg;
+        assert_eq!(a, b);
+    }
+}

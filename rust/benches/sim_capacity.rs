@@ -1,0 +1,316 @@
+//! Bench — the discrete-event fleet simulator (`ether::sim`): a
+//! multi-hour zipf-1M virtual trace replayed in wall-clock seconds,
+//! cross-validated against the real serving stack, plus the offline
+//! auto-tuning sweep.
+//!
+//! Three stages:
+//!
+//! 1. **Capacity**: a zipf-1M trace (2^20 request-events in full mode,
+//!    virtual span measured in hours) through a 4-shard capacity-mode
+//!    sim. Asserts the run beats realtime and finishes under 60 s.
+//! 2. **Cross-validation**: a short zipf trace driven through BOTH the
+//!    simulator and the real `Server::pump_pool` stack (real merges,
+//!    real scheduler). Driven at identical virtual instants the release
+//!    orderings must match *exactly*; driven paced in wall-clock, the
+//!    measured req/s must agree with the simulated virtual req/s within
+//!    [`XVAL_TOLERANCE`].
+//! 3. **Tune**: the default 48-point grid over an overloaded trace.
+//!
+//! Emits `BENCH_sim_capacity.json` (with the `xval_tolerance` band) and
+//! `BENCH_sim_tune.json` (ranked rows) when `ETHER_BENCH_JSON` is set.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use ether::coordinator::loadgen::{self, schedule_trace, LoadGenCfg, Scenario};
+use ether::coordinator::{
+    AdapterEngine, AdapterRegistry, ExecutionPolicy, ExecutionStrategy, FleetCfg, MergeEngine,
+    Request, SchedulerCfg, Server, StrategyKind,
+};
+use ether::peft::apply::{base_layout_for, ModelDims};
+use ether::sim::{simulate, tune, Calibration, SimCfg, TuneGrid};
+use ether::util::benchkit;
+use ether::util::json::Value;
+use ether::util::rng::Rng;
+use ether::util::runtimecfg::RuntimeCfg;
+
+/// Simulated vs measured throughput must agree within this factor on
+/// the paced cross-validation trace. The band is wide because the
+/// measured side carries sleep jitter and drain tails the virtual
+/// clock does not model; release *ordering* is held to exact equality.
+const XVAL_TOLERANCE: f64 = 3.0;
+
+/// Stage 1 — the faster-than-realtime capacity run: a fleet-scale
+/// zipf-1M trace with a 15 ms mean inter-arrival gap (hours of virtual
+/// span in full mode) through a 4-shard, 1-worker-per-shard sim.
+fn capacity_run(quick: bool) -> Value {
+    let n_requests: usize = if quick { 1 << 14 } else { 1 << 20 };
+    let arrivals = loadgen::generate(&LoadGenCfg {
+        n_adapters: 1 << 20,
+        n_requests,
+        seed: 99,
+        scenario: Scenario::Zipf1M { exponent: 1.05 },
+        mean_gap_us: 15_000,
+        ..Default::default()
+    });
+    let hot = 64;
+    let cfg = SimCfg {
+        fleet: FleetCfg {
+            shards: 4,
+            workers_per_shard: 1,
+            hot_threshold: hot,
+            policy: ExecutionPolicy::TrafficAware { hot_threshold: hot },
+            sched: SchedulerCfg {
+                max_batch: 8,
+                max_wait: Duration::from_millis(2),
+                quantum: 4,
+                max_queue_per_adapter: 64,
+                max_pending: 1024,
+            },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let report = simulate(&cfg, &Calibration::default(), &arrivals);
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    let virtual_s = report.sim_span_us as f64 / 1e6;
+    let speedup = virtual_s / wall_s;
+
+    assert_eq!(report.released + report.shed, report.requests, "capacity conservation");
+    assert!(report.events >= n_requests as u64, "every arrival is at least one event");
+    assert!(wall_s < 60.0, "capacity run must finish in <60 s (took {wall_s:.1} s)");
+    if !quick {
+        assert!(report.events >= 1 << 20, "full mode must replay >=1M request-events");
+        assert!(speedup > 1.0, "the simulator must beat realtime ({speedup:.1}x)");
+    }
+    println!(
+        "capacity: {} events ({} requests) | {:.0} virtual s in {:.2} wall s ({:.0}x realtime) \
+         | released {} shed {} | p50 {:.2} ms p95 {:.2} ms | merges {} swaps {} page-ins {}",
+        report.events,
+        report.requests,
+        virtual_s,
+        wall_s,
+        speedup,
+        report.released,
+        report.shed,
+        report.p50_ms,
+        report.p95_ms,
+        report.merges,
+        report.swaps,
+        report.page_ins,
+    );
+    Value::obj(vec![
+        ("wall_s", Value::num(wall_s)),
+        ("virtual_s", Value::num(virtual_s)),
+        ("speedup_vs_realtime", Value::num(speedup)),
+        ("report", report.to_json()),
+    ])
+}
+
+/// A fresh real serving stack (host engine, real blocked-parallel
+/// merges) over the same `user{i}` id space the trace targets.
+fn real_stack(n_adapters: usize, sched: SchedulerCfg) -> (Server, AdapterEngine) {
+    let dims = ModelDims { d_model: 64, d_ff: 128, n_layers: 2 };
+    let layout = base_layout_for(dims);
+    let mut rng = Rng::new(7);
+    let base: Vec<f32> = rng.normal_vec(layout.total, 0.05);
+    let merger = Arc::new(MergeEngine::new(dims, base, &layout, 2, 4).unwrap());
+    let engine = AdapterEngine::host(merger, ExecutionPolicy::Static(StrategyKind::Merged));
+    let mut registry = AdapterRegistry::new();
+    registry.register_fleet(n_adapters, "ether_n4", "host", dims, 42).unwrap();
+    (Server::new(registry, sched), engine)
+}
+
+/// Stage 2 — cross-validation against the real stack. One trace, three
+/// replays: the sim (single ideal shard, event recording on), the pure
+/// scheduler trace, and the real `pump_pool` stack driven at the same
+/// virtual instants — all three release orderings must agree exactly.
+/// A fourth, wall-clock-paced real replay then checks throughput
+/// against the sim's virtual req/s within the tolerance band.
+fn xval(quick: bool) -> Value {
+    let n_requests = 256;
+    let n_adapters = 12;
+    let sched = SchedulerCfg {
+        max_batch: 4,
+        max_wait: Duration::from_millis(4),
+        quantum: 2,
+        max_queue_per_adapter: 16,
+        max_pending: 64,
+    };
+    let arrivals = loadgen::generate(&LoadGenCfg {
+        n_adapters,
+        n_requests,
+        seed: 7,
+        scenario: Scenario::Zipf { exponent: 1.2 },
+        mean_gap_us: 2_000,
+        ..Default::default()
+    });
+
+    // Sim side: one ideal shard reproduces the scheduler's decision
+    // sequence (pinned again below against schedule_trace).
+    let cfg = SimCfg {
+        fleet: FleetCfg { shards: 1, workers_per_shard: 0, sched, ..Default::default() },
+        record_events: true,
+        ..Default::default()
+    };
+    let report = simulate(&cfg, &Calibration::default(), &arrivals);
+    let sim_flat: Vec<(String, u64)> = report
+        .event_log
+        .iter()
+        .flat_map(|r| r.ids.iter().map(|&id| (r.adapter.clone(), id)))
+        .collect();
+
+    let (trace, _) = schedule_trace(&sched, &arrivals);
+    let trace_flat: Vec<(String, u64)> =
+        trace.iter().flat_map(|(a, ids)| ids.iter().map(|&id| (a.clone(), id))).collect();
+    assert_eq!(sim_flat, trace_flat, "sim vs scheduler-trace release ordering");
+
+    // Real stack, driven at the *virtual* instants (`t0 + at`) the sim
+    // and the trace used — decisions are wall-clock-free, so ordering
+    // must match exactly, while every batch still runs a real merge.
+    let (mut server, engine) = real_stack(n_adapters, sched);
+    let t0 = Instant::now();
+    let mut real_flat: Vec<(String, u64)> = vec![];
+    for (i, a) in arrivals.iter().enumerate() {
+        let now = t0 + a.at;
+        let _ = server.submit(Request {
+            id: i as u64,
+            adapter: format!("user{}", a.adapter),
+            prompt: a.prompt.clone(),
+            max_new: a.max_new,
+            enqueued: now,
+        });
+        server.pump_pool(&engine, now, 2, |r| real_flat.push((r.adapter, r.id))).unwrap();
+    }
+    // Shutdown drain, same `drain_all` convention as the sim and the
+    // trace — batches still execute through the real engine.
+    for (id, batch) in server.sched.drain_all() {
+        let adapter = server.registry.get(&id).unwrap();
+        let prompts: Vec<Vec<i32>> = batch.iter().map(|r| r.prompt.clone()).collect();
+        let max_new = batch.iter().map(|r| r.max_new).max().unwrap_or(8);
+        engine.generate(&adapter, &prompts, max_new).unwrap();
+        for r in &batch {
+            real_flat.push((id.clone(), r.id));
+        }
+    }
+    assert_eq!(real_flat, trace_flat, "real pump_pool stack vs sim release ordering");
+    println!(
+        "xval ordering: sim == scheduler trace == real stack on {} releases",
+        real_flat.len()
+    );
+
+    // Throughput: pace the real stack by the trace's arrival clock (the
+    // underloaded regime where virtual and wall timelines should agree)
+    // and compare measured req/s against the sim's virtual req/s.
+    let reqs = if quick { 128 } else { n_requests };
+    let (mut server, engine) = real_stack(n_adapters, sched);
+    let t0 = Instant::now();
+    let mut served = 0u64;
+    for (i, a) in arrivals.iter().take(reqs).enumerate() {
+        let target = t0 + a.at;
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let _ = server.submit(Request {
+            id: i as u64,
+            adapter: format!("user{}", a.adapter),
+            prompt: a.prompt.clone(),
+            max_new: a.max_new,
+            enqueued: Instant::now(),
+        });
+        server.pump_pool(&engine, Instant::now(), 2, |_| served += 1).unwrap();
+    }
+    let late = Instant::now() + sched.max_wait + Duration::from_millis(1);
+    server.pump_pool(&engine, late, 2, |_| served += 1).unwrap();
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    let measured = served as f64 / wall_s;
+
+    let paced = simulate(&cfg, &Calibration::default(), &arrivals[..reqs]);
+    let simulated = paced.virtual_req_per_s;
+    let ratio = measured / simulated.max(1e-9);
+    println!(
+        "xval throughput: measured {measured:.0} req/s vs simulated {simulated:.0} req/s \
+         (ratio {ratio:.2}, tolerance {XVAL_TOLERANCE}x)"
+    );
+    assert!(
+        ratio < XVAL_TOLERANCE && ratio > 1.0 / XVAL_TOLERANCE,
+        "measured {measured:.0} req/s vs simulated {simulated:.0} req/s is outside the \
+         {XVAL_TOLERANCE}x band"
+    );
+
+    Value::obj(vec![
+        ("ordering_releases", Value::num(real_flat.len() as f64)),
+        ("measured_req_per_s", Value::num(measured)),
+        ("simulated_req_per_s", Value::num(simulated)),
+        ("ratio", Value::num(ratio)),
+    ])
+}
+
+/// Stage 3 — the offline auto-tuning sweep: the default 48-point grid
+/// over an overloaded zipf trace, emitted as ranked rows.
+fn tune_sweep() -> Value {
+    let arrivals = loadgen::generate(&LoadGenCfg {
+        n_adapters: 16,
+        n_requests: 600,
+        seed: 99,
+        mean_gap_us: 10,
+        scenario: Scenario::Zipf { exponent: 1.2 },
+        ..Default::default()
+    });
+    let base = SimCfg {
+        fleet: FleetCfg {
+            workers_per_shard: 1,
+            sched: SchedulerCfg { max_pending: 256, ..Default::default() },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let grid = TuneGrid::default();
+    let t0 = Instant::now();
+    let ranked = tune(&base, &Calibration::default(), &arrivals, &grid);
+    let wall_s = t0.elapsed().as_secs_f64();
+    assert_eq!(ranked.len(), grid.len(), "the sweep covers the whole grid");
+    assert!(ranked.windows(2).all(|w| w[0].score <= w[1].score), "ranked best-first");
+    println!("tune: swept {} configs in {wall_s:.2} s; top 3:", ranked.len());
+    for r in ranked.iter().take(3) {
+        println!(
+            "  score {:<10.1} shards {} quantum {} queue {} hot {} cache {} | \
+             shed {:.2}% p95 {:.2} ms",
+            r.score,
+            r.point.shards,
+            r.point.quantum,
+            r.point.max_queue_per_adapter,
+            r.point.hot_threshold,
+            r.point.cache_pages,
+            r.report.shed_rate * 100.0,
+            r.report.p95_ms,
+        );
+    }
+    Value::obj(vec![
+        ("name", Value::s("sim tune".to_string())),
+        ("n_configs", Value::num(ranked.len() as f64)),
+        ("trace_requests", Value::num(arrivals.len() as f64)),
+        ("wall_s", Value::num(wall_s)),
+        ("rows", Value::arr(ranked.iter().map(|r| r.to_json()).collect())),
+    ])
+}
+
+fn main() {
+    let quick = RuntimeCfg::get().bench_quick;
+    println!("== bench: sim capacity (quick: {quick}) ==");
+    let capacity = capacity_run(quick);
+    let xval_row = xval(quick);
+    let tune_payload = tune_sweep();
+
+    let payload = Value::obj(vec![
+        ("name", Value::s("sim capacity".to_string())),
+        ("quick", Value::Bool(quick)),
+        ("xval_tolerance", Value::num(XVAL_TOLERANCE)),
+        ("capacity", capacity),
+        ("xval", xval_row),
+    ]);
+    benchkit::emit_named_json("sim capacity", &payload);
+    benchkit::emit_named_json("sim tune", &tune_payload);
+}

@@ -519,6 +519,40 @@ pub enum ExecutionPolicy {
     },
 }
 
+impl ExecutionPolicy {
+    /// Pure promotion decision: does a cumulative released-request count
+    /// earn a merged buffer under this policy? `Static` never promotes
+    /// (the strategy is fixed). This is the single site of the
+    /// hot-threshold comparison — [`AdapterEngine::record_traffic`] and
+    /// the fleet simulator ([`crate::sim`]) both call it, so the
+    /// simulated promotion schedule can never drift from the served one.
+    pub fn promotes(&self, cumulative_released: u64) -> bool {
+        match self {
+            ExecutionPolicy::Static(_) => false,
+            ExecutionPolicy::TrafficAware { hot_threshold } => {
+                cumulative_released >= *hot_threshold
+            }
+        }
+    }
+
+    /// Pure strategy pick given an adapter's (sticky) promotion state:
+    /// `Static` always routes to its one strategy; `TrafficAware` routes
+    /// promoted adapters to the merged cache and the cold tail to the
+    /// merge-free path.
+    pub fn kind_for(&self, promoted: bool) -> StrategyKind {
+        match self {
+            ExecutionPolicy::Static(kind) => *kind,
+            ExecutionPolicy::TrafficAware { .. } => {
+                if promoted {
+                    StrategyKind::Merged
+                } else {
+                    StrategyKind::OnTheFly
+                }
+            }
+        }
+    }
+}
+
 /// The unified execution facade: owns the strategies its
 /// [`ExecutionPolicy`] can select, routes every batch, and keeps the
 /// per-strategy counters [`ServerStats`](super::server::ServerStats)
@@ -600,16 +634,7 @@ impl<'a> AdapterEngine<'a> {
 
     /// Strategy the policy selects for this adapter right now.
     pub fn strategy_for(&self, adapter: &str) -> StrategyKind {
-        match self.policy {
-            ExecutionPolicy::Static(kind) => kind,
-            ExecutionPolicy::TrafficAware { .. } => {
-                if self.promoted.lock().unwrap().contains(adapter) {
-                    StrategyKind::Merged
-                } else {
-                    StrategyKind::OnTheFly
-                }
-            }
-        }
+        self.policy.kind_for(self.promoted.lock().unwrap().contains(adapter))
     }
 
     fn leaf(&self, kind: StrategyKind) -> Result<&(dyn ExecutionStrategy + 'a)> {
@@ -669,14 +694,14 @@ impl ExecutionStrategy for AdapterEngine<'_> {
     }
 
     fn record_traffic(&self, adapter: &str, requests: u64) {
-        let ExecutionPolicy::TrafficAware { hot_threshold } = self.policy else {
+        if matches!(self.policy, ExecutionPolicy::Static(_)) {
             return;
-        };
+        }
         let hot = {
             let mut t = self.traffic.lock().unwrap();
             let entry = t.entry(adapter.to_string()).or_insert(0);
             *entry = (*entry).max(requests);
-            *entry >= hot_threshold
+            self.policy.promotes(*entry)
         };
         if hot {
             let mut p = self.promoted.lock().unwrap();

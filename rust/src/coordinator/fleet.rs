@@ -181,6 +181,82 @@ impl ConsistentRing {
     }
 }
 
+/// Pure replica pick: the least-pending member of a replica set, ties
+/// breaking to the earliest entry (the home shard leads the set, so an
+/// idle fleet always routes home). Shared by [`ShardedFleet::submit`]'s
+/// routing and the fleet simulator ([`crate::sim`]), so simulated
+/// routing can never drift from production routing.
+pub fn least_pending_replica(replicas: &[usize], pending: &[usize]) -> usize {
+    replicas
+        .iter()
+        .copied()
+        .min_by_key(|&s| pending.get(s).copied().unwrap_or(0))
+        .unwrap_or(0)
+}
+
+/// Pure steal plan for one rebalance pass over per-shard pending
+/// counts: `(victim, thief, cap)` when the most→least loaded gap
+/// exceeds `steal_margin`, else `None`. The cap is half the gap (so one
+/// steal cannot invert the imbalance), bounded by `steal_max`. Shared
+/// by [`ShardedFleet::rebalance`] and the simulator.
+pub fn steal_plan(
+    pending: &[usize],
+    steal_margin: usize,
+    steal_max: usize,
+) -> Option<(usize, usize, usize)> {
+    let victim = (0..pending.len()).max_by_key(|&i| pending[i])?;
+    let thief = (0..pending.len()).min_by_key(|&i| pending[i])?;
+    let gap = pending[victim].saturating_sub(pending[thief]);
+    if victim == thief || gap <= steal_margin {
+        return None;
+    }
+    Some((victim, thief, steal_max.min((gap / 2).max(1))))
+}
+
+/// Shard-count auto-scaling knobs: a shed-rate band. Above `shed_hi`
+/// the fleet recommends one more shard (the consistent ring moves only
+/// ~1/(N+1) of the id space per added shard, so growth is cheap);
+/// below `shed_lo` with headroom it recommends one fewer. Disabled by
+/// default — the recommendation is advisory, surfaced through
+/// [`FleetSnapshot::recommended_shards`] and validated offline in the
+/// simulator rather than resizing a live fleet mid-trace.
+#[derive(Clone, Copy, Debug)]
+pub struct AutoScale {
+    /// When false, [`recommend_shards`] always returns the current count.
+    pub enabled: bool,
+    /// Shed rate at or above which one more shard is recommended.
+    pub shed_hi: f64,
+    /// Shed rate at or below which one fewer shard is recommended.
+    pub shed_lo: f64,
+    /// Never recommend below this.
+    pub min_shards: usize,
+    /// Never recommend above this.
+    pub max_shards: usize,
+}
+
+impl Default for AutoScale {
+    fn default() -> AutoScale {
+        AutoScale { enabled: false, shed_hi: 0.05, shed_lo: 0.005, min_shards: 1, max_shards: 64 }
+    }
+}
+
+/// Pure auto-scaling decision: the recommended shard count for an
+/// observed shed rate. One step at a time — each ±1 step moves only the
+/// ring's bounded ~1/(N+1) key share, so following a recommendation is
+/// always a cheap resize.
+pub fn recommend_shards(current: usize, shed_rate: f64, auto: &AutoScale) -> usize {
+    if !auto.enabled {
+        return current;
+    }
+    if shed_rate >= auto.shed_hi {
+        (current + 1).min(auto.max_shards.max(1))
+    } else if shed_rate <= auto.shed_lo && current > auto.min_shards.max(1) {
+        current - 1
+    } else {
+        current
+    }
+}
+
 /// Fleet-level knobs. Shard internals (scheduler bounds, execution
 /// policy, merge cache) are per-shard copies of the usual configs; the
 /// CLI and benches resolve these from [`crate::util::runtimecfg`] knobs
@@ -213,6 +289,9 @@ pub struct FleetCfg {
     pub merge_cache: usize,
     /// Per-shard merge-worker budget. Default 2.
     pub merge_workers: usize,
+    /// Shed-rate-driven shard-count recommendation (advisory; off by
+    /// default). See [`recommend_shards`].
+    pub auto_scale: AutoScale,
 }
 
 impl Default for FleetCfg {
@@ -229,6 +308,7 @@ impl Default for FleetCfg {
             policy: ExecutionPolicy::TrafficAware { hot_threshold: 32 },
             merge_cache: 4,
             merge_workers: 2,
+            auto_scale: AutoScale::default(),
         }
     }
 }
@@ -325,12 +405,10 @@ impl ShardedFleet {
     fn route(&mut self, adapter: &str) -> usize {
         let home = self.ring.shard_for(adapter);
         if self.cfg.replicas > 1 && self.hot.contains(adapter) {
-            let best = self
-                .ring
-                .replicas_for(adapter, self.cfg.replicas)
-                .into_iter()
-                .min_by_key(|&s| self.shards[s].server.sched.pending())
-                .unwrap_or(home);
+            let pending: Vec<usize> =
+                self.shards.iter().map(|s| s.server.sched.pending()).collect();
+            let best =
+                least_pending_replica(&self.ring.replicas_for(adapter, self.cfg.replicas), &pending);
             if best != home {
                 self.replica_routes += 1;
             }
@@ -370,13 +448,11 @@ impl ShardedFleet {
         for _ in 0..self.shards.len() * 2 {
             let pending: Vec<usize> =
                 self.shards.iter().map(|s| s.server.sched.pending()).collect();
-            let victim = (0..pending.len()).max_by_key(|&i| pending[i]).unwrap_or(0);
-            let thief = (0..pending.len()).min_by_key(|&i| pending[i]).unwrap_or(0);
-            let gap = pending[victim].saturating_sub(pending[thief]);
-            if victim == thief || gap <= self.cfg.steal_margin {
+            let Some((victim, thief, cap)) =
+                steal_plan(&pending, self.cfg.steal_margin, self.cfg.steal_max)
+            else {
                 break;
-            }
-            let cap = self.cfg.steal_max.min((gap / 2).max(1));
+            };
             let Some((adapter, reqs)) = self.shards[victim].server.sched.steal_newest(cap) else {
                 break;
             };
@@ -427,8 +503,18 @@ impl ShardedFleet {
     /// plus the fleet-level routing/stealing counters and the (single,
     /// shared) store's paging stats.
     pub fn snapshot(&self) -> FleetSnapshot {
+        let shards: Vec<StatsSnapshot> =
+            self.shards.iter().map(|s| s.server.snapshot()).collect();
+        let shed_rate = {
+            let mut agg = crate::coordinator::scheduler::SchedStats::default();
+            for s in &shards {
+                agg.absorb(&s.sched);
+            }
+            agg.shed_rate()
+        };
         FleetSnapshot {
-            shards: self.shards.iter().map(|s| s.server.snapshot()).collect(),
+            recommended_shards: recommend_shards(self.shards.len(), shed_rate, &self.cfg.auto_scale),
+            shards,
             hot: self.hot.len(),
             hot_promotions: self.hot_promotions,
             replica_routes: self.replica_routes,
@@ -452,6 +538,10 @@ pub struct FleetSnapshot {
     pub steals: u64,
     pub stolen_requests: u64,
     pub store: Option<StoreStats>,
+    /// Shard count [`recommend_shards`] suggests for the observed shed
+    /// rate under [`FleetCfg::auto_scale`] (equals the current count
+    /// when auto-scaling is disabled or the rate is inside the band).
+    pub recommended_shards: usize,
 }
 
 impl FleetSnapshot {
@@ -515,6 +605,7 @@ impl FleetSnapshot {
                 ("steals", Value::num(self.steals as f64)),
                 ("stolen_requests", Value::num(self.stolen_requests as f64)),
                 ("fleet_resident_bytes", Value::num(self.resident_bytes() as f64)),
+                ("recommended_shards", Value::num(self.recommended_shards as f64)),
             ] {
                 fields.insert(k.to_string(), val);
             }
@@ -665,6 +756,51 @@ mod tests {
         f.drain(t + std::time::Duration::from_millis(50), |r| ids.push(r.id)).unwrap();
         ids.sort_unstable();
         assert_eq!(ids, (0..32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pure_decision_helpers_match_inline_semantics() {
+        // Replica pick: least pending, ties to the earliest (home-first).
+        assert_eq!(least_pending_replica(&[2, 0, 3], &[5, 1, 0, 1]), 0);
+        assert_eq!(least_pending_replica(&[1, 3], &[9, 4, 9, 4]), 1);
+        // Steal plan: gap over margin → (victim, thief, half-gap cap).
+        assert_eq!(steal_plan(&[32, 0], 2, 32), Some((0, 1, 16)));
+        assert_eq!(steal_plan(&[32, 0], 2, 4), Some((0, 1, 4)));
+        assert_eq!(steal_plan(&[5, 3], 2, 32), None, "gap at margin stays put");
+        assert_eq!(steal_plan(&[7], 0, 32), None, "one shard cannot steal");
+        // Auto-scale: disabled is the identity; the band steps by one.
+        let auto = AutoScale { enabled: true, ..Default::default() };
+        assert_eq!(recommend_shards(4, 0.5, &AutoScale::default()), 4);
+        assert_eq!(recommend_shards(4, 0.06, &auto), 5);
+        assert_eq!(recommend_shards(4, 0.0, &auto), 3);
+        assert_eq!(recommend_shards(4, 0.02, &auto), 4, "inside the band holds");
+        assert_eq!(recommend_shards(1, 0.0, &auto), 1, "min bound");
+        assert_eq!(
+            recommend_shards(64, 0.9, &AutoScale { max_shards: 64, ..auto }),
+            64,
+            "max bound"
+        );
+    }
+
+    #[test]
+    fn snapshot_surfaces_recommended_shards() {
+        let mut f = fleet(
+            2,
+            FleetCfg {
+                auto_scale: AutoScale { enabled: true, ..Default::default() },
+                policy: ExecutionPolicy::Static(StrategyKind::OnTheFly),
+                ..Default::default()
+            },
+        );
+        let t = Instant::now();
+        for i in 0..8u64 {
+            f.submit(req(i, &format!("user{i}"), t)).unwrap();
+        }
+        f.drain(t + std::time::Duration::from_millis(50), |_| {}).unwrap();
+        let snap = f.snapshot();
+        // Nothing shed → scale-down recommendation to one shard.
+        assert_eq!(snap.recommended_shards, 1);
+        assert!(snap.scenario_json("x", 1.0).dump().contains("\"recommended_shards\""));
     }
 
     #[test]

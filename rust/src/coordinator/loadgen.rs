@@ -236,6 +236,20 @@ pub fn schedule_trace(
     cfg: &SchedulerCfg,
     arrivals: &[Arrival],
 ) -> (Vec<(String, Vec<u64>)>, SchedStats) {
+    let (timed, stats) = schedule_trace_timed(cfg, arrivals);
+    (timed.into_iter().map(|(_, id, ids)| (id, ids)).collect(), stats)
+}
+
+/// [`schedule_trace`] with each release stamped by its virtual decision
+/// time in µs from trace start (drain releases carry the trace's span —
+/// they happen "after" the last arrival, at shutdown). The timed form
+/// is what the fleet simulator's parity tests compare against: the sim
+/// must reproduce not just the release ordering but the decision
+/// instants of the real scheduler.
+pub fn schedule_trace_timed(
+    cfg: &SchedulerCfg,
+    arrivals: &[Arrival],
+) -> (Vec<(u64, String, Vec<u64>)>, SchedStats) {
     let t0 = Instant::now();
     let mut sched = Scheduler::new(*cfg);
     let mut trace = vec![];
@@ -244,11 +258,12 @@ pub fn schedule_trace(
         // Sheds are part of the schedule, captured in the stats.
         let _ = sched.offer(a.to_request(i as u64, t0));
         while let Some((id, batch)) = sched.pop_ready(now) {
-            trace.push((id, batch.iter().map(|r| r.id).collect()));
+            trace.push((a.at.as_micros() as u64, id, batch.iter().map(|r| r.id).collect()));
         }
     }
+    let span = arrivals.last().map(|a| a.at.as_micros() as u64).unwrap_or(0);
     for (id, batch) in sched.drain_all() {
-        trace.push((id, batch.iter().map(|r| r.id).collect()));
+        trace.push((span, id, batch.iter().map(|r| r.id).collect()));
     }
     (trace, sched.stats().clone())
 }

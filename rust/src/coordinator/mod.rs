@@ -156,7 +156,7 @@ pub use batcher::{Batcher, BatcherCfg, Request};
 pub use engine::{
     AdapterEngine, ExecutionPolicy, ExecutionStrategy, StrategyCounters, StrategyKind,
 };
-pub use fleet::{ConsistentRing, FleetCfg, FleetSnapshot, ShardedFleet};
+pub use fleet::{AutoScale, ConsistentRing, FleetCfg, FleetSnapshot, ShardedFleet};
 pub use registry::{
     AdapterProvisioner, AdapterRegistry, MergeEngine, MergedCache, SwapMode, SwapSlot,
 };

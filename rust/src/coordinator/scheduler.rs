@@ -97,11 +97,28 @@ impl Default for SchedulerCfg {
 }
 
 impl SchedulerCfg {
-    fn quantum_or_batch(&self) -> usize {
+    /// Effective DRR credit per ring visit: `quantum`, or `max_batch`
+    /// when `quantum == 0` (plain round-robin).
+    pub fn quantum_or_batch(&self) -> usize {
         if self.quantum == 0 {
             self.max_batch
         } else {
             self.quantum
+        }
+    }
+
+    /// Pure admission decision given the target adapter's current queue
+    /// depth and the global pending total — the single site of the
+    /// shed-bound comparison, shared by [`Scheduler::offer`],
+    /// [`Scheduler::at_capacity`], and capacity models built on this
+    /// config (the fleet simulator in [`crate::sim`]).
+    pub fn admit(&self, queue_len: usize, pending: usize) -> Result<(), ShedReason> {
+        if pending >= self.max_pending {
+            Err(ShedReason::GlobalQueueFull)
+        } else if queue_len >= self.max_queue_per_adapter {
+            Err(ShedReason::AdapterQueueFull)
+        } else {
+            Ok(())
         }
     }
 }
@@ -271,11 +288,11 @@ impl Scheduler {
     /// clients block on one response per request) check this and drain
     /// the scheduler first — backpressure instead of load shedding.
     pub fn at_capacity(&self, adapter: &str) -> bool {
-        self.pending >= self.cfg.max_pending
-            || self
-                .queues
-                .get(adapter)
-                .is_some_and(|aq| aq.q.len() >= self.cfg.max_queue_per_adapter)
+        self.cfg.admit(self.queue_len(adapter), self.pending).is_err()
+    }
+
+    fn queue_len(&self, adapter: &str) -> usize {
+        self.queues.get(adapter).map(|aq| aq.q.len()).unwrap_or(0)
     }
 
     /// Admit `req` or shed it. Shedding bumps the matching counter and
@@ -284,15 +301,12 @@ impl Scheduler {
     /// Callers that prefer lossless backpressure should gate on
     /// [`Scheduler::at_capacity`] and drain before offering.
     pub fn offer(&mut self, req: Request) -> Result<(), ShedReason> {
-        if self.pending >= self.cfg.max_pending {
-            self.stats.shed_global_full += 1;
-            return Err(ShedReason::GlobalQueueFull);
-        }
-        if let Some(aq) = self.queues.get(&req.adapter) {
-            if aq.q.len() >= self.cfg.max_queue_per_adapter {
-                self.stats.shed_adapter_full += 1;
-                return Err(ShedReason::AdapterQueueFull);
+        if let Err(reason) = self.cfg.admit(self.queue_len(&req.adapter), self.pending) {
+            match reason {
+                ShedReason::GlobalQueueFull => self.stats.shed_global_full += 1,
+                ShedReason::AdapterQueueFull => self.stats.shed_adapter_full += 1,
             }
+            return Err(reason);
         }
         let adapter = req.adapter.clone();
         let aq = self

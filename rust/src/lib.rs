@@ -29,6 +29,7 @@
 //! |                | generation control, subject-driven)                   |
 //! | [`train`]      | PJRT + host-native training, LR schedules, checkpoints|
 //! | [`coordinator`]| adapter registry, fair scheduler, loadgen, serving    |
+//! | [`sim`]        | discrete-event fleet simulator + offline auto-tuning  |
 //! | [`eval`]       | metric suite + evaluation harnesses                   |
 //! | [`exp`]        | one driver per paper table / figure                   |
 
@@ -39,6 +40,7 @@ pub mod runtime;
 pub mod data;
 pub mod train;
 pub mod coordinator;
+pub mod sim;
 pub mod eval;
 pub mod exp;
 

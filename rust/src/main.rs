@@ -10,6 +10,9 @@
 //! ether fleet      [--shards N] [--adapters N] [--requests N] [--resident N]
 //!                  [--page-kb K] [--cache-pages P] [--workers W] [--store PATH]
 //!                  # sharded host serving over the paged adapter store (no PJRT)
+//! ether simulate   [--scenario S] [--adapters N] [--requests N] [--shards N] [--workers W]
+//!                  [--mean-gap-us G] [--seed S] [--calib DIR] [--tune]
+//!                  # virtual-time capacity run through the real decision stack (no PJRT)
 //! ether exp        <table1|fig3|…|all> [--quick] [--steps N]
 //! ether info                                                 # manifest summary
 //! ```
@@ -54,6 +57,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "eval" => cmd_eval(args),
         "serve" => cmd_serve(args),
         "fleet" => cmd_fleet(args),
+        "simulate" => cmd_simulate(args),
         "exp" => {
             let id = args
                 .positional
@@ -80,6 +84,7 @@ commands:
   eval        score the un-tuned base on the MC suites
   serve       multi-adapter serving demo with dynamic batching
   fleet       sharded fleet serving over the paged adapter store (host, no PJRT)
+  simulate    virtual-time fleet capacity simulation + offline config tuning
   exp <id>    regenerate a paper table/figure (table1..12, fig3..8, all)
   info        artifact + method summary from the manifest";
 
@@ -475,6 +480,133 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             st.cache_misses,
             snap.resident_bytes() >> 10,
         );
+    }
+    Ok(())
+}
+
+/// Virtual-clock capacity run: replay a synthetic trace through the
+/// production scheduler / router / execution-policy stack under the
+/// simulator's cost model — multi-hour traces in wall-clock seconds,
+/// bit-identical across runs (see `ether::sim`). `--tune` additionally
+/// sweeps the capacity knobs over the same trace and prints the ranked
+/// top rows. Runs on a bare checkout — no PJRT artifacts needed.
+fn cmd_simulate(args: &Args) -> Result<()> {
+    use ether::coordinator::loadgen::{generate, parse_scenario, LoadGenCfg};
+    use ether::sim::{simulate, tune, Calibration, SimCfg, TuneGrid};
+
+    let rc = RuntimeCfg::get();
+    let shards = runtimecfg::resolve(opt_usize(args, "shards")?, rc.fleet_shards, 4).max(1);
+    let n_adapters = args.usize_or("adapters", 4096)?.max(1);
+    let n_requests = args.usize_or("requests", 100_000)?;
+    let workers = args.usize_or("workers", 1)?;
+    let seed = args.usize_or("seed", 0x5eed)? as u64;
+    let mean_gap_us = args.usize_or("mean-gap-us", 200)? as u64;
+    let scenario = parse_scenario(&args.str_or("scenario", "zipf-1M"))?;
+    let calib_dir =
+        args.opt("calib").map(std::path::PathBuf::from).or_else(|| rc.sim_calib.clone());
+    let do_tune = args.flag("tune");
+    args.finish()?;
+
+    let cal = match &calib_dir {
+        Some(dir) => {
+            let cal = Calibration::from_bench_json(dir)?;
+            if cal.is_calibrated() {
+                println!("calibrated from {dir:?}: {}", cal.calibrated.join(", "));
+            } else {
+                println!("no usable BENCH_*.json under {dir:?}; using the default cost model");
+            }
+            cal
+        }
+        None => {
+            println!("cost model: defaults (set --calib or ETHER_SIM_CALIB to calibrate)");
+            Calibration::default()
+        }
+    };
+
+    let hot = (n_requests as u64 / 16).max(8);
+    let cfg = SimCfg {
+        fleet: FleetCfg {
+            shards,
+            workers_per_shard: workers,
+            hot_threshold: hot,
+            policy: ExecutionPolicy::TrafficAware { hot_threshold: hot },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let arrivals = generate(&LoadGenCfg {
+        n_adapters,
+        n_requests,
+        seed,
+        scenario,
+        mean_gap_us,
+        ..Default::default()
+    });
+    let t0 = std::time::Instant::now();
+    let report = simulate(&cfg, &cal, &arrivals);
+    let dt = t0.elapsed().as_secs_f64();
+    let span_s = report.sim_span_us as f64 / 1e6;
+    println!(
+        "simulated {} requests / {} events over {span_s:.1} virtual s in {dt:.2} wall s \
+         ({:.0}x realtime) | released {} shed {} ({:.2}%)",
+        report.requests,
+        report.events,
+        span_s / dt.max(1e-9),
+        report.released,
+        report.shed,
+        report.shed_rate * 100.0,
+    );
+    println!(
+        "virtual {:.0} req/s | p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms | merges {} \
+         (hits {}) swaps {} | page-ins {} page-outs {} | peak resident {} KiB",
+        report.virtual_req_per_s,
+        report.p50_ms,
+        report.p95_ms,
+        report.p99_ms,
+        report.merges,
+        report.merged_hits,
+        report.swaps,
+        report.page_ins,
+        report.page_outs,
+        report.peak_resident_bytes >> 10,
+    );
+    println!(
+        "hot promotions {} (engine {}) replica-routes {} steals {} ({} reqs) | \
+         event-log {:016x} | recommended shards: {}",
+        report.hot_promotions,
+        report.promotions,
+        report.replica_routes,
+        report.steals,
+        report.stolen_requests,
+        report.event_log_hash,
+        report.recommended_shards,
+    );
+
+    if do_tune {
+        let grid = TuneGrid::default();
+        println!("tuning: sweeping {} configurations over the same trace…", grid.len());
+        let t1 = std::time::Instant::now();
+        let ranked = tune(&cfg, &cal, &arrivals, &grid);
+        println!(
+            "swept {} configs in {:.2}s; top 5 (lower score is better):",
+            ranked.len(),
+            t1.elapsed().as_secs_f64()
+        );
+        println!("  score        shards quantum queue hot cache | shed%   p95ms  resident");
+        for r in ranked.iter().take(5) {
+            println!(
+                "  {:<12.1} {:>6} {:>7} {:>5} {:>3} {:>5} | {:>5.2} {:>7.2} {:>7} KiB",
+                r.score,
+                r.point.shards,
+                r.point.quantum,
+                r.point.max_queue_per_adapter,
+                r.point.hot_threshold,
+                r.point.cache_pages,
+                r.report.shed_rate * 100.0,
+                r.report.p95_ms,
+                r.report.peak_resident_bytes >> 10,
+            );
+        }
     }
     Ok(())
 }

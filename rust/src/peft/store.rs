@@ -10,22 +10,35 @@
 //! zipf head so the resident footprint is `O(cache_pages × page_bytes)`
 //! regardless of how many adapters exist.
 //!
-//! Layout: records are appended into the current **open page** (an
-//! in-memory buffer). When a record no longer fits, the open page is
-//! sealed — padded to `page_bytes`, written at `page_no × page_bytes`,
-//! counted as a **page-out** — and a fresh page opens. Reads hit, in
-//! order: the open page, the page cache, and finally the disk (counted
-//! as a **page-in**). Every record carries an FNV-1a checksum verified
-//! on read.
+//! Layout: each record is self-describing on disk — a fixed
+//! [`HEADER_BYTES`] header (magic, string lengths, payload length, FNV-1a
+//! payload checksum) followed by the id / method / cfg strings and the
+//! raw little-endian f32 payload. Records are appended into the current
+//! **open page** (an in-memory buffer) and never span pages. When a
+//! record no longer fits, the open page is sealed — padded to
+//! `page_bytes`, written at `page_no × page_bytes`, counted as a
+//! **page-out** — and a fresh page opens. Reads hit, in order: the open
+//! page, the page cache, and finally the disk (counted as a **page-in**).
+//! The checksum is verified on every read.
+//!
+//! Durability: [`PagedStore::create`] truncates (fresh spill space);
+//! [`PagedStore::open`] instead **recovers** an existing page file by
+//! scanning record headers page by page — every fully-written record is
+//! re-indexed (later copies of an id win, since file order is append
+//! order), a torn tail record from a crash mid-write is dropped, and the
+//! torn tail is padded back to page alignment so subsequent page-ins
+//! read cleanly.
+//!
+//! Space: re-`put`ting an id appends a fresh copy and the old record's
+//! bytes become **dead** (tracked in [`StoreStats::dead_bytes`]).
+//! [`PagedStore::compact`] rewrites live records into a fresh page file
+//! (temp file + atomic rename) and reclaims them; `put` triggers it
+//! automatically once dead bytes exceed [`StoreCfg::compact_ratio`] of
+//! the file's record bytes.
 //!
 //! Failure policy: **errors, never panics**. A short read (truncated
 //! file), a checksum mismatch (bit rot / external corruption), an
 //! unknown id, or a record larger than a page all surface as `Err`.
-//!
-//! Non-goals (documented trade-offs): the page file is ephemeral spill
-//! space, re-created on open; re-`put`ting an id leaks the old record's
-//! bytes (the index just points at the new copy); `flush` seals a
-//! partially-filled page, wasting its tail. All fine at KB-sized records.
 
 use std::collections::HashMap;
 use std::io::{Read, Seek, SeekFrom, Write};
@@ -36,21 +49,33 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::rng::hash64;
 
+/// Record header: `[magic u32][id_len u16][method_len u16][cfg_len u16]
+/// [reserved u16][nbytes u32][checksum u64]`, all little-endian. The
+/// checksum covers the payload bytes only.
+const HEADER_BYTES: usize = 24;
+const RECORD_MAGIC: u32 = 0x4554_4852; // "ETHR"
+
 /// Store geometry. Defaults match the `ETHER_STORE_PAGE_KB` /
 /// `ETHER_STORE_CACHE_PAGES` knob defaults (64 KiB pages, 8 cached).
 #[derive(Clone, Debug)]
 pub struct StoreCfg {
     /// Path of the page file itself (parent directories are created).
     pub path: PathBuf,
-    /// Page size in bytes; every record must fit in one page.
+    /// Page size in bytes; every framed record must fit in one page.
     pub page_bytes: usize,
     /// LRU page-cache capacity, in pages.
     pub cache_pages: usize,
+    /// Auto-compaction trigger: when `dead_bytes / (dead + live)` on a
+    /// `put` reaches this ratio, the store compacts itself. Values
+    /// outside `(0, 1)` disable auto-compaction (`compact()` still works
+    /// explicitly). Default 0.5 — the file never exceeds ~2× its live
+    /// bytes (rounded up to whole pages).
+    pub compact_ratio: f64,
 }
 
 impl StoreCfg {
     pub fn new(path: impl Into<PathBuf>) -> StoreCfg {
-        StoreCfg { path: path.into(), page_bytes: 64 * 1024, cache_pages: 8 }
+        StoreCfg { path: path.into(), page_bytes: 64 * 1024, cache_pages: 8, compact_ratio: 0.5 }
     }
 
     pub fn page_bytes(mut self, n: usize) -> StoreCfg {
@@ -60,6 +85,11 @@ impl StoreCfg {
 
     pub fn cache_pages(mut self, n: usize) -> StoreCfg {
         self.cache_pages = n.max(1);
+        self
+    }
+
+    pub fn compact_ratio(mut self, r: f64) -> StoreCfg {
+        self.compact_ratio = r;
         self
     }
 }
@@ -93,16 +123,117 @@ pub struct StoreStats {
     pub cache_misses: u64,
     /// Bytes held in memory right now (open page + cached pages).
     pub resident_bytes: usize,
+    /// Framed bytes of live (indexed) records in the page file.
+    pub live_bytes: usize,
+    /// Framed bytes of overwritten records still occupying the page
+    /// file; reclaimed by [`PagedStore::compact`].
+    pub dead_bytes: usize,
+    /// Compaction passes run (explicit or ratio-triggered).
+    pub compactions: u64,
 }
 
 #[derive(Clone, Debug)]
 struct RecordMeta {
     page: u64,
+    /// Payload offset within the page (past the header and strings).
     off: usize,
     nbytes: usize,
     checksum: u64,
     method: String,
     cfg: String,
+}
+
+impl RecordMeta {
+    /// On-disk footprint of the whole record, framing included.
+    fn framed(&self, id: &str) -> usize {
+        HEADER_BYTES + id.len() + self.method.len() + self.cfg.len() + self.nbytes
+    }
+}
+
+fn framed_len(id: &str, method: &str, cfg: &str, nbytes: usize) -> usize {
+    HEADER_BYTES + id.len() + method.len() + cfg.len() + nbytes
+}
+
+/// Append header + strings for one record (payload follows separately).
+fn encode_record_prefix(
+    buf: &mut Vec<u8>,
+    id: &str,
+    method: &str,
+    cfg: &str,
+    nbytes: usize,
+    checksum: u64,
+) {
+    buf.extend_from_slice(&RECORD_MAGIC.to_le_bytes());
+    buf.extend_from_slice(&(id.len() as u16).to_le_bytes());
+    buf.extend_from_slice(&(method.len() as u16).to_le_bytes());
+    buf.extend_from_slice(&(cfg.len() as u16).to_le_bytes());
+    buf.extend_from_slice(&0u16.to_le_bytes()); // reserved
+    buf.extend_from_slice(&(nbytes as u32).to_le_bytes());
+    buf.extend_from_slice(&checksum.to_le_bytes());
+    buf.extend_from_slice(id.as_bytes());
+    buf.extend_from_slice(method.as_bytes());
+    buf.extend_from_slice(cfg.as_bytes());
+}
+
+/// Scan one page region for framed records, indexing every valid one.
+/// Later copies of an id win (file order is append order, so the last
+/// copy is the freshest); overridden copies are counted as dead bytes.
+/// Scanning a page stops at the first hole — zeroed seal padding, a
+/// torn record extending past the region, a mangled string, or a
+/// checksum mismatch — but records never span pages, so the next page
+/// scans independently.
+fn scan_page(
+    region: &[u8],
+    page_no: u64,
+    index: &mut HashMap<String, RecordMeta>,
+    live_bytes: &mut usize,
+    dead_bytes: &mut usize,
+) {
+    let mut off = 0usize;
+    while off + HEADER_BYTES <= region.len() {
+        let word4 = |at: usize| u32::from_le_bytes(region[at..at + 4].try_into().unwrap());
+        let word2 = |at: usize| u16::from_le_bytes(region[at..at + 2].try_into().unwrap());
+        if word4(off) != RECORD_MAGIC {
+            break;
+        }
+        let id_len = word2(off + 4) as usize;
+        let method_len = word2(off + 6) as usize;
+        let cfg_len = word2(off + 8) as usize;
+        let nbytes = word4(off + 12) as usize;
+        let checksum = u64::from_le_bytes(region[off + 16..off + 24].try_into().unwrap());
+        let total = HEADER_BYTES + id_len + method_len + cfg_len + nbytes;
+        if off + total > region.len() {
+            break; // torn write: the record was never fully persisted
+        }
+        let sb = off + HEADER_BYTES;
+        let id_end = sb + id_len;
+        let method_end = id_end + method_len;
+        let payload_off = method_end + cfg_len;
+        let strings = (
+            std::str::from_utf8(&region[sb..id_end]),
+            std::str::from_utf8(&region[id_end..method_end]),
+            std::str::from_utf8(&region[method_end..payload_off]),
+        );
+        let (Ok(id), Ok(method), Ok(cfg)) = strings else { break };
+        if hash64(&region[payload_off..payload_off + nbytes]) != checksum {
+            break;
+        }
+        let meta = RecordMeta {
+            page: page_no,
+            off: payload_off,
+            nbytes,
+            checksum,
+            method: method.to_string(),
+            cfg: cfg.to_string(),
+        };
+        if let Some(old) = index.insert(id.to_string(), meta) {
+            let d = old.framed(id);
+            *dead_bytes += d;
+            *live_bytes -= d;
+        }
+        *live_bytes += total;
+        off += total;
+    }
 }
 
 struct Inner {
@@ -117,6 +248,9 @@ struct Inner {
     page_outs: u64,
     cache_hits: u64,
     cache_misses: u64,
+    live_bytes: usize,
+    dead_bytes: usize,
+    compactions: u64,
 }
 
 /// Thread-safe paged adapter store (share via `Arc`). See the module
@@ -136,63 +270,127 @@ impl std::fmt::Debug for PagedStore {
 }
 
 impl PagedStore {
-    /// Create (truncating any previous file at `cfg.path` — the store is
-    /// ephemeral spill space, not a durable database).
+    /// Create fresh spill space, truncating any previous file at
+    /// `cfg.path`. Use [`PagedStore::open`] to recover one instead.
     pub fn create(cfg: StoreCfg) -> Result<PagedStore> {
+        let file = Self::open_file(&cfg, true)?;
+        Ok(PagedStore { inner: Mutex::new(Self::fresh_inner(file, &cfg)), cfg })
+    }
+
+    /// Open an existing page file (or create an empty one), rebuilding
+    /// the index by scanning record headers + checksums page by page.
+    /// Every fully-written record is recovered; a torn tail from a crash
+    /// mid-write is dropped and the file is padded back to page
+    /// alignment. Recovered-but-overridden copies count as dead bytes.
+    pub fn open(cfg: StoreCfg) -> Result<PagedStore> {
+        let mut file = Self::open_file(&cfg, false)?;
+        let file_len =
+            file.metadata().with_context(|| format!("statting {:?}", cfg.path))?.len();
+        let pb = cfg.page_bytes as u64;
+        let full_pages = file_len / pb;
+        let tail = (file_len % pb) as usize;
+
+        let mut index = HashMap::new();
+        let (mut live_bytes, mut dead_bytes) = (0usize, 0usize);
+        let mut buf = vec![0u8; cfg.page_bytes];
+        for page_no in 0..full_pages {
+            file.seek(SeekFrom::Start(page_no * pb))
+                .and_then(|_| file.read_exact(&mut buf))
+                .with_context(|| format!("recovery: reading page {page_no} of {:?}", cfg.path))?;
+            scan_page(&buf, page_no, &mut index, &mut live_bytes, &mut dead_bytes);
+        }
+        let mut open_page = full_pages;
+        if tail > 0 {
+            let mut tbuf = vec![0u8; tail];
+            file.seek(SeekFrom::Start(full_pages * pb))
+                .and_then(|_| file.read_exact(&mut tbuf))
+                .with_context(|| format!("recovery: reading torn tail of {:?}", cfg.path))?;
+            scan_page(&tbuf, full_pages, &mut index, &mut live_bytes, &mut dead_bytes);
+            // Pad the torn tail back to page alignment so future
+            // page-ins of this page read a full page cleanly.
+            file.set_len((full_pages + 1) * pb)
+                .with_context(|| format!("recovery: padding torn tail of {:?}", cfg.path))?;
+            open_page = full_pages + 1;
+        }
+
+        let mut inner = Self::fresh_inner(file, &cfg);
+        inner.index = index;
+        inner.open_page = open_page;
+        inner.live_bytes = live_bytes;
+        inner.dead_bytes = dead_bytes;
+        Ok(PagedStore { inner: Mutex::new(inner), cfg })
+    }
+
+    fn open_file(cfg: &StoreCfg, truncate: bool) -> Result<std::fs::File> {
         if let Some(parent) = cfg.path.parent() {
             if !parent.as_os_str().is_empty() {
                 std::fs::create_dir_all(parent)
                     .with_context(|| format!("creating store dir {parent:?}"))?;
             }
         }
-        let file = std::fs::OpenOptions::new()
+        std::fs::OpenOptions::new()
             .read(true)
             .write(true)
             .create(true)
-            .truncate(true)
+            .truncate(truncate)
             .open(&cfg.path)
-            .with_context(|| format!("opening page file {:?}", cfg.path))?;
-        Ok(PagedStore {
-            inner: Mutex::new(Inner {
-                file,
-                index: HashMap::new(),
-                open_page: 0,
-                open_buf: Vec::with_capacity(cfg.page_bytes),
-                cache: Vec::new(),
-                page_ins: 0,
-                page_outs: 0,
-                cache_hits: 0,
-                cache_misses: 0,
-            }),
-            cfg,
-        })
+            .with_context(|| format!("opening page file {:?}", cfg.path))
+    }
+
+    fn fresh_inner(file: std::fs::File, cfg: &StoreCfg) -> Inner {
+        Inner {
+            file,
+            index: HashMap::new(),
+            open_page: 0,
+            open_buf: Vec::with_capacity(cfg.page_bytes),
+            cache: Vec::new(),
+            page_ins: 0,
+            page_outs: 0,
+            cache_hits: 0,
+            cache_misses: 0,
+            live_bytes: 0,
+            dead_bytes: 0,
+            compactions: 0,
+        }
     }
 
     pub fn path(&self) -> &Path {
         &self.cfg.path
     }
 
-    /// Append one adapter's params. Errors if the record cannot fit in a
-    /// single page. Re-putting an id replaces its index entry (the old
-    /// bytes leak — documented trade-off).
+    /// Append one adapter's params. Errors if the framed record cannot
+    /// fit in a single page. Re-putting an id appends a fresh copy and
+    /// retires the old one into the dead-bytes pool (auto-compacted at
+    /// [`StoreCfg::compact_ratio`]).
     pub fn put(&self, id: &str, method: &str, cfg: &str, params: &[f32]) -> Result<()> {
         let nbytes = params.len() * 4;
-        if nbytes > self.cfg.page_bytes {
+        if id.len() > u16::MAX as usize
+            || method.len() > u16::MAX as usize
+            || cfg.len() > u16::MAX as usize
+        {
+            bail!("adapter {id:?}: id/method/cfg strings must each be under 64 KiB");
+        }
+        let framed = framed_len(id, method, cfg, nbytes);
+        if framed > self.cfg.page_bytes {
             bail!(
-                "adapter {id:?} is {nbytes} B but the store page is {} B — \
-                 raise ETHER_STORE_PAGE_KB",
+                "adapter {id:?} is {framed} B framed ({nbytes} B params) but the store \
+                 page is {} B — raise ETHER_STORE_PAGE_KB",
                 self.cfg.page_bytes
             );
         }
         let mut g = self.lock();
-        if g.open_buf.len() + nbytes > self.cfg.page_bytes {
+        if g.open_buf.len() + framed > self.cfg.page_bytes {
             self.seal_open(&mut g)?;
         }
-        let off = g.open_buf.len();
+        let mut payload = Vec::with_capacity(nbytes);
         for v in params {
-            g.open_buf.extend_from_slice(&v.to_le_bytes());
+            payload.extend_from_slice(&v.to_le_bytes());
         }
-        let checksum = hash64(&g.open_buf[off..off + nbytes]);
+        let checksum = hash64(&payload);
+        let rec_off = g.open_buf.len();
+        encode_record_prefix(&mut g.open_buf, id, method, cfg, nbytes, checksum);
+        let off = rec_off + HEADER_BYTES + id.len() + method.len() + cfg.len();
+        g.open_buf.extend_from_slice(&payload);
         let meta = RecordMeta {
             page: g.open_page,
             off,
@@ -201,8 +399,13 @@ impl PagedStore {
             method: method.to_string(),
             cfg: cfg.to_string(),
         };
-        g.index.insert(id.to_string(), meta);
-        Ok(())
+        if let Some(old) = g.index.insert(id.to_string(), meta) {
+            let d = old.framed(id);
+            g.dead_bytes += d;
+            g.live_bytes -= d;
+        }
+        g.live_bytes += framed;
+        self.maybe_compact(&mut g)
     }
 
     /// Read one adapter back, verifying its checksum. Every failure mode
@@ -215,22 +418,7 @@ impl PagedStore {
             .get(id)
             .cloned()
             .ok_or_else(|| anyhow!("unknown adapter {id:?} in store {:?}", self.cfg.path))?;
-        let bytes: Vec<u8> = if meta.page == g.open_page {
-            g.cache_hits += 1;
-            if meta.off + meta.nbytes > g.open_buf.len() {
-                bail!("corrupt store index: {id:?} points past the open page");
-            }
-            g.open_buf[meta.off..meta.off + meta.nbytes].to_vec()
-        } else {
-            let page = self.page_for(&mut g, meta.page)?;
-            if meta.off + meta.nbytes > page.len() {
-                bail!("corrupt store: record {id:?} out of page bounds");
-            }
-            page[meta.off..meta.off + meta.nbytes].to_vec()
-        };
-        if hash64(&bytes) != meta.checksum {
-            bail!("corrupt store: checksum mismatch reading adapter {id:?}");
-        }
+        let bytes = self.read_payload(&mut g, id, &meta)?;
         let params: Vec<f32> = bytes
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
@@ -271,6 +459,15 @@ impl PagedStore {
         self.lock().cache.clear();
     }
 
+    /// Rewrite the page file with only the live records (temp file +
+    /// atomic rename), reclaiming all dead bytes. Records are re-packed
+    /// in id order; every payload's checksum is re-verified on the way
+    /// through, so compaction can never silently launder corruption.
+    pub fn compact(&self) -> Result<()> {
+        let mut g = self.lock();
+        self.compact_locked(&mut g)
+    }
+
     pub fn stats(&self) -> StoreStats {
         let g = self.lock();
         StoreStats {
@@ -281,11 +478,118 @@ impl PagedStore {
             cache_hits: g.cache_hits,
             cache_misses: g.cache_misses,
             resident_bytes: g.open_buf.len() + g.cache.iter().map(|(_, p)| p.len()).sum::<usize>(),
+            live_bytes: g.live_bytes,
+            dead_bytes: g.dead_bytes,
+            compactions: g.compactions,
         }
     }
 
     fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
         self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Fetch + checksum-verify one record's payload bytes.
+    fn read_payload(&self, g: &mut Inner, id: &str, meta: &RecordMeta) -> Result<Vec<u8>> {
+        let bytes: Vec<u8> = if meta.page == g.open_page {
+            g.cache_hits += 1;
+            if meta.off + meta.nbytes > g.open_buf.len() {
+                bail!("corrupt store index: {id:?} points past the open page");
+            }
+            g.open_buf[meta.off..meta.off + meta.nbytes].to_vec()
+        } else {
+            let page = self.page_for(g, meta.page)?;
+            if meta.off + meta.nbytes > page.len() {
+                bail!("corrupt store: record {id:?} out of page bounds");
+            }
+            page[meta.off..meta.off + meta.nbytes].to_vec()
+        };
+        if hash64(&bytes) != meta.checksum {
+            bail!("corrupt store: checksum mismatch reading adapter {id:?}");
+        }
+        Ok(bytes)
+    }
+
+    fn maybe_compact(&self, g: &mut Inner) -> Result<()> {
+        let r = self.cfg.compact_ratio;
+        if !(r > 0.0 && r < 1.0) || g.dead_bytes == 0 {
+            return Ok(());
+        }
+        let total = (g.dead_bytes + g.live_bytes) as f64;
+        if (g.dead_bytes as f64) < r * total {
+            return Ok(());
+        }
+        self.compact_locked(g)
+    }
+
+    fn compact_locked(&self, g: &mut Inner) -> Result<()> {
+        let mut ids: Vec<String> = g.index.keys().cloned().collect();
+        ids.sort();
+        let mut recs = Vec::with_capacity(ids.len());
+        for id in &ids {
+            let meta = g.index.get(id).cloned().expect("id taken from the index");
+            let payload = self.read_payload(g, id, &meta)?;
+            recs.push((id.clone(), meta, payload));
+        }
+
+        let tmp = self.cfg.path.with_extension("compact");
+        let mut file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&tmp)
+            .with_context(|| format!("opening compaction file {tmp:?}"))?;
+        let mut index = HashMap::new();
+        let mut live_bytes = 0usize;
+        let mut buf: Vec<u8> = Vec::with_capacity(self.cfg.page_bytes);
+        let mut page: u64 = 0;
+        let mut pages_out: u64 = 0;
+        let mut write_page = |file: &mut std::fs::File, buf: &mut Vec<u8>| -> Result<()> {
+            buf.resize(self.cfg.page_bytes, 0);
+            file.write_all(buf).with_context(|| format!("writing compaction page to {tmp:?}"))?;
+            buf.clear();
+            Ok(())
+        };
+        for (id, meta, payload) in recs {
+            let framed = framed_len(&id, &meta.method, &meta.cfg, payload.len());
+            if buf.len() + framed > self.cfg.page_bytes {
+                write_page(&mut file, &mut buf)?;
+                pages_out += 1;
+                page += 1;
+            }
+            let off = buf.len() + HEADER_BYTES + id.len() + meta.method.len() + meta.cfg.len();
+            encode_record_prefix(
+                &mut buf,
+                &id,
+                &meta.method,
+                &meta.cfg,
+                payload.len(),
+                meta.checksum,
+            );
+            buf.extend_from_slice(&payload);
+            index.insert(id, RecordMeta { page, off, ..meta });
+            live_bytes += framed;
+        }
+        if !buf.is_empty() {
+            write_page(&mut file, &mut buf)?;
+            pages_out += 1;
+            page += 1;
+        }
+        file.flush().with_context(|| format!("flushing compaction file {tmp:?}"))?;
+        std::fs::rename(&tmp, &self.cfg.path)
+            .with_context(|| format!("renaming {tmp:?} over {:?}", self.cfg.path))?;
+
+        // The renamed handle now backs cfg.path; swap all state over.
+        g.file = file;
+        g.index = index;
+        g.open_page = page;
+        g.open_buf.clear();
+        g.cache.clear();
+        g.live_bytes = live_bytes;
+        g.dead_bytes = 0;
+        g.page_outs += pages_out;
+        g.compactions += 1;
+        Ok(())
     }
 
     fn seal_open(&self, g: &mut Inner) -> Result<()> {
@@ -364,7 +668,8 @@ mod tests {
             s.put(&format!("u{i}"), "ether_n4", "host", &mk(i)).unwrap();
         }
         assert_eq!(s.len(), 20);
-        // 32 f32 = 128 B → 2 records per 256 B page → 10 pages, 9 sealed.
+        // 128 B payload + ~38 B framing → 1 record per 256 B page →
+        // 20 pages, 19 sealed.
         assert!(s.stats().page_outs >= 8, "{:?}", s.stats());
         for i in 0..20 {
             let r = s.get(&format!("u{i}")).unwrap();
@@ -408,10 +713,11 @@ mod tests {
         s.put("a", "m", "c", &[5.0; 16]).unwrap();
         s.flush().unwrap();
         s.drop_caches();
-        // Flip a byte in the record on disk through an independent handle.
+        // Flip a payload byte on disk through an independent handle (the
+        // record is header 24 B + "a"+"m"+"c" strings, payload at 27).
         let path = s.path().to_path_buf();
         let mut bytes = std::fs::read(&path).unwrap();
-        bytes[3] ^= 0xFF;
+        bytes[30] ^= 0xFF;
         std::fs::write(&path, &bytes).unwrap();
         let e = s.get("a").unwrap_err();
         assert!(e.to_string().contains("checksum"), "{e}");
@@ -430,13 +736,154 @@ mod tests {
     }
 
     #[test]
-    fn reput_replaces() {
+    fn reput_replaces_and_tracks_dead_bytes() {
         let s = small_store("reput");
         s.put("a", "m", "c", &[1.0]).unwrap();
+        assert_eq!(s.stats().dead_bytes, 0);
         s.put("a", "m", "c", &[2.0, 3.0]).unwrap();
         assert_eq!(s.get("a").unwrap().params, vec![2.0, 3.0]);
         assert_eq!(s.len(), 1);
         assert_eq!(s.total_params(), 2);
+        // The first copy (24 B header + 3 string bytes + 4 B payload) is
+        // now dead; under the 0.5 default ratio it is not yet compacted.
+        assert_eq!(s.stats().dead_bytes, 31, "{:?}", s.stats());
+        assert_eq!(s.stats().live_bytes, 35, "{:?}", s.stats());
+    }
+
+    #[test]
+    fn auto_compaction_bounds_file_growth() {
+        let s = small_store("autocompact");
+        // Hammer one id: without compaction the file would grow a page
+        // per ~2 re-puts forever. The 0.5 default ratio keeps dead bytes
+        // under half the record bytes at all times.
+        for i in 0..200 {
+            s.put("hot", "m", "c", &[i as f32; 16]).unwrap();
+            let st = s.stats();
+            assert!(
+                st.dead_bytes <= st.live_bytes.max(256),
+                "round {i}: dead bytes ran away: {st:?}"
+            );
+        }
+        let st = s.stats();
+        assert!(st.compactions > 0, "{st:?}");
+        assert_eq!(st.records, 1);
+        assert_eq!(s.get("hot").unwrap().params, vec![199.0; 16]);
+        // On-disk footprint stays O(live): one 256 B page once compacted
+        // (plus at most one page of fresh appends since the last pass).
+        let disk = std::fs::metadata(s.path()).unwrap().len();
+        assert!(disk <= 2 * 256, "file grew to {disk} B: {st:?}");
+    }
+
+    #[test]
+    fn explicit_compact_reclaims_and_preserves_records() {
+        let s = PagedStore::create(
+            StoreCfg::new(tmp("explicit_compact"))
+                .page_bytes(256)
+                .cache_pages(2)
+                .compact_ratio(0.0), // auto off: dead bytes pile up
+        )
+        .unwrap();
+        for i in 0..8 {
+            s.put(&format!("u{i}"), "m", "c", &[i as f32; 16]).unwrap();
+        }
+        for i in 0..8 {
+            s.put(&format!("u{i}"), "m", "c", &[(i + 100) as f32; 16]).unwrap();
+        }
+        assert!(s.stats().dead_bytes > 0);
+        s.compact().unwrap();
+        let st = s.stats();
+        assert_eq!(st.dead_bytes, 0, "{st:?}");
+        assert_eq!(st.compactions, 1);
+        assert_eq!(st.records, 8);
+        for i in 0..8 {
+            assert_eq!(s.get(&format!("u{i}")).unwrap().params, vec![(i + 100) as f32; 16]);
+        }
+        // Live: 8 records × 92 B framed, packed 2 per 256 B page → 4 pages.
+        let disk = std::fs::metadata(s.path()).unwrap().len();
+        assert!(disk <= 4 * 256, "file is {disk} B after compaction: {st:?}");
+    }
+
+    #[test]
+    fn open_recovers_all_records_including_reputs() {
+        let cfg = || StoreCfg::new(tmp("recover")).page_bytes(256).cache_pages(2);
+        let s = PagedStore::create(cfg()).unwrap();
+        for i in 0..10 {
+            s.put(&format!("r{i}"), "ether_n4", "host", &[i as f32; 16]).unwrap();
+        }
+        s.put("r3", "ether_n4", "host", &[99.0; 16]).unwrap(); // later copy wins
+        s.flush().unwrap();
+        drop(s);
+
+        let s = PagedStore::open(cfg()).unwrap();
+        assert_eq!(s.len(), 10);
+        for i in 0..10 {
+            let want = if i == 3 { 99.0 } else { i as f32 };
+            assert_eq!(s.get(&format!("r{i}")).unwrap().params, vec![want; 16]);
+        }
+        let st = s.stats();
+        assert!(st.dead_bytes > 0, "overridden r3 copy must count as dead: {st:?}");
+        // New puts land on a fresh page past the recovered ones.
+        s.put("new", "m", "c", &[7.0]).unwrap();
+        assert_eq!(s.get("new").unwrap().params, vec![7.0]);
+    }
+
+    #[test]
+    fn open_recovers_fully_written_records_and_drops_torn_tail() {
+        // 40 f32 = 160 B payload + 28 B framing = 188 B → exactly one
+        // record per 256 B page, so offsets are deterministic.
+        let cfg = || StoreCfg::new(tmp("torn")).page_bytes(256).cache_pages(2);
+        let s = PagedStore::create(cfg()).unwrap();
+        for i in 0..10 {
+            s.put(&format!("r{i}"), "m", "c", &[i as f32; 40]).unwrap();
+        }
+        s.flush().unwrap();
+        drop(s);
+
+        // Simulate a crash mid-append: cut into the last record's
+        // payload (10 pages × 256 B, r9 occupies bytes 2304..2492).
+        let path = tmp("torn");
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), 10 * 256);
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(9 * 256 + 100).unwrap();
+        drop(f);
+
+        let s = PagedStore::open(cfg()).unwrap();
+        assert_eq!(s.len(), 9, "every fully-written record recovers");
+        for i in 0..9 {
+            assert_eq!(s.get(&format!("r{i}")).unwrap().params, vec![i as f32; 40]);
+        }
+        // The torn record is gone, and says so cleanly.
+        let e = s.get("r9").unwrap_err();
+        assert!(e.to_string().contains("unknown adapter"), "{e}");
+        // The tail was padded back to page alignment; appends continue.
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), 10 * 256);
+        s.put("r9", "m", "c", &[9.0; 40]).unwrap();
+        assert_eq!(s.get("r9").unwrap().params, vec![9.0; 40]);
+    }
+
+    #[test]
+    fn open_stops_at_corrupt_record_but_keeps_other_pages() {
+        let cfg = || StoreCfg::new(tmp("bitrot")).page_bytes(256).cache_pages(2);
+        let s = PagedStore::create(cfg()).unwrap();
+        for i in 0..6 {
+            s.put(&format!("r{i}"), "m", "c", &[i as f32; 40]).unwrap(); // 1/page
+        }
+        s.flush().unwrap();
+        drop(s);
+
+        // Bit-rot a payload byte of r2 (page 2 starts at 512; payload
+        // starts 28 B in).
+        let path = tmp("bitrot");
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[2 * 256 + 40] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+
+        let s = PagedStore::open(cfg()).unwrap();
+        assert_eq!(s.len(), 5, "only the corrupt record is dropped");
+        assert!(s.get("r2").is_err());
+        for i in [0usize, 1, 3, 4, 5] {
+            assert_eq!(s.get(&format!("r{i}")).unwrap().params, vec![i as f32; 40]);
+        }
     }
 
     #[test]

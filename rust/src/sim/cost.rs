@@ -1,0 +1,189 @@
+//! Cost models for the simulated serving stack, calibrated from real
+//! bench output when available.
+//!
+//! Every knob is a per-operation cost in **microseconds of virtual
+//! time**. The defaults are order-of-magnitude figures taken from the
+//! repo's own benches on a commodity host (see each field's doc); they
+//! make an uncalibrated simulation directionally right. For a
+//! simulation that predicts *your* hardware, run the real benches with
+//! `ETHER_BENCH_JSON` set and point [`Calibration::from_bench_json`] at
+//! the output directory — any field with a matching measured case is
+//! overwritten with its median, and [`Calibration::calibrated`] records
+//! which ones were.
+//!
+//! | field | measured by | bench case label contains |
+//! |-------|-------------|---------------------------|
+//! | `merge_us` | `adapter_merge` | `"fresh merge"` |
+//! | `swap_us` | `adapter_merge` | `"swap involution"` |
+//! | `onthefly_us` | `transform_apply` | `"blocked parallel"` |
+//!
+//! `req_us`, `merged_hit_us` and the page-I/O costs have no dedicated
+//! bench case yet and always use their defaults (still overridable by
+//! constructing the struct directly).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json;
+
+/// Per-operation virtual-time costs (µs). See the module doc for the
+/// calibration mapping.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Calibration {
+    /// Base decode cost per request in a batch (token loop, host path).
+    /// Default 2 µs — a few short-prompt decode steps.
+    pub req_us: f64,
+    /// Extra per-request cost when served merge-free (`T(W)·x` on
+    /// activations). Default 40 µs: the blocked-parallel `ether n=4`
+    /// apply is tens of µs at bench dims.
+    pub onthefly_us: f64,
+    /// Extra per-request cost on a merged-cache hit (lock + Arc clone +
+    /// strategy bookkeeping). Default 5 µs.
+    pub merged_hit_us: f64,
+    /// One fresh merge (new buffer) on a merged-cache miss. Default
+    /// 400 µs — dominated by the full-weight copy.
+    pub merge_us: f64,
+    /// One in-place involution swap (unmerge + merge). Default 300 µs.
+    pub swap_us: f64,
+    /// Reading one sealed page from the adapter store on a page-cache
+    /// miss. Default 80 µs for a 64 KiB page on local flash.
+    pub page_in_us: f64,
+    /// Sealing + writing one page out. Default 60 µs (buffered write).
+    pub page_out_us: f64,
+    /// Names of the fields that were overwritten from bench JSON, in
+    /// the order they were loaded. Empty ⇒ pure defaults.
+    pub calibrated: Vec<String>,
+}
+
+impl Default for Calibration {
+    fn default() -> Calibration {
+        Calibration {
+            req_us: 2.0,
+            onthefly_us: 40.0,
+            merged_hit_us: 5.0,
+            merge_us: 400.0,
+            swap_us: 300.0,
+            page_in_us: 80.0,
+            page_out_us: 60.0,
+            calibrated: vec![],
+        }
+    }
+}
+
+/// Median (µs) of the first case in `cases` whose label contains
+/// `needle`. `None` when no case matches or the shape is off.
+fn case_median_us(v: &json::Value, needle: &str) -> Option<f64> {
+    let cases = v.get("cases")?.as_arr().ok()?;
+    for c in cases {
+        let label = c.get("label").and_then(|l| l.as_str().ok()).unwrap_or("");
+        if label.contains(needle) {
+            return c.get("median_ns").and_then(|m| m.as_f64().ok()).map(|ns| ns / 1000.0);
+        }
+    }
+    None
+}
+
+/// Parse `dir/file` if it exists; `Ok(None)` when absent, `Err` only on
+/// unreadable or malformed JSON.
+fn load_bench(dir: &Path, file: &str) -> Result<Option<json::Value>> {
+    let path = dir.join(file);
+    if !path.exists() {
+        return Ok(None);
+    }
+    let text = std::fs::read_to_string(&path)?;
+    let v = json::parse(&text).map_err(|e| anyhow!("{}: {}", path.display(), e))?;
+    Ok(Some(v))
+}
+
+impl Calibration {
+    /// Load defaults, then overwrite any field whose bench case is
+    /// present in `dir` (`BENCH_adapter_merge.json`,
+    /// `BENCH_transform_apply.json` — the files `ETHER_BENCH_JSON`
+    /// produces). Missing files and unmatched labels are fine: those
+    /// fields keep their defaults. Only malformed JSON in a present
+    /// file is an error.
+    pub fn from_bench_json(dir: &Path) -> Result<Calibration> {
+        let mut cal = Calibration::default();
+        if let Some(v) = load_bench(dir, "BENCH_adapter_merge.json")? {
+            if let Some(us) = case_median_us(&v, "fresh merge") {
+                cal.merge_us = us;
+                cal.calibrated.push("merge_us".to_string());
+            }
+            if let Some(us) = case_median_us(&v, "swap involution") {
+                cal.swap_us = us;
+                cal.calibrated.push("swap_us".to_string());
+            }
+        }
+        if let Some(v) = load_bench(dir, "BENCH_transform_apply.json")? {
+            if let Some(us) = case_median_us(&v, "blocked parallel") {
+                cal.onthefly_us = us;
+                cal.calibrated.push("onthefly_us".to_string());
+            }
+        }
+        Ok(cal)
+    }
+
+    /// `true` once any field came from measured data.
+    pub fn is_calibrated(&self) -> bool {
+        !self.calibrated.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_uncalibrated() {
+        let c = Calibration::default();
+        assert!(!c.is_calibrated());
+        assert!(c.merge_us > c.swap_us);
+        assert!(c.onthefly_us > c.merged_hit_us);
+    }
+
+    #[test]
+    fn missing_dir_yields_defaults() {
+        let c = Calibration::from_bench_json(Path::new("/nonexistent/bench/dir")).unwrap();
+        assert_eq!(c, Calibration::default());
+    }
+
+    #[test]
+    fn loads_medians_from_bench_json() {
+        let dir = std::env::temp_dir().join(format!("ether_sim_calib_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let merge = concat!(
+            "{\"name\":\"adapter merge\",\"quick\":true,\"threads\":2,\"cases\":[",
+            "{\"label\":\"fresh merge (new buffer per adapter)\",\"median_ns\":250000},",
+            "{\"label\":\"swap involution (unmerge + merge, in place)\",\"median_ns\":180000}",
+            "]}"
+        );
+        let apply = concat!(
+            "{\"name\":\"transform apply\",\"quick\":true,\"threads\":2,\"cases\":[",
+            "{\"label\":\"ether n=4\",\"median_ns\":90000},",
+            "{\"label\":\"ether n=4 (blocked parallel)\",\"median_ns\":30000}",
+            "]}"
+        );
+        std::fs::write(dir.join("BENCH_adapter_merge.json"), merge).unwrap();
+        std::fs::write(dir.join("BENCH_transform_apply.json"), apply).unwrap();
+        let c = Calibration::from_bench_json(&dir).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        assert_eq!(c.merge_us, 250.0);
+        assert_eq!(c.swap_us, 180.0);
+        assert_eq!(c.onthefly_us, 30.0);
+        assert_eq!(c.calibrated, vec!["merge_us", "swap_us", "onthefly_us"]);
+        // Unmeasured fields keep defaults.
+        assert_eq!(c.req_us, Calibration::default().req_us);
+        assert_eq!(c.page_in_us, Calibration::default().page_in_us);
+    }
+
+    #[test]
+    fn malformed_json_is_an_error() {
+        let dir = std::env::temp_dir().join(format!("ether_sim_calib_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("BENCH_adapter_merge.json"), "{not json").unwrap();
+        let r = Calibration::from_bench_json(&dir);
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,82 @@
+//! Deterministic discrete-event fleet simulator: faster-than-realtime
+//! capacity runs and offline config auto-tuning.
+//!
+//! The serving stack ([`crate::coordinator`]) answers "what happened";
+//! this module answers **"what would happen"** — at what load does a
+//! given fleet configuration start shedding, what does p95 look like
+//! after a multi-hour zipf trace, how many shards does this traffic
+//! actually need — in wall-clock seconds instead of virtual hours.
+//!
+//! The design splits cleanly into *decisions* and *time*:
+//!
+//! * **Decisions are real.** Each simulated shard owns a production
+//!   [`Scheduler`](crate::coordinator::scheduler::Scheduler) and
+//!   [`MergedCache`](crate::coordinator::registry::MergedCache); routing
+//!   uses the production
+//!   [`ConsistentRing`](crate::coordinator::fleet::ConsistentRing),
+//!   stealing the pure
+//!   [`steal_plan`](crate::coordinator::fleet::steal_plan), strategy
+//!   selection the real
+//!   [`ExecutionPolicy`](crate::coordinator::engine::ExecutionPolicy).
+//!   With one ideal shard the release sequence is bit-identical to
+//!   [`schedule_trace_timed`](crate::coordinator::loadgen::schedule_trace_timed)
+//!   — pinned by tests, cross-validated against the real serving stack
+//!   in `benches/sim_capacity.rs`.
+//! * **Time is modeled.** [`events`] provides the virtual clock and the
+//!   `(time, seq)`-ordered event queue; [`cost`] prices every operation
+//!   in microseconds, with [`Calibration::from_bench_json`] lifting the
+//!   numbers from this repo's own bench output.
+//!
+//! [`stack`] is the simulator itself; [`tune`] sweeps fleet knobs over
+//! a trace and ranks configurations. The CLI front door is
+//! `ether simulate` (see the README's Simulator guide).
+//!
+//! # Walkthrough
+//!
+//! Simulate a two-shard fleet under skewed traffic, replay it
+//! bit-identically, then let the tuner rank shard counts:
+//!
+//! ```
+//! use ether::coordinator::fleet::FleetCfg;
+//! use ether::coordinator::loadgen::{generate, LoadGenCfg, Scenario};
+//! use ether::sim::{simulate, tune, Calibration, SimCfg, TuneGrid};
+//!
+//! // 1. A deterministic zipf trace (same generator the benches use).
+//! let arrivals = generate(&LoadGenCfg {
+//!     n_adapters: 32,
+//!     n_requests: 400,
+//!     scenario: Scenario::Zipf { exponent: 1.2 },
+//!     ..Default::default()
+//! });
+//!
+//! // 2. Two shards, one modeled worker each; default cost model (use
+//! //    Calibration::from_bench_json to calibrate from real benches).
+//! let cfg = SimCfg {
+//!     fleet: FleetCfg { shards: 2, workers_per_shard: 1, ..Default::default() },
+//!     ..Default::default()
+//! };
+//! let cal = Calibration::default();
+//! let report = simulate(&cfg, &cal, &arrivals);
+//! assert_eq!(report.released + report.shed, report.requests);
+//! assert!(report.sim_span_us > 0);
+//!
+//! // 3. Determinism: the same inputs replay to the same report, down
+//! //    to the event-log hash.
+//! assert_eq!(simulate(&cfg, &cal, &arrivals), report);
+//!
+//! // 4. Offline tuning: sweep a grid, results ranked best-first.
+//! let grid = TuneGrid { shards: vec![1, 2], ..Default::default() };
+//! let ranked = tune(&cfg, &cal, &arrivals, &grid);
+//! assert_eq!(ranked.len(), grid.len());
+//! assert!(ranked.windows(2).all(|w| w[0].score <= w[1].score));
+//! ```
+
+pub mod cost;
+pub mod events;
+pub mod stack;
+pub mod tune;
+
+pub use cost::Calibration;
+pub use events::{Event, EventQueue, VirtualTime};
+pub use stack::{simulate, ReleaseRecord, Sim, SimCfg, SimReport};
+pub use tune::{score, tune, TuneGrid, TunePoint, TuneResult};

@@ -1,0 +1,775 @@
+//! The simulated serving stack: real decision logic, modeled time.
+//!
+//! A [`Sim`] replays a [`loadgen`](crate::coordinator::loadgen) arrival
+//! trace through the *actual* fleet components — each simulated shard
+//! owns a real [`Scheduler`] and a real [`MergedCache`], routing goes
+//! through the real [`ConsistentRing`], rebalancing through the pure
+//! [`steal_plan`] → [`Scheduler::steal_newest`] → [`Scheduler::inject`]
+//! path, and strategy selection through the real
+//! [`ExecutionPolicy`](crate::coordinator::engine::ExecutionPolicy)
+//! (`promotes` / `kind_for`). What is *modeled* is only the passage of
+//! time: instead of executing batches, every dispatch charges
+//! [`Calibration`] microseconds to the virtual clock. Decisions are
+//! therefore bit-identical to production; throughput and latency are
+//! predictions.
+//!
+//! Two capacity modes, keyed off
+//! [`FleetCfg::workers_per_shard`](crate::coordinator::fleet::FleetCfg):
+//!
+//! * `0` — **ideal**: service is instantaneous, the run is a pure
+//!   scheduling replay. With one shard the release sequence (including
+//!   decision timestamps) is *exactly*
+//!   [`schedule_trace_timed`](crate::coordinator::loadgen::schedule_trace_timed)
+//!   — the parity tests pin this.
+//! * `n ≥ 1` — **capacity**: each shard has `n` workers; a popped batch
+//!   occupies the lowest-indexed free worker for its modeled cost and a
+//!   `BatchDone` event re-triggers draining. Queues now back up, the
+//!   admission bounds bite, and shed rates become meaningful.
+//!
+//! Hot-set promotion applies the exact fleet predicate (fleet-wide
+//! released count ≥ `hot_threshold`, sticky) *incrementally at release
+//! time* — the continuous-pump limit of
+//! [`ShardedFleet::promote_hot`](crate::coordinator::fleet::ShardedFleet::promote_hot),
+//! which scans the same sums once per pump. The set an adapter ends up
+//! in is identical; only the instant it joins can be earlier by less
+//! than one pump interval.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::Request;
+use crate::coordinator::engine::StrategyKind;
+use crate::coordinator::fleet::{
+    least_pending_replica, recommend_shards, steal_plan, ConsistentRing, FleetCfg,
+};
+use crate::coordinator::loadgen::Arrival;
+use crate::coordinator::registry::MergedCache;
+use crate::coordinator::scheduler::{SchedStats, Scheduler};
+use crate::util::json::Value;
+
+use super::cost::Calibration;
+use super::events::{Event, EventQueue, VirtualTime};
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv_fold(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(FNV_PRIME);
+    }
+}
+
+/// Simulator knobs on top of the production [`FleetCfg`]. The fleet
+/// config is taken verbatim — shard count, scheduler bounds, policy,
+/// replication, stealing and `workers_per_shard` all mean what they
+/// mean in production (with `workers_per_shard == 0` meaning *ideal*
+/// here rather than auto-sized; see the module docs).
+#[derive(Clone, Debug)]
+pub struct SimCfg {
+    /// The production fleet configuration under test.
+    pub fleet: FleetCfg,
+    /// Per-shard resident-adapter LRU capacity (the registry's
+    /// `resident_cap`). Misses read through the page model.
+    pub resident_cap: usize,
+    /// Shared store page-cache capacity, in pages.
+    pub cache_pages: usize,
+    /// Store page size in bytes.
+    pub page_bytes: usize,
+    /// Serialized adapter record size in bytes (ETHER records are
+    /// a few KiB — the paper's 10–100× LoRA reduction is why).
+    pub record_bytes: usize,
+    /// Bytes per merged weight buffer (one full model copy).
+    pub merged_bytes: usize,
+    /// Keep the full release log in the report (parity tests); the
+    /// FNV event-log hash is always computed.
+    pub record_events: bool,
+}
+
+impl Default for SimCfg {
+    fn default() -> SimCfg {
+        SimCfg {
+            fleet: FleetCfg::default(),
+            resident_cap: 64,
+            cache_pages: 8,
+            page_bytes: 64 * 1024,
+            record_bytes: 4096,
+            merged_bytes: 1 << 20,
+            record_events: false,
+        }
+    }
+}
+
+/// One release, as logged when [`SimCfg::record_events`] is set.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ReleaseRecord {
+    /// Virtual dispatch time, µs from trace start.
+    pub t_us: u64,
+    pub shard: usize,
+    pub adapter: String,
+    /// Released request ids, in release order.
+    pub ids: Vec<u64>,
+}
+
+/// What a simulation run produced. `PartialEq` so determinism tests can
+/// compare whole runs (the event-log hash folds every release, so two
+/// equal reports really did make the same decisions in the same order).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimReport {
+    /// Requests in the trace (admitted + shed).
+    pub requests: u64,
+    pub released: u64,
+    pub shed: u64,
+    pub shed_rate: f64,
+    pub batches: u64,
+    /// Discrete events processed (arrivals + batch completions).
+    pub events: u64,
+    /// Virtual span of the run, µs (last dispatch end).
+    pub sim_span_us: u64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub merges: u64,
+    pub merged_hits: u64,
+    pub swaps: u64,
+    pub page_ins: u64,
+    pub page_outs: u64,
+    /// Engine-level policy promotions (adapter earned a merged buffer).
+    pub promotions: u64,
+    /// Fleet-level hot-set promotions (adapter earned replica routing).
+    pub hot_promotions: u64,
+    pub replica_routes: u64,
+    pub steals: u64,
+    pub stolen_requests: u64,
+    pub peak_resident_bytes: u64,
+    /// Released requests per *virtual* second — the capacity estimate.
+    pub virtual_req_per_s: f64,
+    /// FNV-1a fold over every `(time, shard, adapter, ids)` release.
+    pub event_log_hash: u64,
+    /// Shard count [`recommend_shards`] suggests for the observed shed
+    /// rate under the config's auto-scale band.
+    pub recommended_shards: usize,
+    /// Full release log; empty unless [`SimCfg::record_events`].
+    pub event_log: Vec<ReleaseRecord>,
+}
+
+impl SimReport {
+    /// Stable-field JSON row for `BENCH_sim_capacity.json`. The hash is
+    /// hex (u64 does not survive an f64 JSON number); the event log is
+    /// deliberately not serialized.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("requests", Value::num(self.requests as f64)),
+            ("released", Value::num(self.released as f64)),
+            ("shed", Value::num(self.shed as f64)),
+            ("shed_rate", Value::num(self.shed_rate)),
+            ("batches", Value::num(self.batches as f64)),
+            ("events", Value::num(self.events as f64)),
+            ("sim_span_us", Value::num(self.sim_span_us as f64)),
+            ("p50_ms", Value::num(self.p50_ms)),
+            ("p95_ms", Value::num(self.p95_ms)),
+            ("p99_ms", Value::num(self.p99_ms)),
+            ("merges", Value::num(self.merges as f64)),
+            ("merged_hits", Value::num(self.merged_hits as f64)),
+            ("swaps", Value::num(self.swaps as f64)),
+            ("page_ins", Value::num(self.page_ins as f64)),
+            ("page_outs", Value::num(self.page_outs as f64)),
+            ("promotions", Value::num(self.promotions as f64)),
+            ("hot_promotions", Value::num(self.hot_promotions as f64)),
+            ("replica_routes", Value::num(self.replica_routes as f64)),
+            ("steals", Value::num(self.steals as f64)),
+            ("stolen_requests", Value::num(self.stolen_requests as f64)),
+            ("peak_resident_bytes", Value::num(self.peak_resident_bytes as f64)),
+            ("virtual_req_per_s", Value::num(self.virtual_req_per_s)),
+            ("event_log_hash", Value::s(format!("{:016x}", self.event_log_hash))),
+            ("recommended_shards", Value::num(self.recommended_shards as f64)),
+        ])
+    }
+}
+
+/// One simulated shard: a **real** scheduler and merged-weight cache,
+/// plus the modeled residency state the engine/registry would hold.
+struct SimShard {
+    sched: Scheduler,
+    merged: MergedCache,
+    /// Sticky engine-level promotions (mirrors `AdapterEngine`).
+    promoted: BTreeSet<String>,
+    /// Adapter resident in the single swap slot, if any.
+    swap_resident: Option<String>,
+    /// Resident-adapter LRU (front = coldest), capacity
+    /// [`SimCfg::resident_cap`].
+    resident: Vec<String>,
+    /// Worker busy-until times; empty = ideal mode.
+    workers: Vec<VirtualTime>,
+}
+
+/// Shared paged-store model: append-order materialization, page sealing
+/// on fill, and an LRU page cache for sealed-page reads.
+struct StoreModel {
+    /// Adapter → record index, assigned at first materialization.
+    mat_index: BTreeMap<String, usize>,
+    records_per_page: usize,
+    /// Sealed-page LRU (front = coldest), capacity [`SimCfg::cache_pages`].
+    page_cache: Vec<usize>,
+    page_ins: u64,
+    page_outs: u64,
+}
+
+/// The discrete-event fleet simulator. Construct with [`Sim::new`],
+/// consume with [`Sim::run`]; or use the [`simulate`] convenience.
+pub struct Sim {
+    cfg: SimCfg,
+    cal: Calibration,
+    ring: ConsistentRing,
+    shards: Vec<SimShard>,
+    store: StoreModel,
+    /// Fleet-wide released counts — the promote_hot sums, maintained
+    /// incrementally.
+    released_fleet: BTreeMap<String, u64>,
+    /// Sticky fleet-level hot set (replica routing).
+    hot: BTreeSet<String>,
+    hot_promotions: u64,
+    replica_routes: u64,
+    steals: u64,
+    stolen_requests: u64,
+    promotions: u64,
+    merges: u64,
+    merged_hits: u64,
+    swaps: u64,
+    latencies_us: Vec<u64>,
+    hash: u64,
+    event_log: Vec<ReleaseRecord>,
+    peak_resident: u64,
+    max_t: VirtualTime,
+    last_tick: Option<VirtualTime>,
+    /// Wall-clock anchor: virtual µs `t` maps to `t0 + t`, which is
+    /// what the real scheduler's `Instant` arithmetic sees.
+    t0: Instant,
+}
+
+impl Sim {
+    pub fn new(cfg: SimCfg, cal: Calibration) -> Sim {
+        let n = cfg.fleet.shards.max(1);
+        let shards = (0..n)
+            .map(|_| SimShard {
+                sched: Scheduler::new(cfg.fleet.sched),
+                merged: MergedCache::new(cfg.fleet.merge_cache),
+                promoted: BTreeSet::new(),
+                swap_resident: None,
+                resident: Vec::new(),
+                workers: vec![0; cfg.fleet.workers_per_shard],
+            })
+            .collect();
+        let records_per_page = (cfg.page_bytes / cfg.record_bytes.max(1)).max(1);
+        Sim {
+            ring: ConsistentRing::new(n, cfg.fleet.vnodes),
+            shards,
+            store: StoreModel {
+                mat_index: BTreeMap::new(),
+                records_per_page,
+                page_cache: Vec::new(),
+                page_ins: 0,
+                page_outs: 0,
+            },
+            released_fleet: BTreeMap::new(),
+            hot: BTreeSet::new(),
+            hot_promotions: 0,
+            replica_routes: 0,
+            steals: 0,
+            stolen_requests: 0,
+            promotions: 0,
+            merges: 0,
+            merged_hits: 0,
+            swaps: 0,
+            latencies_us: Vec::new(),
+            hash: FNV_OFFSET,
+            event_log: Vec::new(),
+            peak_resident: 0,
+            max_t: 0,
+            last_tick: None,
+            t0: Instant::now(),
+            cfg,
+            cal,
+        }
+    }
+
+    /// Replay `arrivals` to completion and report. Consumes the sim —
+    /// a run is one shot, like a fleet drain.
+    pub fn run(mut self, arrivals: &[Arrival]) -> SimReport {
+        let mut q = EventQueue::new();
+        for (i, a) in arrivals.iter().enumerate() {
+            q.push(a.at.as_micros() as u64, Event::Arrival { idx: i });
+        }
+        let mut events: u64 = 0;
+        while let Some((t, ev)) = q.pop() {
+            events += 1;
+            match ev {
+                Event::Arrival { idx } => {
+                    // Fleet tick first, then the offer, then draining —
+                    // the same offer-before-pop order as
+                    // schedule_trace_timed, so an expiring partial batch
+                    // always sees the request arriving at its instant.
+                    self.tick(t);
+                    let a = &arrivals[idx];
+                    let adapter = format!("user{}", a.adapter);
+                    let shard = self.route(&adapter);
+                    let _ = self.shards[shard].sched.offer(a.to_request(idx as u64, self.t0));
+                    self.drain_ready(t, &mut q);
+                }
+                Event::BatchDone { .. } => self.drain_ready(t, &mut q),
+            }
+        }
+        // Shutdown drain at the trace span (what schedule_trace_timed
+        // and ShardedFleet::drain do after the last arrival).
+        let span = arrivals.last().map(|a| a.at.as_micros() as u64).unwrap_or(0);
+        self.max_t = self.max_t.max(span);
+        for s in 0..self.shards.len() {
+            let drained = self.shards[s].sched.drain_all();
+            for (id, batch) in drained {
+                if self.shards[s].workers.is_empty() {
+                    self.dispatch(span, s, &id, &batch);
+                } else {
+                    let w = (0..self.shards[s].workers.len())
+                        .min_by_key(|&i| self.shards[s].workers[i])
+                        .expect("capacity mode has >= 1 worker");
+                    let start = span.max(self.shards[s].workers[w]);
+                    let cost = self.dispatch(start, s, &id, &batch);
+                    self.shards[s].workers[w] = start + cost;
+                }
+            }
+        }
+        self.report(arrivals.len() as u64, events)
+    }
+
+    /// Once per virtual instant: rebalance queued work across shards
+    /// (the `pump` preamble; promotion is incremental in `dispatch`).
+    fn tick(&mut self, t: VirtualTime) {
+        if self.last_tick == Some(t) {
+            return;
+        }
+        self.last_tick = Some(t);
+        self.rebalance();
+    }
+
+    /// Production routing: cold adapters home, hot adapters to the
+    /// least-pending replica. Same code path as `ShardedFleet::route`.
+    fn route(&mut self, adapter: &str) -> usize {
+        let home = self.ring.shard_for(adapter);
+        if self.cfg.fleet.replicas > 1 && self.hot.contains(adapter) {
+            let pending: Vec<usize> = self.shards.iter().map(|s| s.sched.pending()).collect();
+            let reps = self.ring.replicas_for(adapter, self.cfg.fleet.replicas);
+            let best = least_pending_replica(&reps, &pending);
+            if best != home {
+                self.replica_routes += 1;
+            }
+            return best;
+        }
+        home
+    }
+
+    /// Production rebalance: bounded steal passes over the pure
+    /// [`steal_plan`], moving real queued requests between the real
+    /// schedulers.
+    fn rebalance(&mut self) {
+        for _ in 0..self.shards.len() * 2 {
+            let pending: Vec<usize> = self.shards.iter().map(|s| s.sched.pending()).collect();
+            let Some((victim, thief, cap)) =
+                steal_plan(&pending, self.cfg.fleet.steal_margin, self.cfg.fleet.steal_max)
+            else {
+                break;
+            };
+            let Some((adapter, reqs)) = self.shards[victim].sched.steal_newest(cap) else {
+                break;
+            };
+            let n = reqs.len();
+            self.shards[thief].sched.inject(&adapter, reqs);
+            self.steals += 1;
+            self.stolen_requests += n as u64;
+        }
+    }
+
+    /// Pop every ready batch across shards in index order, charging
+    /// modeled costs. Capacity mode gates pops on a free worker and
+    /// schedules a `BatchDone` per dispatch.
+    fn drain_ready(&mut self, t: VirtualTime, q: &mut EventQueue) {
+        let now = self.t0 + Duration::from_micros(t);
+        for s in 0..self.shards.len() {
+            loop {
+                let free = if self.shards[s].workers.is_empty() {
+                    None
+                } else {
+                    match self.shards[s].workers.iter().position(|&busy| busy <= t) {
+                        Some(w) => Some(w),
+                        None => break,
+                    }
+                };
+                let Some((id, batch)) = self.shards[s].sched.pop_ready(now) else {
+                    break;
+                };
+                let cost = self.dispatch(t, s, &id, &batch);
+                if let Some(w) = free {
+                    let done = t + cost;
+                    self.shards[s].workers[w] = done;
+                    q.push(done, Event::BatchDone { shard: s, worker: w });
+                }
+            }
+        }
+    }
+
+    /// Charge one released batch: log it, record latencies, feed the
+    /// traffic signals, and price the store access plus the strategy
+    /// the real policy picks. Returns the modeled batch cost in µs.
+    fn dispatch(&mut self, t: VirtualTime, shard: usize, adapter: &str, batch: &[Request]) -> u64 {
+        fnv_fold(&mut self.hash, &t.to_le_bytes());
+        fnv_fold(&mut self.hash, &(shard as u64).to_le_bytes());
+        fnv_fold(&mut self.hash, adapter.as_bytes());
+        for r in batch {
+            fnv_fold(&mut self.hash, &r.id.to_le_bytes());
+            let enq = r.enqueued.duration_since(self.t0).as_micros() as u64;
+            self.latencies_us.push(t.saturating_sub(enq));
+        }
+        if self.cfg.record_events {
+            self.event_log.push(ReleaseRecord {
+                t_us: t,
+                shard,
+                adapter: adapter.to_string(),
+                ids: batch.iter().map(|r| r.id).collect(),
+            });
+        }
+        // Fleet-level hot set: the promote_hot predicate, incrementally.
+        let fleet_released = {
+            let e = self.released_fleet.entry(adapter.to_string()).or_default();
+            *e += batch.len() as u64;
+            *e
+        };
+        let crossed = fleet_released >= self.cfg.fleet.hot_threshold;
+        if crossed && self.hot.insert(adapter.to_string()) {
+            self.hot_promotions += 1;
+        }
+        // Engine-level strategy: the real policy over the real
+        // scheduler's released counter (which includes this batch, as
+        // it does when the server records traffic post-release).
+        let released = self.shards[shard].sched.stats().released_for(adapter);
+        if self.cfg.fleet.policy.promotes(released)
+            && self.shards[shard].promoted.insert(adapter.to_string())
+        {
+            self.promotions += 1;
+        }
+        let kind = self.cfg.fleet.policy.kind_for(self.shards[shard].promoted.contains(adapter));
+
+        let mut us = self.store_access_us(shard, adapter);
+        let per_req = match kind {
+            StrategyKind::Merged => {
+                if self.shards[shard].merged.get(adapter).is_some() {
+                    self.merged_hits += 1;
+                } else {
+                    self.merges += 1;
+                    us += self.cal.merge_us;
+                    self.shards[shard].merged.put(adapter, Arc::new(Vec::new()));
+                }
+                self.cal.merged_hit_us
+            }
+            StrategyKind::Swap => {
+                if self.shards[shard].swap_resident.as_deref() != Some(adapter) {
+                    self.swaps += 1;
+                    us += self.cal.swap_us;
+                    self.shards[shard].swap_resident = Some(adapter.to_string());
+                }
+                self.cal.merged_hit_us
+            }
+            StrategyKind::OnTheFly => self.cal.onthefly_us,
+        };
+        us += batch.len() as f64 * (self.cal.req_us + per_req);
+        let cost = (us.round() as u64).max(1);
+        let end = if self.shards[shard].workers.is_empty() { t } else { t + cost };
+        self.max_t = self.max_t.max(end);
+        self.peak_resident = self.peak_resident.max(self.resident_bytes());
+        cost
+    }
+
+    /// Store-model cost of touching `adapter`: first touch materializes
+    /// a record (sealing a page when it fills); shard-resident hits are
+    /// free; resident misses read through the sealed-page LRU cache.
+    fn store_access_us(&mut self, shard: usize, adapter: &str) -> f64 {
+        let mut us = 0.0;
+        let rpp = self.store.records_per_page;
+        let rec = match self.store.mat_index.get(adapter) {
+            Some(&r) => r,
+            None => {
+                let r = self.store.mat_index.len();
+                self.store.mat_index.insert(adapter.to_string(), r);
+                if (r + 1) % rpp == 0 {
+                    self.store.page_outs += 1;
+                    us += self.cal.page_out_us;
+                }
+                r
+            }
+        };
+        let resident = &mut self.shards[shard].resident;
+        if let Some(pos) = resident.iter().position(|x| x == adapter) {
+            resident.remove(pos);
+            resident.push(adapter.to_string());
+            return us;
+        }
+        resident.push(adapter.to_string());
+        if resident.len() > self.cfg.resident_cap.max(1) {
+            resident.remove(0);
+        }
+        let page = rec / rpp;
+        let sealed = (page + 1) * rpp <= self.store.mat_index.len();
+        if sealed {
+            let cache = &mut self.store.page_cache;
+            if let Some(pos) = cache.iter().position(|&p| p == page) {
+                cache.remove(pos);
+                cache.push(page);
+            } else {
+                self.store.page_ins += 1;
+                us += self.cal.page_in_us;
+                cache.push(page);
+                if cache.len() > self.cfg.cache_pages.max(1) {
+                    cache.remove(0);
+                }
+            }
+        }
+        us
+    }
+
+    /// Modeled resident memory right now: merged buffers + resident
+    /// adapter records per shard, plus the shared page cache.
+    fn resident_bytes(&self) -> u64 {
+        let mut b = (self.store.page_cache.len() * self.cfg.page_bytes) as u64;
+        for s in &self.shards {
+            b += (s.merged.len() * self.cfg.merged_bytes) as u64;
+            b += (s.resident.len() * self.cfg.record_bytes) as u64;
+        }
+        b
+    }
+
+    fn report(mut self, requests: u64, events: u64) -> SimReport {
+        let mut agg = SchedStats::default();
+        for s in &self.shards {
+            agg.absorb(s.sched.stats());
+        }
+        self.latencies_us.sort_unstable();
+        let span = self.max_t;
+        let virtual_req_per_s =
+            if span == 0 { 0.0 } else { agg.released as f64 / (span as f64 / 1e6) };
+        SimReport {
+            requests,
+            released: agg.released,
+            shed: agg.shed(),
+            shed_rate: agg.shed_rate(),
+            batches: agg.batches,
+            events,
+            sim_span_us: span,
+            p50_ms: pct_ms(&self.latencies_us, 0.50),
+            p95_ms: pct_ms(&self.latencies_us, 0.95),
+            p99_ms: pct_ms(&self.latencies_us, 0.99),
+            merges: self.merges,
+            merged_hits: self.merged_hits,
+            swaps: self.swaps,
+            page_ins: self.store.page_ins,
+            page_outs: self.store.page_outs,
+            promotions: self.promotions,
+            hot_promotions: self.hot_promotions,
+            replica_routes: self.replica_routes,
+            steals: self.steals,
+            stolen_requests: self.stolen_requests,
+            peak_resident_bytes: self.peak_resident,
+            virtual_req_per_s,
+            event_log_hash: self.hash,
+            recommended_shards: recommend_shards(
+                self.shards.len(),
+                agg.shed_rate(),
+                &self.cfg.fleet.auto_scale,
+            ),
+            event_log: self.event_log,
+        }
+    }
+}
+
+/// Nearest-rank percentile over sorted µs samples, reported in ms.
+fn pct_ms(sorted_us: &[u64], q: f64) -> f64 {
+    if sorted_us.is_empty() {
+        return 0.0;
+    }
+    let i = ((sorted_us.len() - 1) as f64 * q).round() as usize;
+    sorted_us[i.min(sorted_us.len() - 1)] as f64 / 1000.0
+}
+
+/// One-shot convenience: build a [`Sim`] and run a trace through it.
+pub fn simulate(cfg: &SimCfg, cal: &Calibration, arrivals: &[Arrival]) -> SimReport {
+    Sim::new(cfg.clone(), cal.clone()).run(arrivals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::ExecutionPolicy;
+    use crate::coordinator::loadgen::{generate, schedule_trace_timed, LoadGenCfg, Scenario};
+    use crate::coordinator::scheduler::SchedulerCfg;
+
+    fn ideal_single_shard(sched: SchedulerCfg) -> SimCfg {
+        SimCfg {
+            fleet: FleetCfg {
+                shards: 1,
+                replicas: 1,
+                workers_per_shard: 0,
+                sched,
+                policy: ExecutionPolicy::Static(StrategyKind::OnTheFly),
+                ..Default::default()
+            },
+            record_events: true,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn single_shard_ideal_matches_schedule_trace_exactly() {
+        let lg = LoadGenCfg {
+            n_adapters: 6,
+            n_requests: 300,
+            scenario: Scenario::Zipf { exponent: 1.2 },
+            ..Default::default()
+        };
+        let arrivals = generate(&lg);
+        let sched = SchedulerCfg { max_batch: 4, quantum: 2, ..Default::default() };
+        let (want, want_stats) = schedule_trace_timed(&sched, &arrivals);
+        let report = simulate(&ideal_single_shard(sched), &Calibration::default(), &arrivals);
+        let got: Vec<(u64, String, Vec<u64>)> = report
+            .event_log
+            .iter()
+            .map(|r| (r.t_us, r.adapter.clone(), r.ids.clone()))
+            .collect();
+        assert_eq!(got, want, "sim must reproduce the real scheduler's decisions");
+        assert_eq!(report.released, want_stats.released);
+        assert_eq!(report.shed, want_stats.shed());
+        assert_eq!(report.requests, 300);
+    }
+
+    #[test]
+    fn identical_runs_produce_identical_reports() {
+        let lg = LoadGenCfg {
+            n_adapters: 32,
+            n_requests: 500,
+            scenario: Scenario::Churn { working_set: 4, dwell: 8 },
+            ..Default::default()
+        };
+        let arrivals = generate(&lg);
+        let cfg = SimCfg {
+            fleet: FleetCfg { shards: 2, workers_per_shard: 1, ..Default::default() },
+            resident_cap: 4,
+            cache_pages: 2,
+            page_bytes: 8192,
+            ..Default::default()
+        };
+        let a = simulate(&cfg, &Calibration::default(), &arrivals);
+        let b = simulate(&cfg, &Calibration::default(), &arrivals);
+        assert_eq!(a, b);
+        assert_ne!(a.event_log_hash, FNV_OFFSET, "hash must fold releases");
+    }
+
+    #[test]
+    fn capacity_mode_backs_up_and_extends_the_span() {
+        // 2k requests at ~5 µs mean gap against one worker needing
+        // ~hundreds of µs per on-the-fly batch: the queue must back up
+        // past the arrival span and completions must appear as events.
+        let lg = LoadGenCfg {
+            n_adapters: 8,
+            n_requests: 2000,
+            mean_gap_us: 5,
+            ..Default::default()
+        };
+        let arrivals = generate(&lg);
+        let arrival_span = arrivals.last().unwrap().at.as_micros() as u64;
+        let cfg = SimCfg {
+            fleet: FleetCfg {
+                shards: 1,
+                workers_per_shard: 1,
+                sched: SchedulerCfg { max_pending: 256, ..Default::default() },
+                policy: ExecutionPolicy::Static(StrategyKind::OnTheFly),
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let r = simulate(&cfg, &Calibration::default(), &arrivals);
+        assert!(r.events > r.requests, "BatchDone events: {} vs {}", r.events, r.requests);
+        assert!(r.sim_span_us > arrival_span);
+        assert!(r.shed > 0, "max_pending 256 under overload must shed");
+        assert_eq!(r.released + r.shed, r.requests, "conservation");
+        assert!(r.virtual_req_per_s > 0.0);
+    }
+
+    #[test]
+    fn store_model_pages_under_a_tiny_cache() {
+        // Uniform traffic over many adapters with a 2-record resident
+        // LRU: sealed pages must cycle through the page cache.
+        let lg = LoadGenCfg { n_adapters: 64, n_requests: 800, ..Default::default() };
+        let arrivals = generate(&lg);
+        let cfg = SimCfg {
+            fleet: FleetCfg {
+                shards: 1,
+                replicas: 1,
+                workers_per_shard: 0,
+                policy: ExecutionPolicy::Static(StrategyKind::OnTheFly),
+                ..Default::default()
+            },
+            resident_cap: 2,
+            cache_pages: 2,
+            page_bytes: 8192,
+            record_bytes: 4096,
+            ..Default::default()
+        };
+        let r = simulate(&cfg, &Calibration::default(), &arrivals);
+        assert!(r.page_outs > 0, "64 records at 2/page must seal pages");
+        assert!(r.page_ins > 0, "cold re-reads must page in");
+        assert!(r.peak_resident_bytes > 0);
+    }
+
+    #[test]
+    fn skewed_traffic_promotes_and_steals() {
+        let lg = LoadGenCfg {
+            n_adapters: 16,
+            n_requests: 2000,
+            mean_gap_us: 5,
+            scenario: Scenario::Zipf { exponent: 1.4 },
+            ..Default::default()
+        };
+        let arrivals = generate(&lg);
+        let cfg = SimCfg {
+            fleet: FleetCfg {
+                shards: 4,
+                workers_per_shard: 1,
+                hot_threshold: 16,
+                steal_margin: 4,
+                policy: ExecutionPolicy::TrafficAware { hot_threshold: 16 },
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let r = simulate(&cfg, &Calibration::default(), &arrivals);
+        assert!(r.hot_promotions > 0, "zipf head must cross hot_threshold");
+        assert!(r.promotions > 0, "traffic-aware policy must promote");
+        assert!(r.merges > 0, "promoted adapters pay a merge");
+        assert!(r.steals > 0, "skewed shards must steal: {r:?}");
+        assert_eq!(r.released + r.shed, r.requests);
+    }
+
+    #[test]
+    fn report_json_has_stable_fields() {
+        let arrivals = generate(&LoadGenCfg { n_requests: 64, ..Default::default() });
+        let r = simulate(&SimCfg::default(), &Calibration::default(), &arrivals);
+        let json = r.to_json().dump();
+        for field in [
+            "\"requests\"",
+            "\"shed_rate\"",
+            "\"p95_ms\"",
+            "\"virtual_req_per_s\"",
+            "\"event_log_hash\"",
+            "\"recommended_shards\"",
+        ] {
+            assert!(json.contains(field), "missing {field} in {json}");
+        }
+    }
+}

@@ -1,0 +1,250 @@
+//! Offline configuration auto-tuning: sweep a grid of fleet knobs over
+//! one trace in virtual time, score each run, and rank.
+//!
+//! Because a [`simulate`](super::stack::simulate) run costs wall-clock
+//! milliseconds where the real fleet would take minutes, an exhaustive
+//! sweep over the knobs that actually move capacity — scheduler quantum
+//! and queue bounds, the hot threshold, shard count, page-cache size —
+//! is affordable as a test, a bench stage, or a CLI call
+//! (`ether simulate --tune`).
+//!
+//! # Scoring
+//!
+//! Lower is better. The score is a lexicographic-in-spirit weighted
+//! sum:
+//!
+//! ```text
+//! score = shed_rate · 1e6  +  p95_ms · 1e2  +  resident_MiB
+//! ```
+//!
+//! Shed requests dominate (a config that drops traffic loses to any
+//! config that does not, up to 10k ms of p95), tail latency comes next
+//! (1 ms of p95 outweighs 100 MiB of memory), and peak resident memory
+//! breaks the remaining ties toward the cheaper deployment. Ties in
+//! the final sort keep grid order, so rankings are deterministic.
+
+use std::cmp::Ordering;
+
+use crate::coordinator::engine::ExecutionPolicy;
+use crate::coordinator::loadgen::Arrival;
+use crate::util::json::Value;
+
+use super::cost::Calibration;
+use super::stack::{simulate, SimCfg, SimReport};
+
+/// The swept knob values. Defaults give a 2·2·2·3·2 = 48-point grid —
+/// small enough for a test, wide enough to separate configurations
+/// under load.
+#[derive(Clone, Debug)]
+pub struct TuneGrid {
+    /// [`SchedulerCfg::quantum`](crate::coordinator::scheduler::SchedulerCfg::quantum).
+    pub quantum: Vec<usize>,
+    /// [`SchedulerCfg::max_queue_per_adapter`](crate::coordinator::scheduler::SchedulerCfg::max_queue_per_adapter).
+    pub max_queue_per_adapter: Vec<usize>,
+    /// Fleet + policy hot threshold (kept in lockstep — the fleet
+    /// replicates the adapters the policy promotes).
+    pub hot_threshold: Vec<u64>,
+    /// [`FleetCfg::shards`](crate::coordinator::fleet::FleetCfg::shards).
+    pub shards: Vec<usize>,
+    /// [`SimCfg::cache_pages`].
+    pub cache_pages: Vec<usize>,
+}
+
+impl Default for TuneGrid {
+    fn default() -> TuneGrid {
+        TuneGrid {
+            quantum: vec![0, 4],
+            max_queue_per_adapter: vec![16, 64],
+            hot_threshold: vec![8, 32],
+            shards: vec![1, 2, 4],
+            cache_pages: vec![2, 8],
+        }
+    }
+}
+
+impl TuneGrid {
+    /// Number of configurations the sweep will run.
+    pub fn len(&self) -> usize {
+        self.quantum.len()
+            * self.max_queue_per_adapter.len()
+            * self.hot_threshold.len()
+            * self.shards.len()
+            * self.cache_pages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One grid point: the knob values applied on top of the base config.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TunePoint {
+    pub quantum: usize,
+    pub max_queue_per_adapter: usize,
+    pub hot_threshold: u64,
+    pub shards: usize,
+    pub cache_pages: usize,
+}
+
+/// One swept configuration with its simulated outcome and score.
+#[derive(Clone, Debug)]
+pub struct TuneResult {
+    pub point: TunePoint,
+    pub score: f64,
+    pub report: SimReport,
+}
+
+impl TuneResult {
+    /// One ranked row for `BENCH_sim_tune.json`.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("quantum", Value::num(self.point.quantum as f64)),
+            ("max_queue_per_adapter", Value::num(self.point.max_queue_per_adapter as f64)),
+            ("hot_threshold", Value::num(self.point.hot_threshold as f64)),
+            ("shards", Value::num(self.point.shards as f64)),
+            ("cache_pages", Value::num(self.point.cache_pages as f64)),
+            ("score", Value::num(self.score)),
+            ("shed_rate", Value::num(self.report.shed_rate)),
+            ("p95_ms", Value::num(self.report.p95_ms)),
+            ("peak_resident_bytes", Value::num(self.report.peak_resident_bytes as f64)),
+            ("virtual_req_per_s", Value::num(self.report.virtual_req_per_s)),
+        ])
+    }
+}
+
+/// The tuner's objective over one run (lower is better — see the
+/// module docs for the weighting rationale).
+pub fn score(report: &SimReport) -> f64 {
+    let resident_mib = report.peak_resident_bytes as f64 / (1024.0 * 1024.0);
+    report.shed_rate * 1e6 + report.p95_ms * 1e2 + resident_mib
+}
+
+/// Sweep `grid` over `arrivals`, applying each point on top of `base`,
+/// and return every result ranked best-first. The sweep order is fixed
+/// (shards, quantum, queue bound, hot threshold, cache pages — inner to
+/// outer as listed) and the sort is stable, so equal scores keep grid
+/// order and the ranking is a deterministic function of the inputs.
+pub fn tune(
+    base: &SimCfg,
+    cal: &Calibration,
+    arrivals: &[Arrival],
+    grid: &TuneGrid,
+) -> Vec<TuneResult> {
+    let mut results = Vec::with_capacity(grid.len());
+    for &shards in &grid.shards {
+        for &quantum in &grid.quantum {
+            for &max_queue in &grid.max_queue_per_adapter {
+                for &hot in &grid.hot_threshold {
+                    for &cache_pages in &grid.cache_pages {
+                        let mut cfg = base.clone();
+                        cfg.fleet.shards = shards;
+                        cfg.fleet.sched.quantum = quantum;
+                        cfg.fleet.sched.max_queue_per_adapter = max_queue;
+                        cfg.fleet.hot_threshold = hot;
+                        if let ExecutionPolicy::TrafficAware { .. } = cfg.fleet.policy {
+                            cfg.fleet.policy =
+                                ExecutionPolicy::TrafficAware { hot_threshold: hot };
+                        }
+                        cfg.cache_pages = cache_pages;
+                        cfg.record_events = false;
+                        let report = simulate(&cfg, cal, arrivals);
+                        results.push(TuneResult {
+                            point: TunePoint {
+                                quantum,
+                                max_queue_per_adapter: max_queue,
+                                hot_threshold: hot,
+                                shards,
+                                cache_pages,
+                            },
+                            score: score(&report),
+                            report,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    results.sort_by(|a, b| a.score.partial_cmp(&b.score).unwrap_or(Ordering::Equal));
+    results
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::fleet::FleetCfg;
+    use crate::coordinator::loadgen::{generate, LoadGenCfg, Scenario};
+    use crate::coordinator::scheduler::SchedulerCfg;
+
+    fn overload_base() -> SimCfg {
+        SimCfg {
+            fleet: FleetCfg {
+                workers_per_shard: 1,
+                sched: SchedulerCfg { max_pending: 256, ..Default::default() },
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn default_grid_is_48_points_and_ranking_is_deterministic() {
+        let grid = TuneGrid::default();
+        assert_eq!(grid.len(), 48);
+        assert!(!grid.is_empty());
+        let arrivals = generate(&LoadGenCfg {
+            n_adapters: 16,
+            n_requests: 600,
+            mean_gap_us: 10,
+            scenario: Scenario::Zipf { exponent: 1.2 },
+            ..Default::default()
+        });
+        let base = overload_base();
+        let a = tune(&base, &Calibration::default(), &arrivals, &grid);
+        let b = tune(&base, &Calibration::default(), &arrivals, &grid);
+        assert_eq!(a.len(), 48);
+        let key = |rs: &[TuneResult]| -> Vec<(TunePoint, u64)> {
+            rs.iter().map(|r| (r.point, r.score.to_bits())).collect()
+        };
+        assert_eq!(key(&a), key(&b), "two sweeps must rank identically");
+        assert!(a.windows(2).all(|w| w[0].score <= w[1].score), "ranked best-first");
+    }
+
+    #[test]
+    fn score_prefers_not_shedding_over_everything() {
+        let arrivals = generate(&LoadGenCfg {
+            n_adapters: 8,
+            n_requests: 400,
+            mean_gap_us: 10,
+            ..Default::default()
+        });
+        let base = overload_base();
+        let mut shedding = base.clone();
+        shedding.fleet.shards = 1;
+        let mut scaled = base.clone();
+        scaled.fleet.shards = 4;
+        let cal = Calibration::default();
+        let r1 = simulate(&shedding, &cal, &arrivals);
+        let r4 = simulate(&scaled, &cal, &arrivals);
+        assert!(r1.shed_rate > r4.shed_rate, "{} vs {}", r1.shed_rate, r4.shed_rate);
+        assert!(score(&r1) > score(&r4), "the shedding config must score worse");
+    }
+
+    #[test]
+    fn tune_rows_serialize_the_knobs_and_outcomes() {
+        let arrivals = generate(&LoadGenCfg { n_requests: 64, ..Default::default() });
+        let grid = TuneGrid {
+            quantum: vec![0],
+            max_queue_per_adapter: vec![16],
+            hot_threshold: vec![8],
+            shards: vec![1],
+            cache_pages: vec![2],
+        };
+        let results = tune(&SimCfg::default(), &Calibration::default(), &arrivals, &grid);
+        assert_eq!(results.len(), 1);
+        let json = results[0].to_json().dump();
+        for field in ["\"quantum\"", "\"shards\"", "\"score\"", "\"shed_rate\"", "\"p95_ms\""] {
+            assert!(json.contains(field), "missing {field} in {json}");
+        }
+    }
+}

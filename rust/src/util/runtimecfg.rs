@@ -17,6 +17,7 @@
 //! | `ETHER_STORE_PAGE_KB`     | [`RuntimeCfg::store_page_bytes`] | `64` KiB             |
 //! | `ETHER_STORE_CACHE_PAGES` | [`RuntimeCfg::store_cache_pages`] | `8`                 |
 //! | `ETHER_RESIDENT_ADAPTERS` | [`RuntimeCfg::resident_adapters`] | `1024`              |
+//! | `ETHER_SIM_CALIB`         | `sim_calib` field        | unset (default cost model)   |
 //!
 //! **Precedence is `explicit argument > environment > default`**: code
 //! that accepts a knob as a function/CLI argument resolves it with
@@ -58,6 +59,9 @@ pub struct RuntimeCfg {
     pub store_cache_pages: Option<usize>,
     /// `ETHER_RESIDENT_ADAPTERS` — registry resident-set cap (entries).
     pub resident_adapters: Option<usize>,
+    /// `ETHER_SIM_CALIB` — directory of `BENCH_*.json` files the fleet
+    /// simulator calibrates its cost model from.
+    pub sim_calib: Option<PathBuf>,
 }
 
 /// Lenient counter parse: numeric clamps up to 1, garbage → `None`.
@@ -93,6 +97,7 @@ impl RuntimeCfg {
             store_page_kb: get("ETHER_STORE_PAGE_KB").as_deref().and_then(parse_count),
             store_cache_pages: get("ETHER_STORE_CACHE_PAGES").as_deref().and_then(parse_count),
             resident_adapters: get("ETHER_RESIDENT_ADAPTERS").as_deref().and_then(parse_count),
+            sim_calib: get("ETHER_SIM_CALIB").and_then(non_empty).map(PathBuf::from),
         }
     }
 
@@ -163,6 +168,7 @@ mod tests {
         assert_eq!(cfg.resident_adapters(), 1024);
         assert!(!cfg.bench_quick);
         assert!(cfg.bench_json.is_none());
+        assert!(cfg.sim_calib.is_none());
     }
 
     #[test]
@@ -176,6 +182,7 @@ mod tests {
             ("ETHER_STORE_PAGE_KB", "16"),
             ("ETHER_STORE_CACHE_PAGES", "2"),
             ("ETHER_RESIDENT_ADAPTERS", "64"),
+            ("ETHER_SIM_CALIB", "/tmp/calib"),
         ]));
         assert_eq!(cfg.threads(), 8);
         assert_eq!(cfg.sched_workers(), 1);
@@ -185,6 +192,7 @@ mod tests {
         assert_eq!(cfg.store_page_bytes(), 16 * 1024);
         assert_eq!(cfg.store_cache_pages(), 2);
         assert_eq!(cfg.resident_adapters(), 64);
+        assert_eq!(cfg.sim_calib.as_deref(), Some(std::path::Path::new("/tmp/calib")));
     }
 
     #[test]

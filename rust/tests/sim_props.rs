@@ -1,0 +1,195 @@
+//! Integration properties of the discrete-event fleet simulator
+//! (`ether::sim`):
+//!
+//! * **Bit-identical determinism** — the full [`SimReport`] (event log,
+//!   log hash, every counter) is identical across repeated runs and
+//!   across spawning threads; virtual time owes nothing to the wall
+//!   clock or the ambient thread pool.
+//! * **Decision parity** — with one ideal shard the sim's release
+//!   trace (timestamps included) equals
+//!   [`schedule_trace_timed`]'s across every traffic scenario and
+//!   randomized scheduler configurations: the simulator runs the real
+//!   scheduler, not a model of it.
+//! * **Tuner regression** — on an overloaded trace where one shard
+//!   must shed and four keep up, the ranked winner is pinned: scaled
+//!   out, effectively shed-free, deterministic across sweeps.
+//! * **Auto-scaling validation** — the advisory shard recommendation
+//!   ([`AutoScale`]) is validated offline: following the sim's
+//!   recommendation strictly reduces shedding on a rerun.
+
+use std::time::Duration;
+
+use ether::coordinator::loadgen::{
+    generate, schedule_trace_timed, Arrival, LoadGenCfg, Scenario,
+};
+use ether::coordinator::{AutoScale, FleetCfg, SchedulerCfg};
+use ether::sim::{simulate, tune, Calibration, SimCfg, TuneGrid, TunePoint};
+use ether::util::prop::check;
+
+fn ideal_single_shard(sched: SchedulerCfg) -> SimCfg {
+    SimCfg {
+        fleet: FleetCfg { shards: 1, workers_per_shard: 0, sched, ..Default::default() },
+        record_events: true,
+        ..Default::default()
+    }
+}
+
+/// A burst of uniform traffic that outruns one capacity-mode shard
+/// (256-deep admission bound vs 480 near-simultaneous arrivals) but
+/// fits comfortably across four.
+fn overload_arrivals() -> Vec<Arrival> {
+    generate(&LoadGenCfg {
+        n_adapters: 16,
+        n_requests: 480,
+        seed: 11,
+        mean_gap_us: 10,
+        scenario: Scenario::Uniform,
+        ..Default::default()
+    })
+}
+
+fn overload_base(shards: usize) -> SimCfg {
+    SimCfg {
+        fleet: FleetCfg {
+            shards,
+            workers_per_shard: 1,
+            sched: SchedulerCfg { max_pending: 256, ..Default::default() },
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn reports_are_bit_identical_across_runs_and_threads() {
+    let arrivals = generate(&LoadGenCfg {
+        n_adapters: 24,
+        n_requests: 800,
+        scenario: Scenario::all()[3], // churn: rotating working set
+        ..Default::default()
+    });
+    let cfg = SimCfg {
+        fleet: FleetCfg {
+            shards: 3,
+            workers_per_shard: 1,
+            hot_threshold: 16,
+            ..Default::default()
+        },
+        record_events: true,
+        ..Default::default()
+    };
+    let cal = Calibration::default();
+    let baseline = simulate(&cfg, &cal, &arrivals);
+    assert_eq!(simulate(&cfg, &cal, &arrivals), baseline, "replays must be bit-identical");
+    assert!(!baseline.event_log.is_empty(), "event recording was on");
+
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let (cfg, cal, arrivals) = (cfg.clone(), cal.clone(), arrivals.clone());
+            std::thread::spawn(move || simulate(&cfg, &cal, &arrivals))
+        })
+        .collect();
+    for h in handles {
+        let r = h.join().expect("sim thread must not panic");
+        assert_eq!(r, baseline, "the report must not depend on the spawning thread");
+    }
+}
+
+#[test]
+fn single_shard_ideal_sim_replays_the_scheduler_trace() {
+    check("sim-vs-schedule-trace", 24, |rng| {
+        let scenario = Scenario::all()[rng.below(4)];
+        let sched = SchedulerCfg {
+            max_batch: rng.range(1, 9),
+            max_wait: Duration::from_millis(rng.range(1, 6) as u64),
+            quantum: rng.below(5),
+            max_queue_per_adapter: rng.range(4, 33),
+            max_pending: rng.range(32, 129),
+        };
+        let arrivals = generate(&LoadGenCfg {
+            n_adapters: rng.range(2, 10),
+            n_requests: rng.range(50, 200),
+            seed: rng.below(1 << 16) as u64,
+            scenario,
+            ..Default::default()
+        });
+        let (trace, stats) = schedule_trace_timed(&sched, &arrivals);
+        let report = simulate(&ideal_single_shard(sched), &Calibration::default(), &arrivals);
+        let sim_trace: Vec<(u64, String, Vec<u64>)> = report
+            .event_log
+            .iter()
+            .map(|r| (r.t_us, r.adapter.clone(), r.ids.clone()))
+            .collect();
+        if sim_trace != trace {
+            return Err(format!(
+                "{}: release traces diverge ({} sim vs {} trace entries)",
+                scenario.name(),
+                sim_trace.len(),
+                trace.len()
+            ));
+        }
+        if report.released != stats.released || report.shed != stats.shed() {
+            return Err(format!(
+                "{}: stats diverge (released {} vs {}, shed {} vs {})",
+                scenario.name(),
+                report.released,
+                stats.released,
+                report.shed,
+                stats.shed()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tuner_pins_the_scaled_out_config_on_an_overloaded_trace() {
+    let arrivals = overload_arrivals();
+    let base = overload_base(4);
+    let cal = Calibration::default();
+    let grid = TuneGrid::default();
+    let a = tune(&base, &cal, &arrivals, &grid);
+    let b = tune(&base, &cal, &arrivals, &grid);
+    let key = |rs: &[ether::sim::TuneResult]| -> Vec<(TunePoint, u64)> {
+        rs.iter().map(|r| (r.point, r.score.to_bits())).collect()
+    };
+    assert_eq!(key(&a), key(&b), "two sweeps must produce the identical ranking");
+
+    let winner = &a[0];
+    assert_eq!(winner.point.shards, 4, "the tuner must scale out under overload");
+    assert!(
+        winner.report.shed_rate < 0.01,
+        "the winning config must keep up (shed rate {})",
+        winner.report.shed_rate
+    );
+    let best_single = a
+        .iter()
+        .find(|r| r.point.shards == 1)
+        .expect("the default grid sweeps single-shard configs");
+    assert!(
+        best_single.report.shed_rate > 0.2,
+        "even the best one-shard config must shed heavily here (shed rate {})",
+        best_single.report.shed_rate
+    );
+}
+
+#[test]
+fn auto_scale_recommendation_reduces_shedding_when_followed() {
+    let arrivals = overload_arrivals();
+    let mut cfg = overload_base(1);
+    cfg.fleet.auto_scale = AutoScale { enabled: true, ..Default::default() };
+    let cal = Calibration::default();
+
+    let first = simulate(&cfg, &cal, &arrivals);
+    assert!(first.shed_rate > 0.05, "the one-shard run must overload (shed {})", first.shed_rate);
+    assert_eq!(first.recommended_shards, 2, "overload must recommend scaling out");
+
+    cfg.fleet.shards = first.recommended_shards;
+    let second = simulate(&cfg, &cal, &arrivals);
+    assert!(
+        second.shed_rate < first.shed_rate,
+        "following the recommendation must reduce shedding ({} -> {})",
+        first.shed_rate,
+        second.shed_rate
+    );
+}

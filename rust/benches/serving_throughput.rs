@@ -16,6 +16,12 @@
 //! `zipf-1M` row additionally records per-shard req/s, steal/replica
 //! counters, page-in/out counts, and steady-state resident bytes, and
 //! asserts paged-adapter serving parity against a never-paged fleet.
+//!
+//! The `zipf+otf-batched` / `zipf+otf-pervec` pair is the batched-GEMM
+//! record: the same compute-bound zipf backlog through the batched
+//! `T(W)·X` path and the per-vector oracle, with `batched_speedup`
+//! (asserted ≥1.5× at mean batch ≥8), `parity_max_abs` (asserted
+//! ≤1e-5), and byte-identical responses asserted in-bench.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -152,6 +158,149 @@ fn drive(
     // Drain: everything still queued is past its deadline at now+wait.
     let late = Instant::now() + server.sched.cfg.max_wait + Duration::from_millis(1);
     pump(server, late);
+}
+
+/// Batched-vs-per-vector GEMM rows: the same zipf trace replayed
+/// through the batched on-the-fly path (one `T(W)·X` GEMM per released
+/// batch) and through the pre-batching per-vector oracle (one `m = 1`
+/// sweep per request). Compute-bound on purpose — the whole trace is
+/// submitted up front (no pacing sleeps) at GEMM-heavy dims with
+/// `max_batch = 16`, so releases are full batches and the kernel, not
+/// the scheduler, dominates.
+///
+/// Asserts in-bench: responses **byte-identical** between the two
+/// paths, activation parity ≤ 1e-5 (`parity_max_abs`, measured on the
+/// hottest adapter's batched output against per-column `m = 1` runs),
+/// mean released batch ≥ 8, and batched req/s ≥ 1.5× per-vector.
+/// Returns the two BENCH rows (`zipf+otf-batched`, `zipf+otf-pervec`)
+/// with `mean_batch`, `parity_max_abs`, and `batched_speedup` fields.
+fn run_batched_vs_pervector(quick: bool) -> Vec<Value> {
+    let n_requests: usize = if quick { 192 } else { 512 };
+    let n_adapters: usize = 6;
+    // GEMM-heavy dims (ether_n4 needs 4 | d): the per-request kernel
+    // work dwarfs scheduling overhead, so the row isolates the batching
+    // win the tentpole is about.
+    let dims = ModelDims { d_model: 192, d_ff: 384, n_layers: 2 };
+    let layout = base_layout_for(dims);
+    let mut rng = Rng::new(31);
+    let base: Vec<f32> = rng.normal_vec(layout.total, 0.05);
+    let workers = ether::coordinator::server::dispatch_workers();
+
+    let cfg = SchedulerCfg {
+        max_batch: 16,
+        max_wait: Duration::from_millis(1),
+        quantum: 0, // plain round-robin: releases fill to max_batch
+        max_queue_per_adapter: n_requests,
+        max_pending: 2 * n_requests,
+    };
+    let zipf = Scenario::all()[1];
+    assert_eq!(zipf.name(), "zipf");
+    let arrivals = loadgen::generate(&LoadGenCfg {
+        n_adapters,
+        n_requests,
+        seed: 99,
+        scenario: zipf,
+        ..Default::default()
+    });
+
+    let merger = Arc::new(MergeEngine::new(dims, base.clone(), &layout, 4, 4).unwrap());
+    let mut run = |label: &str, engine: &AdapterEngine| {
+        let mut registry = AdapterRegistry::new();
+        registry.register_fleet(n_adapters, "ether_n4", "host", dims, 42).unwrap();
+        let mut server = Server::new(registry, cfg.clone());
+        let t0 = Instant::now();
+        for (i, a) in arrivals.iter().enumerate() {
+            server
+                .submit(Request {
+                    id: i as u64,
+                    adapter: format!("user{}", a.adapter),
+                    prompt: a.prompt.clone(),
+                    max_new: a.max_new,
+                    enqueued: t0,
+                })
+                .expect("compute-bound trace stays under admission bounds");
+        }
+        let mut out = std::collections::BTreeMap::new();
+        // Everything is queued; every pump releases each adapter's next
+        // full batch. Loop until drained (bounded — a shed request
+        // would otherwise spin forever, and shedding here is a bug).
+        let mut pumps = 0;
+        while server.stats.served < n_requests as u64 {
+            pumps += 1;
+            assert!(pumps <= 4 * n_requests, "{label}: drain did not converge");
+            let late = Instant::now() + cfg.max_wait + Duration::from_millis(1);
+            server.pump_pool(engine, late, workers, |r| {
+                out.insert(r.id, r.output);
+            }).unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64().max(1e-9);
+        let snap = server.snapshot();
+        assert_eq!(out.len(), n_requests, "{label}: every request must be served");
+        (snap, dt, out)
+    };
+
+    let batched_engine =
+        AdapterEngine::host(merger.clone(), ExecutionPolicy::Static(StrategyKind::OnTheFly));
+    let (snap_b, dt_b, out_b) = run("zipf+otf-batched", &batched_engine);
+    let oracle_engine = AdapterEngine::host_onthefly_oracle(merger.clone());
+    let (snap_p, dt_p, out_p) = run("zipf+otf-pervec", &oracle_engine);
+
+    // 1. Byte-identity: the batched GEMM path must reproduce the
+    // per-vector oracle's responses exactly, request by request.
+    assert_eq!(out_b, out_p, "batched and per-vector serving must agree byte-for-byte");
+
+    // 2. Kernel parity on the hottest adapter: every column of one
+    // batched m=8 activation run vs its own m=1 run, ≤ 1e-5 (the fixed
+    // f64 reduction order makes this exactly 0.0 in practice).
+    let m = 8usize;
+    let entry = {
+        let mut registry = AdapterRegistry::new();
+        registry.register_fleet(n_adapters, "ether_n4", "host", dims, 42).unwrap();
+        registry.get("user0").unwrap()
+    };
+    let probe = merger.activation_probe(m);
+    let y = merger.activations_with(&entry, &probe, m).unwrap();
+    let cols = merger.plan().max_item_cols();
+    let mut parity_max_abs = 0.0f32;
+    for c in 0..m {
+        let xc: Vec<f32> = (0..cols).map(|j| probe[j * m + c]).collect();
+        let yc = merger.activations_with(&entry, &xc, 1).unwrap();
+        for (j, &v) in yc.iter().enumerate() {
+            parity_max_abs = parity_max_abs.max((y[j * m + c] - v).abs());
+        }
+    }
+    assert!(parity_max_abs <= 1e-5, "batched-vs-serial parity {parity_max_abs} > 1e-5");
+
+    // 3. The scheduler actually batched: mean release ≥ 8 under the
+    // all-up-front zipf backlog.
+    let mean_batch = snap_b.server.served as f64 / snap_b.server.batches.max(1) as f64;
+    assert!(mean_batch >= 8.0, "mean released batch {mean_batch:.1} < 8");
+
+    // 4. The tentpole number: batched req/s ≥ 1.5× per-vector.
+    let speedup = (snap_b.req_per_s(dt_b)) / snap_p.req_per_s(dt_p).max(1e-9);
+    assert!(
+        speedup >= 1.5,
+        "batched on-the-fly must be ≥1.5× per-vector at batch ≥8, got {speedup:.2}×"
+    );
+    println!(
+        "zipf batched-vs-pervec: {:.1} vs {:.1} req/s ({speedup:.2}×) | mean batch {mean_batch:.1} | parity {parity_max_abs:.1e}",
+        snap_b.req_per_s(dt_b),
+        snap_p.req_per_s(dt_p),
+    );
+
+    let mut rows = vec![];
+    for (label, snap, dt) in
+        [("zipf+otf-batched", &snap_b, dt_b), ("zipf+otf-pervec", &snap_p, dt_p)]
+    {
+        let mut row = snap.scenario_json(label, dt);
+        if let Value::Obj(fields) = &mut row {
+            fields.insert("mean_batch".to_string(), Value::num(mean_batch));
+            fields.insert("parity_max_abs".to_string(), Value::num(parity_max_abs as f64));
+            fields.insert("batched_speedup".to_string(), Value::num(speedup));
+        }
+        rows.push(row);
+    }
+    rows
 }
 
 /// The fleet-scale scenario: a zipf-1M trace over a store-backed,
@@ -404,6 +553,10 @@ fn main() {
         print_row(&label, &snap, dt);
         rows.push(snap.scenario_json(&label, dt));
     }
+
+    // Batched-vs-per-vector GEMM rows (compute-bound, own dims): the
+    // tentpole speedup record, with byte-identity and parity asserted.
+    rows.extend(run_batched_vs_pervector(quick));
 
     // The fleet tier: zipf-1M through sharded engines over the paged
     // store, plus the paged-vs-unpaged serving parity check.

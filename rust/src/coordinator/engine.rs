@@ -53,6 +53,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use anyhow::{anyhow, Result};
 
 use super::registry::{AdapterEntry, MergeEngine, MergedCache, SwapMode, SwapSlot};
+use crate::peft::precision::MergedBuf;
 use crate::runtime::engine::PjrtEngine;
 use crate::runtime::HostTensor;
 
@@ -64,6 +65,17 @@ pub fn weights_fingerprint(data: &[f32]) -> i32 {
     data.iter()
         .step_by(stride)
         .fold(0u32, |acc, x| acc.rotate_left(5) ^ x.to_bits()) as i32
+}
+
+/// [`weights_fingerprint`] of column `c` of a row-major `…×m` activation
+/// buffer (the batched GEMM output for request `c`). The gathered column
+/// is bit-identical to an `m = 1` activation run over that request's
+/// probe column, so batched and per-vector serving produce the **same**
+/// per-request tags — the equivalence `rust/tests/kernel_props.rs` pins.
+pub fn column_fingerprint(y: &[f32], m: usize, c: usize) -> i32 {
+    debug_assert!(c < m && y.len() % m == 0);
+    let col: Vec<f32> = y.iter().skip(c).step_by(m).copied().collect();
+    weights_fingerprint(&col)
 }
 
 /// Echo decode shared by the host strategies: each prompt comes back
@@ -249,17 +261,30 @@ impl ExecutionStrategy for InvolutionSwapStrategy {
 }
 
 /// Merge-free strategy: serves an adapter by applying its transform
-/// directly to activations — per work item `y = T(W)·x` through
-/// `TransformOp::apply_activations_into` — with **zero merged weight
-/// buffers** allocated, however many adapters rotate through. Decode is
-/// the fingerprint-tagged echo over the adapted probe activations.
+/// directly to activations with **zero merged weight buffers**
+/// allocated, however many adapters rotate through. The scheduler
+/// already groups releases by adapter, so the whole released batch runs
+/// as **one** `T(W)·X` GEMM (`X` = the `m` column-stacked probe
+/// vectors, `m` = batch size) through the register-tiled microkernels —
+/// not one `T(W)·x` sweep per request. Decode is the per-request
+/// fingerprint-tagged echo over each request's output column.
 pub struct OnTheFlyStrategy {
     merger: Arc<MergeEngine>,
+    batched: bool,
 }
 
 impl OnTheFlyStrategy {
     pub fn new(merger: Arc<MergeEngine>) -> OnTheFlyStrategy {
-        OnTheFlyStrategy { merger }
+        OnTheFlyStrategy { merger, batched: true }
+    }
+
+    /// The pre-batching path — one `m = 1` activation sweep per request
+    /// vector, each over its own column of the batch probe. Kept as the
+    /// **test-only oracle** for the batched path: outputs must be
+    /// byte-identical (`rust/tests/kernel_props.rs` pins it over a zipf
+    /// trace; `serving_throughput` records the speedup against it).
+    pub fn per_vector_oracle(merger: Arc<MergeEngine>) -> OnTheFlyStrategy {
+        OnTheFlyStrategy { merger, batched: false }
     }
 }
 
@@ -274,9 +299,30 @@ impl ExecutionStrategy for OnTheFlyStrategy {
         prompts: &[Vec<i32>],
         _max_new: usize,
     ) -> Result<Vec<Vec<i32>>> {
-        let y = self.merger.activations(adapter, 1)?;
-        let tag = weights_fingerprint(&y);
-        Ok(echo_tagged(prompts, tag))
+        let m = prompts.len().max(1);
+        let probe = self.merger.activation_probe(m);
+        let tags: Vec<i32> = if self.batched {
+            let y = self.merger.activations_with(adapter, &probe, m)?;
+            (0..m).map(|c| column_fingerprint(&y, m, c)).collect()
+        } else {
+            let cols = self.merger.plan().max_item_cols();
+            let mut tags = Vec::with_capacity(m);
+            for c in 0..m {
+                let xc: Vec<f32> = (0..cols).map(|j| probe[j * m + c]).collect();
+                let y = self.merger.activations_with(adapter, &xc, 1)?;
+                tags.push(weights_fingerprint(&y));
+            }
+            tags
+        };
+        Ok(prompts
+            .iter()
+            .zip(&tags)
+            .map(|(p, &t)| {
+                let mut o = p.clone();
+                o.push(t);
+                o
+            })
+            .collect())
     }
 
     /// Merge-free by construction: the shared engine's merge counter
@@ -353,7 +399,7 @@ impl<'e> PjrtMergedStrategy<'e> {
     fn merged(&self, adapter: &AdapterEntry, base: &[f32]) -> Result<Arc<Vec<f32>>> {
         loop {
             if let Some(m) = self.cache_guard().get(&adapter.id) {
-                return Ok(m);
+                return Ok(m.to_f32());
             }
             let mut inflight = self
                 .inflight
@@ -376,7 +422,7 @@ impl<'e> PjrtMergedStrategy<'e> {
         // Double-checked: a racer may have published between our cache
         // probe and winning the flight slot.
         if let Some(m) = self.cache_guard().get(&adapter.id) {
-            return Ok(m);
+            return Ok(m.to_f32());
         }
         let exec = self
             .engine
@@ -387,7 +433,10 @@ impl<'e> PjrtMergedStrategy<'e> {
         ])?;
         let merged = Arc::new(out[0].f32s()?.to_vec());
         // Publish before the flight marker drops, so woken waiters hit.
-        self.cache_guard().put(&adapter.id, merged.clone());
+        // Artifact merges always cache at full precision: the merged
+        // bits came from the compiled HLO and are compared bit-for-bit
+        // against the host path in the artifact parity tests.
+        self.cache_guard().put(&adapter.id, MergedBuf::F32(merged.clone()));
         Ok(merged)
     }
 }
@@ -613,6 +662,18 @@ impl<'a> AdapterEngine<'a> {
                 e.onthefly = Some(Box::new(OnTheFlyStrategy::new(merger)));
             }
         }
+        e
+    }
+
+    /// Host engine pinned to the **per-vector oracle** flavour of the
+    /// on-the-fly strategy — one `m = 1` activation sweep per request
+    /// instead of one batched `T(W)·X` GEMM per release. Bench/test
+    /// only: `serving_throughput` measures the batched path's speedup
+    /// against this engine, and `rust/tests/kernel_props.rs` pins that
+    /// the two produce byte-identical responses over a zipf trace.
+    pub fn host_onthefly_oracle(merger: Arc<MergeEngine>) -> AdapterEngine<'static> {
+        let mut e = AdapterEngine::empty(ExecutionPolicy::Static(StrategyKind::OnTheFly));
+        e.onthefly = Some(Box::new(OnTheFlyStrategy::per_vector_oracle(merger)));
         e
     }
 

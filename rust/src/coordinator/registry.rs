@@ -19,6 +19,7 @@ use anyhow::{anyhow, Result};
 
 use crate::peft::apply::{peft_layout_for, AdapterRef, MergePlan, ModelDims};
 use crate::peft::flat::Layout;
+use crate::peft::precision::{MergedBuf, MergedPrecision};
 use crate::peft::store::{PagedStore, StoreStats};
 use crate::peft::{registry as ops, MethodSpec};
 
@@ -306,10 +307,16 @@ impl AdapterRegistry {
 /// LRU cache of merged base weights keyed by adapter id. Merged weights
 /// are large (the full base), so capacity is small; the tiny adapters
 /// themselves always stay resident in the registry.
+///
+/// Entries are [`MergedBuf`]s — stored at whatever
+/// [`MergedPrecision`] the owning engine encodes (bit-exact f32 by
+/// default, bf16 to halve residency), so
+/// [`MergedCache::resident_bytes`] reports the *actual* footprint of
+/// the chosen storage mode.
 pub struct MergedCache {
     capacity: usize,
     order: VecDeque<String>,
-    map: HashMap<String, Arc<Vec<f32>>>,
+    map: HashMap<String, MergedBuf>,
     pub hits: u64,
     pub misses: u64,
 }
@@ -325,7 +332,7 @@ impl MergedCache {
         }
     }
 
-    pub fn get(&mut self, id: &str) -> Option<Arc<Vec<f32>>> {
+    pub fn get(&mut self, id: &str) -> Option<MergedBuf> {
         if let Some(v) = self.map.get(id) {
             self.hits += 1;
             let v = v.clone();
@@ -343,11 +350,11 @@ impl MergedCache {
 
     /// Non-counting, non-reordering lookup — used by the single-flight
     /// double-check so a race-window probe doesn't skew hit/miss stats.
-    fn peek(&self, id: &str) -> Option<Arc<Vec<f32>>> {
+    fn peek(&self, id: &str) -> Option<MergedBuf> {
         self.map.get(id).cloned()
     }
 
-    pub fn put(&mut self, id: &str, merged: Arc<Vec<f32>>) {
+    pub fn put(&mut self, id: &str, merged: MergedBuf) {
         if self.map.contains_key(id) {
             return;
         }
@@ -374,10 +381,11 @@ impl MergedCache {
         self.map.contains_key(id)
     }
 
-    /// Bytes of merged weights currently resident — the footprint the
-    /// swap mode collapses to a single buffer.
+    /// Bytes of merged weights currently resident at their storage
+    /// precision — the footprint the swap mode collapses to a single
+    /// buffer, and the number the fleet resident-bytes accounting sums.
     pub fn resident_bytes(&self) -> usize {
-        self.map.values().map(|v| v.len() * std::mem::size_of::<f32>()).sum()
+        self.map.values().map(|v| v.resident_bytes()).sum()
     }
 }
 
@@ -462,6 +470,13 @@ pub struct MergeEngine {
     dims: ModelDims,
     base: Arc<Vec<f32>>,
     plan: MergePlan,
+    /// Storage precision for cached merged buffers. Merging always
+    /// accumulates in f64; this only decides what the [`MergedCache`]
+    /// keeps resident (f32 = bit-exact, bf16 = half the bytes within
+    /// [`crate::peft::precision::BF16_REL_BOUND`]). Swap slots are
+    /// unaffected — the in-place unmerge/rebase algebra requires the
+    /// full-precision buffer.
+    precision: MergedPrecision,
     cache: Mutex<MergedCache>,
     inflight: Mutex<HashSet<String>>,
     inflight_cv: Condvar,
@@ -523,6 +538,7 @@ impl MergeEngine {
             dims,
             base: Arc::new(base),
             plan,
+            precision: crate::util::runtimecfg::RuntimeCfg::get().merged_precision(),
             cache: Mutex::new(MergedCache::new(cache_capacity)),
             inflight: Mutex::new(HashSet::new()),
             inflight_cv: Condvar::new(),
@@ -534,6 +550,19 @@ impl MergeEngine {
             swap_residual_bits: AtomicU32::new(0),
             rebaselines: AtomicU64::new(0),
         })
+    }
+
+    /// Override the merged-buffer storage precision (consuming builder —
+    /// set before the engine is shared). The default comes from
+    /// `ETHER_MERGED_PRECISION` via [`crate::util::runtimecfg::RuntimeCfg`].
+    pub fn with_precision(mut self, precision: MergedPrecision) -> MergeEngine {
+        self.precision = precision;
+        self
+    }
+
+    /// Storage precision of cached merged buffers.
+    pub fn precision(&self) -> MergedPrecision {
+        self.precision
     }
 
     pub fn dims(&self) -> ModelDims {
@@ -553,10 +582,16 @@ impl MergeEngine {
     }
 
     /// Fetch the merged weights for an adapter, merging on demand.
+    ///
+    /// Always returns f32 weights for the compute paths; when the engine
+    /// stores bf16, a hit decodes the cached buffer (the residency
+    /// saving lives in the cache, not in the transient serving copy).
+    /// Under the default f32 precision the decode is an `Arc` refcount
+    /// bump, so hits stay lock-then-clone cheap and bit-exact.
     pub fn merged(&self, entry: &AdapterEntry) -> Result<Arc<Vec<f32>>> {
         loop {
             if let Some(m) = self.cache.lock().unwrap().get(&entry.id) {
-                return Ok(m);
+                return Ok(m.to_f32());
             }
             let mut inflight = self.inflight.lock().unwrap();
             if !inflight.contains(&entry.id) {
@@ -578,13 +613,13 @@ impl MergeEngine {
         // `peek` keeps the race-window probe out of the hit/miss stats.
         if let Some(m) = self.cache.lock().unwrap().peek(&entry.id) {
             drop(flight);
-            return Ok(m);
+            return Ok(m.to_f32());
         }
         let merged = self.do_merge(entry)?;
         // Publish before ending the flight so woken waiters hit the cache.
         self.cache.lock().unwrap().put(&entry.id, merged.clone());
         drop(flight);
-        Ok(merged)
+        Ok(merged.to_f32())
     }
 
     /// Parse and validate an adapter entry against the registry schema:
@@ -609,7 +644,7 @@ impl MergeEngine {
         Ok((spec, peft_layout))
     }
 
-    fn do_merge(&self, entry: &AdapterEntry) -> Result<Arc<Vec<f32>>> {
+    fn do_merge(&self, entry: &AdapterEntry) -> Result<MergedBuf> {
         // Reject unsupported kinds before taking a permit, bumping the
         // merge counter, or allocating — `merges` documents merges that
         // actually executed.
@@ -620,7 +655,9 @@ impl MergeEngine {
         // cloning the base here would be a redundant full-buffer copy.
         let mut out = vec![0.0f32; self.base.len()];
         self.plan.execute(&spec, &self.base, &entry.peft, &peft_layout, &mut out)?;
-        Ok(Arc::new(out))
+        // The merge itself accumulated in f64; encode is the single
+        // storage-precision rounding step.
+        Ok(MergedBuf::encode(out, self.precision))
     }
 
     fn acquire_permit(&self) -> Permit<'_> {
@@ -646,9 +683,22 @@ impl MergeEngine {
     /// Deterministic probe matrix (`max_item_cols()×m`, row-major) for
     /// the merge-free activation path: every call sees identical bits,
     /// so per-adapter outputs are stable fingerprinting material.
+    ///
+    /// All `m` columns are copies of the `m = 1` probe vector. Combined
+    /// with the kernels' fixed-order per-column reductions, every column
+    /// of a batched `T(W)·X` run is bit-identical to the single-vector
+    /// `T(W)·x` result — per-adapter serving tags never depend on how
+    /// the scheduler happened to batch, and the batched fast path stays
+    /// byte-equivalent to the per-vector oracle it replaced.
     pub fn activation_probe(&self, m: usize) -> Vec<f32> {
+        let cols = self.plan.max_item_cols();
         let mut rng = crate::util::rng::Rng::new(0xE7AE);
-        rng.normal_vec(self.plan.max_item_cols() * m, 1.0)
+        let x0 = rng.normal_vec(cols, 1.0);
+        let mut x = vec![0.0f32; cols * m];
+        for (j, &v) in x0.iter().enumerate() {
+            x[j * m..(j + 1) * m].fill(v);
+        }
+        x
     }
 
     /// Merge-free adapted forward for `entry` over the deterministic
@@ -658,13 +708,26 @@ impl MergeEngine {
     /// on-the-fly serving tests assert exactly that through
     /// [`MergeEngine::merges`] and [`MergeEngine::cache_resident_bytes`]).
     pub fn activations(&self, entry: &AdapterEntry, m: usize) -> Result<Vec<f32>> {
-        let (spec, layout) = self.checked_spec(entry)?;
         let x = self.activation_probe(m);
+        self.activations_with(entry, &x, m)
+    }
+
+    /// [`MergeEngine::activations`] over an **explicit** column-stacked
+    /// input `x` (`max_item_cols()×m`, row-major) instead of the
+    /// deterministic probe — the batched serving entry point: one
+    /// `T(W)·X` GEMM per released batch, `m` = batch size. Every kernel
+    /// in the family reduces each output column in a fixed f64 order
+    /// independent of `m`, so column `c` of the batched output is
+    /// **bit-identical** to an `m = 1` call on column `c` of `x` — the
+    /// equivalence `rust/tests/kernel_props.rs` pins against the
+    /// per-vector oracle.
+    pub fn activations_with(&self, entry: &AdapterEntry, x: &[f32], m: usize) -> Result<Vec<f32>> {
+        let (spec, layout) = self.checked_spec(entry)?;
         let mut out = vec![0.0f32; self.plan.activations_out_len(m)];
         self.plan.execute_activations(
             AdapterRef { spec: &spec, peft: &entry.peft, layout: &layout },
             &self.base,
-            &x,
+            x,
             m,
             &mut out,
             None,
@@ -830,13 +893,17 @@ mod tests {
         assert!(r.register_fleet(1, "nope_n4", "host", dims, 1).is_err());
     }
 
+    fn buf(v: Vec<f32>) -> MergedBuf {
+        MergedBuf::encode(v, MergedPrecision::F32)
+    }
+
     #[test]
     fn lru_evicts_oldest_and_respects_capacity() {
         let mut c = MergedCache::new(2);
-        c.put("a", Arc::new(vec![1.0]));
-        c.put("b", Arc::new(vec![2.0]));
+        c.put("a", buf(vec![1.0]));
+        c.put("b", buf(vec![2.0]));
         assert!(c.get("a").is_some()); // a is now most-recent
-        c.put("c", Arc::new(vec![3.0])); // evicts b
+        c.put("c", buf(vec![3.0])); // evicts b
         assert!(c.contains("a") && c.contains("c") && !c.contains("b"));
         assert_eq!(c.len(), 2);
         assert_eq!(c.hits, 1);
@@ -848,10 +915,20 @@ mod tests {
     #[test]
     fn lru_put_idempotent() {
         let mut c = MergedCache::new(2);
-        c.put("a", Arc::new(vec![1.0]));
-        c.put("a", Arc::new(vec![9.0]));
-        assert_eq!(c.get("a").unwrap()[0], 1.0);
+        c.put("a", buf(vec![1.0]));
+        c.put("a", buf(vec![9.0]));
+        assert_eq!(c.get("a").unwrap().to_f32()[0], 1.0);
         assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn lru_resident_bytes_track_storage_precision() {
+        let v: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let mut c = MergedCache::new(4);
+        c.put("full", MergedBuf::encode(v.clone(), MergedPrecision::F32));
+        assert_eq!(c.resident_bytes(), 64 * 4);
+        c.put("half", MergedBuf::encode(v, MergedPrecision::Bf16));
+        assert_eq!(c.resident_bytes(), 64 * 4 + 64 * 2);
     }
 
     // -- MergeEngine --
@@ -893,6 +970,24 @@ mod tests {
         assert_eq!(engine.merges.load(Ordering::SeqCst), 1);
         let (hits, misses) = engine.cache_stats();
         assert_eq!((hits, misses), (1, 1));
+    }
+
+    #[test]
+    fn bf16_engine_halves_residency_within_error_bound() {
+        use crate::peft::precision::{BF16_ABS_SLACK, BF16_REL_BOUND};
+        let (engine, base, layout) = engine_fixture(2, 2);
+        assert_eq!(engine.precision(), MergedPrecision::F32, "default must stay bit-exact");
+        let engine = engine.with_precision(MergedPrecision::Bf16);
+        let a = adapter("a", &engine, 3);
+        let spec = MethodSpec::parse("ether_n4").unwrap();
+        let pl = peft_layout_for(engine.dims(), &spec);
+        let want = merge_into_base(engine.dims(), &spec, &base, &layout, &a.peft, &pl).unwrap();
+        let got = engine.merged(&a).unwrap();
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() <= w.abs() * BF16_REL_BOUND + BF16_ABS_SLACK, "{g} vs {w}");
+        }
+        // Residency is half the f32 footprint: 2 bytes per element.
+        assert_eq!(engine.cache_resident_bytes(), base.len() * 2);
     }
 
     #[test]

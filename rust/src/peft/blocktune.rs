@@ -1,0 +1,149 @@
+//! Deterministic `n_blocks` auto-tuner.
+//!
+//! The paper's Table 1 observation: block-diagonal transforms get
+//! *cheaper* as the block count `n` grows (each of the `n` reflections
+//! acts on a `d/n × d/n` slab, so the `H·W` product is `O(d²f/n)`),
+//! while per-block dispatch overhead grows linearly in `n` — upstream
+//! lands on `n = 32` as the sweet spot at Llama-2-7B scale. This module
+//! turns that trade-off into a closed-form cost model and a
+//! **deterministic ranking** (same discipline as `sim::tune`: pure
+//! arithmetic over a fixed candidate grid, ties broken toward smaller
+//! `n`), so the pick is identical across runs, machines, and thread
+//! counts — CI can pin it.
+//!
+//! Precedence for the effective block count is the standard knob chain
+//! (`explicit > ETHER_NBLOCKS > tuned default`) via
+//! [`auto_n_blocks`]. The `table1_blocks` bench emits the ranked table
+//! plus the measured wallclock per candidate as
+//! `BENCH_table1_blocks.json`.
+
+use crate::util::runtimecfg::{resolve, RuntimeCfg};
+
+/// Default per-FLOP cost (ns) of the host merge kernels — the order of
+/// magnitude measured by `transform_apply` on the CI hosts. Only the
+/// *ratio* to [`DEFAULT_BLOCK_OVERHEAD_NS`] matters for the ranking.
+pub const DEFAULT_FLOP_NS: f64 = 5e-4;
+
+/// Default fixed cost (ns) a block adds per apply: dispatch, the
+/// reflection's small-vector setup, and cache refill at slab edges.
+pub const DEFAULT_BLOCK_OVERHEAD_NS: f64 = 3.4e4;
+
+/// One candidate block count with its modeled cost.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BlockCost {
+    pub n: usize,
+    /// FLOPs of one blocked transform apply over a `d×f` matrix.
+    pub flops: f64,
+    /// Modeled wallclock (ns): `flops·flop_ns + n·overhead_ns`.
+    pub est_ns: f64,
+}
+
+/// Power-of-two block counts that evenly divide `d_model`, capped at
+/// 256 (the paper's largest bdmm sweep point).
+pub fn candidates(d_model: usize) -> Vec<usize> {
+    (0..=8)
+        .map(|k| 1usize << k)
+        .filter(|&n| n <= d_model && d_model % n == 0)
+        .collect()
+}
+
+/// Closed-form cost of one blocked transform apply at block count `n`
+/// over a `d×f` weight: the block-diagonal product is `2·d²·f/n` FLOPs
+/// (each of the `n` blocks multiplies a `d/n × d/n` reflection into its
+/// slab), plus `4·d·f` for the rank-1 reflection construction, plus
+/// fixed per-block overhead.
+pub fn block_cost(d: usize, f: usize, n: usize, flop_ns: f64, overhead_ns: f64) -> BlockCost {
+    let (df, ff, nf) = (d as f64, f as f64, n as f64);
+    let flops = 2.0 * df * df * ff / nf + 4.0 * df * ff;
+    BlockCost { n, flops, est_ns: flops * flop_ns + nf * overhead_ns }
+}
+
+/// Rank every candidate for `d×f` by modeled cost, cheapest first.
+/// Pure arithmetic over a fixed grid — the ranking is bit-deterministic
+/// across runs and thread counts, with exact-cost ties broken toward
+/// the smaller `n`.
+pub fn tune_nblocks(d: usize, f: usize, flop_ns: f64, overhead_ns: f64) -> Vec<BlockCost> {
+    let mut ranked: Vec<BlockCost> =
+        candidates(d).into_iter().map(|n| block_cost(d, f, n, flop_ns, overhead_ns)).collect();
+    ranked.sort_by(|a, b| {
+        a.est_ns.total_cmp(&b.est_ns).then(a.n.cmp(&b.n))
+    });
+    ranked
+}
+
+/// The tuner's winner for `d×f` under the default cost model.
+pub fn tuned_n_blocks(d: usize, f: usize) -> usize {
+    tune_nblocks(d, f, DEFAULT_FLOP_NS, DEFAULT_BLOCK_OVERHEAD_NS)[0].n
+}
+
+/// Effective block count: `explicit > ETHER_NBLOCKS > tuned winner`.
+/// The env override snaps to the nearest valid candidate (divisibility
+/// is a hard schema requirement) rather than erroring.
+pub fn auto_n_blocks(explicit: Option<usize>, d: usize, f: usize) -> usize {
+    auto_n_blocks_with(explicit, RuntimeCfg::get().n_blocks, d, f)
+}
+
+/// [`auto_n_blocks`] over an explicit env value — the testable core.
+pub fn auto_n_blocks_with(
+    explicit: Option<usize>,
+    env: Option<usize>,
+    d: usize,
+    f: usize,
+) -> usize {
+    let n = resolve(explicit, env, tuned_n_blocks(d, f));
+    // Snap to the nearest (by ratio, ties downward) valid candidate.
+    let cands = candidates(d);
+    cands
+        .iter()
+        .copied()
+        .min_by(|&a, &b| {
+            let ra = (a as f64 / n as f64).max(n as f64 / a as f64);
+            let rb = (b as f64 / n as f64).max(n as f64 / b as f64);
+            ra.total_cmp(&rb).then(a.cmp(&b))
+        })
+        .unwrap_or(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn candidates_are_power_of_two_divisors() {
+        assert_eq!(candidates(4096), vec![1, 2, 4, 8, 16, 32, 64, 128, 256]);
+        assert_eq!(candidates(48), vec![1, 2, 4, 8, 16]);
+        assert_eq!(candidates(1), vec![1]);
+    }
+
+    #[test]
+    fn tuner_pins_paper_scale_winner() {
+        // At Llama-2-7B-ish width the model lands on the paper's n=32.
+        assert_eq!(tuned_n_blocks(4096, 4096), 32);
+        // At toy dims the overhead term dominates: one block wins.
+        assert_eq!(tuned_n_blocks(64, 64), 1);
+    }
+
+    #[test]
+    fn ranking_is_deterministic_and_monotone_in_model() {
+        let a = tune_nblocks(4096, 4096, DEFAULT_FLOP_NS, DEFAULT_BLOCK_OVERHEAD_NS);
+        let b = tune_nblocks(4096, 4096, DEFAULT_FLOP_NS, DEFAULT_BLOCK_OVERHEAD_NS);
+        assert_eq!(a, b, "pure-arithmetic ranking must be bit-stable");
+        // est_ns ascending.
+        assert!(a.windows(2).all(|w| w[0].est_ns <= w[1].est_ns));
+        // Every candidate appears exactly once.
+        let mut ns: Vec<usize> = a.iter().map(|c| c.n).collect();
+        ns.sort_unstable();
+        assert_eq!(ns, candidates(4096));
+    }
+
+    #[test]
+    fn auto_precedence_and_snapping() {
+        // explicit > env > tuned.
+        assert_eq!(auto_n_blocks_with(Some(8), Some(64), 4096, 4096), 8);
+        assert_eq!(auto_n_blocks_with(None, Some(64), 4096, 4096), 64);
+        assert_eq!(auto_n_blocks_with(None, None, 4096, 4096), 32);
+        // Invalid override snaps to the nearest valid candidate.
+        assert_eq!(auto_n_blocks_with(None, Some(48), 4096, 4096), 64);
+        assert_eq!(auto_n_blocks_with(None, Some(1000), 64, 64), 64);
+    }
+}

@@ -20,9 +20,11 @@
 //! exploits) and the Fig. 4 distance metric are all derived from it.
 
 pub mod apply;
+pub mod blocktune;
 pub mod flat;
 pub mod metrics;
 pub mod op;
+pub mod precision;
 pub mod registry;
 pub mod store;
 pub mod transforms;

@@ -879,7 +879,7 @@ impl TransformOp for EtherOp {
         let ActShape { d, f, m } = shape;
         let uh = tf::normalize_blocks(p.get("u"), spec.n_blocks);
         let mut y0 = vec![0.0f32; d * m];
-        tf::matmul_acc_into(w, x, d, f, m, &mut y0);
+        tf::matmul_tiled_into(w, x, d, f, m, &mut y0);
         tf::ether_into(&uh, spec.n_blocks, &y0, m, out);
         Ok(())
     }
@@ -1070,9 +1070,9 @@ impl TransformOp for EtherPlusOp {
             let rvh = tf::normalize_blocks(p.get("rv"), n);
             let mut xp = vec![0.0f32; f * m];
             tf::ether_plus_left_into(&ruh, &rvh, n, x, m, &mut xp);
-            tf::matmul_acc_into(w, &xp, d, f, m, &mut y0);
+            tf::matmul_tiled_into(w, &xp, d, f, m, &mut y0);
         } else {
-            tf::matmul_acc_into(w, x, d, f, m, &mut y0);
+            tf::matmul_tiled_into(w, x, d, f, m, &mut y0);
         }
         tf::ether_plus_left_into(&uh, &vh, n, &y0, m, out);
         Ok(())
@@ -1268,9 +1268,9 @@ impl TransformOp for OftOp {
                     xs[j * m + c] = x[j * m + c] * s;
                 }
             }
-            tf::matmul_acc_into(w, &xs, d, f, m, &mut y0);
+            tf::matmul_tiled_into(w, &xs, d, f, m, &mut y0);
         } else {
-            tf::matmul_acc_into(w, x, d, f, m, &mut y0);
+            tf::matmul_tiled_into(w, x, d, f, m, &mut y0);
         }
         tf::bdmm_into(&blocks, &y0, m, None, out);
         Ok(())
@@ -1522,7 +1522,7 @@ impl TransformOp for NaiveOp {
         let ActShape { d, f, m } = shape;
         let blocks = tf::naive_blocks(p.get("r"), spec.n_blocks, d / spec.n_blocks);
         let mut y0 = vec![0.0f32; d * m];
-        tf::matmul_acc_into(w, x, d, f, m, &mut y0);
+        tf::matmul_tiled_into(w, x, d, f, m, &mut y0);
         tf::bdmm_into(&blocks, &y0, m, None, out);
         Ok(())
     }
@@ -1663,7 +1663,7 @@ impl TransformOp for LoraOp {
         out: &mut [f32],
     ) -> Result<()> {
         let ActShape { d, f, m } = shape;
-        tf::matmul_acc_into(w, x, d, f, m, out);
+        tf::matmul_tiled_into(w, x, d, f, m, out);
         tf::lora_activations_acc(p.get("a"), p.get("b"), x, d, spec.rank, f, m, out);
         Ok(())
     }
@@ -1907,7 +1907,7 @@ impl TransformOp for DeloraOp {
         let ActShape { d, f, m } = shape;
         let r = spec.rank;
         let sa = delora_scaled_a(p.get("a"), p.get("b"), p.get("lambda")[0], d, r, f, 1.0);
-        tf::matmul_acc_into(w, x, d, f, m, out);
+        tf::matmul_tiled_into(w, x, d, f, m, out);
         tf::lora_activations_acc(&sa, p.get("b"), x, d, r, f, m, out);
         Ok(())
     }
@@ -2090,7 +2090,7 @@ impl TransformOp for FullOp {
         out: &mut [f32],
     ) -> Result<()> {
         let ActShape { d, f, m } = shape;
-        tf::matmul_acc_into(p.get("w"), x, d, f, m, out);
+        tf::matmul_tiled_into(p.get("w"), x, d, f, m, out);
         Ok(())
     }
 
@@ -2213,7 +2213,7 @@ impl TransformOp for NoneOp {
         out: &mut [f32],
     ) -> Result<()> {
         let ActShape { d, f, m } = shape;
-        tf::matmul_acc_into(w, x, d, f, m, out);
+        tf::matmul_tiled_into(w, x, d, f, m, out);
         Ok(())
     }
 }

@@ -1,0 +1,224 @@
+//! Reduced-precision residency for merged weight buffers.
+//!
+//! Merging always **accumulates in f64** (the kernels in
+//! [`transforms`](crate::peft::transforms) never changed); precision here
+//! is purely a *storage* decision for the merged copy that sits in the
+//! [`MergedCache`](crate::coordinator::registry::MergedCache) LRU. A
+//! cached adapter is a full base-sized buffer, so halving its residency
+//! (bf16) doubles how many adapters fit in the same cache budget — the
+//! lever `ETHER_MERGED_PRECISION` exposes (see
+//! [`RuntimeCfg`](crate::util::runtimecfg::RuntimeCfg)).
+//!
+//! Two modes:
+//!
+//! * [`MergedPrecision::F32`] (default) — the merge output is stored
+//!   bit-exactly; decode is an `Arc` refcount bump. Every pre-existing
+//!   bit-identity contract (swap rebase, involution audit, serving tags)
+//!   holds unchanged.
+//! * [`MergedPrecision::Bf16`] — the f32 merge output is rounded to
+//!   bfloat16 (round-to-nearest-even on the truncated mantissa bit),
+//!   halving resident bytes. Decode widens by shifting the 16 stored
+//!   bits back into the f32 exponent/high-mantissa — exact, so the
+//!   only error is the single rounding at encode time:
+//!   `|decoded − x| ≤ |x|·2⁻⁸` for normal `x` ([`BF16_REL_BOUND`]),
+//!   which `rust/tests/engine_parity.rs` asserts against the f64-path
+//!   merge across the whole host-mergeable registry.
+//!
+//! bf16 keeps f32's full 8-bit exponent (unlike f16), so no merge value
+//! can overflow or flush to zero on encode — range is preserved, only
+//! mantissa width is traded.
+
+use std::sync::Arc;
+
+/// Storage precision for cached merged weights. Parsed from
+/// `ETHER_MERGED_PRECISION` (`"f32"` | `"bf16"`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum MergedPrecision {
+    /// Bit-exact f32 storage (4 bytes/elem) — the historical behaviour.
+    #[default]
+    F32,
+    /// bfloat16 storage (2 bytes/elem): f32 range, 8-bit mantissa.
+    Bf16,
+}
+
+/// Relative error bound of one f32 → bf16 round-to-nearest-even step for
+/// normal values: half an ulp of the 8-bit (1 implicit + 7 stored)
+/// mantissa, i.e. `2⁻⁸`. Subnormals round with *absolute* error below
+/// `2⁻¹³³`, far under [`BF16_ABS_SLACK`].
+pub const BF16_REL_BOUND: f32 = 1.0 / 256.0;
+
+/// Absolute slack covering subnormal rounding when asserting the bf16
+/// round-trip bound (`|decoded − x| ≤ |x|·BF16_REL_BOUND + BF16_ABS_SLACK`).
+pub const BF16_ABS_SLACK: f32 = 1e-30;
+
+impl MergedPrecision {
+    /// Lenient parse (case-insensitive); unknown strings → `None`, so
+    /// garbage env values fall through to the default like every other
+    /// `ETHER_*` knob.
+    pub fn parse(s: &str) -> Option<MergedPrecision> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "full" => Some(MergedPrecision::F32),
+            "bf16" | "bfloat16" => Some(MergedPrecision::Bf16),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            MergedPrecision::F32 => "f32",
+            MergedPrecision::Bf16 => "bf16",
+        }
+    }
+
+    pub fn bytes_per_elem(self) -> usize {
+        match self {
+            MergedPrecision::F32 => 4,
+            MergedPrecision::Bf16 => 2,
+        }
+    }
+
+    /// Resident bytes of an `n`-element merged buffer stored at this
+    /// precision — the number [`PagedStore`](crate::peft::store) page
+    /// sizing and the fleet resident-bytes accounting see.
+    pub fn buf_bytes(self, n: usize) -> usize {
+        n * self.bytes_per_elem()
+    }
+}
+
+/// f32 → bf16 with round-to-nearest-even on the truncated mantissa bit.
+/// NaNs are quieted (payload may change, NaN-ness never lost); ±inf and
+/// ±0 pass through exactly.
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // Keep sign + exponent, force a quiet-NaN mantissa bit so the
+        // truncation cannot produce an infinity.
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = 0x7FFF + ((bits >> 16) & 1);
+    ((bits + round) >> 16) as u16
+}
+
+/// bf16 → f32 (exact: widen by shifting into the high half).
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// A cached merged-weight buffer at its storage precision. Constructed
+/// once per merge via [`MergedBuf::encode`]; served to the execution
+/// strategies via [`MergedBuf::to_f32`].
+#[derive(Clone)]
+pub enum MergedBuf {
+    F32(Arc<Vec<f32>>),
+    Bf16(Arc<Vec<u16>>),
+}
+
+impl MergedBuf {
+    /// Store `v` at `precision`. f32 mode takes ownership without a copy.
+    pub fn encode(v: Vec<f32>, precision: MergedPrecision) -> MergedBuf {
+        match precision {
+            MergedPrecision::F32 => MergedBuf::F32(Arc::new(v)),
+            MergedPrecision::Bf16 => {
+                MergedBuf::Bf16(Arc::new(v.iter().map(|&x| f32_to_bf16(x)).collect()))
+            }
+        }
+    }
+
+    /// Widen to f32 for the compute paths. f32 storage is an `Arc`
+    /// refcount bump (hits stay lock-then-clone cheap and bit-exact);
+    /// bf16 storage decodes into a fresh buffer — the residency saving
+    /// is in the *cache*, not in a transient serving buffer.
+    pub fn to_f32(&self) -> Arc<Vec<f32>> {
+        match self {
+            MergedBuf::F32(v) => v.clone(),
+            MergedBuf::Bf16(v) => Arc::new(v.iter().map(|&b| bf16_to_f32(b)).collect()),
+        }
+    }
+
+    pub fn precision(&self) -> MergedPrecision {
+        match self {
+            MergedBuf::F32(_) => MergedPrecision::F32,
+            MergedBuf::Bf16(_) => MergedPrecision::Bf16,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            MergedBuf::F32(v) => v.len(),
+            MergedBuf::Bf16(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes this buffer holds resident — what
+    /// [`MergedCache::resident_bytes`](crate::coordinator::registry::MergedCache::resident_bytes)
+    /// sums and `StatsSnapshot`/`FleetSnapshot` report upward.
+    pub fn resident_bytes(&self) -> usize {
+        self.precision().buf_bytes(self.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_is_lenient_and_case_insensitive() {
+        assert_eq!(MergedPrecision::parse("f32"), Some(MergedPrecision::F32));
+        assert_eq!(MergedPrecision::parse("BF16"), Some(MergedPrecision::Bf16));
+        assert_eq!(MergedPrecision::parse("bfloat16"), Some(MergedPrecision::Bf16));
+        assert_eq!(MergedPrecision::parse("fp8"), None);
+        assert_eq!(MergedPrecision::default(), MergedPrecision::F32);
+    }
+
+    #[test]
+    fn bf16_round_to_nearest_even_pins() {
+        // Exactly representable values pass through.
+        for x in [0.0f32, -0.0, 1.0, -2.5, 256.0, f32::INFINITY, f32::NEG_INFINITY] {
+            assert_eq!(bf16_to_f32(f32_to_bf16(x)).to_bits(), x.to_bits(), "{x}");
+        }
+        // 1 + 2⁻⁸ sits exactly between bf16(1.0) and bf16(1 + 2⁻⁷):
+        // ties-to-even keeps the even mantissa (1.0).
+        let tie = f32::from_bits(0x3F80_8000);
+        assert_eq!(bf16_to_f32(f32_to_bf16(tie)), 1.0);
+        // One ulp above the tie rounds up.
+        let above = f32::from_bits(0x3F80_8001);
+        assert_eq!(bf16_to_f32(f32_to_bf16(above)), 1.0 + 1.0 / 128.0);
+        // NaN survives (quieted).
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn bf16_roundtrip_within_documented_bound() {
+        let mut rng = crate::util::rng::Rng::new(77);
+        for &scale in &[1e-6f32, 1.0, 1e6] {
+            for x in rng.normal_vec(4096, scale) {
+                let rt = bf16_to_f32(f32_to_bf16(x));
+                let err = (rt - x).abs();
+                assert!(
+                    err <= x.abs() * BF16_REL_BOUND + BF16_ABS_SLACK,
+                    "x={x} rt={rt} err={err}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn buf_residency_and_decode() {
+        let v: Vec<f32> = (0..100).map(|i| i as f32 * 0.25).collect();
+        let full = MergedBuf::encode(v.clone(), MergedPrecision::F32);
+        let half = MergedBuf::encode(v.clone(), MergedPrecision::Bf16);
+        assert_eq!(full.resident_bytes(), 400);
+        assert_eq!(half.resident_bytes(), 200);
+        assert_eq!((full.len(), half.len()), (100, 100));
+        // f32 decode is the same allocation; bf16 decode is exact here
+        // (quarter-integers up to 25 are bf16-representable).
+        let a = full.to_f32();
+        let b = full.to_f32();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(half.to_f32().as_ref(), &v);
+    }
+}

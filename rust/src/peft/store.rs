@@ -92,6 +92,22 @@ impl StoreCfg {
         self.compact_ratio = r;
         self
     }
+
+    /// Size pages to fit one framed record of `n_elems` payload elements
+    /// at `bytes_per_elem` (4 for f32 params, or
+    /// [`MergedPrecision::bytes_per_elem`](crate::peft::precision::MergedPrecision::bytes_per_elem)
+    /// when the payload is a reduced-precision buffer): header + a
+    /// string allowance + payload, rounded up to a power of two. Keeps
+    /// the storage-precision choice and the page geometry in one place —
+    /// halving the payload width (bf16) drops the page size a full
+    /// power of two at most record shapes.
+    pub fn fit_record(mut self, n_elems: usize, bytes_per_elem: usize) -> StoreCfg {
+        /// Generous bound on `id`+`method`+`cfg` string bytes per record.
+        const STRING_ALLOWANCE: usize = 192;
+        let framed = HEADER_BYTES + STRING_ALLOWANCE + n_elems * bytes_per_elem;
+        self.page_bytes = framed.next_power_of_two().max(64);
+        self
+    }
 }
 
 /// One adapter's params + identity as stored. The registry wraps this
@@ -658,6 +674,20 @@ mod tests {
     fn small_store(name: &str) -> PagedStore {
         // 256-byte pages / 2 cached: evictions and seals happen fast.
         PagedStore::create(StoreCfg::new(tmp(name)).page_bytes(256).cache_pages(2)).unwrap()
+    }
+
+    #[test]
+    fn fit_record_pages_track_payload_width() {
+        // 1024 f32 elements: 24 + 192 + 4096 B framed → 8 KiB pages.
+        let full = StoreCfg::new(tmp("fit_f32")).fit_record(1024, 4);
+        assert_eq!(full.page_bytes, 8192);
+        // The same record at bf16 width halves into 4 KiB pages.
+        let half = StoreCfg::new(tmp("fit_bf16")).fit_record(1024, 2);
+        assert_eq!(half.page_bytes, 4096);
+        // A record of exactly that shape actually fits.
+        let s = PagedStore::create(full).unwrap();
+        s.put("user0", "ether_n4", "host", &[0.5; 1024]).unwrap();
+        assert_eq!(s.get("user0").unwrap().params.len(), 1024);
     }
 
     #[test]

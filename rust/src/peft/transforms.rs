@@ -21,6 +21,16 @@
 //! `peft::apply::MergePlan` runs per (matrix, layer) work item, writing
 //! straight into the merged-weight buffer without intermediate `Mat`
 //! clones.
+//!
+//! The **batched GEMM family** serves the activation hot path
+//! (`y = T(W)·X`, `X` = column-stacked request vectors): the
+//! register-tiled microkernel behind [`matmul_tiled_into`] /
+//! [`matmul_tiled_par`] retiles the loop nest for cache and register
+//! reuse while keeping [`matmul_acc_into`]'s fixed-order f64 reduction
+//! per output element, so the tiled kernels are **bit-identical** to the
+//! serial oracle for any tile geometry and any thread count —
+//! `rust/tests/kernel_props.rs` is the property gate. See
+//! `docs/tiled-kernels.md` for the walkthrough.
 
 use crate::tensor::{solve, Mat};
 use crate::util::pool::{parallel_for_chunks, parallel_for_chunks_opt, SendPtr};
@@ -255,7 +265,11 @@ pub(crate) fn ether_plus_right_rows(rows: &mut [f32], f: usize, uh: &[f32], vh: 
 /// the shared dimension accumulated in f64 in a fixed order — the
 /// activation-path analogue of the merge kernels' determinism contract
 /// (bit-identical regardless of how callers parallelize *across* calls).
-pub(crate) fn matmul_acc_into(w: &[f32], x: &[f32], d: usize, f: usize, m: usize, out: &mut [f32]) {
+///
+/// This is the **serial scalar oracle** of the GEMM family: the tiled
+/// microkernels ([`matmul_tiled_into`], [`matmul_tiled_par`]) must agree
+/// with it bit-for-bit, which `rust/tests/kernel_props.rs` pins.
+pub fn matmul_acc_into(w: &[f32], x: &[f32], d: usize, f: usize, m: usize, out: &mut [f32]) {
     debug_assert_eq!(w.len(), d * f);
     debug_assert_eq!(x.len(), f * m);
     debug_assert_eq!(out.len(), d * m);
@@ -305,6 +319,105 @@ pub(crate) fn matmul_par(
                 *o = acc as f32;
             }
         }
+    });
+}
+
+/// Register-tile height of the batched GEMM microkernel: rows of `W`
+/// held live per step. 4×8 f64 accumulators fit comfortably in the 16
+/// callee-visible vector registers of x86-64/aarch64 baselines.
+pub const GEMM_MR: usize = 4;
+
+/// Register-tile width of the batched GEMM microkernel: columns of `X`
+/// held live per step.
+pub const GEMM_NR: usize = 8;
+
+/// Rows `[r0, r1)` of `out = W·X` through the register-tiled microkernel.
+///
+/// The loop nest is retiled for locality — `GEMM_MR` rows of `W` ×
+/// `GEMM_NR` columns of `X` accumulate in a register-resident f64 block
+/// while the shared dimension streams once — but every output element
+/// still reduces over `j = 0..f` in the exact order of
+/// [`matmul_acc_into`], and f64 adds/muls are IEEE-exact per step, so
+/// the result is **bit-identical** to the serial oracle for any tile
+/// geometry. Cache story: one `f×GEMM_NR` column panel of `X` stays hot
+/// across all row tiles; `W` streams `⌈m/GEMM_NR⌉` times instead of the
+/// oracle's `m` times.
+///
+/// # Safety
+/// `out` must point at a `d×m` row-major buffer and no other thread may
+/// concurrently access rows `[r0, r1)` of it.
+unsafe fn matmul_tiled_rows(
+    w: &[f32],
+    x: &[f32],
+    f: usize,
+    m: usize,
+    out: *mut f32,
+    r0: usize,
+    r1: usize,
+) {
+    let mut acc = [[0.0f64; GEMM_NR]; GEMM_MR];
+    let mut c0 = 0;
+    while c0 < m {
+        let nc = (m - c0).min(GEMM_NR);
+        let mut i0 = r0;
+        while i0 < r1 {
+            let nr = (r1 - i0).min(GEMM_MR);
+            for row in acc.iter_mut().take(nr) {
+                row[..nc].fill(0.0);
+            }
+            for j in 0..f {
+                let xrow = &x[j * m + c0..j * m + c0 + nc];
+                for (r, arow) in acc.iter_mut().enumerate().take(nr) {
+                    let wv = w[(i0 + r) * f + j] as f64;
+                    for (a, &xv) in arow.iter_mut().zip(xrow) {
+                        *a += wv * xv as f64;
+                    }
+                }
+            }
+            for (r, arow) in acc.iter().enumerate().take(nr) {
+                for (c, &a) in arow.iter().enumerate().take(nc) {
+                    *out.add((i0 + r) * m + c0 + c) = a as f32;
+                }
+            }
+            i0 += nr;
+        }
+        c0 += nc;
+    }
+}
+
+/// `out (d×m) = W (d×f) · X (f×m)` through the register-tiled
+/// microkernel, single-threaded. Bit-identical to [`matmul_acc_into`]
+/// (same fixed-order f64 reduction per element) — the fast drop-in the
+/// `TransformOp` activation kernels use for their base products.
+pub fn matmul_tiled_into(w: &[f32], x: &[f32], d: usize, f: usize, m: usize, out: &mut [f32]) {
+    debug_assert_eq!(w.len(), d * f);
+    debug_assert_eq!(x.len(), f * m);
+    debug_assert_eq!(out.len(), d * m);
+    // SAFETY: exclusive &mut access to the whole buffer, single thread.
+    unsafe { matmul_tiled_rows(w, x, f, m, out.as_mut_ptr(), 0, d) }
+}
+
+/// Thread-parallel driver of the tiled microkernel: workers take
+/// disjoint row ranges (chunk floor [`GEMM_MR`]·4) and each runs
+/// [`matmul_tiled_into`]'s inner kernel, so the result is bit-identical
+/// for **any** thread count (`Some(1)` pins serial execution, `None`
+/// uses the ambient pool) and bit-identical to [`matmul_acc_into`].
+pub fn matmul_tiled_par(
+    threads: Option<usize>,
+    w: &[f32],
+    x: &[f32],
+    d: usize,
+    f: usize,
+    m: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(w.len(), d * f);
+    debug_assert_eq!(x.len(), f * m);
+    debug_assert_eq!(out.len(), d * m);
+    let ptr = SendPtr::new(out.as_mut_ptr());
+    parallel_for_chunks_opt(threads, d, GEMM_MR * 4, |r0, r1| {
+        // SAFETY: workers receive disjoint row ranges of `out`.
+        unsafe { matmul_tiled_rows(w, x, f, m, ptr.get(), r0, r1) }
     });
 }
 

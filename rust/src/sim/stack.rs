@@ -466,7 +466,9 @@ impl Sim {
                 } else {
                     self.merges += 1;
                     us += self.cal.merge_us;
-                    self.shards[shard].merged.put(adapter, Arc::new(Vec::new()));
+                    self.shards[shard]
+                        .merged
+                        .put(adapter, crate::peft::precision::MergedBuf::F32(Arc::new(Vec::new())));
                 }
                 self.cal.merged_hit_us
             }

@@ -18,6 +18,8 @@
 //! | `ETHER_STORE_CACHE_PAGES` | [`RuntimeCfg::store_cache_pages`] | `8`                 |
 //! | `ETHER_RESIDENT_ADAPTERS` | [`RuntimeCfg::resident_adapters`] | `1024`              |
 //! | `ETHER_SIM_CALIB`         | `sim_calib` field        | unset (default cost model)   |
+//! | `ETHER_NBLOCKS`           | `n_blocks` field         | unset (auto-tuned per `d_model`) |
+//! | `ETHER_MERGED_PRECISION`  | [`RuntimeCfg::merged_precision`] | `f32`                |
 //!
 //! **Precedence is `explicit argument > environment > default`**: code
 //! that accepts a knob as a function/CLI argument resolves it with
@@ -62,6 +64,13 @@ pub struct RuntimeCfg {
     /// `ETHER_SIM_CALIB` — directory of `BENCH_*.json` files the fleet
     /// simulator calibrates its cost model from.
     pub sim_calib: Option<PathBuf>,
+    /// `ETHER_NBLOCKS` — ETHER block count override. Unset = the
+    /// [`blocktune`](crate::peft::blocktune) auto-tuner picks per
+    /// `d_model`.
+    pub n_blocks: Option<usize>,
+    /// `ETHER_MERGED_PRECISION` — storage precision for cached merged
+    /// weights (`f32` | `bf16`).
+    pub merged_precision: Option<crate::peft::precision::MergedPrecision>,
 }
 
 /// Lenient counter parse: numeric clamps up to 1, garbage → `None`.
@@ -98,6 +107,10 @@ impl RuntimeCfg {
             store_cache_pages: get("ETHER_STORE_CACHE_PAGES").as_deref().and_then(parse_count),
             resident_adapters: get("ETHER_RESIDENT_ADAPTERS").as_deref().and_then(parse_count),
             sim_calib: get("ETHER_SIM_CALIB").and_then(non_empty).map(PathBuf::from),
+            n_blocks: get("ETHER_NBLOCKS").as_deref().and_then(parse_count),
+            merged_precision: get("ETHER_MERGED_PRECISION")
+                .as_deref()
+                .and_then(crate::peft::precision::MergedPrecision::parse),
         }
     }
 
@@ -140,6 +153,11 @@ impl RuntimeCfg {
     pub fn resident_adapters(&self) -> usize {
         self.resident_adapters.unwrap_or(1024)
     }
+
+    /// Resolved merged-buffer storage precision (default bit-exact f32).
+    pub fn merged_precision(&self) -> crate::peft::precision::MergedPrecision {
+        self.merged_precision.unwrap_or_default()
+    }
 }
 
 /// `explicit argument > environment > default` in one expression:
@@ -169,6 +187,8 @@ mod tests {
         assert!(!cfg.bench_quick);
         assert!(cfg.bench_json.is_none());
         assert!(cfg.sim_calib.is_none());
+        assert_eq!(cfg.n_blocks, None);
+        assert_eq!(cfg.merged_precision(), crate::peft::precision::MergedPrecision::F32);
     }
 
     #[test]
@@ -183,6 +203,8 @@ mod tests {
             ("ETHER_STORE_CACHE_PAGES", "2"),
             ("ETHER_RESIDENT_ADAPTERS", "64"),
             ("ETHER_SIM_CALIB", "/tmp/calib"),
+            ("ETHER_NBLOCKS", "32"),
+            ("ETHER_MERGED_PRECISION", "bf16"),
         ]));
         assert_eq!(cfg.threads(), 8);
         assert_eq!(cfg.sched_workers(), 1);
@@ -193,6 +215,8 @@ mod tests {
         assert_eq!(cfg.store_cache_pages(), 2);
         assert_eq!(cfg.resident_adapters(), 64);
         assert_eq!(cfg.sim_calib.as_deref(), Some(std::path::Path::new("/tmp/calib")));
+        assert_eq!(cfg.n_blocks, Some(32));
+        assert_eq!(cfg.merged_precision(), crate::peft::precision::MergedPrecision::Bf16);
     }
 
     #[test]
@@ -202,11 +226,13 @@ mod tests {
             ("ETHER_FLEET_SHARDS", "-3"),
             ("ETHER_BENCH_JSON", ""),
             ("ETHER_LOG", ""),
+            ("ETHER_MERGED_PRECISION", "fp8"),
         ]));
         assert_eq!(cfg.threads, None);
         assert_eq!(cfg.fleet_shards(), 4);
         assert!(cfg.bench_json.is_none());
         assert!(cfg.log_level.is_none());
+        assert_eq!(cfg.merged_precision(), crate::peft::precision::MergedPrecision::F32);
     }
 
     #[test]

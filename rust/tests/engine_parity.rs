@@ -23,10 +23,12 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use ether::coordinator::registry::AdapterEntry;
 use ether::coordinator::{
     AdapterEngine, AdapterRegistry, ExecutionPolicy, MergeEngine, Request, SchedulerCfg, Server,
     StrategyKind,
 };
+use ether::peft::precision::{MergedPrecision, BF16_ABS_SLACK, BF16_REL_BOUND};
 use ether::peft::apply::{
     base_layout_for, merge_into_base, peft_layout_for, AdapterRef, MergePlan, ModelDims,
 };
@@ -249,4 +251,96 @@ fn traffic_aware_policy_promotes_hot_and_keeps_cold_merge_free() {
     assert_eq!(server.stats.policy_promotions, 1);
     assert_eq!(merger.merges.load(Ordering::SeqCst), 1);
     assert!(server.stats.merge_hits >= 1);
+}
+
+#[test]
+fn reduced_precision_merged_buffers_bound_error_across_the_registry() {
+    // Satellite to the PR 8 residency work: for every host-mergeable
+    // method, (a) the default f32 storage mode reproduces the
+    // `merge_into_base` reference to the repo's standard ≤1e-5 parity
+    // bound, and (b) bf16 storage stays within the round-to-nearest-even
+    // mantissa bound (2⁻⁸ relative) of the f32 buffers it rounds — per
+    // element, not just in aggregate.
+    let dims = tiny_dims();
+    let layout = base_layout_for(dims);
+    let mut rng = Rng::new(59);
+    let base: Vec<f32> = rng.normal_vec(layout.total, 0.05);
+    let full_engine = MergeEngine::new(dims, base.clone(), &layout, 16, 2).unwrap();
+    assert_eq!(full_engine.precision(), MergedPrecision::F32, "default storage is full f32");
+    let half_engine = MergeEngine::new(dims, base.clone(), &layout, 16, 2)
+        .unwrap()
+        .with_precision(MergedPrecision::Bf16);
+    for (k, name) in ACTIVATION_METHODS.iter().enumerate() {
+        let spec = MethodSpec::parse(name).unwrap();
+        let pl = peft_layout_for(dims, &spec);
+        let peft: Vec<f32> = rng.normal_vec(pl.total, 0.5);
+        let reference = merge_into_base(dims, &spec, &base, &layout, &peft, &pl).unwrap();
+        let entry = AdapterEntry {
+            id: format!("a{k}"),
+            method: name.to_string(),
+            cfg: "host".to_string(),
+            peft: Arc::new(peft),
+        };
+        let full = full_engine.merged(&entry).unwrap();
+        let mut max_err = 0.0f32;
+        for (g, r) in full.iter().zip(&reference) {
+            max_err = max_err.max((g - r).abs());
+        }
+        assert!(max_err <= 1e-5, "{name}: f32 merged vs reference drifted {max_err}");
+        let half = half_engine.merged(&entry).unwrap();
+        assert_eq!(half.len(), full.len());
+        for (i, (g, r)) in half.iter().zip(full.iter()).enumerate() {
+            let bound = BF16_REL_BOUND * r.abs() + BF16_ABS_SLACK;
+            let err = (g - r).abs();
+            assert!(err <= bound, "{name}[{i}]: bf16 err {err} exceeds RNE bound {bound}");
+        }
+    }
+    // Same ten buffers resident in each cache — bf16 holds them in
+    // exactly half the bytes.
+    assert_eq!(2 * half_engine.cache_resident_bytes(), full_engine.cache_resident_bytes());
+}
+
+#[test]
+fn bf16_residency_halves_through_stats_snapshot() {
+    // The pinned end-to-end residency claim: serve the same trace
+    // through the merged-cache strategy at each storage precision and
+    // read the footprint back through the unified `StatsSnapshot` — the
+    // bf16 fleet holds exactly half the merged bytes, with params/store
+    // accounting unchanged.
+    let dims = tiny_dims();
+    let layout = base_layout_for(dims);
+    let serve = |precision: MergedPrecision| {
+        let mut rng = Rng::new(47);
+        let base: Vec<f32> = rng.normal_vec(layout.total, 0.05);
+        let merger = Arc::new(
+            MergeEngine::new(dims, base, &layout, 4, 2).unwrap().with_precision(precision),
+        );
+        let mut registry = AdapterRegistry::new();
+        registry.register_fleet(4, "ether_n4", "host", dims, 53).unwrap();
+        let mut server = Server::new(
+            registry,
+            SchedulerCfg { max_batch: 8, max_wait: Duration::ZERO, ..Default::default() },
+        );
+        let engine =
+            AdapterEngine::host(merger, ExecutionPolicy::Static(StrategyKind::Merged));
+        let t = Instant::now();
+        for i in 0..12u64 {
+            server.submit(req(i, &format!("user{}", i % 4), t)).unwrap();
+        }
+        server.pump_pool(&engine, t + Duration::from_millis(1), 4, |_| {}).unwrap();
+        assert_eq!(server.stats.served, 12);
+        server.snapshot()
+    };
+    let full = serve(MergedPrecision::F32);
+    let half = serve(MergedPrecision::Bf16);
+    // All four adapters merged and cached; one model copy each.
+    let merged_elems = 4 * layout.total as u64;
+    assert_eq!(full.server.resident_weight_bytes, merged_elems * 4);
+    assert_eq!(half.server.resident_weight_bytes, merged_elems * 2);
+    assert_eq!(full.resident_param_bytes, half.resident_param_bytes);
+    assert_eq!(
+        full.resident_bytes() - half.resident_bytes(),
+        merged_elems * 2,
+        "total steady-state residency saving is exactly the merged-buffer half"
+    );
 }

@@ -1,0 +1,155 @@
+//! `ether-lint` — in-repo static analysis for the ether codebase.
+//!
+//! A dependency-free, hand-rolled source scanner that machine-checks the
+//! architectural invariants the repo's correctness story rests on:
+//!
+//! | rule | invariant |
+//! |---|---|
+//! | `env-discipline` | all env reads go through `util::runtimecfg` |
+//! | `dispatch-discipline` | per-method `MethodKind` matches live in `peft/registry.rs` / `peft/op.rs` only |
+//! | `safety-comments` | every `unsafe` site carries a `SAFETY:` / `# Safety` justification |
+//! | `no-panic-paths` | store/fleet/server error paths return `Err`, never panic |
+//! | `lock-poisoning` | `.lock().unwrap()` only via the `util::sync::lock_clean` wrapper |
+//! | `bench-schema` | BENCH JSON field names match the pinned `StatsSnapshot` schema |
+//!
+//! Run as `cargo run -p ether-lint` from the repo root; exit code 0 means
+//! clean. Deviations are suppressed inline with
+//! `// lint:allow(<rule>): <reason>` so every exception is visible in the
+//! diff. The binary can also emit the unsafe-inventory report
+//! (`--inventory <path>`) that CI uploads as a build artifact.
+
+mod inventory;
+mod scan;
+mod rules;
+
+pub use inventory::render_inventory;
+pub use rules::{
+    extract_tuple_keys, lint_file, schema_drift, unsafe_inventory, Finding, UnsafeSite,
+    FLEET_SCHEMA, RULES, SCENARIO_SCHEMA,
+};
+pub use scan::SourceFile;
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Lint a single source text under a repo-relative path (forward
+/// slashes). This is the fixture-testing entry point: rule
+/// applicability keys off `rel_path`, so fixtures choose which rules
+/// run by picking the path label.
+pub fn lint_source(rel_path: &str, text: &str) -> Vec<Finding> {
+    lint_file(rel_path, &SourceFile::parse(text))
+}
+
+/// The full repo report: findings, the unsafe inventory, and scan
+/// accounting.
+#[derive(Debug)]
+pub struct RepoReport {
+    pub findings: Vec<Finding>,
+    pub unsafe_sites: Vec<UnsafeSite>,
+    pub files_scanned: usize,
+}
+
+/// The source trees the lint walks, relative to the repo root.
+pub const SCANNED_TREES: &[&str] = &["rust/src", "rust/tests", "rust/benches"];
+
+/// Walk `rust/src`, `rust/tests`, and `rust/benches` under `root`,
+/// running every rule plus the cross-file schema-drift check.
+pub fn lint_repo(root: &Path) -> io::Result<RepoReport> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for tree in SCANNED_TREES {
+        collect_rs(&root.join(tree), &mut files)?;
+    }
+    files.sort();
+    let mut findings = Vec::new();
+    let mut unsafe_sites = Vec::new();
+    let mut server: Option<(String, SourceFile)> = None;
+    let mut fleet: Option<(String, SourceFile)> = None;
+    for path in &files {
+        let text = std::fs::read_to_string(path)?;
+        let rel = rel_label(root, path);
+        let sf = SourceFile::parse(&text);
+        findings.extend(rules::lint_file(&rel, &sf));
+        rules::unsafe_inventory(&rel, &sf, &mut unsafe_sites);
+        if rel.ends_with("coordinator/server.rs") {
+            server = Some((rel.clone(), sf));
+        } else if rel.ends_with("coordinator/fleet.rs") {
+            fleet = Some((rel.clone(), sf));
+        }
+    }
+    match (&server, &fleet) {
+        (Some((sr, ss)), Some((fr, fs))) => findings.extend(rules::schema_drift(sr, ss, fr, fs)),
+        _ => findings.push(Finding {
+            file: "rust/src/coordinator".to_string(),
+            line: 1,
+            rule: "bench-schema",
+            msg: "server.rs/fleet.rs not found; cannot cross-check the pinned BENCH schema"
+                .to_string(),
+        }),
+    }
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(RepoReport { findings, unsafe_sites, files_scanned: files.len() })
+}
+
+/// Locate the repo root: a directory containing every scanned tree.
+/// Tries `start` and its ancestors.
+pub fn find_root(start: &Path) -> Option<PathBuf> {
+    let mut dir = Some(start);
+    while let Some(d) = dir {
+        if SCANNED_TREES.iter().all(|t| d.join(t).is_dir()) {
+            return Some(d.to_path_buf());
+        }
+        dir = d.parent();
+    }
+    None
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn rel_label(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    let mut s = String::new();
+    for comp in rel.components() {
+        if !s.is_empty() {
+            s.push('/');
+        }
+        s.push_str(&comp.as_os_str().to_string_lossy());
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixture_paths_select_rules() {
+        // env-discipline fires everywhere but runtimecfg.
+        let bad = "fn f() { let _ = std::env::var(\"ETHER_THREADS\"); }\n";
+        assert!(lint_source("rust/src/util/pool.rs", bad)
+            .iter()
+            .any(|f| f.rule == "env-discipline"));
+        assert!(lint_source("rust/src/util/runtimecfg.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn pragma_suppresses_with_reason_only() {
+        let with = "// lint:allow(env-discipline): fixture reason\nlet _ = std::env::var(\"X\");\n";
+        let f = lint_source("rust/src/a.rs", with);
+        assert!(f.is_empty(), "{f:?}");
+        let without = "// lint:allow(env-discipline)\nlet _ = std::env::var(\"X\");\n";
+        let f = lint_source("rust/src/a.rs", without);
+        assert!(f.iter().any(|x| x.rule == "env-discipline"));
+        assert!(f.iter().any(|x| x.rule == "pragma"));
+    }
+}

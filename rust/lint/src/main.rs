@@ -1,0 +1,82 @@
+//! CLI driver: `cargo run -p ether-lint [-- --root <dir>] [--inventory <path>]`.
+//!
+//! Exit codes: 0 clean, 1 findings, 2 usage/IO error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut inventory: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => root = args.next().map(PathBuf::from),
+            "--inventory" => inventory = args.next().map(PathBuf::from),
+            "--list-rules" => {
+                for r in ether_lint::RULES {
+                    println!("{r}");
+                }
+                return ExitCode::SUCCESS;
+            }
+            "--help" | "-h" => {
+                println!(
+                    "ether-lint: machine-checks the repo's architectural invariants\n\n\
+                     usage: ether-lint [--root <dir>] [--inventory <path>] [--list-rules]\n\n\
+                     --root       repo root (default: nearest ancestor of the cwd\n\
+                     \x20            containing rust/src, rust/tests, rust/benches)\n\
+                     --inventory  write the unsafe-inventory markdown report here\n\
+                     --list-rules print the rule names and exit\n\n\
+                     suppress a finding inline with `// lint:allow(<rule>): <reason>`\n\
+                     (see docs/static-analysis.md)"
+                );
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("ether-lint: unknown argument {other:?} (try --help)");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let root = match root.or_else(|| {
+        std::env::current_dir().ok().and_then(|d| ether_lint::find_root(&d))
+    }) {
+        Some(r) => r,
+        None => {
+            eprintln!(
+                "ether-lint: could not locate the repo root (no rust/src above the cwd); \
+                 pass --root"
+            );
+            return ExitCode::from(2);
+        }
+    };
+    let report = match ether_lint::lint_repo(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("ether-lint: scan failed: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    if let Some(path) = inventory {
+        let md = ether_lint::render_inventory(&report.unsafe_sites);
+        if let Err(e) = std::fs::write(&path, md) {
+            eprintln!("ether-lint: writing inventory {path:?}: {e}");
+            return ExitCode::from(2);
+        }
+        println!("unsafe inventory ({} sites) -> {}", report.unsafe_sites.len(), path.display());
+    }
+    for f in &report.findings {
+        println!("{f}");
+    }
+    println!(
+        "ether-lint: {} finding(s) across {} file(s) scanned ({} unsafe sites)",
+        report.findings.len(),
+        report.files_scanned,
+        report.unsafe_sites.len()
+    );
+    if report.findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,673 @@
+//! The rule catalog. Every rule is named, runs over the preprocessed
+//! [`SourceFile`] view, and is individually suppressible with an inline
+//! pragma:
+//!
+//! ```text
+//! // lint:allow(<rule>): <reason>
+//! ```
+//!
+//! on the finding's line or the line directly above. The reason is
+//! mandatory — a pragma without one is itself a finding — so every
+//! deviation from an invariant is visible and justified in the diff.
+//!
+//! See `docs/static-analysis.md` for the catalog and how to add a rule.
+
+use crate::scan::{word_occurrences, SourceFile, STR_MARK};
+
+/// One lint finding. `line` is 1-indexed.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Every registered rule name, in report order. `pragma` guards the
+/// suppression mechanism itself and cannot be suppressed.
+pub const RULES: &[&str] = &[
+    "env-discipline",
+    "dispatch-discipline",
+    "safety-comments",
+    "no-panic-paths",
+    "lock-poisoning",
+    "bench-schema",
+    "pragma",
+];
+
+/// One `unsafe` site, for the generated inventory report.
+#[derive(Debug, Clone)]
+pub struct UnsafeSite {
+    pub file: String,
+    pub line: usize,
+    /// `fn`, `impl`, `trait`, or `block`.
+    pub kind: &'static str,
+    /// The `SAFETY:` / `# Safety` justification text, if found.
+    pub justification: Option<String>,
+}
+
+/// The pinned `StatsSnapshot::scenario_json` field list. `bench-schema`
+/// cross-checks this against the actual implementation in
+/// `coordinator/server.rs`, so renaming a field there without updating
+/// the pin (and the perf-trajectory tooling that diffs `BENCH_*.json`)
+/// fails the lint.
+pub const SCENARIO_SCHEMA: &[&str] = &[
+    "scenario",
+    "served",
+    "shed",
+    "req_per_s",
+    "p50_ms",
+    "p95_ms",
+    "shed_rate",
+    "fairness_spread_ms",
+    "release_fairness_jain",
+    "merge_hit_rate",
+    "merges",
+    "swaps",
+    "served_onthefly",
+    "page_ins",
+    "page_outs",
+    "resident_bytes",
+];
+
+/// The pinned `FleetSnapshot::scenario_json` extension fields
+/// (`coordinator/fleet.rs`).
+pub const FLEET_SCHEMA: &[&str] = &[
+    "shards",
+    "shard_req_per_s",
+    "hot_set",
+    "hot_promotions",
+    "replica_routes",
+    "steals",
+    "stolen_requests",
+    "fleet_resident_bytes",
+    "recommended_shards",
+];
+
+/// Files whose error paths must stay panic-free (`no-panic-paths`):
+/// the paged store and the fleet/server coordinators promise
+/// error-not-panic behaviour to callers.
+const PANIC_FREE_FILES: &[&str] =
+    &["peft/store.rs", "coordinator/fleet.rs", "coordinator/server.rs"];
+
+/// The one module allowed to read process environment directly.
+const ENV_HOME: &str = "util/runtimecfg.rs";
+
+/// The approved poisoned-guard recovery wrapper's home module
+/// (`lock-poisoning`).
+const LOCK_HOME: &str = "util/sync.rs";
+
+/// Modules where per-method `MethodKind` match arms are allowed
+/// (`dispatch-discipline`): the registry itself and the trait impls.
+const DISPATCH_HOMES: &[&str] = &["peft/registry.rs", "peft/op.rs"];
+
+fn has_suffix(path: &str, suffix: &str) -> bool {
+    path.ends_with(suffix)
+}
+
+fn in_tree(path: &str, tree: &str) -> bool {
+    path.contains(tree)
+}
+
+/// Run every path-applicable rule over one file. `rel_path` is the
+/// repo-relative path with forward slashes (rule applicability keys off
+/// it). Cross-file checks (schema drift) live in [`crate::lint_repo`].
+pub fn lint_file(rel_path: &str, sf: &SourceFile) -> Vec<Finding> {
+    let mut raw: Vec<Finding> = Vec::new();
+    env_discipline(rel_path, sf, &mut raw);
+    dispatch_discipline(rel_path, sf, &mut raw);
+    safety_comments(rel_path, sf, &mut raw);
+    no_panic_paths(rel_path, sf, &mut raw);
+    lock_poisoning(rel_path, sf, &mut raw);
+    bench_schema_keys(rel_path, sf, &mut raw);
+    apply_pragmas(rel_path, sf, raw)
+}
+
+/// Drop findings covered by a valid `lint:allow` pragma on the finding's
+/// line or the line above; emit `pragma` findings for malformed pragmas.
+fn apply_pragmas(rel_path: &str, sf: &SourceFile, raw: Vec<Finding>) -> Vec<Finding> {
+    let mut out: Vec<Finding> = Vec::new();
+    for f in raw {
+        if f.rule != "pragma" && pragma_covers(sf, f.line, f.rule) {
+            continue;
+        }
+        out.push(f);
+    }
+    // Validate every pragma in the file, suppressed or not.
+    for (idx, line) in sf.lines.iter().enumerate() {
+        let lineno = idx + 1;
+        let mut comment = line.comment.as_str();
+        while let Some(pos) = comment.find("lint:allow") {
+            let rest = &comment[pos + "lint:allow".len()..];
+            match parse_pragma(rest) {
+                Ok((rule, reason)) => {
+                    if !RULES.contains(&rule.as_str()) || rule == "pragma" {
+                        out.push(Finding {
+                            file: rel_path.to_string(),
+                            line: lineno,
+                            rule: "pragma",
+                            msg: format!("lint:allow names unknown rule {rule:?}"),
+                        });
+                    } else if reason.is_empty() {
+                        out.push(Finding {
+                            file: rel_path.to_string(),
+                            line: lineno,
+                            rule: "pragma",
+                            msg: format!(
+                                "lint:allow({rule}) needs a reason: `// lint:allow({rule}): <why>`"
+                            ),
+                        });
+                    }
+                }
+                Err(msg) => out.push(Finding {
+                    file: rel_path.to_string(),
+                    line: lineno,
+                    rule: "pragma",
+                    msg,
+                }),
+            }
+            comment = rest;
+        }
+    }
+    out
+}
+
+/// Parse `(<rule>): <reason>` after a `lint:allow` marker.
+fn parse_pragma(rest: &str) -> Result<(String, String), String> {
+    let rest = rest.trim_start();
+    let Some(body) = rest.strip_prefix('(') else {
+        return Err("malformed pragma: expected `lint:allow(<rule>): <reason>`".to_string());
+    };
+    let Some(close) = body.find(')') else {
+        return Err("malformed pragma: missing `)`".to_string());
+    };
+    let rule = body[..close].trim().to_string();
+    let after = body[close + 1..].trim_start();
+    let reason = after.strip_prefix(':').map(|r| r.trim()).unwrap_or("").to_string();
+    Ok((rule, reason))
+}
+
+/// Does a *valid* pragma for `rule` cover `lineno` (same line or the
+/// line above)?
+fn pragma_covers(sf: &SourceFile, lineno: usize, rule: &str) -> bool {
+    let check = |l: usize| -> bool {
+        if l == 0 || l > sf.lines.len() {
+            return false;
+        }
+        let comment = &sf.line(l).comment;
+        let mut rest = comment.as_str();
+        while let Some(pos) = rest.find("lint:allow") {
+            rest = &rest[pos + "lint:allow".len()..];
+            if let Ok((r, reason)) = parse_pragma(rest) {
+                if r == rule && !reason.is_empty() {
+                    return true;
+                }
+            }
+        }
+        false
+    };
+    check(lineno) || check(lineno.saturating_sub(1))
+}
+
+// ---------------------------------------------------------------------------
+// env-discipline
+// ---------------------------------------------------------------------------
+
+/// All process-environment reads go through `util::runtimecfg::RuntimeCfg`
+/// — one snapshot, one parsing point, no scattered `ETHER_*` lookups.
+fn env_discipline(rel_path: &str, sf: &SourceFile, out: &mut Vec<Finding>) {
+    if has_suffix(rel_path, ENV_HOME) {
+        return;
+    }
+    for (idx, line) in sf.lines.iter().enumerate() {
+        for needle in ["env::var", "env::var_os"] {
+            if line.code.contains(needle) {
+                out.push(Finding {
+                    file: rel_path.to_string(),
+                    line: idx + 1,
+                    rule: "env-discipline",
+                    msg: format!(
+                        "direct `{needle}` read; route it through \
+                         util::runtimecfg::RuntimeCfg (the one env parsing point)"
+                    ),
+                });
+                break;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dispatch-discipline
+// ---------------------------------------------------------------------------
+
+/// Per-method dispatch is confined to `peft/registry.rs` (the single
+/// `op_for` match) and the trait impls in `peft/op.rs`. A `match` with
+/// two or more `MethodKind::` arms anywhere else reintroduces the
+/// scattered dispatch PR 2 removed.
+fn dispatch_discipline(rel_path: &str, sf: &SourceFile, out: &mut Vec<Finding>) {
+    if !in_tree(rel_path, "rust/src/") || DISPATCH_HOMES.iter().any(|h| has_suffix(rel_path, h)) {
+        return;
+    }
+    for (idx, line) in sf.lines.iter().enumerate() {
+        let code = &line.code;
+        for at in word_occurrences(code, "match") {
+            // Find the match block's braces starting after the keyword.
+            let mut depth = 0i64;
+            let mut opened = false;
+            let mut arms: Vec<String> = Vec::new();
+            'block: for (j, jline) in sf.lines.iter().enumerate().skip(idx) {
+                let lcode = &jline.code;
+                let scan_from = if j == idx { at + "match".len() } else { 0 };
+                // Collect before brace-scanning so single-line matches
+                // (`match k { MethodKind::A => .. }`) still register.
+                collect_methodkind_arms(&lcode[scan_from..], &mut arms);
+                for c in lcode[scan_from..].chars() {
+                    match c {
+                        '{' => {
+                            depth += 1;
+                            opened = true;
+                        }
+                        '}' => {
+                            depth -= 1;
+                            if opened && depth == 0 {
+                                break 'block;
+                            }
+                        }
+                        // A scrutinee never contains `;`: hitting one
+                        // before `{` means this `match` has no block.
+                        ';' if !opened => break 'block,
+                        _ => {}
+                    }
+                }
+                if j > idx + 400 {
+                    break; // runaway (unbalanced braces); bail quietly
+                }
+            }
+            arms.sort();
+            arms.dedup();
+            if arms.len() >= 2 {
+                out.push(Finding {
+                    file: rel_path.to_string(),
+                    line: idx + 1,
+                    rule: "dispatch-discipline",
+                    msg: format!(
+                        "per-method `match` over MethodKind ({}) outside peft/registry.rs; \
+                         dispatch through registry::op_for / a TransformOp method instead",
+                        arms.join(", ")
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Collect `MethodKind::<Variant>` names that appear as match arms
+/// (followed by `=>` later on the same line) into `arms`.
+fn collect_methodkind_arms(code: &str, arms: &mut Vec<String>) {
+    let mut rest = code;
+    while let Some(pos) = rest.find("MethodKind::") {
+        let after = &rest[pos + "MethodKind::".len()..];
+        let ident: String =
+            after.chars().take_while(|c| c.is_alphanumeric() || *c == '_').collect();
+        let tail = after[ident.len()..].trim_start();
+        if !ident.is_empty() && (tail.starts_with("=>") || tail.starts_with('|')) {
+            arms.push(ident);
+        }
+        rest = after;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// safety-comments
+// ---------------------------------------------------------------------------
+
+/// How far above an `unsafe` block we look for a `// SAFETY:` comment
+/// (multi-line justifications and one interposed code line are common).
+const SAFETY_BLOCK_WINDOW: usize = 4;
+/// How far above an `unsafe fn`/`impl`/`trait` we look for a
+/// `# Safety` doc section (doc block + attributes above the signature).
+const SAFETY_ITEM_WINDOW: usize = 12;
+
+/// Every `unsafe` block carries a `// SAFETY:` justification; every
+/// `unsafe fn`/`unsafe impl`/`unsafe trait` documents its contract in a
+/// `# Safety` doc section (or a `SAFETY:` comment). Also records the
+/// full unsafe inventory for the generated report.
+fn safety_comments(rel_path: &str, sf: &SourceFile, out: &mut Vec<Finding>) {
+    let mut inventory = Vec::new();
+    unsafe_inventory(rel_path, sf, &mut inventory);
+    for site in inventory {
+        if site.justification.is_none() {
+            let (hint, marker) = match site.kind {
+                "block" => ("`// SAFETY: <why the invariant holds>` above the block", "SAFETY:"),
+                _ => ("a `# Safety` doc section (or `// SAFETY:` comment)", "# Safety"),
+            };
+            out.push(Finding {
+                file: rel_path.to_string(),
+                line: site.line,
+                rule: "safety-comments",
+                msg: format!(
+                    "`unsafe` {} without a {marker} justification; add {hint}",
+                    site.kind
+                ),
+            });
+        }
+    }
+}
+
+/// Enumerate every `unsafe` site in a file with its justification text
+/// (if any) — shared by the `safety-comments` rule and the inventory
+/// report.
+pub fn unsafe_inventory(rel_path: &str, sf: &SourceFile, out: &mut Vec<UnsafeSite>) {
+    for (idx, line) in sf.lines.iter().enumerate() {
+        for at in word_occurrences(&line.code, "unsafe") {
+            let after = line.code[at + "unsafe".len()..].trim_start();
+            let kind = if after.starts_with("fn") {
+                "fn"
+            } else if after.starts_with("impl") {
+                "impl"
+            } else if after.starts_with("trait") {
+                "trait"
+            } else {
+                "block"
+            };
+            let window =
+                if kind == "block" { SAFETY_BLOCK_WINDOW } else { SAFETY_ITEM_WINDOW };
+            let justification = find_justification(sf, idx + 1, window, kind);
+            out.push(UnsafeSite {
+                file: rel_path.to_string(),
+                line: idx + 1,
+                kind,
+                justification,
+            });
+        }
+    }
+}
+
+/// Search the finding's line and up to `window` lines above for a
+/// justification comment. Blocks accept `SAFETY:`; items additionally
+/// accept a `# Safety` doc section.
+fn find_justification(
+    sf: &SourceFile,
+    lineno: usize,
+    window: usize,
+    kind: &str,
+) -> Option<String> {
+    let lo = lineno.saturating_sub(window).max(1);
+    // Prefer the closest marker: scan upward from the site.
+    for l in (lo..=lineno).rev() {
+        let comment = &sf.line(l).comment;
+        if let Some(pos) = comment.find("SAFETY:") {
+            let mut text = comment[pos + "SAFETY:".len()..].trim().to_string();
+            // A multi-line justification continues on following
+            // comment-only lines up to the unsafe site.
+            for cont in l + 1..lineno {
+                let next = sf.line(cont);
+                if next.code.trim().is_empty() && !next.comment.trim().is_empty() {
+                    text.push(' ');
+                    text.push_str(next.comment.trim());
+                } else {
+                    break;
+                }
+            }
+            return Some(text);
+        }
+        if kind != "block" && comment.contains("# Safety") {
+            // Gather the doc lines below the heading as the contract.
+            let mut text = String::new();
+            for cont in l + 1..lineno {
+                let next = sf.line(cont);
+                if !next.comment.trim().is_empty() && next.code.trim().is_empty() {
+                    if !text.is_empty() {
+                        text.push(' ');
+                    }
+                    text.push_str(next.comment.trim());
+                } else {
+                    break;
+                }
+            }
+            return Some(if text.is_empty() { "(documented contract)".to_string() } else { text });
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// no-panic-paths
+// ---------------------------------------------------------------------------
+
+/// The paged store and the fleet/server coordinators promise
+/// error-not-panic behaviour: every failure surfaces as `Err`, so a
+/// corrupt page or a wedged shard degrades service instead of killing
+/// it. `.unwrap()` / `.expect(` / `panic!` in their non-test code break
+/// that contract. (`.lock().unwrap()` is `lock-poisoning`'s domain.)
+fn no_panic_paths(rel_path: &str, sf: &SourceFile, out: &mut Vec<Finding>) {
+    if !in_tree(rel_path, "rust/src/") || !PANIC_FREE_FILES.iter().any(|f| has_suffix(rel_path, f))
+    {
+        return;
+    }
+    for (idx, line) in sf.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for needle in [".unwrap()", ".expect(", "panic!", "unreachable!"] {
+            let mut from = 0usize;
+            while let Some(pos) = line.code[from..].find(needle) {
+                let at = from + pos;
+                from = at + needle.len();
+                // `.lock().unwrap()` is lock-poisoning's finding, not ours.
+                if line.code[..at].ends_with(".lock()") {
+                    continue;
+                }
+                out.push(Finding {
+                    file: rel_path.to_string(),
+                    line: idx + 1,
+                    rule: "no-panic-paths",
+                    msg: format!(
+                        "`{needle}` in a panic-free error path; propagate a Result \
+                         (or justify with `// lint:allow(no-panic-paths): <why>`)",
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// lock-poisoning
+// ---------------------------------------------------------------------------
+
+/// `.lock().unwrap()` turns one panicked worker into a poisoned mutex
+/// that panics every later accessor — a single bad request can wedge a
+/// whole shard. Shipping code goes through the poisoned-guard recovery
+/// wrapper `util::sync::lock_clean` instead.
+fn lock_poisoning(rel_path: &str, sf: &SourceFile, out: &mut Vec<Finding>) {
+    if !in_tree(rel_path, "rust/src/") || has_suffix(rel_path, LOCK_HOME) {
+        return;
+    }
+    for (idx, line) in sf.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for needle in [".lock().unwrap()", ".lock().expect("] {
+            if line.code.contains(needle) {
+                out.push(Finding {
+                    file: rel_path.to_string(),
+                    line: idx + 1,
+                    rule: "lock-poisoning",
+                    msg: format!(
+                        "`{needle}` propagates mutex poisoning; use \
+                         util::sync::lock_clean (poisoned-guard recovery) instead"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// bench-schema
+// ---------------------------------------------------------------------------
+
+/// In benches, scenario-row field names are `StatsSnapshot`'s to define:
+/// hand-rolling a key that matches (or near-matches) the pinned schema
+/// forks the source of truth the CI perf trajectory diffs against.
+fn bench_schema_keys(rel_path: &str, sf: &SourceFile, out: &mut Vec<Finding>) {
+    if !in_tree(rel_path, "rust/benches/") {
+        return;
+    }
+    let pinned: Vec<&str> =
+        SCENARIO_SCHEMA.iter().chain(FLEET_SCHEMA.iter()).copied().collect();
+    for (idx, keys) in extract_tuple_keys(sf) {
+        for key in keys {
+            if pinned.contains(&key.as_str()) {
+                out.push(Finding {
+                    file: rel_path.to_string(),
+                    line: idx,
+                    rule: "bench-schema",
+                    msg: format!(
+                        "hand-rolled scenario field {key:?}; emit it via \
+                         StatsSnapshot::scenario_json / FleetSnapshot::scenario_json \
+                         so the BENCH JSON schema has one source of truth"
+                    ),
+                });
+                continue;
+            }
+            let norm = normalize_key(&key);
+            if let Some(p) = pinned.iter().find(|p| normalize_key(p) == norm) {
+                out.push(Finding {
+                    file: rel_path.to_string(),
+                    line: idx,
+                    rule: "bench-schema",
+                    msg: format!(
+                        "field {key:?} drifts from the pinned schema spelling {p:?} \
+                         (BENCH JSON field names are stable; the CI perf trajectory \
+                         diffs them)"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+fn normalize_key(k: &str) -> String {
+    k.chars().filter(|c| *c != '_').flat_map(|c| c.to_lowercase()).collect()
+}
+
+/// Extract JSON-tuple keys — string literals in `("<key>",` position —
+/// per line. Returns `(1-indexed line, keys)`.
+pub fn extract_tuple_keys(sf: &SourceFile) -> Vec<(usize, Vec<String>)> {
+    let mut out = Vec::new();
+    for (idx, line) in sf.lines.iter().enumerate() {
+        let mut keys = Vec::new();
+        let mut str_no = 0usize;
+        let chars: Vec<char> = line.code.chars().collect();
+        for (ci, &c) in chars.iter().enumerate() {
+            if c == STR_MARK {
+                // Pattern: `("<mark>",` — open paren, quote, mark, quote, comma.
+                let is_tuple_key = ci >= 2
+                    && chars[ci - 1] == '"'
+                    && chars[ci - 2] == '('
+                    && chars.get(ci + 1) == Some(&'"')
+                    && chars.get(ci + 2) == Some(&',');
+                if is_tuple_key {
+                    if let Some(s) = line.strings.get(str_no) {
+                        keys.push(s.clone());
+                    }
+                }
+                str_no += 1;
+            }
+        }
+        if !keys.is_empty() {
+            out.push((idx + 1, keys));
+        }
+    }
+    out
+}
+
+/// Cross-file drift check: the pinned schema must equal the field set
+/// the actual `scenario_json` implementations emit. Returns findings
+/// anchored at the implementation files.
+pub fn schema_drift(server_rel: &str, server: &SourceFile, fleet_rel: &str, fleet: &SourceFile)
+    -> Vec<Finding> {
+    let mut out = Vec::new();
+    check_drift(server_rel, server, SCENARIO_SCHEMA, "StatsSnapshot::scenario_json", &mut out);
+    check_drift(fleet_rel, fleet, FLEET_SCHEMA, "FleetSnapshot::scenario_json", &mut out);
+    out
+}
+
+fn check_drift(
+    rel_path: &str,
+    sf: &SourceFile,
+    pinned: &[&str],
+    what: &str,
+    out: &mut Vec<Finding>,
+) {
+    // Locate the fn scenario_json block.
+    let Some(start) = sf
+        .lines
+        .iter()
+        .position(|l| l.code.contains("fn scenario_json"))
+    else {
+        out.push(Finding {
+            file: rel_path.to_string(),
+            line: 1,
+            rule: "bench-schema",
+            msg: format!("{what} not found; update the pinned schema in rust/lint"),
+        });
+        return;
+    };
+    // Capture its brace block.
+    let mut depth = 0i64;
+    let mut opened = false;
+    let mut end = start;
+    'outer: for (j, jline) in sf.lines.iter().enumerate().skip(start) {
+        for c in jline.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => {
+                    depth -= 1;
+                    if opened && depth == 0 {
+                        end = j;
+                        break 'outer;
+                    }
+                }
+                _ => {}
+            }
+        }
+        end = j;
+    }
+    let mut emitted: Vec<String> = Vec::new();
+    for (lineno, keys) in extract_tuple_keys(sf) {
+        if lineno >= start + 1 && lineno <= end + 1 {
+            emitted.extend(keys);
+        }
+    }
+    emitted.sort();
+    emitted.dedup();
+    let mut want: Vec<String> = pinned.iter().map(|s| s.to_string()).collect();
+    want.sort();
+    if emitted != want {
+        let missing: Vec<_> = want.iter().filter(|w| !emitted.contains(w)).collect();
+        let extra: Vec<_> = emitted.iter().filter(|e| !want.contains(e)).collect();
+        out.push(Finding {
+            file: rel_path.to_string(),
+            line: start + 1,
+            rule: "bench-schema",
+            msg: format!(
+                "{what} drifted from the pinned schema (missing: {missing:?}, \
+                 unpinned: {extra:?}); update rust/lint's pinned list and the \
+                 perf-trajectory tooling together"
+            ),
+        });
+    }
+}

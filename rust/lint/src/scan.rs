@@ -1,0 +1,319 @@
+//! Line/token-level Rust source preprocessing — the shared front end for
+//! every rule.
+//!
+//! No `syn`, no full parse: each file is walked once by a small state
+//! machine that separates **code** from **comments** and **string
+//! literals**, so rules can pattern-match code without tripping on
+//! occurrences inside strings or docs. String literal *contents* are
+//! preserved per line (rules like `bench-schema` need the actual field
+//! names); in the code view each literal collapses to `"\u{1}"` so
+//! positional patterns (`("<key>",`) stay matchable and the n-th
+//! placeholder on a line maps to the n-th entry of [`Line::strings`].
+//!
+//! The pass also tracks `#[cfg(test)]` regions by brace depth, so rules
+//! that only govern shipping code (panic paths, lock hygiene) can skip
+//! test modules.
+
+/// Placeholder character substituted for string-literal contents in the
+/// code view. One per literal, so occurrence counting recovers the
+/// original text from [`Line::strings`].
+pub const STR_MARK: char = '\u{1}';
+
+/// One preprocessed source line.
+#[derive(Debug, Default, Clone)]
+pub struct Line {
+    /// Code with comments stripped and string contents replaced by
+    /// [`STR_MARK`] (quotes kept).
+    pub code: String,
+    /// Concatenated comment text on this line (`//`, `///`, `//!`,
+    /// `/* */`), markers stripped.
+    pub comment: String,
+    /// String-literal contents opened on this line, in order.
+    pub strings: Vec<String>,
+    /// Inside a `#[cfg(test)]` item's brace block.
+    pub in_test: bool,
+}
+
+/// A preprocessed file: `lines[i]` is source line `i + 1`.
+#[derive(Debug)]
+pub struct SourceFile {
+    pub lines: Vec<Line>,
+}
+
+enum St {
+    Code,
+    LineComment,
+    /// Nestable `/* */`; payload is nesting depth.
+    BlockComment(u32),
+    /// Payload: raw-string hash count, or `None` for a normal
+    /// (escape-aware) string.
+    Str(Option<u32>),
+}
+
+impl SourceFile {
+    pub fn parse(text: &str) -> SourceFile {
+        let mut lines: Vec<Line> = Vec::new();
+        let mut cur = Line::default();
+        let mut cur_str = String::new();
+        let mut st = St::Code;
+        let bytes: Vec<char> = text.chars().collect();
+        let n = bytes.len();
+        let mut i = 0usize;
+        while i < n {
+            let c = bytes[i];
+            if c == '\n' {
+                if let St::LineComment = st {
+                    st = St::Code;
+                }
+                lines.push(std::mem::take(&mut cur));
+                i += 1;
+                continue;
+            }
+            match st {
+                St::Code => {
+                    let next = bytes.get(i + 1).copied();
+                    if c == '/' && next == Some('/') {
+                        st = St::LineComment;
+                        i += 2;
+                        // Swallow doc markers (`///`, `//!`).
+                        while matches!(bytes.get(i), Some(&'/') | Some(&'!')) {
+                            i += 1;
+                        }
+                        continue;
+                    }
+                    if c == '/' && next == Some('*') {
+                        st = St::BlockComment(1);
+                        i += 2;
+                        continue;
+                    }
+                    if c == '"' {
+                        st = St::Str(None);
+                        cur.code.push('"');
+                        i += 1;
+                        continue;
+                    }
+                    if c == 'r' && !prev_is_ident(&cur.code) {
+                        // Raw string: r"..." or r#"..."# (any hash count).
+                        let mut j = i + 1;
+                        let mut hashes = 0u32;
+                        while bytes.get(j) == Some(&'#') {
+                            hashes += 1;
+                            j += 1;
+                        }
+                        if bytes.get(j) == Some(&'"') {
+                            st = St::Str(Some(hashes));
+                            cur.code.push('"');
+                            i = j + 1;
+                            continue;
+                        }
+                    }
+                    if c == '\'' {
+                        // Char literal vs lifetime: a lifetime is `'ident`
+                        // not followed by a closing quote.
+                        let is_lifetime = matches!(next, Some(x) if x.is_alphabetic() || x == '_')
+                            && bytes.get(i + 2) != Some(&'\'');
+                        if is_lifetime {
+                            cur.code.push('\'');
+                            i += 1;
+                            continue;
+                        }
+                        // Consume the whole char literal.
+                        cur.code.push_str("' '");
+                        i += 1;
+                        if bytes.get(i) == Some(&'\\') {
+                            i += 2; // escape + escaped char
+                        } else {
+                            i += 1;
+                        }
+                        // Advance to the closing quote (handles '\u{..}').
+                        while i < n && bytes[i] != '\'' && bytes[i] != '\n' {
+                            i += 1;
+                        }
+                        if i < n && bytes[i] == '\'' {
+                            i += 1;
+                        }
+                        continue;
+                    }
+                    cur.code.push(c);
+                    i += 1;
+                }
+                St::LineComment => {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+                St::BlockComment(d) => {
+                    let next = bytes.get(i + 1).copied();
+                    if c == '/' && next == Some('*') {
+                        st = St::BlockComment(d + 1);
+                        i += 2;
+                    } else if c == '*' && next == Some('/') {
+                        if d == 1 {
+                            st = St::Code;
+                        } else {
+                            st = St::BlockComment(d - 1);
+                        }
+                        i += 2;
+                    } else {
+                        cur.comment.push(c);
+                        i += 1;
+                    }
+                }
+                St::Str(raw) => match raw {
+                    None => {
+                        if c == '\\' {
+                            // `\` + newline is a string continuation: leave
+                            // the newline for the top-level handler so line
+                            // numbers stay aligned with the source.
+                            if bytes.get(i + 1) == Some(&'\n') {
+                                i += 1;
+                            } else {
+                                if let Some(e) = bytes.get(i + 1) {
+                                    cur_str.push('\\');
+                                    cur_str.push(*e);
+                                }
+                                i += 2;
+                            }
+                        } else if c == '"' {
+                            cur.code.push(STR_MARK);
+                            cur.code.push('"');
+                            cur.strings.push(std::mem::take(&mut cur_str));
+                            st = St::Code;
+                            i += 1;
+                        } else {
+                            cur_str.push(c);
+                            i += 1;
+                        }
+                    }
+                    Some(hashes) => {
+                        if c == '"' {
+                            let mut j = i + 1;
+                            let mut seen = 0u32;
+                            while seen < hashes && bytes.get(j) == Some(&'#') {
+                                seen += 1;
+                                j += 1;
+                            }
+                            if seen == hashes {
+                                cur.code.push(STR_MARK);
+                                cur.code.push('"');
+                                cur.strings.push(std::mem::take(&mut cur_str));
+                                st = St::Code;
+                                i = j;
+                                continue;
+                            }
+                        }
+                        cur_str.push(c);
+                        i += 1;
+                    }
+                },
+            }
+        }
+        lines.push(cur);
+        mark_test_regions(&mut lines);
+        SourceFile { lines }
+    }
+
+    /// 1-indexed accessor (findings carry 1-indexed line numbers).
+    pub fn line(&self, lineno: usize) -> &Line {
+        &self.lines[lineno - 1]
+    }
+}
+
+fn prev_is_ident(code: &str) -> bool {
+    code.chars().next_back().is_some_and(|c| c.is_alphanumeric() || c == '_')
+}
+
+/// Mark every line inside a `#[cfg(test)]` item's brace block (the
+/// attribute and header lines included). Depth tracking runs over the
+/// code view, so braces in strings/comments don't count.
+fn mark_test_regions(lines: &mut [Line]) {
+    let mut depth: i64 = 0;
+    let mut pending = false;
+    let mut test_floor: Option<i64> = None;
+    for line in lines.iter_mut() {
+        if line.code.contains("#[cfg(test)]") {
+            pending = true;
+        }
+        let starts_in_test = test_floor.is_some() || pending;
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    if pending {
+                        test_floor = Some(depth);
+                        pending = false;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if test_floor == Some(depth) {
+                        test_floor = None;
+                    }
+                }
+                // A brace-less `#[cfg(test)]` item (`use`, `type`, …)
+                // ends at its semicolon — don't leak the pending mark.
+                ';' => pending = false,
+                _ => {}
+            }
+        }
+        line.in_test = starts_in_test || test_floor.is_some() || pending;
+    }
+}
+
+/// Find word-boundary occurrences of `word` in `code`, returning byte
+/// offsets. "Word" characters are `[A-Za-z0-9_]`.
+pub fn word_occurrences(code: &str, word: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(word) {
+        let at = from + pos;
+        let before_ok = at == 0
+            || !code[..at].chars().next_back().is_some_and(|c| c.is_alphanumeric() || c == '_');
+        let after = at + word.len();
+        let after_ok = after >= code.len()
+            || !code[after..].chars().next().is_some_and(|c| c.is_alphanumeric() || c == '_');
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        from = at + word.len();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn separates_code_comments_strings() {
+        let src = "let x = \"unsafe in a string\"; // unsafe in a comment\nunsafe { }\n";
+        let f = SourceFile::parse(src);
+        assert!(!f.lines[0].code.contains("unsafe"));
+        assert!(f.lines[0].comment.contains("unsafe in a comment"));
+        assert_eq!(f.lines[0].strings, vec!["unsafe in a string".to_string()]);
+        assert!(f.lines[1].code.contains("unsafe"));
+    }
+
+    #[test]
+    fn cfg_test_region_marked() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() { x.unwrap(); }\n}\nfn c() {}\n";
+        let f = SourceFile::parse(src);
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[1].in_test);
+        assert!(f.lines[3].in_test);
+        assert!(!f.lines[5].in_test);
+    }
+
+    #[test]
+    fn raw_strings_and_chars() {
+        let src = "let s = r#\"has \"quotes\" inside\"#; let c = '\"'; let l: &'a str = s;\n";
+        let f = SourceFile::parse(src);
+        assert_eq!(f.lines[0].strings, vec!["has \"quotes\" inside".to_string()]);
+        assert!(f.lines[0].code.contains("&'a str"));
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert_eq!(word_occurrences("unsafe_fn unsafe funsafe", "unsafe"), vec![10]);
+        assert_eq!(word_occurrences("match rematch match2", "match"), vec![0]);
+    }
+}

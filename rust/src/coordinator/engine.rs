@@ -56,6 +56,7 @@ use super::registry::{AdapterEntry, MergeEngine, MergedCache, SwapMode, SwapSlot
 use crate::peft::precision::MergedBuf;
 use crate::runtime::engine::PjrtEngine;
 use crate::runtime::HostTensor;
+use crate::util::sync::lock_clean;
 
 /// Cheap fingerprint proving which weights (or adapted activations)
 /// served a batch: a strided bit-fold over the whole vector, so it stays
@@ -233,7 +234,7 @@ impl ExecutionStrategy for InvolutionSwapStrategy {
         prompts: &[Vec<i32>],
         _max_new: usize,
     ) -> Result<Vec<Vec<i32>>> {
-        let mut slot = self.slot.lock().unwrap();
+        let mut slot = lock_clean(&self.slot);
         self.merger.swap_into(&mut slot, adapter, self.mode)?;
         let tag = weights_fingerprint(slot.weights());
         Ok(echo_tagged(prompts, tag))
@@ -252,7 +253,7 @@ impl ExecutionStrategy for InvolutionSwapStrategy {
     }
 
     fn resident_weight_bytes(&self) -> usize {
-        self.slot.lock().unwrap().resident_bytes()
+        lock_clean(&self.slot).resident_bytes()
     }
 
     fn merge_executions(&self) -> u64 {
@@ -695,7 +696,7 @@ impl<'a> AdapterEngine<'a> {
 
     /// Strategy the policy selects for this adapter right now.
     pub fn strategy_for(&self, adapter: &str) -> StrategyKind {
-        self.policy.kind_for(self.promoted.lock().unwrap().contains(adapter))
+        self.policy.kind_for(lock_clean(&self.promoted).contains(adapter))
     }
 
     fn leaf(&self, kind: StrategyKind) -> Result<&(dyn ExecutionStrategy + 'a)> {
@@ -759,13 +760,13 @@ impl ExecutionStrategy for AdapterEngine<'_> {
             return;
         }
         let hot = {
-            let mut t = self.traffic.lock().unwrap();
+            let mut t = lock_clean(&self.traffic);
             let entry = t.entry(adapter.to_string()).or_insert(0);
             *entry = (*entry).max(requests);
             self.policy.promotes(*entry)
         };
         if hot {
-            let mut p = self.promoted.lock().unwrap();
+            let mut p = lock_clean(&self.promoted);
             if p.insert(adapter.to_string()) {
                 self.promotions.fetch_add(1, Ordering::SeqCst);
             }

@@ -22,6 +22,7 @@ use crate::peft::flat::Layout;
 use crate::peft::precision::{MergedBuf, MergedPrecision};
 use crate::peft::store::{PagedStore, StoreStats};
 use crate::peft::{registry as ops, MethodSpec};
+use crate::util::sync::lock_clean;
 
 /// One registered adapter: the tiny trainable vector plus its identity.
 #[derive(Clone, Debug)]
@@ -507,7 +508,7 @@ struct Flight<'a> {
 
 impl Drop for Flight<'_> {
     fn drop(&mut self) {
-        self.engine.inflight.lock().unwrap().remove(&self.id);
+        lock_clean(&self.engine.inflight).remove(&self.id);
         self.engine.inflight_cv.notify_all();
     }
 }
@@ -517,7 +518,7 @@ struct Permit<'a>(&'a MergeEngine);
 
 impl Drop for Permit<'_> {
     fn drop(&mut self) {
-        *self.0.permits.lock().unwrap() += 1;
+        *lock_clean(&self.0.permits) += 1;
         self.0.permits_cv.notify_one();
     }
 }
@@ -577,7 +578,7 @@ impl MergeEngine {
     /// the cache again after a single-flight merge completes, so their
     /// second probe counts as the hit it is.
     pub fn cache_stats(&self) -> (u64, u64) {
-        let c = self.cache.lock().unwrap();
+        let c = lock_clean(&self.cache);
         (c.hits, c.misses)
     }
 
@@ -590,10 +591,10 @@ impl MergeEngine {
     /// bump, so hits stay lock-then-clone cheap and bit-exact.
     pub fn merged(&self, entry: &AdapterEntry) -> Result<Arc<Vec<f32>>> {
         loop {
-            if let Some(m) = self.cache.lock().unwrap().get(&entry.id) {
+            if let Some(m) = lock_clean(&self.cache).get(&entry.id) {
                 return Ok(m.to_f32());
             }
-            let mut inflight = self.inflight.lock().unwrap();
+            let mut inflight = lock_clean(&self.inflight);
             if !inflight.contains(&entry.id) {
                 inflight.insert(entry.id.clone());
                 break;
@@ -611,13 +612,13 @@ impl MergeEngine {
         // Double-checked single-flight: another thread may have merged and
         // published between our cache probe and winning the flight slot.
         // `peek` keeps the race-window probe out of the hit/miss stats.
-        if let Some(m) = self.cache.lock().unwrap().peek(&entry.id) {
+        if let Some(m) = lock_clean(&self.cache).peek(&entry.id) {
             drop(flight);
             return Ok(m.to_f32());
         }
         let merged = self.do_merge(entry)?;
         // Publish before ending the flight so woken waiters hit the cache.
-        self.cache.lock().unwrap().put(&entry.id, merged.clone());
+        lock_clean(&self.cache).put(&entry.id, merged.clone());
         drop(flight);
         Ok(merged.to_f32())
     }
@@ -661,7 +662,7 @@ impl MergeEngine {
     }
 
     fn acquire_permit(&self) -> Permit<'_> {
-        let mut n = self.permits.lock().unwrap();
+        let mut n = lock_clean(&self.permits);
         while *n == 0 {
             n = self.permits_cv.wait(n).unwrap();
         }
@@ -671,7 +672,7 @@ impl MergeEngine {
 
     /// Bytes of merged weights resident in the per-adapter cache.
     pub fn cache_resident_bytes(&self) -> usize {
-        self.cache.lock().unwrap().resident_bytes()
+        lock_clean(&self.cache).resident_bytes()
     }
 
     /// The pre-enumerated merge schedule — shared with the merge-free

@@ -51,6 +51,7 @@ use crate::peft::registry;
 use crate::peft::{adapted_matrices, MethodSpec};
 use crate::tensor::Mat;
 use crate::util::pool::{parallel_for_chunks, parallel_for_chunks_with, SendPtr};
+use crate::util::sync::lock_clean;
 
 /// Model dimensions needed to interpret the layer-stacked layouts.
 #[derive(Clone, Copy, Debug)]
@@ -299,6 +300,7 @@ impl MergePlan {
             for idx in a..b {
                 let it = &items[idx];
                 let size = it.rows * it.cols;
+                ptr.claim(it.offset, size);
                 // SAFETY: layout entries are non-overlapping, so items
                 // cover disjoint [offset, offset + size) output ranges.
                 let region =
@@ -392,6 +394,7 @@ impl MergePlan {
             for idx in a..b {
                 let it = &items[idx];
                 let size = it.rows * m;
+                ptr.claim(offsets[idx], size);
                 // SAFETY: the offsets partition `out` into disjoint
                 // [offset, offset + rows·m) ranges in item order.
                 let region =
@@ -406,7 +409,7 @@ impl MergePlan {
                     shape,
                     region,
                 ) {
-                    let mut slot = err.lock().unwrap();
+                    let mut slot = lock_clean(&err);
                     if slot.is_none() {
                         *slot = Some(e.context(format!("activations {}[{}]", it.name, it.layer)));
                     }
@@ -506,12 +509,14 @@ impl MergePlan {
         let sweep = |a: usize, b: usize| {
             for idx in a..b {
                 let it = &items[idx];
-                // SAFETY: field locations are disjoint across items
-                // (distinct (matrix, layer) slices of non-overlapping
-                // layout entries), so concurrent items never alias.
                 let fields: Vec<(&'static str, &mut [f32])> = locs[idx]
                     .iter()
                     .map(|&(field, off, len)| {
+                        gptr.claim(off, len);
+                        // SAFETY: field locations are disjoint across
+                        // items — distinct (matrix, layer) slices of
+                        // non-overlapping layout entries — so concurrent
+                        // items never alias (the claim above asserts it).
                         (field, unsafe {
                             std::slice::from_raw_parts_mut(gptr.get().add(off), len)
                         })
@@ -531,7 +536,7 @@ impl MergePlan {
                     Some(1),
                     &mut gp,
                 ) {
-                    let mut slot = err.lock().unwrap();
+                    let mut slot = lock_clean(&err);
                     if slot.is_none() {
                         *slot = Some(e.context(format!("grad {}[{}]", it.name, it.layer)));
                     }
@@ -582,6 +587,7 @@ impl MergePlan {
             for idx in a..b {
                 let it = &items[idx];
                 let size = it.rows * it.cols;
+                ptr.claim(it.offset, size);
                 // SAFETY: items cover disjoint output ranges.
                 let region =
                     unsafe { std::slice::from_raw_parts_mut(ptr.get().add(it.offset), size) };
@@ -589,7 +595,7 @@ impl MergePlan {
                 if let Err(e) =
                     op.unmerge_into(spec, &params[idx], &scratch[..size], it.rows, it.cols, region)
                 {
-                    let mut slot = err.lock().unwrap();
+                    let mut slot = lock_clean(&err);
                     if slot.is_none() {
                         *slot = Some(e.context(format!("unmerge {}[{}]", it.name, it.layer)));
                     }
@@ -659,6 +665,7 @@ impl MergePlan {
             for idx in a..b {
                 let it = &items[idx];
                 let size = it.rows * it.cols;
+                ptr.claim(it.offset, size);
                 // SAFETY: items cover disjoint output ranges.
                 let region =
                     unsafe { std::slice::from_raw_parts_mut(ptr.get().add(it.offset), size) };
@@ -671,7 +678,7 @@ impl MergePlan {
                     it.cols,
                     region,
                 ) {
-                    let mut slot = err.lock().unwrap();
+                    let mut slot = lock_clean(&err);
                     if slot.is_none() {
                         *slot = Some(e.context(format!("unmerge {}[{}]", it.name, it.layer)));
                     }

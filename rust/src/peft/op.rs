@@ -474,6 +474,18 @@ pub trait TransformOp: Sync + Send {
         self.grad_params_into(spec, p, w, x, upstream, shape, Some(1), grad)
     }
 
+    /// Parameter fields holding reflection vectors that training
+    /// re-normalizes to unit norm after every optimizer step, as the
+    /// paper prescribes for ETHER methods (§3.2/§3.3). Empty (the
+    /// default) for methods with no reflection geometry — the trainer's
+    /// post-step projection is a no-op for them. Keeping this on the op
+    /// (not a `MethodKind` match in the trainer) is what lets a new
+    /// reflection-family member opt in from its own file.
+    fn unit_norm_fields(&self, spec: &MethodSpec) -> &'static [&'static str] {
+        let _ = spec;
+        &[]
+    }
+
     /// Squared transformation-distance contribution of one matrix/layer
     /// (paper Fig. 4): `‖T − I‖²_F` for multiplicative ops (materialized
     /// by transforming the identity), `‖ΔW‖²_F` for additive ops
@@ -709,6 +721,7 @@ fn ether_grad_acc(
     let uh = tf::normalize_blocks(u, n);
     let ptr = SendPtr::new(gu.as_mut_ptr());
     parallel_for_chunks_opt(threads, n, 1, |b0, b1| {
+        ptr.claim(b0 * db, (b1 - b0) * db);
         for b in b0..b1 {
             let ub = &uh[b * db..(b + 1) * db];
             let mut gh = vec![0.0f64; db];
@@ -760,6 +773,8 @@ fn relaxed_reflection_grad_acc(
     let pu = SendPtr::new(gu.as_mut_ptr());
     let pv = SendPtr::new(gv.as_mut_ptr());
     parallel_for_chunks_opt(threads, n, 1, |b0, b1| {
+        pu.claim(b0 * db, (b1 - b0) * db);
+        pv.claim(b0 * db, (b1 - b0) * db);
         for b in b0..b1 {
             let ub = &uh[b * db..(b + 1) * db];
             let vb = &vh[b * db..(b + 1) * db];
@@ -821,6 +836,10 @@ impl TransformOp for EtherOp {
     /// second application of the same kernel.
     fn supports_unmerge(&self) -> bool {
         true
+    }
+
+    fn unit_norm_fields(&self, _spec: &MethodSpec) -> &'static [&'static str] {
+        &["u"]
     }
 
     fn param_schema(&self, spec: &MethodSpec, d: usize, _f: usize) -> Vec<(&'static str, Vec<usize>)> {
@@ -940,6 +959,14 @@ impl TransformOp for EtherPlusOp {
     /// long as û is not orthogonal to v̂.
     fn supports_unmerge(&self) -> bool {
         true
+    }
+
+    fn unit_norm_fields(&self, spec: &MethodSpec) -> &'static [&'static str] {
+        if spec.sides == 2 {
+            &["u", "v", "ru", "rv"]
+        } else {
+            &["u", "v"]
+        }
     }
 
     fn param_schema(&self, spec: &MethodSpec, d: usize, f: usize) -> Vec<(&'static str, Vec<usize>)> {
@@ -1325,6 +1352,7 @@ impl TransformOp for OftOp {
             let ptr = SendPtr::new(gr.as_mut_ptr());
             let (z, blocks) = (&z, &blocks);
             parallel_for_chunks_opt(threads, n, 1, |b0, b1| {
+                ptr.claim(b0 * k * k, (b1 - b0) * k * k);
                 for b in b0..b1 {
                     // G_Q[i][j] = Σ_c g[bk+i, c]·z[bk+j, c]  (f64).
                     let mut gq = vec![0.0f64; k * k];
@@ -1403,6 +1431,7 @@ impl TransformOp for OftOp {
             let ptr = SendPtr::new(gmag.as_mut_ptr());
             let qtg = &qtg;
             parallel_for_chunks_opt(threads, f, 16, |c0, c1| {
+                ptr.claim(c0, c1 - c0);
                 for cidx in c0..c1 {
                     let mut acc = 0.0f64;
                     for i in 0..d {
@@ -1556,6 +1585,7 @@ impl TransformOp for NaiveOp {
         let ptr = SendPtr::new(gr.as_mut_ptr());
         let z = &z;
         parallel_for_chunks_opt(threads, n, 1, |b0, b1| {
+            ptr.claim(b0 * k * k, (b1 - b0) * k * k);
             for b in b0..b1 {
                 // SAFETY: workers receive disjoint block ranges of gr.
                 let out =
@@ -1716,6 +1746,7 @@ impl TransformOp for LoraOp {
             let ptr = SendPtr::new(ga.as_mut_ptr());
             let h = &h;
             parallel_for_chunks_opt(threads, d, 16, |r0, r1| {
+                ptr.claim(r0 * rk, (r1 - r0) * rk);
                 for i in r0..r1 {
                     // SAFETY: workers receive disjoint row ranges of ga.
                     let out =
@@ -1735,6 +1766,7 @@ impl TransformOp for LoraOp {
             let ptr = SendPtr::new(gb.as_mut_ptr());
             let ag = &ag;
             parallel_for_chunks_opt(threads, f, 16, |j0, j1| {
+                ptr.claim_strided(j0, f, rk, j1 - j0);
                 for j in j0..j1 {
                     for t in 0..rk {
                         let mut acc = 0.0f64;
@@ -1988,6 +2020,7 @@ impl TransformOp for DeloraOp {
             let ptr = SendPtr::new(ga.as_mut_ptr());
             let (qx, coef, ra) = (&qx, &coef, &ra);
             parallel_for_chunks_opt(threads, d, 16, |r0, r1| {
+                ptr.claim(r0 * rk, (r1 - r0) * rk);
                 for i in r0..r1 {
                     // SAFETY: workers receive disjoint row ranges of ga.
                     let out =
@@ -2008,6 +2041,7 @@ impl TransformOp for DeloraOp {
             let ptr = SendPtr::new(gb.as_mut_ptr());
             let (pg, coef, rb) = (&pg, &coef, &rb);
             parallel_for_chunks_opt(threads, f, 16, |j0, j1| {
+                ptr.claim_strided(j0, f, rk, j1 - j0);
                 for j in j0..j1 {
                     for t in 0..rk {
                         let mut acc = 0.0f64;
@@ -2116,6 +2150,7 @@ impl TransformOp for FullOp {
         let gw = grad.get("w");
         let ptr = SendPtr::new(gw.as_mut_ptr());
         parallel_for_chunks_opt(threads, d, 16, |r0, r1| {
+            ptr.claim(r0 * f, (r1 - r0) * f);
             for i in r0..r1 {
                 // SAFETY: workers receive disjoint row ranges of gw.
                 let out = unsafe { std::slice::from_raw_parts_mut(ptr.get().add(i * f), f) };

@@ -207,8 +207,19 @@ fn scan_page(
 ) {
     let mut off = 0usize;
     while off + HEADER_BYTES <= region.len() {
-        let word4 = |at: usize| u32::from_le_bytes(region[at..at + 4].try_into().unwrap());
-        let word2 = |at: usize| u16::from_le_bytes(region[at..at + 2].try_into().unwrap());
+        // Header reads stay in bounds (the loop guard holds
+        // `off + HEADER_BYTES <= region.len()`), so these never slice
+        // past the region; fixed-width copies avoid fallible casts.
+        let word4 = |at: usize| {
+            let mut b = [0u8; 4];
+            b.copy_from_slice(&region[at..at + 4]);
+            u32::from_le_bytes(b)
+        };
+        let word2 = |at: usize| {
+            let mut b = [0u8; 2];
+            b.copy_from_slice(&region[at..at + 2]);
+            u16::from_le_bytes(b)
+        };
         if word4(off) != RECORD_MAGIC {
             break;
         }
@@ -216,7 +227,11 @@ fn scan_page(
         let method_len = word2(off + 6) as usize;
         let cfg_len = word2(off + 8) as usize;
         let nbytes = word4(off + 12) as usize;
-        let checksum = u64::from_le_bytes(region[off + 16..off + 24].try_into().unwrap());
+        let checksum = {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(&region[off + 16..off + 24]);
+            u64::from_le_bytes(b)
+        };
         let total = HEADER_BYTES + id_len + method_len + cfg_len + nbytes;
         if off + total > region.len() {
             break; // torn write: the record was never fully persisted
@@ -538,13 +553,15 @@ impl PagedStore {
     }
 
     fn compact_locked(&self, g: &mut Inner) -> Result<()> {
-        let mut ids: Vec<String> = g.index.keys().cloned().collect();
-        ids.sort();
-        let mut recs = Vec::with_capacity(ids.len());
-        for id in &ids {
-            let meta = g.index.get(id).cloned().expect("id taken from the index");
-            let payload = self.read_payload(g, id, &meta)?;
-            recs.push((id.clone(), meta, payload));
+        // Snapshot (id, meta) pairs up front: `read_payload` needs `g`
+        // mutably (page cache), so the index can't stay borrowed.
+        let mut metas: Vec<(String, RecordMeta)> =
+            g.index.iter().map(|(id, meta)| (id.clone(), meta.clone())).collect();
+        metas.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut recs = Vec::with_capacity(metas.len());
+        for (id, meta) in metas {
+            let payload = self.read_payload(g, &id, &meta)?;
+            recs.push((id, meta, payload));
         }
 
         let tmp = self.cfg.path.with_extension("compact");

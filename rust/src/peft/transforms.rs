@@ -307,6 +307,7 @@ pub(crate) fn matmul_par(
     debug_assert_eq!(out.len(), d * m);
     let ptr = SendPtr::new(out.as_mut_ptr());
     parallel_for_chunks_opt(threads, d, 16, |r0, r1| {
+        ptr.claim(r0 * m, (r1 - r0) * m);
         for i in r0..r1 {
             let wrow = &w[i * f..(i + 1) * f];
             // SAFETY: workers receive disjoint row ranges of `out`.
@@ -416,6 +417,7 @@ pub fn matmul_tiled_par(
     debug_assert_eq!(out.len(), d * m);
     let ptr = SendPtr::new(out.as_mut_ptr());
     parallel_for_chunks_opt(threads, d, GEMM_MR * 4, |r0, r1| {
+        ptr.claim(r0 * m, (r1 - r0) * m);
         // SAFETY: workers receive disjoint row ranges of `out`.
         unsafe { matmul_tiled_rows(w, x, f, m, ptr.get(), r0, r1) }
     });
@@ -440,6 +442,7 @@ pub(crate) fn matmul_t_par(
     debug_assert_eq!(out.len(), f * m);
     let ptr = SendPtr::new(out.as_mut_ptr());
     parallel_for_chunks_opt(threads, f, 16, |j0, j1| {
+        ptr.claim(j0 * m, (j1 - j0) * m);
         for j in j0..j1 {
             // SAFETY: workers receive disjoint row ranges of `out`.
             let orow = unsafe { std::slice::from_raw_parts_mut(ptr.get().add(j * m), m) };
@@ -531,6 +534,7 @@ pub fn ether_apply(u: &[f32], n: usize, w: &Mat) -> Mat {
     let mut out = Mat::zeros(d, f);
     let ptr = SendPtr::new(out.data.as_mut_ptr());
     parallel_for_chunks(f, COL_TILE, |c0, c1| {
+        ptr.claim_strided(c0, f, d, c1 - c0);
         // SAFETY: workers receive disjoint column ranges.
         unsafe { ether_cols(&uh, n, &w.data, f, ptr.get(), c0, c1) }
     });
@@ -549,6 +553,7 @@ pub fn ether_plus_left(u: &[f32], v: &[f32], n: usize, w: &Mat) -> Mat {
     let mut out = Mat::zeros(d, f);
     let ptr = SendPtr::new(out.data.as_mut_ptr());
     parallel_for_chunks(f, COL_TILE, |c0, c1| {
+        ptr.claim_strided(c0, f, d, c1 - c0);
         // SAFETY: workers receive disjoint column ranges.
         unsafe { ether_plus_left_cols(&uh, &vh, n, &w.data, f, ptr.get(), c0, c1) }
     });
@@ -567,6 +572,7 @@ pub fn ether_plus_right(w: &Mat, u: &[f32], v: &[f32], n: usize) -> Mat {
     let mut out = w.clone();
     let ptr = SendPtr::new(out.data.as_mut_ptr());
     parallel_for_chunks(d, ROW_TILE, |r0, r1| {
+        ptr.claim(r0 * f, (r1 - r0) * f);
         // SAFETY: workers receive disjoint row ranges of `out`.
         let rows =
             unsafe { std::slice::from_raw_parts_mut(ptr.get().add(r0 * f), (r1 - r0) * f) };
@@ -595,6 +601,7 @@ pub fn bdmm_scaled(blocks: &[Mat], w: &Mat, scale: Option<&[f32]>) -> Mat {
     let mut out = Mat::zeros(w.rows, f);
     let ptr = SendPtr::new(out.data.as_mut_ptr());
     parallel_for_chunks(f, COL_TILE, |c0, c1| {
+        ptr.claim_strided(c0, f, n * k, c1 - c0);
         // SAFETY: workers receive disjoint column ranges.
         unsafe { bdmm_cols(blocks, &w.data, f, scale, ptr.get(), c0, c1) }
     });

@@ -76,8 +76,13 @@ impl Mat {
         let out_ptr = SendPtr::new(out.data.as_mut_ptr());
         parallel_for_chunks(m, 16, |r0, r1| {
             let out_ptr = &out_ptr;
+            out_ptr.claim(r0 * n, (r1 - r0) * n);
             // i-k-j loop order: unit-stride inner loop over the output row.
             for i in r0..r1 {
+                // SAFETY: workers receive disjoint row ranges [r0, r1) of
+                // `out`, so the `i * n .. (i + 1) * n` slices never alias;
+                // the allocation is m×n and i < m, so the range is in
+                // bounds. `out` outlives the scoped pool sweep.
                 let orow = unsafe {
                     std::slice::from_raw_parts_mut(out_ptr.get().add(i * n), n)
                 };

@@ -425,19 +425,15 @@ impl HostTrainer {
     /// normalize internally — but the projection keeps Adam's geometry
     /// well-conditioned and makes "unit-norm reflection vectors" a
     /// checkable invariant (`rust/tests/train_host.rs`). A no-op for
-    /// non-reflection methods.
+    /// methods whose op declares no reflection fields
+    /// ([`crate::peft::op::TransformOp::unit_norm_fields`] — the op,
+    /// not a kind match
+    /// here, decides; `dispatch-discipline` keeps it that way).
     fn renormalize_reflections(&mut self) -> Result<()> {
-        let fields: &[&str] = match self.spec.kind {
-            MethodKind::Ether => &["u"],
-            MethodKind::EtherPlus => {
-                if self.spec.sides == 2 {
-                    &["u", "v", "ru", "rv"]
-                } else {
-                    &["u", "v"]
-                }
-            }
-            _ => return Ok(()),
-        };
+        let fields = registry::op_for(self.spec.kind).unit_norm_fields(&self.spec);
+        if fields.is_empty() {
+            return Ok(());
+        }
         let dims = self.cfg.dims;
         for (name, _, _) in adapted_matrices(dims.d_model, dims.d_ff) {
             for field in fields {

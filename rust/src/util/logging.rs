@@ -19,6 +19,10 @@ impl log::Log for Logger {
         if !self.enabled(record.metadata()) {
             return;
         }
+        // SAFETY: `START` is written exactly once, inside `INIT.call_once`
+        // in `init()`, before `log::set_logger` publishes this logger —
+        // so every read here happens-after that single write (Once
+        // synchronizes) and the static is never mutated again.
         let t = unsafe {
             #[allow(static_mut_refs)]
             START.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0)
@@ -42,6 +46,10 @@ static LOGGER: Logger = Logger;
 /// via the [`crate::util::runtimecfg::RuntimeCfg`] snapshot.
 pub fn init() {
     INIT.call_once(|| {
+        // SAFETY: the sole write to `START`, serialized by `Once` and
+        // sequenced before the logger becomes reachable via
+        // `log::set_logger` below; concurrent `init()` callers block on
+        // the same `Once`, so no aliased access is possible.
         unsafe {
             START = Some(Instant::now());
         }

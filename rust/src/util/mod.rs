@@ -15,4 +15,5 @@ pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod runtimecfg;
+pub mod sync;
 pub mod table;

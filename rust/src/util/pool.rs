@@ -7,6 +7,7 @@
 //! write disjoint (possibly interleaved) regions of one output buffer.
 
 use crate::util::runtimecfg::RuntimeCfg;
+use crate::util::sync::lock_clean;
 
 /// Number of worker threads to use (capped, `ETHER_THREADS`-overridable
 /// via the [`RuntimeCfg`] snapshot).
@@ -85,7 +86,7 @@ where
             out.iter_mut().map(std::sync::Mutex::new).collect();
         parallel_for_chunks(items.len(), 1, |a, b| {
             for i in a..b {
-                **slots[i].lock().unwrap() = f(&items[i]);
+                **lock_clean(&slots[i]) = f(&items[i]);
             }
         });
     }
@@ -131,7 +132,7 @@ where
                     if i >= n {
                         break;
                     }
-                    **slots[i].lock().unwrap() = Some(f(&items[i]));
+                    **lock_clean(&slots[i]) = Some(f(&items[i]));
                 });
             }
         });
@@ -149,19 +150,121 @@ where
 /// region no other worker touches, and the pointer must stay valid for
 /// the whole scope. Used by the tensor matmul and the blocked transform
 /// engine in `peft::transforms` / `peft::apply`.
-pub struct SendPtr<T>(*mut T);
+///
+/// Under `cfg(test)` or `--features checked-parallel` the wrapper also
+/// carries a **shadow-region tracker**: every worker registers the
+/// region it is about to write via [`SendPtr::claim`] /
+/// [`SendPtr::claim_strided`], and a claim overlapping any earlier
+/// claim on the same `SendPtr` panics immediately. Overlapping
+/// unsynchronized writes from sibling scope workers are a data race
+/// regardless of wall-clock timing, so claims accumulate for the
+/// wrapper's whole lifetime (one `SendPtr` per parallel sweep) rather
+/// than being released — this turns the parallel kernels' central
+/// soundness argument ("workers write disjoint regions") into a
+/// runtime-checked invariant instead of an assumed one. In release
+/// builds without the feature the claims compile to nothing.
+pub struct SendPtr<T> {
+    ptr: *mut T,
+    #[cfg(any(test, feature = "checked-parallel"))]
+    shadow: std::sync::Mutex<Vec<Region>>,
+}
 
-impl<T> SendPtr<T> {
-    pub fn new(ptr: *mut T) -> SendPtr<T> {
-        SendPtr(ptr)
+/// One claimed write region, in elements relative to the wrapped
+/// pointer: `count` runs of `width` contiguous elements, starting at
+/// `base` and `stride` apart — `{base + k·stride .. base + k·stride +
+/// width | k < count}`. A contiguous range is `count == 1`; a column
+/// tile of a `rows × row_stride` matrix is `count == rows`,
+/// `stride == row_stride`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Region {
+    pub base: usize,
+    pub stride: usize,
+    pub count: usize,
+    pub width: usize,
+}
+
+impl Region {
+    pub fn contiguous(start: usize, len: usize) -> Region {
+        Region { base: start, stride: 0, count: 1, width: len }
     }
 
-    pub fn get(&self) -> *mut T {
-        self.0
+    /// Do two regions share any element? Runs are visited in ascending
+    /// order on both sides (two-pointer sweep), so the check is
+    /// `O(count_a + count_b)`.
+    pub fn overlaps(&self, other: &Region) -> bool {
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < self.count && j < other.count {
+            let a0 = self.base + i * self.stride;
+            let b0 = other.base + j * other.stride;
+            if a0 < b0 + other.width && b0 < a0 + self.width {
+                return true;
+            }
+            if a0 + self.width <= b0 {
+                i += 1;
+            } else {
+                j += 1;
+            }
+        }
+        false
     }
 }
 
+impl<T> SendPtr<T> {
+    pub fn new(ptr: *mut T) -> SendPtr<T> {
+        SendPtr {
+            ptr,
+            #[cfg(any(test, feature = "checked-parallel"))]
+            shadow: std::sync::Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn get(&self) -> *mut T {
+        self.ptr
+    }
+
+    /// Claim the contiguous element range `[start, start + len)` for
+    /// the calling worker before writing it. Panics (under `test` /
+    /// `checked-parallel`) if the range overlaps any earlier claim on
+    /// this `SendPtr`; free otherwise.
+    pub fn claim(&self, start: usize, len: usize) {
+        self.claim_region(Region::contiguous(start, len));
+    }
+
+    /// Claim a strided region (see [`Region`]) — the shape column-tile
+    /// kernels write: `count` rows of `width` elements, `stride` apart.
+    pub fn claim_strided(&self, base: usize, stride: usize, count: usize, width: usize) {
+        self.claim_region(Region { base, stride, count, width });
+    }
+
+    #[cfg(any(test, feature = "checked-parallel"))]
+    fn claim_region(&self, region: Region) {
+        if region.width == 0 || region.count == 0 {
+            return;
+        }
+        let mut shadow = lock_clean(&self.shadow);
+        if let Some(prior) = shadow.iter().find(|r| r.overlaps(&region)) {
+            panic!(
+                "checked-parallel: overlapping SendPtr write regions — \
+                 new claim {region:?} overlaps earlier claim {prior:?}; \
+                 workers behind one SendPtr must write disjoint regions"
+            );
+        }
+        shadow.push(region);
+    }
+
+    #[cfg(not(any(test, feature = "checked-parallel")))]
+    #[inline(always)]
+    fn claim_region(&self, _region: Region) {}
+}
+
+// SAFETY: SendPtr only hands the raw pointer across scoped-thread
+// boundaries; the disjoint-write contract (documented above, asserted
+// by the shadow-region tracker under `checked-parallel`) is what makes
+// concurrent use sound, and `T: Send` keeps non-Send payloads out.
 unsafe impl<T: Send> Send for SendPtr<T> {}
+// SAFETY: sharing `&SendPtr` only exposes the pointer value plus the
+// internally-locked shadow tracker; all writes through it are governed
+// by the same disjoint-region contract as `Send` above.
 unsafe impl<T: Send> Sync for SendPtr<T> {}
 
 #[cfg(test)]
@@ -307,11 +410,49 @@ mod tests {
         let mut buf = vec![0u32; 64];
         let ptr = SendPtr::new(buf.as_mut_ptr());
         parallel_for_chunks(64, 4, |a, b| {
+            ptr.claim(a, b - a);
             for i in a..b {
                 // SAFETY: chunks are disjoint index ranges.
                 unsafe { *ptr.get().add(i) = i as u32 };
             }
         });
         assert!(buf.iter().enumerate().all(|(i, &v)| v == i as u32));
+    }
+
+    #[test]
+    fn region_overlap_cases() {
+        let c = Region::contiguous;
+        assert!(c(0, 4).overlaps(&c(3, 4)));
+        assert!(!c(0, 4).overlaps(&c(4, 4)));
+        assert!(c(0, 100).overlaps(&c(50, 1)));
+        // Column tiles of an 8-wide matrix: [0,2) vs [2,4) never touch,
+        // [0,3) vs [2,4) share column 2.
+        let t1 = Region { base: 0, stride: 8, count: 4, width: 2 };
+        let t2 = Region { base: 2, stride: 8, count: 4, width: 2 };
+        let t3 = Region { base: 0, stride: 8, count: 4, width: 3 };
+        assert!(!t1.overlaps(&t2));
+        assert!(t3.overlaps(&t2));
+        // A row range intersects a column tile that crosses it.
+        assert!(c(8, 8).overlaps(&t2));
+        assert!(!c(32, 8).overlaps(&t2));
+    }
+
+    #[test]
+    fn shadow_tracker_catches_overlap() {
+        let mut buf = vec![0u32; 16];
+        let ptr = SendPtr::new(buf.as_mut_ptr());
+        ptr.claim(0, 8);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            ptr.claim(7, 2);
+        }))
+        .expect_err("overlapping claim must panic under cfg(test)");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("overlapping SendPtr write regions"), "msg: {msg}");
+        // Disjoint claims keep working after the rejected one.
+        ptr.claim(8, 8);
     }
 }

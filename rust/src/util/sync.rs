@@ -1,0 +1,53 @@
+//! Poison-tolerant locking — the one approved home for recovering a
+//! poisoned mutex guard (the `lock-poisoning` lint confines
+//! `.lock().unwrap()` to this module).
+//!
+//! `Mutex::lock().unwrap()` turns a single panicked worker into a
+//! poisoned mutex that panics **every later accessor**: one bad request
+//! on one dispatch thread would wedge a whole engine shard. Every mutex
+//! in this crate guards state that stays self-consistent under
+//! mid-update panics — monotonic counters, LRU cache maps, first-error
+//! slots, write-once result cells — so the correct response to
+//! poisoning is to take the guard and keep serving, not to propagate
+//! the panic. [`lock_clean`] is that policy, in one audited place.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+///
+/// Use this instead of `.lock().unwrap()` everywhere outside tests.
+/// If the guarded data can actually be left half-updated by a panic,
+/// don't reach for this — redesign the critical section (or justify a
+/// raw unwrap with `// lint:allow(lock-poisoning): <why>`).
+pub fn lock_clean<T: ?Sized>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn locks_normally() {
+        let m = Mutex::new(41);
+        *lock_clean(&m) += 1;
+        assert_eq!(*lock_clean(&m), 42);
+    }
+
+    #[test]
+    fn recovers_after_poison() {
+        let m = Mutex::new(7);
+        // Poison the mutex by panicking while holding the guard.
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap();
+            panic!("poison it");
+        }));
+        assert!(r.is_err());
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        // lock_clean still hands out the guard, data intact.
+        assert_eq!(*lock_clean(&m), 7);
+        *lock_clean(&m) = 8;
+        assert_eq!(*lock_clean(&m), 8);
+    }
+}

@@ -1,0 +1,264 @@
+//! Property fixtures for every `ether-lint` rule: each rule gets a
+//! violating fixture (must fire) and a conforming fixture (must stay
+//! quiet), the allow-pragma contract is locked in, and — the
+//! acceptance gate — the repo itself must lint clean.
+//!
+//! Fixture sources are string literals, which the lint's own scanner
+//! strips from code before matching, so this file never trips the rules
+//! it tests.
+
+use std::path::Path;
+
+use ether_lint::{lint_repo, lint_source, Finding, FLEET_SCHEMA, RULES, SCENARIO_SCHEMA};
+
+fn rules_fired(findings: &[Finding]) -> Vec<&'static str> {
+    let mut rules: Vec<&'static str> = findings.iter().map(|f| f.rule).collect();
+    rules.sort();
+    rules.dedup();
+    rules
+}
+
+// ---------------------------------------------------------------------------
+// env-discipline
+// ---------------------------------------------------------------------------
+
+#[test]
+fn env_discipline_fires_outside_runtimecfg() {
+    let bad = "pub fn threads() -> usize {\n    std::env::var(\"ETHER_THREADS\").ok().and_then(|v| v.parse().ok()).unwrap_or(1)\n}\n";
+    let f = lint_source("rust/src/coordinator/engine.rs", bad);
+    assert_eq!(rules_fired(&f), vec!["env-discipline"], "{f:?}");
+    assert_eq!(f[0].line, 2);
+}
+
+#[test]
+fn env_discipline_allows_runtimecfg_and_comments() {
+    let bad = "let t = std::env::var(\"ETHER_THREADS\");\n";
+    assert!(lint_source("rust/src/util/runtimecfg.rs", bad).is_empty());
+    // Mentions in comments and strings never fire.
+    let quiet = "// reads env::var via RuntimeCfg\nlet s = \"env::var\";\n";
+    assert!(lint_source("rust/src/coordinator/engine.rs", quiet).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// dispatch-discipline
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dispatch_discipline_fires_on_scattered_match() {
+    let bad = "fn norm_fields(k: MethodKind) -> &'static [&'static str] {\n\
+               \x20   match k {\n\
+               \x20       MethodKind::Ether => &[\"u\"],\n\
+               \x20       MethodKind::EtherPlus => &[\"u\", \"v\"],\n\
+               \x20       _ => &[],\n\
+               \x20   }\n\
+               }\n";
+    let f = lint_source("rust/src/train/host.rs", bad);
+    assert_eq!(rules_fired(&f), vec!["dispatch-discipline"], "{f:?}");
+    assert_eq!(f[0].line, 2);
+}
+
+#[test]
+fn dispatch_discipline_allows_registry_and_single_arm() {
+    let registry_match = "match kind {\n    MethodKind::Ether => &EtherOp,\n    MethodKind::Lora => &LoraOp,\n}\n";
+    assert!(lint_source("rust/src/peft/registry.rs", registry_match).is_empty());
+    assert!(lint_source("rust/src/peft/op.rs", registry_match).is_empty());
+    // One arm (an equality-style check) is not dispatch.
+    let single = "match kind {\n    MethodKind::Ether => true,\n    _ => false,\n}\n";
+    assert!(lint_source("rust/src/train/host.rs", single).is_empty());
+    // Outside rust/src (tests, benches) the rule does not apply.
+    let bad = "match k {\n    MethodKind::Ether => 1,\n    MethodKind::Lora => 2,\n}\n";
+    assert!(lint_source("rust/tests/op_registry_props.rs", bad).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// safety-comments
+// ---------------------------------------------------------------------------
+
+#[test]
+fn safety_comments_fires_on_bare_unsafe() {
+    let bad = "fn f(p: *mut f32) {\n    unsafe { *p = 1.0; }\n}\n";
+    let f = lint_source("rust/src/tensor/mod.rs", bad);
+    assert_eq!(rules_fired(&f), vec!["safety-comments"], "{f:?}");
+    assert_eq!(f[0].line, 2);
+}
+
+#[test]
+fn safety_comments_accepts_justifications() {
+    let block = "fn f(p: *mut f32) {\n    // SAFETY: p points at a live, exclusively-owned f32.\n    unsafe { *p = 1.0; }\n}\n";
+    assert!(lint_source("rust/src/tensor/mod.rs", block).is_empty());
+    // `unsafe fn` takes a `# Safety` doc section instead.
+    let item = "/// Writes through `p`.\n///\n/// # Safety\n/// `p` must be valid for writes.\nunsafe fn poke(p: *mut f32) {\n    *p = 1.0;\n}\n";
+    assert!(lint_source("rust/src/tensor/mod.rs", item).is_empty());
+    // The word in comments/strings is not an unsafe site.
+    let quiet = "// unsafe is spelled here\nlet s = \"unsafe\";\n";
+    assert!(lint_source("rust/src/tensor/mod.rs", quiet).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// no-panic-paths
+// ---------------------------------------------------------------------------
+
+#[test]
+fn no_panic_paths_fires_in_store_error_paths() {
+    let bad = "fn read(&self) -> Vec<u8> {\n    self.page().unwrap()\n}\n";
+    let f = lint_source("rust/src/peft/store.rs", bad);
+    assert_eq!(rules_fired(&f), vec!["no-panic-paths"], "{f:?}");
+    for needle in ["expect", "panic!", "unreachable!"] {
+        let bad = format!("fn f() {{\n    x.{needle}(\"boom\");\n}}\n");
+        let bad = bad.replace("x.panic!", "panic!").replace("x.unreachable!", "unreachable!");
+        let f = lint_source("rust/src/coordinator/fleet.rs", &bad);
+        assert!(
+            f.iter().any(|x| x.rule == "no-panic-paths"),
+            "{needle} should fire: {f:?}"
+        );
+    }
+}
+
+#[test]
+fn no_panic_paths_skips_tests_and_other_files() {
+    // #[cfg(test)] regions are exempt.
+    let test_mod = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        open().unwrap();\n    }\n}\n";
+    assert!(lint_source("rust/src/peft/store.rs", test_mod).is_empty());
+    // Files outside the panic-free set are not covered by this rule.
+    let bad = "fn f() {\n    x.unwrap();\n}\n";
+    assert!(lint_source("rust/src/peft/apply.rs", bad).is_empty());
+    // `.lock().unwrap()` belongs to lock-poisoning, not this rule.
+    let lock = "fn f(&self) {\n    let g = self.m.lock().unwrap();\n}\n";
+    let f = lint_source("rust/src/coordinator/server.rs", lock);
+    assert_eq!(rules_fired(&f), vec!["lock-poisoning"], "{f:?}");
+}
+
+// ---------------------------------------------------------------------------
+// lock-poisoning
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lock_poisoning_fires_outside_sync_home() {
+    let bad = "fn f(&self) {\n    *self.stats.lock().unwrap() += 1;\n}\n";
+    let f = lint_source("rust/src/coordinator/engine.rs", bad);
+    assert_eq!(rules_fired(&f), vec!["lock-poisoning"], "{f:?}");
+    let expect = "fn f(&self) {\n    self.m.lock().expect(\"poisoned\");\n}\n";
+    let f = lint_source("rust/src/coordinator/engine.rs", expect);
+    assert_eq!(rules_fired(&f), vec!["lock-poisoning"], "{f:?}");
+}
+
+#[test]
+fn lock_poisoning_allows_sync_home_and_lock_clean() {
+    let recovery = "pub fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {\n    m.lock().unwrap_or_else(|p| p.into_inner())\n}\n";
+    assert!(lint_source("rust/src/util/sync.rs", recovery).is_empty());
+    let clean = "fn f(&self) {\n    *lock_clean(&self.stats) += 1;\n}\n";
+    assert!(lint_source("rust/src/coordinator/engine.rs", clean).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// bench-schema
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bench_schema_fires_on_pinned_and_near_miss_keys() {
+    // Hand-rolling an exact pinned key forks the schema's source of truth.
+    let exact = "let row = vec![(\"p95_ms\", json_f64(p95))];\n";
+    let f = lint_source("rust/benches/serving.rs", exact);
+    assert_eq!(rules_fired(&f), vec!["bench-schema"], "{f:?}");
+    // A case/underscore near-miss is schema drift.
+    let near = "let row = vec![(\"P95_Ms\", json_f64(p95))];\n";
+    let f = lint_source("rust/benches/serving.rs", near);
+    assert_eq!(rules_fired(&f), vec!["bench-schema"], "{f:?}");
+    assert!(f[0].msg.contains("p95_ms"), "{}", f[0].msg);
+}
+
+#[test]
+fn bench_schema_allows_novel_keys_and_non_benches() {
+    let novel = "let row = vec![(\"tile_width\", json_usize(w))];\n";
+    assert!(lint_source("rust/benches/serving.rs", novel).is_empty());
+    // The implementations themselves (rust/src) are exempt — they ARE
+    // the schema; drift there is caught by the cross-file check.
+    let exact = "out.push((\"p95_ms\", json_f64(p95)));\n";
+    assert!(lint_source("rust/src/coordinator/server.rs", exact).is_empty());
+}
+
+#[test]
+fn pinned_schemas_have_no_internal_collisions() {
+    // The two pinned lists must stay disjoint and duplicate-free, or
+    // the drift check loses its meaning.
+    let mut all: Vec<&str> = SCENARIO_SCHEMA.iter().chain(FLEET_SCHEMA.iter()).copied().collect();
+    let n = all.len();
+    all.sort();
+    all.dedup();
+    assert_eq!(all.len(), n, "pinned schema lists overlap");
+}
+
+// ---------------------------------------------------------------------------
+// pragmas
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pragma_with_reason_suppresses_on_line_or_above() {
+    let above = "// lint:allow(env-discipline): fixture exercises the raw read\nlet t = std::env::var(\"X\");\n";
+    assert!(lint_source("rust/src/a.rs", above).is_empty());
+    let inline = "let t = std::env::var(\"X\"); // lint:allow(env-discipline): fixture\n";
+    assert!(lint_source("rust/src/a.rs", inline).is_empty());
+    // Two lines above is out of range: the finding survives.
+    let far = "// lint:allow(env-discipline): too far away\n\nlet t = std::env::var(\"X\");\n";
+    let f = lint_source("rust/src/a.rs", far);
+    assert!(f.iter().any(|x| x.rule == "env-discipline"), "{f:?}");
+}
+
+#[test]
+fn pragma_requires_reason_and_known_rule() {
+    let no_reason = "let t = std::env::var(\"X\"); // lint:allow(env-discipline)\n";
+    let f = lint_source("rust/src/a.rs", no_reason);
+    assert_eq!(rules_fired(&f), vec!["env-discipline", "pragma"], "{f:?}");
+    let unknown = "// lint:allow(made-up-rule): whatever\n";
+    let f = lint_source("rust/src/a.rs", unknown);
+    assert_eq!(rules_fired(&f), vec!["pragma"], "{f:?}");
+    // The pragma rule guards itself.
+    let meta = "// lint:allow(pragma): nope\n";
+    let f = lint_source("rust/src/a.rs", meta);
+    assert_eq!(rules_fired(&f), vec!["pragma"], "{f:?}");
+}
+
+#[test]
+fn rule_names_are_stable() {
+    // docs/static-analysis.md documents these exact names; renames must
+    // be deliberate.
+    assert_eq!(
+        RULES,
+        &[
+            "env-discipline",
+            "dispatch-discipline",
+            "safety-comments",
+            "no-panic-paths",
+            "lock-poisoning",
+            "bench-schema",
+            "pragma",
+        ]
+    );
+}
+
+// ---------------------------------------------------------------------------
+// The acceptance gate: the repo itself lints clean.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn repo_lints_clean() {
+    let root = ether_lint::find_root(Path::new(env!("CARGO_MANIFEST_DIR")))
+        .expect("repo root with rust/src, rust/tests, rust/benches");
+    let report = lint_repo(&root).expect("lint walk");
+    assert!(report.files_scanned > 30, "scanned {} files", report.files_scanned);
+    assert!(
+        report.findings.is_empty(),
+        "repo must lint clean; findings:\n{}",
+        report
+            .findings
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    // Every unsafe site in the repo is justified (the inventory backs
+    // the CI artifact).
+    let unjustified: Vec<_> =
+        report.unsafe_sites.iter().filter(|s| s.justification.is_none()).collect();
+    assert!(unjustified.is_empty(), "unjustified unsafe sites: {unjustified:?}");
+}

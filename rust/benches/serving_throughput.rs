@@ -22,6 +22,13 @@
 //! `T(W)·X` path and the per-vector oracle, with `batched_speedup`
 //! (asserted ≥1.5× at mean batch ≥8), `parity_max_abs` (asserted
 //! ≤1e-5), and byte-identical responses asserted in-bench.
+//!
+//! The `stacked+merged` / `stacked+otf` pair is the adapter-composition
+//! record: every request names a `+`-joined two-member stack, replayed
+//! through the composed-merged cache (one folded buffer per stack id)
+//! and the composed-on-the-fly chain (zero merged buffers, asserted via
+//! the shared merge counter), with composed-merged vs composed-on-the-fly
+//! parity asserted ≤ 1e-5 in-bench (`parity_max_abs`).
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -303,6 +310,141 @@ fn run_batched_vs_pervector(quick: bool) -> Vec<Value> {
     rows
 }
 
+/// Composed-adapter rows: the `stacked` scenario (every request names a
+/// `+`-joined two-member stack) replayed through the composed-merged
+/// strategy (whole stack folded into one cached buffer, keyed by the
+/// stack id) and the composed-on-the-fly strategy (chained activation
+/// sweeps, zero merged buffers). Asserts in-bench that the two
+/// executions are the same linear map — composed-merged weights times a
+/// probe vs composed-on-the-fly activations, ≤ 1e-5 — and returns the
+/// `stacked+merged` / `stacked+otf` BENCH rows with `parity_max_abs`.
+fn run_stacked(
+    n_requests: usize,
+    base: &[f32],
+    dims: ModelDims,
+    workers: usize,
+) -> Vec<Value> {
+    let layout = base_layout_for(dims);
+    let scenario = Scenario::catalog()[5];
+    assert_eq!(scenario.name(), "stacked");
+    let arrivals = loadgen::generate(&LoadGenCfg {
+        n_adapters: N_ADAPTERS,
+        n_requests,
+        seed: 99,
+        scenario,
+        ..Default::default()
+    });
+    let cfg = SchedulerCfg {
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+        quantum: 4,
+        max_queue_per_adapter: 16,
+        max_pending: 64,
+    };
+    let merger = Arc::new(MergeEngine::new(dims, base.to_vec(), &layout, 4, 4).unwrap());
+
+    let run = |label: &str, kind: StrategyKind| {
+        let mut registry = AdapterRegistry::new();
+        registry.register_fleet(N_ADAPTERS, "ether_n4", "host", dims, 42).unwrap();
+        let mut server = Server::new(registry, cfg);
+        let engine = AdapterEngine::host(merger.clone(), ExecutionPolicy::Static(kind));
+        let t0 = Instant::now();
+        let mut last_at = None;
+        for (i, a) in arrivals.iter().enumerate() {
+            let target = t0 + a.at;
+            let now = Instant::now();
+            if target > now {
+                std::thread::sleep(target - now);
+            }
+            let _ = server.submit(Request {
+                id: i as u64,
+                adapter: scenario.request_adapter_id(a.adapter, N_ADAPTERS),
+                prompt: a.prompt.clone(),
+                max_new: a.max_new,
+                enqueued: Instant::now(),
+            });
+            if last_at != Some(a.at) {
+                last_at = Some(a.at);
+                server.pump_pool(&engine, Instant::now(), workers, |_| {}).unwrap();
+            }
+        }
+        let late = Instant::now() + cfg.max_wait + Duration::from_millis(1);
+        server.pump_pool(&engine, late, workers, |_| {}).unwrap();
+        let dt = t0.elapsed().as_secs_f64().max(1e-9);
+        let snap = server.snapshot();
+        assert_eq!(
+            snap.server.served + snap.sched.shed(),
+            n_requests as u64,
+            "{label}: every offered request must be served or shed"
+        );
+        (snap, dt)
+    };
+
+    let (snap_m, dt_m) = run("stacked+merged", StrategyKind::Merged);
+    assert!(snap_m.server.served_merged > 0, "stacked+merged must serve composed batches");
+    assert!(snap_m.server.merges > 0, "stacked+merged must fold stacks into cached buffers");
+    let merges_after_merged = snap_m.server.merges;
+    let (snap_o, dt_o) = run("stacked+otf", StrategyKind::OnTheFly);
+    assert!(snap_o.server.served_onthefly > 0, "stacked+otf must serve merge-free");
+    assert_eq!(
+        snap_o.server.merges, merges_after_merged,
+        "stacked+otf must not trigger a single composed merge"
+    );
+
+    // In-bench composed parity: the folded stack's weights times a probe
+    // vs the chained activation sweeps, on a stack from the trace.
+    let entries = {
+        let mut registry = AdapterRegistry::new();
+        registry.register_fleet(N_ADAPTERS, "ether_n4", "host", dims, 42).unwrap();
+        registry
+            .get_stack(&scenario.request_adapter_id(arrivals[0].adapter, N_ADAPTERS))
+            .unwrap()
+    };
+    assert_eq!(entries.len(), 2, "the stacked scenario composes two members");
+    let m = 4usize;
+    let probe = merger.activation_probe(m);
+    let y = merger.activations_with_stack(&entries, &probe, m).unwrap();
+    let merged = merger.merged_stack(&entries).unwrap();
+    let mut parity_max_abs = 0.0f32;
+    let mut pos = 0usize;
+    for it in &merger.plan().items {
+        let slice = &merged[it.offset..it.offset + it.rows * it.cols];
+        for i in 0..it.rows {
+            for c in 0..m {
+                let mut acc = 0.0f64;
+                for j in 0..it.cols {
+                    acc += slice[i * it.cols + j] as f64 * probe[j * m + c] as f64;
+                }
+                parity_max_abs = parity_max_abs.max((y[pos + i * m + c] - acc as f32).abs());
+            }
+        }
+        pos += it.rows * m;
+    }
+    assert!(
+        parity_max_abs <= 1e-5,
+        "stacked merged-vs-onthefly parity {parity_max_abs} > 1e-5"
+    );
+    println!(
+        "stacked composed parity: merged-vs-otf {parity_max_abs:.1e} | {:.1} vs {:.1} req/s",
+        snap_m.req_per_s(dt_m),
+        snap_o.req_per_s(dt_o),
+    );
+
+    let mut rows = vec![];
+    for (label, snap, dt) in
+        [("stacked+merged", &snap_m, dt_m), ("stacked+otf", &snap_o, dt_o)]
+    {
+        print_row(label, snap, dt);
+        let mut row = snap.scenario_json(label, dt);
+        if let Value::Obj(fields) = &mut row {
+            fields.insert("parity_max_abs".to_string(), Value::num(parity_max_abs as f64));
+            fields.insert("stack_depth".to_string(), Value::num(2.0));
+        }
+        rows.push(row);
+    }
+    rows
+}
+
 /// The fleet-scale scenario: a zipf-1M trace over a store-backed,
 /// provisioner-fed registry served by the sharded fleet. Asserts the
 /// paging path actually ran (page-ins > 0) and that steady-state
@@ -553,6 +695,10 @@ fn main() {
         print_row(&label, &snap, dt);
         rows.push(snap.scenario_json(&label, dt));
     }
+
+    // Composed-adapter rows: the stacked trace through composed-merged
+    // and composed-on-the-fly, with the in-bench ≤1e-5 parity assert.
+    rows.extend(run_stacked(n_requests, &base, dims, workers));
 
     // Batched-vs-per-vector GEMM rows (compute-bound, own dims): the
     // tentpole speedup record, with byte-identity and parity asserted.

@@ -6,7 +6,7 @@
 //! | rule | invariant |
 //! |---|---|
 //! | `env-discipline` | all env reads go through `util::runtimecfg` |
-//! | `dispatch-discipline` | per-method `MethodKind` matches live in `peft/registry.rs` / `peft/op.rs` only |
+//! | `dispatch-discipline` | per-method `MethodKind` matches live in `peft/registry.rs` / `peft/op.rs` only; composition hooks (`act_*`) called from `peft/apply.rs` only |
 //! | `safety-comments` | every `unsafe` site carries a `SAFETY:` / `# Safety` justification |
 //! | `no-panic-paths` | store/fleet/server error paths return `Err`, never panic |
 //! | `lock-poisoning` | `.lock().unwrap()` only via the `util::sync::lock_clean` wrapper |
@@ -140,6 +140,21 @@ mod tests {
             .iter()
             .any(|f| f.rule == "env-discipline"));
         assert!(lint_source("rust/src/util/runtimecfg.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn composition_hooks_are_calls_only_in_apply() {
+        // A call site (`.act_left_into(`) outside peft/apply.rs fires;
+        // the same text under apply.rs or the dispatch homes does not,
+        // and a *definition* never counts as a call.
+        let call = "fn f() { op.act_left_into(spec, &p, &y, shape, &mut t).unwrap(); }\n";
+        assert!(lint_source("rust/src/coordinator/engine.rs", call)
+            .iter()
+            .any(|f| f.rule == "dispatch-discipline"));
+        assert!(lint_source("rust/src/peft/apply.rs", call).is_empty());
+        assert!(lint_source("rust/src/peft/op.rs", call).is_empty());
+        let def = "fn act_left_into(&self, spec: &MethodSpec) {}\n";
+        assert!(lint_source("rust/src/coordinator/engine.rs", def).is_empty());
     }
 
     #[test]

@@ -107,6 +107,17 @@ const LOCK_HOME: &str = "util/sync.rs";
 /// (`dispatch-discipline`): the registry itself and the trait impls.
 const DISPATCH_HOMES: &[&str] = &["peft/registry.rs", "peft/op.rs"];
 
+/// The affine composition hooks (`dispatch-discipline`): ops *define*
+/// them (in `peft/op.rs`), but only the composed sweeps in
+/// `peft/apply.rs` may *call* them. Chaining `L·(…)·R + Δ` factors
+/// anywhere else forks the composition-order convention
+/// (`execute_*_stack` applies member 0 innermost) into a second place
+/// where it can silently diverge.
+const COMPOSITION_HOOKS: &[&str] = &["act_right_into", "act_left_into", "act_delta_acc"];
+
+/// The one module allowed to call the composition hooks.
+const COMPOSITION_HOME: &str = "peft/apply.rs";
+
 fn has_suffix(path: &str, suffix: &str) -> bool {
     path.ends_with(suffix)
 }
@@ -250,10 +261,15 @@ fn env_discipline(rel_path: &str, sf: &SourceFile, out: &mut Vec<Finding>) {
 /// Per-method dispatch is confined to `peft/registry.rs` (the single
 /// `op_for` match) and the trait impls in `peft/op.rs`. A `match` with
 /// two or more `MethodKind::` arms anywhere else reintroduces the
-/// scattered dispatch PR 2 removed.
+/// scattered dispatch PR 2 removed. The same rule confines *calls* to
+/// the affine composition hooks to `peft/apply.rs`: composition-order
+/// logic lives in the composed sweeps, nowhere else.
 fn dispatch_discipline(rel_path: &str, sf: &SourceFile, out: &mut Vec<Finding>) {
     if !in_tree(rel_path, "rust/src/") || DISPATCH_HOMES.iter().any(|h| has_suffix(rel_path, h)) {
         return;
+    }
+    if !has_suffix(rel_path, COMPOSITION_HOME) {
+        composition_hook_calls(rel_path, sf, out);
     }
     for (idx, line) in sf.lines.iter().enumerate() {
         let code = &line.code;
@@ -303,6 +319,32 @@ fn dispatch_discipline(rel_path: &str, sf: &SourceFile, out: &mut Vec<Finding>) 
                         arms.join(", ")
                     ),
                 });
+            }
+        }
+    }
+}
+
+/// Flag *call sites* of the composition hooks (`.act_right_into(` etc.,
+/// plus UFCS `TransformOp::act_…` / `Op::act_…` forms) outside
+/// `peft/apply.rs` and the dispatch homes. Definitions (`fn act_…`) are
+/// not calls and never match: a call is preceded by `.` or `::`.
+fn composition_hook_calls(rel_path: &str, sf: &SourceFile, out: &mut Vec<Finding>) {
+    for (idx, line) in sf.lines.iter().enumerate() {
+        for hook in COMPOSITION_HOOKS {
+            for at in word_occurrences(&line.code, hook) {
+                let before = line.code[..at].trim_end();
+                if before.ends_with('.') || before.ends_with("::") {
+                    out.push(Finding {
+                        file: rel_path.to_string(),
+                        line: idx + 1,
+                        rule: "dispatch-discipline",
+                        msg: format!(
+                            "`{hook}` called outside peft/apply.rs; composition-order \
+                             logic is confined to the composed sweeps \
+                             (MergePlan::execute_*_stack) — call those instead"
+                        ),
+                    });
+                }
             }
         }
     }

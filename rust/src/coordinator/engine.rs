@@ -45,6 +45,18 @@
 //! threshold — hot adapters get merged buffers, the cold tail is served
 //! merge-free. Promotions are sticky and counted
 //! ([`StrategyCounters::policy_promotions`]).
+//!
+//! # Composition stacks
+//!
+//! A request may name an ordered adapter stack (`"a+b+c"`): every host
+//! strategy serves it through [`ExecutionStrategy::generate_stack`] —
+//! merged folds `T_c(T_b(T_a(W)))` into one cached buffer keyed by the
+//! full stack id, swap rotates its single slot between whole stacks
+//! (reverse-order unmerge, whole-chain audit), and on-the-fly chains
+//! the ops' affine composition factors around one base GEMM with zero
+//! merged buffers. Policy and traffic are keyed by the full stack id
+//! (`"a+b"` earns promotion on its own traffic), and length-1 stacks
+//! take the singleton path bit-for-bit.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -52,7 +64,7 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::{anyhow, Result};
 
-use super::registry::{AdapterEntry, MergeEngine, MergedCache, SwapMode, SwapSlot};
+use super::registry::{join_stack_id, AdapterEntry, MergeEngine, MergedCache, SwapMode, SwapSlot};
 use crate::peft::precision::MergedBuf;
 use crate::runtime::engine::PjrtEngine;
 use crate::runtime::HostTensor;
@@ -122,6 +134,28 @@ pub trait ExecutionStrategy: Sync + Send {
         prompts: &[Vec<i32>],
         max_new: usize,
     ) -> Result<Vec<Vec<i32>>>;
+
+    /// Execute one batch for an ordered adapter *stack* (members applied
+    /// left to right: `[a, b]` serves `T_b(T_a(W))`). Default: a
+    /// length-1 stack delegates to [`ExecutionStrategy::generate`] —
+    /// existing strategies (and mocks) keep working unchanged — and
+    /// longer stacks are rejected; every composition-capable strategy
+    /// overrides this.
+    fn generate_stack(
+        &self,
+        stack: &[AdapterEntry],
+        prompts: &[Vec<i32>],
+        max_new: usize,
+    ) -> Result<Vec<Vec<i32>>> {
+        match stack {
+            [single] => self.generate(single, prompts, max_new),
+            [] => Err(anyhow!("adapter stack must be non-empty")),
+            _ => Err(anyhow!(
+                "strategy {:?} cannot serve composed adapter stacks",
+                self.name()
+            )),
+        }
+    }
 
     /// Cumulative (hits, misses) of any merged-weight cache behind this
     /// strategy — mirrored into `ServerStats` after each pump.
@@ -193,6 +227,18 @@ impl ExecutionStrategy for MergedCacheStrategy {
         Ok(echo_tagged(prompts, tag))
     }
 
+    /// Composed-merged: the whole stack folds into one cached buffer
+    /// keyed by the stack id ([`MergeEngine::merged_stack`]).
+    fn generate_stack(
+        &self,
+        stack: &[AdapterEntry],
+        prompts: &[Vec<i32>],
+        _max_new: usize,
+    ) -> Result<Vec<Vec<i32>>> {
+        let tag = weights_fingerprint(&self.merger.merged_stack(stack)?);
+        Ok(echo_tagged(prompts, tag))
+    }
+
     fn merge_stats(&self) -> (u64, u64) {
         self.merger.cache_stats()
     }
@@ -236,6 +282,21 @@ impl ExecutionStrategy for InvolutionSwapStrategy {
     ) -> Result<Vec<Vec<i32>>> {
         let mut slot = lock_clean(&self.slot);
         self.merger.swap_into(&mut slot, adapter, self.mode)?;
+        let tag = weights_fingerprint(slot.weights());
+        Ok(echo_tagged(prompts, tag))
+    }
+
+    /// Composed swap: the single slot rotates between whole stacks
+    /// ([`MergeEngine::swap_into_stack`] — the resident composition is
+    /// unmerged in strict reverse order, audit covering the full chain).
+    fn generate_stack(
+        &self,
+        stack: &[AdapterEntry],
+        prompts: &[Vec<i32>],
+        _max_new: usize,
+    ) -> Result<Vec<Vec<i32>>> {
+        let mut slot = lock_clean(&self.slot);
+        self.merger.swap_into_stack(&mut slot, stack, self.mode)?;
         let tag = weights_fingerprint(slot.weights());
         Ok(echo_tagged(prompts, tag))
     }
@@ -311,6 +372,42 @@ impl ExecutionStrategy for OnTheFlyStrategy {
             for c in 0..m {
                 let xc: Vec<f32> = (0..cols).map(|j| probe[j * m + c]).collect();
                 let y = self.merger.activations_with(adapter, &xc, 1)?;
+                tags.push(weights_fingerprint(&y));
+            }
+            tags
+        };
+        Ok(prompts
+            .iter()
+            .zip(&tags)
+            .map(|(p, &t)| {
+                let mut o = p.clone();
+                o.push(t);
+                o
+            })
+            .collect())
+    }
+
+    /// Composed-on-the-fly: the stack's affine factors chain around one
+    /// base GEMM per work item with **zero** merged buffers, whatever
+    /// the stack length ([`MergeEngine::activations_with_stack`]). The
+    /// oracle flavour runs one `m = 1` composed sweep per request.
+    fn generate_stack(
+        &self,
+        stack: &[AdapterEntry],
+        prompts: &[Vec<i32>],
+        _max_new: usize,
+    ) -> Result<Vec<Vec<i32>>> {
+        let m = prompts.len().max(1);
+        let probe = self.merger.activation_probe(m);
+        let tags: Vec<i32> = if self.batched {
+            let y = self.merger.activations_with_stack(stack, &probe, m)?;
+            (0..m).map(|c| column_fingerprint(&y, m, c)).collect()
+        } else {
+            let cols = self.merger.plan().max_item_cols();
+            let mut tags = Vec::with_capacity(m);
+            for c in 0..m {
+                let xc: Vec<f32> = (0..cols).map(|j| probe[j * m + c]).collect();
+                let y = self.merger.activations_with_stack(stack, &xc, 1)?;
                 tags.push(weights_fingerprint(&y));
             }
             tags
@@ -732,6 +829,36 @@ impl ExecutionStrategy for AdapterEngine<'_> {
         Ok(out)
     }
 
+    /// Route a composed batch: the policy decision (and the traffic
+    /// counters feeding it) is keyed by the **full stack id** — `"a+b"`
+    /// earns its merged buffer on its own traffic, independent of how
+    /// hot `"a"` or `"b"` are alone. A length-1 stack takes the plain
+    /// [`AdapterEngine::generate`] path bit-for-bit (same leaf calls,
+    /// same counters), so singleton fingerprints are untouched.
+    fn generate_stack(
+        &self,
+        stack: &[AdapterEntry],
+        prompts: &[Vec<i32>],
+        max_new: usize,
+    ) -> Result<Vec<Vec<i32>>> {
+        match stack {
+            [] => return Err(anyhow!("adapter stack must be non-empty")),
+            [single] => return self.generate(single, prompts, max_new),
+            _ => {}
+        }
+        let ids: Vec<&str> = stack.iter().map(|e| e.id.as_str()).collect();
+        let stack_id = join_stack_id(&ids);
+        let kind = self.strategy_for(&stack_id);
+        let out = self.leaf(kind)?.generate_stack(stack, prompts, max_new)?;
+        let counter = match kind {
+            StrategyKind::Merged => &self.served_merged,
+            StrategyKind::Swap => &self.served_swap,
+            StrategyKind::OnTheFly => &self.served_onthefly,
+        };
+        counter.fetch_add(prompts.len() as u64, Ordering::SeqCst);
+        Ok(out)
+    }
+
     fn merge_stats(&self) -> (u64, u64) {
         if let Some(m) = &self.merged {
             return m.merge_stats();
@@ -872,6 +999,84 @@ mod tests {
         assert_eq!(c.served_onthefly, 3);
         // Exactly the hot adapter's weights were merged.
         assert_eq!(merger.merges.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn stacked_batches_serve_through_every_host_strategy() {
+        let merger = merger_fixture();
+        let a = adapter(&merger, "a", 21);
+        let b = adapter(&merger, "b", 22);
+        let stack = [a.clone(), b.clone()];
+        let merged =
+            AdapterEngine::host(merger.clone(), ExecutionPolicy::Static(StrategyKind::Merged));
+        let swap = AdapterEngine::host_swap(merger.clone(), SwapMode::Involution);
+        let otf =
+            AdapterEngine::host(merger.clone(), ExecutionPolicy::Static(StrategyKind::OnTheFly));
+        let m_out = merged.generate_stack(&stack, &[vec![1]], 1).unwrap();
+        let s_out = swap.generate_stack(&stack, &[vec![1]], 1).unwrap();
+        // Merged fold and swap-slot fill hold the same composed weights
+        // (bit-identical buffers → identical fingerprints).
+        assert_eq!(m_out[0].last(), s_out[0].last());
+        // The composition is a different model than either member alone
+        // or the reversed order.
+        let solo = merged.generate_stack(std::slice::from_ref(&a), &[vec![1]], 1).unwrap();
+        let rev = merged.generate_stack(&[b.clone(), a.clone()], &[vec![1]], 1).unwrap();
+        assert_ne!(m_out[0].last(), solo[0].last());
+        assert_ne!(m_out[0].last(), rev[0].last());
+        // Singleton stacks delegate to the plain path (same tag).
+        let plain = merged.generate(&a, &[vec![1]], 1).unwrap();
+        assert_eq!(solo[0].last(), plain[0].last());
+        // On-the-fly serves the stack with zero merged buffers and is
+        // stable across calls.
+        let o1 = otf.generate_stack(&stack, &[vec![1]], 1).unwrap();
+        let o2 = otf.generate_stack(&stack, &[vec![9]], 1).unwrap();
+        assert_eq!(o1[0].last(), o2[0].last());
+        assert_eq!(otf.resident_weight_bytes(), 0);
+        assert_eq!(otf.strategy_counters().served_onthefly, 2);
+    }
+
+    #[test]
+    fn traffic_aware_policy_keys_stacks_by_full_stack_id() {
+        let merger = merger_fixture();
+        let engine = AdapterEngine::host(
+            merger.clone(),
+            ExecutionPolicy::TrafficAware { hot_threshold: 3 },
+        );
+        // The members are hot, but the composed stack has no traffic of
+        // its own: it stays on the merge-free path.
+        engine.record_traffic("a", 10);
+        engine.record_traffic("b", 10);
+        assert_eq!(engine.strategy_for("a+b"), StrategyKind::OnTheFly);
+        // Stack traffic promotes the stack itself.
+        engine.record_traffic("a+b", 3);
+        assert_eq!(engine.strategy_for("a+b"), StrategyKind::Merged);
+    }
+
+    #[test]
+    fn default_generate_stack_rejects_compositions() {
+        // A strategy without an override serves singletons and rejects
+        // longer stacks — the PJRT leaf relies on exactly this default.
+        struct Fixed;
+        impl ExecutionStrategy for Fixed {
+            fn name(&self) -> &'static str {
+                "fixed"
+            }
+            fn generate(
+                &self,
+                _adapter: &AdapterEntry,
+                prompts: &[Vec<i32>],
+                _max_new: usize,
+            ) -> Result<Vec<Vec<i32>>> {
+                Ok(echo_tagged(prompts, 7))
+            }
+        }
+        let merger = merger_fixture();
+        let a = adapter(&merger, "a", 31);
+        let b = adapter(&merger, "b", 32);
+        let out = Fixed.generate_stack(std::slice::from_ref(&a), &[vec![1]], 1).unwrap();
+        assert_eq!(out[0].last(), Some(&7));
+        assert!(Fixed.generate_stack(&[], &[vec![1]], 1).is_err());
+        assert!(Fixed.generate_stack(&[a, b], &[vec![1]], 1).is_err());
     }
 
     #[test]

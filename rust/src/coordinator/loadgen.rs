@@ -13,13 +13,17 @@
 //! | `bursty`  | flat                          | bursts of `burst` requests at one instant, `gap_us` apart |
 //! | `churn`   | small working set that rotates every `dwell` requests | exponential inter-arrivals |
 //! | `zipf-1M` | `1/rank^s` over a **million ids** | exponential inter-arrivals |
+//! | `stacked` | flat over `+`-joined stacks of `depth` members | exponential inter-arrivals |
 //!
 //! `zipf` stresses fairness (one hot adapter vs. a cold tail), `bursty`
 //! stresses admission control / shedding, `churn` keeps changing the
 //! resident adapter — the worst case for the in-place
-//! [`super::registry::SwapSlot`] serving path — and `zipf-1M` is the
+//! [`super::registry::SwapSlot`] serving path — `zipf-1M` is the
 //! fleet-scale scenario: an adapter id space far larger than RAM,
-//! served through [`super::fleet::ShardedFleet`] over the paged store.
+//! served through [`super::fleet::ShardedFleet`] over the paged store —
+//! and `stacked` drives the composed-adapter path, every request naming
+//! an ordered stack like `"user3+user4"`
+//! (see [`Scenario::request_adapter_id`]).
 //!
 //! Everything derives from [`crate::util::rng::Rng`] with an explicit
 //! seed: the same [`LoadGenCfg`] always yields the same trace, bit for
@@ -71,6 +75,14 @@ pub enum Scenario {
     /// head fits in memory while the cold tail exercises the paged
     /// store's admission-on-first-request path.
     Zipf1M { exponent: f64 },
+    /// Composed-adapter traffic: every request names a `+`-joined stack
+    /// of `depth` consecutive fleet members
+    /// (`"user3+user4"` at depth 2 — see
+    /// [`super::registry::split_stack_id`]). Flat popularity over the
+    /// stack *anchors*, exponential inter-arrivals. The stress for the
+    /// composition path: merged caches key whole stacks, the on-the-fly
+    /// strategy chains activation sweeps.
+    Stacked { depth: usize },
 }
 
 impl Scenario {
@@ -82,6 +94,27 @@ impl Scenario {
             Scenario::Bursty { .. } => "bursty",
             Scenario::Churn { .. } => "churn",
             Scenario::Zipf1M { .. } => "zipf-1M",
+            Scenario::Stacked { .. } => "stacked",
+        }
+    }
+
+    /// The adapter id a request for `adapter` targets under this
+    /// scenario: the plain `user{i}` fleet member, except for
+    /// [`Scenario::Stacked`], where it is the `+`-joined id of `depth`
+    /// consecutive members anchored at `adapter` (wrapping around the
+    /// fleet). Benches and drivers materialize requests through this so
+    /// the stacked scenario exercises the composed serving path without
+    /// changing the [`Arrival`] trace shape.
+    pub fn request_adapter_id(&self, adapter: usize, n_adapters: usize) -> String {
+        match self {
+            Scenario::Stacked { depth } => {
+                let n = n_adapters.max(1);
+                let members: Vec<String> = (0..(*depth).max(1))
+                    .map(|k| format!("user{}", (adapter + k) % n))
+                    .collect();
+                members.join("+")
+            }
+            _ => format!("user{adapter}"),
         }
     }
 
@@ -99,10 +132,18 @@ impl Scenario {
     }
 
     /// Every scenario with its default parameters — the CLI parse
-    /// space: [`Scenario::all`] plus the fleet-scale `zipf-1M`.
-    pub fn catalog() -> [Scenario; 5] {
+    /// space: [`Scenario::all`] plus the fleet-scale `zipf-1M` and the
+    /// composed-adapter `stacked`.
+    pub fn catalog() -> [Scenario; 6] {
         let [a, b, c, d] = Scenario::all();
-        [a, b, c, d, Scenario::Zipf1M { exponent: 1.05 }]
+        [
+            a,
+            b,
+            c,
+            d,
+            Scenario::Zipf1M { exponent: 1.05 },
+            Scenario::Stacked { depth: 2 },
+        ]
     }
 }
 
@@ -113,7 +154,7 @@ pub fn parse_scenario(s: &str) -> Result<Scenario> {
             return Ok(sc);
         }
     }
-    bail!("unknown scenario {s:?} (expected uniform | zipf | bursty | churn | zipf-1M)")
+    bail!("unknown scenario {s:?} (expected uniform | zipf | bursty | churn | zipf-1M | stacked)")
 }
 
 /// Trace generation knobs.
@@ -191,7 +232,9 @@ pub fn generate(cfg: &LoadGenCfg) -> Vec<Arrival> {
     let mut out = Vec::with_capacity(cfg.n_requests);
     for i in 0..cfg.n_requests {
         let adapter = match cfg.scenario {
-            Scenario::Uniform | Scenario::Bursty { .. } => rng.below(cfg.n_adapters),
+            Scenario::Uniform | Scenario::Bursty { .. } | Scenario::Stacked { .. } => {
+                rng.below(cfg.n_adapters)
+            }
             Scenario::Zipf { .. } | Scenario::Zipf1M { .. } => {
                 // Binary search the CDF: first rank whose cumulative
                 // mass exceeds u (equivalent to the old linear scan —
@@ -349,9 +392,39 @@ mod tests {
         }
         assert!(parse_scenario("poisson").is_err());
         // The single-server sweep stays four wide (bench indexes it);
-        // the catalog adds exactly the fleet scenario.
+        // the catalog appends the fleet and composition scenarios in a
+        // stable order.
         assert_eq!(Scenario::all().len(), 4);
         assert_eq!(Scenario::catalog()[4].name(), "zipf-1M");
+        assert_eq!(Scenario::catalog()[5].name(), "stacked");
+    }
+
+    #[test]
+    fn stacked_ids_compose_consecutive_members() {
+        let sc = Scenario::Stacked { depth: 2 };
+        assert_eq!(sc.request_adapter_id(3, 8), "user3+user4");
+        // The stack wraps around the fleet.
+        assert_eq!(sc.request_adapter_id(7, 8), "user7+user0");
+        // Depth 1 degenerates to the plain member id, like every
+        // non-stacked scenario.
+        assert_eq!(Scenario::Stacked { depth: 1 }.request_adapter_id(5, 8), "user5");
+        assert_eq!(Scenario::Uniform.request_adapter_id(5, 8), "user5");
+        // Traces are deterministic and anchor-bounded like uniform.
+        let cfg = LoadGenCfg {
+            n_adapters: 4,
+            n_requests: 64,
+            scenario: sc,
+            ..Default::default()
+        };
+        let trace = generate(&cfg);
+        assert_eq!(trace, generate(&cfg));
+        assert!(trace.iter().all(|a| a.adapter < 4));
+        // Every materialized id parses as a well-formed 2-stack.
+        for a in &trace {
+            let id = sc.request_adapter_id(a.adapter, 4);
+            let members = crate::coordinator::registry::split_stack_id(&id).unwrap();
+            assert_eq!(members.len(), 2);
+        }
     }
 
     #[test]

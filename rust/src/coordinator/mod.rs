@@ -9,27 +9,33 @@
 //!
 //! A request flows through five stages; execution is one
 //! [`engine::AdapterEngine`] facade whose [`engine::ExecutionPolicy`]
-//! picks a weight-residency strategy per adapter:
+//! picks a weight-residency strategy per adapter. A request's adapter
+//! id may be a **composition stack** (`"a+b"` — members joined by `+`,
+//! applied left to right, serving `T_b(T_a(W))`); the scheduler treats
+//! each stack id as its own tenant, and every strategy serves it:
 //!
 //! ```text
 //!            submit()                 pop_ready(now)
 //! clients ─────────────► Scheduler ───────────────────► dispatch
-//!            │            per-adapter queues             │ pump /
+//!  adapter: "a"|"a+b"     per-(stack-)id queues          │ pump /
 //!            │            ├ admission control            │ pump_pool
 //!            ▼            │  (depth bounds → shed)       ▼
 //!          shed()         ├ deadline lane (EDF)     AdapterEngine
 //!       ShedReason +      └ DRR lane (quantum)      ExecutionPolicy
 //!       SchedStats              │                   (Static | TrafficAware)
-//!                               │ released_for()         │ picks per adapter
+//!                               │ released_for()         │ picks per stack id
 //!                               └──── traffic feed ──────┤
+//!                                              get_stack(id) → members
 //!                                                        ▼
 //!                                          ┌─────────────┼─────────────┐
 //!                                          ▼             ▼             ▼
 //!                                     MergedCache  InvolutionSwap   OnTheFly
 //!                                     LRU + single  one SwapSlot,   T(W)·x on
 //!                                     flight merge  in-place        activations,
-//!                                     (1 copy per   rebase/invol.   ZERO merged
-//!                                     cached user)  (1 copy total)  buffers
+//!                                     (1 buffer per  rebase/invol.  ZERO merged
+//!                                     cached stack)  (1 copy total, buffers; stacks
+//!                                     stack folded   stack unmerges chain affine
+//!                                     into 1 buffer  in reverse)    factors
 //!                                          │             │             │
 //!                                          └─────────────┼─────────────┘
 //!                                                        ▼
@@ -39,6 +45,14 @@
 //!            on_response(Response) ◄─────────────────────┘
 //!            latency + fairness + per-strategy counters (ServerStats)
 //! ```
+//!
+//! Singleton stacks delegate to the plain single-adapter path at every
+//! layer ([`engine::AdapterEngine`]'s `generate_stack` → `generate`,
+//! [`registry::MergeEngine::merged_stack`] → `merged`, the composed
+//! sweeps → the singleton kernels), so one-member traffic is
+//! **bit-identical** to the pre-composition engine. Composed-merged vs
+//! composed-on-the-fly parity ≤ 1e-5 across the registry is pinned by
+//! `rust/tests/engine_parity.rs`.
 //!
 //! * [`scheduler`] — the adapter-aware continuous scheduler: per-adapter
 //!   queues, admission control with shed counters, deadline-based
@@ -68,8 +82,9 @@
 //!   steals work across shards; [`fleet::FleetSnapshot`] merges every
 //!   shard's [`server::StatsSnapshot`] into one report.
 //! * [`loadgen`] — deterministic synthetic traffic (uniform / Zipf /
-//!   bursty / adapter-churn / the million-id `zipf-1M`) for the
-//!   `serving_throughput` bench and the scheduling determinism tests.
+//!   bursty / adapter-churn / the million-id `zipf-1M` / the
+//!   composed-stack `stacked`) for the `serving_throughput` bench and
+//!   the scheduling determinism tests.
 //! * [`batcher`] — the original single-lane dynamic batcher, kept as the
 //!   minimal building block (and for its conservation property tests);
 //!   the scheduler supersedes it on the serving path.

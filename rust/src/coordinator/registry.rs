@@ -10,6 +10,16 @@
 //! buffers regardless of how many adapters rotate through. See
 //! [`SwapMode`] for the two flavours (bit-exact rebase vs. the
 //! involution path that exploits the paper's H·H = I structure).
+//!
+//! **Composition stacks** are first-class: a request may name an
+//! ordered stack `"a+b+c"` ([`STACK_SEP`]-joined member ids, applied
+//! left to right: `T_c(T_b(T_a(W)))`). [`AdapterRegistry::get_stack`]
+//! resolves the members, [`MergeEngine::merged_stack`] folds the
+//! composition into one cached buffer keyed by the full stack id,
+//! [`MergeEngine::activations_with_stack`] serves it merge-free, and
+//! [`MergeEngine::swap_into_stack`] rotates a [`SwapSlot`] between
+//! whole stacks (unmerging the resident composition in strict reverse
+//! order, with the involution audit covering the entire chain).
 
 use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
@@ -23,6 +33,28 @@ use crate::peft::precision::{MergedBuf, MergedPrecision};
 use crate::peft::store::{PagedStore, StoreStats};
 use crate::peft::{registry as ops, MethodSpec};
 use crate::util::sync::lock_clean;
+
+/// Separator of composed-stack ids: `"a+b+c"` names the ordered
+/// composition `T_c(T_b(T_a(W)))` of registered adapters `a`, `b`, `c`.
+/// Singleton ids contain no separator, so every plain adapter id is
+/// already a valid (length-1) stack id.
+pub const STACK_SEP: char = '+';
+
+/// Split a (possibly composed) adapter id into its member ids, in
+/// application order. Rejects empty members (`"a++b"`, `"+a"`, `""`).
+pub fn split_stack_id(id: &str) -> Result<Vec<&str>> {
+    let parts: Vec<&str> = id.split(STACK_SEP).collect();
+    anyhow::ensure!(
+        !parts.is_empty() && parts.iter().all(|p| !p.is_empty()),
+        "malformed stack id {id:?}"
+    );
+    Ok(parts)
+}
+
+/// Canonical stack id of an ordered member list ([`STACK_SEP`]-joined).
+pub fn join_stack_id<S: AsRef<str>>(members: &[S]) -> String {
+    members.iter().map(|s| s.as_ref()).collect::<Vec<_>>().join("+")
+}
 
 /// One registered adapter: the tiny trainable vector plus its identity.
 #[derive(Clone, Debug)]
@@ -231,6 +263,15 @@ impl AdapterRegistry {
         Err(anyhow!("unknown adapter {id:?}"))
     }
 
+    /// Resolve a (possibly composed) id into its ordered member entries:
+    /// `"a+b+c"` → `[a, b, c]`, a plain id → a length-1 stack. Each
+    /// member goes through the normal [`AdapterRegistry::get`] tiers
+    /// (resident → store → provisioner), so stacks compose over fleets
+    /// and lazily-materialized ids for free.
+    pub fn get_stack(&self, id: &str) -> Result<Vec<AdapterEntry>> {
+        split_stack_id(id)?.iter().map(|p| self.get(p)).collect()
+    }
+
     /// Number of **materialized** adapters (store index when backed,
     /// resident set otherwise). Provisionable-but-never-requested ids
     /// are not counted — the whole point is that they cost nothing.
@@ -419,27 +460,37 @@ pub const INVOLUTION_REBASELINE: f32 = 1e-5;
 
 /// A single reusable merged-weight buffer for the in-place swap mode.
 /// Create via [`MergeEngine::new_swap_slot`]; the engine maintains the
-/// invariant that non-adapted (gap) regions always hold base bits.
+/// invariant that non-adapted (gap) regions always hold base bits. The
+/// resident unit is an ordered adapter *stack* — a plain adapter is the
+/// length-1 case.
 pub struct SwapSlot {
     buf: Vec<f32>,
-    current: Option<CurrentAdapter>,
+    current: Option<CurrentStack>,
+}
+
+/// The composition currently merged into a [`SwapSlot`]: the canonical
+/// stack id plus everything needed to unmerge each member later
+/// (in-place inversion must replay the *exact* resident parameters).
+struct CurrentStack {
+    id: String,
+    members: Vec<CurrentAdapter>,
 }
 
 struct CurrentAdapter {
-    id: String,
     spec: MethodSpec,
     peft: Arc<Vec<f32>>,
     layout: Layout,
 }
 
 impl SwapSlot {
-    /// The merged weights of the resident adapter (empty before the
+    /// The merged weights of the resident stack (empty before the
     /// first [`MergeEngine::swap_into`]).
     pub fn weights(&self) -> &[f32] {
         &self.buf
     }
 
-    /// Id of the adapter currently merged into the slot.
+    /// Canonical id of the stack currently merged into the slot
+    /// (`"a"` for a singleton, `"a+b+c"` for a composition).
     pub fn current_id(&self) -> Option<&str> {
         self.current.as_ref().map(|c| c.id.as_str())
     }
@@ -623,6 +674,59 @@ impl MergeEngine {
         Ok(merged.to_f32())
     }
 
+    /// Fetch the merged weights of an ordered adapter *stack*
+    /// (`out = T_k(…T_1(W)…)`), merging on demand. Cached under the
+    /// canonical stack id — `"a+b"` and `"b+a"` are distinct entries,
+    /// because composition order changes the weights — with the same
+    /// single-flight deduplication and bounded worker permits as
+    /// singleton merges. A length-1 stack delegates to
+    /// [`MergeEngine::merged`], sharing the plain adapter's cache entry.
+    pub fn merged_stack(&self, entries: &[AdapterEntry]) -> Result<Arc<Vec<f32>>> {
+        anyhow::ensure!(!entries.is_empty(), "adapter stack must be non-empty");
+        if entries.len() == 1 {
+            return self.merged(&entries[0]);
+        }
+        let ids: Vec<&str> = entries.iter().map(|e| e.id.as_str()).collect();
+        let stack_id = join_stack_id(&ids);
+        loop {
+            if let Some(m) = lock_clean(&self.cache).get(&stack_id) {
+                return Ok(m.to_f32());
+            }
+            let mut inflight = lock_clean(&self.inflight);
+            if !inflight.contains(&stack_id) {
+                inflight.insert(stack_id.clone());
+                break;
+            }
+            while inflight.contains(&stack_id) {
+                inflight = self.inflight_cv.wait(inflight).unwrap();
+            }
+        }
+        let flight = Flight { engine: self, id: stack_id.clone() };
+        if let Some(m) = lock_clean(&self.cache).peek(&stack_id) {
+            drop(flight);
+            return Ok(m.to_f32());
+        }
+        let merged = self.do_merge_stack(entries)?;
+        lock_clean(&self.cache).put(&stack_id, merged.clone());
+        drop(flight);
+        Ok(merged.to_f32())
+    }
+
+    fn do_merge_stack(&self, entries: &[AdapterEntry]) -> Result<MergedBuf> {
+        let checked: Vec<(MethodSpec, Layout)> =
+            entries.iter().map(|e| self.checked_spec(e)).collect::<Result<_>>()?;
+        let _permit = self.acquire_permit();
+        self.merges.fetch_add(1, Ordering::SeqCst);
+        let refs: Vec<AdapterRef> = entries
+            .iter()
+            .zip(&checked)
+            .map(|(e, (spec, layout))| AdapterRef { spec, peft: &e.peft, layout })
+            .collect();
+        let mut out = vec![0.0f32; self.base.len()];
+        self.plan.execute_stack(&refs, &self.base, &mut out, None)?;
+        Ok(MergedBuf::encode(out, self.precision))
+    }
+
     /// Parse and validate an adapter entry against the registry schema:
     /// the method must be host-mergeable and the flat vector must have
     /// exactly the schema-derived length.
@@ -736,6 +840,40 @@ impl MergeEngine {
         Ok(out)
     }
 
+    /// Merge-free composed forward over the deterministic probe:
+    /// `y = T_k(…T_1(W)…)·x` per work item with zero merged buffers —
+    /// the stack analogue of [`MergeEngine::activations`].
+    pub fn activations_stack(&self, entries: &[AdapterEntry], m: usize) -> Result<Vec<f32>> {
+        let x = self.activation_probe(m);
+        self.activations_with_stack(entries, &x, m)
+    }
+
+    /// [`MergeEngine::activations_stack`] over an explicit column-stacked
+    /// input — the batched composed-on-the-fly serving entry point. A
+    /// length-1 stack runs the singleton kernels
+    /// ([`crate::peft::apply::MergePlan::execute_activations_stack`]
+    /// delegates), so plain-adapter numerics are untouched; longer
+    /// stacks chain the ops' affine composition factors around one base
+    /// GEMM.
+    pub fn activations_with_stack(
+        &self,
+        entries: &[AdapterEntry],
+        x: &[f32],
+        m: usize,
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(!entries.is_empty(), "adapter stack must be non-empty");
+        let checked: Vec<(MethodSpec, Layout)> =
+            entries.iter().map(|e| self.checked_spec(e)).collect::<Result<_>>()?;
+        let refs: Vec<AdapterRef> = entries
+            .iter()
+            .zip(&checked)
+            .map(|(e, (spec, layout))| AdapterRef { spec, peft: &e.peft, layout })
+            .collect();
+        let mut out = vec![0.0f32; self.plan.activations_out_len(m)];
+        self.plan.execute_activations_stack(&refs, &self.base, x, m, &mut out, None)?;
+        Ok(out)
+    }
+
     /// Create an empty swap slot. The buffer is allocated lazily on the
     /// first [`MergeEngine::swap_into`] (one full merge); afterwards the
     /// slot is rewritten in place on every adapter change.
@@ -753,55 +891,85 @@ impl MergeEngine {
     /// fresh full merge), so a failed swap can never serve a
     /// half-rewritten buffer.
     pub fn swap_into(&self, slot: &mut SwapSlot, entry: &AdapterEntry, mode: SwapMode) -> Result<bool> {
-        if slot.current.as_ref().is_some_and(|c| c.id == entry.id) {
+        // A plain adapter is a length-1 stack: the stack swap runs the
+        // identical per-item operation sequence on singletons.
+        self.swap_into_stack(slot, std::slice::from_ref(entry), mode)
+    }
+
+    /// Stack-general [`MergeEngine::swap_into`]: ensure `slot` holds the
+    /// merged composition of `entries` (applied in order), rewriting the
+    /// buffer in place when a different stack is resident. Involution
+    /// swaps unmerge the resident composition in **strict reverse
+    /// composition order**, and the audited residual covers the whole
+    /// recovered chain — a drift anywhere in the stack triggers the
+    /// bit-exact rebase repair.
+    pub fn swap_into_stack(
+        &self,
+        slot: &mut SwapSlot,
+        entries: &[AdapterEntry],
+        mode: SwapMode,
+    ) -> Result<bool> {
+        anyhow::ensure!(!entries.is_empty(), "swap stack must be non-empty");
+        let ids: Vec<&str> = entries.iter().map(|e| e.id.as_str()).collect();
+        let stack_id = join_stack_id(&ids);
+        if slot.current.as_ref().is_some_and(|c| c.id == stack_id) {
             self.swap_hits.fetch_add(1, Ordering::SeqCst);
             return Ok(false);
         }
-        let (spec, layout) = self.checked_spec(entry)?;
+        let checked: Vec<(MethodSpec, Layout)> =
+            entries.iter().map(|e| self.checked_spec(e)).collect::<Result<_>>()?;
         // Pre-flight the one sweep precondition that would otherwise
-        // surface *inside* the plan call: a resident adapter that cannot
-        // unmerge must reject the request without evicting the (still
-        // perfectly valid) resident weights. Every failure past this
-        // point may have dirtied the buffer and resets the slot.
+        // surface *inside* the plan call: a resident stack with any
+        // member that cannot unmerge must reject the request without
+        // evicting the (still perfectly valid) resident weights. Every
+        // failure past this point may have dirtied the buffer and resets
+        // the slot.
         if mode == SwapMode::Involution && !slot.buf.is_empty() {
             if let Some(cur) = slot.current.as_ref() {
-                let cur_op = ops::op_for(cur.spec.kind);
-                anyhow::ensure!(
-                    cur_op.supports_unmerge(),
-                    "resident adapter {:?} ({}) does not support in-place unmerge; \
-                     use SwapMode::Rebase",
-                    cur.id,
-                    cur_op.token()
-                );
+                for member in &cur.members {
+                    let cur_op = ops::op_for(member.spec.kind);
+                    anyhow::ensure!(
+                        cur_op.supports_unmerge(),
+                        "resident stack {:?} ({}) does not support in-place unmerge; \
+                         use SwapMode::Rebase",
+                        cur.id,
+                        cur_op.token()
+                    );
+                }
             }
         }
         let result = (|| -> Result<()> {
             let _permit = self.acquire_permit();
+            let new_refs: Vec<AdapterRef> = entries
+                .iter()
+                .zip(&checked)
+                .map(|(e, (spec, layout))| AdapterRef { spec, peft: &e.peft, layout })
+                .collect();
             if slot.buf.is_empty() {
                 // First fill: one fresh merge establishes the gap-bits
                 // invariant (non-adapted regions = base bits, forever).
                 slot.buf = vec![0.0f32; self.base.len()];
-                self.plan.execute(&spec, &self.base, &entry.peft, &layout, &mut slot.buf)?;
+                self.plan.execute_stack(&new_refs, &self.base, &mut slot.buf, None)?;
                 self.merges.fetch_add(1, Ordering::SeqCst);
                 return Ok(());
             }
             match mode {
                 SwapMode::Rebase => {
-                    self.plan.execute_rebase(
-                        AdapterRef { spec: &spec, peft: &entry.peft, layout: &layout },
-                        &self.base,
-                        &mut slot.buf,
-                        None,
-                    )?;
+                    self.plan.execute_rebase_stack(&new_refs, &self.base, &mut slot.buf, None)?;
                 }
                 SwapMode::Involution => {
                     let cur = slot
                         .current
                         .as_ref()
-                        .expect("non-empty swap slot always has a resident adapter");
-                    let residual = self.plan.execute_swap_involution(
-                        AdapterRef { spec: &cur.spec, peft: &cur.peft, layout: &cur.layout },
-                        AdapterRef { spec: &spec, peft: &entry.peft, layout: &layout },
+                        .expect("non-empty swap slot always has a resident stack");
+                    let cur_refs: Vec<AdapterRef> = cur
+                        .members
+                        .iter()
+                        .map(|m| AdapterRef { spec: &m.spec, peft: &m.peft, layout: &m.layout })
+                        .collect();
+                    let residual = self.plan.execute_swap_involution_stack(
+                        &cur_refs,
+                        &new_refs,
                         Some(&self.base),
                         &mut slot.buf,
                         None,
@@ -810,12 +978,13 @@ impl MergeEngine {
                     if residual > INVOLUTION_REBASELINE {
                         // The recovered weights drifted past the audit
                         // bound (e.g. a barely-invertible relaxed
-                        // reflection above the determinant cutoff):
+                        // reflection above the determinant cutoff, or
+                        // drift accumulated across a long composition):
                         // repair with the bit-exact rebase so the drift
                         // never reaches serving.
                         self.rebaselines.fetch_add(1, Ordering::SeqCst);
-                        self.plan.execute_rebase(
-                            AdapterRef { spec: &spec, peft: &entry.peft, layout: &layout },
+                        self.plan.execute_rebase_stack(
+                            &new_refs,
                             &self.base,
                             &mut slot.buf,
                             None,
@@ -831,11 +1000,17 @@ impl MergeEngine {
             slot.current = None;
             return Err(e);
         }
-        slot.current = Some(CurrentAdapter {
-            id: entry.id.clone(),
-            spec,
-            peft: entry.peft.clone(),
-            layout,
+        slot.current = Some(CurrentStack {
+            id: stack_id,
+            members: entries
+                .iter()
+                .zip(checked)
+                .map(|(e, (spec, layout))| CurrentAdapter {
+                    spec,
+                    peft: e.peft.clone(),
+                    layout,
+                })
+                .collect(),
         });
         Ok(true)
     }
@@ -1219,6 +1394,93 @@ mod tests {
         // Rebase mode swaps away from an unmergeable resident just fine.
         assert!(engine.swap_into(&mut slot, &good, SwapMode::Rebase).unwrap());
         assert_eq!(slot.current_id(), Some("good"));
+    }
+
+    #[test]
+    fn stack_id_helpers() {
+        assert_eq!(split_stack_id("a+b+c").unwrap(), ["a", "b", "c"]);
+        assert_eq!(split_stack_id("solo").unwrap(), ["solo"]);
+        assert!(split_stack_id("a++b").is_err());
+        assert!(split_stack_id("+a").is_err());
+        assert!(split_stack_id("").is_err());
+        assert_eq!(join_stack_id(&["a", "b", "c"]), "a+b+c");
+        assert_eq!(join_stack_id(&["solo"]), "solo");
+    }
+
+    #[test]
+    fn get_stack_resolves_members_in_order() {
+        let mut r = AdapterRegistry::new();
+        r.register("a", "ether_n4", "t", vec![1.0; 8]);
+        r.register("b", "lora_r8", "t", vec![2.0; 16]);
+        let stack = r.get_stack("a+b").unwrap();
+        assert_eq!(stack.len(), 2);
+        assert_eq!(stack[0].id, "a");
+        assert_eq!(stack[1].id, "b");
+        assert_eq!(r.get_stack("b").unwrap().len(), 1);
+        assert!(r.get_stack("a+nope").is_err());
+        assert!(r.get_stack("a++b").is_err());
+    }
+
+    #[test]
+    fn merged_stack_equals_sequential_fold_and_caches_by_stack_id() {
+        let (engine, base, layout) = engine_fixture(4, 2);
+        let a = adapter("a", &engine, 71);
+        let b = adapter("b", &engine, 72);
+        let spec = MethodSpec::parse("ether_n4").unwrap();
+        let pl = peft_layout_for(engine.dims(), &spec);
+        // Oracle: merge a into the base, then merge b into that result.
+        let mid = merge_into_base(engine.dims(), &spec, &base, &layout, &a.peft, &pl).unwrap();
+        let want = merge_into_base(engine.dims(), &spec, &mid, &layout, &b.peft, &pl).unwrap();
+        let got = engine.merged_stack(&[a.clone(), b.clone()]).unwrap();
+        assert!(bits_equal(&got, &want), "stack merge must equal the sequential fold");
+        // Cached under the composed id; second fetch is the cached Arc.
+        let again = engine.merged_stack(&[a.clone(), b.clone()]).unwrap();
+        assert!(Arc::ptr_eq(&got, &again));
+        // Composition order is part of the key AND of the weights.
+        let swapped = engine.merged_stack(&[b.clone(), a.clone()]).unwrap();
+        assert!(!bits_equal(&swapped, &got), "composition order must matter");
+        // A length-1 stack shares the plain adapter's cache entry.
+        let solo = engine.merged_stack(std::slice::from_ref(&a)).unwrap();
+        let solo_again = engine.merged(&a).unwrap();
+        assert!(Arc::ptr_eq(&solo, &solo_again));
+    }
+
+    #[test]
+    fn swap_slot_rotates_between_stacks_with_whole_chain_audit() {
+        let (engine, _, _) = engine_fixture(4, 2);
+        let a = adapter("a", &engine, 81);
+        let b = adapter("b", &engine, 82);
+        let c = adapter("c", &engine, 83);
+        let fresh_ab = engine.merged_stack(&[a.clone(), b.clone()]).unwrap();
+        let mut slot = engine.new_swap_slot();
+        engine
+            .swap_into_stack(&mut slot, &[a.clone(), b.clone()], SwapMode::Involution)
+            .unwrap();
+        assert_eq!(slot.current_id(), Some("a+b"));
+        assert!(bits_equal(slot.weights(), &fresh_ab), "first fill is a fresh stack merge");
+        // Rotate to a singleton and back: the resident composition is
+        // peeled in strict reverse order and the audited residual covers
+        // the whole recovered chain.
+        assert!(engine
+            .swap_into_stack(&mut slot, std::slice::from_ref(&c), SwapMode::Involution)
+            .unwrap());
+        assert_eq!(slot.current_id(), Some("c"));
+        assert!(engine
+            .swap_into_stack(&mut slot, &[a.clone(), b.clone()], SwapMode::Involution)
+            .unwrap());
+        let err = slot
+            .weights()
+            .iter()
+            .zip(fresh_ab.iter())
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(err <= 1e-5, "stack involution drifted {err} from a fresh stack merge");
+        let (_, _, residual) = engine.swap_stats();
+        assert!(residual > 0.0 && residual <= 1e-5, "audited stack residual {residual}");
+        // The resident stack short-circuits, same as a resident adapter.
+        assert!(!engine.swap_into_stack(&mut slot, &[a, b], SwapMode::Involution).unwrap());
+        // One buffer, ever.
+        assert_eq!(slot.resident_bytes(), engine.base().len() * 4);
     }
 
     #[test]

@@ -33,6 +33,13 @@
 //! to an identical schedule (see `rust/tests/scheduler_props.rs` and
 //! [`super::loadgen::schedule_trace`]).
 //!
+//! The scheduler is **composition-agnostic**: a `+`-joined adapter-stack
+//! id (`"a+b"`, see [`super::registry::split_stack_id`]) is just another
+//! tenant key. The stack gets its own queue, deadline, DRR ring slot and
+//! fairness share, fully independent of its members' queues — requests
+//! for `"a"` and `"a+b"` never batch together, because they execute
+//! against different weights.
+//!
 //! ```
 //! use std::time::{Duration, Instant};
 //! use ether::coordinator::batcher::Request;
@@ -638,6 +645,37 @@ mod tests {
         // Empty inject is a no-op.
         s.inject("a", vec![]);
         assert_eq!(s.pending(), 0);
+    }
+
+    #[test]
+    fn stack_ids_are_independent_tenants() {
+        // "a" and "a+b" must never share a queue or a batch: they
+        // execute against different weights. The scheduler treats the
+        // joined id as an opaque tenant key.
+        let mut s = Scheduler::new(SchedulerCfg {
+            max_batch: 2,
+            max_wait: Duration::from_secs(60),
+            ..Default::default()
+        });
+        let t = Instant::now();
+        s.offer(req(0, "a", t)).unwrap();
+        s.offer(req(1, "a+b", t)).unwrap();
+        s.offer(req(2, "a", t)).unwrap();
+        s.offer(req(3, "a+b", t)).unwrap();
+        assert_eq!(s.active_adapters(), 2);
+        let mut seen: Vec<(String, Vec<u64>)> = vec![];
+        while let Some((id, batch)) = s.pop_ready(t) {
+            seen.push((id, batch.iter().map(|r| r.id).collect()));
+        }
+        seen.sort();
+        assert_eq!(
+            seen,
+            vec![("a".to_string(), vec![0, 2]), ("a+b".to_string(), vec![1, 3])]
+        );
+        // Fairness accounting keys the full stack id.
+        assert_eq!(s.stats().released_for("a+b"), 2);
+        assert_eq!(s.stats().released_for("a"), 2);
+        assert_eq!(s.stats().released_for("b"), 0, "members earn no credit from stacks");
     }
 
     #[test]

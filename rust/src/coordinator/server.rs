@@ -18,6 +18,18 @@
 //!   contract is what makes one backend instance safe here).
 //! * [`Server::serve`] — the threaded loop over the single-threaded
 //!   drive with lossless backpressure.
+//!
+//! Requests may name a composed adapter **stack** by joining member ids
+//! with `+` (`"a+b"` applies `a` first, then `b` — see
+//! [`split_stack_id`](super::registry::split_stack_id)). Every pump
+//! flavour resolves the id through
+//! [`AdapterRegistry::get_stack`](super::registry::AdapterRegistry::get_stack)
+//! and executes through [`ExecutionStrategy::generate_stack`], so the
+//! plain single-adapter path and the composed path are literally the
+//! same code — a one-member stack delegates back to
+//! [`ExecutionStrategy::generate`]. The scheduler needs no changes: a
+//! stack id is just another tenant key, with its own queue, deadline and
+//! fairness accounting.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc;
@@ -381,11 +393,11 @@ impl Server {
         mut on_response: impl FnMut(Response),
     ) -> Result<()> {
         while let Some((adapter_id, batch)) = self.sched.pop_ready(now) {
-            let adapter = self.registry.get(&adapter_id)?;
+            let stack = self.registry.get_stack(&adapter_id)?;
             self.feed_traffic(backend, &adapter_id);
             let prompts: Vec<Vec<i32>> = batch.iter().map(|r| r.prompt.clone()).collect();
             let max_new = batch.iter().map(|r| r.max_new).max().unwrap_or(8);
-            let outputs = backend.generate(&adapter, &prompts, max_new)?;
+            let outputs = backend.generate_stack(&stack, &prompts, max_new)?;
             let bsz = batch.len();
             self.stats.batches += 1;
             for (req, output) in batch.into_iter().zip(outputs) {
@@ -430,31 +442,32 @@ impl Server {
         }
         let mut first_err: Option<anyhow::Error> = None;
         if !ready.is_empty() {
-            // Resolve adapters (and feed the policy its traffic
-            // counters); an unknown id fails only its own batch.
-            let mut jobs: Vec<(super::registry::AdapterEntry, Vec<Request>)> =
+            // Resolve adapters — stacks resolve every member — and feed
+            // the policy its traffic counters (keyed by the full stack
+            // id); an unknown id fails only its own batch.
+            let mut jobs: Vec<(String, Vec<super::registry::AdapterEntry>, Vec<Request>)> =
                 Vec::with_capacity(ready.len());
             for (id, batch) in ready {
-                match self.registry.get(&id) {
-                    Ok(adapter) => {
+                match self.registry.get_stack(&id) {
+                    Ok(stack) => {
                         self.feed_traffic(backend, &id);
-                        jobs.push((adapter, batch));
+                        jobs.push((id, stack, batch));
                     }
                     Err(e) => first_err = first_err.or(Some(e)),
                 }
             }
             let outcomes: Vec<Result<(Vec<Vec<i32>>, Instant)>> =
-                pool::parallel_map_with(workers.max(1), &jobs, |(adapter, batch)| {
+                pool::parallel_map_with(workers.max(1), &jobs, |(_, stack, batch)| {
                     let prompts: Vec<Vec<i32>> =
                         batch.iter().map(|r| r.prompt.clone()).collect();
                     let max_new = batch.iter().map(|r| r.max_new).max().unwrap_or(8);
-                    let outputs = backend.generate(adapter, &prompts, max_new)?;
+                    let outputs = backend.generate_stack(stack, &prompts, max_new)?;
                     // Completion stamped here, on the worker: latency
                     // reflects this batch's service time, not the
                     // slowest sibling's.
                     Ok((outputs, Instant::now()))
                 });
-            for ((adapter, batch), outcome) in jobs.into_iter().zip(outcomes) {
+            for ((id, _, batch), outcome) in jobs.into_iter().zip(outcomes) {
                 let (outputs, done_at) = match outcome {
                     Ok(v) => v,
                     Err(e) => {
@@ -468,10 +481,10 @@ impl Server {
                 self.stats.batches += 1;
                 for (req, output) in batch.into_iter().zip(outputs) {
                     let latency = done_at.duration_since(req.enqueued);
-                    self.stats.record(&adapter.id, latency);
+                    self.stats.record(&id, latency);
                     on_response(Response {
                         id: req.id,
-                        adapter: adapter.id.clone(),
+                        adapter: id.clone(),
                         output,
                         latency,
                         batch_size: bsz,
@@ -538,12 +551,12 @@ impl Server {
                 Err(mpsc::RecvTimeoutError::Disconnected) => {
                     // flush the remainder and exit
                     for (adapter_id, batch) in self.sched.drain_all() {
-                        let adapter = self.registry.get(&adapter_id)?;
+                        let stack = self.registry.get_stack(&adapter_id)?;
                         self.feed_traffic(&backend, &adapter_id);
                         let prompts: Vec<Vec<i32>> =
                             batch.iter().map(|r| r.prompt.clone()).collect();
                         let max_new = batch.iter().map(|r| r.max_new).max().unwrap_or(8);
-                        let outputs = backend.generate(&adapter, &prompts, max_new)?;
+                        let outputs = backend.generate_stack(&stack, &prompts, max_new)?;
                         let bsz = batch.len();
                         self.stats.batches += 1;
                         for (req, output) in batch.into_iter().zip(outputs) {
@@ -763,6 +776,98 @@ mod tests {
         assert_eq!(merger.merges.load(std::sync::atomic::Ordering::SeqCst), 2);
         assert_eq!(server.stats.merge_hits, 2);
         assert!((server.stats.merge_hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stacked_requests_flow_through_both_pump_flavours() {
+        use crate::peft::apply::{base_layout_for, peft_layout_for, ModelDims};
+        use crate::peft::MethodSpec;
+        use crate::util::rng::Rng;
+
+        let dims = ModelDims { d_model: 16, d_ff: 32, n_layers: 2 };
+        let layout = base_layout_for(dims);
+        let mut rng = Rng::new(23);
+        let base: Vec<f32> = rng.normal_vec(layout.total, 0.05);
+        let merger = Arc::new(MergeEngine::new(dims, base, &layout, 4, 2).unwrap());
+        let spec = MethodSpec::parse("ether_n4").unwrap();
+        let pl = peft_layout_for(dims, &spec);
+        let mut registry = AdapterRegistry::new();
+        for id in ["a", "b"] {
+            registry.register(id, "ether_n4", "host", rng.normal_vec(pl.total, 0.5));
+        }
+        let backend =
+            AdapterEngine::host(merger.clone(), ExecutionPolicy::Static(StrategyKind::Merged));
+        let mut server = Server::new(registry, cfg(4, Duration::ZERO));
+        let t = Instant::now();
+        for (i, adapter) in ["a", "b", "a+b"].iter().enumerate() {
+            server
+                .submit(Request {
+                    id: i as u64,
+                    adapter: adapter.to_string(),
+                    prompt: vec![i as i32],
+                    max_new: 1,
+                    enqueued: t,
+                })
+                .unwrap();
+        }
+        let mut got = vec![];
+        server
+            .pump(&backend, t + Duration::from_millis(1), |r| got.push(r))
+            .unwrap();
+        assert_eq!(got.len(), 3);
+        let tag = |id: &str| {
+            got.iter()
+                .find(|r| r.adapter == id)
+                .and_then(|r| r.output.last().copied())
+                .unwrap()
+        };
+        // The composed stack is served from its own folded weights, not
+        // from either member's.
+        assert_ne!(tag("a+b"), tag("a"));
+        assert_ne!(tag("a+b"), tag("b"));
+        // Three tenants (a, b, a+b) → three real merges, and the stack
+        // gets its own fairness/latency bucket.
+        assert_eq!(merger.merges.load(Ordering::SeqCst), 3);
+        assert!(server.stats.latencies_us_by_adapter.contains_key("a+b"));
+        // The concurrent pump serves the same stack from the cache and
+        // agrees on the weights tag.
+        for (i, adapter) in ["a+b", "a"].iter().enumerate() {
+            server
+                .submit(Request {
+                    id: 10 + i as u64,
+                    adapter: adapter.to_string(),
+                    prompt: vec![7 + i as i32],
+                    max_new: 1,
+                    enqueued: t,
+                })
+                .unwrap();
+        }
+        let mut pooled = vec![];
+        server
+            .pump_pool(&backend, t + Duration::from_millis(2), 2, |r| pooled.push(r))
+            .unwrap();
+        assert_eq!(pooled.len(), 2);
+        let pooled_tag = pooled
+            .iter()
+            .find(|r| r.adapter == "a+b")
+            .and_then(|r| r.output.last().copied())
+            .unwrap();
+        assert_eq!(pooled_tag, tag("a+b"), "cache hit must reuse the folded stack");
+        assert_eq!(merger.merges.load(Ordering::SeqCst), 3, "no re-merge on the hit");
+        // An unknown member fails only the stack's own batch.
+        server
+            .submit(Request {
+                id: 99,
+                adapter: "a+ghost".into(),
+                prompt: vec![0],
+                max_new: 1,
+                enqueued: t,
+            })
+            .unwrap();
+        let err = server
+            .pump(&backend, t + Duration::from_millis(3), |_| {})
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("ghost"), "{err:#}");
     }
 
     #[test]

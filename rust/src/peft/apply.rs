@@ -34,6 +34,18 @@
 //!   regions; optionally audits the recovered weights against the true
 //!   base and reports the max involution residual.
 //!
+//! **Composition stacks** generalize every mode above to an *ordered*
+//! adapter stack `[a, b, c]` served as `T_c(T_b(T_a(W)))`:
+//! [`MergePlan::execute_stack`] folds the composition into one merged
+//! buffer, [`MergePlan::execute_unmerge_stack`] peels it in strict
+//! reverse order, [`MergePlan::execute_swap_involution_stack`] swaps
+//! whole stacks with a single end-to-end involution audit, and
+//! [`MergePlan::execute_activations_stack`] chains each op's affine
+//! composition factors (`T(M) = L·M·R + Δ`) around **one** base GEMM
+//! for a merge-free composed forward. Composition-*order* logic lives
+//! only in this module — ops contribute per-method factors through the
+//! `TransformOp::act_*` hooks and never see the stack.
+//!
 //! Since the host-training PR the plan also carries the **backward**
 //! sweep, [`MergePlan::execute_grad_activations`]: the gradient of a
 //! loss through the merge-free forward, accumulated per work item into
@@ -48,6 +60,7 @@ use anyhow::Result;
 use crate::peft::flat::Layout;
 use crate::peft::op::{resolve_params, ActShape, ResolvedParams};
 use crate::peft::registry;
+use crate::peft::transforms as tf;
 use crate::peft::{adapted_matrices, MethodSpec};
 use crate::tensor::Mat;
 use crate::util::pool::{parallel_for_chunks, parallel_for_chunks_with, SendPtr};
@@ -635,30 +648,145 @@ impl MergePlan {
         buf: &mut [f32],
         threads: Option<usize>,
     ) -> Result<f32> {
+        // Length-1 stacks run the identical per-item operation sequence,
+        // so the singleton swap is the stack swap on one-element stacks.
+        self.execute_swap_involution_stack(&[old], &[new], audit_base, buf, threads)
+    }
+
+    /// Stack-general involution swap: per work item, unmerge the `old`
+    /// composition **in strict reverse composition order** (the last
+    /// adapter applied is the first peeled — inverting
+    /// `T_k∘…∘T_1` as `T_1⁻¹∘…∘T_k⁻¹`), audit the fully-recovered
+    /// weights against `audit_base` (the residual covers the *whole*
+    /// stack, not any intermediate), then apply the `new` composition in
+    /// forward order. One fused parallel sweep that never reads the base
+    /// inside adapted regions; singleton swaps are the one-element
+    /// special case ([`MergePlan::execute_swap_involution`] delegates
+    /// here).
+    pub fn execute_swap_involution_stack(
+        &self,
+        old: &[AdapterRef],
+        new: &[AdapterRef],
+        audit_base: Option<&[f32]>,
+        buf: &mut [f32],
+        threads: Option<usize>,
+    ) -> Result<f32> {
         anyhow::ensure!(buf.len() == self.base_total, "buffer length mismatch");
-        let op_old = registry::op_for(old.spec.kind);
-        let op_new = registry::op_for(new.spec.kind);
-        anyhow::ensure!(
-            op_old.supports_unmerge(),
-            "{} does not support in-place unmerge",
-            op_old.token()
-        );
-        anyhow::ensure!(
-            op_new.host_mergeable(),
-            "host merge unsupported for {} (use the merge artifact)",
-            op_new.token()
-        );
+        anyhow::ensure!(!old.is_empty() && !new.is_empty(), "swap stacks must be non-empty");
+        for a in old {
+            let op = registry::op_for(a.spec.kind);
+            anyhow::ensure!(
+                op.supports_unmerge(),
+                "{} does not support in-place unmerge",
+                op.token()
+            );
+        }
+        for a in new {
+            let op = registry::op_for(a.spec.kind);
+            anyhow::ensure!(
+                op.host_mergeable(),
+                "host merge unsupported for {} (use the merge artifact)",
+                op.token()
+            );
+        }
         if let Some(base) = audit_base {
             anyhow::ensure!(base.len() == buf.len(), "audit base length mismatch");
         }
-        let old_params = self.resolve_all(old.spec, old.peft, old.layout)?;
-        let new_params = self.resolve_all(new.spec, new.peft, new.layout)?;
+        let old_params: Vec<Vec<ResolvedParams>> = old
+            .iter()
+            .map(|a| self.resolve_all(a.spec, a.peft, a.layout))
+            .collect::<Result<_>>()?;
+        let new_params: Vec<Vec<ResolvedParams>> = new
+            .iter()
+            .map(|a| self.resolve_all(a.spec, a.peft, a.layout))
+            .collect::<Result<_>>()?;
         let max_size = self.max_item_size();
         let items = &self.items;
         let (old_params, new_params) = (&old_params, &new_params);
-        let (old_spec, new_spec) = (old.spec, new.spec);
         let residual_bits = AtomicU32::new(0);
         let err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        let ptr = SendPtr::new(buf.as_mut_ptr());
+        let sweep = |a: usize, b: usize| {
+            let mut scratch = vec![0.0f32; max_size];
+            'item: for idx in a..b {
+                let it = &items[idx];
+                let size = it.rows * it.cols;
+                ptr.claim(it.offset, size);
+                // SAFETY: items cover disjoint output ranges.
+                let region =
+                    unsafe { std::slice::from_raw_parts_mut(ptr.get().add(it.offset), size) };
+                // Peel the old composition, last-applied first.
+                for (ai, adapter) in old.iter().enumerate().rev() {
+                    let op = registry::op_for(adapter.spec.kind);
+                    scratch[..size].copy_from_slice(region);
+                    if let Err(e) = op.unmerge_into(
+                        adapter.spec,
+                        &old_params[ai][idx],
+                        &scratch[..size],
+                        it.rows,
+                        it.cols,
+                        region,
+                    ) {
+                        let mut slot = lock_clean(&err);
+                        if slot.is_none() {
+                            *slot =
+                                Some(e.context(format!("unmerge {}[{}]", it.name, it.layer)));
+                        }
+                        continue 'item;
+                    }
+                }
+                if let Some(base) = audit_base {
+                    let mut local = 0.0f32;
+                    for (x, y) in region.iter().zip(&base[it.offset..it.offset + size]) {
+                        local = local.max((x - y).abs());
+                    }
+                    // f32 bit patterns of non-negative floats order like
+                    // the floats themselves, so an integer max works.
+                    residual_bits.fetch_max(local.to_bits(), Ordering::Relaxed);
+                }
+                // Apply the new composition in forward order.
+                for (ai, adapter) in new.iter().enumerate() {
+                    let op = registry::op_for(adapter.spec.kind);
+                    scratch[..size].copy_from_slice(region);
+                    op.apply_into(
+                        adapter.spec,
+                        &new_params[ai][idx],
+                        &scratch[..size],
+                        it.rows,
+                        it.cols,
+                        region,
+                    );
+                }
+            }
+        };
+        match threads {
+            Some(t) => parallel_for_chunks_with(t, items.len(), 1, sweep),
+            None => parallel_for_chunks(items.len(), 1, sweep),
+        }
+        if let Some(e) = err.into_inner().unwrap() {
+            return Err(e);
+        }
+        Ok(f32::from_bits(residual_bits.load(Ordering::Relaxed)))
+    }
+
+    /// In-place forward application of one adapter over a buffer that
+    /// already holds merged weights: per work item, transform the
+    /// current region contents (not the frozen base) through the op's
+    /// `apply_into`. The building block of composed merges — gaps are
+    /// untouched (they hold base bits from the initial merge).
+    fn apply_over(&self, adapter: AdapterRef, buf: &mut [f32], threads: Option<usize>) -> Result<()> {
+        anyhow::ensure!(buf.len() == self.base_total, "buffer length mismatch");
+        let op = registry::op_for(adapter.spec.kind);
+        anyhow::ensure!(
+            op.host_mergeable(),
+            "host merge unsupported for {} (use the merge artifact)",
+            op.token()
+        );
+        let params = self.resolve_all(adapter.spec, adapter.peft, adapter.layout)?;
+        let max_size = self.max_item_size();
+        let items = &self.items;
+        let params = &params;
+        let spec = adapter.spec;
         let ptr = SendPtr::new(buf.as_mut_ptr());
         let sweep = |a: usize, b: usize| {
             let mut scratch = vec![0.0f32; max_size];
@@ -670,41 +798,234 @@ impl MergePlan {
                 let region =
                     unsafe { std::slice::from_raw_parts_mut(ptr.get().add(it.offset), size) };
                 scratch[..size].copy_from_slice(region);
-                if let Err(e) = op_old.unmerge_into(
-                    old_spec,
-                    &old_params[idx],
-                    &scratch[..size],
-                    it.rows,
-                    it.cols,
-                    region,
-                ) {
-                    let mut slot = lock_clean(&err);
-                    if slot.is_none() {
-                        *slot = Some(e.context(format!("unmerge {}[{}]", it.name, it.layer)));
-                    }
-                    continue;
-                }
-                if let Some(base) = audit_base {
-                    let mut local = 0.0f32;
-                    for (x, y) in region.iter().zip(&base[it.offset..it.offset + size]) {
-                        local = local.max((x - y).abs());
-                    }
-                    // f32 bit patterns of non-negative floats order like
-                    // the floats themselves, so an integer max works.
-                    residual_bits.fetch_max(local.to_bits(), Ordering::Relaxed);
-                }
-                scratch[..size].copy_from_slice(region);
-                op_new.apply_into(new_spec, &new_params[idx], &scratch[..size], it.rows, it.cols, region);
+                op.apply_into(spec, &params[idx], &scratch[..size], it.rows, it.cols, region);
             }
         };
         match threads {
             Some(t) => parallel_for_chunks_with(t, items.len(), 1, sweep),
             None => parallel_for_chunks(items.len(), 1, sweep),
         }
-        if let Some(e) = err.into_inner().unwrap() {
-            return Err(e);
+        Ok(())
+    }
+
+    /// Composed merge of an ordered adapter stack:
+    /// `out = T_k(…T_2(T_1(base))…)` — the first adapter merges fresh
+    /// (gap copies included), every subsequent adapter applies **over**
+    /// the intermediate merged weights in place. A length-1 stack runs
+    /// exactly [`MergePlan::execute`] (same kernels, same item order),
+    /// so singleton behaviour — including bit-identity across thread
+    /// counts — is unchanged.
+    pub fn execute_stack(
+        &self,
+        stack: &[AdapterRef],
+        base: &[f32],
+        out: &mut [f32],
+        threads: Option<usize>,
+    ) -> Result<()> {
+        anyhow::ensure!(!stack.is_empty(), "adapter stack must be non-empty");
+        let first = stack[0];
+        self.run(first.spec, base, first.peft, first.layout, out, threads, true)?;
+        for adapter in &stack[1..] {
+            self.apply_over(*adapter, out, threads)?;
         }
-        Ok(f32::from_bits(residual_bits.load(Ordering::Relaxed)))
+        Ok(())
+    }
+
+    /// [`MergePlan::execute_stack`] over a buffer whose gap regions
+    /// already hold base bits (the swap-slot invariant): the first
+    /// adapter re-merges via [`MergePlan::execute_rebase`] semantics
+    /// (adapted regions read from the frozen base, gap copies skipped),
+    /// the rest apply over the intermediate. Bit-identical to a fresh
+    /// [`MergePlan::execute_stack`] into a new buffer.
+    pub fn execute_rebase_stack(
+        &self,
+        stack: &[AdapterRef],
+        base: &[f32],
+        buf: &mut [f32],
+        threads: Option<usize>,
+    ) -> Result<()> {
+        anyhow::ensure!(!stack.is_empty(), "adapter stack must be non-empty");
+        let first = stack[0];
+        self.run(first.spec, base, first.peft, first.layout, buf, threads, false)?;
+        for adapter in &stack[1..] {
+            self.apply_over(*adapter, buf, threads)?;
+        }
+        Ok(())
+    }
+
+    /// Invert a composed adapter stack **in place**, peeling transforms
+    /// in strict reverse composition order (`T_1⁻¹∘…∘T_k⁻¹`): the
+    /// inverse of [`MergePlan::execute_stack`]. Errors leave the buffer
+    /// poisoned (a fresh merge restores it), exactly like the singleton
+    /// [`MergePlan::execute_unmerge`] — which is the length-1 case.
+    pub fn execute_unmerge_stack(
+        &self,
+        stack: &[AdapterRef],
+        buf: &mut [f32],
+        threads: Option<usize>,
+    ) -> Result<()> {
+        anyhow::ensure!(!stack.is_empty(), "adapter stack must be non-empty");
+        for adapter in stack.iter().rev() {
+            self.execute_unmerge(*adapter, buf, threads)?;
+        }
+        Ok(())
+    }
+
+    /// Composed merge-free forward: `y = T_k(…T_1(W)…)·x` per work item
+    /// with **zero merged buffers**, chaining the ops' affine
+    /// composition factors (`T(M) = L·M·R + Δ`, see
+    /// [`crate::peft::op::TransformOp::supports_composition`])
+    /// right-to-left around **one** base GEMM:
+    ///
+    /// ```text
+    /// v_k = x;  v_{i-1} = R_i·v_i   (inward pass, i = k … 1)
+    /// y = W·(R_0·v_0)               (the single base product)
+    /// y = L_i·y + Δ_i·v_i           (outward pass, i = 0 … k)
+    /// ```
+    ///
+    /// Scratch stays activation-sized (`O(k·(d+f)·m)` per item). A
+    /// length-1 stack delegates to [`MergePlan::execute_activations`] —
+    /// the singleton kernels — so existing on-the-fly serving numerics
+    /// (and their bit-identity pins) are untouched. This method is the
+    /// **only** home of the composition-order recursion: ops contribute
+    /// factors, never ordering logic.
+    pub fn execute_activations_stack(
+        &self,
+        stack: &[AdapterRef],
+        base: &[f32],
+        x: &[f32],
+        m: usize,
+        out: &mut [f32],
+        threads: Option<usize>,
+    ) -> Result<()> {
+        anyhow::ensure!(!stack.is_empty(), "adapter stack must be non-empty");
+        if stack.len() == 1 {
+            return self.execute_activations(stack[0], base, x, m, out, threads);
+        }
+        anyhow::ensure!(
+            base.len() == self.base_total,
+            "base length {} != layout total {}",
+            base.len(),
+            self.base_total
+        );
+        anyhow::ensure!(m > 0, "activation probe needs at least one column");
+        let max_cols = self.max_item_cols();
+        anyhow::ensure!(
+            x.len() == max_cols * m,
+            "probe length {} != {} ({max_cols} rows × {m} columns)",
+            x.len(),
+            max_cols * m
+        );
+        anyhow::ensure!(
+            out.len() == self.activations_out_len(m),
+            "activation output buffer length mismatch"
+        );
+        for a in stack {
+            let op = registry::op_for(a.spec.kind);
+            anyhow::ensure!(
+                op.supports_composition(),
+                "{} does not support activation composition",
+                op.token()
+            );
+        }
+        let all_params: Vec<Vec<ResolvedParams>> = stack
+            .iter()
+            .map(|a| self.resolve_all(a.spec, a.peft, a.layout))
+            .collect::<Result<_>>()?;
+        let mut offsets = Vec::with_capacity(self.items.len());
+        let mut pos = 0usize;
+        for it in &self.items {
+            offsets.push(pos);
+            pos += it.rows * m;
+        }
+        let items = &self.items;
+        let (all_params, offsets) = (&all_params, &offsets);
+        let k = stack.len();
+        let err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        let ptr = SendPtr::new(out.as_mut_ptr());
+        let sweep = |a: usize, b: usize| {
+            'item: for idx in a..b {
+                let it = &items[idx];
+                let (d, f) = (it.rows, it.cols);
+                let size = d * m;
+                ptr.claim(offsets[idx], size);
+                // SAFETY: the offsets partition `out` into disjoint
+                // [offset, offset + rows·m) ranges in item order.
+                let region =
+                    unsafe { std::slice::from_raw_parts_mut(ptr.get().add(offsets[idx]), size) };
+                let src = &base[it.offset..it.offset + d * f];
+                let shape = ActShape { d, f, m };
+                let mut fail = |e: anyhow::Error| {
+                    let mut slot = lock_clean(&err);
+                    if slot.is_none() {
+                        *slot = Some(e.context(format!(
+                            "composed activations {}[{}]",
+                            it.name, it.layer
+                        )));
+                    }
+                };
+                // Inward pass: v_i is the f×m input seen at stack level
+                // i; v_{k-1} = x and each level's right factor feeds the
+                // one below.
+                let mut vins: Vec<Vec<f32>> = vec![Vec::new(); k];
+                vins[k - 1] = x[..f * m].to_vec();
+                for i in (1..k).rev() {
+                    let op = registry::op_for(stack[i].spec.kind);
+                    let mut v = vec![0.0f32; f * m];
+                    let (head, tail) = vins.split_at_mut(i);
+                    if let Err(e) = op.act_right_into(
+                        stack[i].spec,
+                        &all_params[i][idx],
+                        &tail[0],
+                        shape,
+                        &mut v,
+                    ) {
+                        fail(e);
+                        continue 'item;
+                    }
+                    head[i - 1] = v;
+                }
+                // The single base GEMM, on the innermost right factor.
+                let op0 = registry::op_for(stack[0].spec.kind);
+                let mut vbase = vec![0.0f32; f * m];
+                if let Err(e) =
+                    op0.act_right_into(stack[0].spec, &all_params[0][idx], &vins[0], shape, &mut vbase)
+                {
+                    fail(e);
+                    continue 'item;
+                }
+                let mut y = vec![0.0f32; d * m];
+                tf::matmul_tiled_into(src, &vbase, d, f, m, &mut y);
+                // Outward pass: left factor, then the additive term fed
+                // by that level's input.
+                let mut ytmp = vec![0.0f32; d * m];
+                for (i, adapter) in stack.iter().enumerate() {
+                    let op = registry::op_for(adapter.spec.kind);
+                    if let Err(e) =
+                        op.act_left_into(adapter.spec, &all_params[i][idx], &y, shape, &mut ytmp)
+                    {
+                        fail(e);
+                        continue 'item;
+                    }
+                    std::mem::swap(&mut y, &mut ytmp);
+                    if let Err(e) =
+                        op.act_delta_acc(adapter.spec, &all_params[i][idx], &vins[i], shape, &mut y)
+                    {
+                        fail(e);
+                        continue 'item;
+                    }
+                }
+                region.copy_from_slice(&y);
+            }
+        };
+        match threads {
+            Some(t) => parallel_for_chunks_with(t, items.len(), 1, sweep),
+            None => parallel_for_chunks(items.len(), 1, sweep),
+        }
+        match err.into_inner().unwrap() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 }
 

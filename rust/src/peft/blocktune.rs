@@ -77,8 +77,12 @@ pub fn tuned_n_blocks(d: usize, f: usize) -> usize {
 }
 
 /// Effective block count: `explicit > ETHER_NBLOCKS > tuned winner`.
-/// The env override snaps to the nearest valid candidate (divisibility
-/// is a hard schema requirement) rather than erroring.
+/// An **explicit** argument that divides `d` is honored as-is — it is a
+/// schema-valid caller choice, even off the power-of-two ≤256 candidate
+/// grid (e.g. `n = 512` at `d = 4096`). Only values that would violate
+/// the divisibility requirement — a non-divisor explicit, or any env
+/// override off the grid — snap to the nearest valid candidate rather
+/// than erroring.
 pub fn auto_n_blocks(explicit: Option<usize>, d: usize, f: usize) -> usize {
     auto_n_blocks_with(explicit, RuntimeCfg::get().n_blocks, d, f)
 }
@@ -90,6 +94,14 @@ pub fn auto_n_blocks_with(
     d: usize,
     f: usize,
 ) -> usize {
+    // Precedence is `explicit > env > tuned`, and an explicit divisor of
+    // `d` is already schema-valid: return it untouched instead of
+    // snapping a deliberate caller choice onto the candidate grid.
+    if let Some(n) = explicit {
+        if n > 0 && n <= d && d % n == 0 {
+            return n;
+        }
+    }
     let n = resolve(explicit, env, tuned_n_blocks(d, f));
     // Snap to the nearest (by ratio, ties downward) valid candidate.
     let cands = candidates(d);
@@ -145,5 +157,22 @@ mod tests {
         // Invalid override snaps to the nearest valid candidate.
         assert_eq!(auto_n_blocks_with(None, Some(48), 4096, 4096), 64);
         assert_eq!(auto_n_blocks_with(None, Some(1000), 64, 64), 64);
+    }
+
+    #[test]
+    fn explicit_divisor_is_honored_env_still_snaps() {
+        // Explicit n=512 divides d=4096 but sits past the ≤256 candidate
+        // grid: a schema-valid caller choice must be honored, not
+        // silently snapped to 256.
+        assert_eq!(auto_n_blocks_with(Some(512), None, 4096, 4096), 512);
+        assert_eq!(auto_n_blocks_with(Some(512), Some(16), 4096, 4096), 512);
+        // Non-power-of-two explicit divisors are honored too.
+        assert_eq!(auto_n_blocks_with(Some(3), None, 48, 48), 3);
+        // An explicit NON-divisor would violate the schema: it still
+        // snaps (48 ∤ 4096 → nearest-by-ratio candidate 64).
+        assert_eq!(auto_n_blocks_with(Some(48), None, 4096, 4096), 64);
+        // The env override always snaps, even when it divides d — only
+        // the explicit argument may leave the candidate grid.
+        assert_eq!(auto_n_blocks_with(None, Some(512), 4096, 4096), 256);
     }
 }

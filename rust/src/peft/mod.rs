@@ -34,7 +34,8 @@ use anyhow::{bail, ensure, Result};
 use op::Arity;
 
 /// Method family member (mirrors `python/compile/peft.py::MethodSpec`;
-/// `delora` is a host-only extension with no Layer-2 counterpart yet).
+/// `delora` and `hyperadapt` are host-only extensions with no Layer-2
+/// counterpart yet).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct MethodSpec {
     pub kind: MethodKind,
@@ -53,6 +54,7 @@ pub enum MethodKind {
     Lora,
     Vera,
     Delora,
+    HyperAdapt,
     Full,
     None,
 }
@@ -171,7 +173,8 @@ mod tests {
     fn parse_roundtrip() {
         for name in [
             "ether_n4", "ether_n32", "etherplus_n4", "etherplus_n4_1s", "oft_n256",
-            "oft_n4_mrf", "naive_n4", "lora_r8", "vera_r64", "delora_r8", "full", "none",
+            "oft_n4_mrf", "naive_n4", "lora_r8", "vera_r64", "delora_r8", "hyperadapt",
+            "full", "none",
         ] {
             assert_eq!(MethodSpec::parse(name).unwrap().name(), name, "{name}");
         }
@@ -188,6 +191,7 @@ mod tests {
         // Suffix-less methods reject stray suffixes.
         assert!(MethodSpec::parse("full_n4").is_err());
         assert!(MethodSpec::parse("none_r2").is_err());
+        assert!(MethodSpec::parse("hyperadapt_n4").is_err());
         // The suffix letter must match the op's arity, and flag suffixes
         // are rejected where the canonical name never renders them.
         assert!(MethodSpec::parse("ether_r4").is_err());
@@ -211,7 +215,7 @@ mod tests {
         let o16 = MethodSpec::parse("oft_n16").unwrap();
         assert_eq!(count_params(d, f, l, &o4), 4 * count_params(d, f, l, &o16));
         // ETHER < everything else.
-        for other in ["etherplus_n4", "oft_n16", "lora_r8", "delora_r8", "full"] {
+        for other in ["etherplus_n4", "oft_n16", "lora_r8", "delora_r8", "hyperadapt", "full"] {
             let spec = MethodSpec::parse(other).unwrap();
             assert!(
                 count_params(d, f, l, &ether) < count_params(d, f, l, &spec),

@@ -500,6 +500,70 @@ pub trait TransformOp: Sync + Send {
             Ok(self.apply_blocked(spec, p, &Mat::zeros(d, f))?.fro().powi(2))
         }
     }
+
+    // -- Composition primitives --------------------------------------------
+    //
+    // Every host-mergeable family member is *affine in the base weight*:
+    // `T(M) = L·M·R + Δ` where `L` (d×d), `R` (f×f) and `Δ` (d×f) depend
+    // only on the adapter parameters. The three factor hooks below expose
+    // that structure on activations, so the composed on-the-fly sweep in
+    // [`crate::peft::apply::MergePlan::execute_activations_stack`] can
+    // chain a whole adapter stack `T_k(…T_1(W))·x` around **one** base
+    // GEMM with activation-sized scratch — the composition-order recursion
+    // itself lives only in `peft/apply.rs` (dispatch discipline), ops just
+    // supply their factors.
+
+    /// Whether the three composition factor hooks below faithfully
+    /// decompose this op's transform as `T(M) = L·M·R + Δ`. Opt-in per
+    /// op; the composed on-the-fly path gates on it (the merged path
+    /// needs only `apply_into`).
+    fn supports_composition(&self) -> bool {
+        false
+    }
+
+    /// Right factor on activations: `out = R·x` for `m` columns of an
+    /// `f`-dimensional input (`f×m`). Default: `R = I` (copy).
+    fn act_right_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        x: &[f32],
+        shape: ActShape,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let _ = (spec, p, shape);
+        out.copy_from_slice(x);
+        Ok(())
+    }
+
+    /// Left factor on activations: `out = L·y` for `m` columns of a
+    /// `d`-dimensional intermediate (`d×m`). Default: `L = I` (copy).
+    fn act_left_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        y: &[f32],
+        shape: ActShape,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let _ = (spec, p, shape);
+        out.copy_from_slice(y);
+        Ok(())
+    }
+
+    /// Additive term on activations: `out += Δ·x` (`x` is `f×m`, `out`
+    /// is `d×m`). Default: `Δ = 0` (no-op).
+    fn act_delta_acc(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        x: &[f32],
+        shape: ActShape,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let _ = (spec, p, x, shape, out);
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -903,6 +967,24 @@ impl TransformOp for EtherOp {
         Ok(())
     }
 
+    /// Affine factors: `T(M) = H·M` — the reflection is the left factor.
+    fn supports_composition(&self) -> bool {
+        true
+    }
+
+    fn act_left_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        y: &[f32],
+        shape: ActShape,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let uh = tf::normalize_blocks(p.get("u"), spec.n_blocks);
+        tf::ether_into(&uh, spec.n_blocks, y, shape.m, out);
+        Ok(())
+    }
+
     fn supports_grad(&self) -> bool {
         true
     }
@@ -1105,6 +1187,46 @@ impl TransformOp for EtherPlusOp {
         Ok(())
     }
 
+    /// Affine factors: `T(M) = H⁺·M·H̃⁺` — left relaxed reflection on the
+    /// d-dim outputs, right (two-sided specs only) on the f-dim inputs.
+    fn supports_composition(&self) -> bool {
+        true
+    }
+
+    fn act_right_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        x: &[f32],
+        shape: ActShape,
+        out: &mut [f32],
+    ) -> Result<()> {
+        if spec.sides == 2 {
+            let n = spec.n_blocks;
+            let ruh = tf::normalize_blocks(p.get("ru"), n);
+            let rvh = tf::normalize_blocks(p.get("rv"), n);
+            tf::ether_plus_left_into(&ruh, &rvh, n, x, shape.m, out);
+        } else {
+            out.copy_from_slice(x);
+        }
+        Ok(())
+    }
+
+    fn act_left_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        y: &[f32],
+        shape: ActShape,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let n = spec.n_blocks;
+        let uh = tf::normalize_blocks(p.get("u"), n);
+        let vh = tf::normalize_blocks(p.get("v"), n);
+        tf::ether_plus_left_into(&uh, &vh, n, y, shape.m, out);
+        Ok(())
+    }
+
     fn supports_grad(&self) -> bool {
         true
     }
@@ -1300,6 +1422,49 @@ impl TransformOp for OftOp {
             tf::matmul_tiled_into(w, x, d, f, m, &mut y0);
         }
         tf::bdmm_into(&blocks, &y0, m, None, out);
+        Ok(())
+    }
+
+    /// Affine factors: `T(M) = Q·M·diag(1+mag)` — Cayley blocks left,
+    /// the magnitude refit (when present) right on the f-dim inputs.
+    fn supports_composition(&self) -> bool {
+        true
+    }
+
+    fn act_right_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        x: &[f32],
+        shape: ActShape,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let ActShape { f, m, .. } = shape;
+        if spec.magnitude_refit {
+            let mag = p.get("mag");
+            for j in 0..f {
+                let s = 1.0 + mag[j];
+                for c in 0..m {
+                    out[j * m + c] = x[j * m + c] * s;
+                }
+            }
+        } else {
+            out.copy_from_slice(x);
+        }
+        Ok(())
+    }
+
+    fn act_left_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        y: &[f32],
+        shape: ActShape,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let ActShape { d, m, .. } = shape;
+        let blocks = tf::cayley_blocks(p.get("r"), spec.n_blocks, d / spec.n_blocks);
+        tf::bdmm_into(&blocks, y, m, None, out);
         Ok(())
     }
 
@@ -1556,6 +1721,26 @@ impl TransformOp for NaiveOp {
         Ok(())
     }
 
+    /// Affine factors: `T(M) = (I+R)·M` — the block multiplier is the
+    /// left factor.
+    fn supports_composition(&self) -> bool {
+        true
+    }
+
+    fn act_left_into(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        y: &[f32],
+        shape: ActShape,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let ActShape { d, m, .. } = shape;
+        let blocks = tf::naive_blocks(p.get("r"), spec.n_blocks, d / spec.n_blocks);
+        tf::bdmm_into(&blocks, y, m, None, out);
+        Ok(())
+    }
+
     fn supports_grad(&self) -> bool {
         true
     }
@@ -1694,6 +1879,24 @@ impl TransformOp for LoraOp {
     ) -> Result<()> {
         let ActShape { d, f, m } = shape;
         tf::matmul_tiled_into(w, x, d, f, m, out);
+        tf::lora_activations_acc(p.get("a"), p.get("b"), x, d, spec.rank, f, m, out);
+        Ok(())
+    }
+
+    /// Affine factors: `T(M) = M + A·B` — purely additive (`Δ = A·B`).
+    fn supports_composition(&self) -> bool {
+        true
+    }
+
+    fn act_delta_acc(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        x: &[f32],
+        shape: ActShape,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let ActShape { d, f, m } = shape;
         tf::lora_activations_acc(p.get("a"), p.get("b"), x, d, spec.rank, f, m, out);
         Ok(())
     }
@@ -1944,6 +2147,27 @@ impl TransformOp for DeloraOp {
         Ok(())
     }
 
+    /// Affine factors: purely additive, `Δ` is the normalized
+    /// strength-scaled low-rank update.
+    fn supports_composition(&self) -> bool {
+        true
+    }
+
+    fn act_delta_acc(
+        &self,
+        spec: &MethodSpec,
+        p: &ResolvedParams,
+        x: &[f32],
+        shape: ActShape,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let ActShape { d, f, m } = shape;
+        let r = spec.rank;
+        let sa = delora_scaled_a(p.get("a"), p.get("b"), p.get("lambda")[0], d, r, f, 1.0);
+        tf::lora_activations_acc(&sa, p.get("b"), x, d, r, f, m, out);
+        Ok(())
+    }
+
     fn supports_grad(&self) -> bool {
         true
     }
@@ -2065,6 +2289,289 @@ impl TransformOp for DeloraOp {
     }
 }
 
+/// HyperAdapt-style high-rank row/column scaling (arXiv:2509.18629):
+/// `T(W) = diag(1+r)·W·diag(1+c)` — a full-rank multiplicative update
+/// from just `d + f` parameters per matrix, the diagonal counterpart to
+/// OFT's block-orthogonal multipliers. Host-only family member added
+/// through the registry like [`DeloraOp`]: one struct in this file buys
+/// merge, exact unmerge (divide out the scalings), the merge-free
+/// activation path, composition factors and FD-checked gradients.
+pub struct HyperAdaptOp;
+
+impl TransformOp for HyperAdaptOp {
+    fn kind(&self) -> MethodKind {
+        MethodKind::HyperAdapt
+    }
+
+    fn token(&self) -> &'static str {
+        "hyperadapt"
+    }
+
+    fn arity(&self) -> Arity {
+        Arity::Fixed
+    }
+
+    fn spec_name(&self, _spec: &MethodSpec) -> String {
+        "hyperadapt".into()
+    }
+
+    fn is_multiplicative(&self) -> bool {
+        true
+    }
+
+    /// Diagonal scalings invert by division (guarded against zeroed
+    /// factors at unmerge time).
+    fn supports_unmerge(&self) -> bool {
+        true
+    }
+
+    fn param_schema(&self, _spec: &MethodSpec, d: usize, f: usize) -> Vec<(&'static str, Vec<usize>)> {
+        vec![("r", vec![d]), ("c", vec![f])]
+    }
+
+    /// No block structure: the default multiplicative divisibility check
+    /// does not apply (a Fixed-arity spec carries the unused `n_blocks`
+    /// default).
+    fn validate(&self, _spec: &MethodSpec, _mat: &str, _d: usize, _f: usize) -> Result<()> {
+        Ok(())
+    }
+
+    fn apply_blocked(&self, _spec: &MethodSpec, p: &ResolvedParams, w: &Mat) -> Result<Mat> {
+        let (r, c) = (p.get("r"), p.get("c"));
+        let mut out = w.clone();
+        for i in 0..out.rows {
+            let row = out.row_mut(i);
+            let s = 1.0 + r[i];
+            for (j, x) in row.iter_mut().enumerate() {
+                *x *= s * (1.0 + c[j]);
+            }
+        }
+        Ok(out)
+    }
+
+    fn apply_serial(&self, spec: &MethodSpec, p: &ResolvedParams, w: &Mat) -> Result<Mat> {
+        self.apply_blocked(spec, p, w)
+    }
+
+    fn apply_into(
+        &self,
+        _spec: &MethodSpec,
+        p: &ResolvedParams,
+        src: &[f32],
+        d: usize,
+        f: usize,
+        out: &mut [f32],
+    ) {
+        let (r, c) = (p.get("r"), p.get("c"));
+        for i in 0..d {
+            let s = 1.0 + r[i];
+            for j in 0..f {
+                out[i * f + j] = src[i * f + j] * s * (1.0 + c[j]);
+            }
+        }
+    }
+
+    fn unmerge_into(
+        &self,
+        _spec: &MethodSpec,
+        p: &ResolvedParams,
+        merged: &[f32],
+        d: usize,
+        f: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let (r, c) = (p.get("r"), p.get("c"));
+        for (i, &ri) in r.iter().enumerate() {
+            ensure!(
+                (1.0 + ri).abs() > 1e-6,
+                "hyperadapt zeroed row {i} (1 + r ≈ 0): cannot unmerge"
+            );
+        }
+        for (j, &cj) in c.iter().enumerate() {
+            ensure!(
+                (1.0 + cj).abs() > 1e-6,
+                "hyperadapt zeroed column {j} (1 + c ≈ 0): cannot unmerge"
+            );
+        }
+        for i in 0..d {
+            let s = 1.0 + r[i];
+            for j in 0..f {
+                out[i * f + j] = merged[i * f + j] / (s * (1.0 + c[j]));
+            }
+        }
+        Ok(())
+    }
+
+    /// `‖diag(1+r) − I_d‖²_F + ‖diag(1+c) − I_f‖²_F` — the two factors'
+    /// distances, following the two-sided ETHER+ convention.
+    fn distance_sq(&self, _spec: &MethodSpec, p: &ResolvedParams, _d: usize, _f: usize) -> Result<f64> {
+        let rr: f64 = p.get("r").iter().map(|&v| (v as f64) * (v as f64)).sum();
+        let cc: f64 = p.get("c").iter().map(|&v| (v as f64) * (v as f64)).sum();
+        Ok(rr + cc)
+    }
+
+    fn supports_activations(&self) -> bool {
+        true
+    }
+
+    /// `(diag(1+r)·W·diag(1+c))·x`: scale the f-dim input rows, one base
+    /// product, then scale the d-dim output rows — O(d+f) per column on
+    /// top of the base product.
+    fn apply_activations_into(
+        &self,
+        _spec: &MethodSpec,
+        p: &ResolvedParams,
+        w: &[f32],
+        x: &[f32],
+        shape: ActShape,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let ActShape { d, f, m } = shape;
+        let (r, c) = (p.get("r"), p.get("c"));
+        let mut xs = vec![0.0f32; f * m];
+        for j in 0..f {
+            let s = 1.0 + c[j];
+            for cc in 0..m {
+                xs[j * m + cc] = x[j * m + cc] * s;
+            }
+        }
+        tf::matmul_tiled_into(w, &xs, d, f, m, out);
+        for i in 0..d {
+            let s = 1.0 + r[i];
+            for cc in 0..m {
+                out[i * m + cc] *= s;
+            }
+        }
+        Ok(())
+    }
+
+    /// Affine factors: `L = diag(1+r)`, `R = diag(1+c)`, `Δ = 0`.
+    fn supports_composition(&self) -> bool {
+        true
+    }
+
+    fn act_right_into(
+        &self,
+        _spec: &MethodSpec,
+        p: &ResolvedParams,
+        x: &[f32],
+        shape: ActShape,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let ActShape { f, m, .. } = shape;
+        let c = p.get("c");
+        for j in 0..f {
+            let s = 1.0 + c[j];
+            for cc in 0..m {
+                out[j * m + cc] = x[j * m + cc] * s;
+            }
+        }
+        Ok(())
+    }
+
+    fn act_left_into(
+        &self,
+        _spec: &MethodSpec,
+        p: &ResolvedParams,
+        y: &[f32],
+        shape: ActShape,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let ActShape { d, m, .. } = shape;
+        let r = p.get("r");
+        for i in 0..d {
+            let s = 1.0 + r[i];
+            for cc in 0..m {
+                out[i * m + cc] = y[i * m + cc] * s;
+            }
+        }
+        Ok(())
+    }
+
+    fn supports_grad(&self) -> bool {
+        true
+    }
+
+    /// With `x̃ = diag(1+c)·x` and `z = W·x̃`:
+    /// `∂L/∂r_i = Σ_m g[i,m]·z[i,m]` and
+    /// `∂L/∂c_j = Σ_m x[j,m]·(Wᵀ·diag(1+r)·g)[j,m]` — plain product
+    /// rules through the two diagonal factors.
+    fn grad_params_into(
+        &self,
+        _spec: &MethodSpec,
+        p: &ResolvedParams,
+        w: &[f32],
+        x: &[f32],
+        upstream: &[f32],
+        shape: ActShape,
+        threads: Option<usize>,
+        grad: &mut GradParams,
+    ) -> Result<()> {
+        ensure_grad_shapes(self, w, x, upstream, shape)?;
+        let ActShape { d, f, m } = shape;
+        let (r, c) = (p.get("r"), p.get("c"));
+        // Forward recompute: x̃ = diag(1+c)·x and z = W·x̃.
+        let mut xs = vec![0.0f32; f * m];
+        for j in 0..f {
+            let s = 1.0 + c[j];
+            for cc in 0..m {
+                xs[j * m + cc] = x[j * m + cc] * s;
+            }
+        }
+        let mut z = vec![0.0f32; d * m];
+        tf::matmul_par(threads, w, &xs, d, f, m, &mut z);
+        {
+            let gr = grad.get("r");
+            let ptr = SendPtr::new(gr.as_mut_ptr());
+            let z = &z;
+            parallel_for_chunks_opt(threads, d, 16, |r0, r1| {
+                ptr.claim(r0, r1 - r0);
+                for i in r0..r1 {
+                    let mut acc = 0.0f64;
+                    for cc in 0..m {
+                        acc += upstream[i * m + cc] as f64 * z[i * m + cc] as f64;
+                    }
+                    // SAFETY: workers receive disjoint row ranges of gr.
+                    unsafe {
+                        let o = ptr.get().add(i);
+                        *o = (*o as f64 + acc) as f32;
+                    }
+                }
+            });
+        }
+        // sg = diag(1+r)·g, then gx = Wᵀ·sg (f×m).
+        let mut sg = vec![0.0f32; d * m];
+        for i in 0..d {
+            let s = 1.0 + r[i];
+            for cc in 0..m {
+                sg[i * m + cc] = upstream[i * m + cc] * s;
+            }
+        }
+        let mut gx = vec![0.0f32; f * m];
+        tf::matmul_t_par(threads, w, &sg, d, f, m, &mut gx);
+        {
+            let gc = grad.get("c");
+            let ptr = SendPtr::new(gc.as_mut_ptr());
+            let gx = &gx;
+            parallel_for_chunks_opt(threads, f, 16, |j0, j1| {
+                ptr.claim(j0, j1 - j0);
+                for j in j0..j1 {
+                    let mut acc = 0.0f64;
+                    for cc in 0..m {
+                        acc += x[j * m + cc] as f64 * gx[j * m + cc] as f64;
+                    }
+                    // SAFETY: workers receive disjoint ranges of gc.
+                    unsafe {
+                        let o = ptr.get().add(j);
+                        *o = (*o as f64 + acc) as f32;
+                    }
+                }
+            });
+        }
+        Ok(())
+    }
+}
+
 /// Full finetuning: the adapter *is* the replacement weight matrix.
 pub struct FullOp;
 
@@ -2125,6 +2632,37 @@ impl TransformOp for FullOp {
     ) -> Result<()> {
         let ActShape { d, f, m } = shape;
         tf::matmul_tiled_into(p.get("w"), x, d, f, m, out);
+        Ok(())
+    }
+
+    /// Affine factors: `T(M) = 0·M + P` — the left factor annihilates
+    /// whatever is beneath it in a stack, and `Δ = P·x` replaces it.
+    fn supports_composition(&self) -> bool {
+        true
+    }
+
+    fn act_left_into(
+        &self,
+        _spec: &MethodSpec,
+        _p: &ResolvedParams,
+        _y: &[f32],
+        _shape: ActShape,
+        out: &mut [f32],
+    ) -> Result<()> {
+        out.fill(0.0);
+        Ok(())
+    }
+
+    fn act_delta_acc(
+        &self,
+        _spec: &MethodSpec,
+        p: &ResolvedParams,
+        x: &[f32],
+        shape: ActShape,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let ActShape { d, f, m } = shape;
+        tf::matmul_acc_into(p.get("w"), x, d, f, m, out);
         Ok(())
     }
 
@@ -2250,6 +2788,12 @@ impl TransformOp for NoneOp {
         let ActShape { d, f, m } = shape;
         tf::matmul_tiled_into(w, x, d, f, m, out);
         Ok(())
+    }
+
+    /// Affine factors: the identity (`L = R = I`, `Δ = 0`) — every hook
+    /// default is already correct.
+    fn supports_composition(&self) -> bool {
+        true
     }
 }
 

@@ -25,8 +25,13 @@
 //!   merge across the whole host-mergeable registry.
 //!
 //! bf16 keeps f32's full 8-bit exponent (unlike f16), so no merge value
-//! can overflow or flush to zero on encode — range is preserved, only
-//! mantissa width is traded.
+//! can flush to zero on encode, and none can overflow either: the one
+//! finite corner case — values in the last half-ulp below `f32::MAX`,
+//! whose round-to-nearest carry would spill into the exponent and
+//! encode `+inf` — **saturates to the max finite bf16** instead (±inf
+//! inputs still pass through exactly). Range is preserved, only
+//! mantissa width is traded, and the saturation error stays within
+//! [`BF16_REL_BOUND`].
 
 use std::sync::Arc;
 
@@ -87,7 +92,10 @@ impl MergedPrecision {
 
 /// f32 → bf16 with round-to-nearest-even on the truncated mantissa bit.
 /// NaNs are quieted (payload may change, NaN-ness never lost); ±inf and
-/// ±0 pass through exactly.
+/// ±0 pass through exactly. Finite values whose rounding carry would
+/// overflow the exponent (the last half-ulp up to ±`f32::MAX`) saturate
+/// to the max finite bf16 — encode never turns a finite weight into an
+/// infinity.
 pub fn f32_to_bf16(x: f32) -> u16 {
     let bits = x.to_bits();
     if x.is_nan() {
@@ -95,8 +103,18 @@ pub fn f32_to_bf16(x: f32) -> u16 {
         // truncation cannot produce an infinity.
         return ((bits >> 16) as u16) | 0x0040;
     }
+    if x.is_infinite() {
+        return (bits >> 16) as u16;
+    }
     let round = 0x7FFF + ((bits >> 16) & 1);
-    ((bits + round) >> 16) as u16
+    let b = ((bits + round) >> 16) as u16;
+    if b & 0x7FFF == 0x7F80 {
+        // The carry spilled into the exponent (finite input in the last
+        // half-ulp below ±f32::MAX): saturate to the max finite bf16.
+        (b & 0x8000) | 0x7F7F
+    } else {
+        b
+    }
 }
 
 /// bf16 → f32 (exact: widen by shifting into the high half).
@@ -189,6 +207,15 @@ mod tests {
         assert_eq!(bf16_to_f32(f32_to_bf16(above)), 1.0 + 1.0 / 128.0);
         // NaN survives (quieted).
         assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        // ±f32::MAX sits in the last half-ulp whose rounding carry would
+        // overflow the exponent: encode must saturate to the max finite
+        // bf16 (0x7F7F), never round a finite weight to ±inf.
+        let max_finite = bf16_to_f32(0x7F7F);
+        assert!(max_finite.is_finite());
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::MAX)).to_bits(), max_finite.to_bits());
+        assert_eq!(bf16_to_f32(f32_to_bf16(-f32::MAX)).to_bits(), (-max_finite).to_bits());
+        // Saturation stays within the documented relative bound.
+        assert!((max_finite - f32::MAX).abs() <= f32::MAX * BF16_REL_BOUND);
     }
 
     #[test]

@@ -9,12 +9,13 @@
 //! in from the outside.
 
 use crate::peft::op::{
-    DeloraOp, EtherOp, EtherPlusOp, FullOp, LoraOp, NaiveOp, NoneOp, OftOp, TransformOp, VeraOp,
+    DeloraOp, EtherOp, EtherPlusOp, FullOp, HyperAdaptOp, LoraOp, NaiveOp, NoneOp, OftOp,
+    TransformOp, VeraOp,
 };
 use crate::peft::MethodKind;
 
 /// Every registered family member, in canonical (parse-priority) order.
-pub const ALL_KINDS: [MethodKind; 9] = [
+pub const ALL_KINDS: [MethodKind; 10] = [
     MethodKind::Ether,
     MethodKind::EtherPlus,
     MethodKind::Oft,
@@ -22,6 +23,7 @@ pub const ALL_KINDS: [MethodKind; 9] = [
     MethodKind::Lora,
     MethodKind::Vera,
     MethodKind::Delora,
+    MethodKind::HyperAdapt,
     MethodKind::Full,
     MethodKind::None,
 ];
@@ -37,6 +39,7 @@ pub fn op_for(kind: MethodKind) -> &'static dyn TransformOp {
         MethodKind::Lora => &LoraOp,
         MethodKind::Vera => &VeraOp,
         MethodKind::Delora => &DeloraOp,
+        MethodKind::HyperAdapt => &HyperAdaptOp,
         MethodKind::Full => &FullOp,
         MethodKind::None => &NoneOp,
     }

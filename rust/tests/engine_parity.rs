@@ -41,7 +41,7 @@ fn tiny_dims() -> ModelDims {
 }
 
 /// Every registry kind with an activation fast path, by canonical name.
-const ACTIVATION_METHODS: [&str; 10] = [
+const ACTIVATION_METHODS: [&str; 11] = [
     "ether_n4",
     "etherplus_n4",
     "etherplus_n2_1s",
@@ -50,6 +50,7 @@ const ACTIVATION_METHODS: [&str; 10] = [
     "naive_n2",
     "lora_r4",
     "delora_r4",
+    "hyperadapt",
     "full",
     "none",
 ];
@@ -153,6 +154,192 @@ fn activation_sweep_is_bit_invariant_across_thread_counts() {
         assert!(
             serial.iter().zip(&ambient).all(|(a, b)| a.to_bits() == b.to_bits()),
             "{name}: serial vs ambient-pool activation bits differ"
+        );
+    }
+}
+
+/// Heterogeneous composition stacks of length 1–3 rotating every
+/// composable method through every stack position, so the pairwise
+/// `act_left/act_right/act_delta` interactions are all exercised.
+fn composition_stacks() -> Vec<Vec<&'static str>> {
+    let mut stacks: Vec<Vec<&'static str>> = vec![];
+    for (i, name) in ACTIVATION_METHODS.iter().enumerate() {
+        stacks.push(vec![name]);
+        stacks.push(vec![name, ACTIVATION_METHODS[(i + 1) % ACTIVATION_METHODS.len()]]);
+        stacks.push(vec![
+            ACTIVATION_METHODS[(i + 2) % ACTIVATION_METHODS.len()],
+            name,
+            ACTIVATION_METHODS[(i + 5) % ACTIVATION_METHODS.len()],
+        ]);
+    }
+    stacks
+}
+
+#[test]
+fn every_activation_method_supports_composition() {
+    // The composed activation path refuses methods without the
+    // affine-in-W factoring hooks; this pins that the whole activation
+    // family — the methods the stacks above rotate through — has them.
+    for name in ACTIVATION_METHODS {
+        let kind = MethodSpec::parse(name).unwrap().kind;
+        assert!(
+            ops::op_for(kind).supports_composition(),
+            "{name}: in ACTIVATION_METHODS but not composable"
+        );
+    }
+}
+
+#[test]
+fn composed_merged_and_composed_onthefly_agree_across_the_registry() {
+    // The headline composition gate: folding a whole stack into one
+    // merged buffer and chaining the stack's activation sweeps with no
+    // merged buffer at all are the same linear map, to ≤ 1e-5, for
+    // every stack of length 1–3 over the composable family.
+    let dims = tiny_dims();
+    let layout = base_layout_for(dims);
+    let plan = MergePlan::new(dims, &layout).unwrap();
+    let mut rng = Rng::new(61);
+    let base: Vec<f32> = rng.normal_vec(layout.total, 0.05);
+    let m = 2usize;
+    let x: Vec<f32> = rng.normal_vec(plan.max_item_cols() * m, 1.0);
+
+    for names in composition_stacks() {
+        // Own the specs/params, then view them as an AdapterRef stack.
+        let members: Vec<_> = names
+            .iter()
+            .map(|name| {
+                let spec = MethodSpec::parse(name).unwrap();
+                let pl = peft_layout_for(dims, &spec);
+                let peft: Vec<f32> = rng.normal_vec(pl.total, 0.5);
+                (spec, pl, peft)
+            })
+            .collect();
+        let stack: Vec<AdapterRef> = members
+            .iter()
+            .map(|(spec, pl, peft)| AdapterRef { spec, peft, layout: pl })
+            .collect();
+        // Composed-merged: T_k(…T_1(W)) folded into one buffer.
+        let mut merged = vec![0.0f32; layout.total];
+        plan.execute_stack(&stack, &base, &mut merged, None).unwrap();
+        // Composed-on-the-fly: the same map applied to x, zero merged
+        // buffers.
+        let mut fast = vec![0.0f32; plan.activations_out_len(m)];
+        plan.execute_activations_stack(&stack, &base, &x, m, &mut fast, None).unwrap();
+        // Oracle: y = merged_slice · x per work item, f64 accumulation.
+        let mut pos = 0usize;
+        let mut max_err = 0.0f32;
+        for it in &plan.items {
+            let slice = &merged[it.offset..it.offset + it.rows * it.cols];
+            for i in 0..it.rows {
+                for c in 0..m {
+                    let mut acc = 0.0f64;
+                    for j in 0..it.cols {
+                        acc += slice[i * it.cols + j] as f64 * x[j * m + c] as f64;
+                    }
+                    let got = fast[pos + i * m + c];
+                    max_err = max_err.max((got - acc as f32).abs());
+                }
+            }
+            pos += it.rows * m;
+        }
+        assert!(
+            max_err <= 1e-5,
+            "{names:?}: composed merged-vs-onthefly parity {max_err}"
+        );
+    }
+}
+
+#[test]
+fn composed_sweeps_are_bit_invariant_across_thread_counts() {
+    let dims = tiny_dims();
+    let layout = base_layout_for(dims);
+    let plan = MergePlan::new(dims, &layout).unwrap();
+    let mut rng = Rng::new(67);
+    let base: Vec<f32> = rng.normal_vec(layout.total, 0.05);
+    let m = 3usize;
+    let x: Vec<f32> = rng.normal_vec(plan.max_item_cols() * m, 1.0);
+    for names in composition_stacks() {
+        let members: Vec<_> = names
+            .iter()
+            .map(|name| {
+                let spec = MethodSpec::parse(name).unwrap();
+                let pl = peft_layout_for(dims, &spec);
+                let peft: Vec<f32> = rng.normal_vec(pl.total, 0.5);
+                (spec, pl, peft)
+            })
+            .collect();
+        let stack: Vec<AdapterRef> = members
+            .iter()
+            .map(|(spec, pl, peft)| AdapterRef { spec, peft, layout: pl })
+            .collect();
+        // Folded weights: 1 thread, 4 threads, ambient pool — same bits.
+        let mut w1 = vec![0.0f32; layout.total];
+        plan.execute_stack(&stack, &base, &mut w1, Some(1)).unwrap();
+        let mut w4 = vec![0.0f32; layout.total];
+        plan.execute_stack(&stack, &base, &mut w4, Some(4)).unwrap();
+        let mut wamb = vec![0.0f32; layout.total];
+        plan.execute_stack(&stack, &base, &mut wamb, None).unwrap();
+        assert!(
+            w1.iter().zip(&w4).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{names:?}: composed fold bits differ across thread counts"
+        );
+        assert!(
+            w1.iter().zip(&wamb).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{names:?}: composed fold bits differ on the ambient pool"
+        );
+        // Chained activation sweeps: same invariance.
+        let mut y1 = vec![0.0f32; plan.activations_out_len(m)];
+        plan.execute_activations_stack(&stack, &base, &x, m, &mut y1, Some(1)).unwrap();
+        let mut y4 = vec![0.0f32; plan.activations_out_len(m)];
+        plan.execute_activations_stack(&stack, &base, &x, m, &mut y4, Some(4)).unwrap();
+        let mut yamb = vec![0.0f32; plan.activations_out_len(m)];
+        plan.execute_activations_stack(&stack, &base, &x, m, &mut yamb, None).unwrap();
+        assert!(
+            y1.iter().zip(&y4).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{names:?}: composed activation bits differ across thread counts"
+        );
+        assert!(
+            y1.iter().zip(&yamb).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{names:?}: composed activation bits differ on the ambient pool"
+        );
+    }
+}
+
+#[test]
+fn singleton_stacks_are_bit_identical_to_the_plain_paths() {
+    // A one-member stack must be *the same computation*, not a parallel
+    // implementation that happens to agree: identical bits on both the
+    // fold and the activation sweep.
+    let dims = tiny_dims();
+    let layout = base_layout_for(dims);
+    let plan = MergePlan::new(dims, &layout).unwrap();
+    let mut rng = Rng::new(71);
+    let base: Vec<f32> = rng.normal_vec(layout.total, 0.05);
+    let m = 2usize;
+    let x: Vec<f32> = rng.normal_vec(plan.max_item_cols() * m, 1.0);
+    for name in ACTIVATION_METHODS {
+        let spec = MethodSpec::parse(name).unwrap();
+        let pl = peft_layout_for(dims, &spec);
+        let peft: Vec<f32> = rng.normal_vec(pl.total, 0.5);
+        let adapter = AdapterRef { spec: &spec, peft: &peft, layout: &pl };
+
+        let mut plain_w = vec![0.0f32; layout.total];
+        plan.execute(&spec, &base, &peft, &pl, &mut plain_w).unwrap();
+        let mut stack_w = vec![0.0f32; layout.total];
+        plan.execute_stack(&[adapter], &base, &mut stack_w, None).unwrap();
+        assert!(
+            plain_w.iter().zip(&stack_w).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{name}: singleton stack fold diverged from execute()"
+        );
+
+        let mut plain_y = vec![0.0f32; plan.activations_out_len(m)];
+        plan.execute_activations(adapter, &base, &x, m, &mut plain_y, None).unwrap();
+        let mut stack_y = vec![0.0f32; plan.activations_out_len(m)];
+        plan.execute_activations_stack(&[adapter], &base, &x, m, &mut stack_y, None)
+            .unwrap();
+        assert!(
+            plain_y.iter().zip(&stack_y).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{name}: singleton stack activations diverged from execute_activations()"
         );
     }
 }

@@ -28,7 +28,7 @@ use ether::util::rng::Rng;
 
 /// Every differentiable family member, by canonical name (block/rank
 /// choices sized for the tiny FD dims below).
-const GRAD_METHODS: [&str; 9] = [
+const GRAD_METHODS: [&str; 10] = [
     "ether_n2",
     "etherplus_n2",
     "etherplus_n2_1s",
@@ -37,6 +37,7 @@ const GRAD_METHODS: [&str; 9] = [
     "naive_n2",
     "lora_r3",
     "delora_r2",
+    "hyperadapt",
     "full",
 ];
 

@@ -70,6 +70,27 @@ fn dispatch_discipline_allows_registry_and_single_arm() {
     assert!(lint_source("rust/tests/op_registry_props.rs", bad).is_empty());
 }
 
+#[test]
+fn dispatch_discipline_confines_composition_hook_calls() {
+    // A composition-hook *call* outside peft/apply.rs fires: chaining
+    // the L·M·R + Δ factors by hand forks the composition-order
+    // convention out of the composed sweeps.
+    let call = "op.act_delta_acc(spec, &p, &x, shape, &mut y)?;\n";
+    let f = lint_source("rust/src/coordinator/registry.rs", call);
+    assert_eq!(rules_fired(&f), vec!["dispatch-discipline"], "{f:?}");
+    // UFCS calls count as calls too.
+    let ufcs = "TransformOp::act_left_into(op, spec, &p, &y, shape, &mut t)?;\n";
+    assert!(lint_source("rust/src/train/host.rs", ufcs)
+        .iter()
+        .any(|x| x.rule == "dispatch-discipline"));
+    // The composed sweeps and the dispatch homes are the hooks' home turf.
+    assert!(lint_source("rust/src/peft/apply.rs", call).is_empty());
+    assert!(lint_source("rust/src/peft/op.rs", call).is_empty());
+    // A *definition* is not a call.
+    let def = "fn act_delta_acc(&self, spec: &MethodSpec) -> Result<()> {\n";
+    assert!(lint_source("rust/src/coordinator/registry.rs", def).is_empty());
+}
+
 // ---------------------------------------------------------------------------
 // safety-comments
 // ---------------------------------------------------------------------------

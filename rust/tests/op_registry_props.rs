@@ -32,6 +32,7 @@ fn canonical_spec(kind: MethodKind) -> &'static str {
         MethodKind::Lora => "lora_r8",
         MethodKind::Vera => "vera_r8",
         MethodKind::Delora => "delora_r8",
+        MethodKind::HyperAdapt => "hyperadapt",
         MethodKind::Full => "full",
         MethodKind::None => "none",
     }
@@ -41,7 +42,7 @@ fn canonical_spec(kind: MethodKind) -> &'static str {
 /// block counts) — schema properties must hold for all of them.
 const SPEC_NAMES: &[&str] = &[
     "ether_n4", "ether_n16", "etherplus_n4", "etherplus_n2_1s", "oft_n4", "oft_n4_mrf",
-    "naive_n4", "lora_r8", "vera_r8", "delora_r8", "full", "none",
+    "naive_n4", "lora_r8", "vera_r8", "delora_r8", "hyperadapt", "full", "none",
 ];
 
 fn bits_equal(a: &[f32], b: &[f32]) -> bool {
@@ -71,6 +72,7 @@ fn unmerge_support_matches_the_family_structure() {
         ("naive_n4", true),
         ("lora_r8", true),
         ("delora_r8", true),
+        ("hyperadapt", true),
         ("none", true),
         ("full", false),
         ("vera_r8", false),
@@ -147,7 +149,10 @@ fn unmerge_recovers_base_for_every_invertible_op() {
     let mut rng = Rng::new(83);
     let base: Vec<f32> = rng.normal_vec(bl.total, 0.05);
     let plan = MergePlan::new(dims, &bl).unwrap();
-    for name in ["ether_n4", "oft_n4", "oft_n4_mrf", "naive_n4", "lora_r4", "delora_r4", "none"] {
+    for name in [
+        "ether_n4", "oft_n4", "oft_n4_mrf", "naive_n4", "lora_r4", "delora_r4", "hyperadapt",
+        "none",
+    ] {
         let spec = MethodSpec::parse(name).unwrap();
         let pl = peft_layout_for(dims, &spec);
         let peft: Vec<f32> = rng.normal_vec(pl.total, 0.05);
@@ -201,4 +206,57 @@ fn etherplus_unmerge_inverts_the_relaxed_reflection() {
         .map(|(x, y)| (x - y).abs())
         .fold(0.0f32, f32::max);
     assert!(err <= 1e-4, "etherplus Woodbury unmerge residual {err} > 1e-4");
+}
+
+#[test]
+fn composed_stacks_unmerge_in_reverse_order_back_to_base() {
+    // Folding a stack applies T_k(…T_1(W)); unmerging must peel the
+    // members in strict reverse composition order. The stack version
+    // does exactly that, and a deliberately forward-order peel of a
+    // non-commuting stack does NOT recover the base — order is
+    // observable, not a convention.
+    let dims = ModelDims { d_model: 32, d_ff: 64, n_layers: 2 };
+    let bl = base_layout_for(dims);
+    let mut rng = Rng::new(101);
+    let base: Vec<f32> = rng.normal_vec(bl.total, 0.05);
+    let plan = MergePlan::new(dims, &bl).unwrap();
+    let names = ["ether_n4", "oft_n4", "hyperadapt"];
+    let members: Vec<_> = names
+        .iter()
+        .map(|name| {
+            let spec = MethodSpec::parse(name).unwrap();
+            let pl = peft_layout_for(dims, &spec);
+            let peft: Vec<f32> = rng.normal_vec(pl.total, 0.05);
+            (spec, pl, peft)
+        })
+        .collect();
+    let stack: Vec<AdapterRef> = members
+        .iter()
+        .map(|(spec, pl, peft)| AdapterRef { spec, peft, layout: pl })
+        .collect();
+    let mut buf = vec![0.0f32; bl.total];
+    plan.execute_stack(&stack, &base, &mut buf, None).unwrap();
+    // Reverse-order peel recovers the base.
+    let mut peeled = buf.clone();
+    plan.execute_unmerge_stack(&stack, &mut peeled, None).unwrap();
+    let err = peeled
+        .iter()
+        .zip(&base)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(err <= 1e-4, "composed reverse unmerge residual {err} > 1e-4");
+    // Forward-order peel of the same non-commuting stack diverges.
+    let mut wrong = buf.clone();
+    for adapter in &stack {
+        plan.execute_unmerge(*adapter, &mut wrong, None).unwrap();
+    }
+    let wrong_err = wrong
+        .iter()
+        .zip(&base)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(
+        wrong_err > 1e-3,
+        "forward-order peel should not recover base (residual only {wrong_err})"
+    );
 }
